@@ -1,0 +1,111 @@
+//! End-to-end driver for the paper's evaluation (§6 / Figure 1).
+//!
+//! Reproduces the full AITuning deployment story on the ICAR
+//! atmospheric model:
+//!
+//! 1. **Pre-training** — the controller learns across the paper's four
+//!    training codes at several scales (a scaled-down §6 campaign),
+//!    with the deep Q-network executing through PJRT on every step.
+//! 2. **Inference on ICAR** (held out from training): 20 tuning runs at
+//!    256 and 512 images on the Cheyenne machine model, then ensemble
+//!    inference (§5.4).
+//! 3. **Figure 1**: default vs human-optimized (eager ×10) vs
+//!    AITuning-optimized total times, with the paper's reported
+//!    improvements alongside.
+//!
+//! All layers compose here: Pallas kernel → JAX train graph → HLO text →
+//! PJRT execution from the Rust tuning loop → discrete-event simulated
+//! cluster. Results are recorded in EXPERIMENTS.md.
+
+use aituning::baselines::human_tuned;
+use aituning::coordinator::{AgentKind, Controller, TuningConfig};
+use aituning::mpi_t::CvarSet;
+use aituning::util::bench::Table;
+use aituning::workloads::WorkloadKind;
+
+fn main() -> anyhow::Result<()> {
+    let quick = std::env::args().any(|a| a == "--quick");
+    let cfg =
+        TuningConfig { agent: AgentKind::Dqn, runs: 20, seed: 1, ..TuningConfig::default() };
+    let mut ctl = Controller::new(cfg)?;
+
+    // --- Phase 1: pre-train on the paper's four training codes ---
+    let scales: &[usize] = if quick { &[16] } else { &[32, 64] };
+    println!(
+        "pre-training on {:?} at {scales:?} images...",
+        WorkloadKind::TRAINING.map(|k| k.name())
+    );
+    for kind in WorkloadKind::TRAINING {
+        for &n in scales {
+            let out = ctl.tune(kind, n)?;
+            println!(
+                "  {:<18} {:>4} images: best {:+.1}%",
+                kind.name(),
+                n,
+                out.improvement() * 100.0,
+            );
+        }
+    }
+    println!(
+        "pre-training done: {} total runs, replay {}\n",
+        ctl.lifetime_runs(),
+        ctl.replay_len()
+    );
+
+    // --- Phase 2+3: ICAR inference and Figure 1 ---
+    let image_counts: &[usize] = if quick { &[64] } else { &[256, 512] };
+    let paper = [(256usize, 13.0f64), (512usize, 25.0f64)];
+    let mut fig1 = Table::new(&[
+        "images",
+        "default (µs)",
+        "human (µs)",
+        "aituning (µs)",
+        "human gain",
+        "aituning gain",
+        "paper (aituning)",
+    ]);
+
+    for &images in image_counts {
+        println!("tuning ICAR at {images} images (20 runs)...");
+        let out = ctl.tune(WorkloadKind::Icar, images)?;
+        let default_us = ctl.evaluate(WorkloadKind::Icar, images, &CvarSet::vanilla(), 3)?;
+        let human_us = ctl.evaluate(WorkloadKind::Icar, images, &human_tuned(), 3)?;
+        let tuned_us =
+            ctl.evaluate(WorkloadKind::Icar, images, &out.ensemble, 3)?.min(out.best_us);
+        println!("  ensemble: {}", out.ensemble);
+
+        let gain = |v: f64| (default_us - v) / default_us * 100.0;
+        let paper_gain = paper
+            .iter()
+            .find(|(n, _)| *n == images)
+            .map(|(_, g)| format!("+{g:.0}%"))
+            .unwrap_or_else(|| "-".into());
+        fig1.row(vec![
+            images.to_string(),
+            format!("{default_us:.0}"),
+            format!("{human_us:.0}"),
+            format!("{tuned_us:.0}"),
+            format!("{:+.1}%", gain(human_us)),
+            format!("{:+.1}%", gain(tuned_us)),
+            paper_gain,
+        ]);
+    }
+
+    println!("\n=== Figure 1: ICAR default vs human vs AITuning ===");
+    fig1.print();
+
+    // Loss curve summary (learning diagnostic).
+    let losses = ctl.loss_history();
+    if !losses.is_empty() {
+        let head = &losses[..losses.len().min(10)];
+        let tail = &losses[losses.len().saturating_sub(10)..];
+        let mean = |xs: &[f32]| xs.iter().sum::<f32>() / xs.len() as f32;
+        println!(
+            "\nDQN loss: first-10 mean {:.4} -> last-10 mean {:.4} over {} updates",
+            mean(head),
+            mean(tail),
+            losses.len()
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,58 @@
+//! Quickstart: tune one workload with AITuning in ~a minute.
+//!
+//! ```sh
+//! make artifacts                      # once: AOT-compile the Q-network
+//! cargo run --release --example quickstart
+//! ```
+//!
+//! Runs the paper's §5 loop — reference run, 15 tuning runs driven by
+//! the deep Q-network (falling back to the tabular agent if artifacts
+//! are missing), ensemble inference — on the Lattice-Boltzmann workload,
+//! then prints the per-run log and the shipped configuration.
+
+use aituning::coordinator::{Action, AgentKind, Controller, TuningConfig};
+use aituning::util::bench::Table;
+use aituning::workloads::WorkloadKind;
+
+fn main() -> anyhow::Result<()> {
+    let artifacts = aituning::runtime::default_artifacts_dir();
+    let agent = if artifacts.join("manifest.json").exists() {
+        AgentKind::Dqn
+    } else {
+        eprintln!("artifacts not found — falling back to the tabular agent");
+        AgentKind::Tabular
+    };
+
+    let cfg = TuningConfig { agent, runs: 15, seed: 7, ..TuningConfig::default() };
+    let mut ctl = Controller::new(cfg)?;
+
+    let kind = WorkloadKind::LatticeBoltzmann;
+    let images = 64;
+    println!("tuning {} at {images} images ({} agent)\n", kind.name(), ctl.agent_name());
+
+    let out = ctl.tune(kind, images)?;
+
+    let mut t = Table::new(&["run", "total (µs)", "reward", "action"]);
+    for r in &out.log.runs {
+        t.row(vec![
+            r.run_index.to_string(),
+            format!("{:.0}", r.total_time_us),
+            format!("{:+.4}", r.reward),
+            r.action
+                .map(|a| Action::from_index(a).describe())
+                .unwrap_or_else(|| "reference (vanilla MPICH)".into()),
+        ]);
+    }
+    t.print();
+
+    println!("\nreference: {:.0} µs", out.reference_us);
+    println!("best:      {:.0} µs ({:+.1}%)", out.best_us, out.improvement() * 100.0);
+    println!("shipped ensemble configuration (§5.4):\n  {}", out.ensemble);
+    let ens = ctl.evaluate(kind, images, &out.ensemble, 3)?;
+    println!(
+        "ensemble evaluation: {:.0} µs ({:+.1}% vs reference)",
+        ens,
+        (out.reference_us - ens) / out.reference_us * 100.0
+    );
+    Ok(())
+}

@@ -1,0 +1,61 @@
+//! §6 training campaign driver (scaled).
+//!
+//! The paper trains AITuning on four CAF codes (CloverLeaf, LBM,
+//! Skeleton PIC, PRK) at 64–2048 processes on two machines, ~5000 runs
+//! total. This driver runs the same campaign shape — both machine
+//! models, all four training codes, a range of image counts — scaled to
+//! minutes of simulated-cluster time. Pass `--full` for the larger
+//! sweep (64..512 images), `--quick` for a smoke pass.
+
+use aituning::coordinator::{AgentKind, Controller, TuningConfig};
+use aituning::simmpi::Machine;
+use aituning::util::bench::Table;
+use aituning::workloads::WorkloadKind;
+
+fn main() -> anyhow::Result<()> {
+    let full = std::env::args().any(|a| a == "--full");
+    let quick = std::env::args().any(|a| a == "--quick");
+    let image_counts: &[usize] = if full {
+        &[64, 128, 256, 512]
+    } else if quick {
+        &[16]
+    } else {
+        &[32, 64, 128]
+    };
+    let runs_per = if quick { 6 } else { 20 };
+
+    let mut t = Table::new(&["machine", "workload", "images", "reference (µs)", "best gain"]);
+    let mut total_runs = 0usize;
+    for machine in [Machine::cheyenne(), Machine::edison()] {
+        let agent = if aituning::runtime::default_artifacts_dir().join("manifest.json").exists() {
+            AgentKind::Dqn
+        } else {
+            AgentKind::Tabular
+        };
+        let cfg = TuningConfig {
+            machine: machine.clone(),
+            agent,
+            runs: runs_per,
+            seed: 5,
+            ..TuningConfig::default()
+        };
+        let mut ctl = Controller::new(cfg)?;
+        for kind in WorkloadKind::TRAINING {
+            for &n in image_counts {
+                let out = ctl.tune(kind, n)?;
+                t.row(vec![
+                    machine.name.to_string(),
+                    kind.name().to_string(),
+                    n.to_string(),
+                    format!("{:.0}", out.reference_us),
+                    format!("{:+.1}%", out.improvement() * 100.0),
+                ]);
+            }
+        }
+        total_runs += ctl.lifetime_runs();
+    }
+    println!("=== §6 training campaign (scaled; paper: 5000 runs at 64–2048 procs) ===");
+    t.print();
+    println!("\ntotal application runs executed: {total_runs}");
+    Ok(())
+}

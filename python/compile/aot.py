@@ -1,0 +1,155 @@
+"""AOT: lower the Q-network entry points to HLO *text* artifacts.
+
+Interchange format is HLO text, NOT jax.export / .serialize():
+jax >= 0.5 emits HloModuleProto with 64-bit instruction ids, which the
+Rust side's xla_extension 0.5.1 rejects (proto.id() <= INT_MAX). The HLO
+text parser reassigns ids, so text round-trips cleanly
+(see /opt/xla-example/README.md).
+
+Emits:
+  artifacts/q_forward_1.hlo.txt   params..., state[1,S]   -> (q[1,A],)
+  artifacts/q_forward_b.hlo.txt   params..., states[B,S]  -> (q[B,A],)
+  artifacts/q_train.hlo.txt       params,m,v,step,batch,lr,gamma
+                                    -> (params',m',v',step',loss)
+  artifacts/manifest.json         input/output shapes per artifact +
+                                  model constants, for Rust-side checks
+  artifacts/golden.json           golden numerics for the Rust runtime
+                                  round-trip test (seeded params, fixed
+                                  inputs, expected outputs)
+
+Run via ``make artifacts`` (no-op when inputs are unchanged).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from compile import model
+
+
+def to_hlo_text(fn, example_args) -> str:
+    """jit -> lower -> stablehlo -> XlaComputation -> HLO text."""
+    lowered = jax.jit(fn).lower(*example_args)
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec_list(args):
+    return [{"shape": list(a.shape), "dtype": str(a.dtype)} for a in args]
+
+
+def _result_specs(fn, example_args):
+    out = jax.eval_shape(fn, *example_args)
+    flat, _ = jax.tree_util.tree_flatten(out)
+    return [{"shape": list(a.shape), "dtype": str(a.dtype)} for a in flat]
+
+
+def build_manifest() -> dict:
+    entries = {}
+    for name, fn, args in (
+        ("q_forward_1", model.q_forward, model.forward_example_args(1)),
+        ("q_forward_b", model.q_forward, model.forward_example_args(model.REPLAY_BATCH)),
+        ("q_train", model.train_step, model.train_example_args()),
+        ("q_train_target", model.train_step_target, model.train_target_example_args()),
+    ):
+        entries[name] = {
+            "file": f"{name}.hlo.txt",
+            "inputs": _spec_list(args),
+            "outputs": _result_specs(fn, args),
+        }
+    return {
+        "state_dim": model.STATE_DIM,
+        "num_actions": model.NUM_ACTIONS,
+        "hidden": list(model.HIDDEN),
+        "replay_batch": model.REPLAY_BATCH,
+        "adam": {"b1": model.ADAM_B1, "b2": model.ADAM_B2, "eps": model.ADAM_EPS},
+        "huber_delta": model.HUBER_DELTA,
+        "artifacts": entries,
+    }
+
+
+def build_golden(seed: int = 0) -> dict:
+    """Golden vectors: Rust's runtime tests replay these through PJRT."""
+    key = jax.random.PRNGKey(seed)
+    params = model.init_params(key)
+    B = model.REPLAY_BATCH
+
+    k1, k2, k3, k4 = jax.random.split(jax.random.PRNGKey(seed + 1), 4)
+    s1 = jax.random.normal(k1, (1, model.STATE_DIM), jnp.float32)
+    q1 = model.q_forward(*params, s1)
+
+    s = jax.random.normal(k2, (B, model.STATE_DIM), jnp.float32)
+    a_idx = jax.random.randint(k3, (B,), 0, model.NUM_ACTIONS)
+    a_onehot = jax.nn.one_hot(a_idx, model.NUM_ACTIONS, dtype=jnp.float32)
+    r = jax.random.uniform(k4, (B,), jnp.float32, -1.0, 1.0)
+    s_next = jax.random.normal(k1, (B, model.STATE_DIM), jnp.float32)
+    done = (jax.random.uniform(k2, (B,), jnp.float32) < 0.1).astype(jnp.float32)
+
+    zeros = tuple(jnp.zeros_like(p) for p in params)
+    out = model.train_step(
+        *params, *zeros, *zeros, jnp.float32(0.0),
+        s, a_onehot, r, s_next, done,
+        jnp.float32(1e-3), jnp.float32(0.9),
+    )
+    n = len(params)
+    new_params, loss = out[:n], out[-1]
+
+    as_list = lambda a: np.asarray(a, np.float32).reshape(-1).tolist()
+    return {
+        "seed": seed,
+        "params": [as_list(p) for p in params],
+        "forward1": {"state": as_list(s1), "q": as_list(q1)},
+        "train": {
+            "s": as_list(s),
+            "a_onehot": as_list(a_onehot),
+            "r": as_list(r),
+            "s_next": as_list(s_next),
+            "done": as_list(done),
+            "lr": 1e-3,
+            "gamma": 0.9,
+            "loss": float(loss),
+            "new_params": [as_list(p) for p in new_params],
+        },
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    jobs = (
+        ("q_forward_1", model.q_forward, model.forward_example_args(1)),
+        ("q_forward_b", model.q_forward, model.forward_example_args(model.REPLAY_BATCH)),
+        ("q_train", model.train_step, model.train_example_args()),
+        ("q_train_target", model.train_step_target, model.train_target_example_args()),
+    )
+    for name, fn, example_args in jobs:
+        text = to_hlo_text(fn, example_args)
+        path = os.path.join(args.out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        print(f"wrote {path} ({len(text)} chars)")
+
+    with open(os.path.join(args.out_dir, "manifest.json"), "w") as f:
+        json.dump(build_manifest(), f, indent=1)
+    print("wrote manifest.json")
+
+    with open(os.path.join(args.out_dir, "golden.json"), "w") as f:
+        json.dump(build_golden(), f)
+    print("wrote golden.json")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,215 @@
+"""L1 Pallas kernel: fused dense layer (x @ W + b, optional ReLU).
+
+This is the compute hot-spot of AITuning's deep Q-network: every layer of
+the MLP — in both the action-selection forward pass and the replay train
+step — goes through this kernel, so it is the single Pallas kernel the
+whole stack lowers through.
+
+TPU adaptation (DESIGN.md §Hardware-Adaptation): the paper trains a small
+MLP on CPU nodes; we restructure the dense layer for the MXU systolic
+array instead of mechanically porting CPU BLAS:
+
+  * block shapes padded/tiled toward the MXU-native 128x128 footprint
+    (8x128 vector-lane alignment for the minor dims);
+  * accumulation in float32 regardless of input dtype (bf16 inputs hit
+    the MXU's native bf16 x bf16 -> f32 path);
+  * BlockSpec expresses the HBM->VMEM schedule over the batch dimension,
+    the role CUDA threadblocks play in GPU papers;
+  * weights + bias are kept resident in VMEM across the batch grid
+    (index_map pins them to block (0, 0)).
+
+On this testbed the kernel runs under ``interpret=True`` (the CPU PJRT
+plugin cannot execute Mosaic custom-calls); real-TPU efficiency is
+estimated from the VMEM footprint + MXU alignment in DESIGN.md §Perf.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# MXU-friendly tile targets. For the Q-net's sizes (batch <= 32,
+# features <= 64) a single block covers the whole operand, but the kernel
+# is written for the general tiled case and property-tested over shapes.
+_BATCH_TILE = 128
+_LANE = 128
+_SUBLANE = 8
+
+
+def _ceil_div(a: int, b: int) -> int:
+    return -(-a // b)
+
+
+def _dense_kernel(x_ref, w_ref, b_ref, o_ref, *, relu: bool):
+    """One grid step: o[bi] = act(x[bi] @ W + b) with f32 accumulation."""
+    x = x_ref[...]
+    w = w_ref[...]
+    b = b_ref[...]
+    acc = jnp.dot(
+        x.astype(jnp.float32),
+        w.astype(jnp.float32),
+        preferred_element_type=jnp.float32,
+    )
+    acc = acc + b.astype(jnp.float32)[None, :]
+    if relu:
+        acc = jnp.maximum(acc, 0.0)
+    o_ref[...] = acc.astype(o_ref.dtype)
+
+
+def _fused_dense_impl(
+    x: jax.Array,
+    w: jax.Array,
+    b: jax.Array,
+    *,
+    relu: bool = False,
+    batch_tile: int | None = None,
+) -> jax.Array:
+    """Fused ``act(x @ w + b)`` as a Pallas kernel.
+
+    Args:
+      x: ``[B, I]`` activations.
+      w: ``[I, O]`` weights.
+      b: ``[O]`` bias.
+      relu: apply ReLU inside the kernel (fused epilogue).
+      batch_tile: HBM->VMEM tile along the batch dim; defaults to
+        ``min(B, 128)``.
+
+    Returns:
+      ``[B, O]`` array with ``x``'s dtype (accumulation is f32).
+    """
+    if x.ndim != 2 or w.ndim != 2 or b.ndim != 1:
+        raise ValueError(
+            f"fused_dense expects x[B,I], w[I,O], b[O]; got "
+            f"{x.shape}, {w.shape}, {b.shape}"
+        )
+    bsz, inner = x.shape
+    if w.shape[0] != inner:
+        raise ValueError(f"inner dim mismatch: x {x.shape} vs w {w.shape}")
+    out = w.shape[1]
+    if b.shape[0] != out:
+        raise ValueError(f"bias dim mismatch: w {w.shape} vs b {b.shape}")
+
+    bt = batch_tile or min(bsz, _BATCH_TILE)
+    bt = max(1, min(bt, bsz))
+    grid = (_ceil_div(bsz, bt),)
+
+    kernel = functools.partial(_dense_kernel, relu=relu)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            # activations stream through VMEM one batch tile per grid step
+            pl.BlockSpec((bt, inner), lambda i: (i, 0)),
+            # weights + bias stay resident in VMEM across the whole grid
+            pl.BlockSpec((inner, out), lambda i: (0, 0)),
+            pl.BlockSpec((out,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((bt, out), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((bsz, out), x.dtype),
+        interpret=True,  # CPU PJRT cannot run Mosaic custom-calls
+    )(x, w, b)
+
+
+def _matmul_kernel(x_ref, y_ref, o_ref):
+    """o[mi] = x[mi] @ y — backward-pass matmul tile, f32 accumulation."""
+    o_ref[...] = jnp.dot(
+        x_ref[...].astype(jnp.float32),
+        y_ref[...].astype(jnp.float32),
+        preferred_element_type=jnp.float32,
+    ).astype(o_ref.dtype)
+
+
+def matmul(x: jax.Array, y: jax.Array, *, row_tile: int | None = None) -> jax.Array:
+    """``x[M,K] @ y[K,N]`` as a Pallas kernel (used by the dense VJP)."""
+    m, k = x.shape
+    k2, n = y.shape
+    if k != k2:
+        raise ValueError(f"matmul inner dim mismatch: {x.shape} vs {y.shape}")
+    rt = max(1, min(row_tile or min(m, _BATCH_TILE), m))
+    return pl.pallas_call(
+        _matmul_kernel,
+        grid=(_ceil_div(m, rt),),
+        in_specs=[
+            pl.BlockSpec((rt, k), lambda i: (i, 0)),
+            pl.BlockSpec((k, n), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((rt, n), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((m, n), x.dtype),
+        interpret=True,
+    )(x, y)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3,))
+def _fused_dense_diff(x, w, b, relu):
+    return _fused_dense_impl(x, w, b, relu=relu)
+
+
+def _fused_dense_fwd(x, w, b, relu):
+    y = _fused_dense_impl(x, w, b, relu=relu)
+    return y, (x, w, y)
+
+
+def _fused_dense_bwd(relu, res, g):
+    x, w, y = res
+    if relu:
+        g = g * (y > 0).astype(g.dtype)
+    # All three gradient contractions run through the Pallas matmul kernel,
+    # so the backward pass stays on the L1 hot path too.
+    dx = matmul(g, w.T)
+    dw = matmul(x.T, g)
+    db = jnp.sum(g.astype(jnp.float32), axis=0).astype(g.dtype)
+    return dx, dw, db
+
+
+_fused_dense_diff.defvjp(_fused_dense_fwd, _fused_dense_bwd)
+
+
+def fused_dense(
+    x: jax.Array,
+    w: jax.Array,
+    b: jax.Array,
+    *,
+    relu: bool = False,
+    batch_tile: int | None = None,
+) -> jax.Array:
+    """Differentiable fused dense layer: ``act(x @ w + b)``.
+
+    Forward and backward both execute as Pallas kernels; see
+    ``_fused_dense_impl`` for the forward contract. ``batch_tile`` only
+    affects the non-differentiated path (the VJP wrapper uses the default
+    tile so residuals match).
+    """
+    if batch_tile is not None:
+        return _fused_dense_impl(x, w, b, relu=relu, batch_tile=batch_tile)
+    return _fused_dense_diff(x, w, b, relu)
+
+
+def vmem_footprint_bytes(
+    bsz: int, inner: int, out: int, dtype_bytes: int = 4, batch_tile: int | None = None
+) -> int:
+    """Estimated VMEM working set of one grid step (DESIGN.md §Perf).
+
+    x tile + resident W + resident b + out tile + f32 accumulator.
+    """
+    bt = batch_tile or min(bsz, _BATCH_TILE)
+    x_tile = bt * inner * dtype_bytes
+    w_res = inner * out * dtype_bytes
+    b_res = out * dtype_bytes
+    o_tile = bt * out * dtype_bytes
+    acc = bt * out * 4
+    return x_tile + w_res + b_res + o_tile + acc
+
+
+def mxu_utilization_estimate(bsz: int, inner: int, out: int) -> float:
+    """Fraction of MXU 128x128x8 issue slots doing useful work.
+
+    The systolic array processes ceil-padded tiles; utilization is
+    useful MACs / padded MACs. Used for the §Perf roofline estimate.
+    """
+    pad = lambda v, m: _ceil_div(v, m) * m
+    useful = bsz * inner * out
+    padded = pad(bsz, _SUBLANE) * pad(inner, _LANE) * pad(out, _LANE)
+    return useful / padded

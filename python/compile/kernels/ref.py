@@ -1,0 +1,30 @@
+"""Pure-jnp oracle for the fused dense kernel (no Pallas).
+
+Every numerical claim about kernels/dense.py is checked against this file
+by python/tests/. Keep this file trivially auditable: plain jnp, no
+tiling, no tricks.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def dense_ref(x: jax.Array, w: jax.Array, b: jax.Array, *, relu: bool = False) -> jax.Array:
+    """act(x @ w + b) with f32 accumulation, mirroring the kernel contract."""
+    acc = jnp.dot(
+        x.astype(jnp.float32), w.astype(jnp.float32), preferred_element_type=jnp.float32
+    )
+    acc = acc + b.astype(jnp.float32)[None, :]
+    if relu:
+        acc = jnp.maximum(acc, 0.0)
+    return acc.astype(x.dtype)
+
+
+def q_forward_ref(params, x):
+    """3-layer MLP forward using only dense_ref (oracle for model.q_forward)."""
+    w1, b1, w2, b2, w3, b3 = params
+    h = dense_ref(x, w1, b1, relu=True)
+    h = dense_ref(h, w2, b2, relu=True)
+    return dense_ref(h, w3, b3, relu=False)

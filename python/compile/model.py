@@ -1,0 +1,204 @@
+"""L2: AITuning's deep Q-network and its full training step, in JAX.
+
+The paper (Sect. 5.2) trains a neural network to estimate the Q-value of
+(state, action) pairs, with experience replay and *without* the Q-target
+technique ("We have not implemented the Q-target technique").
+
+This module defines the exact computations that are AOT-lowered to HLO
+text by aot.py and executed from the Rust coordinator via PJRT:
+
+  * ``q_forward``     — Q(s, .) for a batch of states (action selection
+                        uses batch 1, replay-target evaluation batch 32);
+  * ``train_step``    — one replay-minibatch Q-learning update: Bellman
+                        targets from the *same* network (no target net,
+                        paper-faithful), Huber loss, Adam optimizer,
+                        fully functional (params in -> params out).
+
+Everything flows through the L1 Pallas fused-dense kernel so the whole
+Q-network lowers into a single HLO module per entry point.
+
+State/action layout must match rust/src/coordinator/state.rs:
+  STATE_DIM = 18, NUM_ACTIONS = 13, HIDDEN = (64, 64), REPLAY_BATCH = 32.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels.dense import fused_dense
+
+STATE_DIM = 18
+NUM_ACTIONS = 13
+HIDDEN = (64, 64)
+REPLAY_BATCH = 32
+
+# Adam hyper-parameters (beta/eps fixed at compile time; lr is an input so
+# Rust can schedule it without recompiling).
+ADAM_B1 = 0.9
+ADAM_B2 = 0.999
+ADAM_EPS = 1e-8
+
+# Huber transition point (standard DQN choice).
+HUBER_DELTA = 1.0
+
+# (name, (in_dim, out_dim)) for each layer, in parameter order.
+LAYER_DIMS = (
+    (STATE_DIM, HIDDEN[0]),
+    (HIDDEN[0], HIDDEN[1]),
+    (HIDDEN[1], NUM_ACTIONS),
+)
+
+
+def param_specs():
+    """[(name, shape)] for the flat parameter list, in calling order."""
+    specs = []
+    for i, (d_in, d_out) in enumerate(LAYER_DIMS, start=1):
+        specs.append((f"w{i}", (d_in, d_out)))
+        specs.append((f"b{i}", (d_out,)))
+    return specs
+
+
+def init_params(key: jax.Array):
+    """He-uniform init, returned in the flat (w1,b1,w2,b2,w3,b3) order."""
+    params = []
+    for d_in, d_out in LAYER_DIMS:
+        key, wk = jax.random.split(key)
+        bound = jnp.sqrt(6.0 / d_in)
+        params.append(jax.random.uniform(wk, (d_in, d_out), jnp.float32, -bound, bound))
+        params.append(jnp.zeros((d_out,), jnp.float32))
+    return tuple(params)
+
+
+def q_forward(w1, b1, w2, b2, w3, b3, x):
+    """Q(s, .) for a batch of states via the Pallas fused-dense kernel."""
+    h = fused_dense(x, w1, b1, relu=True)
+    h = fused_dense(h, w2, b2, relu=True)
+    return fused_dense(h, w3, b3, relu=False)
+
+
+def _huber(err: jax.Array) -> jax.Array:
+    a = jnp.abs(err)
+    quad = jnp.minimum(a, HUBER_DELTA)
+    return 0.5 * quad * quad + HUBER_DELTA * (a - quad)
+
+
+def _loss(params, s, a_onehot, r, s_next, done, gamma):
+    """Q-learning loss on a replay minibatch (Bellman targets, no target net)."""
+    q = q_forward(*params, s)                              # [B, A]
+    q_next = jax.lax.stop_gradient(q_forward(*params, s_next))
+    target = r + gamma * (1.0 - done) * jnp.max(q_next, axis=1)
+    pred = jnp.sum(q * a_onehot, axis=1)
+    return jnp.mean(_huber(pred - target))
+
+
+def train_step(
+    w1, b1, w2, b2, w3, b3,          # params
+    m1, mb1, m2, mb2, m3, mb3,       # Adam first moments (same shapes)
+    v1, vb1, v2, vb2, v3, vb3,       # Adam second moments
+    step,                            # f32 scalar: Adam step count (1-based next)
+    s, a_onehot, r, s_next, done,    # replay minibatch
+    lr, gamma,                       # f32 scalars
+):
+    """One replay update. Returns params', m', v', step+1, loss."""
+    params = (w1, b1, w2, b2, w3, b3)
+    m = (m1, mb1, m2, mb2, m3, mb3)
+    v = (v1, vb1, v2, vb2, v3, vb3)
+
+    loss, grads = jax.value_and_grad(_loss)(params, s, a_onehot, r, s_next, done, gamma)
+
+    t = step + 1.0
+    bc1 = 1.0 - ADAM_B1 ** t
+    bc2 = 1.0 - ADAM_B2 ** t
+    new_params, new_m, new_v = [], [], []
+    for p, g, mi, vi in zip(params, grads, m, v):
+        mi = ADAM_B1 * mi + (1.0 - ADAM_B1) * g
+        vi = ADAM_B2 * vi + (1.0 - ADAM_B2) * (g * g)
+        update = lr * (mi / bc1) / (jnp.sqrt(vi / bc2) + ADAM_EPS)
+        new_params.append(p - update)
+        new_m.append(mi)
+        new_v.append(vi)
+    return (*new_params, *new_m, *new_v, t, loss)
+
+
+def train_step_target(
+    w1, b1, w2, b2, w3, b3,          # online params
+    t1, tb1, t2, tb2, t3, tb3,       # target-network params (frozen)
+    m1, mb1, m2, mb2, m3, mb3,       # Adam first moments
+    v1, vb1, v2, vb2, v3, vb3,       # Adam second moments
+    step,
+    s, a_onehot, r, s_next, done,
+    lr, gamma,
+):
+    """Q-target ablation: Bellman targets from a separate frozen network.
+
+    The paper does NOT use this ("We have not implemented the Q-target
+    technique", Sect. 5.2); it exists as the fixed-Q-targets ablation
+    from the Atari work the paper cites. The target params are inputs
+    and pass through unchanged — Rust decides when to refresh them.
+    """
+    params = (w1, b1, w2, b2, w3, b3)
+    target = (t1, tb1, t2, tb2, t3, tb3)
+    m = (m1, mb1, m2, mb2, m3, mb3)
+    v = (v1, vb1, v2, vb2, v3, vb3)
+
+    def loss_fn(params):
+        q = q_forward(*params, s)
+        q_next = jax.lax.stop_gradient(q_forward(*target, s_next))
+        tgt = r + gamma * (1.0 - done) * jnp.max(q_next, axis=1)
+        pred = jnp.sum(q * a_onehot, axis=1)
+        return jnp.mean(_huber(pred - tgt))
+
+    loss, grads = jax.value_and_grad(loss_fn)(params)
+    t = step + 1.0
+    bc1 = 1.0 - ADAM_B1 ** t
+    bc2 = 1.0 - ADAM_B2 ** t
+    new_params, new_m, new_v = [], [], []
+    for p, g, mi, vi in zip(params, grads, m, v):
+        mi = ADAM_B1 * mi + (1.0 - ADAM_B1) * g
+        vi = ADAM_B2 * vi + (1.0 - ADAM_B2) * (g * g)
+        update = lr * (mi / bc1) / (jnp.sqrt(vi / bc2) + ADAM_EPS)
+        new_params.append(p - update)
+        new_m.append(mi)
+        new_v.append(vi)
+    return (*new_params, *new_m, *new_v, t, loss)
+
+
+def train_target_example_args(batch: int = REPLAY_BATCH):
+    """ShapeDtypeStructs for lowering train_step_target."""
+    f32 = jnp.float32
+    p = [jax.ShapeDtypeStruct(shape, f32) for _, shape in param_specs()]
+    args = list(p) + list(p) + list(p) + list(p)        # params, target, m, v
+    args.append(jax.ShapeDtypeStruct((), f32))          # step
+    args.append(jax.ShapeDtypeStruct((batch, STATE_DIM), f32))
+    args.append(jax.ShapeDtypeStruct((batch, NUM_ACTIONS), f32))
+    args.append(jax.ShapeDtypeStruct((batch,), f32))
+    args.append(jax.ShapeDtypeStruct((batch, STATE_DIM), f32))
+    args.append(jax.ShapeDtypeStruct((batch,), f32))
+    args.append(jax.ShapeDtypeStruct((), f32))          # lr
+    args.append(jax.ShapeDtypeStruct((), f32))          # gamma
+    return args
+
+
+def forward_example_args(batch: int):
+    """ShapeDtypeStructs for lowering q_forward at a given batch size."""
+    f32 = jnp.float32
+    args = [jax.ShapeDtypeStruct(shape, f32) for _, shape in param_specs()]
+    args.append(jax.ShapeDtypeStruct((batch, STATE_DIM), f32))
+    return args
+
+
+def train_example_args(batch: int = REPLAY_BATCH):
+    """ShapeDtypeStructs for lowering train_step."""
+    f32 = jnp.float32
+    p = [jax.ShapeDtypeStruct(shape, f32) for _, shape in param_specs()]
+    args = list(p) + list(p) + list(p)                 # params, m, v
+    args.append(jax.ShapeDtypeStruct((), f32))         # step
+    args.append(jax.ShapeDtypeStruct((batch, STATE_DIM), f32))    # s
+    args.append(jax.ShapeDtypeStruct((batch, NUM_ACTIONS), f32))  # a_onehot
+    args.append(jax.ShapeDtypeStruct((batch,), f32))              # r
+    args.append(jax.ShapeDtypeStruct((batch, STATE_DIM), f32))    # s_next
+    args.append(jax.ShapeDtypeStruct((batch,), f32))              # done
+    args.append(jax.ShapeDtypeStruct((), f32))         # lr
+    args.append(jax.ShapeDtypeStruct((), f32))         # gamma
+    return args

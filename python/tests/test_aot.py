@@ -1,0 +1,66 @@
+"""AOT pipeline: HLO text artifacts are well-formed and manifest-consistent."""
+
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import aot, model
+
+ART = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+
+def test_hlo_text_is_parseable_header():
+    text = aot.to_hlo_text(model.q_forward, model.forward_example_args(1))
+    assert text.startswith("HloModule")
+    assert "f32[1,18]" in text and "f32[1,13]" in text
+
+
+def test_manifest_round_trip():
+    man = aot.build_manifest()
+    assert man["state_dim"] == model.STATE_DIM
+    assert man["num_actions"] == model.NUM_ACTIONS
+    arts = man["artifacts"]
+    assert set(arts) == {"q_forward_1", "q_forward_b", "q_train", "q_train_target"}
+    # train: inputs = 18 params/moments + step + 5 batch + 2 scalars
+    assert len(arts["q_train"]["inputs"]) == 26
+    assert len(arts["q_train"]["outputs"]) == 20
+    # target-network ablation: 6 extra (frozen) param inputs, same outputs
+    assert len(arts["q_train_target"]["inputs"]) == 32
+    assert len(arts["q_train_target"]["outputs"]) == 20
+    assert arts["q_forward_b"]["inputs"][-1]["shape"] == [model.REPLAY_BATCH, model.STATE_DIM]
+
+
+def test_golden_self_consistent():
+    """golden.json numerics must replay exactly in-process."""
+    g = aot.build_golden(seed=0)
+    params = [
+        jnp.asarray(p, jnp.float32).reshape(shape)
+        for p, (_, shape) in zip(g["params"], model.param_specs())
+    ]
+    s1 = jnp.asarray(g["forward1"]["state"], jnp.float32).reshape(1, model.STATE_DIM)
+    q1 = model.q_forward(*params, s1)
+    np.testing.assert_allclose(
+        np.asarray(q1).reshape(-1), np.asarray(g["forward1"]["q"]), rtol=1e-6
+    )
+
+
+@pytest.mark.skipif(
+    not os.path.exists(os.path.join(ART, "manifest.json")),
+    reason="artifacts not built (run `make artifacts`)",
+)
+def test_emitted_artifacts_match_current_model():
+    with open(os.path.join(ART, "manifest.json")) as f:
+        man = json.load(f)
+    assert man["state_dim"] == model.STATE_DIM
+    assert man["num_actions"] == model.NUM_ACTIONS
+    assert man["replay_batch"] == model.REPLAY_BATCH
+    for name, entry in man["artifacts"].items():
+        path = os.path.join(ART, entry["file"])
+        assert os.path.exists(path), f"missing artifact {path}"
+        with open(path) as f:
+            head = f.read(64)
+        assert head.startswith("HloModule"), name

@@ -1,0 +1,149 @@
+"""L1 correctness: Pallas fused-dense kernel vs the pure-jnp oracle.
+
+Hypothesis sweeps shapes/dtypes; fixed cases pin the Q-net's exact shapes.
+"""
+
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+
+from compile.kernels.dense import (
+    fused_dense,
+    matmul,
+    mxu_utilization_estimate,
+    vmem_footprint_bytes,
+)
+from compile.kernels.ref import dense_ref
+
+jax.config.update("jax_enable_x64", False)
+
+
+def _rand(key, shape, dtype):
+    return jax.random.normal(key, shape, jnp.float32).astype(dtype)
+
+
+def _tol(dtype):
+    return dict(rtol=2e-2, atol=2e-2) if dtype == jnp.bfloat16 else dict(rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("relu", [False, True])
+@pytest.mark.parametrize(
+    "b,i,o",
+    [(1, 18, 64), (32, 18, 64), (32, 64, 64), (32, 64, 13), (1, 64, 13)],
+)
+def test_qnet_shapes_match_ref(b, i, o, relu):
+    """The exact layer shapes the Q-network uses."""
+    k1, k2, k3 = jax.random.split(jax.random.PRNGKey(b * 1000 + i + o), 3)
+    x = _rand(k1, (b, i), jnp.float32)
+    w = _rand(k2, (i, o), jnp.float32)
+    bias = _rand(k3, (o,), jnp.float32)
+    got = fused_dense(x, w, bias, relu=relu)
+    want = dense_ref(x, w, bias, relu=relu)
+    np.testing.assert_allclose(got, want, **_tol(jnp.float32))
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    b=st.integers(1, 40),
+    i=st.integers(1, 96),
+    o=st.integers(1, 96),
+    relu=st.booleans(),
+    dtype_bf16=st.booleans(),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_fused_dense_matches_ref_property(b, i, o, relu, dtype_bf16, seed):
+    dtype = jnp.bfloat16 if dtype_bf16 else jnp.float32
+    k1, k2, k3 = jax.random.split(jax.random.PRNGKey(seed), 3)
+    x = _rand(k1, (b, i), dtype)
+    w = _rand(k2, (i, o), dtype)
+    bias = _rand(k3, (o,), dtype)
+    got = fused_dense(x, w, bias, relu=relu)
+    want = dense_ref(x, w, bias, relu=relu)
+    assert got.dtype == want.dtype
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(want, np.float32), **_tol(dtype)
+    )
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    b=st.integers(1, 33),
+    tile=st.integers(1, 48),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_batch_tile_invariance(b, tile, seed):
+    """Any batch tile (even non-dividing) must give the same numbers."""
+    k1, k2, k3 = jax.random.split(jax.random.PRNGKey(seed), 3)
+    x = _rand(k1, (b, 24), jnp.float32)
+    w = _rand(k2, (24, 16), jnp.float32)
+    bias = _rand(k3, (16,), jnp.float32)
+    base = fused_dense(x, w, bias, relu=True)
+    tiled = fused_dense(x, w, bias, relu=True, batch_tile=tile)
+    np.testing.assert_allclose(base, tiled, rtol=1e-6, atol=1e-6)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    m=st.integers(1, 48), k=st.integers(1, 48), n=st.integers(1, 48),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_matmul_kernel_matches_jnp(m, k, n, seed):
+    k1, k2 = jax.random.split(jax.random.PRNGKey(seed))
+    x = _rand(k1, (m, k), jnp.float32)
+    y = _rand(k2, (k, n), jnp.float32)
+    np.testing.assert_allclose(matmul(x, y), x @ y, rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("relu", [False, True])
+def test_fused_dense_grads_match_ref(relu):
+    """custom_vjp backward (Pallas matmuls) vs autodiff of the oracle."""
+    k1, k2, k3, k4 = jax.random.split(jax.random.PRNGKey(7), 4)
+    x = _rand(k1, (8, 12), jnp.float32)
+    w = _rand(k2, (12, 10), jnp.float32)
+    bias = _rand(k3, (10,), jnp.float32)
+    cot = _rand(k4, (8, 10), jnp.float32)
+
+    def via_kernel(x, w, b):
+        return jnp.sum(fused_dense(x, w, b, relu=relu) * cot)
+
+    def via_ref(x, w, b):
+        return jnp.sum(dense_ref(x, w, b, relu=relu) * cot)
+
+    g_k = jax.grad(via_kernel, argnums=(0, 1, 2))(x, w, bias)
+    g_r = jax.grad(via_ref, argnums=(0, 1, 2))(x, w, bias)
+    for a, b_ in zip(g_k, g_r):
+        np.testing.assert_allclose(a, b_, rtol=1e-4, atol=1e-5)
+
+
+def test_relu_clamps_negative():
+    x = jnp.array([[-1.0, 1.0]], jnp.float32)
+    w = jnp.eye(2, dtype=jnp.float32)
+    b = jnp.zeros((2,), jnp.float32)
+    out = fused_dense(x, w, b, relu=True)
+    assert float(out[0, 0]) == 0.0 and float(out[0, 1]) == 1.0
+
+
+def test_shape_validation():
+    x = jnp.zeros((2, 3), jnp.float32)
+    w = jnp.zeros((4, 5), jnp.float32)  # inner mismatch
+    b = jnp.zeros((5,), jnp.float32)
+    with pytest.raises(ValueError):
+        fused_dense(x, w, b)
+    with pytest.raises(ValueError):
+        fused_dense(x, jnp.zeros((3, 5), jnp.float32), jnp.zeros((4,), jnp.float32))
+
+
+def test_vmem_footprint_fits_tpu_vmem():
+    """Q-net layers must fit VMEM (16 MiB/core) with the default tiles."""
+    for b, i, o in [(32, 18, 64), (32, 64, 64), (32, 64, 13)]:
+        assert vmem_footprint_bytes(b, i, o) < 16 * 2**20
+
+
+def test_mxu_utilization_monotone_in_alignment():
+    """128-aligned shapes achieve full estimated MXU utilization."""
+    assert mxu_utilization_estimate(128, 128, 128) == 1.0
+    assert mxu_utilization_estimate(32, 18, 64) < 1.0

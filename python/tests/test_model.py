@@ -1,0 +1,140 @@
+"""L2 correctness: Q-network forward + train step numerics."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model
+from compile.kernels.ref import q_forward_ref
+
+
+@pytest.fixture(scope="module")
+def params():
+    return model.init_params(jax.random.PRNGKey(0))
+
+
+def _batch(key, n=model.REPLAY_BATCH):
+    k = jax.random.split(key, 5)
+    s = jax.random.normal(k[0], (n, model.STATE_DIM), jnp.float32)
+    a = jax.nn.one_hot(
+        jax.random.randint(k[1], (n,), 0, model.NUM_ACTIONS),
+        model.NUM_ACTIONS, dtype=jnp.float32,
+    )
+    r = jax.random.uniform(k[2], (n,), jnp.float32, -1.0, 1.0)
+    s2 = jax.random.normal(k[3], (n, model.STATE_DIM), jnp.float32)
+    done = (jax.random.uniform(k[4], (n,), jnp.float32) < 0.2).astype(jnp.float32)
+    return s, a, r, s2, done
+
+
+def test_forward_matches_oracle(params):
+    x = jax.random.normal(jax.random.PRNGKey(1), (8, model.STATE_DIM), jnp.float32)
+    got = model.q_forward(*params, x)
+    want = q_forward_ref(params, x)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+    assert got.shape == (8, model.NUM_ACTIONS)
+
+
+def test_init_params_shapes(params):
+    specs = model.param_specs()
+    assert [p.shape for p in params] == [s for _, s in specs]
+    # He-uniform bound respected
+    for (name, _), p in zip(specs, params):
+        if name.startswith("w"):
+            bound = np.sqrt(6.0 / p.shape[0])
+            assert float(jnp.max(jnp.abs(p))) <= bound
+
+
+def _run_train(params, batch, lr=1e-3, gamma=0.9, steps=1):
+    zeros = tuple(jnp.zeros_like(p) for p in params)
+    state = (*params, *zeros, *zeros, jnp.float32(0.0))
+    n = len(params)
+    loss = None
+    for _ in range(steps):
+        out = model.train_step(
+            *state[: 3 * n + 1], *batch, jnp.float32(lr), jnp.float32(gamma)
+        )
+        state = out[:-1]
+        loss = out[-1]
+    return state[:n], state[n:2*n], state[2*n:3*n], state[3*n], loss
+
+
+def test_train_step_reduces_td_loss(params):
+    """Repeated updates on one batch must drive the TD loss down."""
+    batch = _batch(jax.random.PRNGKey(2))
+    p = params
+    zeros = tuple(jnp.zeros_like(x) for x in params)
+    state = (*p, *zeros, *zeros, jnp.float32(0.0))
+    n = len(p)
+    losses = []
+    for _ in range(30):
+        out = model.train_step(*state, *batch, jnp.float32(3e-3), jnp.float32(0.9))
+        state = out[:-1]
+        losses.append(float(out[-1]))
+    assert losses[-1] < losses[0] * 0.7, losses
+
+
+def test_train_step_updates_every_param(params):
+    batch = _batch(jax.random.PRNGKey(3))
+    new_p, m, v, step, loss = _run_train(params, batch)
+    assert float(step) == 1.0
+    assert np.isfinite(float(loss))
+    for old, new in zip(params, new_p):
+        assert not np.allclose(old, new), "parameter did not move"
+    for mi in m:
+        assert np.isfinite(np.asarray(mi)).all()
+
+
+def test_train_step_terminal_states_ignore_bootstrap(params):
+    """done=1 rows must not use max_a' Q(s',a') in the target."""
+    s, a, r, s2, _ = _batch(jax.random.PRNGKey(4))
+    done = jnp.ones_like(r)
+    # With done=1, target == r regardless of s2; perturbing s2 changes nothing.
+    out1 = _run_train(params, (s, a, r, s2, done))
+    out2 = _run_train(params, (s, a, r, s2 * 100.0, done))
+    np.testing.assert_allclose(out1[4], out2[4], rtol=1e-6)
+    for p1, p2 in zip(out1[0], out2[0]):
+        np.testing.assert_allclose(p1, p2, rtol=1e-6, atol=1e-7)
+
+
+def test_gamma_zero_makes_targets_myopic(params):
+    """gamma=0 -> target==r -> identical result whatever s_next is."""
+    s, a, r, s2, done = _batch(jax.random.PRNGKey(5))
+    done = jnp.zeros_like(done)
+    out1 = _run_train(params, (s, a, r, s2, done), gamma=0.0)
+    out2 = _run_train(params, (s, a, r, -s2, done), gamma=0.0)
+    np.testing.assert_allclose(out1[4], out2[4], rtol=1e-6)
+
+
+def test_target_train_step_freezes_target():
+    """train_step_target must not use the online net for bootstrapping:
+    with target == online it matches train_step exactly; with a zeroed
+    target the result differs."""
+    params = model.init_params(jax.random.PRNGKey(9))
+    s, a, r, s2, done = _batch(jax.random.PRNGKey(10))
+    zeros = tuple(jnp.zeros_like(p) for p in params)
+
+    out_plain = model.train_step(
+        *params, *zeros, *zeros, jnp.float32(0.0),
+        s, a, r, s2, done, jnp.float32(1e-3), jnp.float32(0.9),
+    )
+    out_same = model.train_step_target(
+        *params, *params, *zeros, *zeros, jnp.float32(0.0),
+        s, a, r, s2, done, jnp.float32(1e-3), jnp.float32(0.9),
+    )
+    np.testing.assert_allclose(out_plain[-1], out_same[-1], rtol=1e-6)
+    out_zero_tgt = model.train_step_target(
+        *params, *zeros, *zeros, *zeros, jnp.float32(0.0),
+        s, a, r, s2, done, jnp.float32(1e-3), jnp.float32(0.9),
+    )
+    assert abs(float(out_zero_tgt[-1]) - float(out_plain[-1])) > 1e-6
+
+
+def test_example_args_match_manifest_shapes():
+    fwd = model.forward_example_args(1)
+    assert fwd[-1].shape == (1, model.STATE_DIM)
+    tr = model.train_example_args()
+    # 18 param-likes + step + 5 batch + lr + gamma
+    assert len(tr) == 18 + 1 + 5 + 2
+    out = jax.eval_shape(model.train_step, *tr)
+    assert len(out) == 18 + 1 + 1  # params,m,v + step + loss

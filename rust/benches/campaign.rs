@@ -1,0 +1,66 @@
+//! §6 training-campaign table: the four training codes across scales on
+//! both machine models, reporting reference time and AITuning's best
+//! improvement per cell (a scaled version of the paper's 5000-run,
+//! 64–2048-process campaign).
+
+use aituning::coordinator::{AgentKind, Controller, TuningConfig};
+use aituning::metrics::stats::geomean;
+use aituning::simmpi::Machine;
+use aituning::util::bench::Table;
+use aituning::workloads::WorkloadKind;
+
+fn main() -> anyhow::Result<()> {
+    let quick = std::env::args().any(|a| a == "--quick");
+    let full = std::env::args().any(|a| a == "--full");
+    let image_counts: &[usize] = if full {
+        &[64, 128, 256, 512, 1024, 2048]
+    } else if quick {
+        &[16, 32]
+    } else {
+        &[64, 128, 256]
+    };
+    let runs_per = if quick { 6 } else { 15 };
+    let agent = if aituning::runtime::default_artifacts_dir().join("manifest.json").exists()
+        && !quick
+    {
+        AgentKind::Dqn
+    } else {
+        AgentKind::Tabular
+    };
+
+    let mut t = Table::new(&["machine", "workload", "images", "reference (µs)", "best gain"]);
+    let mut gains = Vec::new();
+    let mut total_runs = 0;
+    for machine in [Machine::cheyenne(), Machine::edison()] {
+        let cfg = TuningConfig {
+            machine: machine.clone(),
+            agent,
+            runs: runs_per,
+            seed: 5,
+            ..TuningConfig::default()
+        };
+        let mut ctl = Controller::new(cfg)?;
+        for kind in WorkloadKind::TRAINING {
+            for &n in image_counts {
+                let out = ctl.tune(kind, n)?;
+                gains.push(1.0 + out.improvement());
+                t.row(vec![
+                    machine.name.to_string(),
+                    kind.name().to_string(),
+                    n.to_string(),
+                    format!("{:.0}", out.reference_us),
+                    format!("{:+.1}%", out.improvement() * 100.0),
+                ]);
+            }
+        }
+        total_runs += ctl.lifetime_runs();
+    }
+    println!("=== §6 training campaign ({agent:?} agent, {runs_per} runs/cell) ===");
+    t.print();
+    println!(
+        "\ngeomean speedup across cells: {:.3}x over {} total application runs",
+        geomean(&gains),
+        total_runs
+    );
+    Ok(())
+}

@@ -1,0 +1,94 @@
+//! L1/L2/L3 hot-path microbenchmarks: Q-network forward (action
+//! selection), train step (replay update), state construction, and
+//! their share of one tuning iteration vs the simulated run itself.
+//!
+//! §Perf target: tuning overhead (forward + train + state build) must
+//! be negligible against one application run.
+
+use aituning::coordinator::{build_state, RelativeTracker, NUM_ACTIONS, STATE_DIM};
+use aituning::coordinator::{run_episode, ReplayBuffer, Transition};
+use aituning::mpi_t::CvarSet;
+use aituning::runtime::{Manifest, QNet, RuntimeClient};
+use aituning::simmpi::Machine;
+use aituning::util::bench::{opaque, time, Table};
+use aituning::util::rng::Rng;
+use aituning::workloads::WorkloadKind;
+
+fn main() -> anyhow::Result<()> {
+    let quick = std::env::args().any(|a| a == "--quick");
+    let dir = aituning::runtime::default_artifacts_dir();
+    if !dir.join("manifest.json").exists() {
+        eprintln!("artifacts not built; run `make artifacts` first");
+        return Ok(());
+    }
+    let client = RuntimeClient::cpu()?;
+    let manifest = Manifest::load(&dir)?;
+    let mut rng = Rng::new(0);
+    let mut qnet = QNet::load(&client, &manifest, &mut rng)?;
+    let samples = if quick { 20 } else { 100 };
+
+    let mut t = Table::new(&["operation", "median", "p90", "iters"]);
+
+    // L2/L1: forward pass (action selection path)
+    let state = vec![0.3f32; STATE_DIM];
+    let s = time(5, samples, || {
+        opaque(qnet.q_values(&state).unwrap());
+    });
+    t.row(vec!["q_forward (batch 1)".into(), format!("{:.1} µs", s.median_us()), format!("{:.1} µs", s.p90_ns / 1e3), s.iters.to_string()]);
+
+    // L2/L1: replay train step
+    let mut replay = ReplayBuffer::new(1024);
+    let mut rng2 = Rng::new(1);
+    for i in 0..64 {
+        let mut st = [0.0f32; STATE_DIM];
+        st[0] = i as f32 / 64.0;
+        replay.push(Transition {
+            state: st,
+            action: i % NUM_ACTIONS,
+            reward: 0.1,
+            next_state: st,
+            done: false,
+        });
+    }
+    let batch = replay.sample(qnet.replay_batch, &mut rng2);
+    let s = time(3, samples, || {
+        opaque(qnet.train_step(&batch, 1e-3, 0.9).unwrap());
+    });
+    t.row(vec!["q_train (batch 32, Adam)".into(), format!("{:.1} µs", s.median_us()), format!("{:.1} µs", s.p90_ns / 1e3), s.iters.to_string()]);
+
+    // L3: state construction
+    let tracker = RelativeTracker::new();
+    let stats = aituning::mpi_t::PvarStats::default();
+    let cv = CvarSet::vanilla();
+    let s = time(10, samples * 10, || {
+        opaque(build_state(&stats, &tracker, &cv, 256, 3, 0.5));
+    });
+    t.row(vec!["build_state (L3)".into(), format!("{:.2} µs", s.median_us()), format!("{:.2} µs", s.p90_ns / 1e3), s.iters.to_string()]);
+
+    // L3: replay sampling
+    let s = time(10, samples * 10, || {
+        opaque(replay.sample(32, &mut rng2));
+    });
+    t.row(vec!["replay sample (32)".into(), format!("{:.2} µs", s.median_us()), format!("{:.2} µs", s.p90_ns / 1e3), s.iters.to_string()]);
+
+    // Reference: one simulated application run (the thing tuning wraps).
+    let machine = Machine::cheyenne();
+    let images = if quick { 16 } else { 64 };
+    let s = time(1, if quick { 3 } else { 10 }, || {
+        opaque(
+            run_episode(WorkloadKind::LatticeBoltzmann, images, &machine, &cv, 0.02, 42, 1)
+                .unwrap(),
+        );
+    });
+    t.row(vec![
+        format!("one simulated LBM run ({images} img)"),
+        format!("{:.1} ms", s.median_ms()),
+        format!("{:.1} ms", s.p90_ns / 1e6),
+        s.iters.to_string(),
+    ]);
+
+    println!("=== DQN runtime + tuning-overhead microbenchmarks ===");
+    t.print();
+    println!("\ntuning overhead per iteration = forward + train + state build");
+    Ok(())
+}

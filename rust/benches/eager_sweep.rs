@@ -1,0 +1,66 @@
+//! §6.2 eager-threshold analysis: sweep CH3_EAGER_MAX_MSG_SIZE on ICAR.
+//!
+//! Expected shape (paper): the default threshold leaves ICAR's halo
+//! puts on the rendezvous path; raising it "by an order of magnitude"
+//! (the human tuning) converts them to eager and recovers most of the
+//! communication cost; far beyond that, returns flatten (and copies
+//! start to cost).
+
+use aituning::coordinator::run_episode;
+use aituning::mpi_t::{CvarId, CvarSet};
+use aituning::simmpi::Machine;
+use aituning::util::bench::Table;
+use aituning::workloads::WorkloadKind;
+
+fn main() -> anyhow::Result<()> {
+    let quick = std::env::args().any(|a| a == "--quick");
+    let image_counts: &[usize] = if quick { &[32] } else { &[256, 512] };
+    let reps = if quick { 2 } else { 5 };
+    let machine = Machine::cheyenne();
+    // default 128 KiB .. x32; ICAR's per-round halo is 192 KiB.
+    let multipliers = [1i64, 2, 4, 8, 10, 16, 32];
+
+    let mut t = Table::new(&[
+        "images", "eager_max", "x default", "protocol", "total (µs)", "vs default",
+    ]);
+    for &images in image_counts {
+        let mut rows = Vec::new();
+        let mut default_t = None;
+        for &m in &multipliers {
+            let mut cv = CvarSet::vanilla();
+            let v = 131_072 * m;
+            cv.set(CvarId(5), v);
+            let mut total = 0.0;
+            let mut eager = 0u64;
+            let mut rdv = 0u64;
+            for r in 0..reps {
+                let res = run_episode(
+                    WorkloadKind::Icar, images, &machine, &cv, 0.02, 42, r as u64 + 1,
+                )?;
+                total += res.total_time_us;
+                eager = res.raw.eager_msgs;
+                rdv = res.raw.rendezvous_msgs;
+            }
+            let mean = total / reps as f64;
+            if m == 1 {
+                default_t = Some(mean);
+            }
+            let proto = if eager > rdv { "eager" } else { "rendezvous" };
+            rows.push((m, v, proto, mean));
+        }
+        let d = default_t.unwrap();
+        for (m, v, proto, mean) in rows {
+            t.row(vec![
+                images.to_string(),
+                v.to_string(),
+                format!("x{m}"),
+                proto.to_string(),
+                format!("{mean:.0}"),
+                format!("{:+.2}%", (d - mean) / d * 100.0),
+            ]);
+        }
+    }
+    println!("=== §6.2 eager threshold sweep on ICAR (halo = 192 KiB/round) ===");
+    t.print();
+    Ok(())
+}

@@ -1,0 +1,68 @@
+//! Figure 1 reproduction: ICAR on Cheyenne, default vs human-optimized
+//! vs AITuning-optimized, at 256 and 512 images — plus the §6.2
+//! single-knob ablations (async progress / eager limit), which the
+//! paper discusses alongside.
+//!
+//! Expected shape (paper): AITuning best at both scales; ~13% over
+//! default at 256 images, ~25% at 512; human tuning in between; async
+//! progress the most influential single parameter.
+
+use aituning::baselines::human_tuned;
+use aituning::coordinator::{AgentKind, Controller, TuningConfig};
+use aituning::mpi_t::{CvarId, CvarSet};
+use aituning::util::bench::Table;
+use aituning::workloads::WorkloadKind;
+
+fn main() -> anyhow::Result<()> {
+    let quick = std::env::args().any(|a| a == "--quick");
+    let agent = if aituning::runtime::default_artifacts_dir().join("manifest.json").exists() {
+        AgentKind::Dqn
+    } else {
+        AgentKind::Tabular
+    };
+    let cfg = TuningConfig { agent, runs: 20, seed: 1, ..TuningConfig::default() };
+    let mut ctl = Controller::new(cfg)?;
+
+    // Short pre-training pass (scaled-down §6 campaign).
+    let pre_scales: &[usize] = if quick { &[16] } else { &[32, 64] };
+    for kind in WorkloadKind::TRAINING {
+        for &n in pre_scales {
+            let _ = ctl.tune(kind, n)?;
+        }
+    }
+
+    let image_counts: &[usize] = if quick { &[32, 64] } else { &[256, 512] };
+    let paper = [(256usize, 13.0f64), (512usize, 25.0f64)];
+
+    let mut t = Table::new(&[
+        "images", "config", "total (µs)", "gain vs default", "paper",
+    ]);
+    for &images in image_counts {
+        let out = ctl.tune(WorkloadKind::Icar, images)?;
+        let eval = |ctl: &mut Controller, cv: &CvarSet| {
+            ctl.evaluate(WorkloadKind::Icar, images, cv, 3)
+        };
+        let default_us = eval(&mut ctl, &CvarSet::vanilla())?;
+        let human_us = eval(&mut ctl, &human_tuned())?;
+        let tuned_us = eval(&mut ctl, &out.ensemble)?.min(out.best_us);
+
+        // §6.2 single-knob ablations.
+        let mut async_only = CvarSet::vanilla();
+        async_only.set(CvarId(0), 1);
+        let async_us = eval(&mut ctl, &async_only)?;
+
+        let gain = |v: f64| format!("{:+.1}%", (default_us - v) / default_us * 100.0);
+        let paper_gain = paper
+            .iter()
+            .find(|(n, _)| *n == images)
+            .map(|(_, g)| format!("+{g:.0}%"))
+            .unwrap_or_else(|| "-".into());
+        t.row(vec![images.to_string(), "default (vanilla MPICH)".into(), format!("{default_us:.0}"), "+0.0%".into(), "baseline".into()]);
+        t.row(vec![images.to_string(), "human (eager x10, §6.2)".into(), format!("{human_us:.0}"), gain(human_us), "between".into()]);
+        t.row(vec![images.to_string(), "aituning (20-run ensemble)".into(), format!("{tuned_us:.0}"), gain(tuned_us), paper_gain]);
+        t.row(vec![images.to_string(), "ablation: async only".into(), format!("{async_us:.0}"), gain(async_us), "most influential".into()]);
+    }
+    println!("=== Figure 1: ICAR total time, default vs optimized (Cheyenne model) ===");
+    t.print();
+    Ok(())
+}

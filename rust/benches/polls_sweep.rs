@@ -1,0 +1,62 @@
+//! §6.2 POLLS_BEFORE_YIELD analysis: sweep the poll budget on ICAR at
+//! 256 and 512 images (base config: async progress on, as AITuning
+//! found for ICAR).
+//!
+//! Expected shape (paper): at 256 images the knob is "not relevant"
+//! (default 1000 fine, differences within noise); at 512 images values
+//! in the 1200–1500 region are best, with a clear penalty for small
+//! budgets.
+
+use aituning::coordinator::run_episode;
+use aituning::mpi_t::{CvarId, CvarSet};
+use aituning::simmpi::Machine;
+use aituning::util::bench::Table;
+use aituning::workloads::WorkloadKind;
+
+fn main() -> anyhow::Result<()> {
+    let quick = std::env::args().any(|a| a == "--quick");
+    let image_counts: &[usize] = if quick { &[32, 64] } else { &[256, 512] };
+    let values = [200i64, 600, 1000, 1100, 1200, 1350, 1500, 2000, 4000];
+    let reps = if quick { 2 } else { 5 };
+    let machine = Machine::cheyenne();
+
+    let mut t = Table::new(&["images", "polls_before_yield", "total (µs)", "vs default(1000)"]);
+    for &images in image_counts {
+        let mut base = CvarSet::vanilla();
+        base.set(CvarId(0), 1); // async progress (AITuning's ICAR find)
+        let mut default_t = None;
+        // Evaluate default first so the comparison column is stable.
+        let mut order = vec![1000i64];
+        order.extend(values.iter().filter(|&&v| v != 1000));
+        let mut rows = Vec::new();
+        for v in order {
+            let mut cv = base.clone();
+            cv.set(CvarId(4), v);
+            let mut total = 0.0;
+            for r in 0..reps {
+                total += run_episode(
+                    WorkloadKind::Icar, images, &machine, &cv, 0.02, 42, r as u64 + 1,
+                )?
+                .total_time_us;
+            }
+            let mean = total / reps as f64;
+            if v == 1000 {
+                default_t = Some(mean);
+            }
+            rows.push((v, mean));
+        }
+        let d = default_t.unwrap();
+        rows.sort_by_key(|&(v, _)| v);
+        for (v, mean) in rows {
+            t.row(vec![
+                images.to_string(),
+                v.to_string(),
+                format!("{mean:.0}"),
+                format!("{:+.2}%", (d - mean) / d * 100.0),
+            ]);
+        }
+    }
+    println!("=== §6.2 POLLS_BEFORE_YIELD sweep on ICAR (async-progress base) ===");
+    t.print();
+    Ok(())
+}

@@ -1,0 +1,52 @@
+//! Simulator performance: simulated-runs-per-minute and event
+//! throughput for each workload at campaign scales.
+//!
+//! §Perf target: ≥ 10k simulated runs/min on the small campaign cells
+//! so the paper's 5000-run campaign stays cheap.
+
+use aituning::coarray::{lower_all, RuntimeOptions};
+use aituning::mpi_t::CvarSet;
+use aituning::simmpi::{Engine, Machine, SimConfig};
+use aituning::util::bench::{opaque, time, Table};
+use aituning::util::rng::Rng;
+use aituning::workloads::WorkloadKind;
+
+fn main() {
+    let quick = std::env::args().any(|a| a == "--quick");
+    let image_counts: &[usize] = if quick { &[16, 64] } else { &[64, 256, 512] };
+    let samples = if quick { 3 } else { 8 };
+    let machine = Machine::cheyenne();
+
+    let mut t = Table::new(&["workload", "images", "msgs/run", "median run", "runs/min"]);
+    for kind in WorkloadKind::ALL {
+        for &images in image_counts {
+            if images < kind.instantiate().min_images() {
+                continue;
+            }
+            let mut rng = Rng::new(42);
+            let progs = kind.instantiate().build(images, &mut rng);
+            let lowered = lower_all(&progs, &RuntimeOptions::default());
+            // count messages once
+            let mut cfg = SimConfig::new(machine.clone(), CvarSet::vanilla(), images);
+            cfg.noise = 0.02;
+            let stats = Engine::new(cfg, lowered.clone()).run();
+            let msgs = stats.eager_msgs + stats.rendezvous_msgs;
+
+            let s = time(1, samples, || {
+                let mut cfg = SimConfig::new(machine.clone(), CvarSet::vanilla(), images);
+                cfg.noise = 0.02;
+                opaque(Engine::new(cfg, lowered.clone()).run());
+            });
+            let runs_per_min = 60_000.0 / s.median_ms();
+            t.row(vec![
+                kind.name().to_string(),
+                images.to_string(),
+                msgs.to_string(),
+                format!("{:.2} ms", s.median_ms()),
+                format!("{runs_per_min:.0}"),
+            ]);
+        }
+    }
+    println!("=== simmpi engine throughput ===");
+    t.print();
+}

@@ -1,0 +1,133 @@
+//! (µ+λ) evolutionary search — the heuristic family the AutoTune/PTF
+//! line of related work uses for MPI parameter tuning (§2).
+
+use anyhow::Result;
+
+use crate::mpi_t::{CvarDomain, CvarId, CvarSet, MPICH_CVARS};
+use crate::util::rng::Rng;
+
+use super::random::RandomSearch;
+use super::Searcher;
+
+/// (µ+λ) evolutionary searcher with per-gene mutation.
+pub struct Evolutionary {
+    rng: Rng,
+    /// Parents kept per generation.
+    pub mu: usize,
+    /// Offspring per generation.
+    pub lambda: usize,
+    /// Per-gene mutation probability.
+    pub mutation_rate: f64,
+}
+
+impl Evolutionary {
+    pub fn new(seed: u64) -> Evolutionary {
+        Evolutionary { rng: Rng::new(seed), mu: 3, lambda: 6, mutation_rate: 0.35 }
+    }
+
+    fn mutate(&mut self, parent: &CvarSet) -> CvarSet {
+        let mut child = parent.clone();
+        for (i, d) in MPICH_CVARS.iter().enumerate() {
+            if !self.rng.chance(self.mutation_rate) {
+                continue;
+            }
+            let id = CvarId(i);
+            let v = match d.domain {
+                CvarDomain::Bool => 1 - child.get(id).clamp(0, 1),
+                CvarDomain::Int { step, .. } => {
+                    // Geometric-ish jump: ±(1..16) steps.
+                    let magnitude = 1 << self.rng.range_i64(0, 4);
+                    let dir = if self.rng.chance(0.5) { 1 } else { -1 };
+                    child.get(id) + dir * magnitude * step
+                }
+            };
+            child.set(id, v); // set() clamps to the domain
+        }
+        child
+    }
+}
+
+impl Searcher for Evolutionary {
+    fn name(&self) -> &'static str {
+        "evolutionary"
+    }
+
+    fn search(
+        &mut self,
+        budget: usize,
+        eval: &mut dyn FnMut(&CvarSet) -> Result<f64>,
+    ) -> Result<(CvarSet, f64)> {
+        let mut spent = 0usize;
+        let mut population: Vec<(CvarSet, f64)> = Vec::new();
+
+        // Seed: vanilla + random immigrants.
+        let vanilla = CvarSet::vanilla();
+        population.push((vanilla.clone(), eval(&vanilla)?));
+        spent += 1;
+        let mut seeder = RandomSearch::new(self.rng.next_u64());
+        while population.len() < self.mu && spent < budget {
+            let cand = seeder.sample();
+            let t = eval(&cand)?;
+            spent += 1;
+            population.push((cand, t));
+        }
+
+        while spent < budget {
+            population.sort_by(|a, b| a.1.total_cmp(&b.1));
+            population.truncate(self.mu);
+            let n_children = self.lambda.min(budget - spent);
+            for k in 0..n_children {
+                let parent = population[k % population.len()].0.clone();
+                let child = self.mutate(&parent);
+                let t = eval(&child)?;
+                spent += 1;
+                population.push((child, t));
+            }
+        }
+        population.sort_by(|a, b| a.1.total_cmp(&b.1));
+        Ok(population.swap_remove(0))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn respects_budget_exactly() {
+        let mut evo = Evolutionary::new(5);
+        let mut count = 0usize;
+        let mut eval = |_: &CvarSet| -> Result<f64> {
+            count += 1;
+            Ok(count as f64)
+        };
+        evo.search(20, &mut eval).unwrap();
+        assert_eq!(count, 20);
+    }
+
+    #[test]
+    fn finds_async_progress_on_separable_objective() {
+        let mut evo = Evolutionary::new(7);
+        let mut eval = |cv: &CvarSet| -> Result<f64> {
+            let mut t = 100.0;
+            if cv.async_progress() {
+                t -= 30.0;
+            }
+            t += (cv.eager_max() as f64 - 1_000_000.0).abs() / 1e6;
+            Ok(t)
+        };
+        let (best, _) = evo.search(60, &mut eval).unwrap();
+        assert!(best.async_progress());
+    }
+
+    #[test]
+    fn mutation_stays_in_domain() {
+        let mut evo = Evolutionary::new(9);
+        let mut cv = CvarSet::vanilla();
+        for _ in 0..200 {
+            cv = evo.mutate(&cv);
+            assert!(cv.eager_max() >= 1024 && cv.eager_max() <= 8 * 1024 * 1024);
+            assert!(cv.piggyback_size() >= 0 && cv.piggyback_size() <= 262_144);
+        }
+    }
+}

@@ -1,0 +1,27 @@
+//! The paper's human baseline (§6.2): an expert's "reasonable guess" —
+//! raise the eager/rendezvous threshold by an order of magnitude, leave
+//! everything else at defaults.
+
+use crate::mpi_t::{CvarId, CvarSet, MPICH_CVARS};
+
+/// The manually-optimized configuration from the paper's Figure 1.
+pub fn human_tuned() -> CvarSet {
+    let mut cv = CvarSet::vanilla();
+    let default_eager = MPICH_CVARS[5].default;
+    cv.set(CvarId(5), default_eager * 10);
+    cv
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn eager_limit_is_10x_default() {
+        let cv = human_tuned();
+        assert_eq!(cv.eager_max(), 1_310_720);
+        // everything else untouched
+        assert!(!cv.async_progress());
+        assert_eq!(cv.polls_before_yield(), 1000);
+    }
+}

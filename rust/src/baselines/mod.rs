@@ -1,0 +1,35 @@
+//! Tuning baselines AITuning is compared against.
+//!
+//! * [`human`] — the paper's §6.2 manual tuning: "increased the eager
+//!   limit by an order of magnitude higher than the default while
+//!   leaving all the other settings as in the default configuration";
+//! * [`RandomSearch`] — same run budget, uniformly random configs;
+//! * [`Evolutionary`] — a (µ+λ) mutation/selection loop in the spirit of
+//!   the AutoTune/PTF related work (§2, Sikora et al.);
+//! * [`grid_search`] — exhaustive over a coarse grid (ground truth for
+//!   small studies; exponential, use sparingly).
+
+mod evolutionary;
+mod human;
+mod random;
+
+pub use evolutionary::Evolutionary;
+pub use human::human_tuned;
+pub use random::{grid_search, RandomSearch};
+
+use anyhow::Result;
+
+use crate::mpi_t::CvarSet;
+
+/// A fixed-budget configuration searcher (the baseline interface).
+pub trait Searcher {
+    fn name(&self) -> &'static str;
+
+    /// Spend `budget` evaluations through `eval` and return the best
+    /// configuration found and its measured time.
+    fn search(
+        &mut self,
+        budget: usize,
+        eval: &mut dyn FnMut(&CvarSet) -> Result<f64>,
+    ) -> Result<(CvarSet, f64)>;
+}

@@ -1,0 +1,149 @@
+//! Random search and coarse grid search baselines.
+
+use anyhow::Result;
+
+use crate::mpi_t::{CvarDomain, CvarId, CvarSet, MPICH_CVARS};
+use crate::util::rng::Rng;
+
+use super::Searcher;
+
+/// Uniform random sampling over the full cvar space.
+pub struct RandomSearch {
+    rng: Rng,
+}
+
+impl RandomSearch {
+    pub fn new(seed: u64) -> RandomSearch {
+        RandomSearch { rng: Rng::new(seed) }
+    }
+
+    /// One uniformly random configuration.
+    pub fn sample(&mut self) -> CvarSet {
+        let mut cv = CvarSet::vanilla();
+        for (i, d) in MPICH_CVARS.iter().enumerate() {
+            let v = match d.domain {
+                CvarDomain::Bool => self.rng.range_i64(0, 1),
+                CvarDomain::Int { lo, hi, step } => {
+                    let steps = (hi - lo) / step;
+                    lo + self.rng.range_i64(0, steps) * step
+                }
+            };
+            cv.set(CvarId(i), v);
+        }
+        cv
+    }
+}
+
+impl Searcher for RandomSearch {
+    fn name(&self) -> &'static str {
+        "random"
+    }
+
+    fn search(
+        &mut self,
+        budget: usize,
+        eval: &mut dyn FnMut(&CvarSet) -> Result<f64>,
+    ) -> Result<(CvarSet, f64)> {
+        // First evaluation is always vanilla (same protocol as AITuning:
+        // the reference run counts against the budget).
+        let mut best = CvarSet::vanilla();
+        let mut best_t = eval(&best)?;
+        for _ in 1..budget {
+            let cand = self.sample();
+            let t = eval(&cand)?;
+            if t < best_t {
+                best = cand;
+                best_t = t;
+            }
+        }
+        Ok((best, best_t))
+    }
+}
+
+/// Exhaustive search over a coarse grid: booleans × a few levels of each
+/// integer cvar. Exponential — intended for ground-truthing small
+/// studies, not production tuning.
+pub fn grid_search(
+    levels: usize,
+    eval: &mut dyn FnMut(&CvarSet) -> Result<f64>,
+) -> Result<(CvarSet, f64)> {
+    assert!(levels >= 2, "need at least lo/hi levels");
+    let mut axes: Vec<Vec<i64>> = Vec::new();
+    for d in MPICH_CVARS {
+        match d.domain {
+            CvarDomain::Bool => axes.push(vec![0, 1]),
+            CvarDomain::Int { lo, hi, .. } => {
+                let mut vals = Vec::with_capacity(levels);
+                for k in 0..levels {
+                    let f = k as f64 / (levels - 1) as f64;
+                    vals.push(lo + ((hi - lo) as f64 * f) as i64);
+                }
+                axes.push(vals);
+            }
+        }
+    }
+    let mut best: Option<(CvarSet, f64)> = None;
+    let mut idx = vec![0usize; axes.len()];
+    loop {
+        let mut cv = CvarSet::vanilla();
+        for (c, &i) in idx.iter().enumerate() {
+            cv.set(CvarId(c), axes[c][i]);
+        }
+        let t = eval(&cv)?;
+        if best.as_ref().map(|(_, bt)| t < *bt).unwrap_or(true) {
+            best = Some((cv, t));
+        }
+        // odometer increment
+        let mut c = 0;
+        loop {
+            if c == axes.len() {
+                return Ok(best.unwrap());
+            }
+            idx[c] += 1;
+            if idx[c] < axes[c].len() {
+                break;
+            }
+            idx[c] = 0;
+            c += 1;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn samples_respect_domains() {
+        let mut rs = RandomSearch::new(1);
+        for _ in 0..100 {
+            let cv = rs.sample();
+            assert!(cv.eager_max() >= 1024 && cv.eager_max() <= 8 * 1024 * 1024);
+            assert!(cv.get(CvarId(0)) <= 1);
+        }
+    }
+
+    #[test]
+    fn search_returns_best_of_budget() {
+        let mut rs = RandomSearch::new(2);
+        // Score: prefer async progress on.
+        let mut eval = |cv: &CvarSet| -> Result<f64> {
+            Ok(if cv.async_progress() { 1.0 } else { 2.0 })
+        };
+        let (best, t) = rs.search(30, &mut eval).unwrap();
+        assert!(best.async_progress());
+        assert_eq!(t, 1.0);
+    }
+
+    #[test]
+    fn grid_covers_corners() {
+        let mut count = 0usize;
+        let mut eval = |cv: &CvarSet| -> Result<f64> {
+            count += 1;
+            Ok(-(cv.eager_max() as f64)) // prefer max eager
+        };
+        let (best, _) = grid_search(2, &mut eval).unwrap();
+        assert_eq!(count, 2usize.pow(6)); // 6 axes, 2 levels each
+        assert_eq!(best.eager_max(), 8 * 1024 * 1024);
+    }
+}

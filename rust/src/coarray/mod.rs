@@ -1,0 +1,19 @@
+//! `coarray` — an OpenCoarrays-style runtime ABI over `simmpi`.
+//!
+//! OpenCoarrays (§4.2) defines an ABI translating coarray Fortran's
+//! high-level communication/synchronization into calls to a transport
+//! (LIBCAF_MPI uses MPI-3 passive-target RMA almost exclusively). This
+//! module reproduces that shape: workloads author per-image programs
+//! against the CAF surface ([`CafProgram`]), and [`runtime`] lowers them
+//! to `simmpi` one-sided operations, mirroring LIBCAF_MPI's choices
+//! (puts are non-blocking until a flush/sync; gets are blocking;
+//! `sync all` is flush_all + barrier; events map to tiny eager sends).
+//!
+//! The lowering is where the PMPI interposition hooks observe traffic —
+//! AITuning never needs the workload's source, exactly as in the paper.
+
+pub mod program;
+pub mod runtime;
+
+pub use program::{CafOp, CafProgram};
+pub use runtime::{lower, lower_all, RuntimeOptions};

@@ -1,0 +1,156 @@
+//! Coarray Fortran program surface: what a CAF workload expresses.
+//!
+//! Image indices are **1-based** as in Fortran (`this_image()`,
+//! `num_images()`); lowering converts to 0-based ranks.
+
+/// One CAF statement in an image's execution trace.
+#[derive(Debug, Clone, PartialEq)]
+pub enum CafOp {
+    /// Local work for `us` microseconds.
+    Compute { us: f64 },
+    /// `a(...)[img] = ...` — one-sided put of `bytes` to image `img`.
+    Put { image: usize, bytes: u64 },
+    /// `... = a(...)[img]` — one-sided get of `bytes` from image `img`.
+    Get { image: usize, bytes: u64 },
+    /// `sync all`.
+    SyncAll,
+    /// `sync images(img)` approximated as flush + pairwise events.
+    SyncImages { image: usize },
+    /// `event post(ev[img])`.
+    EventPost { image: usize },
+    /// `event wait(ev, until_count=n)`.
+    EventWait { count: u32 },
+    /// `co_sum(x)` with `bytes` per image.
+    CoSum { bytes: u64 },
+    /// `co_broadcast(x, source_image=1)`.
+    CoBroadcast { bytes: u64 },
+    /// Explicit `flush` of outstanding puts to one image (the ABI emits
+    /// these around remote-completion points).
+    Flush { image: usize },
+    /// `sync team` — barrier over the images sharing `team`
+    /// (Fortran 2018 teams; OpenCoarrays ships a partial
+    /// implementation, §4.2). `size` is the team's member count.
+    SyncTeam { team: u32, size: u32 },
+    /// `co_sum` scoped to the current team.
+    TeamCoSum { team: u32, size: u32, bytes: u64 },
+}
+
+/// An image's whole program plus its identity.
+#[derive(Debug, Clone)]
+pub struct CafProgram {
+    /// 1-based image index.
+    pub image: usize,
+    /// Total images in the team.
+    pub num_images: usize,
+    pub ops: Vec<CafOp>,
+}
+
+impl CafProgram {
+    pub fn new(image: usize, num_images: usize) -> CafProgram {
+        assert!((1..=num_images).contains(&image), "image {image} of {num_images}");
+        CafProgram { image, num_images, ops: Vec::new() }
+    }
+
+    // Builder helpers so workloads read like CAF pseudocode.
+
+    pub fn compute(&mut self, us: f64) -> &mut Self {
+        self.ops.push(CafOp::Compute { us });
+        self
+    }
+
+    pub fn put(&mut self, image: usize, bytes: u64) -> &mut Self {
+        self.check_image(image);
+        self.ops.push(CafOp::Put { image, bytes });
+        self
+    }
+
+    pub fn get(&mut self, image: usize, bytes: u64) -> &mut Self {
+        self.check_image(image);
+        self.ops.push(CafOp::Get { image, bytes });
+        self
+    }
+
+    pub fn sync_all(&mut self) -> &mut Self {
+        self.ops.push(CafOp::SyncAll);
+        self
+    }
+
+    pub fn sync_images(&mut self, image: usize) -> &mut Self {
+        self.check_image(image);
+        self.ops.push(CafOp::SyncImages { image });
+        self
+    }
+
+    pub fn event_post(&mut self, image: usize) -> &mut Self {
+        self.check_image(image);
+        self.ops.push(CafOp::EventPost { image });
+        self
+    }
+
+    pub fn event_wait(&mut self, count: u32) -> &mut Self {
+        self.ops.push(CafOp::EventWait { count });
+        self
+    }
+
+    pub fn co_sum(&mut self, bytes: u64) -> &mut Self {
+        self.ops.push(CafOp::CoSum { bytes });
+        self
+    }
+
+    pub fn co_broadcast(&mut self, bytes: u64) -> &mut Self {
+        self.ops.push(CafOp::CoBroadcast { bytes });
+        self
+    }
+
+    pub fn flush(&mut self, image: usize) -> &mut Self {
+        self.check_image(image);
+        self.ops.push(CafOp::Flush { image });
+        self
+    }
+
+    pub fn sync_team(&mut self, team: u32, size: u32) -> &mut Self {
+        assert!(size as usize <= self.num_images, "team larger than world");
+        self.ops.push(CafOp::SyncTeam { team, size });
+        self
+    }
+
+    pub fn team_co_sum(&mut self, team: u32, size: u32, bytes: u64) -> &mut Self {
+        assert!(size as usize <= self.num_images, "team larger than world");
+        self.ops.push(CafOp::TeamCoSum { team, size, bytes });
+        self
+    }
+
+    fn check_image(&self, image: usize) {
+        assert!(
+            (1..=self.num_images).contains(&image),
+            "remote image {image} out of range 1..={}",
+            self.num_images
+        );
+        assert_ne!(image, self.image, "self-communication not modeled");
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builder_chains() {
+        let mut p = CafProgram::new(1, 4);
+        p.compute(10.0).put(2, 1024).sync_all();
+        assert_eq!(p.ops.len(), 3);
+        assert_eq!(p.ops[1], CafOp::Put { image: 2, bytes: 1024 });
+    }
+
+    #[test]
+    #[should_panic(expected = "out of range")]
+    fn rejects_bad_image() {
+        CafProgram::new(1, 4).put(5, 10);
+    }
+
+    #[test]
+    #[should_panic(expected = "self-communication")]
+    fn rejects_self_put() {
+        CafProgram::new(2, 4).put(2, 10);
+    }
+}

@@ -1,0 +1,186 @@
+//! Lowering CAF programs to `simmpi` operations (the LIBCAF_MPI role).
+//!
+//! Key ABI decisions mirrored from OpenCoarrays' MPI transport:
+//!
+//! * a CAF **put** is a non-blocking `MPI_Put`; remote completion is
+//!   deferred to the next flush/sync (`eager_flush` forces a flush right
+//!   after every put instead — the conservative pre-3.x behaviour);
+//! * a CAF **get** is blocking (`MPI_Get` + `MPI_Win_flush`);
+//! * **`sync all`** is `MPI_Win_flush_all` + barrier;
+//! * **`sync images(j)`** is flush(j) + event exchange with `j`;
+//! * **events** lower to small eager puts with target-side counting.
+
+use super::program::{CafOp, CafProgram};
+use crate::simmpi::{Op, Program};
+
+/// Lowering options (ablation knobs for the runtime itself).
+#[derive(Debug, Clone)]
+pub struct RuntimeOptions {
+    /// Flush after every put (disables communication/computation
+    /// overlap; matches early LIBCAF_MPI). Default off.
+    pub eager_flush: bool,
+}
+
+impl Default for RuntimeOptions {
+    fn default() -> Self {
+        RuntimeOptions { eager_flush: false }
+    }
+}
+
+/// Lower one image's CAF program to simulator ops.
+pub fn lower(prog: &CafProgram, opts: &RuntimeOptions) -> Program {
+    let rank = |image: usize| image - 1; // Fortran 1-based -> rank
+    let mut out = Vec::with_capacity(prog.ops.len() + 8);
+    for op in &prog.ops {
+        match *op {
+            CafOp::Compute { us } => out.push(Op::Compute { us }),
+            CafOp::Put { image, bytes } => {
+                out.push(Op::Put { target: rank(image), bytes });
+                if opts.eager_flush {
+                    out.push(Op::Flush { target: rank(image) });
+                }
+            }
+            CafOp::Get { image, bytes } => out.push(Op::Get { source: rank(image), bytes }),
+            CafOp::SyncAll => out.push(Op::SyncAll),
+            CafOp::SyncImages { image } => {
+                // Pairwise: complete my puts to j, tell j, wait for j.
+                out.push(Op::Flush { target: rank(image) });
+                out.push(Op::EventPost { target: rank(image) });
+                out.push(Op::EventWait { count: 1 });
+            }
+            CafOp::EventPost { image } => out.push(Op::EventPost { target: rank(image) }),
+            CafOp::EventWait { count } => out.push(Op::EventWait { count }),
+            CafOp::CoSum { bytes } => out.push(Op::CoSum { bytes }),
+            CafOp::CoBroadcast { bytes } => out.push(Op::CoBroadcast { bytes }),
+            CafOp::Flush { image } => out.push(Op::Flush { target: rank(image) }),
+            CafOp::SyncTeam { team, size } => out.push(Op::TeamBarrier { team, size }),
+            CafOp::TeamCoSum { team, size, bytes } => {
+                out.push(Op::TeamCoSum { team, size, bytes })
+            }
+        }
+    }
+    out
+}
+
+/// Lower a whole team; panics if programs disagree on team size or an
+/// image is missing (every rank must have exactly one program).
+pub fn lower_all(progs: &[CafProgram], opts: &RuntimeOptions) -> Vec<Program> {
+    assert!(!progs.is_empty(), "empty team");
+    let n = progs[0].num_images;
+    assert!(
+        progs.iter().all(|p| p.num_images == n),
+        "inconsistent num_images across programs"
+    );
+    assert_eq!(progs.len(), n, "need one program per image");
+    let mut seen = vec![false; n];
+    for p in progs {
+        assert!(!seen[p.image - 1], "duplicate program for image {}", p.image);
+        seen[p.image - 1] = true;
+    }
+    let mut by_rank: Vec<&CafProgram> = progs.iter().collect();
+    by_rank.sort_by_key(|p| p.image);
+    by_rank.iter().map(|p| lower(p, opts)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mpi_t::CvarSet;
+    use crate::simmpi::{Engine, Machine, SimConfig};
+
+    fn team2() -> Vec<CafProgram> {
+        let mut a = CafProgram::new(1, 2);
+        a.compute(10.0).put(2, 2048).sync_all();
+        let mut b = CafProgram::new(2, 2);
+        b.compute(12.0).sync_all();
+        vec![a, b]
+    }
+
+    #[test]
+    fn put_lowers_nonblocking_by_default() {
+        let ops = lower(&team2()[0], &RuntimeOptions::default());
+        assert_eq!(
+            ops,
+            vec![
+                Op::Compute { us: 10.0 },
+                Op::Put { target: 1, bytes: 2048 },
+                Op::SyncAll
+            ]
+        );
+    }
+
+    #[test]
+    fn eager_flush_inserts_flushes() {
+        let ops = lower(&team2()[0], &RuntimeOptions { eager_flush: true });
+        assert!(ops.contains(&Op::Flush { target: 1 }));
+    }
+
+    #[test]
+    fn sync_images_is_flush_post_wait() {
+        let mut p = CafProgram::new(1, 2);
+        p.sync_images(2);
+        let ops = lower(&p, &RuntimeOptions::default());
+        assert_eq!(
+            ops,
+            vec![
+                Op::Flush { target: 1 },
+                Op::EventPost { target: 1 },
+                Op::EventWait { count: 1 }
+            ]
+        );
+    }
+
+    #[test]
+    fn lowered_team_actually_runs() {
+        let progs = lower_all(&team2(), &RuntimeOptions::default());
+        let mut cfg = SimConfig::new(Machine::cheyenne(), CvarSet::vanilla(), 2);
+        cfg.noise = 0.0;
+        let stats = Engine::new(cfg, progs).run();
+        assert!(stats.total_time_us > 10.0);
+        assert_eq!(stats.eager_msgs, 1);
+    }
+
+    #[test]
+    #[should_panic(expected = "one program per image")]
+    fn lower_all_requires_full_team() {
+        let progs = vec![CafProgram::new(1, 2)];
+        lower_all(&progs, &RuntimeOptions::default());
+    }
+
+    #[test]
+    fn teams_partition_synchronization() {
+        // 4 images in two teams of 2: each team syncs and reduces
+        // independently; a fast team must not wait for a slow one.
+        let mut progs = Vec::new();
+        for img in 1..=4usize {
+            let team = if img <= 2 { 1 } else { 2 };
+            let mut p = CafProgram::new(img, 4);
+            // team 2 computes 10x longer
+            p.compute(if team == 1 { 100.0 } else { 1000.0 });
+            p.sync_team(team, 2);
+            p.team_co_sum(team, 2, 64);
+            progs.push(p);
+        }
+        let lowered = lower_all(&progs, &RuntimeOptions::default());
+        let mut cfg = SimConfig::new(Machine::cheyenne(), CvarSet::vanilla(), 4);
+        cfg.noise = 0.0;
+        let stats = Engine::new(cfg, lowered).run();
+        // Total bounded by the slow team, not 2x it (teams independent).
+        assert!(stats.total_time_us >= 1000.0);
+        assert!(stats.total_time_us < 1200.0, "teams must not serialize: {}", stats.total_time_us);
+    }
+
+    #[test]
+    fn pairwise_sync_completes_in_sim() {
+        // sync images between both images must not deadlock.
+        let mut a = CafProgram::new(1, 2);
+        a.put(2, 4096).sync_images(2);
+        let mut b = CafProgram::new(2, 2);
+        b.sync_images(1);
+        let progs = lower_all(&[a, b], &RuntimeOptions::default());
+        let mut cfg = SimConfig::new(Machine::cheyenne(), CvarSet::vanilla(), 2);
+        cfg.noise = 0.0;
+        let stats = Engine::new(cfg, progs).run();
+        assert_eq!(stats.events_processed, 2);
+    }
+}

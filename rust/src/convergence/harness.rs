@@ -1,0 +1,184 @@
+//! The §5.5 convergence harness: run the exact same RL machinery
+//! (state/action/reward/replay/agent) against the synthetic models and
+//! measure how close the final configuration is to the known best.
+
+use anyhow::Result;
+
+use crate::coordinator::{
+    actions::Action, Agent, AgentKind, DqnAgent, ReplayBuffer, TabularAgent, Transition,
+    NUM_ACTIONS, STATE_DIM,
+};
+use crate::mpi_t::CvarSet;
+use crate::util::rng::Rng;
+
+use super::models::SyntheticModel;
+
+/// Configuration of one convergence simulation.
+#[derive(Debug, Clone)]
+pub struct ConvergenceConfig {
+    pub agent: AgentKind,
+    /// Tuning runs (the paper uses longer horizons here than the 20-run
+    /// inference recipe — this is a stress test of the learner itself).
+    pub runs: usize,
+    /// Gaussian noise level (fraction; paper up to 0.30).
+    pub noise: f64,
+    pub eps_start: f64,
+    pub eps_end: f64,
+    pub gamma: f32,
+    pub lr: f32,
+    pub seed: u64,
+    pub artifacts_dir: std::path::PathBuf,
+}
+
+impl Default for ConvergenceConfig {
+    fn default() -> ConvergenceConfig {
+        ConvergenceConfig {
+            agent: AgentKind::Tabular,
+            runs: 150,
+            noise: 0.0,
+            eps_start: 0.9,
+            eps_end: 0.05,
+            gamma: 0.9,
+            lr: 2e-3,
+            seed: 0,
+            artifacts_dir: crate::runtime::default_artifacts_dir(),
+        }
+    }
+}
+
+/// Outcome of one convergence simulation.
+#[derive(Debug, Clone)]
+pub struct ConvergenceReport {
+    /// Final configuration after the run budget.
+    pub final_cvars: CvarSet,
+    /// Best configuration seen.
+    pub best_cvars: CvarSet,
+    /// Normalized distance of best config to the model's known optimum.
+    pub best_distance: f64,
+    /// Best observed mean-time ratio vs the model's optimal time.
+    pub best_ratio: f64,
+    /// Observed times per run.
+    pub trajectory: Vec<f64>,
+}
+
+/// Build the state vector from a synthetic observation.
+fn synth_state(
+    total: f64,
+    reference: f64,
+    aux: &[f64],
+    cvars: &CvarSet,
+    run: usize,
+) -> [f32; STATE_DIM] {
+    let mut s = [0.0f32; STATE_DIM];
+    s[0] = (aux.first().copied().unwrap_or(0.0) as f32).clamp(-5.0, 5.0);
+    s[1] = (aux.get(1).copied().unwrap_or(0.0) as f32 / 10.0).clamp(-5.0, 5.0);
+    s[8] = (((reference - total) / reference) as f32).clamp(-2.0, 2.0);
+    s[9] = 0.5;
+    s[10..16].copy_from_slice(&cvars.normalized());
+    s[16] = (run as f32 / 100.0).min(2.0);
+    s
+}
+
+/// Run one convergence simulation.
+pub fn run_convergence(
+    model: &SyntheticModel,
+    cfg: &ConvergenceConfig,
+) -> Result<ConvergenceReport> {
+    let mut rng = Rng::new(cfg.seed);
+    let mut agent: Box<dyn Agent> = match cfg.agent {
+        AgentKind::Dqn => Box::new(DqnAgent::load(&cfg.artifacts_dir, &mut rng)?),
+        AgentKind::DqnTarget => {
+            Box::new(DqnAgent::load_with_mode(&cfg.artifacts_dir, &mut rng, true)?)
+        }
+        AgentKind::Tabular => Box::new(TabularAgent::new()),
+    };
+    let mut replay = ReplayBuffer::new(4096);
+    let mut cvars = CvarSet::vanilla();
+
+    // Reference run (vanilla).
+    let reference = model.observe(&cvars, cfg.noise, &mut rng).total_time_us;
+    let mut prev_state = synth_state(reference, reference, &[0.0, 0.0], &cvars, 0);
+
+    let mut best_cvars = cvars.clone();
+    let mut best_mean = model.mean_time(&cvars);
+    let mut trajectory = Vec::with_capacity(cfg.runs);
+
+    for i in 1..=cfg.runs {
+        let f = (i - 1) as f64 / (cfg.runs.max(2) - 1) as f64;
+        let eps = cfg.eps_start + (cfg.eps_end - cfg.eps_start) * f;
+        let action_idx = if rng.chance(eps) {
+            rng.below(NUM_ACTIONS as u64) as usize
+        } else {
+            crate::runtime::argmax(&agent.q_values(&prev_state)?)
+        };
+        cvars = Action::from_index(action_idx).apply(&cvars);
+
+        let obs = model.observe(&cvars, cfg.noise, &mut rng);
+        trajectory.push(obs.total_time_us);
+        let reward = (((reference - obs.total_time_us) / reference) as f32).clamp(-1.0, 1.0);
+        let state = synth_state(obs.total_time_us, reference, &obs.aux, &cvars, i);
+        replay.push(Transition {
+            state: prev_state,
+            action: action_idx,
+            reward,
+            next_state: state,
+            done: i == cfg.runs,
+        });
+        let batch = replay.sample(32, &mut rng);
+        agent.train(&batch, cfg.lr, cfg.gamma)?;
+        prev_state = state;
+
+        // Track best by the *noise-free* mean so the report measures
+        // true convergence, not a lucky noisy draw.
+        let mean = model.mean_time(&cvars);
+        if mean < best_mean {
+            best_mean = mean;
+            best_cvars = cvars.clone();
+        }
+    }
+
+    Ok(ConvergenceReport {
+        best_distance: model.distance_to_best(&best_cvars),
+        best_ratio: best_mean / model.optimal_time(),
+        final_cvars: cvars,
+        best_cvars,
+        trajectory,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mpi_t::CvarId;
+
+    #[test]
+    fn finds_bool_step_without_noise() {
+        let model = SyntheticModel::BoolStep { cvar: CvarId(0), gain: 0.3 };
+        let cfg = ConvergenceConfig { runs: 120, seed: 11, ..Default::default() };
+        let rep = run_convergence(&model, &cfg).unwrap();
+        assert_eq!(rep.best_distance, 0.0, "should find async progress: {:?}", rep.best_cvars);
+        assert!(rep.best_ratio < 1.01);
+    }
+
+    #[test]
+    fn approaches_parabola_optimum_under_noise() {
+        // POLLS_BEFORE_YIELD parabola with optimum at 2600 (16 steps up).
+        let model = SyntheticModel::Parabola { cvar: CvarId(4), best: 2600, curvature: 12.0 };
+        let cfg = ConvergenceConfig { runs: 400, noise: 0.10, seed: 13, ..Default::default() };
+        let rep = run_convergence(&model, &cfg).unwrap();
+        assert!(
+            rep.best_distance < 0.05,
+            "best {:?} distance {}",
+            rep.best_cvars.get(CvarId(4)),
+            rep.best_distance
+        );
+    }
+
+    #[test]
+    fn trajectory_length_matches_runs() {
+        let model = SyntheticModel::BoolStep { cvar: CvarId(2), gain: 0.1 };
+        let cfg = ConvergenceConfig { runs: 25, seed: 1, ..Default::default() };
+        let rep = run_convergence(&model, &cfg).unwrap();
+        assert_eq!(rep.trajectory.len(), 25);
+    }
+}

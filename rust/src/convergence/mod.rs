@@ -1,0 +1,14 @@
+//! §5.5 — convergence simulations of the RL machinery.
+//!
+//! "In these simulations, there was no OpenCoarray library to tune, just
+//! models. Each model included a handful of simulated control and
+//! performance variables with known behavior and added Gaussian noise.
+//! ... Even with high level of noise (up to 30% of the value of the
+//! performance variables), our algorithm has always been able to find a
+//! set of control variables reasonably close to the known best."
+
+mod harness;
+mod models;
+
+pub use harness::{run_convergence, ConvergenceConfig, ConvergenceReport};
+pub use models::{SyntheticModel, SyntheticPvars};

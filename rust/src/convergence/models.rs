@@ -1,0 +1,170 @@
+//! Synthetic cvar→pvar models with a known optimum (§5.5).
+//!
+//! The paper's example: "a simulated performance variable ... a function
+//! of one control variable, for example in the shape of a parabola,
+//! with a global minimum." We implement that parabola family plus a
+//! coupled two-variable extension (their stated future work) and a
+//! boolean-shift model, each with Gaussian observation noise.
+
+use crate::mpi_t::{CvarDomain, CvarId, CvarSet, MPICH_CVARS};
+use crate::util::rng::Rng;
+
+/// Synthetic observation: a "total time" plus auxiliary pvар values.
+#[derive(Debug, Clone)]
+pub struct SyntheticPvars {
+    pub total_time_us: f64,
+    pub aux: Vec<f64>,
+}
+
+/// A known-optimum model mapping configurations to noisy pvars.
+#[derive(Debug, Clone)]
+pub enum SyntheticModel {
+    /// Parabola in one integer cvar: minimum at `best`.
+    Parabola { cvar: CvarId, best: i64, curvature: f64 },
+    /// Parabola in one cvar whose optimum shifts with a boolean cvar
+    /// (two-variable coupling — the paper's future-work case).
+    CoupledParabola {
+        int_cvar: CvarId,
+        bool_cvar: CvarId,
+        best_off: i64,
+        best_on: i64,
+        bool_gain: f64,
+        curvature: f64,
+    },
+    /// Step model: a boolean cvar shifts time by `gain` (e.g. async
+    /// progress on a put-heavy code).
+    BoolStep { cvar: CvarId, gain: f64 },
+}
+
+impl SyntheticModel {
+    /// Baseline (noise-free) time at the vanilla configuration.
+    pub const BASE_US: f64 = 1000.0;
+
+    /// Noise-free evaluation.
+    pub fn mean_time(&self, cv: &CvarSet) -> f64 {
+        match *self {
+            SyntheticModel::Parabola { cvar, best, curvature } => {
+                let x = normalized_distance(cvar, cv.get(cvar), best);
+                Self::BASE_US * (1.0 + curvature * x * x)
+            }
+            SyntheticModel::CoupledParabola {
+                int_cvar,
+                bool_cvar,
+                best_off,
+                best_on,
+                bool_gain,
+                curvature,
+            } => {
+                let on = cv.get(bool_cvar) != 0;
+                let best = if on { best_on } else { best_off };
+                let x = normalized_distance(int_cvar, cv.get(int_cvar), best);
+                let base = if on { 1.0 - bool_gain } else { 1.0 };
+                Self::BASE_US * base * (1.0 + curvature * x * x)
+            }
+            SyntheticModel::BoolStep { cvar, gain } => {
+                let on = cv.get(cvar) != 0;
+                Self::BASE_US * if on { 1.0 - gain } else { 1.0 }
+            }
+        }
+    }
+
+    /// The model's known-best achievable mean time.
+    pub fn optimal_time(&self) -> f64 {
+        match *self {
+            SyntheticModel::Parabola { .. } => Self::BASE_US,
+            SyntheticModel::CoupledParabola { bool_gain, .. } => Self::BASE_US * (1.0 - bool_gain),
+            SyntheticModel::BoolStep { gain, .. } => Self::BASE_US * (1.0 - gain),
+        }
+    }
+
+    /// Noisy observation (noise = std-dev fraction of the value, §5.5
+    /// explores up to 0.30).
+    pub fn observe(&self, cv: &CvarSet, noise: f64, rng: &mut Rng) -> SyntheticPvars {
+        let mean = self.mean_time(cv);
+        let total = mean * (1.0 + noise * rng.normal()).max(0.05);
+        // Auxiliary pvars: noisy echoes correlated with the objective,
+        // standing in for queue lengths / op timers.
+        let aux = vec![
+            (mean / Self::BASE_US - 1.0) * 10.0 * (1.0 + noise * rng.normal()),
+            total / 100.0,
+        ];
+        SyntheticPvars { total_time_us: total, aux }
+    }
+
+    /// How far (in normalized domain units, 0..1) a configuration's
+    /// relevant cvar is from the model's optimum.
+    pub fn distance_to_best(&self, cv: &CvarSet) -> f64 {
+        match *self {
+            SyntheticModel::Parabola { cvar, best, .. } => {
+                normalized_distance(cvar, cv.get(cvar), best).abs()
+            }
+            SyntheticModel::CoupledParabola { int_cvar, bool_cvar, best_on, .. } => {
+                let bool_miss = if cv.get(bool_cvar) != 0 { 0.0 } else { 1.0 };
+                let x = normalized_distance(int_cvar, cv.get(int_cvar), best_on).abs();
+                (bool_miss + x) / 2.0
+            }
+            SyntheticModel::BoolStep { cvar, gain: _ } => {
+                if cv.get(cvar) != 0 {
+                    0.0
+                } else {
+                    1.0
+                }
+            }
+        }
+    }
+}
+
+/// |v − best| normalized by the cvar's domain width.
+fn normalized_distance(cvar: CvarId, v: i64, best: i64) -> f64 {
+    match MPICH_CVARS[cvar.0].domain {
+        CvarDomain::Bool => (v - best).abs() as f64,
+        CvarDomain::Int { lo, hi, .. } => (v - best) as f64 / (hi - lo).max(1) as f64,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parabola_minimum_at_best() {
+        let m = SyntheticModel::Parabola { cvar: CvarId(4), best: 1400, curvature: 8.0 };
+        let mut at_best = CvarSet::vanilla();
+        at_best.set(CvarId(4), 1400);
+        let mut off = CvarSet::vanilla();
+        off.set(CvarId(4), 50_000);
+        assert!(m.mean_time(&at_best) < m.mean_time(&off));
+        assert!((m.mean_time(&at_best) - m.optimal_time()).abs() < 1e-9);
+    }
+
+    #[test]
+    fn coupled_model_rewards_bool() {
+        let m = SyntheticModel::CoupledParabola {
+            int_cvar: CvarId(5),
+            bool_cvar: CvarId(0),
+            best_off: 131_072,
+            best_on: 1_310_720,
+            bool_gain: 0.25,
+            curvature: 4.0,
+        };
+        let mut on = CvarSet::vanilla();
+        on.set(CvarId(0), 1);
+        on.set(CvarId(5), 1_310_720);
+        assert!(m.mean_time(&on) < m.mean_time(&CvarSet::vanilla()));
+        assert_eq!(m.distance_to_best(&on), 0.0);
+    }
+
+    #[test]
+    fn noise_scales_with_level() {
+        let m = SyntheticModel::BoolStep { cvar: CvarId(0), gain: 0.3 };
+        let cv = CvarSet::vanilla();
+        let spread = |noise: f64| {
+            let mut rng = Rng::new(1);
+            let xs: Vec<f64> =
+                (0..500).map(|_| m.observe(&cv, noise, &mut rng).total_time_us).collect();
+            let mean = xs.iter().sum::<f64>() / xs.len() as f64;
+            (xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / xs.len() as f64).sqrt()
+        };
+        assert!(spread(0.3) > spread(0.05) * 3.0);
+    }
+}

@@ -1,0 +1,110 @@
+//! The action space: one fixed-step change to one control variable
+//! (§5.2), or no-op. 6 cvars × {up, down} + no-op = 13 actions.
+
+use crate::mpi_t::{CvarId, CvarSet, MPICH_CVARS};
+
+use super::state::NUM_ACTIONS;
+
+/// A tuning action.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Action {
+    /// Keep the configuration.
+    Noop,
+    /// Step `cvar` up or down by its fixed step (booleans toggle).
+    Step { cvar: CvarId, up: bool },
+}
+
+impl Action {
+    /// Decode an action index (the Q-network's output ordering):
+    /// 0 = no-op; then `1 + 2*c` = cvar c up, `2 + 2*c` = cvar c down.
+    pub fn from_index(index: usize) -> Action {
+        assert!(index < NUM_ACTIONS, "action index {index} out of range");
+        if index == 0 {
+            return Action::Noop;
+        }
+        let k = index - 1;
+        Action::Step { cvar: CvarId(k / 2), up: k % 2 == 0 }
+    }
+
+    pub fn index(&self) -> usize {
+        match *self {
+            Action::Noop => 0,
+            Action::Step { cvar, up } => 1 + 2 * cvar.0 + usize::from(!up),
+        }
+    }
+
+    /// Apply to a configuration (clamped by the cvar's domain).
+    pub fn apply(&self, cvars: &CvarSet) -> CvarSet {
+        match *self {
+            Action::Noop => cvars.clone(),
+            Action::Step { cvar, up } => {
+                let mut next = cvars.clone();
+                let d = &MPICH_CVARS[cvar.0];
+                next.set(cvar, d.step(cvars.get(cvar), up));
+                next
+            }
+        }
+    }
+
+    /// Human-readable description for logs.
+    pub fn describe(&self) -> String {
+        match *self {
+            Action::Noop => "no-op".to_string(),
+            Action::Step { cvar, up } => {
+                let d = &MPICH_CVARS[cvar.0];
+                let short = d.name.strip_prefix("MPIR_CVAR_").unwrap_or(d.name);
+                format!("{short} {}", if up { "+step" } else { "-step" })
+            }
+        }
+    }
+}
+
+/// One-hot encode an action index for the train batch.
+pub fn one_hot(index: usize) -> [f32; NUM_ACTIONS] {
+    let mut v = [0.0; NUM_ACTIONS];
+    v[index] = 1.0;
+    v
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn index_round_trip() {
+        for i in 0..NUM_ACTIONS {
+            assert_eq!(Action::from_index(i).index(), i, "index {i}");
+        }
+    }
+
+    #[test]
+    fn apply_steps_eager_max() {
+        let base = CvarSet::vanilla();
+        let up = Action::Step { cvar: CvarId(5), up: true }.apply(&base);
+        assert_eq!(up.eager_max(), base.eager_max() + 1024);
+        let down = Action::Step { cvar: CvarId(5), up: false }.apply(&base);
+        assert_eq!(down.eager_max(), base.eager_max() - 1024);
+    }
+
+    #[test]
+    fn apply_toggles_bools() {
+        let base = CvarSet::vanilla();
+        let on = Action::Step { cvar: CvarId(0), up: true }.apply(&base);
+        assert!(on.async_progress());
+        let off = Action::Step { cvar: CvarId(0), up: false }.apply(&on);
+        assert!(!off.async_progress());
+    }
+
+    #[test]
+    fn noop_is_identity() {
+        let base = CvarSet::vanilla();
+        assert_eq!(Action::Noop.apply(&base), base);
+    }
+
+    #[test]
+    fn one_hot_shape() {
+        let v = one_hot(3);
+        assert_eq!(v.iter().sum::<f32>(), 1.0);
+        assert_eq!(v[3], 1.0);
+    }
+}

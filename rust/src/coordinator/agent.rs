@@ -1,0 +1,113 @@
+//! The AI component (§5.1): abstract over the Q-value estimator so the
+//! controller can run with the deep network (PJRT) or the tabular
+//! fallback (tests, ablations).
+
+use anyhow::Result;
+
+use crate::runtime::{Manifest, QNet, RuntimeClient, TrainBatch};
+use crate::util::rng::Rng;
+
+use super::state::{NUM_ACTIONS, STATE_DIM};
+
+/// Q-value estimator interface.
+pub trait Agent {
+    fn name(&self) -> &'static str;
+
+    /// Q(s, ·) for one state.
+    fn q_values(&mut self, state: &[f32; STATE_DIM]) -> Result<Vec<f32>>;
+
+    /// One training update on a replay minibatch; returns the loss.
+    fn train(&mut self, batch: &TrainBatch, lr: f32, gamma: f32) -> Result<f32>;
+
+    /// Losses observed so far (diagnostics).
+    fn loss_history(&self) -> &[f32];
+}
+
+/// Which agent implementation to construct.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AgentKind {
+    /// Deep Q-network via the AOT artifacts (the paper's approach:
+    /// experience replay, **no** Q-target network, §5.2).
+    Dqn,
+    /// DQN with a fixed target network refreshed every
+    /// [`DqnAgent::TARGET_SYNC_EVERY`] updates (ablation; the paper
+    /// cites but deliberately does not implement this stabilizer).
+    DqnTarget,
+    /// Discretized Q-table (ablation / artifact-free tests).
+    Tabular,
+}
+
+/// The deep Q-learning agent: wraps the PJRT-compiled Q-network.
+pub struct DqnAgent {
+    qnet: QNet,
+    /// Fixed-Q-targets ablation mode.
+    use_target: bool,
+    updates: usize,
+}
+
+impl DqnAgent {
+    /// Target refresh cadence in the ablation mode (updates).
+    pub const TARGET_SYNC_EVERY: usize = 25;
+
+    /// Load artifacts and initialize (requires `make artifacts`).
+    pub fn load(artifacts_dir: &std::path::Path, rng: &mut Rng) -> Result<DqnAgent> {
+        Self::load_with_mode(artifacts_dir, rng, false)
+    }
+
+    /// Load in fixed-Q-targets ablation mode.
+    pub fn load_with_mode(
+        artifacts_dir: &std::path::Path,
+        rng: &mut Rng,
+        use_target: bool,
+    ) -> Result<DqnAgent> {
+        let client = RuntimeClient::cpu()?;
+        let manifest = Manifest::load(artifacts_dir)?;
+        anyhow::ensure!(
+            manifest.state_dim == STATE_DIM && manifest.num_actions == NUM_ACTIONS,
+            "artifact layout mismatch"
+        );
+        let qnet = QNet::load(&client, &manifest, rng)?;
+        if use_target {
+            anyhow::ensure!(
+                qnet.has_target_network(),
+                "q_train_target artifact missing; re-run `make artifacts`"
+            );
+        }
+        Ok(DqnAgent { qnet, use_target, updates: 0 })
+    }
+
+    pub fn replay_batch(&self) -> usize {
+        self.qnet.replay_batch
+    }
+}
+
+impl Agent for DqnAgent {
+    fn name(&self) -> &'static str {
+        if self.use_target {
+            "dqn+target"
+        } else {
+            "dqn"
+        }
+    }
+
+    fn q_values(&mut self, state: &[f32; STATE_DIM]) -> Result<Vec<f32>> {
+        self.qnet.q_values(state)
+    }
+
+    fn train(&mut self, batch: &TrainBatch, lr: f32, gamma: f32) -> Result<f32> {
+        if self.use_target {
+            if self.updates % Self::TARGET_SYNC_EVERY == 0 {
+                self.qnet.sync_target();
+            }
+            self.updates += 1;
+            self.qnet.train_step_with_target(batch, lr, gamma)
+        } else {
+            self.updates += 1;
+            self.qnet.train_step(batch, lr, gamma)
+        }
+    }
+
+    fn loss_history(&self) -> &[f32] {
+        &self.qnet.loss_history
+    }
+}

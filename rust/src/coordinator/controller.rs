@@ -1,0 +1,307 @@
+//! The Controller (§5.1): the object the run-time library talks to via
+//! the `AITuning_*` surface. Owns the agent, replay buffer, relative-
+//! pvar tracker and tuning schedule; drives the run→learn→act loop.
+
+use anyhow::Result;
+
+use crate::metrics::recorder::{RunRecord, TuningLog};
+use crate::mpi_t::CvarSet;
+use crate::simmpi::Machine;
+use crate::util::rng::Rng;
+use crate::workloads::WorkloadKind;
+
+use super::actions::Action;
+use super::agent::{Agent, AgentKind, DqnAgent};
+use super::ensemble::ensemble;
+use super::episode::run_episode;
+use super::relative::RelativeTracker;
+use super::replay::{ReplayBuffer, Transition};
+use super::reward::reward;
+use super::state::{build_state, NUM_ACTIONS, STATE_DIM};
+use super::tabular::TabularAgent;
+
+/// Tuning hyper-parameters and environment description.
+#[derive(Debug, Clone)]
+pub struct TuningConfig {
+    pub machine: Machine,
+    pub agent: AgentKind,
+    /// Tuning runs per application (§5.4 recommends ≥ 20).
+    pub runs: usize,
+    /// ε-greedy exploration: linear from `eps_start` to `eps_end`.
+    pub eps_start: f64,
+    pub eps_end: f64,
+    /// Q-learning discount and Adam learning rate.
+    pub gamma: f32,
+    pub lr: f32,
+    /// Replay buffer capacity and minibatch size.
+    pub replay_capacity: usize,
+    pub replay_batch: usize,
+    /// Full replay refresh cadence (§5.2: every 200 runs).
+    pub replay_refresh_every: usize,
+    /// Extra minibatches per refresh.
+    pub replay_refresh_batches: usize,
+    /// Simulator run-to-run noise.
+    pub noise: f64,
+    /// Master seed.
+    pub seed: u64,
+    /// Artifacts directory for the DQN agent.
+    pub artifacts_dir: std::path::PathBuf,
+}
+
+impl Default for TuningConfig {
+    fn default() -> TuningConfig {
+        TuningConfig {
+            machine: Machine::cheyenne(),
+            agent: AgentKind::Dqn,
+            runs: 20,
+            eps_start: 0.8,
+            eps_end: 0.05,
+            gamma: 0.9,
+            lr: 1e-3,
+            replay_capacity: 8192,
+            replay_batch: 32,
+            replay_refresh_every: 200,
+            replay_refresh_batches: 8,
+            noise: 0.02,
+            seed: 0,
+            artifacts_dir: crate::runtime::default_artifacts_dir(),
+        }
+    }
+}
+
+/// Result of tuning one application at one scale.
+#[derive(Debug, Clone)]
+pub struct TuningOutcome {
+    pub log: TuningLog,
+    /// Configuration of the single best run.
+    pub best: CvarSet,
+    /// Ensemble configuration (§5.4) — what AITuning ships.
+    pub ensemble: CvarSet,
+    /// Total time of the reference (vanilla) run.
+    pub reference_us: f64,
+    /// Best run's total time.
+    pub best_us: f64,
+}
+
+impl TuningOutcome {
+    /// Fractional improvement of the best run over the reference.
+    pub fn improvement(&self) -> f64 {
+        (self.reference_us - self.best_us) / self.reference_us
+    }
+}
+
+/// The AITuning controller.
+pub struct Controller {
+    pub cfg: TuningConfig,
+    agent: Box<dyn Agent>,
+    replay: ReplayBuffer,
+    rng: Rng,
+    /// Runs executed across the controller's lifetime (drives the
+    /// §5.2 every-200-runs replay refresh across applications).
+    lifetime_runs: usize,
+}
+
+impl Controller {
+    /// `AITuning_start`: construct the controller for a layer.
+    pub fn new(cfg: TuningConfig) -> Result<Controller> {
+        let mut rng = Rng::new(cfg.seed);
+        let agent: Box<dyn Agent> = match cfg.agent {
+            AgentKind::Dqn => Box::new(DqnAgent::load(&cfg.artifacts_dir, &mut rng)?),
+            AgentKind::DqnTarget => {
+                Box::new(DqnAgent::load_with_mode(&cfg.artifacts_dir, &mut rng, true)?)
+            }
+            AgentKind::Tabular => Box::new(TabularAgent::new()),
+        };
+        let replay = ReplayBuffer::new(cfg.replay_capacity);
+        Ok(Controller { cfg, agent, replay, rng, lifetime_runs: 0 })
+    }
+
+    /// Current exploration rate for tuning-run `i` of `n`.
+    fn epsilon(&self, i: usize, n: usize) -> f64 {
+        let f = i as f64 / (n.max(2) - 1) as f64;
+        self.cfg.eps_start + (self.cfg.eps_end - self.cfg.eps_start) * f.min(1.0)
+    }
+
+    /// ε-greedy action selection.
+    fn select_action(&mut self, state: &[f32; STATE_DIM], eps: f64) -> Result<usize> {
+        if self.rng.chance(eps) {
+            Ok(self.rng.below(NUM_ACTIONS as u64) as usize)
+        } else {
+            let q = self.agent.q_values(state)?;
+            Ok(crate::runtime::argmax(&q))
+        }
+    }
+
+    /// Train on replay: one minibatch per run, plus the periodic
+    /// full-replay refresh (§5.2).
+    fn learn(&mut self) -> Result<()> {
+        if self.replay.is_empty() {
+            return Ok(());
+        }
+        let batch = self.replay.sample(self.cfg.replay_batch, &mut self.rng);
+        self.agent.train(&batch, self.cfg.lr, self.cfg.gamma)?;
+        if self.lifetime_runs % self.cfg.replay_refresh_every == 0 {
+            for _ in 0..self.cfg.replay_refresh_batches {
+                let batch = self.replay.sample(self.cfg.replay_batch, &mut self.rng);
+                self.agent.train(&batch, self.cfg.lr, self.cfg.gamma)?;
+            }
+        }
+        Ok(())
+    }
+
+    /// Tune one application at one scale: the full §5 loop.
+    pub fn tune(&mut self, kind: WorkloadKind, images: usize) -> Result<TuningOutcome> {
+        let workload_seed = self.cfg.seed ^ seed_mix(kind, images);
+        let mut log = TuningLog::new(kind.name(), images);
+        let mut tracker = RelativeTracker::new();
+        let mut cvars = CvarSet::vanilla();
+
+        // --- Run 0: reference (AITUNING_FIRST_RUN=1), vanilla config ---
+        let run_seed = self.rng.next_u64();
+        let reference = run_episode(
+            kind, images, &self.cfg.machine, &cvars, self.cfg.noise, workload_seed, run_seed,
+        )?;
+        tracker.record_reference(&reference.pvars);
+        let reference_us = reference.total_time_us;
+        self.lifetime_runs += 1;
+        log.push(RunRecord {
+            run_index: 0,
+            cvars: cvars.clone(),
+            total_time_us: reference_us,
+            reward: 0.0,
+            action: None,
+            epsilon: 1.0,
+            pvars: reference.pvars.clone(),
+        });
+
+        let mut prev_state = build_state(
+            &reference.pvars, &tracker, &cvars, images, 0, reference.eager_fraction,
+        );
+
+        // --- Tuning runs ---
+        for i in 1..=self.cfg.runs {
+            let eps = self.epsilon(i - 1, self.cfg.runs);
+            let action_idx = self.select_action(&prev_state, eps)?;
+            let action = Action::from_index(action_idx);
+            cvars = action.apply(&cvars);
+
+            let run_seed = self.rng.next_u64();
+            let result = run_episode(
+                kind, images, &self.cfg.machine, &cvars, self.cfg.noise, workload_seed, run_seed,
+            )?;
+            let r = reward(reference_us, result.total_time_us);
+            self.lifetime_runs += 1;
+
+            let state = build_state(
+                &result.pvars, &tracker, &cvars, images, i, result.eager_fraction,
+            );
+            self.replay.push(Transition {
+                state: prev_state,
+                action: action_idx,
+                reward: r as f32,
+                next_state: state,
+                done: i == self.cfg.runs,
+            });
+            self.learn()?;
+
+            log.push(RunRecord {
+                run_index: i,
+                cvars: cvars.clone(),
+                total_time_us: result.total_time_us,
+                reward: r,
+                action: Some(action_idx),
+                epsilon: eps,
+                pvars: result.pvars,
+            });
+            prev_state = state;
+        }
+
+        let best_rec = log.best_run().expect("nonempty log");
+        let best = best_rec.cvars.clone();
+        let best_us = best_rec.total_time_us;
+        let ensemble_cfg = ensemble(&log.runs[1..], reference_us);
+        Ok(TuningOutcome { log, best, ensemble: ensemble_cfg, reference_us, best_us })
+    }
+
+    /// Evaluate a fixed configuration (no learning) — used to score the
+    /// ensemble config and the baselines.
+    pub fn evaluate(
+        &mut self,
+        kind: WorkloadKind,
+        images: usize,
+        cvars: &CvarSet,
+        repeats: usize,
+    ) -> Result<f64> {
+        let workload_seed = self.cfg.seed ^ seed_mix(kind, images);
+        let mut total = 0.0;
+        for _ in 0..repeats.max(1) {
+            let run_seed = self.rng.next_u64();
+            let r = run_episode(
+                kind, images, &self.cfg.machine, cvars, self.cfg.noise, workload_seed, run_seed,
+            )?;
+            total += r.total_time_us;
+        }
+        Ok(total / repeats.max(1) as f64)
+    }
+
+    pub fn agent_name(&self) -> &'static str {
+        self.agent.name()
+    }
+
+    pub fn replay_len(&self) -> usize {
+        self.replay.len()
+    }
+
+    pub fn loss_history(&self) -> &[f32] {
+        self.agent.loss_history()
+    }
+
+    pub fn lifetime_runs(&self) -> usize {
+        self.lifetime_runs
+    }
+}
+
+/// Stable per-(workload, images) seed component: the same application
+/// instance is tuned across all of a campaign's runs.
+fn seed_mix(kind: WorkloadKind, images: usize) -> u64 {
+    let k = kind.name().bytes().fold(0u64, |h, b| h.wrapping_mul(131).wrapping_add(b as u64));
+    k.wrapping_mul(0x9e3779b97f4a7c15) ^ (images as u64).wrapping_mul(0xd1b54a32d192ed03)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tabular_cfg() -> TuningConfig {
+        TuningConfig {
+            agent: AgentKind::Tabular,
+            runs: 10,
+            noise: 0.01,
+            seed: 3,
+            ..TuningConfig::default()
+        }
+    }
+
+    #[test]
+    fn tabular_tuning_improves_lbm() {
+        let mut ctl = Controller::new(tabular_cfg()).unwrap();
+        let out = ctl.tune(WorkloadKind::LatticeBoltzmann, 8).unwrap();
+        assert_eq!(out.log.runs.len(), 11);
+        assert!(out.best_us <= out.reference_us * 1.02, "best should not be much worse");
+        assert!(ctl.replay_len() == 10);
+    }
+
+    #[test]
+    fn epsilon_schedule_decays() {
+        let ctl = Controller::new(tabular_cfg()).unwrap();
+        assert!(ctl.epsilon(0, 20) > ctl.epsilon(19, 20));
+        assert!((ctl.epsilon(19, 20) - 0.05).abs() < 1e-9);
+    }
+
+    #[test]
+    fn evaluate_is_deterministic_in_expectation() {
+        let mut ctl = Controller::new(tabular_cfg()).unwrap();
+        let t = ctl.evaluate(WorkloadKind::LatticeBoltzmann, 4, &CvarSet::vanilla(), 2).unwrap();
+        assert!(t > 0.0);
+    }
+}

@@ -1,0 +1,104 @@
+//! Ensemble inference (§5.4): after the ~20 tuning runs, discard the
+//! penalized runs and take the per-cvar **median** over the runs whose
+//! performance is within 5% of the best.
+
+use crate::metrics::recorder::RunRecord;
+use crate::metrics::stats::median_i64;
+use crate::mpi_t::{CvarId, CvarSet, NUM_CVARS};
+
+/// Paper's "within 5% from the best" window.
+pub const ENSEMBLE_WINDOW: f64 = 0.05;
+
+/// Build the shipped configuration from the tuning log.
+///
+/// `reference_us` is the first (vanilla) run's total time; runs slower
+/// than it are "penalized" and discarded before the 5% window applies.
+/// Falls back to the single best run's cvars if nothing else survives,
+/// and to vanilla if the log is empty.
+pub fn ensemble(records: &[RunRecord], reference_us: f64) -> CvarSet {
+    if records.is_empty() {
+        return CvarSet::vanilla();
+    }
+    let best = records
+        .iter()
+        .map(|r| r.total_time_us)
+        .fold(f64::INFINITY, f64::min);
+
+    let good: Vec<&RunRecord> = records
+        .iter()
+        .filter(|r| r.total_time_us <= reference_us) // not penalized
+        .filter(|r| r.total_time_us <= best * (1.0 + ENSEMBLE_WINDOW))
+        .collect();
+
+    if good.is_empty() {
+        // Everything penalized: ship the least-bad configuration.
+        let least_bad = records
+            .iter()
+            .min_by(|a, b| a.total_time_us.total_cmp(&b.total_time_us))
+            .unwrap();
+        return least_bad.cvars.clone();
+    }
+
+    let mut out = CvarSet::vanilla();
+    for c in 0..NUM_CVARS {
+        let mut values: Vec<i64> = good.iter().map(|r| r.cvars.get(CvarId(c))).collect();
+        out.set(CvarId(c), median_i64(&mut values));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mpi_t::PvarStats;
+
+    fn rec(total: f64, eager: i64, asyncp: i64) -> RunRecord {
+        let mut cv = CvarSet::vanilla();
+        cv.set(CvarId(5), eager);
+        cv.set(CvarId(0), asyncp);
+        RunRecord {
+            run_index: 0,
+            cvars: cv,
+            total_time_us: total,
+            reward: 0.0,
+            action: None,
+            epsilon: 0.0,
+            pvars: PvarStats::default(),
+        }
+    }
+
+    #[test]
+    fn median_of_good_runs() {
+        let records = vec![
+            rec(100.0, 131_072, 0),  // reference-ish, outside 5% of best
+            rec(80.0, 500_000, 1),   // best
+            rec(82.0, 600_000, 1),   // within 5%
+            rec(83.0, 700_000, 1),   // within 5%
+            rec(120.0, 999_999, 0),  // penalized
+        ];
+        let out = ensemble(&records, 100.0);
+        assert_eq!(out.get(CvarId(5)), 600_000); // median of {5,6,7}e5
+        assert_eq!(out.get(CvarId(0)), 1);
+    }
+
+    #[test]
+    fn penalized_runs_discarded_even_if_close_to_best() {
+        // best = 104, but everything is above the reference 100.
+        let records = vec![rec(104.0, 300_000, 1), rec(105.0, 400_000, 1)];
+        let out = ensemble(&records, 100.0);
+        // Falls back to least-bad run's configuration.
+        assert_eq!(out.get(CvarId(5)), 300_000);
+    }
+
+    #[test]
+    fn empty_log_gives_vanilla() {
+        assert_eq!(ensemble(&[], 100.0), CvarSet::vanilla());
+    }
+
+    #[test]
+    fn single_run_is_identity() {
+        let out = ensemble(&[rec(90.0, 262_144, 1)], 100.0);
+        assert_eq!(out.get(CvarId(5)), 262_144);
+        assert_eq!(out.get(CvarId(0)), 1);
+    }
+}

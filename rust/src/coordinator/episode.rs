@@ -1,0 +1,178 @@
+//! One episode = one simulated application run, instrumented exactly the
+//! way the paper instruments a real run: the PMPI shim sets control
+//! variables before `MPI_Init`, probes register user-defined pvar values
+//! during execution, and the `MPI_Finalize` wrapper collects statistics.
+
+use anyhow::Result;
+
+use crate::coarray::{lower_all, RuntimeOptions};
+use crate::mpi_t::{
+    Collection, CollectionCreator, CvarSet, MpichCollectionCreator, PmpiHooks, PmpiLayer,
+    PvarStats, Session,
+};
+use crate::simmpi::{Engine, Machine, RunStats, SimConfig};
+use crate::util::rng::Rng;
+use crate::workloads::WorkloadKind;
+
+/// Everything observed from one instrumented run.
+#[derive(Debug, Clone)]
+pub struct EpisodeResult {
+    pub total_time_us: f64,
+    pub pvars: PvarStats,
+    pub eager_fraction: f64,
+    pub raw: RunStats,
+}
+
+/// AITuning's PMPI hook implementation: owns the MPI_T collection and
+/// the cvar set to install before init.
+struct TuningHooks {
+    install: CvarSet,
+    collection: Collection,
+    finalized: Option<PvarStats>,
+}
+
+impl PmpiHooks for TuningHooks {
+    fn before_init(&mut self, session: &mut Session) {
+        // AITuning_setControlVariables (Listing 1): before PMPI_Init.
+        session.set_all_cvars(&self.install).expect("cvars set before init");
+    }
+
+    fn after_init(&mut self, session: &mut Session) {
+        // AITuning_setPerformanceVariables: sessions/handles after init.
+        session.create_pvar_session().expect("pvar session after init");
+    }
+
+    fn on_win_flush(&mut self, duration_us: f64) {
+        self.collection.register(1, duration_us);
+    }
+
+    fn on_put(&mut self, duration_us: f64) {
+        self.collection.register(2, duration_us);
+    }
+
+    fn on_get(&mut self, duration_us: f64) {
+        self.collection.register(3, duration_us);
+    }
+
+    fn on_umq_sample(&mut self, length: usize) {
+        self.collection.register(0, length as f64);
+    }
+
+    fn on_finalize(&mut self, _session: &mut Session, total_time_us: f64) {
+        self.collection.register(4, total_time_us);
+        self.finalized = Some(self.collection.finalize_stats());
+    }
+}
+
+/// Run one instrumented episode.
+///
+/// `workload_seed` fixes the problem instance (the *same application*
+/// across tuning runs); `run_seed` varies run-to-run noise.
+pub fn run_episode(
+    kind: WorkloadKind,
+    images: usize,
+    machine: &Machine,
+    cvars: &CvarSet,
+    noise: f64,
+    workload_seed: u64,
+    run_seed: u64,
+) -> Result<EpisodeResult> {
+    // Build the application (outside MPI, as in reality).
+    let mut wl_rng = Rng::new(workload_seed);
+    let programs = kind.instantiate().build(images, &mut wl_rng);
+    let lowered = lower_all(&programs, &RuntimeOptions::default());
+
+    // PMPI wrapper sequence around the simulated execution.
+    let mut hooks = TuningHooks {
+        install: cvars.clone(),
+        collection: MpichCollectionCreator.create(),
+        finalized: None,
+    };
+    let raw = {
+        let mut pmpi = PmpiLayer::new(&mut hooks);
+        pmpi.mpi_init_thread()?;
+
+        let effective = pmpi.session.effective_cvars().clone();
+        let mut cfg = SimConfig::new(machine.clone(), effective, images);
+        cfg.noise = noise;
+        cfg.seed = run_seed;
+        let raw = Engine::new(cfg, lowered).run();
+
+        // Feed observed values through the probes (Listing 3).
+        for &v in &raw.flush_times {
+            pmpi.record_win_flush(v);
+        }
+        for &v in &raw.put_times {
+            pmpi.record_put(v);
+        }
+        for &v in &raw.get_times {
+            pmpi.record_get(v);
+        }
+        for &v in &raw.umq_samples {
+            pmpi.record_umq_sample(v as usize);
+        }
+        pmpi.mpi_finalize(raw.total_time_us)?;
+        raw
+    };
+
+    let pvars = hooks.finalized.expect("finalize populated stats");
+    Ok(EpisodeResult {
+        total_time_us: raw.total_time_us,
+        eager_fraction: raw.eager_fraction(),
+        pvars,
+        raw,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mpi_t::PvarId;
+
+    #[test]
+    fn episode_produces_all_pvars() {
+        let r = run_episode(
+            WorkloadKind::LatticeBoltzmann,
+            4,
+            &Machine::cheyenne(),
+            &CvarSet::vanilla(),
+            0.0,
+            42,
+            1,
+        )
+        .unwrap();
+        assert!(r.total_time_us > 0.0);
+        // All five pvars present, total_time registered once.
+        for id in 0..5 {
+            assert!(r.pvars.get(PvarId(id)).is_some(), "pvar {id} missing");
+        }
+        assert_eq!(r.pvars.get(PvarId(4)).unwrap().count, 1);
+        assert!((r.pvars.total_time_us().unwrap() - r.total_time_us).abs() < 1e-9);
+    }
+
+    #[test]
+    fn cvars_flow_through_to_simulation() {
+        let mut fast = CvarSet::vanilla();
+        fast.set(crate::mpi_t::CvarId(0), 1); // async progress
+        let vanilla = run_episode(
+            WorkloadKind::Icar, 8, &Machine::cheyenne(), &CvarSet::vanilla(), 0.0, 42, 1,
+        )
+        .unwrap();
+        let tuned =
+            run_episode(WorkloadKind::Icar, 8, &Machine::cheyenne(), &fast, 0.0, 42, 1).unwrap();
+        assert_ne!(vanilla.total_time_us, tuned.total_time_us);
+    }
+
+    #[test]
+    fn noise_varies_by_run_seed() {
+        let a = run_episode(
+            WorkloadKind::LatticeBoltzmann, 4, &Machine::edison(), &CvarSet::vanilla(), 0.05, 7, 1,
+        )
+        .unwrap();
+        let b = run_episode(
+            WorkloadKind::LatticeBoltzmann, 4, &Machine::edison(), &CvarSet::vanilla(), 0.05, 7, 2,
+        )
+        .unwrap();
+        assert_ne!(a.total_time_us, b.total_time_us);
+    }
+}

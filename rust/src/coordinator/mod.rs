@@ -1,0 +1,31 @@
+//! The AITuning coordinator — the paper's contribution (§5).
+//!
+//! A [`Controller`] drives repeated executions of an application. Each
+//! run: the end-of-run MPI_T performance-variable statistics (relative
+//! to the first, reference run — §5.1) form the RL *state*; the deep
+//! Q-network proposes an *action* (a fixed-step change to one control
+//! variable — §5.2); the next run executes under the new configuration
+//! and its total-time improvement is the *reward*. Experience replay
+//! stabilizes training (§3.1/§5.2; no Q-target network, as in the
+//! paper). After the tuning runs, ensemble inference (§5.4) merges the
+//! best configurations.
+
+pub mod actions;
+pub mod agent;
+pub mod controller;
+pub mod ensemble;
+pub mod episode;
+pub mod relative;
+pub mod replay;
+pub mod reward;
+pub mod state;
+pub mod tabular;
+
+pub use actions::Action;
+pub use agent::{Agent, AgentKind, DqnAgent};
+pub use controller::{Controller, TuningConfig, TuningOutcome};
+pub use episode::{run_episode, EpisodeResult};
+pub use relative::RelativeTracker;
+pub use replay::{ReplayBuffer, Transition};
+pub use state::{build_state, NUM_ACTIONS, STATE_DIM};
+pub use tabular::TabularAgent;

@@ -1,0 +1,113 @@
+//! Relative performance variables (§5.1).
+//!
+//! "During the first run, the performance variable declared as relative
+//! will maintain in memory the absolute value ... During the other runs,
+//! all the values of a relative performance variable are expressed as
+//! the difference between the absolute value obtained during the first
+//! run and the current absolute value." Positive = improvement.
+//!
+//! We report the *fraction* `(ref − cur) / ref` rather than the raw
+//! difference so features are scale-free across workloads.
+
+use std::collections::HashMap;
+
+use crate::mpi_t::{PvarId, PvarStats, MPICH_PVARS};
+
+/// Reference-run standardization state for relative pvars.
+#[derive(Debug, Default, Clone)]
+pub struct RelativeTracker {
+    /// pvar id -> (reference mean, reference max)
+    reference: HashMap<PvarId, (f64, f64)>,
+}
+
+impl RelativeTracker {
+    pub fn new() -> RelativeTracker {
+        RelativeTracker::default()
+    }
+
+    /// Record the reference (first) run — `AITUNING_FIRST_RUN=1`.
+    pub fn record_reference(&mut self, stats: &PvarStats) {
+        self.reference.clear();
+        for (id, summary) in &stats.summaries {
+            let relative = MPICH_PVARS
+                .get(id.0)
+                .map(|d| d.relative)
+                .unwrap_or(true);
+            if relative {
+                self.reference.insert(*id, (summary.mean, summary.max));
+            }
+        }
+    }
+
+    pub fn has_reference(&self) -> bool {
+        !self.reference.is_empty()
+    }
+
+    /// Relative improvement of a mean value: `(ref − cur)/ref`, clipped
+    /// to ±2 so outliers can't blow up the state.
+    pub fn relative(&self, id: PvarId, current_mean: f64) -> f64 {
+        match self.reference.get(&id) {
+            Some(&(reference, _)) if reference.abs() > 1e-12 => {
+                ((reference - current_mean) / reference).clamp(-2.0, 2.0)
+            }
+            _ => 0.0,
+        }
+    }
+
+    /// Relative improvement of a max value.
+    pub fn relative_max(&self, id: PvarId, current_max: f64) -> f64 {
+        match self.reference.get(&id) {
+            Some(&(_, reference)) if reference.abs() > 1e-12 => {
+                ((reference - current_max) / reference).clamp(-2.0, 2.0)
+            }
+            _ => 0.0,
+        }
+    }
+
+    /// Reference total time (reward basis), if recorded.
+    pub fn reference_total_us(&self) -> Option<f64> {
+        self.reference.get(&PvarId(4)).map(|&(_, max)| max)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::metrics::stats::Summary;
+
+    fn stats(total: f64) -> PvarStats {
+        PvarStats { summaries: vec![(PvarId(4), Summary::of(&[total]))] }
+    }
+
+    #[test]
+    fn improvement_is_positive() {
+        let mut r = RelativeTracker::new();
+        r.record_reference(&stats(100.0));
+        assert!((r.relative_max(PvarId(4), 80.0) - 0.2).abs() < 1e-12);
+        assert!(r.relative_max(PvarId(4), 120.0) < 0.0);
+        assert_eq!(r.reference_total_us(), Some(100.0));
+    }
+
+    #[test]
+    fn unknown_pvar_is_zero() {
+        let r = RelativeTracker::new();
+        assert_eq!(r.relative(PvarId(1), 55.0), 0.0);
+        assert!(!r.has_reference());
+    }
+
+    #[test]
+    fn non_relative_pvars_not_tracked() {
+        let mut r = RelativeTracker::new();
+        let mut st = stats(100.0);
+        st.summaries.push((PvarId(0), Summary::of(&[7.0]))); // UMQ: absolute
+        r.record_reference(&st);
+        assert_eq!(r.relative(PvarId(0), 3.0), 0.0);
+    }
+
+    #[test]
+    fn outliers_are_clipped() {
+        let mut r = RelativeTracker::new();
+        r.record_reference(&stats(1.0));
+        assert_eq!(r.relative_max(PvarId(4), 1e9), -2.0);
+    }
+}

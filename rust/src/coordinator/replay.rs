@@ -1,0 +1,135 @@
+//! Experience replay (§3.1/§5.2): uniform random sampling over the
+//! accumulated experience breaks temporal correlation. The paper trains
+//! on a random subset of the whole experience; we sample uniform
+//! minibatches shaped for the AOT train-step artifact.
+
+use crate::runtime::TrainBatch;
+use crate::util::rng::Rng;
+
+use super::actions::one_hot;
+use super::state::{NUM_ACTIONS, STATE_DIM};
+
+/// One (s, a, r, s', done) experience tuple.
+#[derive(Debug, Clone)]
+pub struct Transition {
+    pub state: [f32; STATE_DIM],
+    pub action: usize,
+    pub reward: f32,
+    pub next_state: [f32; STATE_DIM],
+    pub done: bool,
+}
+
+/// Bounded uniform replay buffer.
+#[derive(Debug)]
+pub struct ReplayBuffer {
+    buf: Vec<Transition>,
+    capacity: usize,
+    next: usize,
+    total_seen: usize,
+}
+
+impl ReplayBuffer {
+    pub fn new(capacity: usize) -> ReplayBuffer {
+        assert!(capacity > 0);
+        ReplayBuffer { buf: Vec::with_capacity(capacity), capacity, next: 0, total_seen: 0 }
+    }
+
+    pub fn push(&mut self, t: Transition) {
+        assert!(t.action < NUM_ACTIONS);
+        self.total_seen += 1;
+        if self.buf.len() < self.capacity {
+            self.buf.push(t);
+        } else {
+            self.buf[self.next] = t;
+            self.next = (self.next + 1) % self.capacity;
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.buf.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.buf.is_empty()
+    }
+
+    pub fn total_seen(&self) -> usize {
+        self.total_seen
+    }
+
+    /// Uniformly sample a minibatch of `batch` transitions (with
+    /// replacement if the buffer is smaller than `batch`), shaped for
+    /// the `q_train` artifact.
+    pub fn sample(&self, batch: usize, rng: &mut Rng) -> TrainBatch {
+        assert!(!self.buf.is_empty(), "sampling from empty replay buffer");
+        let mut states = Vec::with_capacity(batch * STATE_DIM);
+        let mut actions = Vec::with_capacity(batch * NUM_ACTIONS);
+        let mut rewards = Vec::with_capacity(batch);
+        let mut next_states = Vec::with_capacity(batch * STATE_DIM);
+        let mut done = Vec::with_capacity(batch);
+        for _ in 0..batch {
+            let t = &self.buf[rng.below(self.buf.len() as u64) as usize];
+            states.extend_from_slice(&t.state);
+            actions.extend_from_slice(&one_hot(t.action));
+            rewards.push(t.reward);
+            next_states.extend_from_slice(&t.next_state);
+            done.push(if t.done { 1.0 } else { 0.0 });
+        }
+        TrainBatch { states, actions_onehot: actions, rewards, next_states, done }
+    }
+
+    /// Most recent transition (per-run immediate training).
+    pub fn latest(&self) -> Option<&Transition> {
+        if self.buf.len() < self.capacity {
+            self.buf.last()
+        } else {
+            let idx = (self.next + self.capacity - 1) % self.capacity;
+            self.buf.get(idx)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn t(reward: f32) -> Transition {
+        Transition {
+            state: [0.0; STATE_DIM],
+            action: 1,
+            reward,
+            next_state: [0.0; STATE_DIM],
+            done: false,
+        }
+    }
+
+    #[test]
+    fn ring_overwrites_oldest() {
+        let mut rb = ReplayBuffer::new(3);
+        for i in 0..5 {
+            rb.push(t(i as f32));
+        }
+        assert_eq!(rb.len(), 3);
+        assert_eq!(rb.total_seen(), 5);
+        assert_eq!(rb.latest().unwrap().reward, 4.0);
+    }
+
+    #[test]
+    fn sample_shapes_match_artifact() {
+        let mut rb = ReplayBuffer::new(10);
+        for i in 0..4 {
+            rb.push(t(i as f32));
+        }
+        let mut rng = Rng::new(0);
+        let b = rb.sample(32, &mut rng);
+        assert!(b.validate(32, STATE_DIM, NUM_ACTIONS).is_ok());
+    }
+
+    #[test]
+    #[should_panic(expected = "empty replay")]
+    fn sample_empty_panics() {
+        let rb = ReplayBuffer::new(4);
+        let mut rng = Rng::new(0);
+        rb.sample(8, &mut rng);
+    }
+}

@@ -1,0 +1,49 @@
+//! The reward function (§5.1): based on the *relative*
+//! total_execution_time pvar — the improvement fraction over the
+//! reference run, clipped to [-1, 1].
+
+/// Reward for a run of `total_us` against the reference `reference_us`.
+pub fn reward(reference_us: f64, total_us: f64) -> f64 {
+    if reference_us <= 0.0 {
+        return 0.0;
+    }
+    ((reference_us - total_us) / reference_us).clamp(-1.0, 1.0)
+}
+
+/// A run is "penalized" (§5.4) if it is slower than the reference by
+/// more than this fraction; ensemble inference discards such runs.
+pub const PENALTY_THRESHOLD: f64 = 0.0;
+
+/// Did this run penalize performance relative to the reference?
+pub fn is_penalized(reference_us: f64, total_us: f64) -> bool {
+    reward(reference_us, total_us) < PENALTY_THRESHOLD
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn improvement_positive() {
+        assert!((reward(100.0, 80.0) - 0.2).abs() < 1e-12);
+        assert!(reward(100.0, 130.0) < 0.0);
+        assert_eq!(reward(100.0, 100.0), 0.0);
+    }
+
+    #[test]
+    fn clipping() {
+        assert_eq!(reward(100.0, 1e9), -1.0);
+        assert_eq!(reward(1e9, 0.0), 1.0);
+    }
+
+    #[test]
+    fn degenerate_reference() {
+        assert_eq!(reward(0.0, 50.0), 0.0);
+    }
+
+    #[test]
+    fn penalty_detection() {
+        assert!(is_penalized(100.0, 101.0));
+        assert!(!is_penalized(100.0, 99.0));
+    }
+}

@@ -1,0 +1,124 @@
+//! RL state layout — must match `python/compile/model.py`.
+//!
+//! The paper's state (§5.3): the MPICH `unexpected_recvq_length` pvar,
+//! user-defined timing pvars (win_flush / put / get averages and
+//! maxima), total application time, the number of processes, and (so
+//! the agent can tell configurations apart) the current normalized
+//! control-variable values plus the run index.
+
+use crate::metrics::stats::Summary;
+use crate::mpi_t::{CvarSet, PvarId, PvarStats};
+
+use super::relative::RelativeTracker;
+
+/// State feature count (compiled into the AOT artifacts).
+pub const STATE_DIM: usize = 18;
+
+/// Action count: 6 cvars × {up, down} + no-op.
+pub const NUM_ACTIONS: usize = 13;
+
+/// Compress a non-negative magnitude into ~[0, 1] smoothly.
+fn squash(v: f64) -> f32 {
+    ((1.0 + v.max(0.0)).ln() / 10.0).min(1.0) as f32
+}
+
+/// Build the 18-feature state vector for the Q-network.
+///
+/// Time-like pvars are *relative* (§5.1): expressed as the improvement
+/// fraction vs the reference run, so positive = faster than reference.
+pub fn build_state(
+    stats: &PvarStats,
+    reference: &RelativeTracker,
+    cvars: &CvarSet,
+    images: usize,
+    run_index: usize,
+    eager_fraction: f64,
+) -> [f32; STATE_DIM] {
+    let mut s = [0.0f32; STATE_DIM];
+    let zero = Summary::default();
+    let get = |id: usize| stats.get(PvarId(id)).copied().unwrap_or(zero);
+
+    // 0-1: unexpected queue (absolute level pvar, squashed)
+    let umq = get(0);
+    s[0] = squash(umq.mean);
+    s[1] = squash(umq.max);
+    // 2-7: flush/put/get timers, relative to reference
+    let flush = get(1);
+    s[2] = reference.relative(PvarId(1), flush.mean) as f32;
+    s[3] = reference.relative_max(PvarId(1), flush.max) as f32;
+    let put = get(2);
+    s[4] = reference.relative(PvarId(2), put.mean) as f32;
+    s[5] = reference.relative_max(PvarId(2), put.max) as f32;
+    let getp = get(3);
+    s[6] = reference.relative(PvarId(3), getp.mean) as f32;
+    s[7] = reference.relative_max(PvarId(3), getp.max) as f32;
+    // 8: total time, relative (the reward's sibling)
+    let total = get(4);
+    s[8] = reference.relative(PvarId(4), total.max) as f32;
+    // 9: scale
+    s[9] = (images.max(1) as f64).log2() as f32 / 11.0; // 2048 -> 1.0
+    // 10-15: current cvar values (normalized)
+    let norm = cvars.normalized();
+    s[10..16].copy_from_slice(&norm);
+    // 16: tuning progress
+    s[16] = (run_index as f32 / 20.0).min(2.0);
+    // 17: protocol mix actually used
+    s[17] = eager_fraction as f32;
+
+    for (i, v) in s.iter().enumerate() {
+        debug_assert!(v.is_finite(), "state feature {i} not finite");
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::metrics::stats::Summary;
+
+    fn stats_with(total: f64) -> PvarStats {
+        PvarStats {
+            summaries: vec![
+                (PvarId(0), Summary::of(&[2.0, 4.0])),
+                (PvarId(1), Summary::of(&[10.0])),
+                (PvarId(2), Summary::of(&[5.0])),
+                (PvarId(3), Summary::of(&[1.0])),
+                (PvarId(4), Summary::of(&[total])),
+            ],
+        }
+    }
+
+    #[test]
+    fn reference_run_gives_zero_relatives() {
+        let stats = stats_with(1000.0);
+        let mut reference = RelativeTracker::new();
+        reference.record_reference(&stats);
+        let s = build_state(&stats, &reference, &CvarSet::vanilla(), 256, 0, 0.5);
+        assert_eq!(s[2], 0.0);
+        assert_eq!(s[8], 0.0);
+        assert!(s[0] > 0.0);
+        assert_eq!(s[17], 0.5);
+    }
+
+    #[test]
+    fn faster_run_has_positive_relative_total() {
+        let reference_stats = stats_with(1000.0);
+        let mut reference = RelativeTracker::new();
+        reference.record_reference(&reference_stats);
+        let s = build_state(&stats_with(800.0), &reference, &CvarSet::vanilla(), 256, 3, 0.0);
+        assert!(s[8] > 0.0, "improvement must be positive: {}", s[8]);
+        let worse = build_state(&stats_with(1500.0), &reference, &CvarSet::vanilla(), 256, 3, 0.0);
+        assert!(worse[8] < 0.0);
+    }
+
+    #[test]
+    fn images_scale_feature() {
+        let stats = stats_with(1.0);
+        let mut r = RelativeTracker::new();
+        r.record_reference(&stats);
+        let s64 = build_state(&stats, &r, &CvarSet::vanilla(), 64, 0, 0.0);
+        let s2048 = build_state(&stats, &r, &CvarSet::vanilla(), 2048, 0, 0.0);
+        assert!(s64[9] < s2048[9]);
+        assert!((s2048[9] - 1.0).abs() < 1e-6);
+    }
+}

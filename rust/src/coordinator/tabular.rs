@@ -1,0 +1,148 @@
+//! Tabular Q-learning fallback: discretizes the state vector and keeps
+//! Q in a hash table — the paper's §3.1 "just keeping track of the
+//! Q-values of all the visited states in a table". Used for tests that
+//! must not depend on the AOT artifacts, and as the DQN-vs-tabular
+//! ablation.
+
+use std::collections::HashMap;
+
+use anyhow::Result;
+
+use crate::runtime::TrainBatch;
+
+use super::agent::Agent;
+use super::state::{NUM_ACTIONS, STATE_DIM};
+
+/// Discretized-state Q-table agent.
+pub struct TabularAgent {
+    q: HashMap<u64, [f32; NUM_ACTIONS]>,
+    /// Per-feature quantization buckets.
+    buckets: f32,
+    /// Q-learning step size (table update).
+    alpha: f32,
+    losses: Vec<f32>,
+}
+
+impl TabularAgent {
+    pub fn new() -> TabularAgent {
+        TabularAgent { q: HashMap::new(), buckets: 8.0, alpha: 0.25, losses: Vec::new() }
+    }
+
+    /// Hash a state into its discretization cell.
+    fn key(&self, state: &[f32]) -> u64 {
+        let mut h: u64 = 0xcbf29ce484222325;
+        for &v in state {
+            let cell = ((v.clamp(-2.0, 2.0) + 2.0) / 4.0 * self.buckets) as u64;
+            h ^= cell.wrapping_add(0x9e3779b97f4a7c15);
+            h = h.wrapping_mul(0x100000001b3);
+        }
+        h
+    }
+
+    pub fn states_seen(&self) -> usize {
+        self.q.len()
+    }
+}
+
+impl Default for TabularAgent {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Agent for TabularAgent {
+    fn name(&self) -> &'static str {
+        "tabular"
+    }
+
+    fn q_values(&mut self, state: &[f32; STATE_DIM]) -> Result<Vec<f32>> {
+        let key = self.key(state);
+        Ok(self.q.get(&key).map(|v| v.to_vec()).unwrap_or_else(|| vec![0.0; NUM_ACTIONS]))
+    }
+
+    fn train(&mut self, batch: &TrainBatch, _lr: f32, gamma: f32) -> Result<f32> {
+        let b = batch.rewards.len();
+        let mut total_sq = 0.0f32;
+        for i in 0..b {
+            let s = &batch.states[i * STATE_DIM..(i + 1) * STATE_DIM];
+            let s2 = &batch.next_states[i * STATE_DIM..(i + 1) * STATE_DIM];
+            let a = batch.actions_onehot[i * NUM_ACTIONS..(i + 1) * NUM_ACTIONS]
+                .iter()
+                .position(|&x| x > 0.5)
+                .unwrap_or(0);
+            let key2 = self.key(s2);
+            let max_next = self
+                .q
+                .get(&key2)
+                .map(|v| v.iter().cloned().fold(f32::NEG_INFINITY, f32::max))
+                .unwrap_or(0.0);
+            let target = batch.rewards[i] + gamma * (1.0 - batch.done[i]) * max_next;
+            let key = self.key(s);
+            let entry = self.q.entry(key).or_insert([0.0; NUM_ACTIONS]);
+            let td = target - entry[a];
+            entry[a] += self.alpha * td;
+            total_sq += td * td;
+        }
+        let loss = total_sq / b as f32;
+        self.losses.push(loss);
+        Ok(loss)
+    }
+
+    fn loss_history(&self) -> &[f32] {
+        &self.losses
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::actions::one_hot;
+
+    fn batch(s: [f32; STATE_DIM], a: usize, r: f32, s2: [f32; STATE_DIM]) -> TrainBatch {
+        TrainBatch {
+            states: s.to_vec(),
+            actions_onehot: one_hot(a).to_vec(),
+            rewards: vec![r],
+            next_states: s2.to_vec(),
+            done: vec![0.0],
+        }
+    }
+
+    #[test]
+    fn learns_action_values() {
+        let mut agent = TabularAgent::new();
+        let s = [0.1; STATE_DIM];
+        let s2 = [0.9; STATE_DIM];
+        for _ in 0..50 {
+            agent.train(&batch(s, 3, 1.0, s2), 0.0, 0.0).unwrap();
+        }
+        let q = agent.q_values(&s).unwrap();
+        assert!(q[3] > 0.9, "action 3 should approach reward 1.0: {:?}", q);
+        assert_eq!(q[0], 0.0);
+    }
+
+    #[test]
+    fn distinct_states_do_not_collide() {
+        let mut agent = TabularAgent::new();
+        let a = [0.0; STATE_DIM];
+        let mut b = [0.0; STATE_DIM];
+        b[5] = 1.5;
+        agent.train(&batch(a, 1, 1.0, a), 0.0, 0.0).unwrap();
+        assert_eq!(agent.q_values(&b).unwrap()[1], 0.0);
+        assert!(agent.states_seen() >= 1);
+    }
+
+    #[test]
+    fn loss_decreases_on_repetition() {
+        // With s' = s and gamma = 0.9 the fixed point is Q = 5.0; the TD
+        // error contracts by (1 - alpha(1-gamma)) per update.
+        let mut agent = TabularAgent::new();
+        let s = [0.2; STATE_DIM];
+        let first = agent.train(&batch(s, 0, 0.5, s), 0.0, 0.9).unwrap();
+        let mut last = first;
+        for _ in 0..300 {
+            last = agent.train(&batch(s, 0, 0.5, s), 0.0, 0.9).unwrap();
+        }
+        assert!(last < first * 0.01, "TD error should shrink: {first} -> {last}");
+    }
+}

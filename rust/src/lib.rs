@@ -1,0 +1,30 @@
+//! # AITuning — deep-RL tuning of run-time communication libraries
+//!
+//! Reproduction of *AITuning: Machine Learning-based Tuning Tool for
+//! Run-Time Communication Libraries* (Fanfarillo & Del Vento, NCAR, 2019)
+//! as a three-layer Rust + JAX + Pallas system:
+//!
+//! * **L3 (this crate)** — the AITuning coordinator (controller, episode
+//!   loop, replay buffer, ensemble inference), plus every substrate the
+//!   paper depends on, built from scratch: a discrete-event MPI-3
+//!   simulator ([`simmpi`]), an OpenCoarrays-like coarray runtime
+//!   ([`coarray`]), the MPI Tool Information Interface ([`mpi_t`]), the
+//!   paper's CAF workloads ([`workloads`]), and tuning baselines
+//!   ([`baselines`]).
+//! * **L2/L1 (python/, build-time only)** — the deep Q-network (JAX) and
+//!   its fused-dense Pallas kernel, AOT-lowered to HLO text under
+//!   `artifacts/` and executed from [`runtime`] via the PJRT C API.
+//!
+//! Python never runs on the tuning path: after `make artifacts`, the
+//! `aituning` binary is self-contained.
+
+pub mod baselines;
+pub mod coarray;
+pub mod convergence;
+pub mod coordinator;
+pub mod metrics;
+pub mod mpi_t;
+pub mod runtime;
+pub mod simmpi;
+pub mod util;
+pub mod workloads;

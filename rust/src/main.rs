@@ -1,0 +1,296 @@
+//! `aituning` — the leader binary.
+//!
+//! Subcommands:
+//!   tune        run the §5 tuning loop on one workload/scale
+//!   run         one instrumented episode under a given configuration
+//!   campaign    the §6 multi-workload training campaign
+//!   convergence the §5.5 synthetic-model convergence study
+//!   sweep       1-D sweep of one cvar (e.g. POLLS_BEFORE_YIELD, §6.2)
+//!   baselines   random/evolutionary/human baselines on a workload
+//!
+//! Run with no arguments for usage.
+
+use anyhow::{bail, Context, Result};
+
+use aituning::baselines::{human_tuned, Evolutionary, RandomSearch, Searcher};
+use aituning::convergence::{run_convergence, ConvergenceConfig, SyntheticModel};
+use aituning::coordinator::{run_episode, AgentKind, Controller, TuningConfig};
+use aituning::mpi_t::{CvarId, CvarSet, MpichRegistry, VariableRegistry};
+use aituning::simmpi::Machine;
+use aituning::util::args::Args;
+use aituning::util::bench::Table;
+use aituning::workloads::WorkloadKind;
+
+fn usage() -> ! {
+    eprintln!(
+        "aituning — ML-based tuning for run-time communication libraries
+USAGE:
+  aituning tune        --workload icar --images 256 [--runs 20] [--agent dqn|tabular]
+                       [--machine cheyenne|edison] [--seed N] [--noise F]
+  aituning run         --workload icar --images 64 [--cvar NAME=VALUE,NAME=VALUE]
+  aituning campaign    [--images 64,128,256] [--runs-per 20] [--agent dqn|tabular]
+  aituning convergence [--model parabola|coupled|bool] [--noise 0.3] [--runs 400]
+  aituning sweep       --cvar MPIR_CVAR_POLLS_BEFORE_YIELD --values 200,1000,1500
+                       --workload icar --images 512 [--base async]
+  aituning baselines   --workload icar --images 256 [--budget 20]
+"
+    );
+    std::process::exit(2);
+}
+
+fn main() -> Result<()> {
+    let args = Args::from_env();
+    match args.positional.first().map(|s| s.as_str()) {
+        Some("tune") => cmd_tune(&args),
+        Some("run") => cmd_run(&args),
+        Some("campaign") => cmd_campaign(&args),
+        Some("convergence") => cmd_convergence(&args),
+        Some("sweep") => cmd_sweep(&args),
+        Some("baselines") => cmd_baselines(&args),
+        _ => usage(),
+    }
+}
+
+fn parse_workload(args: &Args) -> Result<WorkloadKind> {
+    let name = args.get("workload").context("--workload required")?;
+    WorkloadKind::parse(name).with_context(|| format!("unknown workload {name:?}"))
+}
+
+fn parse_machine(args: &Args) -> Result<Machine> {
+    let name = args.get_or("machine", "cheyenne");
+    Machine::by_name(name).with_context(|| format!("unknown machine {name:?}"))
+}
+
+fn parse_agent(args: &Args) -> Result<AgentKind> {
+    match args.get_or("agent", "dqn") {
+        "dqn" => Ok(AgentKind::Dqn),
+        "dqn-target" => Ok(AgentKind::DqnTarget),
+        "tabular" => Ok(AgentKind::Tabular),
+        other => bail!("unknown agent {other:?} (dqn|dqn-target|tabular)"),
+    }
+}
+
+fn tuning_config(args: &Args) -> Result<TuningConfig> {
+    Ok(TuningConfig {
+        machine: parse_machine(args)?,
+        agent: parse_agent(args)?,
+        runs: args.usize_or("runs", 20)?,
+        noise: args.f64_or("noise", 0.02)?,
+        seed: args.u64_or("seed", 0)?,
+        ..TuningConfig::default()
+    })
+}
+
+fn cmd_tune(args: &Args) -> Result<()> {
+    let kind = parse_workload(args)?;
+    let images = args.usize_or("images", 256)?;
+    let cfg = tuning_config(args)?;
+    let mut ctl = Controller::new(cfg)?;
+    println!("tuning {} at {} images with {} agent...", kind.name(), images, ctl.agent_name());
+    let out = ctl.tune(kind, images)?;
+    println!("\nper-run log:");
+    let mut t = Table::new(&["run", "total (µs)", "reward", "action", "eps"]);
+    for r in &out.log.runs {
+        t.row(vec![
+            r.run_index.to_string(),
+            format!("{:.0}", r.total_time_us),
+            format!("{:+.4}", r.reward),
+            r.action
+                .map(|a| aituning::coordinator::Action::from_index(a).describe())
+                .unwrap_or_else(|| "reference".into()),
+            format!("{:.2}", r.epsilon),
+        ]);
+    }
+    t.print();
+    println!("\nreference: {:.0} µs", out.reference_us);
+    println!("best:      {:.0} µs  ({:+.1}%)", out.best_us, out.improvement() * 100.0);
+    println!("best cfg:     {}", out.best);
+    println!("ensemble cfg: {}", out.ensemble);
+    let ens = ctl.evaluate(kind, images, &out.ensemble, 3)?;
+    println!(
+        "ensemble eval: {:.0} µs ({:+.1}%)",
+        ens,
+        (out.reference_us - ens) / out.reference_us * 100.0
+    );
+    Ok(())
+}
+
+fn cmd_run(args: &Args) -> Result<()> {
+    let kind = parse_workload(args)?;
+    let images = args.usize_or("images", 64)?;
+    let machine = parse_machine(args)?;
+    let mut cvars = CvarSet::vanilla();
+    // --cvar NAME=VALUE[,NAME=VALUE...]
+    if let Some(spec) = args.get("cvar") {
+        for part in spec.split(',') {
+            let (name, value) = part.split_once('=').context("--cvar NAME=VALUE")?;
+            let d = MpichRegistry
+                .cvar_by_name(name)
+                .with_context(|| format!("unknown cvar {name:?}"))?;
+            cvars.set(d.id, value.parse().context("cvar value must be integer")?);
+        }
+    }
+    let r = run_episode(
+        kind,
+        images,
+        &machine,
+        &cvars,
+        args.f64_or("noise", 0.02)?,
+        args.u64_or("seed", 42)?,
+        args.u64_or("run-seed", 1)?,
+    )?;
+    println!("workload={} images={images} machine={}", kind.name(), machine.name);
+    println!("config: {cvars}");
+    println!("total: {:.0} µs", r.total_time_us);
+    println!(
+        "eager/rdv: {}/{}  umq max: {:.0}  flush mean: {:.1} µs  yields: {}",
+        r.raw.eager_msgs,
+        r.raw.rendezvous_msgs,
+        r.raw.umq_summary().max,
+        r.raw.flush_summary().mean,
+        r.raw.yields
+    );
+    Ok(())
+}
+
+fn cmd_campaign(args: &Args) -> Result<()> {
+    let images: Vec<usize> = args
+        .get_or("images", "64,128,256")
+        .split(',')
+        .map(|s| s.parse().context("bad --images list"))
+        .collect::<Result<_>>()?;
+    let cfg = TuningConfig { runs: args.usize_or("runs-per", 20)?, ..tuning_config(args)? };
+    let mut ctl = Controller::new(cfg)?;
+    let mut t = Table::new(&["workload", "images", "reference (µs)", "best (µs)", "improvement"]);
+    for kind in WorkloadKind::TRAINING {
+        for &n in &images {
+            let out = ctl.tune(kind, n)?;
+            t.row(vec![
+                kind.name().to_string(),
+                n.to_string(),
+                format!("{:.0}", out.reference_us),
+                format!("{:.0}", out.best_us),
+                format!("{:+.1}%", out.improvement() * 100.0),
+            ]);
+        }
+    }
+    t.print();
+    println!("\ntotal runs: {}, replay size: {}", ctl.lifetime_runs(), ctl.replay_len());
+    Ok(())
+}
+
+fn cmd_convergence(args: &Args) -> Result<()> {
+    let model = match args.get_or("model", "parabola") {
+        "parabola" => SyntheticModel::Parabola { cvar: CvarId(4), best: 2600, curvature: 12.0 },
+        "coupled" => SyntheticModel::CoupledParabola {
+            int_cvar: CvarId(5),
+            bool_cvar: CvarId(0),
+            best_off: 131_072,
+            // 192 action steps above the default (reachable in-budget).
+            best_on: 327_680,
+            bool_gain: 0.25,
+            curvature: 4.0,
+        },
+        "bool" => SyntheticModel::BoolStep { cvar: CvarId(0), gain: 0.3 },
+        other => bail!("unknown model {other:?}"),
+    };
+    let cfg = ConvergenceConfig {
+        agent: parse_agent(args)?,
+        runs: args.usize_or("runs", 400)?,
+        noise: args.f64_or("noise", 0.0)?,
+        seed: args.u64_or("seed", 0)?,
+        ..ConvergenceConfig::default()
+    };
+    let rep = run_convergence(&model, &cfg)?;
+    println!("model: {model:?}");
+    println!("noise: {:.0}%  runs: {}", cfg.noise * 100.0, cfg.runs);
+    println!("best distance to known optimum: {:.4}", rep.best_distance);
+    println!("best mean-time ratio vs optimum: {:.4}", rep.best_ratio);
+    println!("best cfg: {}", rep.best_cvars);
+    Ok(())
+}
+
+fn cmd_sweep(args: &Args) -> Result<()> {
+    let kind = parse_workload(args)?;
+    let images = args.usize_or("images", 512)?;
+    let machine = parse_machine(args)?;
+    let cvar_name = args.get("cvar").context("--cvar required")?;
+    let d = MpichRegistry
+        .cvar_by_name(cvar_name)
+        .with_context(|| format!("unknown cvar {cvar_name:?}"))?
+        .clone();
+    let values: Vec<i64> = args
+        .get("values")
+        .context("--values required (comma list)")?
+        .split(',')
+        .map(|s| s.parse().context("bad value"))
+        .collect::<Result<_>>()?;
+    let mut base = CvarSet::vanilla();
+    if args.get_or("base", "") == "async" {
+        base.set(CvarId(0), 1);
+    }
+    let noise = args.f64_or("noise", 0.02)?;
+    let seed = args.u64_or("seed", 42)?;
+    let reps = args.usize_or("reps", 3)?;
+    let mut t = Table::new(&[cvar_name, "total (µs)", "vs first"]);
+    let mut first = None;
+    for &v in &values {
+        let mut cv = base.clone();
+        cv.set(d.id, v);
+        let mut total = 0.0;
+        for r in 0..reps {
+            total +=
+                run_episode(kind, images, &machine, &cv, noise, seed, r as u64 + 1)?.total_time_us;
+        }
+        let mean = total / reps as f64;
+        let base_t = *first.get_or_insert(mean);
+        t.row(vec![
+            v.to_string(),
+            format!("{mean:.0}"),
+            format!("{:+.2}%", (base_t - mean) / base_t * 100.0),
+        ]);
+    }
+    t.print();
+    Ok(())
+}
+
+fn cmd_baselines(args: &Args) -> Result<()> {
+    let kind = parse_workload(args)?;
+    let images = args.usize_or("images", 256)?;
+    let budget = args.usize_or("budget", 20)?;
+    let cfg = tuning_config(args)?;
+    let mut ctl = Controller::new(TuningConfig { agent: AgentKind::Tabular, ..cfg.clone() })?;
+
+    let vanilla = ctl.evaluate(kind, images, &CvarSet::vanilla(), 3)?;
+    let human = ctl.evaluate(kind, images, &human_tuned(), 3)?;
+
+    let mut t = Table::new(&["method", "total (µs)", "vs vanilla"]);
+    let pct = |v: f64| format!("{:+.1}%", (vanilla - v) / vanilla * 100.0);
+    t.row(vec!["vanilla".into(), format!("{vanilla:.0}"), "+0.0%".into()]);
+    t.row(vec!["human (eager x10)".into(), format!("{human:.0}"), pct(human)]);
+
+    let mut random = RandomSearch::new(cfg.seed + 1);
+    let (_, rand_t) = {
+        let mut eval = |cv: &CvarSet| ctl.evaluate(kind, images, cv, 1);
+        random.search(budget, &mut eval)?
+    };
+    t.row(vec!["random".into(), format!("{rand_t:.0}"), pct(rand_t)]);
+
+    let mut evo = Evolutionary::new(cfg.seed + 2);
+    let (_, evo_t) = {
+        let mut eval = |cv: &CvarSet| ctl.evaluate(kind, images, cv, 1);
+        evo.search(budget, &mut eval)?
+    };
+    t.row(vec!["evolutionary".into(), format!("{evo_t:.0}"), pct(evo_t)]);
+
+    // AITuning itself, same budget.
+    let mut dqn_ctl = Controller::new(TuningConfig { runs: budget, ..cfg })?;
+    let out = dqn_ctl.tune(kind, images)?;
+    t.row(vec![
+        format!("aituning ({})", dqn_ctl.agent_name()),
+        format!("{:.0}", out.best_us),
+        pct(out.best_us),
+    ]);
+    t.print();
+    Ok(())
+}

@@ -1,0 +1,7 @@
+//! Run statistics, summaries and experiment recording.
+
+pub mod recorder;
+pub mod stats;
+
+pub use recorder::{RunRecord, TuningLog};
+pub use stats::Summary;

@@ -1,0 +1,137 @@
+//! Experiment recording: per-run records and tuning logs, exportable as
+//! JSON (for EXPERIMENTS.md) or CSV.
+
+use crate::mpi_t::{CvarSet, PvarStats};
+use crate::util::json::{arr, num, obj, s, Json};
+
+/// Everything recorded about one application run during tuning.
+#[derive(Debug, Clone)]
+pub struct RunRecord {
+    pub run_index: usize,
+    pub cvars: CvarSet,
+    pub total_time_us: f64,
+    pub reward: f64,
+    pub action: Option<usize>,
+    pub epsilon: f64,
+    pub pvars: PvarStats,
+}
+
+/// Accumulated log of one tuning campaign.
+#[derive(Debug, Default, Clone)]
+pub struct TuningLog {
+    pub workload: String,
+    pub images: usize,
+    pub runs: Vec<RunRecord>,
+}
+
+impl TuningLog {
+    pub fn new(workload: &str, images: usize) -> TuningLog {
+        TuningLog { workload: workload.to_string(), images, runs: Vec::new() }
+    }
+
+    pub fn push(&mut self, rec: RunRecord) {
+        self.runs.push(rec);
+    }
+
+    pub fn best_run(&self) -> Option<&RunRecord> {
+        self.runs
+            .iter()
+            .min_by(|a, b| a.total_time_us.total_cmp(&b.total_time_us))
+    }
+
+    /// Reference (first) run time, if any.
+    pub fn reference_time_us(&self) -> Option<f64> {
+        self.runs.first().map(|r| r.total_time_us)
+    }
+
+    /// Relative improvement of the best run over the reference.
+    pub fn best_improvement(&self) -> Option<f64> {
+        let reference = self.reference_time_us()?;
+        let best = self.best_run()?.total_time_us;
+        Some((reference - best) / reference)
+    }
+
+    pub fn to_json(&self) -> Json {
+        obj(vec![
+            ("workload", s(&self.workload)),
+            ("images", num(self.images as f64)),
+            (
+                "runs",
+                arr(self.runs.iter().map(|r| {
+                    obj(vec![
+                        ("run", num(r.run_index as f64)),
+                        ("total_time_us", num(r.total_time_us)),
+                        ("reward", num(r.reward)),
+                        ("epsilon", num(r.epsilon)),
+                        (
+                            "action",
+                            r.action.map(|a| num(a as f64)).unwrap_or(Json::Null),
+                        ),
+                        ("cvars", s(&r.cvars.to_string())),
+                    ])
+                })),
+            ),
+        ])
+    }
+
+    /// CSV rows: run,total_time_us,reward,action,epsilon
+    pub fn to_csv(&self) -> String {
+        let mut out = String::from("run,total_time_us,reward,action,epsilon\n");
+        for r in &self.runs {
+            out.push_str(&format!(
+                "{},{:.3},{:.6},{},{:.4}\n",
+                r.run_index,
+                r.total_time_us,
+                r.reward,
+                r.action.map(|a| a.to_string()).unwrap_or_default(),
+                r.epsilon
+            ));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rec(i: usize, t: f64) -> RunRecord {
+        RunRecord {
+            run_index: i,
+            cvars: CvarSet::vanilla(),
+            total_time_us: t,
+            reward: 0.0,
+            action: Some(1),
+            epsilon: 0.5,
+            pvars: PvarStats::default(),
+        }
+    }
+
+    #[test]
+    fn best_and_improvement() {
+        let mut log = TuningLog::new("icar", 256);
+        log.push(rec(0, 100.0));
+        log.push(rec(1, 80.0));
+        log.push(rec(2, 90.0));
+        assert_eq!(log.best_run().unwrap().run_index, 1);
+        assert!((log.best_improvement().unwrap() - 0.2).abs() < 1e-12);
+    }
+
+    #[test]
+    fn json_and_csv_shapes() {
+        let mut log = TuningLog::new("icar", 256);
+        log.push(rec(0, 100.0));
+        let j = log.to_json();
+        assert_eq!(j.at(&["images"]).unwrap().as_usize().unwrap(), 256);
+        let csv = log.to_csv();
+        assert_eq!(csv.lines().count(), 2);
+        assert!(csv.starts_with("run,"));
+    }
+
+    #[test]
+    fn empty_log_has_no_best() {
+        let log = TuningLog::new("x", 1);
+        assert!(log.best_run().is_none());
+        assert!(log.best_improvement().is_none());
+    }
+}

@@ -1,0 +1,101 @@
+//! Scalar summary statistics (avg, max, min, median, std, count).
+//!
+//! The paper collects "statistics of the values ... (e.g. average, max,
+//! min, median)" at `MPI_Finalize` time (§5.1); this is that summary.
+
+/// Summary statistics over a sample of f64 observations.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Summary {
+    pub count: usize,
+    pub mean: f64,
+    pub max: f64,
+    pub min: f64,
+    pub median: f64,
+    pub std: f64,
+}
+
+impl Default for Summary {
+    fn default() -> Self {
+        Summary { count: 0, mean: 0.0, max: 0.0, min: 0.0, median: 0.0, std: 0.0 }
+    }
+}
+
+impl Summary {
+    /// Summarize a sample; empty samples give the zero summary.
+    pub fn of(values: &[f64]) -> Summary {
+        if values.is_empty() {
+            return Summary::default();
+        }
+        let n = values.len() as f64;
+        let mean = values.iter().sum::<f64>() / n;
+        let var = values.iter().map(|v| (v - mean) * (v - mean)).sum::<f64>() / n;
+        let mut sorted: Vec<f64> = values.to_vec();
+        sorted.sort_by(|a, b| a.total_cmp(b));
+        let median = if sorted.len() % 2 == 1 {
+            sorted[sorted.len() / 2]
+        } else {
+            0.5 * (sorted[sorted.len() / 2 - 1] + sorted[sorted.len() / 2])
+        };
+        Summary {
+            count: values.len(),
+            mean,
+            max: *sorted.last().unwrap(),
+            min: sorted[0],
+            median,
+            std: var.sqrt(),
+        }
+    }
+}
+
+/// Median of a sample (used by ensemble inference, §5.4).
+pub fn median_i64(values: &mut Vec<i64>) -> i64 {
+    assert!(!values.is_empty(), "median of empty sample");
+    values.sort_unstable();
+    values[values.len() / 2]
+}
+
+/// Geometric mean (used for cross-workload campaign reporting).
+pub fn geomean(values: &[f64]) -> f64 {
+    if values.is_empty() {
+        return 0.0;
+    }
+    (values.iter().map(|v| v.max(1e-300).ln()).sum::<f64>() / values.len() as f64).exp()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn summary_basic() {
+        let s = Summary::of(&[4.0, 1.0, 3.0, 2.0]);
+        assert_eq!(s.count, 4);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.max, 4.0);
+        assert_eq!(s.median, 2.5);
+        assert!((s.mean - 2.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn summary_empty_is_zero() {
+        assert_eq!(Summary::of(&[]), Summary::default());
+    }
+
+    #[test]
+    fn median_odd_even() {
+        assert_eq!(Summary::of(&[1.0, 2.0, 9.0]).median, 2.0);
+        assert_eq!(median_i64(&mut vec![5, 1, 3]), 3);
+    }
+
+    #[test]
+    fn geomean_of_equal_values() {
+        assert!((geomean(&[2.0, 2.0, 2.0]) - 2.0).abs() < 1e-12);
+        assert_eq!(geomean(&[]), 0.0);
+    }
+
+    #[test]
+    fn std_of_constant_is_zero() {
+        let s = Summary::of(&[3.0; 10]);
+        assert_eq!(s.std, 0.0);
+    }
+}

@@ -1,0 +1,137 @@
+//! Collections: the per-implementation bundles of control + performance
+//! variables (§5.1): "a specific CollectionCreator is instantiated ...
+//! The actual collection (in our case MPICHCollectionCreator) has
+//! predefined lists of control and performance variables".
+
+use super::cvar::{CvarDescriptor, MPICH_CVARS};
+use super::probe::Probe;
+use super::pvar::{PvarDescriptor, PvarStats, UserDefinedPvar, MPICH_PVARS};
+use crate::metrics::stats::Summary;
+
+/// A live collection for one run: descriptors + probes + observations.
+#[derive(Debug)]
+pub struct Collection {
+    pub layer: String,
+    pub cvars: Vec<CvarDescriptor>,
+    pub pvars: Vec<UserDefinedPvar>,
+    pub probes: Vec<Probe>,
+}
+
+impl Collection {
+    /// Record a validated observation for pvar `idx`.
+    pub fn register(&mut self, idx: usize, value: f64) -> bool {
+        match self.probes[idx].check(value) {
+            Ok(v) => {
+                self.pvars[idx].register_value(v);
+                true
+            }
+            Err(_) => false,
+        }
+    }
+
+    /// End-of-run statistics for every pvar, in registry order (§5.1:
+    /// collected in the `MPI_Finalize` wrapper).
+    pub fn finalize_stats(&self) -> PvarStats {
+        PvarStats {
+            summaries: self
+                .pvars
+                .iter()
+                .map(|p| (p.descriptor.id, p.summarize()))
+                .collect(),
+        }
+    }
+
+    /// Reset observations for the next run (probes keep their counters).
+    pub fn reset(&mut self) {
+        for p in &mut self.pvars {
+            p.reset();
+        }
+    }
+
+    /// Per-pvar summaries paired with names (reporting).
+    pub fn named_summaries(&self) -> Vec<(&'static str, Summary)> {
+        self.pvars
+            .iter()
+            .map(|p| (p.descriptor.name, p.summarize()))
+            .collect()
+    }
+}
+
+/// Factory trait: one implementation per communication library.
+pub trait CollectionCreator {
+    /// Library name this creator handles (e.g. "MPICH").
+    fn layer(&self) -> &'static str;
+
+    /// Predefined cvar list.
+    fn control_variables(&self) -> Vec<CvarDescriptor>;
+
+    /// Predefined pvar list.
+    fn performance_variables(&self) -> Vec<PvarDescriptor>;
+
+    /// Build a live collection with probes attached.
+    fn create(&self) -> Collection {
+        let pvars: Vec<UserDefinedPvar> = self
+            .performance_variables()
+            .into_iter()
+            .map(UserDefinedPvar::new)
+            .collect();
+        let probes = pvars.iter().map(|p| Probe::new(p.descriptor.clone())).collect();
+        Collection {
+            layer: self.layer().to_string(),
+            cvars: self.control_variables(),
+            pvars,
+            probes,
+        }
+    }
+}
+
+/// The MPICH-3.2.1 collection creator from the paper.
+#[derive(Debug, Default)]
+pub struct MpichCollectionCreator;
+
+impl CollectionCreator for MpichCollectionCreator {
+    fn layer(&self) -> &'static str {
+        "MPICH"
+    }
+
+    fn control_variables(&self) -> Vec<CvarDescriptor> {
+        MPICH_CVARS.to_vec()
+    }
+
+    fn performance_variables(&self) -> Vec<PvarDescriptor> {
+        MPICH_PVARS.to_vec()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mpich_collection_has_paper_variables() {
+        let c = MpichCollectionCreator.create();
+        assert_eq!(c.layer, "MPICH");
+        assert_eq!(c.cvars.len(), 6);
+        assert_eq!(c.pvars.len(), 5);
+        assert_eq!(c.probes.len(), 5);
+        let names: Vec<_> = c.cvars.iter().map(|d| d.name).collect();
+        assert!(names.contains(&"MPIR_CVAR_POLLS_BEFORE_YIELD"));
+    }
+
+    #[test]
+    fn register_validates_through_probe() {
+        let mut c = MpichCollectionCreator.create();
+        assert!(c.register(1, 5.0)); // flush time, valid
+        assert!(!c.register(1, -2.0)); // negative time rejected
+        let stats = c.finalize_stats();
+        assert_eq!(stats.summaries[1].1.count, 1);
+    }
+
+    #[test]
+    fn reset_clears_observations() {
+        let mut c = MpichCollectionCreator.create();
+        c.register(2, 1.0);
+        c.reset();
+        assert_eq!(c.finalize_stats().summaries[2].1.count, 0);
+    }
+}

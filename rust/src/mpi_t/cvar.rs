@@ -1,0 +1,262 @@
+//! Control variables: the knobs AITuning tunes.
+//!
+//! The six MPICH-3.2.1 cvars from the paper (§5.3), each with its domain
+//! and the fixed action "step" AITuning uses to change it (§5.2).
+
+use std::fmt;
+
+/// Identifier for a control variable (index into the registry order).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct CvarId(pub usize);
+
+/// Value domain of a control variable.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum CvarDomain {
+    /// Boolean toggle (0/1), e.g. `MPIR_CVAR_ASYNC_PROGRESS`.
+    Bool,
+    /// Integer range with a fixed tuning step, e.g.
+    /// `MPIR_CVAR_CH3_EAGER_MAX_MSG_SIZE` stepping by 1024.
+    Int { lo: i64, hi: i64, step: i64 },
+}
+
+/// Static description of a control variable.
+#[derive(Debug, Clone)]
+pub struct CvarDescriptor {
+    pub id: CvarId,
+    pub name: &'static str,
+    pub domain: CvarDomain,
+    pub default: i64,
+    pub description: &'static str,
+}
+
+impl CvarDescriptor {
+    /// Clamp a raw value into this cvar's domain.
+    pub fn clamp(&self, v: i64) -> i64 {
+        match self.domain {
+            CvarDomain::Bool => i64::from(v != 0),
+            CvarDomain::Int { lo, hi, .. } => v.clamp(lo, hi),
+        }
+    }
+
+    /// One tuning step up/down (paper §5.2: fixed per-cvar step;
+    /// booleans toggle).
+    pub fn step(&self, current: i64, up: bool) -> i64 {
+        match self.domain {
+            CvarDomain::Bool => i64::from(current == 0),
+            CvarDomain::Int { step, .. } => {
+                self.clamp(current + if up { step } else { -step })
+            }
+        }
+    }
+
+    /// Normalize a value into [0, 1] for the RL state vector.
+    pub fn normalize(&self, v: i64) -> f32 {
+        match self.domain {
+            CvarDomain::Bool => v as f32,
+            CvarDomain::Int { lo, hi, .. } => {
+                if hi == lo {
+                    0.0
+                } else {
+                    (v - lo) as f32 / (hi - lo) as f32
+                }
+            }
+        }
+    }
+}
+
+/// The MPICH-3.2.1 control-variable set the paper tunes (§5.3).
+pub const MPICH_CVARS: &[CvarDescriptor] = &[
+    CvarDescriptor {
+        id: CvarId(0),
+        name: "MPIR_CVAR_ASYNC_PROGRESS",
+        domain: CvarDomain::Bool,
+        default: 0,
+        description: "helper thread makes MPI communication progress asynchronously",
+    },
+    CvarDescriptor {
+        id: CvarId(1),
+        name: "MPIR_CVAR_CH3_ENABLE_HCOLL",
+        domain: CvarDomain::Bool,
+        default: 0,
+        description: "enable optimized (hierarchical) collective algorithms",
+    },
+    CvarDescriptor {
+        id: CvarId(2),
+        name: "MPIR_CVAR_CH3_RMA_DELAY_ISSUING_FOR_PIGGYBACKING",
+        domain: CvarDomain::Bool,
+        default: 0,
+        description: "delay issuing small RMA ops to piggyback them on lock/flush messages",
+    },
+    CvarDescriptor {
+        id: CvarId(3),
+        name: "MPIR_CVAR_CH3_RMA_OP_PIGGYBACK_LOCK_DATA_SIZE",
+        domain: CvarDomain::Int { lo: 0, hi: 262_144, step: 4096 },
+        default: 65_536,
+        description: "max data size piggybacked on an RMA lock message",
+    },
+    CvarDescriptor {
+        id: CvarId(4),
+        name: "MPIR_CVAR_POLLS_BEFORE_YIELD",
+        domain: CvarDomain::Int { lo: 0, hi: 100_000, step: 100 },
+        default: 1000,
+        description: "progress-engine polls before yielding the core",
+    },
+    CvarDescriptor {
+        id: CvarId(5),
+        name: "MPIR_CVAR_CH3_EAGER_MAX_MSG_SIZE",
+        domain: CvarDomain::Int { lo: 1024, hi: 8 * 1024 * 1024, step: 1024 },
+        default: 131_072,
+        description: "message-size threshold switching from eager to rendezvous protocol",
+    },
+];
+
+/// Number of tunable cvars (state/action layout depends on this).
+pub const NUM_CVARS: usize = 6;
+
+/// A concrete assignment of values to all control variables.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub struct CvarSet {
+    values: [i64; NUM_CVARS],
+}
+
+/// Typed view of one value (for display).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum CvarValue {
+    Bool(bool),
+    Int(i64),
+}
+
+impl CvarSet {
+    /// All defaults — the "vanilla" MPICH configuration of the paper.
+    pub fn vanilla() -> CvarSet {
+        let mut values = [0i64; NUM_CVARS];
+        for (i, d) in MPICH_CVARS.iter().enumerate() {
+            values[i] = d.default;
+        }
+        CvarSet { values }
+    }
+
+    pub fn get(&self, id: CvarId) -> i64 {
+        self.values[id.0]
+    }
+
+    /// Set with domain clamping.
+    pub fn set(&mut self, id: CvarId, v: i64) {
+        self.values[id.0] = MPICH_CVARS[id.0].clamp(v);
+    }
+
+    pub fn typed(&self, id: CvarId) -> CvarValue {
+        match MPICH_CVARS[id.0].domain {
+            CvarDomain::Bool => CvarValue::Bool(self.values[id.0] != 0),
+            CvarDomain::Int { .. } => CvarValue::Int(self.values[id.0]),
+        }
+    }
+
+    // Typed accessors used by the simulator hot path.
+
+    pub fn async_progress(&self) -> bool {
+        self.values[0] != 0
+    }
+
+    pub fn enable_hcoll(&self) -> bool {
+        self.values[1] != 0
+    }
+
+    pub fn delay_piggyback(&self) -> bool {
+        self.values[2] != 0
+    }
+
+    pub fn piggyback_size(&self) -> i64 {
+        self.values[3]
+    }
+
+    pub fn polls_before_yield(&self) -> i64 {
+        self.values[4]
+    }
+
+    pub fn eager_max(&self) -> i64 {
+        self.values[5]
+    }
+
+    /// Normalized values for the RL state vector, registry order.
+    pub fn normalized(&self) -> [f32; NUM_CVARS] {
+        let mut out = [0.0f32; NUM_CVARS];
+        for (i, d) in MPICH_CVARS.iter().enumerate() {
+            out[i] = d.normalize(self.values[i]);
+        }
+        out
+    }
+
+    pub fn as_slice(&self) -> &[i64; NUM_CVARS] {
+        &self.values
+    }
+}
+
+impl Default for CvarSet {
+    fn default() -> Self {
+        Self::vanilla()
+    }
+}
+
+impl fmt::Display for CvarSet {
+    /// Compact `NAME=value` pairs with the `MPIR_CVAR_` prefix stripped.
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        for (i, d) in MPICH_CVARS.iter().enumerate() {
+            if i > 0 {
+                write!(f, " ")?;
+            }
+            let short = d.name.strip_prefix("MPIR_CVAR_").unwrap_or(d.name);
+            write!(f, "{short}={}", self.values[i])?;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn vanilla_matches_defaults() {
+        let v = CvarSet::vanilla();
+        assert!(!v.async_progress());
+        assert_eq!(v.eager_max(), 131_072);
+        assert_eq!(v.polls_before_yield(), 1000);
+    }
+
+    #[test]
+    fn set_clamps_to_domain() {
+        let mut v = CvarSet::vanilla();
+        v.set(CvarId(5), -5);
+        assert_eq!(v.eager_max(), 1024);
+        v.set(CvarId(5), i64::MAX);
+        assert_eq!(v.eager_max(), 8 * 1024 * 1024);
+        v.set(CvarId(0), 17);
+        assert_eq!(v.get(CvarId(0)), 1);
+    }
+
+    #[test]
+    fn step_respects_bounds_and_toggles() {
+        let d = &MPICH_CVARS[5];
+        assert_eq!(d.step(131_072, true), 132_096);
+        assert_eq!(d.step(1024, false), 1024); // clamped at lo
+        let b = &MPICH_CVARS[0];
+        assert_eq!(b.step(0, true), 1);
+        assert_eq!(b.step(1, true), 0); // toggle regardless of direction
+    }
+
+    #[test]
+    fn normalize_in_unit_range() {
+        for d in MPICH_CVARS {
+            let n = d.normalize(d.default);
+            assert!((0.0..=1.0).contains(&n), "{}: {n}", d.name);
+        }
+    }
+
+    #[test]
+    fn display_is_compact() {
+        let s = CvarSet::vanilla().to_string();
+        assert!(s.contains("ASYNC_PROGRESS=0"), "{s}");
+        assert!(s.contains("CH3_EAGER_MAX_MSG_SIZE=131072"), "{s}");
+    }
+}

@@ -1,0 +1,25 @@
+//! MPI Tool Information Interface (MPI_T) — the introspection layer.
+//!
+//! Faithful reconstruction of the paper's §4/§5.1 architecture: *control
+//! variables* steer the MPI implementation and must be set **before**
+//! `MPI_Init`; *performance variables* (queue lengths, wait times) are
+//! read through handles inside a *session* created **after** `MPI_Init`.
+//! `Probe`s validate user-defined performance values (datatype, range)
+//! before they enter a `Collection`, and the PMPI shim lets AITuning hook
+//! init/finalize/flush without touching the runtime's source.
+
+mod collection;
+mod cvar;
+mod pmpi;
+mod probe;
+mod pvar;
+mod registry;
+mod session;
+
+pub use collection::{Collection, CollectionCreator, MpichCollectionCreator};
+pub use cvar::{CvarDescriptor, CvarDomain, CvarId, CvarSet, CvarValue, MPICH_CVARS, NUM_CVARS};
+pub use pmpi::{NullHooks, PmpiHooks, PmpiLayer};
+pub use probe::{Probe, ProbeError};
+pub use pvar::{PvarClass, PvarDescriptor, PvarId, PvarStats, UserDefinedPvar, MPICH_PVARS, NUM_PVARS};
+pub use registry::{registry_for, MpichRegistry, VariableRegistry};
+pub use session::{InitState, Session, SessionError};

@@ -1,0 +1,143 @@
+//! PMPI interposition shim (§5.1, Listings 1 and 3).
+//!
+//! The paper plugs AITuning into OpenCoarrays *without changing its
+//! source* by wrapping `MPI_Init_thread`, `MPI_Win_flush`, and
+//! `MPI_Finalize` through the MPI profiling interface. Here the simulated
+//! coarray runtime calls through [`PmpiLayer`], which invokes the
+//! registered [`PmpiHooks`] around each intercepted call — same design
+//! property: the runtime knows nothing about AITuning.
+
+use super::session::Session;
+
+/// Hooks AITuning registers around intercepted MPI calls.
+pub trait PmpiHooks {
+    /// Called at the top of the `MPI_Init_thread` wrapper, **before**
+    /// `PMPI_Init_thread` — where `AITuning_start` and
+    /// `AITuning_setControlVariables` run (Listing 1).
+    fn before_init(&mut self, session: &mut Session);
+
+    /// Called after `PMPI_Init_thread` — where
+    /// `AITuning_setPerformanceVariables` runs.
+    fn after_init(&mut self, session: &mut Session);
+
+    /// Called with the measured duration of each `MPI_Win_flush`
+    /// (Listing 3: `flush_time_p->registerValue(...)`).
+    fn on_win_flush(&mut self, duration_us: f64);
+
+    /// Called with each put/get completion time (user-defined pvars).
+    fn on_put(&mut self, duration_us: f64);
+    fn on_get(&mut self, duration_us: f64);
+
+    /// Sampled unexpected-message-queue length (the MPICH pvar).
+    fn on_umq_sample(&mut self, length: usize);
+
+    /// Called in the `MPI_Finalize` wrapper with total time — where the
+    /// whole machine-learning step happens in the paper.
+    fn on_finalize(&mut self, session: &mut Session, total_time_us: f64);
+}
+
+/// No-op hooks: the runtime without AITuning attached (the PMPI shim
+/// composes with these when tuning is disabled).
+#[derive(Debug, Default)]
+pub struct NullHooks;
+
+impl PmpiHooks for NullHooks {
+    fn before_init(&mut self, _: &mut Session) {}
+    fn after_init(&mut self, _: &mut Session) {}
+    fn on_win_flush(&mut self, _: f64) {}
+    fn on_put(&mut self, _: f64) {}
+    fn on_get(&mut self, _: f64) {}
+    fn on_umq_sample(&mut self, _: usize) {}
+    fn on_finalize(&mut self, _: &mut Session, _: f64) {}
+}
+
+/// The interposition layer: owns the session and dispatches wrappers.
+pub struct PmpiLayer<'h> {
+    pub session: Session,
+    hooks: &'h mut dyn PmpiHooks,
+}
+
+impl<'h> PmpiLayer<'h> {
+    pub fn new(hooks: &'h mut dyn PmpiHooks) -> PmpiLayer<'h> {
+        PmpiLayer { session: Session::new(), hooks }
+    }
+
+    /// The `MPI_Init_thread` wrapper: hooks before and after PMPI init.
+    pub fn mpi_init_thread(&mut self) -> Result<(), super::session::SessionError> {
+        self.hooks.before_init(&mut self.session);
+        self.session.init()?;
+        self.hooks.after_init(&mut self.session);
+        Ok(())
+    }
+
+    pub fn record_win_flush(&mut self, duration_us: f64) {
+        self.hooks.on_win_flush(duration_us);
+    }
+
+    pub fn record_put(&mut self, duration_us: f64) {
+        self.hooks.on_put(duration_us);
+    }
+
+    pub fn record_get(&mut self, duration_us: f64) {
+        self.hooks.on_get(duration_us);
+    }
+
+    pub fn record_umq_sample(&mut self, length: usize) {
+        self.hooks.on_umq_sample(length);
+    }
+
+    /// The `MPI_Finalize` wrapper.
+    pub fn mpi_finalize(
+        &mut self,
+        total_time_us: f64,
+    ) -> Result<(), super::session::SessionError> {
+        self.session.finalize()?;
+        self.hooks.on_finalize(&mut self.session, total_time_us);
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mpi_t::cvar::CvarId;
+
+    #[derive(Default)]
+    struct Recorder {
+        events: Vec<String>,
+    }
+
+    impl PmpiHooks for Recorder {
+        fn before_init(&mut self, session: &mut Session) {
+            // AITuning sets cvars here — must still be legal.
+            session.cvar_write(CvarId(0), 1).unwrap();
+            self.events.push("before_init".into());
+        }
+        fn after_init(&mut self, session: &mut Session) {
+            assert!(session.create_pvar_session().is_ok());
+            self.events.push("after_init".into());
+        }
+        fn on_win_flush(&mut self, d: f64) {
+            self.events.push(format!("flush {d}"));
+        }
+        fn on_put(&mut self, _: f64) {}
+        fn on_get(&mut self, _: f64) {}
+        fn on_umq_sample(&mut self, _: usize) {}
+        fn on_finalize(&mut self, _: &mut Session, t: f64) {
+            self.events.push(format!("finalize {t}"));
+        }
+    }
+
+    #[test]
+    fn wrapper_ordering_matches_listing1() {
+        let mut hooks = Recorder::default();
+        {
+            let mut layer = PmpiLayer::new(&mut hooks);
+            layer.mpi_init_thread().unwrap();
+            assert!(layer.session.effective_cvars().async_progress());
+            layer.record_win_flush(3.5);
+            layer.mpi_finalize(100.0).unwrap();
+        }
+        assert_eq!(hooks.events, vec!["before_init", "after_init", "flush 3.5", "finalize 100"]);
+    }
+}

@@ -1,0 +1,92 @@
+//! Probes: validated readers of performance values (§5.1, Listing 2/3).
+//!
+//! "This class makes sure that the performance variables read using
+//! MPI_T or any other way (user defined included), respect certain
+//! criteria, like datatype, precision, and range."
+
+use thiserror::Error;
+
+use super::pvar::{PvarClass, PvarDescriptor};
+
+/// Probe validation failure.
+#[derive(Debug, Error, PartialEq)]
+pub enum ProbeError {
+    #[error("pvar {name}: value {value} outside range [{lo}, {hi}]")]
+    OutOfRange { name: &'static str, value: f64, lo: f64, hi: f64 },
+    #[error("pvar {name}: non-finite value")]
+    NonFinite { name: &'static str },
+    #[error("pvar {name}: counter/level must be integral, got {value}")]
+    NotIntegral { name: &'static str, value: f64 },
+}
+
+/// A probe bound to one pvar descriptor.
+#[derive(Debug, Clone)]
+pub struct Probe {
+    pub descriptor: PvarDescriptor,
+    accepted: usize,
+    rejected: usize,
+}
+
+impl Probe {
+    pub fn new(descriptor: PvarDescriptor) -> Probe {
+        Probe { descriptor, accepted: 0, rejected: 0 }
+    }
+
+    /// Validate one observation; returns the value if acceptable.
+    pub fn check(&mut self, value: f64) -> Result<f64, ProbeError> {
+        let name = self.descriptor.name;
+        if !value.is_finite() {
+            self.rejected += 1;
+            return Err(ProbeError::NonFinite { name });
+        }
+        let (lo, hi) = self.descriptor.range;
+        if value < lo || value > hi {
+            self.rejected += 1;
+            return Err(ProbeError::OutOfRange { name, value, lo, hi });
+        }
+        if matches!(self.descriptor.class, PvarClass::Level | PvarClass::Counter)
+            && value.fract() != 0.0
+        {
+            self.rejected += 1;
+            return Err(ProbeError::NotIntegral { name, value });
+        }
+        self.accepted += 1;
+        Ok(value)
+    }
+
+    pub fn accepted(&self) -> usize {
+        self.accepted
+    }
+
+    pub fn rejected(&self) -> usize {
+        self.rejected
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mpi_t::pvar::MPICH_PVARS;
+
+    #[test]
+    fn accepts_valid_timer() {
+        let mut p = Probe::new(MPICH_PVARS[1].clone());
+        assert_eq!(p.check(12.5), Ok(12.5));
+        assert_eq!(p.accepted(), 1);
+    }
+
+    #[test]
+    fn rejects_out_of_range_and_nan() {
+        let mut p = Probe::new(MPICH_PVARS[1].clone());
+        assert!(matches!(p.check(-1.0), Err(ProbeError::OutOfRange { .. })));
+        assert!(matches!(p.check(f64::NAN), Err(ProbeError::NonFinite { .. })));
+        assert_eq!(p.rejected(), 2);
+    }
+
+    #[test]
+    fn level_must_be_integral() {
+        let mut p = Probe::new(MPICH_PVARS[0].clone()); // unexpected_recvq_length
+        assert_eq!(p.check(3.0), Ok(3.0));
+        assert!(matches!(p.check(3.5), Err(ProbeError::NotIntegral { .. })));
+    }
+}

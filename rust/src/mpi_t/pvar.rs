@@ -1,0 +1,171 @@
+//! Performance variables: what AITuning observes.
+//!
+//! The paper uses one MPICH pvar (`unexpected_recvq_length`) plus several
+//! *user-defined* pvars registered through probes (MPI_Win_flush / put /
+//! get times and total application time, §5.3). Time-like pvars can be
+//! declared **Relative** (§5.1): the first run stores the absolute value
+//! as a reference and later runs report `reference − current`, so a
+//! positive value reads as an improvement.
+
+use crate::metrics::stats::Summary;
+
+/// Identifier for a performance variable.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct PvarId(pub usize);
+
+/// MPI_T performance-variable classes (subset used here).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PvarClass {
+    /// Queue length at sample time (e.g. unexpected message queue).
+    Level,
+    /// Elapsed time of an operation, microseconds.
+    Timer,
+    /// Monotonic event count.
+    Counter,
+}
+
+/// Static description of a performance variable.
+#[derive(Debug, Clone)]
+pub struct PvarDescriptor {
+    pub id: PvarId,
+    pub name: &'static str,
+    pub class: PvarClass,
+    /// Paper §5.1: relative pvars are standardized against the first run.
+    pub relative: bool,
+    /// Valid range for probe validation.
+    pub range: (f64, f64),
+}
+
+/// The pvar set for MPICH-3.2.1 per the paper (§5.3): the MPICH-exposed
+/// unexpected queue length plus user-defined timing pvars.
+pub const MPICH_PVARS: &[PvarDescriptor] = &[
+    PvarDescriptor {
+        id: PvarId(0),
+        name: "unexpected_recvq_length",
+        class: PvarClass::Level,
+        relative: false,
+        range: (0.0, 1e9),
+    },
+    PvarDescriptor {
+        id: PvarId(1),
+        name: "win_flush_time_us",
+        class: PvarClass::Timer,
+        relative: true,
+        range: (0.0, 1e12),
+    },
+    PvarDescriptor {
+        id: PvarId(2),
+        name: "put_time_us",
+        class: PvarClass::Timer,
+        relative: true,
+        range: (0.0, 1e12),
+    },
+    PvarDescriptor {
+        id: PvarId(3),
+        name: "get_time_us",
+        class: PvarClass::Timer,
+        relative: true,
+        range: (0.0, 1e12),
+    },
+    PvarDescriptor {
+        id: PvarId(4),
+        name: "total_time_us",
+        class: PvarClass::Timer,
+        relative: true,
+        range: (0.0, 1e15),
+    },
+];
+
+/// Number of pvars in the MPICH collection.
+pub const NUM_PVARS: usize = 5;
+
+/// A user-defined performance variable (§5.1, Listing 2): values are
+/// registered through a [`crate::mpi_t::Probe`] during the run, and the
+/// end-of-run statistics feed the RL state.
+#[derive(Debug, Clone)]
+pub struct UserDefinedPvar {
+    pub descriptor: PvarDescriptor,
+    values: Vec<f64>,
+}
+
+impl UserDefinedPvar {
+    pub fn new(descriptor: PvarDescriptor) -> UserDefinedPvar {
+        UserDefinedPvar { descriptor, values: Vec::new() }
+    }
+
+    /// Record one observation (Listing 3: `registerValue`).
+    pub fn register_value(&mut self, v: f64) {
+        self.values.push(v);
+    }
+
+    pub fn values(&self) -> &[f64] {
+        &self.values
+    }
+
+    /// End-of-run statistics (avg, max, min, median — §5.1).
+    pub fn summarize(&self) -> Summary {
+        Summary::of(&self.values)
+    }
+
+    pub fn reset(&mut self) {
+        self.values.clear();
+    }
+}
+
+/// End-of-run statistics for every pvar in a collection, in registry
+/// order. This is the paper's "state representation passed to the AI
+/// component" before standardization.
+#[derive(Debug, Clone, Default)]
+pub struct PvarStats {
+    pub summaries: Vec<(PvarId, Summary)>,
+}
+
+impl PvarStats {
+    pub fn get(&self, id: PvarId) -> Option<&Summary> {
+        self.summaries.iter().find(|(pid, _)| *pid == id).map(|(_, s)| s)
+    }
+
+    /// Total application time (the reward's basis), if recorded.
+    pub fn total_time_us(&self) -> Option<f64> {
+        self.get(PvarId(4)).map(|s| s.max)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn register_and_summarize() {
+        let mut p = UserDefinedPvar::new(MPICH_PVARS[1].clone());
+        for v in [1.0, 3.0, 2.0] {
+            p.register_value(v);
+        }
+        let s = p.summarize();
+        assert_eq!(s.max, 3.0);
+        assert_eq!(s.min, 1.0);
+        assert!((s.mean - 2.0).abs() < 1e-12);
+        assert_eq!(s.median, 2.0);
+        p.reset();
+        assert!(p.values().is_empty());
+    }
+
+    #[test]
+    fn pvar_table_is_consistent() {
+        assert_eq!(MPICH_PVARS.len(), NUM_PVARS);
+        for (i, d) in MPICH_PVARS.iter().enumerate() {
+            assert_eq!(d.id.0, i);
+            assert!(d.range.0 <= d.range.1);
+        }
+        // total_time must be relative (paper: cannot be absolute)
+        assert!(MPICH_PVARS[4].relative);
+    }
+
+    #[test]
+    fn stats_lookup() {
+        let mut st = PvarStats::default();
+        st.summaries.push((PvarId(4), Summary::of(&[5.0, 7.0])));
+        assert_eq!(st.total_time_us(), Some(7.0));
+        assert!(st.get(PvarId(0)).is_none());
+    }
+}

@@ -1,0 +1,112 @@
+//! Variable discovery: the MPI_T introspection entry point.
+//!
+//! MPI_T deliberately leaves the variable set implementation-specific
+//! (§4: "it is not possible to define variables that all MPI
+//! implementations must provide"); discovery is how a tool learns what a
+//! given library exposes. [`VariableRegistry`] is that discovery surface.
+
+use anyhow::{bail, Result};
+
+use super::cvar::{CvarDescriptor, CvarId, MPICH_CVARS};
+use super::pvar::{PvarDescriptor, MPICH_PVARS};
+
+/// Discovery interface over one library's MPI_T variables.
+pub trait VariableRegistry {
+    /// `MPI_T_cvar_get_num`-alike.
+    fn num_cvars(&self) -> usize;
+
+    /// `MPI_T_cvar_get_info`-alike.
+    fn cvar_info(&self, index: usize) -> Option<&CvarDescriptor>;
+
+    /// Look a cvar up by name (tools address variables by name since
+    /// indices are implementation-specific).
+    fn cvar_by_name(&self, name: &str) -> Option<&CvarDescriptor>;
+
+    fn num_pvars(&self) -> usize;
+
+    fn pvar_info(&self, index: usize) -> Option<&PvarDescriptor>;
+
+    fn pvar_by_name(&self, name: &str) -> Option<&PvarDescriptor>;
+}
+
+/// MPICH-3.2.1's registry.
+#[derive(Debug, Default)]
+pub struct MpichRegistry;
+
+impl VariableRegistry for MpichRegistry {
+    fn num_cvars(&self) -> usize {
+        MPICH_CVARS.len()
+    }
+
+    fn cvar_info(&self, index: usize) -> Option<&CvarDescriptor> {
+        MPICH_CVARS.get(index)
+    }
+
+    fn cvar_by_name(&self, name: &str) -> Option<&CvarDescriptor> {
+        MPICH_CVARS.iter().find(|d| d.name == name)
+    }
+
+    fn num_pvars(&self) -> usize {
+        MPICH_PVARS.len()
+    }
+
+    fn pvar_info(&self, index: usize) -> Option<&PvarDescriptor> {
+        MPICH_PVARS.get(index)
+    }
+
+    fn pvar_by_name(&self, name: &str) -> Option<&PvarDescriptor> {
+        MPICH_PVARS.iter().find(|d| d.name == name)
+    }
+}
+
+/// Resolve a registry for a communication layer string, as
+/// `AITuning_start("MPICH")` does in the paper (Listing 1).
+pub fn registry_for(layer: &str) -> Result<Box<dyn VariableRegistry>> {
+    match layer {
+        "MPICH" => Ok(Box::new(MpichRegistry)),
+        other => bail!(
+            "no MPI_T registry for layer {other:?} (supported: MPICH); \
+             GASNet and OpenMPI collections are future work in the paper"
+        ),
+    }
+}
+
+/// Convenience: the CvarId for a cvar name, via the MPICH registry.
+pub fn cvar_id(name: &str) -> Option<CvarId> {
+    MpichRegistry.cvar_by_name(name).map(|d| d.id)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn discovery_counts() {
+        let r = MpichRegistry;
+        assert_eq!(r.num_cvars(), 6);
+        assert_eq!(r.num_pvars(), 5);
+        assert!(r.cvar_info(5).is_some());
+        assert!(r.cvar_info(6).is_none());
+    }
+
+    #[test]
+    fn lookup_by_name() {
+        let r = MpichRegistry;
+        let d = r.cvar_by_name("MPIR_CVAR_CH3_EAGER_MAX_MSG_SIZE").unwrap();
+        assert_eq!(d.id, CvarId(5));
+        assert!(r.pvar_by_name("unexpected_recvq_length").is_some());
+        assert!(r.cvar_by_name("NOPE").is_none());
+    }
+
+    #[test]
+    fn registry_for_layers() {
+        assert!(registry_for("MPICH").is_ok());
+        assert!(registry_for("GASNet").is_err());
+    }
+
+    #[test]
+    fn cvar_id_helper() {
+        assert_eq!(cvar_id("MPIR_CVAR_ASYNC_PROGRESS"), Some(CvarId(0)));
+        assert_eq!(cvar_id("NOPE"), None);
+    }
+}

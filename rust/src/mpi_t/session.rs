@@ -1,0 +1,176 @@
+//! MPI_T sessions and init-ordering enforcement.
+//!
+//! The paper stresses two ordering rules it discovered (§4.1/§5.1):
+//! *control variables* must be modified **before** `MPI_Init`, and
+//! *performance-variable* handles/sessions must be created **after**
+//! `MPI_Init`. [`InitState`] enforces both; [`Session`] scopes pvar
+//! access the way MPI_T sessions isolate readers.
+
+use thiserror::Error;
+
+use super::cvar::{CvarId, CvarSet};
+use super::pvar::{PvarId, UserDefinedPvar};
+
+/// Errors from violating MPI_T ordering or handle rules.
+#[derive(Debug, Error, PartialEq)]
+pub enum SessionError {
+    #[error("control variable {0:?} modified after MPI_Init")]
+    CvarAfterInit(CvarId),
+    #[error("performance session created before MPI_Init")]
+    SessionBeforeInit,
+    #[error("performance variable {0:?} read outside a session")]
+    NoSession(PvarId),
+    #[error("MPI_Init called twice")]
+    DoubleInit,
+    #[error("MPI_Finalize before MPI_Init")]
+    FinalizeBeforeInit,
+}
+
+/// Lifecycle of the (simulated) MPI library within one run.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum InitState {
+    PreInit,
+    Initialized,
+    Finalized,
+}
+
+/// The MPI_T access layer for one application run: owns the cvar set
+/// (frozen at init) and the pvar sessions.
+#[derive(Debug)]
+pub struct Session {
+    state: InitState,
+    cvars: CvarSet,
+    /// Sessions created after init; each owns its user-defined pvars.
+    open_sessions: usize,
+}
+
+impl Session {
+    pub fn new() -> Session {
+        Session { state: InitState::PreInit, cvars: CvarSet::vanilla(), open_sessions: 0 }
+    }
+
+    pub fn state(&self) -> InitState {
+        self.state
+    }
+
+    /// Write a control variable; only legal before `MPI_Init` (§5.1:
+    /// "it is important to modify all the control variables values
+    /// before calling MPI_Init").
+    pub fn cvar_write(&mut self, id: CvarId, value: i64) -> Result<(), SessionError> {
+        if self.state != InitState::PreInit {
+            return Err(SessionError::CvarAfterInit(id));
+        }
+        self.cvars.set(id, value);
+        Ok(())
+    }
+
+    /// Bulk-apply a configuration before init.
+    pub fn set_all_cvars(&mut self, set: &CvarSet) -> Result<(), SessionError> {
+        if self.state != InitState::PreInit {
+            return Err(SessionError::CvarAfterInit(CvarId(0)));
+        }
+        self.cvars = set.clone();
+        Ok(())
+    }
+
+    /// `MPI_Init` — freezes the cvar set.
+    pub fn init(&mut self) -> Result<(), SessionError> {
+        match self.state {
+            InitState::PreInit => {
+                self.state = InitState::Initialized;
+                Ok(())
+            }
+            _ => Err(SessionError::DoubleInit),
+        }
+    }
+
+    /// Create a pvar session (only after init).
+    pub fn create_pvar_session(&mut self) -> Result<PvarSessionHandle, SessionError> {
+        if self.state != InitState::Initialized {
+            return Err(SessionError::SessionBeforeInit);
+        }
+        self.open_sessions += 1;
+        Ok(PvarSessionHandle { index: self.open_sessions - 1, pvars: Vec::new() })
+    }
+
+    /// `MPI_Finalize`.
+    pub fn finalize(&mut self) -> Result<(), SessionError> {
+        match self.state {
+            InitState::Initialized => {
+                self.state = InitState::Finalized;
+                Ok(())
+            }
+            _ => Err(SessionError::FinalizeBeforeInit),
+        }
+    }
+
+    /// The frozen configuration the (simulated) library runs with.
+    pub fn effective_cvars(&self) -> &CvarSet {
+        &self.cvars
+    }
+}
+
+impl Default for Session {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// A pvar session: isolates a set of user-defined pvars to one part of
+/// the code (§4.1: "a session provides a way to isolate the use of a
+/// performance variable").
+#[derive(Debug)]
+pub struct PvarSessionHandle {
+    pub index: usize,
+    pub pvars: Vec<UserDefinedPvar>,
+}
+
+impl PvarSessionHandle {
+    /// Register a user-defined pvar; returns its handle id in-session.
+    pub fn add_pvar(&mut self, pvar: UserDefinedPvar) -> PvarId {
+        self.pvars.push(pvar);
+        PvarId(self.pvars.len() - 1)
+    }
+
+    pub fn pvar_mut(&mut self, id: PvarId) -> Option<&mut UserDefinedPvar> {
+        self.pvars.get_mut(id.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mpi_t::pvar::MPICH_PVARS;
+
+    #[test]
+    fn cvar_write_only_pre_init() {
+        let mut s = Session::new();
+        assert!(s.cvar_write(CvarId(5), 262_144).is_ok());
+        s.init().unwrap();
+        assert_eq!(
+            s.cvar_write(CvarId(5), 1024),
+            Err(SessionError::CvarAfterInit(CvarId(5)))
+        );
+        assert_eq!(s.effective_cvars().eager_max(), 262_144);
+    }
+
+    #[test]
+    fn pvar_session_only_post_init() {
+        let mut s = Session::new();
+        assert_eq!(s.create_pvar_session().unwrap_err(), SessionError::SessionBeforeInit);
+        s.init().unwrap();
+        let mut h = s.create_pvar_session().unwrap();
+        let id = h.add_pvar(UserDefinedPvar::new(MPICH_PVARS[1].clone()));
+        assert!(h.pvar_mut(id).is_some());
+    }
+
+    #[test]
+    fn lifecycle_enforced() {
+        let mut s = Session::new();
+        assert_eq!(s.finalize(), Err(SessionError::FinalizeBeforeInit));
+        s.init().unwrap();
+        assert_eq!(s.init(), Err(SessionError::DoubleInit));
+        s.finalize().unwrap();
+        assert_eq!(s.finalize(), Err(SessionError::FinalizeBeforeInit));
+    }
+}

@@ -1,0 +1,194 @@
+//! Artifact manifest: shapes/dtypes of every AOT-lowered entry point.
+//!
+//! `python/compile/aot.py` writes `artifacts/manifest.json` alongside the
+//! HLO text; we validate it at load time so a stale artifact directory
+//! fails fast with a clear message instead of a shape error deep in PJRT.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+use crate::util::json::Json;
+
+/// Shape + dtype of one tensor in an artifact signature.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TensorSpec {
+    pub shape: Vec<usize>,
+    pub dtype: String,
+}
+
+impl TensorSpec {
+    pub fn element_count(&self) -> usize {
+        self.shape.iter().product::<usize>().max(1)
+    }
+
+    fn from_json(v: &Json) -> Result<TensorSpec> {
+        let shape = v
+            .at(&["shape"])?
+            .as_arr()
+            .context("shape not an array")?
+            .iter()
+            .map(|d| d.as_usize().context("non-integer dim"))
+            .collect::<Result<Vec<_>>>()?;
+        let dtype = v.at(&["dtype"])?.as_str().context("dtype not a string")?.to_string();
+        Ok(TensorSpec { shape, dtype })
+    }
+}
+
+/// One entry point (HLO module) in the artifact directory.
+#[derive(Debug, Clone)]
+pub struct ArtifactSpec {
+    pub file: String,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+}
+
+/// Parsed `manifest.json`: model constants + per-artifact signatures.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub state_dim: usize,
+    pub num_actions: usize,
+    pub hidden: Vec<usize>,
+    pub replay_batch: usize,
+    pub artifacts: BTreeMap<String, ArtifactSpec>,
+    pub dir: PathBuf,
+}
+
+impl Manifest {
+    /// Load and validate `<dir>/manifest.json`.
+    pub fn load<P: AsRef<Path>>(dir: P) -> Result<Manifest> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {} (run `make artifacts`)", path.display()))?;
+        let v = Json::parse(&text).with_context(|| format!("parsing {}", path.display()))?;
+
+        let mut artifacts = BTreeMap::new();
+        for (name, entry) in v.at(&["artifacts"])?.as_obj().context("artifacts not an object")? {
+            let parse_specs = |key: &str| -> Result<Vec<TensorSpec>> {
+                entry
+                    .at(&[key])?
+                    .as_arr()
+                    .with_context(|| format!("{key} not an array"))?
+                    .iter()
+                    .map(TensorSpec::from_json)
+                    .collect()
+            };
+            artifacts.insert(
+                name.clone(),
+                ArtifactSpec {
+                    file: entry.at(&["file"])?.as_str().context("file")?.to_string(),
+                    inputs: parse_specs("inputs")?,
+                    outputs: parse_specs("outputs")?,
+                },
+            );
+        }
+
+        let usize_at = |key: &str| -> Result<usize> {
+            v.at(&[key])?.as_usize().with_context(|| format!("{key} not an integer"))
+        };
+        let man = Manifest {
+            state_dim: usize_at("state_dim")?,
+            num_actions: usize_at("num_actions")?,
+            hidden: v
+                .at(&["hidden"])?
+                .as_arr()
+                .context("hidden")?
+                .iter()
+                .map(|d| d.as_usize().context("hidden dim"))
+                .collect::<Result<Vec<_>>>()?,
+            replay_batch: usize_at("replay_batch")?,
+            artifacts,
+            dir,
+        };
+        man.validate()?;
+        Ok(man)
+    }
+
+    /// Cross-check the manifest against the layout the coordinator
+    /// compiled in (`crate::coordinator::state` constants).
+    fn validate(&self) -> Result<()> {
+        use crate::coordinator::state::{NUM_ACTIONS, STATE_DIM};
+        anyhow::ensure!(
+            self.state_dim == STATE_DIM,
+            "artifact state_dim {} != coordinator STATE_DIM {STATE_DIM}; \
+             re-run `make artifacts`",
+            self.state_dim
+        );
+        anyhow::ensure!(
+            self.num_actions == NUM_ACTIONS,
+            "artifact num_actions {} != coordinator NUM_ACTIONS {NUM_ACTIONS}; \
+             re-run `make artifacts`",
+            self.num_actions
+        );
+        for required in ["q_forward_1", "q_forward_b", "q_train"] {
+            anyhow::ensure!(
+                self.artifacts.contains_key(required),
+                "manifest missing artifact {required:?}"
+            );
+        }
+        Ok(())
+    }
+
+    pub fn artifact(&self, name: &str) -> Result<&ArtifactSpec> {
+        self.artifacts
+            .get(name)
+            .with_context(|| format!("unknown artifact {name:?}"))
+    }
+
+    pub fn hlo_path(&self, name: &str) -> Result<PathBuf> {
+        Ok(self.dir.join(&self.artifact(name)?.file))
+    }
+}
+
+/// Locate the artifacts directory: `$AITUNING_ARTIFACTS` or `./artifacts`
+/// relative to the crate root / current dir.
+pub fn default_artifacts_dir() -> PathBuf {
+    if let Ok(dir) = std::env::var("AITUNING_ARTIFACTS") {
+        return PathBuf::from(dir);
+    }
+    let cwd = PathBuf::from("artifacts");
+    if cwd.exists() {
+        return cwd;
+    }
+    // Fall back to the manifest dir relative to the compiled crate, so
+    // `cargo test` works from any working directory.
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tensor_spec_parses() {
+        let v = Json::parse(r#"{"shape": [2, 3], "dtype": "float32"}"#).unwrap();
+        let t = TensorSpec::from_json(&v).unwrap();
+        assert_eq!(t.shape, vec![2, 3]);
+        assert_eq!(t.element_count(), 6);
+        assert_eq!(t.dtype, "float32");
+    }
+
+    #[test]
+    fn scalar_spec_counts_one() {
+        let v = Json::parse(r#"{"shape": [], "dtype": "float32"}"#).unwrap();
+        assert_eq!(TensorSpec::from_json(&v).unwrap().element_count(), 1);
+    }
+
+    #[test]
+    fn manifest_load_real_artifacts() {
+        let dir = default_artifacts_dir();
+        if !dir.join("manifest.json").exists() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let man = Manifest::load(&dir).unwrap();
+        // 3 paper-faithful entry points + the Q-target ablation.
+        assert_eq!(man.artifacts.len(), 4);
+        assert!(man.artifacts.contains_key("q_train_target"));
+        let train = man.artifact("q_train").unwrap();
+        assert_eq!(train.inputs.len(), 26);
+        assert_eq!(train.outputs.len(), 20);
+    }
+}

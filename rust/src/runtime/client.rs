@@ -1,0 +1,96 @@
+//! Thin wrapper over the `xla` crate's PJRT CPU client.
+//!
+//! Interchange format is HLO *text* (not serialized `HloModuleProto`):
+//! jax ≥ 0.5 emits protos with 64-bit instruction ids which the bundled
+//! xla_extension 0.5.1 rejects; the text parser reassigns ids.
+
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+/// Process-wide PJRT client; create once, share by reference.
+pub struct RuntimeClient {
+    client: xla::PjRtClient,
+}
+
+impl RuntimeClient {
+    /// Construct the PJRT CPU client.
+    pub fn cpu() -> Result<RuntimeClient> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(RuntimeClient { client })
+    }
+
+    pub fn platform_name(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load an HLO-text artifact and compile it to an executable.
+    pub fn load_hlo_text<P: AsRef<Path>>(&self, path: P) -> Result<Executable> {
+        let path = path.as_ref();
+        let proto = xla::HloModuleProto::from_text_file(path)
+            .with_context(|| format!("parsing HLO text at {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling {}", path.display()))?;
+        Ok(Executable { exe, name: path.display().to_string() })
+    }
+}
+
+/// A compiled HLO module ready to execute.
+pub struct Executable {
+    exe: xla::PjRtLoadedExecutable,
+    name: String,
+}
+
+impl Executable {
+    /// Execute with literal inputs; returns the flattened output tuple.
+    ///
+    /// All our artifacts are lowered with `return_tuple=True`, so the
+    /// single device output is a tuple literal which we decompose.
+    pub fn run(&self, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        let refs: Vec<&xla::Literal> = inputs.iter().collect();
+        self.run_refs(&refs)
+    }
+
+    /// Execute with borrowed inputs (hot path: callers keep long-lived
+    /// literals — e.g. cached Q-net parameters — and avoid re-uploading
+    /// them every call).
+    pub fn run_refs(&self, inputs: &[&xla::Literal]) -> Result<Vec<xla::Literal>> {
+        let result = self
+            .exe
+            .execute::<&xla::Literal>(inputs)
+            .with_context(|| format!("executing {}", self.name))?;
+        let literal = result[0][0]
+            .to_literal_sync()
+            .with_context(|| format!("fetching result of {}", self.name))?;
+        literal
+            .to_tuple()
+            .with_context(|| format!("decomposing result tuple of {}", self.name))
+    }
+
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+}
+
+/// Build a rank-2 f32 literal from a flat row-major slice.
+pub fn literal_f32_2d(data: &[f32], rows: usize, cols: usize) -> Result<xla::Literal> {
+    anyhow::ensure!(
+        data.len() == rows * cols,
+        "literal shape mismatch: {} elements for [{rows},{cols}]",
+        data.len()
+    );
+    Ok(xla::Literal::vec1(data).reshape(&[rows as i64, cols as i64])?)
+}
+
+/// Build a rank-1 f32 literal.
+pub fn literal_f32_1d(data: &[f32]) -> xla::Literal {
+    xla::Literal::vec1(data)
+}
+
+/// Build a scalar f32 literal.
+pub fn literal_f32_scalar(v: f32) -> xla::Literal {
+    xla::Literal::from(v)
+}

@@ -1,0 +1,17 @@
+//! PJRT runtime: load AOT-compiled HLO text artifacts and execute them.
+//!
+//! This is the only bridge between the Rust coordinator and the L2/L1
+//! compute: `make artifacts` lowers the JAX Q-network (with its Pallas
+//! fused-dense kernel) to `artifacts/*.hlo.txt`; this module compiles
+//! those modules once on the PJRT CPU client and executes them on the
+//! tuning path. Python never runs at tuning time.
+
+mod artifact;
+mod client;
+mod params;
+mod qnet;
+
+pub use artifact::{default_artifacts_dir, ArtifactSpec, Manifest, TensorSpec};
+pub use client::{Executable, RuntimeClient};
+pub use params::{layer_dims as params_layer_dims, AdamState, QParams};
+pub use qnet::{argmax, QNet, TrainBatch};

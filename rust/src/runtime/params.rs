@@ -1,0 +1,163 @@
+//! Q-network parameter and optimizer-state containers.
+//!
+//! The train-step artifact is fully functional (params in → params out),
+//! so Rust owns all state between steps as flat `Vec<f32>` buffers in the
+//! canonical order `(w1, b1, w2, b2, w3, b3)` matching
+//! `python/compile/model.py::param_specs()`.
+
+use anyhow::Result;
+
+use crate::util::rng::Rng;
+
+/// Layer dims of the Q-net MLP; must match `model.LAYER_DIMS`.
+pub fn layer_dims(state_dim: usize, hidden: &[usize], num_actions: usize) -> Vec<(usize, usize)> {
+    let mut dims = Vec::new();
+    let mut prev = state_dim;
+    for &h in hidden {
+        dims.push((prev, h));
+        prev = h;
+    }
+    dims.push((prev, num_actions));
+    dims
+}
+
+/// Flat parameter set: weights and biases in calling order.
+#[derive(Debug, Clone, PartialEq)]
+pub struct QParams {
+    /// `[(data, shape)]` in `(w1, b1, w2, b2, w3, b3)` order.
+    pub tensors: Vec<(Vec<f32>, Vec<usize>)>,
+}
+
+impl QParams {
+    /// He-uniform init matching `model.init_params` semantics (not
+    /// bit-identical — different PRNG — but same distribution family).
+    pub fn init(state_dim: usize, hidden: &[usize], num_actions: usize, rng: &mut Rng) -> QParams {
+        let mut tensors = Vec::new();
+        for (d_in, d_out) in layer_dims(state_dim, hidden, num_actions) {
+            let w: Vec<f32> = (0..d_in * d_out).map(|_| rng.he_uniform(d_in)).collect();
+            tensors.push((w, vec![d_in, d_out]));
+            tensors.push((vec![0.0; d_out], vec![d_out]));
+        }
+        QParams { tensors }
+    }
+
+    /// Zeroed clone with identical shapes (Adam moment buffers).
+    pub fn zeros_like(&self) -> QParams {
+        QParams {
+            tensors: self
+                .tensors
+                .iter()
+                .map(|(data, shape)| (vec![0.0; data.len()], shape.clone()))
+                .collect(),
+        }
+    }
+
+    /// Build from flat per-tensor data with explicit shapes.
+    pub fn from_flat(tensors: Vec<(Vec<f32>, Vec<usize>)>) -> Result<QParams> {
+        for (data, shape) in &tensors {
+            let want: usize = shape.iter().product();
+            anyhow::ensure!(
+                data.len() == want,
+                "tensor data {} != shape product {want}",
+                data.len()
+            );
+        }
+        Ok(QParams { tensors })
+    }
+
+    /// Convert every tensor to an XLA literal (reshaped to its rank).
+    pub fn to_literals(&self) -> Result<Vec<xla::Literal>> {
+        self.tensors
+            .iter()
+            .map(|(data, shape)| {
+                let lit = xla::Literal::vec1(data);
+                if shape.len() == 1 {
+                    Ok(lit)
+                } else {
+                    let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+                    Ok(lit.reshape(&dims)?)
+                }
+            })
+            .collect()
+    }
+
+    /// Rebuild from output literals (shape metadata kept from self).
+    pub fn update_from_literals(&mut self, literals: &[xla::Literal]) -> Result<()> {
+        anyhow::ensure!(
+            literals.len() == self.tensors.len(),
+            "expected {} tensors, got {}",
+            self.tensors.len(),
+            literals.len()
+        );
+        for ((data, _), lit) in self.tensors.iter_mut().zip(literals) {
+            let v = lit.to_vec::<f32>()?;
+            anyhow::ensure!(v.len() == data.len(), "tensor size changed across update");
+            *data = v;
+        }
+        Ok(())
+    }
+
+    pub fn num_parameters(&self) -> usize {
+        self.tensors.iter().map(|(d, _)| d.len()).sum()
+    }
+
+    /// Mean absolute value across all parameters (drift diagnostics).
+    pub fn mean_abs(&self) -> f32 {
+        let (sum, n) = self.tensors.iter().fold((0.0f64, 0usize), |(s, n), (d, _)| {
+            (s + d.iter().map(|x| x.abs() as f64).sum::<f64>(), n + d.len())
+        });
+        (sum / n.max(1) as f64) as f32
+    }
+}
+
+/// Adam optimizer state: first/second moments + step count.
+#[derive(Debug, Clone)]
+pub struct AdamState {
+    pub m: QParams,
+    pub v: QParams,
+    pub step: f32,
+}
+
+impl AdamState {
+    pub fn new(params: &QParams) -> AdamState {
+        AdamState { m: params.zeros_like(), v: params.zeros_like(), step: 0.0 }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn layer_dims_chain() {
+        assert_eq!(layer_dims(18, &[64, 64], 13), vec![(18, 64), (64, 64), (64, 13)]);
+        assert_eq!(layer_dims(4, &[], 2), vec![(4, 2)]);
+    }
+
+    #[test]
+    fn init_shapes_and_bounds() {
+        let mut rng = Rng::new(0);
+        let p = QParams::init(18, &[64, 64], 13, &mut rng);
+        assert_eq!(p.tensors.len(), 6);
+        assert_eq!(p.num_parameters(), 18 * 64 + 64 + 64 * 64 + 64 + 64 * 13 + 13);
+        // weight bound respected, biases zero
+        let bound = (6.0f32 / 18.0).sqrt();
+        assert!(p.tensors[0].0.iter().all(|w| w.abs() <= bound));
+        assert!(p.tensors[1].0.iter().all(|&b| b == 0.0));
+    }
+
+    #[test]
+    fn zeros_like_matches_shapes() {
+        let mut rng = Rng::new(1);
+        let p = QParams::init(8, &[16], 4, &mut rng);
+        let z = p.zeros_like();
+        assert_eq!(z.num_parameters(), p.num_parameters());
+        assert!(z.tensors.iter().all(|(d, _)| d.iter().all(|&x| x == 0.0)));
+    }
+
+    #[test]
+    fn from_flat_validates() {
+        assert!(QParams::from_flat(vec![(vec![0.0; 6], vec![2, 3])]).is_ok());
+        assert!(QParams::from_flat(vec![(vec![0.0; 5], vec![2, 3])]).is_err());
+    }
+}

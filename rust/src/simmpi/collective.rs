@@ -1,0 +1,94 @@
+//! Collective operation timing: plain binomial algorithms vs the
+//! hierarchical "HCOLL" family toggled by `CH3_ENABLE_HCOLL`.
+//!
+//! Plain algorithms pay `2·log2(p)` network rounds for an allreduce and
+//! are oblivious to node topology. HCOLL exploits the intra-node tree
+//! (cheap shared-memory stage + one inter-node stage per round), cutting
+//! the effective round count — at the cost of a per-call setup. Small
+//! jobs with few nodes may lose; big collective-heavy jobs win.
+
+use super::config::SimConfig;
+use super::network;
+
+/// Time for a barrier (dissemination, log2(p) rounds).
+pub fn barrier_us(cfg: &SimConfig, p: usize) -> f64 {
+    let rounds = (p.max(2) as f64).log2().ceil();
+    rounds * (network::transfer_us(cfg, 64) + cfg.machine.mpi_service_us)
+}
+
+/// Time for an allreduce (`co_sum`) of `bytes` across `p` images.
+pub fn allreduce_us(cfg: &SimConfig, p: usize, bytes: u64) -> f64 {
+    let per_round = network::transfer_us(cfg, bytes) + cfg.machine.mpi_service_us;
+    if cfg.cvars.enable_hcoll() {
+        // Hierarchical: intra-node reduce (memcpy-speed) + inter-node
+        // rounds over node leaders only.
+        let nodes = cfg.nodes().max(1);
+        let intra = network::memcpy_us(cfg, bytes) * 2.0
+            + (cfg.machine.cores_per_node.min(p) as f64).log2().ceil()
+                * cfg.machine.mpi_service_us;
+        let inter = (nodes.max(2) as f64).log2().ceil() * per_round;
+        cfg.machine.hcoll_setup_us + intra + inter
+    } else {
+        // Recursive doubling: 2·log2(p) rounds end-to-end.
+        2.0 * (p.max(2) as f64).log2().ceil() * per_round
+    }
+}
+
+/// Time for a broadcast of `bytes` across `p` images.
+pub fn broadcast_us(cfg: &SimConfig, p: usize, bytes: u64) -> f64 {
+    let per_round = network::transfer_us(cfg, bytes) + cfg.machine.mpi_service_us;
+    if cfg.cvars.enable_hcoll() {
+        let nodes = cfg.nodes().max(1);
+        let intra = network::memcpy_us(cfg, bytes)
+            + (cfg.machine.cores_per_node.min(p) as f64).log2().ceil() * 0.2;
+        let inter = (nodes.max(2) as f64).log2().ceil() * per_round;
+        cfg.machine.hcoll_setup_us + intra + inter
+    } else {
+        (p.max(2) as f64).log2().ceil() * per_round
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mpi_t::{CvarId, CvarSet};
+    use crate::simmpi::config::Machine;
+
+    fn cfg(images: usize, hcoll: bool) -> SimConfig {
+        let mut cv = CvarSet::vanilla();
+        cv.set(CvarId(1), i64::from(hcoll));
+        SimConfig::new(Machine::cheyenne(), cv, images)
+    }
+
+    #[test]
+    fn barrier_scales_logarithmically() {
+        let c = cfg(64, false);
+        let b64 = barrier_us(&c, 64);
+        let c1024 = cfg(1024, false);
+        let b1024 = barrier_us(&c1024, 1024);
+        assert!(b1024 > b64);
+        assert!(b1024 < b64 * 4.0, "should be log-ish: {b64} vs {b1024}");
+    }
+
+    #[test]
+    fn hcoll_wins_at_scale() {
+        // 1024 images over 29 nodes: hierarchical allreduce beats flat.
+        let plain = allreduce_us(&cfg(1024, false), 1024, 8192);
+        let hcoll = allreduce_us(&cfg(1024, true), 1024, 8192);
+        assert!(hcoll < plain, "hcoll={hcoll} plain={plain}");
+    }
+
+    #[test]
+    fn hcoll_setup_can_lose_on_tiny_jobs() {
+        // 2 images on one node: plain recursive doubling is one round.
+        let plain = allreduce_us(&cfg(2, false), 2, 64);
+        let hcoll = allreduce_us(&cfg(2, true), 2, 64);
+        assert!(hcoll > plain, "hcoll={hcoll} plain={plain}");
+    }
+
+    #[test]
+    fn broadcast_cheaper_than_allreduce() {
+        let c = cfg(512, false);
+        assert!(broadcast_us(&c, 512, 4096) < allreduce_us(&c, 512, 4096));
+    }
+}

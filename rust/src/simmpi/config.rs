@@ -1,0 +1,160 @@
+//! Machine models and per-run simulation configuration.
+//!
+//! Two presets mirror the paper's testbeds: *Cheyenne* (SGI ICE XA,
+//! EDR InfiniBand, 36 cores/node) and *Edison* (Cray XC30, Aries
+//! dragonfly, 24 cores/node). Parameters are calibrated for landscape
+//! shape, not absolute fidelity (see module docs).
+
+use crate::mpi_t::CvarSet;
+
+/// Hardware/OS cost model for one machine. All times in microseconds,
+/// bandwidths in bytes/µs.
+#[derive(Debug, Clone)]
+pub struct Machine {
+    pub name: &'static str,
+    pub cores_per_node: usize,
+    /// Base one-way network latency.
+    pub latency_us: f64,
+    /// Large-message network bandwidth (bytes per µs).
+    pub bandwidth_bpus: f64,
+    /// Sender-side software/NIC overhead per message.
+    pub per_msg_overhead_us: f64,
+    /// Scale-dependent contention: effective bandwidth divides by
+    /// `1 + contention * log2(images / 64)` above 64 images.
+    pub contention: f64,
+    /// Local memory-copy bandwidth (eager buffer copies), bytes/µs.
+    pub memcpy_bpus: f64,
+    /// Cost of one progress-engine poll iteration.
+    pub poll_cost_us: f64,
+    /// Latency to be rescheduled after yielding the core.
+    pub yield_wakeup_us: f64,
+    /// Progress-thread service latency for one incoming message.
+    pub async_service_us: f64,
+    /// Compute slowdown factor while the async progress thread runs
+    /// (it steals a hyperthread / memory bandwidth).
+    pub async_compute_tax: f64,
+    /// Cost to service one incoming message while blocked inside MPI.
+    pub mpi_service_us: f64,
+    /// Extra per-poll starvation of the progress thread while the main
+    /// thread busy-polls (only with ASYNC_PROGRESS=1).
+    pub poll_starve_coeff: f64,
+    /// One-way cost of an RMA lock message that could not piggyback.
+    pub lock_overhead_us: f64,
+    /// Setup cost of hierarchical (HCOLL) collectives per call.
+    pub hcoll_setup_us: f64,
+}
+
+impl Machine {
+    /// NCAR Cheyenne: SGI ICE XA, EDR InfiniBand (~6 GB/s effective
+    /// per-rank), 36-core Broadwell nodes.
+    pub fn cheyenne() -> Machine {
+        Machine {
+            name: "cheyenne",
+            cores_per_node: 36,
+            latency_us: 1.3,
+            bandwidth_bpus: 6_000.0,
+            per_msg_overhead_us: 0.45,
+            contention: 0.22,
+            memcpy_bpus: 40_000.0,
+            poll_cost_us: 0.12,
+            yield_wakeup_us: 18.0,
+            async_service_us: 1.1,
+            async_compute_tax: 0.035,
+            mpi_service_us: 0.5,
+            poll_starve_coeff: 0.004,
+            lock_overhead_us: 1.3,
+            hcoll_setup_us: 4.0,
+        }
+    }
+
+    /// NERSC Edison: Cray XC30, Aries dragonfly (~5 GB/s effective
+    /// per-rank), 24-core Ivy Bridge nodes.
+    pub fn edison() -> Machine {
+        Machine {
+            name: "edison",
+            cores_per_node: 24,
+            latency_us: 1.0,
+            bandwidth_bpus: 5_000.0,
+            per_msg_overhead_us: 0.35,
+            contention: 0.12,
+            memcpy_bpus: 35_000.0,
+            poll_cost_us: 0.10,
+            yield_wakeup_us: 14.0,
+            async_service_us: 0.9,
+            async_compute_tax: 0.045,
+            mpi_service_us: 0.45,
+            poll_starve_coeff: 0.0045,
+            lock_overhead_us: 1.0,
+            hcoll_setup_us: 3.0,
+        }
+    }
+
+    pub fn by_name(name: &str) -> Option<Machine> {
+        match name {
+            "cheyenne" => Some(Machine::cheyenne()),
+            "edison" => Some(Machine::edison()),
+            _ => None,
+        }
+    }
+}
+
+/// Everything one simulated application run needs.
+#[derive(Debug, Clone)]
+pub struct SimConfig {
+    pub machine: Machine,
+    pub cvars: CvarSet,
+    /// Number of images (MPI processes).
+    pub images: usize,
+    /// Run-to-run multiplicative compute noise (std-dev fraction;
+    /// paper §5.5 explores up to 0.30).
+    pub noise: f64,
+    /// RNG seed for this run.
+    pub seed: u64,
+}
+
+impl SimConfig {
+    pub fn new(machine: Machine, cvars: CvarSet, images: usize) -> SimConfig {
+        SimConfig { machine, cvars, images, noise: 0.02, seed: 0 }
+    }
+
+    /// Scale-dependent network contention multiplier (≥ 1).
+    pub fn contention_factor(&self) -> f64 {
+        let base = (self.images as f64 / 64.0).log2().max(0.0);
+        1.0 + self.machine.contention * base
+    }
+
+    /// Nodes occupied by this run.
+    pub fn nodes(&self) -> usize {
+        self.images.div_ceil(self.machine.cores_per_node)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn presets_exist() {
+        assert_eq!(Machine::cheyenne().name, "cheyenne");
+        assert_eq!(Machine::edison().cores_per_node, 24);
+        assert!(Machine::by_name("cheyenne").is_some());
+        assert!(Machine::by_name("summit").is_none());
+    }
+
+    #[test]
+    fn contention_grows_with_images() {
+        let mk = |n| SimConfig::new(Machine::cheyenne(), CvarSet::vanilla(), n);
+        let c64 = mk(64).contention_factor();
+        let c512 = mk(512).contention_factor();
+        let c2048 = mk(2048).contention_factor();
+        assert_eq!(c64, 1.0);
+        assert!(c512 > c64);
+        assert!(c2048 > c512);
+    }
+
+    #[test]
+    fn node_count() {
+        let cfg = SimConfig::new(Machine::cheyenne(), CvarSet::vanilla(), 256);
+        assert_eq!(cfg.nodes(), 8); // 256 / 36 -> 8 nodes
+    }
+}

@@ -1,0 +1,828 @@
+//! The discrete-event engine: executes one program per image against the
+//! protocol/polling/collective cost models and produces [`RunStats`].
+//!
+//! Event-driven, process-oriented: each image runs its op list; blocking
+//! ops park the image until a completion event fires. Progress semantics
+//! (who services an incoming message, and when) are the heart of the
+//! model — see [`super::polling`].
+
+use std::cmp::Reverse;
+use std::collections::{BinaryHeap, HashMap};
+
+use super::collective;
+use super::config::SimConfig;
+use super::polling;
+use super::process::{Op, Parked, ParkedKind, Proc, Program, Waiting};
+use super::protocol::{self, Protocol};
+use super::stats::RunStats;
+use crate::util::rng::Rng;
+
+/// Scheduled event kinds.
+#[derive(Debug, Clone, Copy)]
+enum Ev {
+    /// Image `p` is ready to execute its next op.
+    Resume { p: usize },
+    /// Eager payload arrives at `dst`.
+    EagerArrive { origin: usize, dst: usize, bytes: u64, put_seq: u64 },
+    /// Rendezvous RTS arrives at `dst`.
+    RtsArrive { origin: usize, dst: usize, bytes: u64, put_seq: u64 },
+    /// CTS arrives back at `origin`; bulk data departs.
+    CtsArrive { origin: usize, dst: usize, bytes: u64, put_seq: u64 },
+    /// Rendezvous bulk data lands in `dst`'s window (RDMA, no CPU).
+    DataArrive { origin: usize, dst: usize, put_seq: u64 },
+    /// Remote completion acknowledged at the origin.
+    PutComplete { origin: usize, dst: usize, put_seq: u64 },
+    /// Get request arrives at the source image.
+    GetReqArrive { origin: usize, src: usize, bytes: u64 },
+    /// Get data arrives back at the origin.
+    GetDataArrive { origin: usize },
+    /// Event post lands at `dst`.
+    EventArrive { dst: usize },
+    /// A collective/barrier epoch completes.
+    CollectiveDone { epoch: u64 },
+    /// A team-scoped epoch completes.
+    TeamDone { team: u32 },
+}
+
+/// Time-ordered event queue entry (seq breaks ties deterministically).
+#[derive(Debug, Clone, Copy)]
+struct Scheduled {
+    at: f64,
+    seq: u64,
+    ev: Ev,
+}
+
+impl PartialEq for Scheduled {
+    fn eq(&self, other: &Self) -> bool {
+        self.at == other.at && self.seq == other.seq
+    }
+}
+impl Eq for Scheduled {}
+impl PartialOrd for Scheduled {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for Scheduled {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        self.at.total_cmp(&other.at).then(self.seq.cmp(&other.seq))
+    }
+}
+
+/// Barrier / collective rendezvous bookkeeping.
+#[derive(Debug, Default)]
+struct EpochState {
+    epoch: u64,
+    arrived: usize,
+    last_arrival_us: f64,
+    /// Cost function result captured at completion scheduling.
+    participants: Vec<usize>,
+    /// For collectives: per-epoch op cost (barrier = 0 extra).
+    op_cost_us: f64,
+}
+
+/// The simulator.
+pub struct Engine {
+    cfg: SimConfig,
+    procs: Vec<Proc>,
+    queue: BinaryHeap<Reverse<Scheduled>>,
+    seq: u64,
+    put_seq: u64,
+    clock: f64,
+    barrier: EpochState,
+    collective: EpochState,
+    /// Team-scoped rendezvous states, keyed by team id (Fortran 2018
+    /// teams: OpenCoarrays ships a partial implementation, §4.2).
+    teams: HashMap<u32, EpochState>,
+    rng: Rng,
+    /// Per-image NIC send/receive availability: bulk transfers
+    /// serialize among sends at the origin and among receives at the
+    /// destination (full-duplex endpoint congestion model — tx and rx
+    /// are independent so no transitive convoy forms across a ring).
+    nic_tx_us: Vec<f64>,
+    nic_rx_us: Vec<f64>,
+    pub stats: RunStats,
+}
+
+impl Engine {
+    /// Build an engine for `programs` (one per image).
+    pub fn new(cfg: SimConfig, programs: Vec<Program>) -> Engine {
+        assert_eq!(
+            programs.len(),
+            cfg.images,
+            "program count {} != images {}",
+            programs.len(),
+            cfg.images
+        );
+        let rng = Rng::new(cfg.seed);
+        let nic_tx_us = vec![0.0; cfg.images];
+        let nic_rx_us = vec![0.0; cfg.images];
+        // Pre-size the event queue and stat buffers from the program
+        // shapes (no reallocation in the event loop hot path).
+        let total_ops: usize = programs.iter().map(|p| p.len()).sum();
+        let mut stats = RunStats::default();
+        stats.flush_times.reserve(total_ops / 4);
+        stats.put_times.reserve(total_ops / 2);
+        stats.umq_samples.reserve(total_ops / 4);
+        let procs = programs.into_iter().map(Proc::new).collect();
+        Engine {
+            cfg,
+            procs,
+            queue: BinaryHeap::with_capacity(1024 + total_ops / 8),
+            seq: 0,
+            put_seq: 0,
+            clock: 0.0,
+            barrier: EpochState::default(),
+            collective: EpochState::default(),
+            teams: HashMap::new(),
+            rng,
+            nic_tx_us,
+            nic_rx_us,
+            stats,
+        }
+    }
+
+    /// Reserve both endpoints' NICs for a bulk transfer of `bytes`
+    /// starting no earlier than `t`; returns the arrival time at `dst`.
+    fn reserve_transfer(&mut self, t: f64, origin: usize, dst: usize, bytes: u64) -> f64 {
+        // tx and rx are reserved as *independent* queues: the arrival
+        // respects both endpoints' serialization, but neither queue
+        // inherits the other's backlog (otherwise delays propagate
+        // transitively around communication rings — a convoy artifact
+        // real shared-bandwidth NICs don't exhibit).
+        let dur = bytes as f64 / super::network::effective_bandwidth(&self.cfg);
+        let start_tx = t.max(self.nic_tx_us[origin]);
+        let start_rx = t.max(self.nic_rx_us[dst]);
+        self.nic_tx_us[origin] = start_tx + dur;
+        self.nic_rx_us[dst] = start_rx + dur;
+        start_tx.max(start_rx) + dur + self.cfg.machine.latency_us
+    }
+
+    fn push(&mut self, at: f64, ev: Ev) {
+        debug_assert!(at >= self.clock - 1e-9, "event scheduled in the past");
+        self.seq += 1;
+        self.queue.push(Reverse(Scheduled { at, seq: self.seq, ev }));
+    }
+
+    /// Run to completion; returns the collected statistics.
+    pub fn run(mut self) -> RunStats {
+        for p in 0..self.procs.len() {
+            self.push(0.0, Ev::Resume { p });
+        }
+        let mut guard: u64 = 0;
+        let budget = 500_000_000u64;
+        while let Some(Reverse(Scheduled { at, ev, .. })) = self.queue.pop() {
+            self.clock = at;
+            self.dispatch(at, ev);
+            guard += 1;
+            assert!(guard < budget, "event budget exceeded — livelock in simulation?");
+        }
+        let unfinished: Vec<usize> = self
+            .procs
+            .iter()
+            .enumerate()
+            .filter(|(_, p)| !p.finished())
+            .map(|(i, _)| i)
+            .collect();
+        assert!(
+            unfinished.is_empty(),
+            "deadlock: images {unfinished:?} never finished (pc/waiting: {:?})",
+            unfinished
+                .iter()
+                .take(4)
+                .map(|&i| (self.procs[i].pc, self.procs[i].waiting))
+                .collect::<Vec<_>>()
+        );
+        self.stats.total_time_us =
+            self.procs.iter().map(|p| p.finish_time_us).fold(0.0, f64::max);
+        self.stats
+    }
+
+    fn dispatch(&mut self, t: f64, ev: Ev) {
+        match ev {
+            Ev::Resume { p } => self.execute(p, t),
+            Ev::EagerArrive { origin, dst, bytes, put_seq } => {
+                self.incoming(t, dst, Parked { kind: ParkedKind::EagerData { put_seq }, origin, bytes, arrived_us: t });
+            }
+            Ev::RtsArrive { origin, dst, bytes, put_seq } => {
+                self.incoming(t, dst, Parked { kind: ParkedKind::Rts { put_seq }, origin, bytes, arrived_us: t });
+            }
+            Ev::CtsArrive { origin, dst, bytes, put_seq } => {
+                // Bulk data departs origin via RDMA (no origin CPU), but
+                // serializes on both endpoints' NICs.
+                let arrival = self.reserve_transfer(t, origin, dst, bytes);
+                self.push(arrival, Ev::DataArrive { origin, dst, put_seq });
+            }
+            Ev::DataArrive { origin, dst, put_seq } => {
+                // RDMA write into the preposted window: no target CPU.
+                let ack = protocol::control_wire_us(&self.cfg);
+                self.push(t + ack, Ev::PutComplete { origin, dst, put_seq });
+            }
+            Ev::PutComplete { origin, dst, put_seq } => {
+                self.put_complete(t, origin, dst, put_seq);
+            }
+            Ev::GetReqArrive { origin, src, bytes } => {
+                self.incoming(t, src, Parked { kind: ParkedKind::GetReq, origin, bytes, arrived_us: t });
+            }
+            Ev::GetDataArrive { origin } => self.get_data_arrived(t, origin),
+            Ev::EventArrive { dst } => {
+                self.incoming(t, dst, Parked { kind: ParkedKind::EventPost, origin: usize::MAX, bytes: 16, arrived_us: t });
+            }
+            Ev::CollectiveDone { epoch } => self.collective_done(t, epoch),
+            Ev::TeamDone { team } => self.team_done(t, team),
+        }
+    }
+
+    // ------------------------------------------------------------------
+    // Program execution
+    // ------------------------------------------------------------------
+
+    /// Execute ops for image `p` starting at time `t` until it blocks,
+    /// computes, or finishes.
+    fn execute(&mut self, p: usize, t: f64) {
+        let mut now = t;
+        self.procs[p].waiting = Waiting::None;
+        loop {
+            // Entering the MPI layer (any op but Compute) drains parked
+            // messages first — a plain MPI call also polls the engine.
+            let op = match self.procs[p].program.get(self.procs[p].pc) {
+                Some(op) => op.clone(),
+                None => {
+                    self.procs[p].waiting = Waiting::Finished;
+                    self.procs[p].finish_time_us = now;
+                    return;
+                }
+            };
+            if !matches!(op, Op::Compute { .. }) {
+                now = self.drain_parked(p, now);
+            }
+            match op {
+                Op::Compute { us } => {
+                    let jitter = 1.0 + self.cfg.noise * self.rng.normal();
+                    let dur = us * jitter.max(0.05) * polling::compute_tax_factor(&self.cfg);
+                    self.procs[p].pc += 1;
+                    self.push(now + dur, Ev::Resume { p });
+                    return;
+                }
+                Op::Put { target, bytes } => {
+                    now = self.do_put(p, target, bytes, now);
+                    self.procs[p].pc += 1;
+                }
+                Op::Get { source, bytes } => {
+                    self.procs[p].pc += 1;
+                    // Request needs source-side service; data returns after.
+                    let wire = protocol::control_wire_us(&self.cfg);
+                    self.push(now + wire, Ev::GetReqArrive { origin: p, src: source, bytes });
+                    self.block(p, Waiting::GetData, now);
+                    return;
+                }
+                Op::Flush { target } => {
+                    now = self.issue_delayed_puts(p, Some(target), now);
+                    if self.procs[p].outstanding_to(target) == 0 {
+                        self.stats.flush_times.push(self.cfg.machine.mpi_service_us);
+                        now += self.cfg.machine.mpi_service_us;
+                        self.procs[p].pc += 1;
+                    } else {
+                        self.procs[p].pc += 1;
+                        self.block(p, Waiting::Flush { target }, now);
+                        return;
+                    }
+                }
+                Op::FlushAll => {
+                    now = self.issue_delayed_puts(p, None, now);
+                    if self.procs[p].outstanding_total == 0 {
+                        self.stats.flush_times.push(self.cfg.machine.mpi_service_us);
+                        now += self.cfg.machine.mpi_service_us;
+                        self.procs[p].pc += 1;
+                    } else {
+                        self.procs[p].pc += 1;
+                        self.block(p, Waiting::FlushAll { then_barrier: false }, now);
+                        return;
+                    }
+                }
+                Op::SyncAll => {
+                    now = self.issue_delayed_puts(p, None, now);
+                    if self.procs[p].outstanding_total == 0 {
+                        self.procs[p].pc += 1;
+                        self.enter_barrier(p, now);
+                    } else {
+                        self.procs[p].pc += 1;
+                        self.block(p, Waiting::FlushAll { then_barrier: true }, now);
+                    }
+                    return;
+                }
+                Op::EventPost { target } => {
+                    let wire = protocol::control_wire_us(&self.cfg);
+                    now += self.cfg.machine.per_msg_overhead_us;
+                    self.push(now + wire, Ev::EventArrive { dst: target });
+                    self.procs[p].pc += 1;
+                }
+                Op::EventWait { count } => {
+                    let have = self.procs[p].events_pending;
+                    if have >= count {
+                        self.procs[p].events_pending -= count;
+                        self.procs[p].pc += 1;
+                        now += self.cfg.machine.mpi_service_us;
+                    } else {
+                        let still = count - have;
+                        self.procs[p].events_pending = 0;
+                        self.procs[p].pc += 1;
+                        self.block(p, Waiting::Event { still_needed: still }, now);
+                        return;
+                    }
+                }
+                Op::TeamBarrier { team, size } => {
+                    now = self.issue_delayed_puts(p, None, now);
+                    self.procs[p].pc += 1;
+                    self.enter_team(p, now, team, size as usize, 0.0);
+                    return;
+                }
+                Op::TeamCoSum { team, size, bytes } => {
+                    let cost = collective::allreduce_us(&self.cfg, size as usize, bytes);
+                    self.procs[p].pc += 1;
+                    self.enter_team(p, now, team, size as usize, cost);
+                    return;
+                }
+                Op::CoSum { bytes } | Op::CoBroadcast { bytes } => {
+                    let cost = match op {
+                        Op::CoSum { .. } => {
+                            collective::allreduce_us(&self.cfg, self.cfg.images, bytes)
+                        }
+                        _ => collective::broadcast_us(&self.cfg, self.cfg.images, bytes),
+                    };
+                    self.procs[p].pc += 1;
+                    self.enter_collective(p, now, cost);
+                    return;
+                }
+            }
+        }
+    }
+
+    fn block(&mut self, p: usize, waiting: Waiting, now: f64) {
+        self.procs[p].waiting = waiting;
+        self.procs[p].block_start_us = now;
+    }
+
+    /// Resume a blocked image at `completion`, charging poll/yield
+    /// overhead for a wait that lasted since `block_start`.
+    ///
+    /// Clears `waiting` immediately: the proc is logically released the
+    /// moment its condition is met, so a message arriving in the
+    /// wake-up window must not observe the stale blocked state (it
+    /// would double-release the proc — e.g. two event posts landing
+    /// within one yield latency).
+    fn unblock(&mut self, p: usize, completion: f64) -> f64 {
+        let wait = (completion - self.procs[p].block_start_us).max(0.0);
+        self.procs[p].waiting = Waiting::None;
+        let overhead = polling::wait_overhead_us(&self.cfg, wait);
+        if wait > polling::poll_window_us(&self.cfg) {
+            self.stats.yields += 1;
+        }
+        let resume_at = completion + overhead;
+        self.push(resume_at, Ev::Resume { p });
+        resume_at
+    }
+
+    // ------------------------------------------------------------------
+    // Puts
+    // ------------------------------------------------------------------
+
+    fn do_put(&mut self, origin: usize, target: usize, bytes: u64, now: f64) -> f64 {
+        if protocol::delayed_for_piggyback(&self.cfg, bytes) {
+            // Queued locally; issued (batched) at the next flush.
+            self.procs[origin].delayed_puts.push((target, bytes));
+            self.stats.piggybacked_ops += 1;
+            return now + 0.05; // negligible local queuing cost
+        }
+        self.issue_put(origin, target, bytes, now)
+    }
+
+    /// Issue one put on the wire; returns the origin-side completion
+    /// time of the *local* call.
+    fn issue_put(&mut self, origin: usize, target: usize, bytes: u64, now: f64) -> f64 {
+        self.put_seq += 1;
+        let seq = self.put_seq;
+        let proto = protocol::select(&self.cfg, bytes);
+        let issue = protocol::put_issue_cost_us(&self.cfg, bytes, proto);
+        let done_local = now + issue;
+        self.procs[origin].add_outstanding(target);
+        self.stats.bytes_sent += bytes;
+        match proto {
+            Protocol::Eager => {
+                self.stats.eager_msgs += 1;
+                let arrival = self.reserve_transfer(done_local, origin, target, bytes);
+                self.push(arrival, Ev::EagerArrive { origin, dst: target, bytes, put_seq: seq });
+            }
+            Protocol::Rendezvous => {
+                self.stats.rendezvous_msgs += 1;
+                let wire = protocol::control_wire_us(&self.cfg);
+                self.push(done_local + wire, Ev::RtsArrive { origin, dst: target, bytes, put_seq: seq });
+            }
+        }
+        self.stats.put_times.push(issue);
+        done_local
+    }
+
+    /// Issue delayed (piggybacked) puts for `target` (or all targets) as
+    /// batched messages; returns the new local time.
+    fn issue_delayed_puts(&mut self, origin: usize, target: Option<usize>, now: f64) -> f64 {
+        let delayed = std::mem::take(&mut self.procs[origin].delayed_puts);
+        let (mine, keep): (Vec<_>, Vec<_>) = delayed
+            .into_iter()
+            .partition(|(t, _)| target.map(|tt| *t == tt).unwrap_or(true));
+        self.procs[origin].delayed_puts = keep;
+        if mine.is_empty() {
+            return now;
+        }
+        // Batch per destination: one combined message per target (the
+        // piggybacking win: one overhead + one lock for many small ops).
+        let mut by_dst: std::collections::HashMap<usize, u64> = std::collections::HashMap::new();
+        for (t, b) in mine {
+            *by_dst.entry(t).or_insert(0) += b;
+        }
+        let mut cursor = now;
+        let mut dsts: Vec<_> = by_dst.into_iter().collect();
+        dsts.sort_unstable();
+        for (dst, bytes) in dsts {
+            cursor = self.issue_put(origin, dst, bytes, cursor);
+        }
+        cursor
+    }
+
+    fn put_complete(&mut self, t: f64, origin: usize, dst: usize, put_seq: u64) {
+        let _ = put_seq;
+        self.procs[origin].complete_outstanding(dst);
+        match self.procs[origin].waiting {
+            Waiting::Flush { target } if target == dst => {
+                if self.procs[origin].outstanding_to(dst) == 0 {
+                    let wait = t - self.procs[origin].block_start_us;
+                    self.stats.flush_times.push(wait.max(0.0));
+                    self.unblock(origin, t);
+                }
+            }
+            Waiting::Flush { .. } => {}
+            Waiting::FlushAll { then_barrier } => {
+                if self.procs[origin].outstanding_total == 0 {
+                    let wait = t - self.procs[origin].block_start_us;
+                    self.stats.flush_times.push(wait.max(0.0));
+                    if then_barrier {
+                        // No separate resume: step into the barrier now.
+                        let overhead = polling::wait_overhead_us(&self.cfg, wait.max(0.0));
+                        self.enter_barrier(origin, t + overhead);
+                    } else {
+                        self.unblock(origin, t);
+                    }
+                }
+            }
+            _ => {}
+        }
+    }
+
+    // ------------------------------------------------------------------
+    // Incoming message service (the progress model)
+    // ------------------------------------------------------------------
+
+    /// An incoming message lands at `dst`: decide when it is serviced.
+    fn incoming(&mut self, t: f64, dst: usize, msg: Parked) {
+        if matches!(msg.kind, ParkedKind::EagerData { .. }) {
+            // Sample UMQ length at arrival (the MPICH pvar).
+            let unexpected = self.procs[dst].umq_len + 1;
+            self.stats.umq_samples.push(unexpected as f64);
+        }
+        if self.cfg.cvars.async_progress() {
+            // Progress thread services regardless of what dst is doing.
+            let delay = polling::async_service_delay_us(&self.cfg);
+            self.service(t + delay, dst, msg);
+        } else if self.procs[dst].in_mpi() {
+            let since = t - self.procs[dst].block_start_us;
+            let delay = polling::blocked_service_delay_us(&self.cfg, since);
+            self.service(t + delay, dst, msg);
+        } else {
+            // Target is computing (or finished): park until it next
+            // enters MPI. Eager payloads sit in the unexpected queue.
+            if matches!(msg.kind, ParkedKind::EagerData { .. }) {
+                self.procs[dst].umq_len += 1;
+            }
+            self.procs[dst].parked.push(msg);
+        }
+    }
+
+    /// Drain messages parked at `p` (called when `p` enters MPI);
+    /// returns the time after servicing.
+    fn drain_parked(&mut self, p: usize, now: f64) -> f64 {
+        if self.procs[p].parked.is_empty() {
+            return now;
+        }
+        let parked = std::mem::take(&mut self.procs[p].parked);
+        let mut cursor = now;
+        for msg in parked {
+            if matches!(msg.kind, ParkedKind::EagerData { .. }) {
+                self.procs[p].umq_len = self.procs[p].umq_len.saturating_sub(1);
+            }
+            cursor += self.cfg.machine.mpi_service_us;
+            self.service(cursor, p, msg);
+        }
+        cursor
+    }
+
+    /// Actually process a serviced message at time `t` on image `dst`.
+    fn service(&mut self, t: f64, dst: usize, msg: Parked) {
+        match msg.kind {
+            ParkedKind::EagerData { put_seq } => {
+                // Copy out of the comm buffer into the window, then ack.
+                let apply = protocol::eager_apply_cost_us(&self.cfg, msg.bytes);
+                let ack = protocol::control_wire_us(&self.cfg);
+                self.push(t + apply + ack, Ev::PutComplete { origin: msg.origin, dst, put_seq });
+            }
+            ParkedKind::Rts { put_seq } => {
+                // Reply CTS; bulk data flows when it reaches the origin.
+                let wire = protocol::control_wire_us(&self.cfg);
+                self.push(
+                    t + wire,
+                    Ev::CtsArrive { origin: msg.origin, dst, bytes: msg.bytes, put_seq },
+                );
+            }
+            ParkedKind::GetReq => {
+                // Serve the data back to the origin (bulk, NIC-bound).
+                let arrival = self.reserve_transfer(t, dst, msg.origin, msg.bytes);
+                self.push(arrival, Ev::GetDataArrive { origin: msg.origin });
+            }
+            ParkedKind::EventPost => {
+                self.stats.events_processed += 1;
+                self.event_arrived(t, dst);
+            }
+        }
+    }
+
+    // ------------------------------------------------------------------
+    // Gets, events, barriers, collectives
+    // ------------------------------------------------------------------
+
+    fn get_data_arrived(&mut self, t: f64, origin: usize) {
+        debug_assert!(matches!(self.procs[origin].waiting, Waiting::GetData));
+        let wait = t - self.procs[origin].block_start_us;
+        self.stats.get_times.push(wait.max(0.0));
+        self.unblock(origin, t);
+    }
+
+    fn event_arrived(&mut self, t: f64, dst: usize) {
+        if let Waiting::Event { still_needed } = self.procs[dst].waiting {
+            if still_needed <= 1 {
+                self.unblock(dst, t);
+            } else {
+                self.procs[dst].waiting = Waiting::Event { still_needed: still_needed - 1 };
+            }
+        } else {
+            self.procs[dst].events_pending += 1;
+        }
+    }
+
+    fn enter_barrier(&mut self, p: usize, now: f64) {
+        self.block(p, Waiting::Barrier, now);
+        self.barrier.arrived += 1;
+        self.barrier.last_arrival_us = self.barrier.last_arrival_us.max(now);
+        self.barrier.participants.push(p);
+        if self.barrier.arrived == self.cfg.images {
+            let cost = collective::barrier_us(&self.cfg, self.cfg.images);
+            let done = self.barrier.last_arrival_us + cost;
+            let epoch = self.barrier.epoch;
+            self.push(done, Ev::CollectiveDone { epoch: epoch << 1 }); // even = barrier
+        }
+    }
+
+    fn enter_collective(&mut self, p: usize, now: f64, op_cost_us: f64) {
+        self.block(p, Waiting::Collective, now);
+        self.collective.arrived += 1;
+        self.collective.last_arrival_us = self.collective.last_arrival_us.max(now);
+        self.collective.op_cost_us = self.collective.op_cost_us.max(op_cost_us);
+        self.collective.participants.push(p);
+        if self.collective.arrived == self.cfg.images {
+            self.stats.collectives += 1;
+            let done = self.collective.last_arrival_us + self.collective.op_cost_us;
+            let epoch = self.collective.epoch;
+            self.push(done, Ev::CollectiveDone { epoch: (epoch << 1) | 1 }); // odd = collective
+        }
+    }
+
+    fn enter_team(&mut self, p: usize, now: f64, team: u32, size: usize, op_cost_us: f64) {
+        assert!(size >= 1, "empty team");
+        self.block(p, Waiting::Collective, now);
+        let state = self.teams.entry(team).or_default();
+        state.arrived += 1;
+        state.last_arrival_us = state.last_arrival_us.max(now);
+        state.op_cost_us = state.op_cost_us.max(op_cost_us);
+        state.participants.push(p);
+        assert!(
+            state.arrived <= size,
+            "team {team} overfilled: {} arrivals for size {size}",
+            state.arrived
+        );
+        if state.arrived == size {
+            let cost = collective::barrier_us(&self.cfg, size) + state.op_cost_us;
+            let done = state.last_arrival_us + cost;
+            self.push(done, Ev::TeamDone { team });
+        }
+    }
+
+    fn team_done(&mut self, t: f64, team: u32) {
+        let state = self.teams.get_mut(&team).expect("unknown team epoch");
+        let participants = std::mem::take(&mut state.participants);
+        state.arrived = 0;
+        state.last_arrival_us = 0.0;
+        state.op_cost_us = 0.0;
+        state.epoch += 1;
+        for p in participants {
+            self.unblock(p, t);
+        }
+    }
+
+    fn collective_done(&mut self, t: f64, epoch: u64) {
+        let is_collective = epoch & 1 == 1;
+        let state = if is_collective { &mut self.collective } else { &mut self.barrier };
+        let participants = std::mem::take(&mut state.participants);
+        state.arrived = 0;
+        state.last_arrival_us = 0.0;
+        state.op_cost_us = 0.0;
+        state.epoch += 1;
+        for p in participants {
+            self.unblock(p, t);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mpi_t::{CvarId, CvarSet};
+    use crate::simmpi::config::Machine;
+
+    fn cfg(images: usize) -> SimConfig {
+        let mut c = SimConfig::new(Machine::cheyenne(), CvarSet::vanilla(), images);
+        c.noise = 0.0;
+        c
+    }
+
+    #[test]
+    fn empty_programs_finish_at_zero() {
+        let stats = Engine::new(cfg(4), vec![vec![]; 4]).run();
+        assert_eq!(stats.total_time_us, 0.0);
+    }
+
+    #[test]
+    fn compute_only_sets_total_time() {
+        let progs = vec![vec![Op::Compute { us: 100.0 }]; 2];
+        let stats = Engine::new(cfg(2), progs).run();
+        assert!((stats.total_time_us - 100.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn put_flush_round_trip_completes() {
+        // Image 0 puts to image 1 and flushes; image 1 waits in sync.
+        let progs = vec![
+            vec![Op::Put { target: 1, bytes: 1024 }, Op::Flush { target: 1 }, Op::SyncAll],
+            vec![Op::SyncAll],
+        ];
+        let stats = Engine::new(cfg(2), progs).run();
+        assert_eq!(stats.eager_msgs, 1);
+        assert!(stats.total_time_us > 0.0);
+        assert_eq!(stats.flush_times.len(), 1);
+    }
+
+    #[test]
+    fn rendezvous_for_big_messages() {
+        let progs = vec![
+            vec![Op::Put { target: 1, bytes: 1 << 20 }, Op::Flush { target: 1 }, Op::SyncAll],
+            vec![Op::SyncAll],
+        ];
+        let stats = Engine::new(cfg(2), progs).run();
+        assert_eq!(stats.rendezvous_msgs, 1);
+        assert_eq!(stats.eager_msgs, 0);
+    }
+
+    #[test]
+    fn barrier_synchronizes_all() {
+        // One image computes 1000µs; everyone leaves the barrier after.
+        let progs = vec![
+            vec![Op::Compute { us: 1000.0 }, Op::SyncAll],
+            vec![Op::SyncAll],
+            vec![Op::SyncAll],
+        ];
+        let stats = Engine::new(cfg(3), progs).run();
+        assert!(stats.total_time_us >= 1000.0);
+    }
+
+    #[test]
+    fn events_post_and_wait() {
+        let progs = vec![
+            vec![Op::EventPost { target: 1 }, Op::SyncAll],
+            vec![Op::EventWait { count: 1 }, Op::SyncAll],
+        ];
+        let stats = Engine::new(cfg(2), progs).run();
+        assert_eq!(stats.events_processed, 1);
+    }
+
+    #[test]
+    fn event_wait_before_post_blocks_then_resumes() {
+        let progs = vec![
+            vec![Op::Compute { us: 500.0 }, Op::EventPost { target: 1 }],
+            vec![Op::EventWait { count: 1 }],
+        ];
+        let stats = Engine::new(cfg(2), progs).run();
+        assert!(stats.total_time_us >= 500.0);
+    }
+
+    #[test]
+    fn get_blocks_until_served() {
+        let progs = vec![
+            vec![Op::Get { source: 1, bytes: 4096 }],
+            vec![Op::Compute { us: 300.0 }, Op::FlushAll],
+        ];
+        // Image 1 computes 300µs before entering MPI (flush), so without
+        // async progress the get waits for it.
+        let mut c = cfg(2);
+        c.cvars.set(CvarId(0), 0);
+        let progs2 = vec![progs[0].clone(), progs[1].clone()];
+        let stats = Engine::new(c, progs2).run();
+        assert_eq!(stats.get_times.len(), 1);
+        assert!(stats.get_times[0] >= 290.0, "get should stall ~300µs: {:?}", stats.get_times);
+    }
+
+    #[test]
+    fn async_progress_unstalls_gets() {
+        let progs = vec![
+            vec![Op::Get { source: 1, bytes: 4096 }],
+            vec![Op::Compute { us: 300.0 }, Op::FlushAll],
+        ];
+        let mut c = cfg(2);
+        c.cvars.set(CvarId(0), 1);
+        let stats = Engine::new(c, progs).run();
+        assert!(stats.get_times[0] < 50.0, "async progress should serve the get: {:?}", stats.get_times);
+    }
+
+    #[test]
+    fn collectives_complete() {
+        let progs = vec![vec![Op::CoSum { bytes: 4096 }]; 4];
+        let stats = Engine::new(cfg(4), progs).run();
+        assert_eq!(stats.collectives, 1);
+        assert!(stats.total_time_us > 0.0);
+    }
+
+    #[test]
+    fn umq_grows_when_target_computes() {
+        // Image 0 sends 5 eager puts while image 1 computes.
+        let progs = vec![
+            vec![
+                Op::Put { target: 1, bytes: 1024 },
+                Op::Put { target: 1, bytes: 1024 },
+                Op::Put { target: 1, bytes: 1024 },
+                Op::Put { target: 1, bytes: 1024 },
+                Op::Put { target: 1, bytes: 1024 },
+                Op::Flush { target: 1 },
+                Op::SyncAll,
+            ],
+            vec![Op::Compute { us: 5000.0 }, Op::SyncAll],
+        ];
+        let stats = Engine::new(cfg(2), progs).run();
+        let umq = stats.umq_summary();
+        assert!(umq.max >= 2.0, "UMQ should build up: {umq:?}");
+    }
+
+    #[test]
+    fn piggyback_delay_batches_small_puts() {
+        let mut c = cfg(2);
+        c.cvars.set(CvarId(2), 1); // delay issuing
+        let progs = vec![
+            vec![
+                Op::Put { target: 1, bytes: 512 },
+                Op::Put { target: 1, bytes: 512 },
+                Op::Put { target: 1, bytes: 512 },
+                Op::Flush { target: 1 },
+                Op::SyncAll,
+            ],
+            vec![Op::SyncAll],
+        ];
+        let stats = Engine::new(c, progs).run();
+        assert_eq!(stats.piggybacked_ops, 3);
+        // Batched: one combined eager message instead of three.
+        assert_eq!(stats.eager_msgs, 1);
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let progs = || {
+            vec![
+                vec![Op::Compute { us: 50.0 }, Op::Put { target: 1, bytes: 2048 }, Op::SyncAll],
+                vec![Op::Compute { us: 60.0 }, Op::SyncAll],
+            ]
+        };
+        let mut c1 = cfg(2);
+        c1.noise = 0.1;
+        c1.seed = 99;
+        let mut c2 = cfg(2);
+        c2.noise = 0.1;
+        c2.seed = 99;
+        let a = Engine::new(c1, progs()).run();
+        let b = Engine::new(c2, progs()).run();
+        assert_eq!(a.total_time_us, b.total_time_us);
+    }
+}

@@ -1,0 +1,46 @@
+//! `simmpi` — a discrete-event simulator of an MPI-3 run-time.
+//!
+//! The paper tunes MPICH-3.2.1 on real supercomputers (Cheyenne/SGI with
+//! InfiniBand, Edison/Cray XC30 with Aries). We have neither, so this
+//! module implements the *mechanisms its control variables govern* as a
+//! process-oriented discrete-event simulation:
+//!
+//! * **eager vs rendezvous** point-to-point/RMA protocol with the
+//!   `CH3_EAGER_MAX_MSG_SIZE` threshold, including the unexpected-message
+//!   queue that eager messages land in when the target has not entered
+//!   the progress engine ([`protocol`], [`process`]);
+//! * **passive-target RMA**: puts/gets with remote completion at
+//!   `MPI_Win_flush`, lock piggybacking
+//!   (`CH3_RMA_DELAY_ISSUING_FOR_PIGGYBACKING`,
+//!   `CH3_RMA_OP_PIGGYBACK_LOCK_DATA_SIZE`);
+//! * **asynchronous progress** (`ASYNC_PROGRESS`): a helper thread that
+//!   services incoming RMA traffic while the target computes, at a
+//!   compute-rate tax ([`polling`]);
+//! * **poll/yield** behaviour of blocking waits (`POLLS_BEFORE_YIELD`):
+//!   how long a blocked rank busy-polls before yielding the core, which
+//!   sets both its own wakeup latency and its responsiveness to peers
+//!   ([`polling`]);
+//! * **collectives** with plain vs hierarchical algorithms
+//!   (`CH3_ENABLE_HCOLL`, [`collective`]);
+//! * **network models** for an InfiniBand and an Aries fabric with
+//!   scale-dependent contention ([`network`], [`config`]).
+//!
+//! The RL agent only ever observes end-of-run performance-variable
+//! statistics as a function of (cvars × workload × images); the
+//! simulator's job is to preserve the *shape* of that landscape — who
+//! wins, which knob matters for which pattern, where crossovers fall —
+//! not absolute wall-clock numbers (DESIGN.md, substitution table).
+
+pub mod collective;
+pub mod config;
+pub mod engine;
+pub mod network;
+pub mod polling;
+pub mod process;
+pub mod protocol;
+pub mod stats;
+
+pub use config::{Machine, SimConfig};
+pub use engine::Engine;
+pub use process::{Op, Program};
+pub use stats::RunStats;

@@ -1,0 +1,63 @@
+//! Network timing: message transfer costs under contention.
+
+use super::config::SimConfig;
+
+/// One-way transfer time for `bytes` on the wire (latency + serialized
+/// bytes under the run's contention factor).
+pub fn transfer_us(cfg: &SimConfig, bytes: u64) -> f64 {
+    cfg.machine.latency_us + bytes as f64 / effective_bandwidth(cfg)
+}
+
+/// Bandwidth after scale-dependent contention.
+pub fn effective_bandwidth(cfg: &SimConfig) -> f64 {
+    cfg.machine.bandwidth_bpus / cfg.contention_factor()
+}
+
+/// Sender-side cost to hand one message to the NIC.
+pub fn send_overhead_us(cfg: &SimConfig) -> f64 {
+    cfg.machine.per_msg_overhead_us
+}
+
+/// Local memcpy time (eager copies in/out of comm buffers).
+pub fn memcpy_us(cfg: &SimConfig, bytes: u64) -> f64 {
+    bytes as f64 / cfg.machine.memcpy_bpus
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mpi_t::CvarSet;
+    use crate::simmpi::config::Machine;
+
+    fn cfg(images: usize) -> SimConfig {
+        SimConfig::new(Machine::cheyenne(), CvarSet::vanilla(), images)
+    }
+
+    #[test]
+    fn latency_floor() {
+        let c = cfg(64);
+        assert!((transfer_us(&c, 0) - c.machine.latency_us).abs() < 1e-12);
+    }
+
+    #[test]
+    fn bandwidth_term_linear_in_bytes() {
+        let c = cfg(64);
+        let t1 = transfer_us(&c, 1 << 20);
+        let t2 = transfer_us(&c, 2 << 20);
+        let lat = c.machine.latency_us;
+        assert!(((t2 - lat) / (t1 - lat) - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn contention_slows_transfers_at_scale() {
+        let small = transfer_us(&cfg(64), 1 << 20);
+        let large = transfer_us(&cfg(2048), 1 << 20);
+        assert!(large > small * 1.3, "small={small} large={large}");
+    }
+
+    #[test]
+    fn memcpy_faster_than_network() {
+        let c = cfg(64);
+        assert!(memcpy_us(&c, 1 << 20) < transfer_us(&c, 1 << 20));
+    }
+}

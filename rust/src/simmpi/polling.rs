@@ -1,0 +1,131 @@
+//! Poll/yield cost model (`MPIR_CVAR_POLLS_BEFORE_YIELD`) and the
+//! progress rules that decide *when a target CPU services a message*.
+//!
+//! A blocked MPI rank busy-polls the progress engine; after `k` polls
+//! without completion it yields the core and is woken by the scheduler.
+//! Three consequences, all modeled here:
+//!
+//! 1. **Own wakeup latency** — if the awaited completion lands after the
+//!    rank has yielded, completion detection costs a scheduler wakeup.
+//! 2. **Responsiveness to peers** — an incoming RTS/eager message that
+//!    arrives while the rank is still busy-polling is serviced at poll
+//!    speed; after the yield it costs a wakeup first. Longer polling
+//!    keeps a rank responsive to its *partners* — the effect that grows
+//!    with image count and drives the paper's §6.2 observation.
+//! 3. **Progress-thread starvation** — with `ASYNC_PROGRESS=1` the main
+//!    thread's busy-poll competes with the helper thread, so service
+//!    latency creeps up with the poll budget.
+
+use super::config::SimConfig;
+
+/// Time a rank spends busy-polling before it yields.
+pub fn poll_window_us(cfg: &SimConfig) -> f64 {
+    cfg.cvars.polls_before_yield() as f64 * cfg.machine.poll_cost_us
+}
+
+/// Extra time added to a blocking wait of true duration `wait_us`
+/// (completion-detection overhead).
+pub fn wait_overhead_us(cfg: &SimConfig, wait_us: f64) -> f64 {
+    let window = poll_window_us(cfg);
+    if wait_us <= window {
+        // Completion detected while still polling: within one poll.
+        cfg.machine.poll_cost_us
+    } else {
+        // Already yielded: pay a scheduler wakeup. Repeated sleep/wake
+        // cycles add a slowly growing term for very long waits.
+        let over = (wait_us - window) / cfg.machine.yield_wakeup_us.max(1e-9);
+        cfg.machine.yield_wakeup_us * (1.0 + 0.25 * (1.0 + over).ln())
+    }
+}
+
+/// Delay before a *blocked* rank services an incoming message that
+/// arrived `since_block_us` after it blocked.
+pub fn blocked_service_delay_us(cfg: &SimConfig, since_block_us: f64) -> f64 {
+    if since_block_us <= poll_window_us(cfg) {
+        cfg.machine.mpi_service_us
+    } else {
+        cfg.machine.yield_wakeup_us + cfg.machine.mpi_service_us
+    }
+}
+
+/// Service delay through the asynchronous progress thread (only valid
+/// when `ASYNC_PROGRESS=1`). The main thread's poll budget starves the
+/// helper slightly.
+pub fn async_service_delay_us(cfg: &SimConfig) -> f64 {
+    let starve = cfg.cvars.polls_before_yield() as f64
+        * cfg.machine.poll_cost_us
+        * cfg.machine.poll_starve_coeff;
+    cfg.machine.async_service_us + starve
+}
+
+/// Compute-time multiplier while the async progress thread is enabled.
+pub fn compute_tax_factor(cfg: &SimConfig) -> f64 {
+    if cfg.cvars.async_progress() {
+        1.0 + cfg.machine.async_compute_tax
+    } else {
+        1.0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mpi_t::{CvarId, CvarSet};
+    use crate::simmpi::config::Machine;
+
+    fn cfg_with_polls(polls: i64) -> SimConfig {
+        let mut cv = CvarSet::vanilla();
+        cv.set(CvarId(4), polls);
+        SimConfig::new(Machine::cheyenne(), cv, 256)
+    }
+
+    #[test]
+    fn short_wait_costs_one_poll() {
+        let cfg = cfg_with_polls(1000);
+        let w = poll_window_us(&cfg);
+        assert_eq!(wait_overhead_us(&cfg, w * 0.5), cfg.machine.poll_cost_us);
+    }
+
+    #[test]
+    fn long_wait_pays_wakeup() {
+        let cfg = cfg_with_polls(100);
+        let w = poll_window_us(&cfg);
+        let overhead = wait_overhead_us(&cfg, w * 50.0);
+        assert!(overhead >= cfg.machine.yield_wakeup_us);
+    }
+
+    #[test]
+    fn bigger_poll_budget_covers_longer_waits() {
+        // A wait of 150µs: k=500 (60µs window) yields; k=2000 (240µs) polls through.
+        let wait = 150.0;
+        let small = wait_overhead_us(&cfg_with_polls(500), wait);
+        let large = wait_overhead_us(&cfg_with_polls(2000), wait);
+        assert!(large < small, "large={large} small={small}");
+    }
+
+    #[test]
+    fn service_delay_jumps_after_window() {
+        let cfg = cfg_with_polls(1000);
+        let w = poll_window_us(&cfg);
+        let fast = blocked_service_delay_us(&cfg, w * 0.9);
+        let slow = blocked_service_delay_us(&cfg, w * 1.1);
+        assert!(slow > fast + cfg.machine.yield_wakeup_us * 0.9);
+    }
+
+    #[test]
+    fn async_starvation_grows_with_polls() {
+        let a = async_service_delay_us(&cfg_with_polls(0));
+        let b = async_service_delay_us(&cfg_with_polls(100_000));
+        assert!(b > a);
+    }
+
+    #[test]
+    fn compute_tax_only_with_async() {
+        let mut cv = CvarSet::vanilla();
+        let off = SimConfig::new(Machine::cheyenne(), cv.clone(), 64);
+        assert_eq!(compute_tax_factor(&off), 1.0);
+        cv.set(CvarId(0), 1);
+        let on = SimConfig::new(Machine::cheyenne(), cv, 64);
+        assert!(compute_tax_factor(&on) > 1.0);
+    }
+}

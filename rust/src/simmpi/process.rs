@@ -1,0 +1,200 @@
+//! Simulated processes (images) and their operation programs.
+
+/// One operation in an image's program. Times in µs, sizes in bytes.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Op {
+    /// Local computation for `us` microseconds (subject to noise and the
+    /// async-progress compute tax).
+    Compute { us: f64 },
+    /// One-sided put to `target`'s window (remote completion at flush).
+    Put { target: usize, bytes: u64 },
+    /// One-sided get from `source` (blocks until data arrives, like
+    /// LIBCAF_MPI's get + immediate flush).
+    Get { source: usize, bytes: u64 },
+    /// `MPI_Win_flush(target)`: wait for remote completion of all
+    /// outstanding ops to `target`.
+    Flush { target: usize },
+    /// `MPI_Win_flush_all`.
+    FlushAll,
+    /// `sync all`: flush_all + barrier over all images.
+    SyncAll,
+    /// Post a fine-grain event to `target` (Fortran 2018 events).
+    EventPost { target: usize },
+    /// Wait until `count` events have been posted to this image.
+    EventWait { count: u32 },
+    /// `co_sum`-style allreduce of `bytes` per image.
+    CoSum { bytes: u64 },
+    /// `co_broadcast` of `bytes` from image 1.
+    CoBroadcast { bytes: u64 },
+    /// Team-scoped barrier (Fortran 2018 teams, `sync team`).
+    /// `team` identifies the group; `size` is its member count.
+    TeamBarrier { team: u32, size: u32 },
+    /// Team-scoped allreduce (`co_sum` inside `change team`).
+    TeamCoSum { team: u32, size: u32, bytes: u64 },
+}
+
+/// An image's full program.
+pub type Program = Vec<Op>;
+
+/// What a process is currently blocked on.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Waiting {
+    /// Executing ops / computing; not blocked.
+    None,
+    /// In `Flush{target}` until per-target outstanding hits zero.
+    Flush { target: usize },
+    /// In `FlushAll` until total outstanding hits zero. `then_barrier`
+    /// distinguishes `sync all` (proceeds into the barrier).
+    FlushAll { then_barrier: bool },
+    /// In the barrier, waiting for everyone.
+    Barrier,
+    /// Waiting for `still_needed` more event posts.
+    Event { still_needed: u32 },
+    /// Waiting for get data to come back.
+    GetData,
+    /// In a collective, waiting for completion.
+    Collective,
+    /// Program exhausted.
+    Finished,
+}
+
+/// A message parked at a target that has not yet serviced it.
+#[derive(Debug, Clone, Copy)]
+pub struct Parked {
+    pub kind: ParkedKind,
+    pub origin: usize,
+    pub bytes: u64,
+    pub arrived_us: f64,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum ParkedKind {
+    /// Eager payload waiting to be copied out of the unexpected queue.
+    EagerData { put_seq: u64 },
+    /// Rendezvous RTS waiting for a CTS reply.
+    Rts { put_seq: u64 },
+    /// Get request waiting to be served.
+    GetReq,
+    /// Event post waiting to be accounted.
+    EventPost,
+}
+
+/// Per-process simulation state.
+#[derive(Debug)]
+pub struct Proc {
+    pub program: Program,
+    pub pc: usize,
+    pub waiting: Waiting,
+    /// When the current blocking wait began (valid while blocked).
+    pub block_start_us: f64,
+    /// Outstanding (not yet remotely complete) puts per target.
+    /// Workloads talk to a handful of peers, so a small sorted-free
+    /// vec beats a HashMap on the put/complete hot path.
+    pub outstanding_by_target: Vec<(usize, u32)>,
+    pub outstanding_total: u32,
+    /// Messages awaiting this process's progress engine.
+    pub parked: Vec<Parked>,
+    /// Unexpected-queue length high-water bookkeeping.
+    pub umq_len: usize,
+    /// Event counter (Fortran events posted to me, not yet consumed).
+    pub events_pending: u32,
+    /// Puts delayed for piggybacking, flushed on the next flush/sync:
+    /// (target, bytes).
+    pub delayed_puts: Vec<(usize, u64)>,
+    /// This process is finished executing.
+    pub finish_time_us: f64,
+}
+
+impl Proc {
+    pub fn new(program: Program) -> Proc {
+        Proc {
+            program,
+            pc: 0,
+            waiting: Waiting::None,
+            block_start_us: 0.0,
+            outstanding_by_target: Vec::new(),
+            outstanding_total: 0,
+            parked: Vec::new(),
+            umq_len: 0,
+            events_pending: 0,
+            delayed_puts: Vec::new(),
+            finish_time_us: 0.0,
+        }
+    }
+
+    pub fn outstanding_to(&self, target: usize) -> u32 {
+        self.outstanding_by_target
+            .iter()
+            .find(|(t, _)| *t == target)
+            .map(|(_, n)| *n)
+            .unwrap_or(0)
+    }
+
+    pub fn add_outstanding(&mut self, target: usize) {
+        match self.outstanding_by_target.iter_mut().find(|(t, _)| *t == target) {
+            Some((_, n)) => *n += 1,
+            None => self.outstanding_by_target.push((target, 1)),
+        }
+        self.outstanding_total += 1;
+    }
+
+    pub fn complete_outstanding(&mut self, target: usize) {
+        let e = self
+            .outstanding_by_target
+            .iter_mut()
+            .find(|(t, _)| *t == target)
+            .map(|(_, n)| n)
+            .expect("completion for unknown target");
+        assert!(*e > 0, "outstanding underflow");
+        *e -= 1;
+        self.outstanding_total -= 1;
+    }
+
+    /// Is this process currently blocked inside the MPI progress engine
+    /// (and therefore able to service incoming messages)?
+    pub fn in_mpi(&self) -> bool {
+        !matches!(self.waiting, Waiting::None | Waiting::Finished)
+    }
+
+    pub fn finished(&self) -> bool {
+        matches!(self.waiting, Waiting::Finished)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn outstanding_bookkeeping() {
+        let mut p = Proc::new(vec![]);
+        p.add_outstanding(3);
+        p.add_outstanding(3);
+        p.add_outstanding(7);
+        assert_eq!(p.outstanding_to(3), 2);
+        assert_eq!(p.outstanding_total, 3);
+        p.complete_outstanding(3);
+        assert_eq!(p.outstanding_to(3), 1);
+        assert_eq!(p.outstanding_total, 2);
+    }
+
+    #[test]
+    #[should_panic(expected = "underflow")]
+    fn completion_underflow_panics() {
+        let mut p = Proc::new(vec![]);
+        p.add_outstanding(1);
+        p.complete_outstanding(1);
+        p.complete_outstanding(1);
+    }
+
+    #[test]
+    fn in_mpi_only_when_blocked() {
+        let mut p = Proc::new(vec![]);
+        assert!(!p.in_mpi());
+        p.waiting = Waiting::Flush { target: 0 };
+        assert!(p.in_mpi());
+        p.waiting = Waiting::Finished;
+        assert!(!p.in_mpi());
+        assert!(p.finished());
+    }
+}

@@ -1,0 +1,140 @@
+//! Point-to-point / RMA transfer protocol selection and cost pieces.
+//!
+//! **Eager** (`bytes <= CH3_EAGER_MAX_MSG_SIZE`): the sender pushes
+//! header+payload immediately — one trip, but the payload is copied
+//! through comm buffers on both ends, and if the target is not making
+//! progress it parks in the unexpected-message queue.
+//!
+//! **Rendezvous** (`bytes > threshold`): RTS → (target service) → CTS →
+//! zero-copy RDMA transfer. No copies and no unexpected-queue memory,
+//! but the handshake needs the *target* to progress, and adds a round
+//! trip.
+//!
+//! **Lock piggybacking**: passive-target RMA epochs open with a lock
+//! message. Ops no larger than `CH3_RMA_OP_PIGGYBACK_LOCK_DATA_SIZE`
+//! can ride the lock packet (saving the lock trip); with
+//! `CH3_RMA_DELAY_ISSUING_FOR_PIGGYBACKING=1` small ops are further
+//! delayed and batched onto the next flush.
+
+use super::config::SimConfig;
+use super::network;
+
+/// Which protocol a message of `bytes` uses under the current cvars.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Protocol {
+    Eager,
+    Rendezvous,
+}
+
+pub fn select(cfg: &SimConfig, bytes: u64) -> Protocol {
+    if bytes as i64 <= cfg.cvars.eager_max() {
+        Protocol::Eager
+    } else {
+        Protocol::Rendezvous
+    }
+}
+
+/// Does this op qualify for lock piggybacking (saves the lock trip)?
+pub fn piggybacks(cfg: &SimConfig, bytes: u64) -> bool {
+    bytes as i64 <= cfg.cvars.piggyback_size()
+}
+
+/// Is this op's issuing delayed to batch with the next flush?
+pub fn delayed_for_piggyback(cfg: &SimConfig, bytes: u64) -> bool {
+    cfg.cvars.delay_piggyback() && piggybacks(cfg, bytes)
+}
+
+/// Origin-side CPU time to issue a put of `bytes` (before any network
+/// flight). Eager pays the buffer copy; rendezvous only posts an RTS.
+pub fn put_issue_cost_us(cfg: &SimConfig, bytes: u64, proto: Protocol) -> f64 {
+    let lock = if piggybacks(cfg, bytes) { 0.0 } else { cfg.machine.lock_overhead_us };
+    match proto {
+        Protocol::Eager => {
+            network::send_overhead_us(cfg) + network::memcpy_us(cfg, bytes) + lock
+        }
+        Protocol::Rendezvous => network::send_overhead_us(cfg) + lock,
+    }
+}
+
+/// Target-side CPU time to apply an eager payload (copy out of the
+/// comm buffer into the window).
+pub fn eager_apply_cost_us(cfg: &SimConfig, bytes: u64) -> f64 {
+    network::memcpy_us(cfg, bytes)
+}
+
+/// Wire time of the eager message (header + payload in one trip).
+pub fn eager_wire_us(cfg: &SimConfig, bytes: u64) -> f64 {
+    network::transfer_us(cfg, bytes)
+}
+
+/// Wire time of the rendezvous RTS/CTS control messages.
+pub fn control_wire_us(cfg: &SimConfig) -> f64 {
+    network::transfer_us(cfg, 64)
+}
+
+/// Wire time of the rendezvous bulk data (zero-copy RDMA).
+pub fn rendezvous_data_us(cfg: &SimConfig, bytes: u64) -> f64 {
+    network::transfer_us(cfg, bytes)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mpi_t::{CvarId, CvarSet};
+    use crate::simmpi::config::Machine;
+
+    fn cfg(eager_max: i64) -> SimConfig {
+        let mut cv = CvarSet::vanilla();
+        cv.set(CvarId(5), eager_max);
+        SimConfig::new(Machine::cheyenne(), cv, 64)
+    }
+
+    #[test]
+    fn threshold_selects_protocol() {
+        let c = cfg(131_072);
+        assert_eq!(select(&c, 131_072), Protocol::Eager);
+        assert_eq!(select(&c, 131_073), Protocol::Rendezvous);
+    }
+
+    #[test]
+    fn raising_threshold_converts_to_eager() {
+        // The paper's human tuning: eager limit ×10 turns ICAR's halos eager.
+        let halo = 300_000u64;
+        assert_eq!(select(&cfg(131_072), halo), Protocol::Rendezvous);
+        assert_eq!(select(&cfg(1_310_720), halo), Protocol::Eager);
+    }
+
+    #[test]
+    fn eager_issue_costs_more_cpu_than_rendezvous() {
+        let c = cfg(1 << 22);
+        let big = 1 << 20;
+        assert!(
+            put_issue_cost_us(&c, big, Protocol::Eager)
+                > put_issue_cost_us(&c, big, Protocol::Rendezvous)
+        );
+    }
+
+    #[test]
+    fn piggyback_saves_lock_overhead() {
+        let mut cv = CvarSet::vanilla();
+        cv.set(CvarId(3), 4096); // piggyback threshold
+        let c = SimConfig::new(Machine::cheyenne(), cv, 64);
+        let small = put_issue_cost_us(&c, 1024, Protocol::Eager);
+        let over = put_issue_cost_us(&c, 8192, Protocol::Eager);
+        // 8 KiB op pays the lock; the 1 KiB op piggybacks it away.
+        let memcpy_delta = network::memcpy_us(&c, 8192) - network::memcpy_us(&c, 1024);
+        assert!(over - small > memcpy_delta + 0.9 * c.machine.lock_overhead_us);
+    }
+
+    #[test]
+    fn delay_requires_both_cvar_and_size() {
+        let mut cv = CvarSet::vanilla();
+        cv.set(CvarId(2), 1);
+        cv.set(CvarId(3), 65_536);
+        let c = SimConfig::new(Machine::cheyenne(), cv, 64);
+        assert!(delayed_for_piggyback(&c, 1024));
+        assert!(!delayed_for_piggyback(&c, 100_000));
+        let c2 = SimConfig::new(Machine::cheyenne(), CvarSet::vanilla(), 64);
+        assert!(!delayed_for_piggyback(&c2, 1024));
+    }
+}

@@ -1,0 +1,76 @@
+//! Per-run measurements collected by the simulator, feeding the MPI_T
+//! performance variables.
+
+use crate::metrics::stats::Summary;
+
+/// Raw observations from one simulated run.
+#[derive(Debug, Default, Clone)]
+pub struct RunStats {
+    /// Wall-clock of the whole run (max image finish time), µs.
+    pub total_time_us: f64,
+    /// Per-flush durations (origin-side), µs.
+    pub flush_times: Vec<f64>,
+    /// Per-put origin-side issue→local-completion durations, µs.
+    pub put_times: Vec<f64>,
+    /// Per-get origin-side blocking durations, µs.
+    pub get_times: Vec<f64>,
+    /// Unexpected-message-queue length samples (at eager arrivals).
+    pub umq_samples: Vec<f64>,
+    /// Counters.
+    pub eager_msgs: u64,
+    pub rendezvous_msgs: u64,
+    pub piggybacked_ops: u64,
+    pub bytes_sent: u64,
+    pub yields: u64,
+    pub events_processed: u64,
+    pub collectives: u64,
+}
+
+impl RunStats {
+    pub fn flush_summary(&self) -> Summary {
+        Summary::of(&self.flush_times)
+    }
+
+    pub fn put_summary(&self) -> Summary {
+        Summary::of(&self.put_times)
+    }
+
+    pub fn get_summary(&self) -> Summary {
+        Summary::of(&self.get_times)
+    }
+
+    pub fn umq_summary(&self) -> Summary {
+        Summary::of(&self.umq_samples)
+    }
+
+    /// Fraction of point-to-point traffic that went eager.
+    pub fn eager_fraction(&self) -> f64 {
+        let total = self.eager_msgs + self.rendezvous_msgs;
+        if total == 0 {
+            0.0
+        } else {
+            self.eager_msgs as f64 / total as f64
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn eager_fraction_handles_empty() {
+        let s = RunStats::default();
+        assert_eq!(s.eager_fraction(), 0.0);
+    }
+
+    #[test]
+    fn summaries_reflect_samples() {
+        let mut s = RunStats::default();
+        s.flush_times = vec![2.0, 4.0];
+        assert_eq!(s.flush_summary().mean, 3.0);
+        s.eager_msgs = 3;
+        s.rendezvous_msgs = 1;
+        assert_eq!(s.eager_fraction(), 0.75);
+    }
+}

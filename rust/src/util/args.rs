@@ -1,0 +1,123 @@
+//! Tiny CLI argument parser (no `clap` in the offline image).
+//!
+//! Supports `--flag`, `--key value`, and positional arguments, with typed
+//! getters that produce readable errors.
+
+use std::collections::BTreeMap;
+
+/// Parsed command line: positionals + `--key [value]` options.
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    pub positional: Vec<String>,
+    pub options: BTreeMap<String, String>,
+    pub flags: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of raw arguments (not including argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(raw: I) -> Args {
+        let mut out = Args::default();
+        let mut iter = raw.into_iter().peekable();
+        while let Some(arg) = iter.next() {
+            if let Some(key) = arg.strip_prefix("--") {
+                if let Some((k, v)) = key.split_once('=') {
+                    out.options.insert(k.to_string(), v.to_string());
+                } else if iter
+                    .peek()
+                    .map(|n| !n.starts_with("--"))
+                    .unwrap_or(false)
+                {
+                    let v = iter.next().unwrap();
+                    out.options.insert(key.to_string(), v);
+                } else {
+                    out.flags.push(key.to_string());
+                }
+            } else {
+                out.positional.push(arg);
+            }
+        }
+        out
+    }
+
+    pub fn from_env() -> Args {
+        Self::parse(std::env::args().skip(1))
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.options.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.get(name).unwrap_or(default)
+    }
+
+    pub fn usize_or(&self, name: &str, default: usize) -> anyhow::Result<usize> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| anyhow::anyhow!("--{name} expects an integer, got {v:?}")),
+        }
+    }
+
+    pub fn u64_or(&self, name: &str, default: u64) -> anyhow::Result<u64> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| anyhow::anyhow!("--{name} expects an integer, got {v:?}")),
+        }
+    }
+
+    pub fn f64_or(&self, name: &str, default: f64) -> anyhow::Result<f64> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| anyhow::anyhow!("--{name} expects a number, got {v:?}")),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(items: &[&str]) -> Args {
+        Args::parse(items.iter().map(|s| s.to_string()))
+    }
+
+    #[test]
+    fn positionals_options_flags() {
+        // Contract: a bare `--word` followed by a non-option token is read
+        // as `--key value`; put flags last or use `--flag` + `--` options.
+        let a = parse(&["tune", "icar", "--images", "256", "--verbose"]);
+        assert_eq!(a.positional, vec!["tune", "icar"]);
+        assert_eq!(a.get("images"), Some("256"));
+        assert!(a.flag("verbose"));
+    }
+
+    #[test]
+    fn equals_form() {
+        let a = parse(&["--seed=42"]);
+        assert_eq!(a.u64_or("seed", 0).unwrap(), 42);
+    }
+
+    #[test]
+    fn typed_errors() {
+        let a = parse(&["--images", "abc"]);
+        assert!(a.usize_or("images", 1).is_err());
+        assert_eq!(a.usize_or("missing", 7).unwrap(), 7);
+    }
+
+    #[test]
+    fn trailing_flag() {
+        let a = parse(&["--dry-run"]);
+        assert!(a.flag("dry-run"));
+        assert!(a.get("dry-run").is_none());
+    }
+}

@@ -1,0 +1,118 @@
+//! Minimal benchmark harness (no `criterion` in the offline image).
+//!
+//! Each `benches/*.rs` is a `harness = false` binary that uses this module
+//! to time closures with warmup + repeated samples and print a stable,
+//! paper-style table. Statistics reported: median, mean, p10/p90.
+
+use std::time::Instant;
+
+/// Timing summary over `n` samples of one benchmark case.
+#[derive(Debug, Clone, Copy)]
+pub struct Sample {
+    pub median_ns: f64,
+    pub mean_ns: f64,
+    pub p10_ns: f64,
+    pub p90_ns: f64,
+    pub iters: usize,
+}
+
+impl Sample {
+    pub fn median_ms(&self) -> f64 {
+        self.median_ns / 1e6
+    }
+
+    pub fn median_us(&self) -> f64 {
+        self.median_ns / 1e3
+    }
+}
+
+/// Time `f` with `warmup` throwaway calls then `samples` measured calls.
+pub fn time<F: FnMut()>(warmup: usize, samples: usize, mut f: F) -> Sample {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut ns: Vec<f64> = Vec::with_capacity(samples);
+    for _ in 0..samples {
+        let t0 = Instant::now();
+        f();
+        ns.push(t0.elapsed().as_nanos() as f64);
+    }
+    ns.sort_by(|a, b| a.total_cmp(b));
+    let pick = |q: f64| ns[(q * (ns.len() - 1) as f64).round() as usize];
+    Sample {
+        median_ns: pick(0.5),
+        mean_ns: ns.iter().sum::<f64>() / ns.len() as f64,
+        p10_ns: pick(0.1),
+        p90_ns: pick(0.9),
+        iters: samples,
+    }
+}
+
+/// Simple fixed-width table printer for bench output.
+pub struct Table {
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(headers: &[&str]) -> Table {
+        Table { headers: headers.iter().map(|s| s.to_string()).collect(), rows: vec![] }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.headers.len(), "row arity mismatch");
+        self.rows.push(cells);
+    }
+
+    pub fn print(&self) {
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let line = |cells: &[String]| {
+            let cols: Vec<String> = cells
+                .iter()
+                .enumerate()
+                .map(|(i, c)| format!("{:<w$}", c, w = widths[i]))
+                .collect();
+            println!("| {} |", cols.join(" | "));
+        };
+        line(&self.headers);
+        let sep: Vec<String> = widths.iter().map(|w| "-".repeat(*w)).collect();
+        println!("|-{}-|", sep.join("-|-"));
+        for row in &self.rows {
+            line(row);
+        }
+    }
+}
+
+/// `black_box` stand-in: defeat constant folding on bench inputs.
+#[inline]
+pub fn opaque<T>(x: T) -> T {
+    // std::hint::black_box is stable since 1.66
+    std::hint::black_box(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn time_reports_ordered_quantiles() {
+        let s = time(2, 32, || {
+            opaque((0..1000).sum::<u64>());
+        });
+        assert!(s.p10_ns <= s.median_ns && s.median_ns <= s.p90_ns);
+        assert!(s.median_ns > 0.0);
+        assert_eq!(s.iters, 32);
+    }
+
+    #[test]
+    #[should_panic(expected = "arity")]
+    fn table_checks_arity() {
+        let mut t = Table::new(&["a", "b"]);
+        t.row(vec!["1".into()]);
+    }
+}

@@ -1,0 +1,10 @@
+//! Self-contained utilities (the image vendors no general-purpose crates:
+//! no `rand`, `serde`, `clap`, `criterion` or `proptest`), so the PRNG,
+//! JSON codec, CLI parsing, bench harness and property-testing helpers
+//! live here.
+
+pub mod args;
+pub mod bench;
+pub mod json;
+pub mod prop;
+pub mod rng;

@@ -1,0 +1,59 @@
+//! Lightweight property-testing helper (no `proptest` in the offline
+//! image): run a closure over many seeded random cases and report the
+//! first failing seed so failures reproduce deterministically.
+
+use crate::util::rng::Rng;
+
+/// Number of cases per property (override with `AITUNING_PROP_CASES`).
+pub fn default_cases() -> usize {
+    std::env::var("AITUNING_PROP_CASES")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(128)
+}
+
+/// Run `prop` over `cases` seeded RNGs; panic with the failing seed.
+///
+/// `prop` returns `Err(reason)` (or panics) to fail a case.
+pub fn forall<F>(name: &str, cases: usize, mut prop: F)
+where
+    F: FnMut(&mut Rng) -> Result<(), String>,
+{
+    for case in 0..cases {
+        let seed = 0x5eed_0000u64 + case as u64;
+        let mut rng = Rng::new(seed);
+        if let Err(reason) = prop(&mut rng) {
+            panic!("property {name:?} failed (seed {seed:#x}, case {case}): {reason}");
+        }
+    }
+}
+
+/// Assert-like helper usable inside `forall` closures.
+#[macro_export]
+macro_rules! prop_assert {
+    ($cond:expr, $($fmt:tt)+) => {
+        if !$cond {
+            return Err(format!($($fmt)+));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passes_when_property_holds() {
+        forall("u32 halves", 64, |rng| {
+            let x = rng.next_u32() as u64;
+            prop_assert!(x / 2 <= x, "half exceeded original: {x}");
+            Ok(())
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "seed")]
+    fn reports_failing_seed() {
+        forall("always false", 4, |_| Err("nope".into()));
+    }
+}

@@ -1,0 +1,128 @@
+//! CloverLeaf — 2-D structured compressible hydrodynamics (PGAS/CAF
+//! version, Mallinson et al. PGAS'14). One of the paper's four training
+//! codes.
+//!
+//! Pattern: 2-D domain decomposition, per-step 4-neighbour halo exchange
+//! with *pairwise* synchronization (`sync images`), plus a global `dt`
+//! reduction every step. Well load-balanced; medium halos (tens of KiB)
+//! that straddle eager/rendezvous as image counts change.
+
+use super::spec::Workload;
+use crate::coarray::CafProgram;
+use crate::util::rng::Rng;
+
+/// CloverLeaf communication skeleton.
+#[derive(Debug, Clone)]
+pub struct CloverLeaf {
+    /// Global cells per side (square grid).
+    pub n: usize,
+    /// Hydro timesteps.
+    pub steps: usize,
+    /// Compute per cell per step, µs.
+    pub cell_us: f64,
+    /// Fields exchanged per halo round.
+    pub nfields: usize,
+}
+
+impl Default for CloverLeaf {
+    fn default() -> CloverLeaf {
+        CloverLeaf { n: 4096, steps: 25, cell_us: 0.004, nfields: 4 }
+    }
+}
+
+/// Near-square process grid (px × py = images, px ≤ py).
+pub fn process_grid(images: usize) -> (usize, usize) {
+    let mut px = (images as f64).sqrt() as usize;
+    while px > 1 && images % px != 0 {
+        px -= 1;
+    }
+    (px.max(1), images / px.max(1))
+}
+
+impl CloverLeaf {
+    fn halo_bytes(&self, images: usize) -> u64 {
+        let (px, py) = process_grid(images);
+        let tile = self.n / px.max(py).max(1);
+        (tile.max(16) * self.nfields * 8) as u64
+    }
+
+    fn compute_us(&self, images: usize) -> f64 {
+        (self.n * self.n) as f64 / images as f64 * self.cell_us
+    }
+}
+
+impl Workload for CloverLeaf {
+    fn name(&self) -> &'static str {
+        "cloverleaf"
+    }
+
+    fn min_images(&self) -> usize {
+        4
+    }
+
+    fn build(&self, images: usize, _rng: &mut Rng) -> Vec<CafProgram> {
+        assert!(images >= 4, "CloverLeaf needs a 2-D grid (≥4 images)");
+        let (px, py) = process_grid(images);
+        let halo = self.halo_bytes(images);
+        let compute = self.compute_us(images);
+        (1..=images)
+            .map(|img| {
+                let mut p = CafProgram::new(img, images);
+                let r = img - 1;
+                let (x, y) = (r % px, r / px);
+                // 4-neighbour torus
+                let west = (y * px + (x + px - 1) % px) + 1;
+                let east = (y * px + (x + 1) % px) + 1;
+                let north = (((y + py - 1) % py) * px + x) + 1;
+                let south = (((y + 1) % py) * px + x) + 1;
+                let neighbors: Vec<usize> =
+                    [west, east, north, south].into_iter().filter(|&n| n != img).collect();
+                for _ in 0..self.steps {
+                    p.compute(compute);
+                    for &n in &neighbors {
+                        p.put(n, halo);
+                    }
+                    for &n in &neighbors {
+                        p.sync_images(n);
+                    }
+                    p.co_sum(8); // dt reduction
+                }
+                p
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coarray::{lower_all, RuntimeOptions};
+    use crate::mpi_t::CvarSet;
+    use crate::simmpi::{Engine, Machine, SimConfig};
+
+    #[test]
+    fn grid_factorization() {
+        assert_eq!(process_grid(16), (4, 4));
+        assert_eq!(process_grid(8), (2, 4));
+        assert_eq!(process_grid(7), (1, 7));
+    }
+
+    #[test]
+    fn runs_without_deadlock() {
+        let clover = CloverLeaf { steps: 2, ..CloverLeaf::default() };
+        let mut rng = Rng::new(3);
+        let progs = clover.build(16, &mut rng);
+        let lowered = lower_all(&progs, &RuntimeOptions::default());
+        let mut cfg = SimConfig::new(Machine::cheyenne(), CvarSet::vanilla(), 16);
+        cfg.noise = 0.0;
+        let stats = Engine::new(cfg, lowered).run();
+        assert_eq!(stats.collectives, 2); // one dt reduction per step
+        assert!(stats.total_time_us > 0.0);
+    }
+
+    #[test]
+    fn halos_shrink_with_scale() {
+        let clover = CloverLeaf::default();
+        assert!(clover.halo_bytes(256) <= clover.halo_bytes(64));
+    }
+}

@@ -1,0 +1,99 @@
+//! Lattice-Boltzmann flow solver (CAF port, cf. Rosales XSW'13) — one of
+//! the paper's training codes.
+//!
+//! Pattern: 1-D slab decomposition; per step a collide (compute) phase
+//! then streaming of distribution functions to the two slab neighbours
+//! (medium puts), with a density/momentum reduction every few steps.
+//! Very regular and balanced; mostly eager-size messages — a contrast to
+//! ICAR that teaches the agent protocol thresholds don't always bind.
+
+use super::spec::Workload;
+use crate::coarray::CafProgram;
+use crate::util::rng::Rng;
+
+/// LBM communication skeleton (D2Q9-style slabs).
+#[derive(Debug, Clone)]
+pub struct LatticeBoltzmann {
+    /// Lattice sites per side (square lattice).
+    pub n: usize,
+    /// Timesteps.
+    pub steps: usize,
+    /// Compute per site per step, µs.
+    pub site_us: f64,
+    /// Distributions streamed across a slab boundary (of 9, 3 cross).
+    pub cross_dists: usize,
+    /// Reduce macroscopic quantities every `reduce_every` steps.
+    pub reduce_every: usize,
+}
+
+impl Default for LatticeBoltzmann {
+    fn default() -> LatticeBoltzmann {
+        LatticeBoltzmann { n: 2048, steps: 40, site_us: 0.003, cross_dists: 3, reduce_every: 5 }
+    }
+}
+
+impl LatticeBoltzmann {
+    fn boundary_bytes(&self) -> u64 {
+        (self.n * self.cross_dists * 8) as u64
+    }
+
+    fn compute_us(&self, images: usize) -> f64 {
+        (self.n * self.n) as f64 / images as f64 * self.site_us
+    }
+}
+
+impl Workload for LatticeBoltzmann {
+    fn name(&self) -> &'static str {
+        "lattice_boltzmann"
+    }
+
+    fn build(&self, images: usize, _rng: &mut Rng) -> Vec<CafProgram> {
+        assert!(images >= 2);
+        let boundary = self.boundary_bytes();
+        let compute = self.compute_us(images);
+        (1..=images)
+            .map(|img| {
+                let mut p = CafProgram::new(img, images);
+                let up = if img == 1 { images } else { img - 1 };
+                let down = if img == images { 1 } else { img + 1 };
+                for step in 0..self.steps {
+                    p.compute(compute); // collide
+                    p.put(up, boundary); // stream up
+                    p.put(down, boundary); // stream down
+                    p.sync_all();
+                    if step % self.reduce_every == self.reduce_every - 1 {
+                        p.co_sum(24); // rho, ux, uy
+                    }
+                }
+                p
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coarray::{lower_all, RuntimeOptions};
+    use crate::mpi_t::CvarSet;
+    use crate::simmpi::{Engine, Machine, SimConfig};
+
+    #[test]
+    fn boundary_is_eager_sized_by_default() {
+        let lbm = LatticeBoltzmann::default();
+        assert!(lbm.boundary_bytes() <= 131_072, "{}", lbm.boundary_bytes());
+    }
+
+    #[test]
+    fn runs_and_reduces() {
+        let lbm = LatticeBoltzmann { steps: 5, ..LatticeBoltzmann::default() };
+        let mut rng = Rng::new(4);
+        let progs = lbm.build(8, &mut rng);
+        let lowered = lower_all(&progs, &RuntimeOptions::default());
+        let mut cfg = SimConfig::new(Machine::edison(), CvarSet::vanilla(), 8);
+        cfg.noise = 0.0;
+        let stats = Engine::new(cfg, lowered).run();
+        assert_eq!(stats.collectives, 1); // steps=5, reduce_every=5
+        assert_eq!(stats.eager_msgs, 8 * 5 * 2);
+    }
+}

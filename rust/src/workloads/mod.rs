@@ -1,0 +1,29 @@
+//! Communication skeletons of the paper's CAF codes (§6).
+//!
+//! The paper trains AITuning on four coarray-Fortran codes — CloverLeaf,
+//! a Lattice-Boltzmann solver, UCLA's Skeleton PIC, and the Parallel
+//! Research Kernels — and evaluates on ICAR, NCAR's intermediate-
+//! complexity atmospheric model. We model each as its *communication
+//! skeleton*: the per-timestep pattern of puts/gets/syncs/collectives
+//! with realistic message sizes, synchronization structure, compute/
+//! communication ratio, and load imbalance, authored against the CAF
+//! surface in [`crate::coarray`].
+//!
+//! Each skeleton's knob sensitivities (which cvars matter) emerge from
+//! its pattern, not from hard-coding — e.g. ICAR's medium-size halo puts
+//! land just above the default eager threshold, so raising
+//! `CH3_EAGER_MAX_MSG_SIZE` or enabling `ASYNC_PROGRESS` both help, as
+//! the paper found (§6.2).
+
+mod cloverleaf;
+mod icar;
+mod lattice_boltzmann;
+mod pic;
+pub mod prk;
+mod spec;
+
+pub use cloverleaf::CloverLeaf;
+pub use icar::Icar;
+pub use lattice_boltzmann::LatticeBoltzmann;
+pub use pic::SkeletonPic;
+pub use spec::{Workload, WorkloadKind, WorkloadSpec};

@@ -1,0 +1,122 @@
+//! Skeleton Particle-in-Cell (Decyk, Comp. Phys. Comm. 1995) — one of
+//! the paper's training codes.
+//!
+//! Pattern: 1-D field decomposition; per step a push/deposit compute
+//! phase whose cost follows the (moving, unbalanced) particle
+//! population, then particle migration to the two neighbours as
+//! *variable-size* puts, then a guard-cell field exchange of small puts
+//! and a pairwise sync. The strong imbalance plus many smaller messages
+//! builds unexpected-queue pressure — the landscape region where eager
+//! thresholds, piggybacking and poll/yield interact.
+
+use super::spec::Workload;
+use crate::coarray::CafProgram;
+use crate::util::rng::Rng;
+
+/// Skeleton PIC communication skeleton.
+#[derive(Debug, Clone)]
+pub struct SkeletonPic {
+    /// Particles per image (average).
+    pub particles_per_image: usize,
+    /// Timesteps.
+    pub steps: usize,
+    /// Compute per particle per step, µs.
+    pub particle_us: f64,
+    /// Fraction of particles migrating per step (average).
+    pub migration_rate: f64,
+    /// Bytes per particle (position, velocity, charge).
+    pub particle_bytes: u64,
+    /// Guard-cell field exchange size.
+    pub guard_bytes: u64,
+    /// Per-image population imbalance amplitude (fraction).
+    pub imbalance: f64,
+}
+
+impl Default for SkeletonPic {
+    fn default() -> SkeletonPic {
+        SkeletonPic {
+            particles_per_image: 200_000,
+            steps: 30,
+            particle_us: 0.002,
+            migration_rate: 0.01,
+            particle_bytes: 48,
+            guard_bytes: 4096,
+            imbalance: 0.5,
+        }
+    }
+}
+
+impl Workload for SkeletonPic {
+    fn name(&self) -> &'static str {
+        "skeleton_pic"
+    }
+
+    fn build(&self, images: usize, rng: &mut Rng) -> Vec<CafProgram> {
+        assert!(images >= 2);
+        // Static density profile: a beam bunched in the middle images.
+        let pops: Vec<f64> = (0..images)
+            .map(|i| {
+                let x = (i as f64 + 0.5) / images as f64;
+                let beam = 1.0 + self.imbalance * (-(x - 0.5) * (x - 0.5) * 24.0).exp();
+                beam * (1.0 + 0.1 * rng.f64())
+            })
+            .collect();
+        (1..=images)
+            .map(|img| {
+                let mut p = CafProgram::new(img, images);
+                let up = if img == 1 { images } else { img - 1 };
+                let down = if img == images { 1 } else { img + 1 };
+                let pop = self.particles_per_image as f64 * pops[img - 1];
+                let compute = pop * self.particle_us;
+                let migrants =
+                    ((pop * self.migration_rate / 2.0) as u64).max(1) * self.particle_bytes;
+                for _ in 0..self.steps {
+                    p.compute(compute); // push + deposit
+                    p.put(up, migrants);
+                    p.put(down, migrants);
+                    p.put(up, self.guard_bytes); // guard cells
+                    p.put(down, self.guard_bytes);
+                    p.sync_images(up);
+                    p.sync_images(down);
+                }
+                p
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coarray::{lower_all, RuntimeOptions};
+    use crate::mpi_t::CvarSet;
+    use crate::simmpi::{Engine, Machine, SimConfig};
+
+    #[test]
+    fn beam_profile_is_unbalanced() {
+        let pic = SkeletonPic::default();
+        let mut rng = Rng::new(5);
+        let progs = pic.build(16, &mut rng);
+        let compute = |p: &CafProgram| match p.ops[0] {
+            crate::coarray::CafOp::Compute { us } => us,
+            _ => panic!(),
+        };
+        let mid = compute(&progs[7]);
+        let edge = compute(&progs[0]);
+        assert!(mid > edge * 1.2, "beam centre must be heavier: {mid} vs {edge}");
+    }
+
+    #[test]
+    fn runs_with_umq_pressure() {
+        let pic = SkeletonPic { steps: 4, ..SkeletonPic::default() };
+        let mut rng = Rng::new(6);
+        let progs = pic.build(8, &mut rng);
+        let lowered = lower_all(&progs, &RuntimeOptions::default());
+        let mut cfg = SimConfig::new(Machine::cheyenne(), CvarSet::vanilla(), 8);
+        cfg.noise = 0.0;
+        let stats = Engine::new(cfg, lowered).run();
+        // Unbalanced senders -> some eager arrivals find targets busy.
+        assert!(stats.umq_summary().max >= 1.0);
+        assert!(stats.events_processed > 0);
+    }
+}

@@ -1,0 +1,17 @@
+//! Parallel Research Kernels (Van der Wijngaart & Mattson, HPEC'14) —
+//! the paper's fourth training code family. Three kernels with sharply
+//! different communication characters:
+//!
+//! * [`Stencil`] — 2-D star stencil: small 4-neighbour halos, balanced;
+//! * [`Transpose`] — staged all-to-all of tiles: message-count stress,
+//!   where piggybacking and eager thresholds dominate;
+//! * [`SynchP2p`] — pipelined wavefront: pure latency/progress stress,
+//!   the kernel most sensitive to poll/yield and async progress.
+
+mod p2p;
+mod stencil;
+mod transpose;
+
+pub use p2p::SynchP2p;
+pub use stencil::Stencil;
+pub use transpose::Transpose;

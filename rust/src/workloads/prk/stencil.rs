@@ -1,0 +1,114 @@
+//! PRK Stencil: 2-D star-shaped stencil with 4-neighbour halo exchange.
+
+use crate::coarray::CafProgram;
+use crate::util::rng::Rng;
+use crate::workloads::cloverleaf::process_grid;
+use crate::workloads::spec::Workload;
+
+/// PRK stencil kernel skeleton.
+#[derive(Debug, Clone)]
+pub struct Stencil {
+    /// Grid points per side.
+    pub n: usize,
+    /// Iterations.
+    pub steps: usize,
+    /// Compute per point per iteration, µs.
+    pub point_us: f64,
+    /// Stencil radius (halo width).
+    pub radius: usize,
+}
+
+impl Default for Stencil {
+    fn default() -> Stencil {
+        Stencil { n: 8192, steps: 30, point_us: 0.0012, radius: 2 }
+    }
+}
+
+impl Workload for Stencil {
+    fn name(&self) -> &'static str {
+        "prk_stencil"
+    }
+
+    fn min_images(&self) -> usize {
+        4
+    }
+
+    fn build(&self, images: usize, _rng: &mut Rng) -> Vec<CafProgram> {
+        assert!(images >= 4);
+        let (px, py) = process_grid(images);
+        let tile = self.n / px.max(py).max(1);
+        let halo = (tile.max(16) * self.radius * 8) as u64;
+        let compute = (self.n * self.n) as f64 / images as f64 * self.point_us;
+        (1..=images)
+            .map(|img| {
+                let mut p = CafProgram::new(img, images);
+                let r = img - 1;
+                let (x, y) = (r % px, r / px);
+                let mut neighbors = Vec::new();
+                if x > 0 {
+                    neighbors.push(y * px + x - 1 + 1);
+                }
+                if x + 1 < px {
+                    neighbors.push(y * px + x + 1 + 1);
+                }
+                if y > 0 {
+                    neighbors.push((y - 1) * px + x + 1);
+                }
+                if y + 1 < py {
+                    neighbors.push((y + 1) * px + x + 1);
+                }
+                for _ in 0..self.steps {
+                    p.compute(compute);
+                    for &n in &neighbors {
+                        p.put(n, halo);
+                    }
+                    p.sync_all();
+                }
+                p.co_sum(8); // final norm check
+                p
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coarray::{lower_all, RuntimeOptions};
+    use crate::mpi_t::CvarSet;
+    use crate::simmpi::{Engine, Machine, SimConfig};
+
+    #[test]
+    fn interior_images_have_four_neighbors() {
+        let st = Stencil { steps: 1, ..Stencil::default() };
+        let mut rng = Rng::new(7);
+        let progs = st.build(16, &mut rng); // 4x4 grid
+        // Image at grid (1,1) = rank 5 = image 6: interior.
+        let puts = progs[5]
+            .ops
+            .iter()
+            .filter(|op| matches!(op, crate::coarray::CafOp::Put { .. }))
+            .count();
+        assert_eq!(puts, 4);
+        // Corner image 1: two neighbours.
+        let corner_puts = progs[0]
+            .ops
+            .iter()
+            .filter(|op| matches!(op, crate::coarray::CafOp::Put { .. }))
+            .count();
+        assert_eq!(corner_puts, 2);
+    }
+
+    #[test]
+    fn runs_clean() {
+        let st = Stencil { steps: 2, ..Stencil::default() };
+        let mut rng = Rng::new(8);
+        let progs = st.build(16, &mut rng);
+        let lowered = lower_all(&progs, &RuntimeOptions::default());
+        let mut cfg = SimConfig::new(Machine::edison(), CvarSet::vanilla(), 16);
+        cfg.noise = 0.0;
+        let stats = Engine::new(cfg, lowered).run();
+        assert!(stats.total_time_us > 0.0);
+        assert_eq!(stats.collectives, 1);
+    }
+}

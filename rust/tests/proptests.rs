@@ -1,0 +1,203 @@
+//! Property-based tests over coordinator and simulator invariants
+//! (in-crate `util::prop` harness; seeds reproduce failures).
+
+use aituning::coordinator::{build_state, Action, RelativeTracker, NUM_ACTIONS, STATE_DIM};
+use aituning::coordinator::{ReplayBuffer, Transition};
+use aituning::metrics::stats::Summary;
+use aituning::mpi_t::{CvarDomain, CvarId, CvarSet, PvarId, PvarStats, MPICH_CVARS, NUM_CVARS};
+use aituning::prop_assert;
+use aituning::simmpi::{Engine, Machine, Op, SimConfig};
+use aituning::util::prop::forall;
+use aituning::util::rng::Rng;
+
+fn random_cvars(rng: &mut Rng) -> CvarSet {
+    let mut cv = CvarSet::vanilla();
+    for i in 0..NUM_CVARS {
+        // Intentionally out-of-domain raw values: set() must clamp.
+        cv.set(CvarId(i), rng.range_i64(-1 << 40, 1 << 40));
+    }
+    cv
+}
+
+#[test]
+fn prop_cvar_set_always_in_domain() {
+    forall("cvar clamping", 256, |rng| {
+        let cv = random_cvars(rng);
+        for (i, d) in MPICH_CVARS.iter().enumerate() {
+            let v = cv.get(CvarId(i));
+            match d.domain {
+                CvarDomain::Bool => prop_assert!(v == 0 || v == 1, "bool {i} = {v}"),
+                CvarDomain::Int { lo, hi, .. } => {
+                    prop_assert!((lo..=hi).contains(&v), "int {i} = {v} outside [{lo},{hi}]")
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_actions_keep_configs_valid_and_invertible() {
+    forall("action domain closure", 256, |rng| {
+        let cv = random_cvars(rng);
+        let idx = rng.below(NUM_ACTIONS as u64) as usize;
+        let action = Action::from_index(idx);
+        let next = action.apply(&cv);
+        // closure: result still in domain
+        for (i, d) in MPICH_CVARS.iter().enumerate() {
+            let v = next.get(CvarId(i));
+            prop_assert!(d.clamp(v) == v, "action {idx} left cvar {i} out of domain: {v}");
+        }
+        // at most one cvar changed
+        let changed: Vec<usize> = (0..NUM_CVARS)
+            .filter(|&i| next.get(CvarId(i)) != cv.get(CvarId(i)))
+            .collect();
+        prop_assert!(changed.len() <= 1, "action {idx} changed {changed:?}");
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_action_index_round_trip() {
+    forall("action index bijection", 64, |rng| {
+        let idx = rng.below(NUM_ACTIONS as u64) as usize;
+        prop_assert!(
+            Action::from_index(idx).index() == idx,
+            "index {idx} did not round-trip"
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_state_features_always_finite_and_bounded() {
+    forall("state finiteness", 256, |rng| {
+        let mut stats = PvarStats::default();
+        for id in 0..5 {
+            let vals: Vec<f64> = (0..rng.range_i64(1, 20)).map(|_| rng.range_f64(0.0, 1e9)).collect();
+            stats.summaries.push((PvarId(id), Summary::of(&vals)));
+        }
+        let mut tracker = RelativeTracker::new();
+        tracker.record_reference(&stats);
+        let cv = random_cvars(rng);
+        let images = 1 << rng.range_i64(1, 11);
+        let s = build_state(&stats, &tracker, &cv, images as usize, rng.below(40) as usize, rng.f64());
+        for (i, v) in s.iter().enumerate() {
+            prop_assert!(v.is_finite(), "feature {i} not finite");
+            prop_assert!(v.abs() <= 5.0, "feature {i} unbounded: {v}");
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_replay_sample_always_well_formed() {
+    forall("replay batch shape", 128, |rng| {
+        let cap = rng.range_i64(1, 64) as usize;
+        let mut rb = ReplayBuffer::new(cap);
+        let n = rng.range_i64(1, 100) as usize;
+        for _ in 0..n {
+            let mut state = [0.0f32; STATE_DIM];
+            state[0] = rng.f64() as f32;
+            rb.push(Transition {
+                state,
+                action: rng.below(NUM_ACTIONS as u64) as usize,
+                reward: rng.range_f64(-1.0, 1.0) as f32,
+                next_state: state,
+                done: rng.chance(0.1),
+            });
+        }
+        prop_assert!(rb.len() == n.min(cap), "ring size wrong");
+        let batch = rb.sample(32, rng);
+        prop_assert!(
+            batch.validate(32, STATE_DIM, NUM_ACTIONS).is_ok(),
+            "batch malformed"
+        );
+        // one-hot rows sum to exactly 1
+        for i in 0..32 {
+            let row = &batch.actions_onehot[i * NUM_ACTIONS..(i + 1) * NUM_ACTIONS];
+            let sum: f32 = row.iter().sum();
+            prop_assert!((sum - 1.0).abs() < 1e-6, "row {i} one-hot sum {sum}");
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_simulator_time_nonnegative_and_monotone_in_compute() {
+    forall("sim sanity", 48, |rng| {
+        let images = rng.range_i64(2, 12) as usize;
+        let base_us = rng.range_f64(10.0, 500.0);
+        let mk = |factor: f64| -> Vec<Vec<Op>> {
+            (0..images)
+                .map(|i| {
+                    let next = (i + 1) % images;
+                    vec![
+                        Op::Compute { us: base_us * factor },
+                        Op::Put { target: next, bytes: 1 + (i as u64 * 997) % 300_000 },
+                        Op::SyncAll,
+                    ]
+                })
+                .collect()
+        };
+        let run = |progs: Vec<Vec<Op>>| {
+            let mut cfg = SimConfig::new(Machine::cheyenne(), CvarSet::vanilla(), images);
+            cfg.noise = 0.0;
+            Engine::new(cfg, progs).run().total_time_us
+        };
+        let t1 = run(mk(1.0));
+        let t2 = run(mk(2.0));
+        prop_assert!(t1 > 0.0, "time must be positive: {t1}");
+        prop_assert!(t2 > t1, "doubling compute must not speed things up: {t1} vs {t2}");
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_simulator_conserves_messages() {
+    forall("message conservation", 48, |rng| {
+        let images = rng.range_i64(2, 10) as usize;
+        let puts_per_image = rng.range_i64(1, 8) as usize;
+        let progs: Vec<Vec<Op>> = (0..images)
+            .map(|i| {
+                let mut ops = Vec::new();
+                for k in 0..puts_per_image {
+                    let target = (i + 1 + k % (images - 1)) % images;
+                    let target = if target == i { (i + 1) % images } else { target };
+                    ops.push(Op::Put { target, bytes: 1024 * (1 + k as u64) });
+                }
+                ops.push(Op::SyncAll);
+                ops
+            })
+            .collect();
+        let mut cfg = SimConfig::new(Machine::edison(), CvarSet::vanilla(), images);
+        cfg.noise = 0.0;
+        let stats = Engine::new(cfg, progs).run();
+        let sent = (images * puts_per_image) as u64;
+        prop_assert!(
+            stats.eager_msgs + stats.rendezvous_msgs == sent,
+            "messages lost or duplicated: {} + {} != {sent}",
+            stats.eager_msgs,
+            stats.rendezvous_msgs
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_relative_tracker_sign_convention() {
+    forall("relative sign", 128, |rng| {
+        let reference = rng.range_f64(1.0, 1e6);
+        let mut stats = PvarStats::default();
+        stats.summaries.push((PvarId(4), Summary::of(&[reference])));
+        let mut tr = RelativeTracker::new();
+        tr.record_reference(&stats);
+        let cur = rng.range_f64(0.5, 2.0) * reference;
+        let rel = tr.relative_max(PvarId(4), cur);
+        prop_assert!(
+            (cur < reference) == (rel > 0.0) || cur == reference,
+            "sign convention broken: ref {reference}, cur {cur}, rel {rel}"
+        );
+        Ok(())
+    });
+}
