@@ -1,13 +1,17 @@
-//! §6 training campaign driver (scaled).
+//! §6 training campaign driver (scaled), on the parallel campaign
+//! engine.
 //!
 //! The paper trains AITuning on four CAF codes (CloverLeaf, LBM,
 //! Skeleton PIC, PRK) at 64–2048 processes on two machines, ~5000 runs
 //! total. This driver runs the same campaign shape — both machine
 //! models, all four training codes, a range of image counts — scaled to
-//! minutes of simulated-cluster time. Pass `--full` for the larger
-//! sweep (64..512 images), `--quick` for a smoke pass.
+//! minutes of simulated-cluster time, with every (workload, images)
+//! cell an independent seeded job fanned across all cores. Pass
+//! `--full` for the larger sweep (64..512 images), `--quick` for a
+//! smoke pass.
 
-use aituning::coordinator::{AgentKind, Controller, TuningConfig};
+use aituning::campaign::{job_grid, CampaignConfig, CampaignEngine};
+use aituning::coordinator::{AgentKind, TuningConfig};
 use aituning::simmpi::Machine;
 use aituning::util::bench::Table;
 use aituning::workloads::WorkloadKind;
@@ -26,36 +30,40 @@ fn main() -> anyhow::Result<()> {
 
     let mut t = Table::new(&["machine", "workload", "images", "reference (µs)", "best gain"]);
     let mut total_runs = 0usize;
+    let mut wall = 0.0f64;
+    let mut workers = 0;
     for machine in [Machine::cheyenne(), Machine::edison()] {
         let agent = if aituning::runtime::default_artifacts_dir().join("manifest.json").exists() {
             AgentKind::Dqn
         } else {
             AgentKind::Tabular
         };
-        let cfg = TuningConfig {
+        let base = TuningConfig {
             machine: machine.clone(),
             agent,
             runs: runs_per,
             seed: 5,
             ..TuningConfig::default()
         };
-        let mut ctl = Controller::new(cfg)?;
-        for kind in WorkloadKind::TRAINING {
-            for &n in image_counts {
-                let out = ctl.tune(kind, n)?;
-                t.row(vec![
-                    machine.name.to_string(),
-                    kind.name().to_string(),
-                    n.to_string(),
-                    format!("{:.0}", out.reference_us),
-                    format!("{:+.1}%", out.improvement() * 100.0),
-                ]);
-            }
+        let jobs = job_grid(&WorkloadKind::TRAINING, image_counts, agent, base.seed);
+        let report = CampaignEngine::new(CampaignConfig { base, workers: 0 }).run(&jobs)?;
+        for r in &report.results {
+            t.row(vec![
+                machine.name.to_string(),
+                r.job.workload.name().to_string(),
+                r.job.images.to_string(),
+                format!("{:.0}", r.outcome.reference_us),
+                format!("{:+.1}%", r.outcome.improvement() * 100.0),
+            ]);
         }
-        total_runs += ctl.lifetime_runs();
+        total_runs += report.total_app_runs();
+        wall += report.wall_clock.as_secs_f64();
+        workers = report.workers;
     }
     println!("=== §6 training campaign (scaled; paper: 5000 runs at 64–2048 procs) ===");
     t.print();
-    println!("\ntotal application runs executed: {total_runs}");
+    println!(
+        "\ntotal application runs executed: {total_runs} in {wall:.2}s on {workers} workers"
+    );
     Ok(())
 }

@@ -2,8 +2,14 @@
 //! ensemble vs single-best vs last-config inference, DQN vs tabular
 //! agent, and AITuning vs the random/evolutionary/human baselines at
 //! equal run budget.
+//!
+//! All fixed-config scoring goes through one campaign engine, so
+//! evaluations fan across worker threads and repeat visits to the same
+//! configuration (the vanilla reference, revisited search points) are
+//! answered from the episode cache instead of re-simulated.
 
 use aituning::baselines::{human_tuned, Evolutionary, RandomSearch, Searcher};
+use aituning::campaign::{CampaignConfig, CampaignEngine, CampaignJob};
 use aituning::coordinator::{AgentKind, Controller, TuningConfig};
 use aituning::mpi_t::CvarSet;
 use aituning::util::bench::Table;
@@ -19,89 +25,133 @@ fn main() -> anyhow::Result<()> {
 
     let base = TuningConfig { runs: budget, seed: 9, ..TuningConfig::default() };
 
-    // Scoring controller (fixed-config evaluation only).
-    let mut scorer =
-        Controller::new(TuningConfig { agent: AgentKind::Tabular, ..base.clone() })?;
-    let vanilla = scorer.evaluate(kind, images, &CvarSet::vanilla(), 3)?;
+    // Scoring engine (fixed-config evaluation only, cached + parallel).
+    let engine = CampaignEngine::new(CampaignConfig {
+        base: TuningConfig { agent: AgentKind::Tabular, ..base.clone() },
+        workers: 0,
+    });
+    let vanilla = engine.evaluate(kind, images, &CvarSet::vanilla(), 3)?;
+    let human = engine.evaluate(kind, images, &human_tuned(), 3)?;
     let pct = |v: f64| format!("{:+.1}%", (vanilla - v) / vanilla * 100.0);
 
     let mut t = Table::new(&["variant", "total (µs)", "vs vanilla"]);
     t.row(vec!["vanilla".into(), format!("{vanilla:.0}"), "+0.0%".into()]);
-    t.row(vec![
-        "human (eager x10)".into(),
-        format!("{:.0}", scorer.evaluate(kind, images, &human_tuned(), 3)?),
-        pct(scorer.evaluate(kind, images, &human_tuned(), 3)?),
-    ]);
+    t.row(vec!["human (eager x10)".into(), format!("{human:.0}"), pct(human)]);
 
-    // --- agent ablation: DQN vs tabular ---
+    // --- agent ablation: DQN vs tabular, run as one parallel campaign ---
     let mut agents = vec![("tabular agent", AgentKind::Tabular)];
     if have_artifacts && !quick {
         agents.insert(0, ("dqn agent", AgentKind::Dqn));
     }
-    for (name, agent) in agents {
-        let mut ctl = Controller::new(TuningConfig { agent, ..base.clone() })?;
-        let out = ctl.tune(kind, images)?;
+    let jobs: Vec<CampaignJob> = agents
+        .iter()
+        .map(|&(_, agent)| CampaignJob { workload: kind, images, agent, seed: base.seed })
+        .collect();
+    let report =
+        CampaignEngine::new(CampaignConfig { base: base.clone(), workers: 0 }).run(&jobs)?;
+    for ((name, _), r) in agents.iter().zip(&report.results) {
         // inference ablation: best vs ensemble vs last
-        let best = scorer.evaluate(kind, images, &out.best, 3)?;
-        let ens = scorer.evaluate(kind, images, &out.ensemble, 3)?;
-        let last = scorer.evaluate(kind, images, &out.log.runs.last().unwrap().cvars, 3)?;
-        t.row(vec![format!("{name}: best-run cfg"), format!("{best:.0}"), pct(best)]);
-        t.row(vec![format!("{name}: ensemble cfg (§5.4)"), format!("{ens:.0}"), pct(ens)]);
-        t.row(vec![format!("{name}: last cfg (no ensemble)"), format!("{last:.0}"), pct(last)]);
+        let out = &r.outcome;
+        let configs = [
+            out.best.clone(),
+            out.ensemble.clone(),
+            out.log.runs.last().unwrap().cvars.clone(),
+        ];
+        let scores = engine.evaluate_batch(kind, images, &configs, 3)?;
+        t.row(vec![format!("{name}: best-run cfg"), format!("{:.0}", scores[0]), pct(scores[0])]);
+        t.row(vec![
+            format!("{name}: ensemble cfg (§5.4)"),
+            format!("{:.0}", scores[1]),
+            pct(scores[1]),
+        ]);
+        t.row(vec![
+            format!("{name}: last cfg (no ensemble)"),
+            format!("{:.0}", scores[2]),
+            pct(scores[2]),
+        ]);
     }
 
     // --- deployment ablation: pre-trained DQN (the paper's §5.4
     //     story: AITuning ships already trained) vs the cold-start
-    //     rows above ---
+    //     rows above. Stays on one controller: the point is the shared
+    //     replay/weights accumulated *across* workloads, which is
+    //     inherently sequential. ---
     if have_artifacts && !quick {
         let mut ctl = Controller::new(TuningConfig { agent: AgentKind::Dqn, ..base.clone() })?;
         for k in aituning::workloads::WorkloadKind::TRAINING {
             let _ = ctl.tune(k, 32)?;
         }
         let out = ctl.tune(kind, images)?;
-        let best = scorer.evaluate(kind, images, &out.best, 3)?;
-        let ens = scorer.evaluate(kind, images, &out.ensemble, 3)?;
-        t.row(vec!["dqn (pre-trained): best-run cfg".into(), format!("{best:.0}"), pct(best)]);
-        t.row(vec!["dqn (pre-trained): ensemble cfg".into(), format!("{ens:.0}"), pct(ens)]);
+        let scores =
+            engine.evaluate_batch(kind, images, &[out.best.clone(), out.ensemble.clone()], 3)?;
+        t.row(vec![
+            "dqn (pre-trained): best-run cfg".into(),
+            format!("{:.0}", scores[0]),
+            pct(scores[0]),
+        ]);
+        t.row(vec![
+            "dqn (pre-trained): ensemble cfg".into(),
+            format!("{:.0}", scores[1]),
+            pct(scores[1]),
+        ]);
     }
 
     // --- Q-target ablation (the paper cites fixed Q-targets but does
     //     not implement them, §5.2) ---
     if have_artifacts && !quick {
-        let mut ctl =
-            Controller::new(TuningConfig { agent: AgentKind::DqnTarget, ..base.clone() })?;
-        let out = ctl.tune(kind, images)?;
-        let v = scorer.evaluate(kind, images, &out.ensemble, 3)?;
+        let report = CampaignEngine::new(CampaignConfig { base: base.clone(), workers: 1 })
+            .run(&[CampaignJob {
+                workload: kind,
+                images,
+                agent: AgentKind::DqnTarget,
+                seed: base.seed,
+            }])?;
+        let v = engine.evaluate(kind, images, &report.results[0].outcome.ensemble, 3)?;
         t.row(vec!["dqn + target network (not in paper)".into(), format!("{v:.0}"), pct(v)]);
     }
 
-    // --- replay ablation (tabular for speed) ---
+    // --- replay ablation (tabular for speed; the refresh cadence lives
+    //     in the base config, so each variant is its own engine) ---
     for (name, refresh) in [("replay refresh on", 200usize), ("replay refresh off", usize::MAX)] {
-        let mut ctl = Controller::new(TuningConfig {
+        let variant = CampaignEngine::new(CampaignConfig {
+            base: TuningConfig {
+                agent: AgentKind::Tabular,
+                replay_refresh_every: refresh,
+                ..base.clone()
+            },
+            workers: 1,
+        });
+        let report = variant.run(&[CampaignJob {
+            workload: kind,
+            images,
             agent: AgentKind::Tabular,
-            replay_refresh_every: refresh,
-            ..base.clone()
-        })?;
-        let out = ctl.tune(kind, images)?;
-        let v = scorer.evaluate(kind, images, &out.ensemble, 3)?;
+            seed: base.seed,
+        }])?;
+        let v = engine.evaluate(kind, images, &report.results[0].outcome.ensemble, 3)?;
         t.row(vec![name.into(), format!("{v:.0}"), pct(v)]);
     }
 
-    // --- search baselines at equal budget ---
+    // --- search baselines at equal budget (batched across workers) ---
     let mut random = RandomSearch::new(101);
     let (_, rnd) = {
-        let mut eval = |cv: &CvarSet| scorer.evaluate(kind, images, cv, 1);
-        random.search(budget, &mut eval)?
+        let mut eval = |cvs: &[CvarSet]| engine.evaluate_batch(kind, images, cvs, 1);
+        random.search_batched(budget, &mut eval)?
     };
     t.row(vec!["random search".into(), format!("{rnd:.0}"), pct(rnd)]);
     let mut evo = Evolutionary::new(102);
     let (_, ev) = {
-        let mut eval = |cv: &CvarSet| scorer.evaluate(kind, images, cv, 1);
-        evo.search(budget, &mut eval)?
+        let mut eval = |cvs: &[CvarSet]| engine.evaluate_batch(kind, images, cvs, 1);
+        evo.search_batched(budget, &mut eval)?
     };
     t.row(vec!["evolutionary (AutoTune-like)".into(), format!("{ev:.0}"), pct(ev)]);
 
     println!("=== Ablations: ICAR @ {images} images, budget {budget} runs ===");
     t.print();
+    println!(
+        "episode cache: {} entries, {} hits / {} misses",
+        engine.cache().len(),
+        engine.cache().hits(),
+        engine.cache().misses()
+    );
     Ok(())
 }

@@ -1,9 +1,16 @@
-//! §6 training-campaign table: the four training codes across scales on
-//! both machine models, reporting reference time and AITuning's best
-//! improvement per cell (a scaled version of the paper's 5000-run,
-//! 64–2048-process campaign).
+//! §6 training-campaign table, driven by the parallel campaign engine:
+//! the four training codes across scales on both machine models,
+//! reporting reference time and AITuning's best improvement per cell
+//! (a scaled version of the paper's 5000-run, 64–2048-process
+//! campaign).
+//!
+//! Every campaign is executed twice — once on 1 worker, once on all
+//! cores — the engine's thread-count invariance is asserted by
+//! fingerprint, and both wall clocks are reported so the parallel
+//! speedup is visible in the output.
 
-use aituning::coordinator::{AgentKind, Controller, TuningConfig};
+use aituning::campaign::{job_grid, CampaignConfig, CampaignEngine};
+use aituning::coordinator::{AgentKind, TuningConfig};
 use aituning::metrics::stats::geomean;
 use aituning::simmpi::Machine;
 use aituning::util::bench::Table;
@@ -29,31 +36,49 @@ fn main() -> anyhow::Result<()> {
     };
 
     let mut t = Table::new(&["machine", "workload", "images", "reference (µs)", "best gain"]);
+    let mut timing = Table::new(&["machine", "jobs", "1 worker", "all cores", "speedup"]);
     let mut gains = Vec::new();
     let mut total_runs = 0;
     for machine in [Machine::cheyenne(), Machine::edison()] {
-        let cfg = TuningConfig {
+        let base = TuningConfig {
             machine: machine.clone(),
             agent,
             runs: runs_per,
             seed: 5,
             ..TuningConfig::default()
         };
-        let mut ctl = Controller::new(cfg)?;
-        for kind in WorkloadKind::TRAINING {
-            for &n in image_counts {
-                let out = ctl.tune(kind, n)?;
-                gains.push(1.0 + out.improvement());
-                t.row(vec![
-                    machine.name.to_string(),
-                    kind.name().to_string(),
-                    n.to_string(),
-                    format!("{:.0}", out.reference_us),
-                    format!("{:+.1}%", out.improvement() * 100.0),
-                ]);
-            }
+        let jobs = job_grid(&WorkloadKind::TRAINING, image_counts, agent, base.seed);
+
+        let serial =
+            CampaignEngine::new(CampaignConfig { base: base.clone(), workers: 1 }).run(&jobs)?;
+        let parallel = CampaignEngine::new(CampaignConfig { base, workers: 0 }).run(&jobs)?;
+        assert_eq!(
+            serial.fingerprint(),
+            parallel.fingerprint(),
+            "campaign results must be bit-identical at 1 and {} workers",
+            parallel.workers
+        );
+
+        for r in &parallel.results {
+            gains.push(1.0 + r.outcome.improvement());
+            t.row(vec![
+                machine.name.to_string(),
+                r.job.workload.name().to_string(),
+                r.job.images.to_string(),
+                format!("{:.0}", r.outcome.reference_us),
+                format!("{:+.1}%", r.outcome.improvement() * 100.0),
+            ]);
         }
-        total_runs += ctl.lifetime_runs();
+        total_runs += parallel.total_app_runs();
+        let s1 = serial.wall_clock.as_secs_f64();
+        let sn = parallel.wall_clock.as_secs_f64();
+        timing.row(vec![
+            machine.name.to_string(),
+            format!("{}", jobs.len()),
+            format!("{s1:.2}s"),
+            format!("{sn:.2}s ({} workers)", parallel.workers),
+            format!("{:.2}x", s1 / sn.max(1e-9)),
+        ]);
     }
     println!("=== §6 training campaign ({agent:?} agent, {runs_per} runs/cell) ===");
     t.print();
@@ -62,5 +87,7 @@ fn main() -> anyhow::Result<()> {
         geomean(&gains),
         total_runs
     );
+    println!("\n=== campaign engine scaling (results verified bit-identical) ===");
+    timing.print();
     Ok(())
 }

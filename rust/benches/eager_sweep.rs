@@ -5,8 +5,14 @@
 //! (the human tuning) converts them to eager and recovers most of the
 //! communication cost; far beyond that, returns flatten (and copies
 //! start to cost).
+//!
+//! Sweep points are independent fixed-config evaluations, so the timing
+//! column fans across the campaign engine's worker pool; one extra
+//! noise-free probe episode per point (same derived problem instance as
+//! the timed runs) classifies the protocol.
 
-use aituning::coordinator::run_episode;
+use aituning::campaign::{CampaignConfig, CampaignEngine};
+use aituning::coordinator::TuningConfig;
 use aituning::mpi_t::{CvarId, CvarSet};
 use aituning::simmpi::Machine;
 use aituning::util::bench::Table;
@@ -20,39 +26,37 @@ fn main() -> anyhow::Result<()> {
     // default 128 KiB .. x32; ICAR's per-round halo is 192 KiB.
     let multipliers = [1i64, 2, 4, 8, 10, 16, 32];
 
+    let engine = CampaignEngine::new(CampaignConfig {
+        base: TuningConfig { machine: machine.clone(), seed: 42, ..TuningConfig::default() },
+        workers: 0,
+    });
+
     let mut t = Table::new(&[
         "images", "eager_max", "x default", "protocol", "total (µs)", "vs default",
     ]);
     for &images in image_counts {
-        let mut rows = Vec::new();
-        let mut default_t = None;
-        for &m in &multipliers {
-            let mut cv = CvarSet::vanilla();
-            let v = 131_072 * m;
-            cv.set(CvarId(5), v);
-            let mut total = 0.0;
-            let mut eager = 0u64;
-            let mut rdv = 0u64;
-            for r in 0..reps {
-                let res = run_episode(
-                    WorkloadKind::Icar, images, &machine, &cv, 0.02, 42, r as u64 + 1,
-                )?;
-                total += res.total_time_us;
-                eager = res.raw.eager_msgs;
-                rdv = res.raw.rendezvous_msgs;
-            }
-            let mean = total / reps as f64;
-            if m == 1 {
-                default_t = Some(mean);
-            }
-            let proto = if eager > rdv { "eager" } else { "rendezvous" };
-            rows.push((m, v, proto, mean));
-        }
-        let d = default_t.unwrap();
-        for (m, v, proto, mean) in rows {
+        let configs: Vec<CvarSet> = multipliers
+            .iter()
+            .map(|&m| {
+                let mut cv = CvarSet::vanilla();
+                cv.set(CvarId(5), 131_072 * m);
+                cv
+            })
+            .collect();
+        let means = engine.evaluate_batch(WorkloadKind::Icar, images, &configs, reps)?;
+
+        let d = means[0];
+        for ((&m, cv), &mean) in multipliers.iter().zip(&configs).zip(&means) {
+            // Noise-free probe run for the protocol classification.
+            let probe = engine.probe_episode(WorkloadKind::Icar, images, cv)?;
+            let proto = if probe.raw.eager_msgs > probe.raw.rendezvous_msgs {
+                "eager"
+            } else {
+                "rendezvous"
+            };
             t.row(vec![
                 images.to_string(),
-                v.to_string(),
+                (131_072 * m).to_string(),
                 format!("x{m}"),
                 proto.to_string(),
                 format!("{mean:.0}"),
@@ -62,5 +66,11 @@ fn main() -> anyhow::Result<()> {
     }
     println!("=== §6.2 eager threshold sweep on ICAR (halo = 192 KiB/round) ===");
     t.print();
+    println!(
+        "episode cache: {} entries ({} hits / {} misses)",
+        engine.cache().len(),
+        engine.cache().hits(),
+        engine.cache().misses()
+    );
     Ok(())
 }

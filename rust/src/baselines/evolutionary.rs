@@ -87,6 +87,57 @@ impl Searcher for Evolutionary {
         population.sort_by(|a, b| a.1.total_cmp(&b.1));
         Ok(population.swap_remove(0))
     }
+
+    /// Within one generation no child's score influences another child,
+    /// so each generation (and the initial vanilla + immigrant seeding)
+    /// is scored as one batch the campaign engine parallelizes.
+    /// Candidate generation consumes the mutation RNG in the same order
+    /// as [`Searcher::search`], so both paths explore identical
+    /// configurations.
+    fn search_batched(
+        &mut self,
+        budget: usize,
+        eval_batch: &mut dyn FnMut(&[CvarSet]) -> Result<Vec<f64>>,
+    ) -> Result<(CvarSet, f64)> {
+        let mut spent = 0usize;
+        let mut population: Vec<(CvarSet, f64)> = Vec::new();
+
+        // Seed generation: vanilla + random immigrants, one batch.
+        let mut seeds = vec![CvarSet::vanilla()];
+        let mut seeder = RandomSearch::new(self.rng.next_u64());
+        while seeds.len() < self.mu && seeds.len() < budget {
+            seeds.push(seeder.sample());
+        }
+        let times = eval_batch(&seeds)?;
+        super::check_batch_len(times.len(), seeds.len())?;
+        spent += seeds.len();
+        population.extend(seeds.into_iter().zip(times));
+
+        while spent < budget {
+            population.sort_by(|a, b| a.1.total_cmp(&b.1));
+            population.truncate(self.mu);
+            let n_children = self.lambda.min(budget - spent);
+            let mut children: Vec<CvarSet> = Vec::with_capacity(n_children);
+            for k in 0..n_children {
+                // Mirror the serial path exactly: there the population
+                // grows by one per child, so parent k indexes into
+                // parents *plus the children generated so far*.
+                let idx = k % (population.len() + k);
+                let parent = if idx < population.len() {
+                    population[idx].0.clone()
+                } else {
+                    children[idx - population.len()].clone()
+                };
+                children.push(self.mutate(&parent));
+            }
+            let times = eval_batch(&children)?;
+            super::check_batch_len(times.len(), children.len())?;
+            spent += children.len();
+            population.extend(children.into_iter().zip(times));
+        }
+        population.sort_by(|a, b| a.1.total_cmp(&b.1));
+        Ok(population.swap_remove(0))
+    }
 }
 
 #[cfg(test)]
@@ -118,6 +169,25 @@ mod tests {
         };
         let (best, _) = evo.search(60, &mut eval).unwrap();
         assert!(best.async_progress());
+    }
+
+    #[test]
+    fn batched_search_matches_serial() {
+        let score = |cv: &CvarSet| {
+            let mut t = 100.0;
+            if cv.async_progress() {
+                t -= 30.0;
+            }
+            t + (cv.eager_max() as f64 - 1_000_000.0).abs() / 1e6
+        };
+        let mut serial = Evolutionary::new(21);
+        let (a, ta) = serial.search(40, &mut |cv: &CvarSet| Ok(score(cv))).unwrap();
+        let mut batched = Evolutionary::new(21);
+        let mut eval_b =
+            |cvs: &[CvarSet]| -> Result<Vec<f64>> { Ok(cvs.iter().map(score).collect()) };
+        let (b, tb) = batched.search_batched(40, &mut eval_b).unwrap();
+        assert_eq!(a, b);
+        assert_eq!(ta, tb);
     }
 
     #[test]

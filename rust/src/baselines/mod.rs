@@ -15,7 +15,7 @@ mod random;
 
 pub use evolutionary::Evolutionary;
 pub use human::human_tuned;
-pub use random::{grid_search, RandomSearch};
+pub use random::{grid_search, grid_search_batched, RandomSearch};
 
 use anyhow::Result;
 
@@ -32,4 +32,44 @@ pub trait Searcher {
         budget: usize,
         eval: &mut dyn FnMut(&CvarSet) -> Result<f64>,
     ) -> Result<(CvarSet, f64)>;
+
+    /// Batched variant: `eval_batch` scores a slice of candidates at
+    /// once (the campaign engine fans it across worker threads) and
+    /// returns one time per candidate, in order.
+    ///
+    /// Searchers whose candidate generation does not depend on earlier
+    /// scores within a batch override this to expose real batches
+    /// (random search: the whole budget; evolutionary: one generation);
+    /// the default degrades to one-at-a-time scoring and matches
+    /// [`Searcher::search`] exactly.
+    fn search_batched(
+        &mut self,
+        budget: usize,
+        eval_batch: &mut dyn FnMut(&[CvarSet]) -> Result<Vec<f64>>,
+    ) -> Result<(CvarSet, f64)> {
+        let mut eval = |cv: &CvarSet| {
+            let times = eval_batch(std::slice::from_ref(cv))?;
+            check_batch_len(times.len(), 1)?;
+            Ok(times[0])
+        };
+        self.search(budget, &mut eval)
+    }
+}
+
+/// Check an `eval_batch` reply length (shared by the implementations).
+pub(crate) fn check_batch_len(got: usize, want: usize) -> Result<()> {
+    anyhow::ensure!(got == want, "eval_batch returned {got} times for {want} configs");
+    Ok(())
+}
+
+/// Index of the smallest time, first on ties — the shared winner rule
+/// that keeps every batched search path identical to its serial twin.
+pub(crate) fn argmin(times: &[f64]) -> usize {
+    let mut best = 0;
+    for (i, &t) in times.iter().enumerate().skip(1) {
+        if t < times[best] {
+            best = i;
+        }
+    }
+    best
 }

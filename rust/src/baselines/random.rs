@@ -58,6 +58,26 @@ impl Searcher for RandomSearch {
         }
         Ok((best, best_t))
     }
+
+    /// Random search has no sequential dependency between evaluations,
+    /// so the whole budget is one batch: the candidate list (vanilla
+    /// first, then `budget - 1` samples in generator order) is built up
+    /// front and scored in a single parallel fan-out. Picks the same
+    /// winner as the serial path (first minimum on ties).
+    fn search_batched(
+        &mut self,
+        budget: usize,
+        eval_batch: &mut dyn FnMut(&[CvarSet]) -> Result<Vec<f64>>,
+    ) -> Result<(CvarSet, f64)> {
+        let mut candidates = vec![CvarSet::vanilla()];
+        for _ in 1..budget {
+            candidates.push(self.sample());
+        }
+        let times = eval_batch(&candidates)?;
+        super::check_batch_len(times.len(), candidates.len())?;
+        let best = super::argmin(&times);
+        Ok((candidates.swap_remove(best), times[best]))
+    }
 }
 
 /// Exhaustive search over a coarse grid: booleans × a few levels of each
@@ -66,6 +86,19 @@ impl Searcher for RandomSearch {
 pub fn grid_search(
     levels: usize,
     eval: &mut dyn FnMut(&CvarSet) -> Result<f64>,
+) -> Result<(CvarSet, f64)> {
+    let mut eval_batch =
+        |configs: &[CvarSet]| -> Result<Vec<f64>> { configs.iter().map(&mut *eval).collect() };
+    grid_search_batched(levels, &mut eval_batch)
+}
+
+/// [`grid_search`] with the grid enumerated up front and scored in one
+/// batch, so the campaign engine can fan the (exponential) evaluation
+/// across worker threads. Visits grid points in the same odometer order
+/// as the serial path and picks the same winner (first minimum).
+pub fn grid_search_batched(
+    levels: usize,
+    eval_batch: &mut dyn FnMut(&[CvarSet]) -> Result<Vec<f64>>,
 ) -> Result<(CvarSet, f64)> {
     assert!(levels >= 2, "need at least lo/hi levels");
     let mut axes: Vec<Vec<i64>> = Vec::new();
@@ -82,22 +115,19 @@ pub fn grid_search(
             }
         }
     }
-    let mut best: Option<(CvarSet, f64)> = None;
+    // Enumerate the full grid in odometer order.
+    let mut grid = Vec::new();
     let mut idx = vec![0usize; axes.len()];
-    loop {
+    'outer: loop {
         let mut cv = CvarSet::vanilla();
         for (c, &i) in idx.iter().enumerate() {
             cv.set(CvarId(c), axes[c][i]);
         }
-        let t = eval(&cv)?;
-        if best.as_ref().map(|(_, bt)| t < *bt).unwrap_or(true) {
-            best = Some((cv, t));
-        }
-        // odometer increment
+        grid.push(cv);
         let mut c = 0;
         loop {
             if c == axes.len() {
-                return Ok(best.unwrap());
+                break 'outer;
             }
             idx[c] += 1;
             if idx[c] < axes[c].len() {
@@ -107,6 +137,10 @@ pub fn grid_search(
             c += 1;
         }
     }
+    let times = eval_batch(&grid)?;
+    super::check_batch_len(times.len(), grid.len())?;
+    let best = super::argmin(&times);
+    Ok((grid.swap_remove(best), times[best]))
 }
 
 #[cfg(test)]
@@ -133,6 +167,20 @@ mod tests {
         let (best, t) = rs.search(30, &mut eval).unwrap();
         assert!(best.async_progress());
         assert_eq!(t, 1.0);
+    }
+
+    #[test]
+    fn batched_search_matches_serial() {
+        let score =
+            |cv: &CvarSet| cv.eager_max() as f64 + if cv.async_progress() { 0.0 } else { 1e9 };
+        let mut serial = RandomSearch::new(4);
+        let (a, ta) = serial.search(25, &mut |cv: &CvarSet| Ok(score(cv))).unwrap();
+        let mut batched = RandomSearch::new(4);
+        let mut eval_b =
+            |cvs: &[CvarSet]| -> Result<Vec<f64>> { Ok(cvs.iter().map(score).collect()) };
+        let (b, tb) = batched.search_batched(25, &mut eval_b).unwrap();
+        assert_eq!(a, b);
+        assert_eq!(ta, tb);
     }
 
     #[test]

@@ -1,0 +1,166 @@
+//! Episode-result cache: skip re-simulating configurations already
+//! measured under identical conditions.
+//!
+//! Ensemble scoring, baseline searches and sweeps repeatedly evaluate
+//! the *same* `(workload, images, CvarSet, seeds)` tuple — e.g. the
+//! vanilla reference is re-scored by every baseline, and evolutionary
+//! search re-visits configurations. Since the simulator is a pure
+//! function of that tuple, those episodes can be answered from a map
+//! instead of re-run. Keys include every input that affects the
+//! simulated total time, so a hit is exact by construction.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+use anyhow::Result;
+
+use crate::mpi_t::CvarSet;
+use crate::simmpi::Machine;
+use crate::workloads::WorkloadKind;
+
+/// Everything that determines one simulated episode's total time.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub struct EpisodeKey {
+    pub workload: WorkloadKind,
+    pub images: usize,
+    pub cvars: CvarSet,
+    /// Machine model identity (presets are fully determined by name).
+    pub machine: &'static str,
+    /// Simulator noise level, bit-exact.
+    pub noise_bits: u64,
+    /// Fixes the problem instance (§: same application across runs).
+    pub workload_seed: u64,
+    /// Fixes the run-to-run noise draw.
+    pub run_seed: u64,
+}
+
+impl EpisodeKey {
+    pub fn new(
+        workload: WorkloadKind,
+        images: usize,
+        cvars: &CvarSet,
+        machine: &Machine,
+        noise: f64,
+        workload_seed: u64,
+        run_seed: u64,
+    ) -> EpisodeKey {
+        EpisodeKey {
+            workload,
+            images,
+            cvars: cvars.clone(),
+            machine: machine.name,
+            noise_bits: noise.to_bits(),
+            workload_seed,
+            run_seed,
+        }
+    }
+}
+
+/// Thread-safe memo table of episode total times, with hit/miss
+/// counters for reporting.
+///
+/// The lock is *not* held while an episode simulates, so two workers
+/// racing on the same cold key may both run it; they compute the same
+/// value (the simulator is deterministic in the key), so results stay
+/// bit-identical regardless of interleaving.
+#[derive(Debug, Default)]
+pub struct EpisodeCache {
+    map: Mutex<HashMap<EpisodeKey, f64>>,
+    hits: AtomicUsize,
+    misses: AtomicUsize,
+}
+
+impl EpisodeCache {
+    pub fn new() -> EpisodeCache {
+        EpisodeCache::default()
+    }
+
+    /// Look up `key`, or compute it with `run` and remember the result.
+    pub fn get_or_run(
+        &self,
+        key: EpisodeKey,
+        run: impl FnOnce() -> Result<f64>,
+    ) -> Result<f64> {
+        if let Some(&t) = self.map.lock().unwrap().get(&key) {
+            self.hits.fetch_add(1, Ordering::Relaxed);
+            return Ok(t);
+        }
+        self.misses.fetch_add(1, Ordering::Relaxed);
+        let t = run()?;
+        self.map.lock().unwrap().insert(key, t);
+        Ok(t)
+    }
+
+    /// Number of distinct episodes stored.
+    pub fn len(&self) -> usize {
+        self.map.lock().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.map.lock().unwrap().is_empty()
+    }
+
+    /// Lookups answered from the map.
+    pub fn hits(&self) -> usize {
+        self.hits.load(Ordering::Relaxed)
+    }
+
+    /// Lookups that had to simulate.
+    pub fn misses(&self) -> usize {
+        self.misses.load(Ordering::Relaxed)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn key(run_seed: u64) -> EpisodeKey {
+        EpisodeKey::new(
+            WorkloadKind::Icar,
+            32,
+            &CvarSet::vanilla(),
+            &Machine::cheyenne(),
+            0.02,
+            7,
+            run_seed,
+        )
+    }
+
+    #[test]
+    fn second_lookup_is_a_hit_and_skips_the_closure() {
+        let cache = EpisodeCache::new();
+        let mut calls = 0;
+        for _ in 0..3 {
+            let t = cache
+                .get_or_run(key(1), || {
+                    calls += 1;
+                    Ok(42.0)
+                })
+                .unwrap();
+            assert_eq!(t, 42.0);
+        }
+        assert_eq!(calls, 1);
+        assert_eq!(cache.misses(), 1);
+        assert_eq!(cache.hits(), 2);
+        assert_eq!(cache.len(), 1);
+    }
+
+    #[test]
+    fn distinct_seeds_are_distinct_entries() {
+        let cache = EpisodeCache::new();
+        cache.get_or_run(key(1), || Ok(1.0)).unwrap();
+        cache.get_or_run(key(2), || Ok(2.0)).unwrap();
+        assert_eq!(cache.len(), 2);
+        assert_eq!(cache.get_or_run(key(2), || Ok(99.0)).unwrap(), 2.0);
+    }
+
+    #[test]
+    fn failed_runs_are_not_cached() {
+        let cache = EpisodeCache::new();
+        assert!(cache.get_or_run(key(1), || anyhow::bail!("boom")).is_err());
+        assert!(cache.is_empty());
+        assert_eq!(cache.get_or_run(key(1), || Ok(5.0)).unwrap(), 5.0);
+    }
+}

@@ -1,0 +1,99 @@
+//! Sharded result collection for the worker pool.
+//!
+//! Each worker pushes finished items into its *own* shard, so the only
+//! lock ever contended is uncontended in steady state; the merge step
+//! then reassembles the items in job-index order, making the collected
+//! output independent of thread scheduling.
+
+use std::sync::Mutex;
+
+/// Per-worker sharded `(index, item)` store with an order-restoring
+/// merge.
+#[derive(Debug)]
+pub struct ShardedCollector<T> {
+    shards: Vec<Mutex<Vec<(usize, T)>>>,
+    expected: usize,
+}
+
+impl<T> ShardedCollector<T> {
+    /// Collector for `expected` items spread over `shards` workers.
+    pub fn new(expected: usize, shards: usize) -> ShardedCollector<T> {
+        ShardedCollector {
+            shards: (0..shards.max(1)).map(|_| Mutex::new(Vec::new())).collect(),
+            expected,
+        }
+    }
+
+    /// Record the result for global index `index` from worker `shard`.
+    pub fn push(&self, shard: usize, index: usize, item: T) {
+        self.shards[shard % self.shards.len()].lock().unwrap().push((index, item));
+    }
+
+    /// Merge all shards back into index order.
+    ///
+    /// Panics if the number of collected items differs from `expected`
+    /// or any index is duplicated/missing — either would mean a worker
+    /// died without reporting, which must not be silent.
+    pub fn into_merged(self) -> Vec<T> {
+        let mut all: Vec<(usize, T)> = Vec::with_capacity(self.expected);
+        for shard in self.shards {
+            all.extend(shard.into_inner().unwrap());
+        }
+        all.sort_by_key(|(i, _)| *i);
+        assert_eq!(all.len(), self.expected, "collector item count mismatch");
+        for (pos, (i, _)) in all.iter().enumerate() {
+            assert_eq!(*i, pos, "collector indices must be exactly 0..expected");
+        }
+        all.into_iter().map(|(_, item)| item).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn merge_restores_index_order_across_shards() {
+        let c = ShardedCollector::new(5, 2);
+        c.push(1, 3, "d");
+        c.push(0, 0, "a");
+        c.push(1, 1, "b");
+        c.push(0, 4, "e");
+        c.push(0, 2, "c");
+        assert_eq!(c.into_merged(), vec!["a", "b", "c", "d", "e"]);
+    }
+
+    #[test]
+    fn shard_ids_wrap() {
+        let c = ShardedCollector::new(2, 1);
+        c.push(7, 1, 10);
+        c.push(3, 0, 20);
+        assert_eq!(c.into_merged(), vec![20, 10]);
+    }
+
+    #[test]
+    #[should_panic(expected = "count mismatch")]
+    fn missing_items_panic() {
+        let c: ShardedCollector<u32> = ShardedCollector::new(3, 2);
+        c.push(0, 0, 1);
+        c.into_merged();
+    }
+
+    #[test]
+    fn works_from_multiple_threads() {
+        let c = ShardedCollector::new(64, 4);
+        std::thread::scope(|s| {
+            for w in 0..4 {
+                let c = &c;
+                s.spawn(move || {
+                    for i in (w..64).step_by(4) {
+                        c.push(w, i, i * 10);
+                    }
+                });
+            }
+        });
+        let merged = c.into_merged();
+        assert_eq!(merged.len(), 64);
+        assert!(merged.iter().enumerate().all(|(i, &v)| v == i * 10));
+    }
+}

@@ -1,0 +1,222 @@
+//! The multi-threaded campaign engine: fan independent tuning jobs and
+//! fixed-config evaluations across a `std::thread` worker pool.
+//!
+//! Work distribution is a shared atomic cursor over the job list; each
+//! worker claims the next index, runs the job to completion with its
+//! own [`Controller`] seeded from the job spec, and deposits the result
+//! in its [`ShardedCollector`] shard. Because every job owns its full
+//! RNG stream (see [`crate::campaign::job_grid`]) and results are
+//! merged back in job-index order, the campaign report is bit-identical
+//! at 1 worker and at N workers — parallelism changes wall-clock only.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::time::Instant;
+
+use anyhow::Result;
+
+use crate::coordinator::controller::seed_mix;
+use crate::coordinator::{run_episode, Controller, TuningConfig};
+use crate::mpi_t::CvarSet;
+use crate::workloads::WorkloadKind;
+
+use super::cache::{EpisodeCache, EpisodeKey};
+use super::collector::ShardedCollector;
+use super::job::CampaignJob;
+use super::report::{CampaignReport, JobOutcome};
+
+/// Engine settings: the shared tuning template plus the pool size.
+#[derive(Debug, Clone)]
+pub struct CampaignConfig {
+    /// Template for every job's controller; each job overrides `agent`
+    /// and `seed` from its own spec.
+    pub base: TuningConfig,
+    /// Worker threads; `0` means one per available hardware thread.
+    pub workers: usize,
+}
+
+impl CampaignConfig {
+    pub fn new(base: TuningConfig) -> CampaignConfig {
+        CampaignConfig { base, workers: 0 }
+    }
+}
+
+/// The campaign engine: a reusable worker-pool front end over
+/// [`Controller::tune`] and cached fixed-config evaluation.
+#[derive(Debug)]
+pub struct CampaignEngine {
+    cfg: CampaignConfig,
+    cache: EpisodeCache,
+}
+
+impl CampaignEngine {
+    pub fn new(cfg: CampaignConfig) -> CampaignEngine {
+        CampaignEngine { cfg, cache: EpisodeCache::new() }
+    }
+
+    /// The shared episode cache (hit/miss stats for reports).
+    pub fn cache(&self) -> &EpisodeCache {
+        &self.cache
+    }
+
+    /// The engine's configuration.
+    pub fn config(&self) -> &CampaignConfig {
+        &self.cfg
+    }
+
+    /// Worker threads the engine will actually use for `n` work items.
+    pub fn workers_for(&self, n: usize) -> usize {
+        let hw = std::thread::available_parallelism().map(|p| p.get()).unwrap_or(1);
+        let requested = if self.cfg.workers == 0 { hw } else { self.cfg.workers };
+        requested.clamp(1, n.max(1))
+    }
+
+    /// Run a full tuning campaign: every job is an independent seeded
+    /// tuning session; results come back in job order regardless of
+    /// scheduling. Fails with the first (by job index) job error.
+    pub fn run(&self, jobs: &[CampaignJob]) -> Result<CampaignReport> {
+        let workers = self.workers_for(jobs.len());
+        let started = Instant::now();
+        let collector = ShardedCollector::new(jobs.len(), workers);
+        let cursor = AtomicUsize::new(0);
+        std::thread::scope(|scope| {
+            for w in 0..workers {
+                let collector = &collector;
+                let cursor = &cursor;
+                let base = &self.cfg.base;
+                scope.spawn(move || loop {
+                    let i = cursor.fetch_add(1, Ordering::Relaxed);
+                    if i >= jobs.len() {
+                        break;
+                    }
+                    collector.push(w, i, run_job(base, &jobs[i]));
+                });
+            }
+        });
+        let results = collector.into_merged().into_iter().collect::<Result<Vec<_>>>()?;
+        Ok(CampaignReport { results, wall_clock: started.elapsed(), workers })
+    }
+
+    /// Score one fixed configuration (mean total time over `repeats`
+    /// episodes) through the episode cache, with deterministic
+    /// per-repeat seeds — repeated scoring of the same configuration is
+    /// answered from the cache.
+    pub fn evaluate(
+        &self,
+        kind: WorkloadKind,
+        images: usize,
+        cvars: &CvarSet,
+        repeats: usize,
+    ) -> Result<f64> {
+        evaluate_config(&self.cfg.base, kind, images, cvars, repeats, Some(&self.cache))
+    }
+
+    /// One noise-free probe episode of `cvars` on `(kind, images)`,
+    /// using the same derived workload seed as [`evaluate_config`], so
+    /// protocol counters and message statistics describe exactly the
+    /// problem instance the timed evaluations measured.
+    pub fn probe_episode(
+        &self,
+        kind: WorkloadKind,
+        images: usize,
+        cvars: &CvarSet,
+    ) -> Result<crate::coordinator::EpisodeResult> {
+        let base = &self.cfg.base;
+        let workload_seed = base.seed ^ seed_mix(kind, images);
+        run_episode(kind, images, &base.machine, cvars, 0.0, workload_seed, 1)
+    }
+
+    /// Score many fixed configurations in parallel (the batched path
+    /// baselines and sweeps fan out through). Results are ordered like
+    /// `configs` and identical to calling [`CampaignEngine::evaluate`]
+    /// per config serially.
+    pub fn evaluate_batch(
+        &self,
+        kind: WorkloadKind,
+        images: usize,
+        configs: &[CvarSet],
+        repeats: usize,
+    ) -> Result<Vec<f64>> {
+        if configs.is_empty() {
+            return Ok(Vec::new());
+        }
+        let workers = self.workers_for(configs.len());
+        let collector = ShardedCollector::new(configs.len(), workers);
+        let cursor = AtomicUsize::new(0);
+        std::thread::scope(|scope| {
+            for w in 0..workers {
+                let collector = &collector;
+                let cursor = &cursor;
+                let base = &self.cfg.base;
+                let cache = &self.cache;
+                scope.spawn(move || loop {
+                    let i = cursor.fetch_add(1, Ordering::Relaxed);
+                    if i >= configs.len() {
+                        break;
+                    }
+                    let r = evaluate_config(base, kind, images, &configs[i], repeats, Some(cache));
+                    collector.push(w, i, r);
+                });
+            }
+        });
+        collector.into_merged().into_iter().collect()
+    }
+}
+
+/// Run one campaign job: an independent controller seeded from the job.
+fn run_job(base: &TuningConfig, job: &CampaignJob) -> Result<JobOutcome> {
+    let cfg = TuningConfig { agent: job.agent, seed: job.seed, ..base.clone() };
+    let mut ctl = Controller::new(cfg)?;
+    let outcome = ctl.tune(job.workload, job.images)?;
+    Ok(JobOutcome { job: *job, outcome })
+}
+
+/// Mean total time of `cvars` on `(kind, images)` over `repeats`
+/// episodes, with deterministic per-repeat run seeds (`1..=repeats`).
+///
+/// The deterministic seeds are what make the cache effective: scoring
+/// the same configuration under the same base config always simulates
+/// the same episodes, so the second scorer gets pure cache hits. Pass
+/// `None` to force re-simulation.
+pub fn evaluate_config(
+    base: &TuningConfig,
+    kind: WorkloadKind,
+    images: usize,
+    cvars: &CvarSet,
+    repeats: usize,
+    cache: Option<&EpisodeCache>,
+) -> Result<f64> {
+    let workload_seed = base.seed ^ seed_mix(kind, images);
+    let repeats = repeats.max(1);
+    let mut total = 0.0;
+    for r in 0..repeats {
+        let run_seed = r as u64 + 1;
+        let simulate = || {
+            Ok(run_episode(
+                kind,
+                images,
+                &base.machine,
+                cvars,
+                base.noise,
+                workload_seed,
+                run_seed,
+            )?
+            .total_time_us)
+        };
+        total += match cache {
+            Some(c) => {
+                let key = EpisodeKey::new(
+                    kind,
+                    images,
+                    cvars,
+                    &base.machine,
+                    base.noise,
+                    workload_seed,
+                    run_seed,
+                );
+                c.get_or_run(key, simulate)?
+            }
+            None => simulate()?,
+        };
+    }
+    Ok(total / repeats as f64)
+}

@@ -1,0 +1,100 @@
+//! Campaign job specs: one job = tune one (workload, images) cell with
+//! one agent, from one deterministic seed.
+
+use crate::coordinator::AgentKind;
+use crate::util::rng::Rng;
+use crate::workloads::WorkloadKind;
+
+/// One independent unit of campaign work: a full §5 tuning session of
+/// `workload` at `images` processes, driven by `agent`, seeded with
+/// `seed`. Jobs carry everything that varies per cell; shared settings
+/// (machine model, run budget, hyper-parameters) live in the engine's
+/// base [`crate::coordinator::TuningConfig`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct CampaignJob {
+    pub workload: WorkloadKind,
+    pub images: usize,
+    pub agent: AgentKind,
+    pub seed: u64,
+}
+
+impl CampaignJob {
+    /// Compact `workload@images` label for tables and logs.
+    pub fn label(&self) -> String {
+        format!("{}@{}", self.workload.name(), self.images)
+    }
+}
+
+/// Build the (workload × images) cross-product job list with
+/// deterministic per-job seeds.
+///
+/// Each job's seed is drawn from an independent child stream forked off
+/// one master generator ([`Rng::fork`]), so the seed assigned to cell
+/// `k` depends only on `master_seed` and `k` — never on which worker
+/// thread eventually runs the job. This is what makes campaign results
+/// bit-identical across worker counts.
+pub fn job_grid(
+    workloads: &[WorkloadKind],
+    image_counts: &[usize],
+    agent: AgentKind,
+    master_seed: u64,
+) -> Vec<CampaignJob> {
+    let mut master = Rng::new(master_seed);
+    let mut jobs = Vec::with_capacity(workloads.len() * image_counts.len());
+    for &workload in workloads {
+        for &images in image_counts {
+            let mut stream = master.fork(jobs.len() as u64 + 1);
+            jobs.push(CampaignJob { workload, images, agent, seed: stream.next_u64() });
+        }
+    }
+    jobs
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn grid_covers_cross_product_in_stable_order() {
+        let jobs = job_grid(
+            &[WorkloadKind::Icar, WorkloadKind::CloverLeaf],
+            &[16, 32],
+            AgentKind::Tabular,
+            5,
+        );
+        assert_eq!(jobs.len(), 4);
+        assert_eq!(jobs[0].workload, WorkloadKind::Icar);
+        assert_eq!(jobs[0].images, 16);
+        assert_eq!(jobs[3].workload, WorkloadKind::CloverLeaf);
+        assert_eq!(jobs[3].images, 32);
+    }
+
+    #[test]
+    fn seeds_are_deterministic_and_distinct() {
+        let a = job_grid(&WorkloadKind::TRAINING, &[8, 16], AgentKind::Tabular, 9);
+        let b = job_grid(&WorkloadKind::TRAINING, &[8, 16], AgentKind::Tabular, 9);
+        assert_eq!(a, b);
+        let mut seeds: Vec<u64> = a.iter().map(|j| j.seed).collect();
+        seeds.sort_unstable();
+        seeds.dedup();
+        assert_eq!(seeds.len(), a.len(), "per-job seeds must be unique");
+    }
+
+    #[test]
+    fn different_master_seeds_give_different_job_seeds() {
+        let a = job_grid(&[WorkloadKind::Icar], &[16], AgentKind::Tabular, 1);
+        let b = job_grid(&[WorkloadKind::Icar], &[16], AgentKind::Tabular, 2);
+        assert_ne!(a[0].seed, b[0].seed);
+    }
+
+    #[test]
+    fn label_is_compact() {
+        let j = CampaignJob {
+            workload: WorkloadKind::Icar,
+            images: 256,
+            agent: AgentKind::Tabular,
+            seed: 0,
+        };
+        assert_eq!(j.label(), "icar@256");
+    }
+}

@@ -1,0 +1,42 @@
+//! The parallel tuning-campaign engine (§5.4 at scale).
+//!
+//! The paper's methodology needs ≥ 20 tuning runs per application per
+//! scale, and a full §6 evaluation sweeps many (workload, images)
+//! cells on several machine models — thousands of simulated runs with
+//! an embarrassingly-parallel structure: every cell is an independent
+//! seeded tuning session. This module exploits that structure:
+//!
+//! * [`CampaignJob`] / [`job_grid`] — job specs with deterministic
+//!   per-job seeds forked from one master stream ([`crate::util::rng::Rng::fork`]),
+//!   so a cell's randomness depends only on the master seed and the
+//!   cell index, never on scheduling;
+//! * [`CampaignEngine`] — a `std::thread` worker pool (no external
+//!   dependencies) that fans jobs across cores via a shared atomic
+//!   cursor and runs each with its own [`crate::coordinator::Controller`];
+//! * [`ShardedCollector`] — per-worker result shards merged back in
+//!   job-index order, so the output is invariant to thread count;
+//! * [`EpisodeCache`] — a memo table over `(workload, images, CvarSet,
+//!   machine, noise, seeds)` that lets ensemble scoring, baselines and
+//!   sweeps skip re-simulating configurations they have already
+//!   measured;
+//! * [`CampaignReport`] — the merged per-job [`crate::metrics::recorder::TuningLog`]s
+//!   plus summary statistics ([`crate::metrics::stats`]), a JSON export,
+//!   and a [`CampaignReport::fingerprint`] digest used to assert
+//!   bit-identical results across worker counts.
+//!
+//! The contract the whole module is built around: **campaign results
+//! are a pure function of the job list and the base config**. Worker
+//! count, scheduling order and cache hit/miss interleaving change
+//! wall-clock time, never numbers.
+
+mod cache;
+mod collector;
+mod engine;
+mod job;
+mod report;
+
+pub use cache::{EpisodeCache, EpisodeKey};
+pub use collector::ShardedCollector;
+pub use engine::{evaluate_config, CampaignConfig, CampaignEngine};
+pub use job::{job_grid, CampaignJob};
+pub use report::{CampaignReport, JobOutcome};

@@ -1,0 +1,185 @@
+//! Campaign reports: per-job tuning logs merged into one summary.
+
+use std::time::Duration;
+
+use crate::coordinator::TuningOutcome;
+use crate::metrics::stats::{geomean, Summary};
+use crate::util::json::{arr, num, obj, s, Json};
+
+use super::job::CampaignJob;
+
+/// One finished campaign job: the spec plus its full tuning outcome.
+#[derive(Debug, Clone)]
+pub struct JobOutcome {
+    pub job: CampaignJob,
+    pub outcome: TuningOutcome,
+}
+
+/// The merged result of one campaign: job outcomes in job order plus
+/// execution metadata.
+#[derive(Debug, Clone)]
+pub struct CampaignReport {
+    pub results: Vec<JobOutcome>,
+    /// End-to-end campaign wall clock.
+    pub wall_clock: Duration,
+    /// Worker threads the engine actually used.
+    pub workers: usize,
+}
+
+impl CampaignReport {
+    /// Best-run improvement per job, in job order.
+    pub fn improvements(&self) -> Vec<f64> {
+        self.results.iter().map(|r| r.outcome.improvement()).collect()
+    }
+
+    /// Geometric-mean speedup (`1 + improvement`) across cells — the §6
+    /// cross-workload headline number.
+    pub fn geomean_speedup(&self) -> f64 {
+        let speedups: Vec<f64> = self.improvements().iter().map(|i| 1.0 + i).collect();
+        geomean(&speedups)
+    }
+
+    /// Distribution of per-cell improvements (mean/median/min/max/std).
+    pub fn improvement_summary(&self) -> Summary {
+        Summary::of(&self.improvements())
+    }
+
+    /// Total simulated application runs across every job's tuning log
+    /// (references included).
+    pub fn total_app_runs(&self) -> usize {
+        self.results.iter().map(|r| r.outcome.log.runs.len()).sum()
+    }
+
+    /// Order-sensitive digest of every job's spec, per-run total times
+    /// and configurations (FNV-1a over the raw bits).
+    ///
+    /// Two campaign runs produced the same tuning trajectories if and
+    /// only if their fingerprints match — this is what the 1-worker vs
+    /// N-worker determinism checks compare.
+    pub fn fingerprint(&self) -> u64 {
+        let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+        let mut mix = |x: u64| {
+            h ^= x;
+            h = h.wrapping_mul(0x0000_0100_0000_01b3);
+        };
+        for r in &self.results {
+            for b in r.job.workload.name().bytes() {
+                mix(b as u64);
+            }
+            mix(r.job.images as u64);
+            mix(r.job.seed);
+            for run in &r.outcome.log.runs {
+                mix(run.total_time_us.to_bits());
+                for &v in run.cvars.as_slice() {
+                    mix(v as u64);
+                }
+            }
+            mix(r.outcome.best_us.to_bits());
+            mix(r.outcome.reference_us.to_bits());
+        }
+        h
+    }
+
+    /// JSON export: campaign metadata, per-job summaries and the full
+    /// per-run logs (for EXPERIMENTS.md / offline analysis).
+    pub fn to_json(&self) -> Json {
+        obj(vec![
+            ("workers", num(self.workers as f64)),
+            ("wall_clock_ms", num(self.wall_clock.as_secs_f64() * 1e3)),
+            ("total_app_runs", num(self.total_app_runs() as f64)),
+            ("geomean_speedup", num(self.geomean_speedup())),
+            (
+                "jobs",
+                arr(self.results.iter().map(|r| {
+                    obj(vec![
+                        ("label", s(&r.job.label())),
+                        ("seed", num(r.job.seed as f64)),
+                        ("reference_us", num(r.outcome.reference_us)),
+                        ("best_us", num(r.outcome.best_us)),
+                        ("improvement", num(r.outcome.improvement())),
+                        ("ensemble", s(&r.outcome.ensemble.to_string())),
+                        ("log", r.outcome.log.to_json()),
+                    ])
+                })),
+            ),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::AgentKind;
+    use crate::metrics::recorder::TuningLog;
+    use crate::mpi_t::CvarSet;
+    use crate::workloads::WorkloadKind;
+
+    fn outcome(reference: f64, best: f64) -> TuningOutcome {
+        let mut log = TuningLog::new("icar", 8);
+        for (i, t) in [reference, best].iter().enumerate() {
+            log.push(crate::metrics::recorder::RunRecord {
+                run_index: i,
+                cvars: CvarSet::vanilla(),
+                total_time_us: *t,
+                reward: 0.0,
+                action: None,
+                epsilon: 1.0,
+                pvars: crate::mpi_t::PvarStats::default(),
+            });
+        }
+        TuningOutcome {
+            log,
+            best: CvarSet::vanilla(),
+            ensemble: CvarSet::vanilla(),
+            reference_us: reference,
+            best_us: best,
+        }
+    }
+
+    fn report(cells: &[(f64, f64)]) -> CampaignReport {
+        CampaignReport {
+            results: cells
+                .iter()
+                .map(|&(reference, best)| JobOutcome {
+                    job: CampaignJob {
+                        workload: WorkloadKind::Icar,
+                        images: 8,
+                        agent: AgentKind::Tabular,
+                        seed: 1,
+                    },
+                    outcome: outcome(reference, best),
+                })
+                .collect(),
+            wall_clock: Duration::from_millis(5),
+            workers: 2,
+        }
+    }
+
+    #[test]
+    fn summary_numbers_are_consistent() {
+        let r = report(&[(100.0, 80.0), (100.0, 90.0)]);
+        assert_eq!(r.improvements(), vec![0.2, 0.1]);
+        assert_eq!(r.total_app_runs(), 4);
+        let s = r.improvement_summary();
+        assert_eq!(s.count, 2);
+        assert!((s.mean - 0.15).abs() < 1e-12);
+        assert!((r.geomean_speedup() - (1.2f64 * 1.1).sqrt()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn fingerprint_is_sensitive_to_run_times() {
+        let a = report(&[(100.0, 80.0)]);
+        let b = report(&[(100.0, 80.0)]);
+        let c = report(&[(100.0, 81.0)]);
+        assert_eq!(a.fingerprint(), b.fingerprint());
+        assert_ne!(a.fingerprint(), c.fingerprint());
+    }
+
+    #[test]
+    fn json_shape() {
+        let r = report(&[(100.0, 80.0)]);
+        let j = r.to_json();
+        assert_eq!(j.at(&["workers"]).unwrap().as_usize().unwrap(), 2);
+        assert_eq!(j.at(&["jobs"]).unwrap().as_arr().unwrap().len(), 1);
+    }
+}

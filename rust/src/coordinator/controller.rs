@@ -85,7 +85,14 @@ pub struct TuningOutcome {
 
 impl TuningOutcome {
     /// Fractional improvement of the best run over the reference.
+    ///
+    /// A degenerate reference (zero, negative or non-finite total time)
+    /// yields 0.0 instead of NaN/inf, so the value is always safe to
+    /// aggregate into campaign reports and benchmark JSON.
     pub fn improvement(&self) -> f64 {
+        if !(self.reference_us > 0.0 && self.reference_us.is_finite()) {
+            return 0.0;
+        }
         (self.reference_us - self.best_us) / self.reference_us
     }
 }
@@ -116,10 +123,18 @@ impl Controller {
         Ok(Controller { cfg, agent, replay, rng, lifetime_runs: 0 })
     }
 
-    /// Current exploration rate for tuning-run `i` of `n`.
+    /// Current exploration rate for tuning-run `i` of `n` (0-based).
+    ///
+    /// Linear decay from `eps_start` to `eps_end`; the final run always
+    /// uses `eps_end` *exactly* (no floating-point residue), and a
+    /// single-run schedule (`n == 1`) goes straight to `eps_end` rather
+    /// than never decaying.
     fn epsilon(&self, i: usize, n: usize) -> f64 {
-        let f = i as f64 / (n.max(2) - 1) as f64;
-        self.cfg.eps_start + (self.cfg.eps_end - self.cfg.eps_start) * f.min(1.0)
+        if n <= 1 || i + 1 >= n {
+            return self.cfg.eps_end;
+        }
+        let f = i as f64 / (n - 1) as f64;
+        self.cfg.eps_start + (self.cfg.eps_end - self.cfg.eps_start) * f
     }
 
     /// ε-greedy action selection.
@@ -244,6 +259,22 @@ impl Controller {
         Ok(total / repeats.max(1) as f64)
     }
 
+    /// Evaluate a fixed configuration through the campaign engine's
+    /// episode cache with *deterministic* per-repeat seeds, so repeated
+    /// scoring of the same configuration (ensemble scoring, baselines)
+    /// skips re-simulation. Unlike [`Controller::evaluate`] this does
+    /// not consume controller RNG state.
+    pub fn evaluate_cached(
+        &self,
+        kind: WorkloadKind,
+        images: usize,
+        cvars: &CvarSet,
+        repeats: usize,
+        cache: &crate::campaign::EpisodeCache,
+    ) -> Result<f64> {
+        crate::campaign::evaluate_config(&self.cfg, kind, images, cvars, repeats, Some(cache))
+    }
+
     pub fn agent_name(&self) -> &'static str {
         self.agent.name()
     }
@@ -262,8 +293,9 @@ impl Controller {
 }
 
 /// Stable per-(workload, images) seed component: the same application
-/// instance is tuned across all of a campaign's runs.
-fn seed_mix(kind: WorkloadKind, images: usize) -> u64 {
+/// instance is tuned across all of a campaign's runs. Shared with the
+/// campaign engine so cached evaluations agree with controller runs.
+pub(crate) fn seed_mix(kind: WorkloadKind, images: usize) -> u64 {
     let k = kind.name().bytes().fold(0u64, |h, b| h.wrapping_mul(131).wrapping_add(b as u64));
     k.wrapping_mul(0x9e3779b97f4a7c15) ^ (images as u64).wrapping_mul(0xd1b54a32d192ed03)
 }
@@ -296,6 +328,43 @@ mod tests {
         let ctl = Controller::new(tabular_cfg()).unwrap();
         assert!(ctl.epsilon(0, 20) > ctl.epsilon(19, 20));
         assert!((ctl.epsilon(19, 20) - 0.05).abs() < 1e-9);
+    }
+
+    #[test]
+    fn epsilon_last_run_is_exactly_eps_end() {
+        let ctl = Controller::new(tabular_cfg()).unwrap();
+        // Exact equality, not within-epsilon: the schedule must *reach*
+        // eps_end on the final run for any run budget.
+        assert_eq!(ctl.epsilon(9, 10), ctl.cfg.eps_end);
+        assert_eq!(ctl.epsilon(1, 2), ctl.cfg.eps_end);
+        assert_eq!(ctl.epsilon(0, 2), ctl.cfg.eps_start);
+        assert_eq!(ctl.epsilon(19, 20), ctl.cfg.eps_end);
+    }
+
+    #[test]
+    fn epsilon_single_run_schedule_decays() {
+        // Regression: with runs == 1 the old schedule stayed at
+        // eps_start forever; the only run is also the last, so it must
+        // exploit at eps_end.
+        let ctl = Controller::new(tabular_cfg()).unwrap();
+        assert_eq!(ctl.epsilon(0, 1), ctl.cfg.eps_end);
+        assert_eq!(ctl.epsilon(0, 0), ctl.cfg.eps_end);
+    }
+
+    #[test]
+    fn improvement_with_zero_reference_is_clamped() {
+        // Regression: reference_us == 0.0 used to propagate NaN/inf
+        // silently into benchmark JSON.
+        let out = TuningOutcome {
+            log: TuningLog::new("x", 1),
+            best: CvarSet::vanilla(),
+            ensemble: CvarSet::vanilla(),
+            reference_us: 0.0,
+            best_us: 10.0,
+        };
+        assert_eq!(out.improvement(), 0.0);
+        let nan_ref = TuningOutcome { reference_us: f64::NAN, ..out };
+        assert_eq!(nan_ref.improvement(), 0.0);
     }
 
     #[test]

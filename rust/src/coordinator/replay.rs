@@ -126,6 +126,40 @@ mod tests {
     }
 
     #[test]
+    fn latest_across_fill_and_wrap_boundary() {
+        // Walk latest() through every phase: partial fill, the exact
+        // moment the buffer becomes full (no overwrite yet), the first
+        // overwrite, and wrapping past the end of the ring.
+        let mut rb = ReplayBuffer::new(3);
+        assert!(rb.latest().is_none());
+        rb.push(t(0.0));
+        assert_eq!(rb.latest().unwrap().reward, 0.0);
+        rb.push(t(1.0));
+        rb.push(t(2.0)); // exactly full; next overwrite slot is 0
+        assert_eq!(rb.len(), 3);
+        assert_eq!(rb.latest().unwrap().reward, 2.0);
+        rb.push(t(3.0)); // first overwrite (slot 0)
+        assert_eq!(rb.latest().unwrap().reward, 3.0);
+        rb.push(t(4.0));
+        rb.push(t(5.0)); // fills slot 2; next wraps back to 0
+        assert_eq!(rb.latest().unwrap().reward, 5.0);
+        rb.push(t(6.0)); // second trip around the ring
+        assert_eq!(rb.latest().unwrap().reward, 6.0);
+        assert_eq!(rb.len(), 3);
+        assert_eq!(rb.total_seen(), 7);
+    }
+
+    #[test]
+    fn capacity_one_ring() {
+        let mut rb = ReplayBuffer::new(1);
+        for i in 0..4 {
+            rb.push(t(i as f32));
+            assert_eq!(rb.latest().unwrap().reward, i as f32);
+            assert_eq!(rb.len(), 1);
+        }
+    }
+
+    #[test]
     #[should_panic(expected = "empty replay")]
     fn sample_empty_panics() {
         let rb = ReplayBuffer::new(4);

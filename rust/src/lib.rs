@@ -9,8 +9,10 @@
 //!   paper depends on, built from scratch: a discrete-event MPI-3
 //!   simulator ([`simmpi`]), an OpenCoarrays-like coarray runtime
 //!   ([`coarray`]), the MPI Tool Information Interface ([`mpi_t`]), the
-//!   paper's CAF workloads ([`workloads`]), and tuning baselines
-//!   ([`baselines`]).
+//!   paper's CAF workloads ([`workloads`]), tuning baselines
+//!   ([`baselines`]), and a multi-threaded campaign engine ([`campaign`])
+//!   that fans independent tuning sessions across cores with
+//!   deterministic, thread-count-invariant results.
 //! * **L2/L1 (python/, build-time only)** — the deep Q-network (JAX) and
 //!   its fused-dense Pallas kernel, AOT-lowered to HLO text under
 //!   `artifacts/` and executed from [`runtime`] via the PJRT C API.
@@ -19,6 +21,7 @@
 //! `aituning` binary is self-contained.
 
 pub mod baselines;
+pub mod campaign;
 pub mod coarray;
 pub mod convergence;
 pub mod coordinator;

@@ -13,6 +13,7 @@
 use anyhow::{bail, Context, Result};
 
 use aituning::baselines::{human_tuned, Evolutionary, RandomSearch, Searcher};
+use aituning::campaign::{job_grid, CampaignConfig, CampaignEngine, CampaignJob};
 use aituning::convergence::{run_convergence, ConvergenceConfig, SyntheticModel};
 use aituning::coordinator::{run_episode, AgentKind, Controller, TuningConfig};
 use aituning::mpi_t::{CvarId, CvarSet, MpichRegistry, VariableRegistry};
@@ -29,10 +30,11 @@ USAGE:
                        [--machine cheyenne|edison] [--seed N] [--noise F]
   aituning run         --workload icar --images 64 [--cvar NAME=VALUE,NAME=VALUE]
   aituning campaign    [--images 64,128,256] [--runs-per 20] [--agent dqn|tabular]
+                       [--workers N]   (0 = one per core; campaigns run in parallel)
   aituning convergence [--model parabola|coupled|bool] [--noise 0.3] [--runs 400]
   aituning sweep       --cvar MPIR_CVAR_POLLS_BEFORE_YIELD --values 200,1000,1500
-                       --workload icar --images 512 [--base async]
-  aituning baselines   --workload icar --images 256 [--budget 20]
+                       --workload icar --images 512 [--base async] [--workers N]
+  aituning baselines   --workload icar --images 256 [--budget 20] [--workers N]
 "
     );
     std::process::exit(2);
@@ -159,23 +161,33 @@ fn cmd_campaign(args: &Args) -> Result<()> {
         .split(',')
         .map(|s| s.parse().context("bad --images list"))
         .collect::<Result<_>>()?;
-    let cfg = TuningConfig { runs: args.usize_or("runs-per", 20)?, ..tuning_config(args)? };
-    let mut ctl = Controller::new(cfg)?;
+    let base = TuningConfig { runs: args.usize_or("runs-per", 20)?, ..tuning_config(args)? };
+    let jobs = job_grid(&WorkloadKind::TRAINING, &images, base.agent, base.seed);
+    let engine = CampaignEngine::new(CampaignConfig {
+        base,
+        workers: args.usize_or("workers", 0)?,
+    });
+    let report = engine.run(&jobs)?;
+
     let mut t = Table::new(&["workload", "images", "reference (µs)", "best (µs)", "improvement"]);
-    for kind in WorkloadKind::TRAINING {
-        for &n in &images {
-            let out = ctl.tune(kind, n)?;
-            t.row(vec![
-                kind.name().to_string(),
-                n.to_string(),
-                format!("{:.0}", out.reference_us),
-                format!("{:.0}", out.best_us),
-                format!("{:+.1}%", out.improvement() * 100.0),
-            ]);
-        }
+    for r in &report.results {
+        t.row(vec![
+            r.job.workload.name().to_string(),
+            r.job.images.to_string(),
+            format!("{:.0}", r.outcome.reference_us),
+            format!("{:.0}", r.outcome.best_us),
+            format!("{:+.1}%", r.outcome.improvement() * 100.0),
+        ]);
     }
     t.print();
-    println!("\ntotal runs: {}, replay size: {}", ctl.lifetime_runs(), ctl.replay_len());
+    println!(
+        "\ntotal runs: {} across {} jobs on {} workers in {:.2}s (geomean speedup {:.3}x)",
+        report.total_app_runs(),
+        report.results.len(),
+        report.workers,
+        report.wall_clock.as_secs_f64(),
+        report.geomean_speedup()
+    );
     Ok(())
 }
 
@@ -229,21 +241,32 @@ fn cmd_sweep(args: &Args) -> Result<()> {
     if args.get_or("base", "") == "async" {
         base.set(CvarId(0), 1);
     }
-    let noise = args.f64_or("noise", 0.02)?;
-    let seed = args.u64_or("seed", 42)?;
     let reps = args.usize_or("reps", 3)?;
+
+    // Each sweep point is an independent fixed-config evaluation: fan
+    // them across the campaign engine's worker pool.
+    let configs: Vec<CvarSet> = values
+        .iter()
+        .map(|&v| {
+            let mut cv = base.clone();
+            cv.set(d.id, v);
+            cv
+        })
+        .collect();
+    let engine = CampaignEngine::new(CampaignConfig {
+        base: TuningConfig {
+            machine,
+            noise: args.f64_or("noise", 0.02)?,
+            seed: args.u64_or("seed", 42)?,
+            ..TuningConfig::default()
+        },
+        workers: args.usize_or("workers", 0)?,
+    });
+    let means = engine.evaluate_batch(kind, images, &configs, reps)?;
+
     let mut t = Table::new(&[cvar_name, "total (µs)", "vs first"]);
-    let mut first = None;
-    for &v in &values {
-        let mut cv = base.clone();
-        cv.set(d.id, v);
-        let mut total = 0.0;
-        for r in 0..reps {
-            total +=
-                run_episode(kind, images, &machine, &cv, noise, seed, r as u64 + 1)?.total_time_us;
-        }
-        let mean = total / reps as f64;
-        let base_t = *first.get_or_insert(mean);
+    let base_t = means[0];
+    for (&v, &mean) in values.iter().zip(&means) {
         t.row(vec![
             v.to_string(),
             format!("{mean:.0}"),
@@ -259,10 +282,15 @@ fn cmd_baselines(args: &Args) -> Result<()> {
     let images = args.usize_or("images", 256)?;
     let budget = args.usize_or("budget", 20)?;
     let cfg = tuning_config(args)?;
-    let mut ctl = Controller::new(TuningConfig { agent: AgentKind::Tabular, ..cfg.clone() })?;
+    // Scoring runs through the engine: fixed-config evaluations fan out
+    // across workers and repeat visits hit the episode cache.
+    let engine = CampaignEngine::new(CampaignConfig {
+        base: TuningConfig { agent: AgentKind::Tabular, ..cfg.clone() },
+        workers: args.usize_or("workers", 0)?,
+    });
 
-    let vanilla = ctl.evaluate(kind, images, &CvarSet::vanilla(), 3)?;
-    let human = ctl.evaluate(kind, images, &human_tuned(), 3)?;
+    let vanilla = engine.evaluate(kind, images, &CvarSet::vanilla(), 3)?;
+    let human = engine.evaluate(kind, images, &human_tuned(), 3)?;
 
     let mut t = Table::new(&["method", "total (µs)", "vs vanilla"]);
     let pct = |v: f64| format!("{:+.1}%", (vanilla - v) / vanilla * 100.0);
@@ -271,26 +299,41 @@ fn cmd_baselines(args: &Args) -> Result<()> {
 
     let mut random = RandomSearch::new(cfg.seed + 1);
     let (_, rand_t) = {
-        let mut eval = |cv: &CvarSet| ctl.evaluate(kind, images, cv, 1);
-        random.search(budget, &mut eval)?
+        let mut eval = |cvs: &[CvarSet]| engine.evaluate_batch(kind, images, cvs, 1);
+        random.search_batched(budget, &mut eval)?
     };
     t.row(vec!["random".into(), format!("{rand_t:.0}"), pct(rand_t)]);
 
     let mut evo = Evolutionary::new(cfg.seed + 2);
     let (_, evo_t) = {
-        let mut eval = |cv: &CvarSet| ctl.evaluate(kind, images, cv, 1);
-        evo.search(budget, &mut eval)?
+        let mut eval = |cvs: &[CvarSet]| engine.evaluate_batch(kind, images, cvs, 1);
+        evo.search_batched(budget, &mut eval)?
     };
     t.row(vec!["evolutionary".into(), format!("{evo_t:.0}"), pct(evo_t)]);
 
-    // AITuning itself, same budget.
-    let mut dqn_ctl = Controller::new(TuningConfig { runs: budget, ..cfg })?;
-    let out = dqn_ctl.tune(kind, images)?;
+    // AITuning itself, same budget, as a one-job campaign.
+    let tune_engine = CampaignEngine::new(CampaignConfig {
+        base: TuningConfig { runs: budget, ..cfg.clone() },
+        workers: 1,
+    });
+    let report = tune_engine.run(&[CampaignJob {
+        workload: kind,
+        images,
+        agent: cfg.agent,
+        seed: cfg.seed,
+    }])?;
+    let out = &report.results[0].outcome;
     t.row(vec![
-        format!("aituning ({})", dqn_ctl.agent_name()),
+        format!("aituning ({:?})", cfg.agent),
         format!("{:.0}", out.best_us),
         pct(out.best_us),
     ]);
     t.print();
+    println!(
+        "\nepisode cache: {} entries, {} hits / {} misses",
+        engine.cache().len(),
+        engine.cache().hits(),
+        engine.cache().misses()
+    );
     Ok(())
 }

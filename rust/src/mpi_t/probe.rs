@@ -4,20 +4,33 @@
 //! MPI_T or any other way (user defined included), respect certain
 //! criteria, like datatype, precision, and range."
 
-use thiserror::Error;
+use std::fmt;
 
 use super::pvar::{PvarClass, PvarDescriptor};
 
 /// Probe validation failure.
-#[derive(Debug, Error, PartialEq)]
+#[derive(Debug, Clone, PartialEq)]
 pub enum ProbeError {
-    #[error("pvar {name}: value {value} outside range [{lo}, {hi}]")]
     OutOfRange { name: &'static str, value: f64, lo: f64, hi: f64 },
-    #[error("pvar {name}: non-finite value")]
     NonFinite { name: &'static str },
-    #[error("pvar {name}: counter/level must be integral, got {value}")]
     NotIntegral { name: &'static str, value: f64 },
 }
+
+impl fmt::Display for ProbeError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            ProbeError::OutOfRange { name, value, lo, hi } => {
+                write!(f, "pvar {name}: value {value} outside range [{lo}, {hi}]")
+            }
+            ProbeError::NonFinite { name } => write!(f, "pvar {name}: non-finite value"),
+            ProbeError::NotIntegral { name, value } => {
+                write!(f, "pvar {name}: counter/level must be integral, got {value}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for ProbeError {}
 
 /// A probe bound to one pvar descriptor.
 #[derive(Debug, Clone)]

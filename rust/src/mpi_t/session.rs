@@ -6,25 +6,40 @@
 //! `MPI_Init`. [`InitState`] enforces both; [`Session`] scopes pvar
 //! access the way MPI_T sessions isolate readers.
 
-use thiserror::Error;
+use std::fmt;
 
 use super::cvar::{CvarId, CvarSet};
 use super::pvar::{PvarId, UserDefinedPvar};
 
 /// Errors from violating MPI_T ordering or handle rules.
-#[derive(Debug, Error, PartialEq)]
+#[derive(Debug, Clone, PartialEq, Eq)]
 pub enum SessionError {
-    #[error("control variable {0:?} modified after MPI_Init")]
     CvarAfterInit(CvarId),
-    #[error("performance session created before MPI_Init")]
     SessionBeforeInit,
-    #[error("performance variable {0:?} read outside a session")]
     NoSession(PvarId),
-    #[error("MPI_Init called twice")]
     DoubleInit,
-    #[error("MPI_Finalize before MPI_Init")]
     FinalizeBeforeInit,
 }
+
+impl fmt::Display for SessionError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            SessionError::CvarAfterInit(id) => {
+                write!(f, "control variable {id:?} modified after MPI_Init")
+            }
+            SessionError::SessionBeforeInit => {
+                write!(f, "performance session created before MPI_Init")
+            }
+            SessionError::NoSession(id) => {
+                write!(f, "performance variable {id:?} read outside a session")
+            }
+            SessionError::DoubleInit => write!(f, "MPI_Init called twice"),
+            SessionError::FinalizeBeforeInit => write!(f, "MPI_Finalize before MPI_Init"),
+        }
+    }
+}
+
+impl std::error::Error for SessionError {}
 
 /// Lifecycle of the (simulated) MPI library within one run.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]

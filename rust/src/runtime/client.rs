@@ -8,6 +8,8 @@ use std::path::Path;
 
 use anyhow::{Context, Result};
 
+use super::xla;
+
 /// Process-wide PJRT client; create once, share by reference.
 pub struct RuntimeClient {
     client: xla::PjRtClient,

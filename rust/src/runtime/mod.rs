@@ -10,6 +10,7 @@ mod artifact;
 mod client;
 mod params;
 mod qnet;
+pub(crate) mod xla;
 
 pub use artifact::{default_artifacts_dir, ArtifactSpec, Manifest, TensorSpec};
 pub use client::{Executable, RuntimeClient};

@@ -7,6 +7,7 @@
 
 use anyhow::Result;
 
+use super::xla;
 use crate::util::rng::Rng;
 
 /// Layer dims of the Q-net MLP; must match `model.LAYER_DIMS`.

@@ -13,6 +13,7 @@ use anyhow::{Context, Result};
 use super::artifact::Manifest;
 use super::client::{literal_f32_1d, literal_f32_2d, literal_f32_scalar, Executable, RuntimeClient};
 use super::params::{AdamState, QParams};
+use super::xla;
 use crate::util::rng::Rng;
 
 /// One replay minibatch in flat row-major layout.

@@ -1,0 +1,118 @@
+//! Indirection over the XLA/PJRT bindings.
+//!
+//! With the `pjrt` cargo feature enabled this re-exports the external
+//! `xla` bindings crate (which must be supplied to the build — it is
+//! not vendored in the offline image). Without the feature, a stub with
+//! the same surface is compiled instead: every entry point that would
+//! touch PJRT returns a descriptive error, starting with
+//! [`PjRtClient::cpu`], so the DQN path fails fast with a clear message
+//! while the tabular agent and the whole simulator stack stay fully
+//! usable offline.
+
+#[cfg(feature = "pjrt")]
+pub use ::xla::*;
+
+#[cfg(not(feature = "pjrt"))]
+pub use stub::*;
+
+#[cfg(not(feature = "pjrt"))]
+mod stub {
+    use std::fmt;
+    use std::path::Path;
+
+    /// Error surfaced by every stubbed PJRT entry point.
+    #[derive(Debug, Clone)]
+    pub struct Error(String);
+
+    impl fmt::Display for Error {
+        fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+            f.write_str(&self.0)
+        }
+    }
+
+    impl std::error::Error for Error {}
+
+    fn unavailable<T>() -> Result<T, Error> {
+        Err(Error(
+            "XLA/PJRT backend not compiled in (build with the `pjrt` feature and the \
+             external `xla` crate); use the tabular agent instead"
+                .to_string(),
+        ))
+    }
+
+    /// Host-side tensor stand-in.
+    #[derive(Debug, Clone)]
+    pub struct Literal;
+
+    impl Literal {
+        pub fn vec1<T: Copy>(_data: &[T]) -> Literal {
+            Literal
+        }
+
+        pub fn reshape(&self, _dims: &[i64]) -> Result<Literal, Error> {
+            unavailable()
+        }
+
+        pub fn to_vec<T>(&self) -> Result<Vec<T>, Error> {
+            unavailable()
+        }
+
+        pub fn to_tuple(&self) -> Result<Vec<Literal>, Error> {
+            unavailable()
+        }
+    }
+
+    impl From<f32> for Literal {
+        fn from(_v: f32) -> Literal {
+            Literal
+        }
+    }
+
+    pub struct PjRtClient;
+
+    impl PjRtClient {
+        pub fn cpu() -> Result<PjRtClient, Error> {
+            unavailable()
+        }
+
+        pub fn platform_name(&self) -> String {
+            "pjrt-stub".to_string()
+        }
+
+        pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable, Error> {
+            unavailable()
+        }
+    }
+
+    pub struct HloModuleProto;
+
+    impl HloModuleProto {
+        pub fn from_text_file<P: AsRef<Path>>(_path: P) -> Result<HloModuleProto, Error> {
+            unavailable()
+        }
+    }
+
+    pub struct XlaComputation;
+
+    impl XlaComputation {
+        pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+            XlaComputation
+        }
+    }
+
+    pub struct PjRtLoadedExecutable;
+
+    impl PjRtLoadedExecutable {
+        pub fn execute<T>(&self, _args: &[T]) -> Result<Vec<Vec<PjRtBuffer>>, Error> {
+            unavailable()
+        }
+    }
+
+    pub struct PjRtBuffer;
+
+    impl PjRtBuffer {
+        pub fn to_literal_sync(&self) -> Result<Literal, Error> {
+            unavailable()
+        }
+    }
+}

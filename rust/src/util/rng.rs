@@ -178,6 +178,51 @@ mod tests {
     }
 
     #[test]
+    fn below_one_is_always_zero() {
+        // n == 1 exercises Lemire's rejection threshold at its
+        // degenerate edge (t = 0): no rejection loop, always 0.
+        let mut r = Rng::new(3);
+        for _ in 0..1_000 {
+            assert_eq!(r.below(1), 0);
+        }
+    }
+
+    #[test]
+    fn range_i64_degenerate_and_extreme_bounds() {
+        let mut r = Rng::new(5);
+        for _ in 0..100 {
+            assert_eq!(r.range_i64(5, 5), 5);
+            assert_eq!(r.range_i64(-3, -3), -3);
+            assert_eq!(r.range_i64(0, 0), 0);
+        }
+        for _ in 0..1_000 {
+            let v = r.range_i64(-2, 2);
+            assert!((-2..=2).contains(&v), "{v}");
+        }
+    }
+
+    #[test]
+    fn fork_streams_are_deterministic_and_independent() {
+        let mut a = Rng::new(42);
+        let mut b = Rng::new(42);
+        let mut fa = a.fork(3);
+        let mut fb = b.fork(3);
+        for _ in 0..64 {
+            assert_eq!(fa.next_u64(), fb.next_u64());
+        }
+        // A child stream is not a replay of its sibling or its parent.
+        let mut c = Rng::new(42);
+        let mut f3 = c.fork(3);
+        let mut c2 = Rng::new(42);
+        let mut f4 = c2.fork(4);
+        let s3: Vec<u64> = (0..8).map(|_| f3.next_u64()).collect();
+        let s4: Vec<u64> = (0..8).map(|_| f4.next_u64()).collect();
+        assert_ne!(s3, s4);
+        let parent: Vec<u64> = (0..8).map(|_| c.next_u64()).collect();
+        assert_ne!(s3, parent);
+    }
+
+    #[test]
     fn normal_moments() {
         let mut r = Rng::new(11);
         let n = 100_000;

@@ -22,7 +22,7 @@ pub trait Workload {
 }
 
 /// Enumeration of the built-in workloads (CLI/bench selection).
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum WorkloadKind {
     Icar,
     CloverLeaf,

@@ -1,0 +1,146 @@
+//! Campaign-engine integration tests: thread-count invariance (the
+//! engine's core contract), episode-cache correctness, and report
+//! consistency — all against the real simulator with the tabular agent.
+
+use aituning::campaign::{job_grid, CampaignConfig, CampaignEngine, CampaignJob};
+use aituning::coordinator::{AgentKind, Controller, TuningConfig};
+use aituning::mpi_t::{CvarId, CvarSet};
+use aituning::workloads::WorkloadKind;
+
+fn base_cfg(runs: usize) -> TuningConfig {
+    TuningConfig {
+        agent: AgentKind::Tabular,
+        runs,
+        noise: 0.01,
+        seed: 7,
+        ..TuningConfig::default()
+    }
+}
+
+fn engine(runs: usize, workers: usize) -> CampaignEngine {
+    CampaignEngine::new(CampaignConfig { base: base_cfg(runs), workers })
+}
+
+fn small_grid() -> Vec<CampaignJob> {
+    job_grid(
+        &[WorkloadKind::LatticeBoltzmann, WorkloadKind::SkeletonPic],
+        &[4, 8],
+        AgentKind::Tabular,
+        7,
+    )
+}
+
+#[test]
+fn campaign_results_identical_at_1_and_n_workers() {
+    let jobs = small_grid();
+    assert_eq!(jobs.len(), 4);
+    let serial = engine(4, 1).run(&jobs).unwrap();
+    let parallel = engine(4, 4).run(&jobs).unwrap();
+
+    assert_eq!(serial.workers, 1);
+    assert_eq!(serial.fingerprint(), parallel.fingerprint());
+    for (a, b) in serial.results.iter().zip(&parallel.results) {
+        assert_eq!(a.job, b.job);
+        assert_eq!(a.outcome.best_us.to_bits(), b.outcome.best_us.to_bits());
+        assert_eq!(a.outcome.reference_us.to_bits(), b.outcome.reference_us.to_bits());
+        assert_eq!(a.outcome.ensemble, b.outcome.ensemble);
+        assert_eq!(a.outcome.log.runs.len(), b.outcome.log.runs.len());
+        for (ra, rb) in a.outcome.log.runs.iter().zip(&b.outcome.log.runs) {
+            assert_eq!(ra.total_time_us.to_bits(), rb.total_time_us.to_bits());
+            assert_eq!(ra.cvars, rb.cvars);
+            assert_eq!(ra.action, rb.action);
+        }
+    }
+}
+
+#[test]
+fn campaign_matches_standalone_controller() {
+    // An engine job must produce exactly what a hand-built controller
+    // with the same seed produces: the pool adds no hidden coupling.
+    let job = CampaignJob {
+        workload: WorkloadKind::LatticeBoltzmann,
+        images: 8,
+        agent: AgentKind::Tabular,
+        seed: 1234,
+    };
+    let report = engine(5, 2).run(&[job]).unwrap();
+
+    let mut ctl = Controller::new(TuningConfig { seed: 1234, ..base_cfg(5) }).unwrap();
+    let direct = ctl.tune(WorkloadKind::LatticeBoltzmann, 8).unwrap();
+
+    let pooled = &report.results[0].outcome;
+    assert_eq!(pooled.best_us.to_bits(), direct.best_us.to_bits());
+    assert_eq!(pooled.log.runs.len(), direct.log.runs.len());
+    for (a, b) in pooled.log.runs.iter().zip(&direct.log.runs) {
+        assert_eq!(a.total_time_us.to_bits(), b.total_time_us.to_bits());
+    }
+}
+
+#[test]
+fn more_workers_than_jobs_is_fine() {
+    let jobs = job_grid(&[WorkloadKind::PrkP2p], &[4, 8], AgentKind::Tabular, 3);
+    let report = engine(3, 64).run(&jobs).unwrap();
+    assert_eq!(report.results.len(), 2);
+    assert!(report.workers <= 2, "workers clamp to job count");
+}
+
+#[test]
+fn report_summary_is_consistent() {
+    let jobs = small_grid();
+    let report = engine(4, 0).run(&jobs).unwrap();
+    assert_eq!(report.improvements().len(), jobs.len());
+    // Each job logs runs+1 records (reference + tuning runs).
+    assert_eq!(report.total_app_runs(), jobs.len() * 5);
+    assert!(report.geomean_speedup() > 0.0);
+    assert_eq!(report.improvement_summary().count, jobs.len());
+    let j = report.to_json();
+    assert_eq!(j.at(&["jobs"]).unwrap().as_arr().unwrap().len(), jobs.len());
+}
+
+#[test]
+fn repeated_evaluation_hits_the_cache_and_agrees() {
+    let eng = engine(4, 2);
+    let kind = WorkloadKind::LatticeBoltzmann;
+    let t1 = eng.evaluate(kind, 4, &CvarSet::vanilla(), 2).unwrap();
+    let misses_after_first = eng.cache().misses();
+    let t2 = eng.evaluate(kind, 4, &CvarSet::vanilla(), 2).unwrap();
+    assert_eq!(t1.to_bits(), t2.to_bits(), "cached evaluation must be bit-identical");
+    assert_eq!(eng.cache().misses(), misses_after_first, "second pass must not simulate");
+    assert!(eng.cache().hits() >= 2);
+    assert!(t1 > 0.0);
+}
+
+#[test]
+fn evaluate_batch_matches_serial_evaluate() {
+    let kind = WorkloadKind::Icar;
+    let mut tuned = CvarSet::vanilla();
+    tuned.set(CvarId(0), 1);
+    let mut eager = CvarSet::vanilla();
+    eager.set(CvarId(5), 1_310_720);
+    let configs = vec![CvarSet::vanilla(), tuned, eager];
+
+    // Separate engines so the batched path cannot lean on the serial
+    // path's cache entries.
+    let batch_engine = engine(4, 4);
+    let batched = batch_engine.evaluate_batch(kind, 8, &configs, 2).unwrap();
+
+    let serial_engine = engine(4, 1);
+    for (cv, &t) in configs.iter().zip(&batched) {
+        let s = serial_engine.evaluate(kind, 8, cv, 2).unwrap();
+        assert_eq!(s.to_bits(), t.to_bits());
+    }
+}
+
+#[test]
+fn controller_cached_evaluation_uses_engine_cache() {
+    let eng = engine(4, 1);
+    let ctl = Controller::new(base_cfg(4)).unwrap();
+    let kind = WorkloadKind::SkeletonPic;
+    let a = ctl.evaluate_cached(kind, 8, &CvarSet::vanilla(), 3, eng.cache()).unwrap();
+    let b = eng.evaluate(kind, 8, &CvarSet::vanilla(), 3).unwrap();
+    // Same base config + same cache ⇒ same episodes, and the second
+    // caller is answered entirely from the cache.
+    assert_eq!(a.to_bits(), b.to_bits());
+    assert_eq!(eng.cache().misses(), 3);
+    assert_eq!(eng.cache().hits(), 3);
+}
