@@ -5,13 +5,14 @@
 //! Skeleton PIC, PRK) at 64–2048 processes on two machines, ~5000 runs
 //! total. This driver runs the same campaign shape — both machine
 //! models, all four training codes, a range of image counts — scaled to
-//! minutes of simulated-cluster time, with every (workload, images)
-//! cell an independent seeded job fanned across all cores. Pass
-//! `--full` for the larger sweep (64..512 images), `--quick` for a
-//! smoke pass.
+//! minutes of simulated-cluster time, as **one** job grid spanning both
+//! testbeds fanned across all cores. Pass `--full` for the larger sweep
+//! (64..512 images), `--quick` for a smoke pass, and `--shared` to
+//! couple the jobs through the LearnerHub parameter server and print
+//! the independent-vs-shared ablation instead of the plain table.
 
-use aituning::campaign::{job_grid, CampaignConfig, CampaignEngine};
-use aituning::coordinator::{AgentKind, TuningConfig};
+use aituning::campaign::{ablation_table, job_grid, CampaignConfig, CampaignEngine};
+use aituning::coordinator::{AgentKind, SharedLearning, TuningConfig};
 use aituning::simmpi::Machine;
 use aituning::util::bench::Table;
 use aituning::workloads::WorkloadKind;
@@ -19,6 +20,7 @@ use aituning::workloads::WorkloadKind;
 fn main() -> anyhow::Result<()> {
     let full = std::env::args().any(|a| a == "--full");
     let quick = std::env::args().any(|a| a == "--quick");
+    let shared_mode = std::env::args().any(|a| a == "--shared");
     let image_counts: &[usize] = if full {
         &[64, 128, 256, 512]
     } else if quick {
@@ -27,43 +29,56 @@ fn main() -> anyhow::Result<()> {
         &[32, 64, 128]
     };
     let runs_per = if quick { 6 } else { 20 };
+    let machines = [Machine::cheyenne(), Machine::edison()];
+    let agent = if aituning::runtime::default_artifacts_dir().join("manifest.json").exists() {
+        AgentKind::Dqn
+    } else {
+        AgentKind::Tabular
+    };
+    let base = TuningConfig {
+        machine: machines[0].clone(),
+        agent,
+        runs: runs_per,
+        seed: 5,
+        shared: shared_mode.then_some(SharedLearning { sync_every: if quick { 2 } else { 5 } }),
+        ..TuningConfig::default()
+    };
+    let jobs = job_grid(&machines, &WorkloadKind::TRAINING, image_counts, agent, base.seed);
+    let engine = CampaignEngine::new(CampaignConfig { base, workers: 0 });
 
+    if shared_mode {
+        let independent = engine.run(&jobs)?;
+        let shared = engine.run_shared(&jobs)?;
+        println!("=== §6 training campaign: independent vs shared learning ===");
+        ablation_table(&independent, &shared).print();
+        let hub = shared.hub.expect("shared report carries hub state");
+        println!(
+            "\ngeomean speedup: independent {:.3}x vs shared {:.3}x",
+            independent.geomean_speedup(),
+            shared.geomean_speedup()
+        );
+        println!("hub: {}", hub.describe());
+        return Ok(());
+    }
+
+    let report = engine.run(&jobs)?;
     let mut t = Table::new(&["machine", "workload", "images", "reference (µs)", "best gain"]);
-    let mut total_runs = 0usize;
-    let mut wall = 0.0f64;
-    let mut workers = 0;
-    for machine in [Machine::cheyenne(), Machine::edison()] {
-        let agent = if aituning::runtime::default_artifacts_dir().join("manifest.json").exists() {
-            AgentKind::Dqn
-        } else {
-            AgentKind::Tabular
-        };
-        let base = TuningConfig {
-            machine: machine.clone(),
-            agent,
-            runs: runs_per,
-            seed: 5,
-            ..TuningConfig::default()
-        };
-        let jobs = job_grid(&WorkloadKind::TRAINING, image_counts, agent, base.seed);
-        let report = CampaignEngine::new(CampaignConfig { base, workers: 0 }).run(&jobs)?;
-        for r in &report.results {
-            t.row(vec![
-                machine.name.to_string(),
-                r.job.workload.name().to_string(),
-                r.job.images.to_string(),
-                format!("{:.0}", r.outcome.reference_us),
-                format!("{:+.1}%", r.outcome.improvement() * 100.0),
-            ]);
-        }
-        total_runs += report.total_app_runs();
-        wall += report.wall_clock.as_secs_f64();
-        workers = report.workers;
+    for r in &report.results {
+        t.row(vec![
+            r.job.machine.to_string(),
+            r.job.workload.name().to_string(),
+            r.job.images.to_string(),
+            format!("{:.0}", r.outcome.reference_us),
+            format!("{:+.1}%", r.outcome.improvement() * 100.0),
+        ]);
     }
     println!("=== §6 training campaign (scaled; paper: 5000 runs at 64–2048 procs) ===");
     t.print();
     println!(
-        "\ntotal application runs executed: {total_runs} in {wall:.2}s on {workers} workers"
+        "\ntotal application runs executed: {} in {:.2}s on {} workers",
+        report.total_app_runs(),
+        report.wall_clock.as_secs_f64(),
+        report.workers
     );
     Ok(())
 }

@@ -45,7 +45,13 @@ fn main() -> anyhow::Result<()> {
     }
     let jobs: Vec<CampaignJob> = agents
         .iter()
-        .map(|&(_, agent)| CampaignJob { workload: kind, images, agent, seed: base.seed })
+        .map(|&(_, agent)| CampaignJob {
+            machine: base.machine.name,
+            workload: kind,
+            images,
+            agent,
+            seed: base.seed,
+        })
         .collect();
     let report =
         CampaignEngine::new(CampaignConfig { base: base.clone(), workers: 0 }).run(&jobs)?;
@@ -101,6 +107,7 @@ fn main() -> anyhow::Result<()> {
     if have_artifacts && !quick {
         let report = CampaignEngine::new(CampaignConfig { base: base.clone(), workers: 1 })
             .run(&[CampaignJob {
+                machine: base.machine.name,
                 workload: kind,
                 images,
                 agent: AgentKind::DqnTarget,
@@ -122,6 +129,7 @@ fn main() -> anyhow::Result<()> {
             workers: 1,
         });
         let report = variant.run(&[CampaignJob {
+            machine: base.machine.name,
             workload: kind,
             images,
             agent: AgentKind::Tabular,

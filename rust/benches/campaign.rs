@@ -1,17 +1,18 @@
 //! §6 training-campaign table, driven by the parallel campaign engine:
-//! the four training codes across scales on both machine models,
-//! reporting reference time and AITuning's best improvement per cell
-//! (a scaled version of the paper's 5000-run, 64–2048-process
-//! campaign).
+//! the four training codes across scales on both machine models — one
+//! job grid, one worker pool spanning both testbeds — reporting
+//! reference time and AITuning's best improvement per cell (a scaled
+//! version of the paper's 5000-run, 64–2048-process campaign).
 //!
-//! Every campaign is executed twice — once on 1 worker, once on all
-//! cores — the engine's thread-count invariance is asserted by
-//! fingerprint, and both wall clocks are reported so the parallel
-//! speedup is visible in the output.
+//! Determinism checks: the independent campaign is executed on 1 worker
+//! and on all cores and the fingerprints must match; the shared-learning
+//! campaign is likewise executed at both worker counts and its
+//! fingerprint (which folds in the final LearnerHub state) must match
+//! too. The independent-vs-shared ablation table then compares per-cell
+//! improvements at an identical run budget.
 
-use aituning::campaign::{job_grid, CampaignConfig, CampaignEngine};
-use aituning::coordinator::{AgentKind, TuningConfig};
-use aituning::metrics::stats::geomean;
+use aituning::campaign::{ablation_table, job_grid, CampaignConfig, CampaignEngine};
+use aituning::coordinator::{AgentKind, SharedLearning, TuningConfig};
 use aituning::simmpi::Machine;
 use aituning::util::bench::Table;
 use aituning::workloads::WorkloadKind;
@@ -34,60 +35,78 @@ fn main() -> anyhow::Result<()> {
     } else {
         AgentKind::Tabular
     };
+    let machines = [Machine::cheyenne(), Machine::edison()];
 
-    let mut t = Table::new(&["machine", "workload", "images", "reference (µs)", "best gain"]);
-    let mut timing = Table::new(&["machine", "jobs", "1 worker", "all cores", "speedup"]);
-    let mut gains = Vec::new();
-    let mut total_runs = 0;
-    for machine in [Machine::cheyenne(), Machine::edison()] {
-        let base = TuningConfig {
-            machine: machine.clone(),
-            agent,
-            runs: runs_per,
-            seed: 5,
-            ..TuningConfig::default()
-        };
-        let jobs = job_grid(&WorkloadKind::TRAINING, image_counts, agent, base.seed);
+    let base = TuningConfig {
+        machine: machines[0].clone(),
+        agent,
+        runs: runs_per,
+        seed: 5,
+        shared: Some(SharedLearning { sync_every: if quick { 2 } else { 5 } }),
+        ..TuningConfig::default()
+    };
+    let jobs = job_grid(&machines, &WorkloadKind::TRAINING, image_counts, agent, base.seed);
 
-        let serial =
-            CampaignEngine::new(CampaignConfig { base: base.clone(), workers: 1 }).run(&jobs)?;
-        let parallel = CampaignEngine::new(CampaignConfig { base, workers: 0 }).run(&jobs)?;
-        assert_eq!(
-            serial.fingerprint(),
-            parallel.fingerprint(),
-            "campaign results must be bit-identical at 1 and {} workers",
-            parallel.workers
-        );
+    // --- independent mode: serial vs parallel, bit-identical ---
+    let serial =
+        CampaignEngine::new(CampaignConfig { base: base.clone(), workers: 1 }).run(&jobs)?;
+    let parallel =
+        CampaignEngine::new(CampaignConfig { base: base.clone(), workers: 0 }).run(&jobs)?;
+    assert_eq!(
+        serial.fingerprint(),
+        parallel.fingerprint(),
+        "independent campaign must be bit-identical at 1 and {} workers",
+        parallel.workers
+    );
 
-        for r in &parallel.results {
-            gains.push(1.0 + r.outcome.improvement());
-            t.row(vec![
-                machine.name.to_string(),
-                r.job.workload.name().to_string(),
-                r.job.images.to_string(),
-                format!("{:.0}", r.outcome.reference_us),
-                format!("{:+.1}%", r.outcome.improvement() * 100.0),
-            ]);
-        }
-        total_runs += parallel.total_app_runs();
-        let s1 = serial.wall_clock.as_secs_f64();
-        let sn = parallel.wall_clock.as_secs_f64();
+    // --- shared mode: same jobs through the LearnerHub, same check ---
+    let shared_serial =
+        CampaignEngine::new(CampaignConfig { base: base.clone(), workers: 1 }).run_shared(&jobs)?;
+    let shared_parallel =
+        CampaignEngine::new(CampaignConfig { base: base.clone(), workers: 0 })
+            .run_shared(&jobs)?;
+    assert_eq!(
+        shared_serial.fingerprint(),
+        shared_parallel.fingerprint(),
+        "shared campaign (hub state included) must be bit-identical at 1 and {} workers",
+        shared_parallel.workers
+    );
+
+    // --- ablation table: independent vs shared, identical budget ---
+    println!("=== §6 training campaign ({agent:?} agent, {runs_per} runs/cell) ===");
+    ablation_table(&parallel, &shared_parallel).print();
+    let hub = shared_parallel.hub.expect("shared report carries hub state");
+    println!(
+        "\ngeomean speedup: independent {:.3}x vs shared {:.3}x over {} cells",
+        parallel.geomean_speedup(),
+        shared_parallel.geomean_speedup(),
+        jobs.len()
+    );
+    println!("hub: {}", hub.describe());
+
+    // --- engine scaling (results verified bit-identical above) ---
+    let mut timing = Table::new(&["mode", "jobs", "1 worker", "all cores", "speedup"]);
+    for (mode, s1, sn, w) in [
+        ("independent", &serial, &parallel, parallel.workers),
+        ("shared", &shared_serial, &shared_parallel, shared_parallel.workers),
+    ] {
+        let a = s1.wall_clock.as_secs_f64();
+        let b = sn.wall_clock.as_secs_f64();
         timing.row(vec![
-            machine.name.to_string(),
+            mode.to_string(),
             format!("{}", jobs.len()),
-            format!("{s1:.2}s"),
-            format!("{sn:.2}s ({} workers)", parallel.workers),
-            format!("{:.2}x", s1 / sn.max(1e-9)),
+            format!("{a:.2}s"),
+            format!("{b:.2}s ({w} workers)"),
+            format!("{:.2}x", a / b.max(1e-9)),
         ]);
     }
-    println!("=== §6 training campaign ({agent:?} agent, {runs_per} runs/cell) ===");
-    t.print();
-    println!(
-        "\ngeomean speedup across cells: {:.3}x over {} total application runs",
-        geomean(&gains),
-        total_runs
-    );
-    println!("\n=== campaign engine scaling (results verified bit-identical) ===");
+    println!("\n=== campaign engine scaling ===");
     timing.print();
+    println!(
+        "total application runs: {}",
+        serial.total_app_runs() + parallel.total_app_runs()
+            + shared_serial.total_app_runs()
+            + shared_parallel.total_app_runs()
+    );
     Ok(())
 }

@@ -17,6 +17,7 @@ use anyhow::Result;
 use crate::coordinator::controller::seed_mix;
 use crate::coordinator::{run_episode, Controller, TuningConfig};
 use crate::mpi_t::CvarSet;
+use crate::simmpi::Machine;
 use crate::workloads::WorkloadKind;
 
 use super::cache::{EpisodeCache, EpisodeKey};
@@ -93,7 +94,7 @@ impl CampaignEngine {
             }
         });
         let results = collector.into_merged().into_iter().collect::<Result<Vec<_>>>()?;
-        Ok(CampaignReport { results, wall_clock: started.elapsed(), workers })
+        Ok(CampaignReport { results, wall_clock: started.elapsed(), workers, hub: None })
     }
 
     /// Score one fixed configuration (mean total time over `repeats`
@@ -129,6 +130,11 @@ impl CampaignEngine {
     /// baselines and sweeps fan out through). Results are ordered like
     /// `configs` and identical to calling [`CampaignEngine::evaluate`]
     /// per config serially.
+    ///
+    /// Work items are individual *episodes* — `(config, repeat)` pairs
+    /// — not whole configs, so even one expensive config with many
+    /// repeats fans across the full pool (no second pool is spawned;
+    /// the granularity change reuses the same cursor + collector).
     pub fn evaluate_batch(
         &self,
         kind: WorkloadKind,
@@ -136,11 +142,33 @@ impl CampaignEngine {
         configs: &[CvarSet],
         repeats: usize,
     ) -> Result<Vec<f64>> {
-        if configs.is_empty() {
+        let machine = self.cfg.base.machine.clone();
+        let specs: Vec<EvalSpec> = configs
+            .iter()
+            .map(|cvars| EvalSpec {
+                machine: machine.clone(),
+                workload: kind,
+                images,
+                cvars: cvars.clone(),
+            })
+            .collect();
+        self.evaluate_specs(&specs, repeats)
+    }
+
+    /// Score heterogeneous fixed-config evaluations — each spec names
+    /// its own machine/workload/scale — on one worker pool, at
+    /// per-episode granularity. The means come back in spec order and
+    /// each equals the serial [`CampaignEngine::evaluate`] result for
+    /// that spec's cell bit-for-bit (same per-repeat seeds, same
+    /// in-order summation).
+    pub fn evaluate_specs(&self, specs: &[EvalSpec], repeats: usize) -> Result<Vec<f64>> {
+        if specs.is_empty() {
             return Ok(Vec::new());
         }
-        let workers = self.workers_for(configs.len());
-        let collector = ShardedCollector::new(configs.len(), workers);
+        let repeats = repeats.max(1);
+        let items = specs.len() * repeats;
+        let workers = self.workers_for(items);
+        let collector = ShardedCollector::new(items, workers);
         let cursor = AtomicUsize::new(0);
         std::thread::scope(|scope| {
             for w in 0..workers {
@@ -149,22 +177,68 @@ impl CampaignEngine {
                 let base = &self.cfg.base;
                 let cache = &self.cache;
                 scope.spawn(move || loop {
-                    let i = cursor.fetch_add(1, Ordering::Relaxed);
-                    if i >= configs.len() {
+                    let j = cursor.fetch_add(1, Ordering::Relaxed);
+                    if j >= items {
                         break;
                     }
-                    let r = evaluate_config(base, kind, images, &configs[i], repeats, Some(cache));
-                    collector.push(w, i, r);
+                    let spec = &specs[j / repeats];
+                    let run_seed = (j % repeats) as u64 + 1;
+                    let workload_seed = base.seed ^ seed_mix(spec.workload, spec.images);
+                    let r = cached_episode_time(
+                        &spec.machine,
+                        spec.workload,
+                        spec.images,
+                        &spec.cvars,
+                        base.noise,
+                        workload_seed,
+                        run_seed,
+                        Some(cache),
+                    );
+                    collector.push(w, j, r);
                 });
             }
         });
-        collector.into_merged().into_iter().collect()
+        let times = collector.into_merged().into_iter().collect::<Result<Vec<f64>>>()?;
+        // Per-spec mean, summing repeats in seed order — the same
+        // accumulation the serial path performs.
+        Ok(times
+            .chunks(repeats)
+            .map(|chunk| {
+                let mut total = 0.0;
+                for &t in chunk {
+                    total += t;
+                }
+                total / repeats as f64
+            })
+            .collect())
     }
 }
 
+/// One fixed-configuration evaluation cell: a configuration scored on a
+/// specific machine, workload and scale. The unit [`CampaignEngine::evaluate_specs`]
+/// fans out, letting a single pool span both testbeds (and arbitrary
+/// workload mixes) in one call.
+#[derive(Debug, Clone)]
+pub struct EvalSpec {
+    pub machine: Machine,
+    pub workload: WorkloadKind,
+    pub images: usize,
+    pub cvars: CvarSet,
+}
+
 /// Run one campaign job: an independent controller seeded from the job.
+/// The job's machine overrides the base config's (the job, not the
+/// engine, names the testbed), and `shared` is stripped — `run` is the
+/// independent path, so its controllers must not track hub-push shards
+/// even when the caller's base config also drives `run_shared`.
 fn run_job(base: &TuningConfig, job: &CampaignJob) -> Result<JobOutcome> {
-    let cfg = TuningConfig { agent: job.agent, seed: job.seed, ..base.clone() };
+    let cfg = TuningConfig {
+        agent: job.agent,
+        seed: job.seed,
+        machine: job.resolve_machine()?,
+        shared: None,
+        ..base.clone()
+    };
     let mut ctl = Controller::new(cfg)?;
     let outcome = ctl.tune(job.workload, job.images)?;
     Ok(JobOutcome { job: *job, outcome })
@@ -190,33 +264,40 @@ pub fn evaluate_config(
     let mut total = 0.0;
     for r in 0..repeats {
         let run_seed = r as u64 + 1;
-        let simulate = || {
-            Ok(run_episode(
-                kind,
-                images,
-                &base.machine,
-                cvars,
-                base.noise,
-                workload_seed,
-                run_seed,
-            )?
-            .total_time_us)
-        };
-        total += match cache {
-            Some(c) => {
-                let key = EpisodeKey::new(
-                    kind,
-                    images,
-                    cvars,
-                    &base.machine,
-                    base.noise,
-                    workload_seed,
-                    run_seed,
-                );
-                c.get_or_run(key, simulate)?
-            }
-            None => simulate()?,
-        };
+        total += cached_episode_time(
+            &base.machine,
+            kind,
+            images,
+            cvars,
+            base.noise,
+            workload_seed,
+            run_seed,
+            cache,
+        )?;
     }
     Ok(total / repeats as f64)
+}
+
+/// One (possibly cached) episode total time — the shared leaf of the
+/// serial and per-episode-parallel evaluation paths.
+#[allow(clippy::too_many_arguments)]
+fn cached_episode_time(
+    machine: &Machine,
+    kind: WorkloadKind,
+    images: usize,
+    cvars: &CvarSet,
+    noise: f64,
+    workload_seed: u64,
+    run_seed: u64,
+    cache: Option<&EpisodeCache>,
+) -> Result<f64> {
+    let simulate =
+        || Ok(run_episode(kind, images, machine, cvars, noise, workload_seed, run_seed)?.total_time_us);
+    match cache {
+        Some(c) => {
+            let key = EpisodeKey::new(kind, images, cvars, machine, noise, workload_seed, run_seed);
+            c.get_or_run(key, simulate)
+        }
+        None => simulate(),
+    }
 }

@@ -1,17 +1,24 @@
-//! Campaign job specs: one job = tune one (workload, images) cell with
-//! one agent, from one deterministic seed.
+//! Campaign job specs: one job = tune one (machine, workload, images)
+//! cell with one agent, from one deterministic seed.
 
 use crate::coordinator::AgentKind;
+use crate::simmpi::Machine;
 use crate::util::rng::Rng;
 use crate::workloads::WorkloadKind;
 
 /// One independent unit of campaign work: a full §5 tuning session of
-/// `workload` at `images` processes, driven by `agent`, seeded with
-/// `seed`. Jobs carry everything that varies per cell; shared settings
-/// (machine model, run budget, hyper-parameters) live in the engine's
-/// base [`crate::coordinator::TuningConfig`].
+/// `workload` at `images` processes on `machine`, driven by `agent`,
+/// seeded with `seed`. Jobs carry everything that varies per cell —
+/// including the machine model, so one worker pool spans both testbeds
+/// instead of call sites looping over `Machine`. Shared settings (run
+/// budget, hyper-parameters) live in the engine's base
+/// [`crate::coordinator::TuningConfig`].
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct CampaignJob {
+    /// Machine-model preset name (presets are fully determined by
+    /// name; see [`Machine::by_name`]). Stored as the name rather than
+    /// the struct so jobs stay `Copy + Eq`.
+    pub machine: &'static str,
     pub workload: WorkloadKind,
     pub images: usize,
     pub agent: AgentKind,
@@ -19,32 +26,49 @@ pub struct CampaignJob {
 }
 
 impl CampaignJob {
-    /// Compact `workload@images` label for tables and logs.
+    /// Compact `machine/workload@images` label for tables and logs.
     pub fn label(&self) -> String {
-        format!("{}@{}", self.workload.name(), self.images)
+        format!("{}/{}@{}", self.machine, self.workload.name(), self.images)
+    }
+
+    /// Resolve the machine-model preset.
+    pub fn resolve_machine(&self) -> anyhow::Result<Machine> {
+        Machine::by_name(self.machine)
+            .ok_or_else(|| anyhow::anyhow!("unknown machine {:?}", self.machine))
     }
 }
 
-/// Build the (workload × images) cross-product job list with
+/// Build the (machine × workload × images) cross-product job list with
 /// deterministic per-job seeds.
 ///
 /// Each job's seed is drawn from an independent child stream forked off
 /// one master generator ([`Rng::fork`]), so the seed assigned to cell
 /// `k` depends only on `master_seed` and `k` — never on which worker
 /// thread eventually runs the job. This is what makes campaign results
-/// bit-identical across worker counts.
+/// bit-identical across worker counts. For a single machine the cell
+/// indexing (and therefore every job seed) is identical to the old
+/// machine-less grid.
 pub fn job_grid(
+    machines: &[Machine],
     workloads: &[WorkloadKind],
     image_counts: &[usize],
     agent: AgentKind,
     master_seed: u64,
 ) -> Vec<CampaignJob> {
     let mut master = Rng::new(master_seed);
-    let mut jobs = Vec::with_capacity(workloads.len() * image_counts.len());
-    for &workload in workloads {
-        for &images in image_counts {
-            let mut stream = master.fork(jobs.len() as u64 + 1);
-            jobs.push(CampaignJob { workload, images, agent, seed: stream.next_u64() });
+    let mut jobs = Vec::with_capacity(machines.len() * workloads.len() * image_counts.len());
+    for machine in machines {
+        for &workload in workloads {
+            for &images in image_counts {
+                let mut stream = master.fork(jobs.len() as u64 + 1);
+                jobs.push(CampaignJob {
+                    machine: machine.name,
+                    workload,
+                    images,
+                    agent,
+                    seed: stream.next_u64(),
+                });
+            }
         }
     }
     jobs
@@ -57,22 +81,27 @@ mod tests {
     #[test]
     fn grid_covers_cross_product_in_stable_order() {
         let jobs = job_grid(
+            &[Machine::cheyenne(), Machine::edison()],
             &[WorkloadKind::Icar, WorkloadKind::CloverLeaf],
             &[16, 32],
             AgentKind::Tabular,
             5,
         );
-        assert_eq!(jobs.len(), 4);
+        assert_eq!(jobs.len(), 8);
+        assert_eq!(jobs[0].machine, "cheyenne");
         assert_eq!(jobs[0].workload, WorkloadKind::Icar);
         assert_eq!(jobs[0].images, 16);
         assert_eq!(jobs[3].workload, WorkloadKind::CloverLeaf);
         assert_eq!(jobs[3].images, 32);
+        assert_eq!(jobs[4].machine, "edison");
+        assert_eq!(jobs[7].workload, WorkloadKind::CloverLeaf);
     }
 
     #[test]
     fn seeds_are_deterministic_and_distinct() {
-        let a = job_grid(&WorkloadKind::TRAINING, &[8, 16], AgentKind::Tabular, 9);
-        let b = job_grid(&WorkloadKind::TRAINING, &[8, 16], AgentKind::Tabular, 9);
+        let machines = [Machine::cheyenne(), Machine::edison()];
+        let a = job_grid(&machines, &WorkloadKind::TRAINING, &[8, 16], AgentKind::Tabular, 9);
+        let b = job_grid(&machines, &WorkloadKind::TRAINING, &[8, 16], AgentKind::Tabular, 9);
         assert_eq!(a, b);
         let mut seeds: Vec<u64> = a.iter().map(|j| j.seed).collect();
         seeds.sort_unstable();
@@ -81,20 +110,42 @@ mod tests {
     }
 
     #[test]
+    fn single_machine_grid_keeps_the_legacy_seed_assignment() {
+        // Lifting the machine into the job must not re-seed existing
+        // single-machine campaigns: cell k still forks stream k+1.
+        let jobs = job_grid(
+            &[Machine::cheyenne()],
+            &[WorkloadKind::Icar],
+            &[16, 32],
+            AgentKind::Tabular,
+            9,
+        );
+        let mut master = Rng::new(9);
+        assert_eq!(jobs[0].seed, master.fork(1).next_u64());
+        let mut master = Rng::new(9);
+        master.fork(1);
+        assert_eq!(jobs[1].seed, master.fork(2).next_u64());
+    }
+
+    #[test]
     fn different_master_seeds_give_different_job_seeds() {
-        let a = job_grid(&[WorkloadKind::Icar], &[16], AgentKind::Tabular, 1);
-        let b = job_grid(&[WorkloadKind::Icar], &[16], AgentKind::Tabular, 2);
+        let a = job_grid(&[Machine::cheyenne()], &[WorkloadKind::Icar], &[16], AgentKind::Tabular, 1);
+        let b = job_grid(&[Machine::cheyenne()], &[WorkloadKind::Icar], &[16], AgentKind::Tabular, 2);
         assert_ne!(a[0].seed, b[0].seed);
     }
 
     #[test]
-    fn label_is_compact() {
+    fn label_is_compact_and_machine_resolves() {
         let j = CampaignJob {
+            machine: "edison",
             workload: WorkloadKind::Icar,
             images: 256,
             agent: AgentKind::Tabular,
             seed: 0,
         };
-        assert_eq!(j.label(), "icar@256");
+        assert_eq!(j.label(), "edison/icar@256");
+        assert_eq!(j.resolve_machine().unwrap().name, "edison");
+        let bad = CampaignJob { machine: "summit", ..j };
+        assert!(bad.resolve_machine().is_err());
     }
 }

@@ -24,19 +24,31 @@
 //!   and a [`CampaignReport::fingerprint`] digest used to assert
 //!   bit-identical results across worker counts.
 //!
+//! Two execution modes share that machinery:
+//!
+//! * [`CampaignEngine::run`] — **independent** sessions (PR 1): every
+//!   job is an isolated learner;
+//! * [`CampaignEngine::run_shared`] ([`shared`]) — **shared learning**:
+//!   the same jobs coupled through a
+//!   [`crate::coordinator::LearnerHub`], pulling/pushing weight and
+//!   replay snapshots at a fixed cadence with job-order-sequenced
+//!   merges.
+//!
 //! The contract the whole module is built around: **campaign results
 //! are a pure function of the job list and the base config**. Worker
 //! count, scheduling order and cache hit/miss interleaving change
-//! wall-clock time, never numbers.
+//! wall-clock time, never numbers — in both modes (the shared-mode
+//! fingerprint also covers the hub's final state).
 
 mod cache;
 mod collector;
 mod engine;
 mod job;
 mod report;
+mod shared;
 
 pub use cache::{EpisodeCache, EpisodeKey};
 pub use collector::ShardedCollector;
-pub use engine::{evaluate_config, CampaignConfig, CampaignEngine};
+pub use engine::{evaluate_config, CampaignConfig, CampaignEngine, EvalSpec};
 pub use job::{job_grid, CampaignJob};
-pub use report::{CampaignReport, JobOutcome};
+pub use report::{ablation_table, CampaignReport, JobOutcome};

@@ -2,8 +2,10 @@
 
 use std::time::Duration;
 
-use crate::coordinator::TuningOutcome;
+use crate::coordinator::{HubSummary, TuningOutcome};
 use crate::metrics::stats::{geomean, Summary};
+use crate::util::bench::Table;
+use crate::util::fnv::Fnv64;
 use crate::util::json::{arr, num, obj, s, Json};
 
 use super::job::CampaignJob;
@@ -24,6 +26,9 @@ pub struct CampaignReport {
     pub wall_clock: Duration,
     /// Worker threads the engine actually used.
     pub workers: usize,
+    /// Final hub state for shared-learning campaigns (`None` for
+    /// independent campaigns).
+    pub hub: Option<HubSummary>,
 }
 
 impl CampaignReport {
@@ -51,39 +56,48 @@ impl CampaignReport {
     }
 
     /// Order-sensitive digest of every job's spec, per-run total times
-    /// and configurations (FNV-1a over the raw bits).
+    /// and configurations — plus, for shared campaigns, the final hub
+    /// state (master weights and global replay) — FNV-1a over the raw
+    /// bits.
     ///
-    /// Two campaign runs produced the same tuning trajectories if and
-    /// only if their fingerprints match — this is what the 1-worker vs
+    /// Two campaign runs produced the same tuning trajectories (and,
+    /// in shared mode, the same distributed-learner state) if and only
+    /// if their fingerprints match — this is what the 1-worker vs
     /// N-worker determinism checks compare.
     pub fn fingerprint(&self) -> u64 {
-        let mut h: u64 = 0xcbf2_9ce4_8422_2325;
-        let mut mix = |x: u64| {
-            h ^= x;
-            h = h.wrapping_mul(0x0000_0100_0000_01b3);
-        };
+        let mut h = Fnv64::new();
         for r in &self.results {
-            for b in r.job.workload.name().bytes() {
-                mix(b as u64);
+            for b in r.job.machine.bytes() {
+                h.mix(b as u64);
             }
-            mix(r.job.images as u64);
-            mix(r.job.seed);
+            for b in r.job.workload.name().bytes() {
+                h.mix(b as u64);
+            }
+            h.mix(r.job.images as u64);
+            h.mix(r.job.seed);
             for run in &r.outcome.log.runs {
-                mix(run.total_time_us.to_bits());
+                h.mix(run.total_time_us.to_bits());
                 for &v in run.cvars.as_slice() {
-                    mix(v as u64);
+                    h.mix(v as u64);
                 }
             }
-            mix(r.outcome.best_us.to_bits());
-            mix(r.outcome.reference_us.to_bits());
+            h.mix(r.outcome.best_us.to_bits());
+            h.mix(r.outcome.reference_us.to_bits());
         }
-        h
+        if let Some(hub) = &self.hub {
+            h.mix(hub.merges as u64);
+            h.mix(hub.replay_len as u64);
+            h.mix(hub.total_transitions as u64);
+            h.mix(hub.digest);
+        }
+        h.finish()
     }
 
     /// JSON export: campaign metadata, per-job summaries and the full
     /// per-run logs (for EXPERIMENTS.md / offline analysis).
     pub fn to_json(&self) -> Json {
-        obj(vec![
+        let mut fields = vec![
+            ("mode", s(if self.hub.is_some() { "shared" } else { "independent" })),
             ("workers", num(self.workers as f64)),
             ("wall_clock_ms", num(self.wall_clock.as_secs_f64() * 1e3)),
             ("total_app_runs", num(self.total_app_runs() as f64)),
@@ -93,6 +107,7 @@ impl CampaignReport {
                 arr(self.results.iter().map(|r| {
                     obj(vec![
                         ("label", s(&r.job.label())),
+                        ("machine", s(r.job.machine)),
                         ("seed", num(r.job.seed as f64)),
                         ("reference_us", num(r.outcome.reference_us)),
                         ("best_us", num(r.outcome.best_us)),
@@ -102,8 +117,41 @@ impl CampaignReport {
                     ])
                 })),
             ),
-        ])
+        ];
+        if let Some(hub) = &self.hub {
+            fields.push((
+                "hub",
+                obj(vec![
+                    ("merges", num(hub.merges as f64)),
+                    ("replay_len", num(hub.replay_len as f64)),
+                    ("total_transitions", num(hub.total_transitions as f64)),
+                    ("digest", s(&format!("{:016x}", hub.digest))),
+                ]),
+            ));
+        }
+        obj(fields)
     }
+}
+
+/// Per-cell comparison table of an independent campaign and its
+/// shared-learning counterpart over the same job list — the one
+/// rendering shared by `campaign --shared`, `benches/campaign.rs` and
+/// `examples/training_campaign.rs --shared`.
+pub fn ablation_table(independent: &CampaignReport, shared: &CampaignReport) -> Table {
+    let mut t = Table::new(&[
+        "machine", "workload", "images", "reference (µs)", "independent", "shared",
+    ]);
+    for (a, b) in independent.results.iter().zip(&shared.results) {
+        t.row(vec![
+            a.job.machine.to_string(),
+            a.job.workload.name().to_string(),
+            a.job.images.to_string(),
+            format!("{:.0}", a.outcome.reference_us),
+            format!("{:+.1}%", a.outcome.improvement() * 100.0),
+            format!("{:+.1}%", b.outcome.improvement() * 100.0),
+        ]);
+    }
+    t
 }
 
 #[cfg(test)]
@@ -142,6 +190,7 @@ mod tests {
                 .iter()
                 .map(|&(reference, best)| JobOutcome {
                     job: CampaignJob {
+                        machine: "cheyenne",
                         workload: WorkloadKind::Icar,
                         images: 8,
                         agent: AgentKind::Tabular,
@@ -152,6 +201,7 @@ mod tests {
                 .collect(),
             wall_clock: Duration::from_millis(5),
             workers: 2,
+            hub: None,
         }
     }
 
@@ -173,6 +223,32 @@ mod tests {
         let c = report(&[(100.0, 81.0)]);
         assert_eq!(a.fingerprint(), b.fingerprint());
         assert_ne!(a.fingerprint(), c.fingerprint());
+    }
+
+    #[test]
+    fn fingerprint_covers_machine_and_hub_state() {
+        let a = report(&[(100.0, 80.0)]);
+        let mut other_machine = report(&[(100.0, 80.0)]);
+        other_machine.results[0].job.machine = "edison";
+        assert_ne!(a.fingerprint(), other_machine.fingerprint());
+
+        let mut shared = report(&[(100.0, 80.0)]);
+        shared.hub = Some(crate::coordinator::HubSummary {
+            merges: 3,
+            replay_len: 12,
+            total_transitions: 12,
+            digest: 0xabc,
+        });
+        assert_ne!(a.fingerprint(), shared.fingerprint());
+        let mut shared2 = shared.clone();
+        assert_eq!(shared.fingerprint(), shared2.fingerprint());
+        shared2.hub.as_mut().unwrap().digest = 0xdef;
+        assert_ne!(shared.fingerprint(), shared2.fingerprint());
+        // JSON labels the mode and carries the hub block.
+        let j = shared.to_json();
+        assert_eq!(j.at(&["mode"]).unwrap().as_str().unwrap(), "shared");
+        assert!(j.at(&["hub", "merges"]).is_ok());
+        assert_eq!(a.to_json().at(&["mode"]).unwrap().as_str().unwrap(), "independent");
     }
 
     #[test]

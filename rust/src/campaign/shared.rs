@@ -1,0 +1,141 @@
+//! Shared-learning campaigns: one distributed learner instead of N
+//! isolated sessions.
+//!
+//! [`CampaignEngine::run_shared`] drives the same job list as
+//! [`CampaignEngine::run`], but the sessions learn *together* through a
+//! [`LearnerHub`]. Execution is round-synchronous:
+//!
+//! ```text
+//! round r:   pull ──► step sync_every runs ──► push     (all jobs, in
+//!            parallel across the worker pool)
+//! barrier:   hub.merge(contributions in job-index order)
+//! ```
+//!
+//! Within a round every job's segment is a pure function of (its own
+//! state at round start, the hub snapshot at round start) — workers
+//! share nothing else — and the merge consumes contributions in job
+//! order regardless of which thread finished first. By induction the
+//! entire campaign, hub state included, is bit-identical at any worker
+//! count; parallelism changes wall-clock only. This is the engine
+//! contract PR 1 pinned for independent jobs, extended to a coupled
+//! learner: the barrier is what buys determinism that asynchronous
+//! A3C-style gradient pushes cannot give.
+//!
+//! The merge cadence comes from the base config's
+//! [`SharedLearning::sync_every`] (runs per segment). Smaller cadence =
+//! tighter coupling and more merges; `sync_every >= runs` degenerates
+//! to a single end-of-session merge.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+use std::time::Instant;
+
+use anyhow::{Context, Result};
+
+use crate::coordinator::{Controller, HubContribution, HubView, LearnerHub, SharedLearning, TuningConfig};
+
+use super::collector::ShardedCollector;
+use super::engine::CampaignEngine;
+use super::job::CampaignJob;
+use super::report::{CampaignReport, JobOutcome};
+
+impl CampaignEngine {
+    /// Run a shared-learning campaign over `jobs`.
+    ///
+    /// All jobs must use the same agent kind (the hub merges one state
+    /// family). The report carries the final [`crate::coordinator::HubSummary`];
+    /// [`CampaignReport::fingerprint`] covers it, so the 1-vs-N-worker
+    /// identity check extends to the hub.
+    pub fn run_shared(&self, jobs: &[CampaignJob]) -> Result<CampaignReport> {
+        anyhow::ensure!(!jobs.is_empty(), "shared campaign needs at least one job");
+        let base = &self.config().base;
+        anyhow::ensure!(
+            jobs.iter().all(|j| j.agent == jobs[0].agent),
+            "shared campaign jobs must share one agent kind"
+        );
+        let shared = base.shared.unwrap_or_default();
+        let sync_every = shared.sync_every.max(1);
+        let rounds = base.runs.div_ceil(sync_every).max(1);
+        let workers = self.workers_for(jobs.len());
+        let started = Instant::now();
+
+        let mut hub = LearnerHub::new(base.replay_capacity);
+        // One persistent controller per job; workers move them in and
+        // out of the slots between rounds (dynamic claiming is safe —
+        // within a round, segments touch disjoint slots).
+        let slots: Vec<Mutex<Option<Controller>>> =
+            jobs.iter().map(|_| Mutex::new(None)).collect();
+
+        for _round in 0..rounds {
+            let view = hub.view();
+            let collector = ShardedCollector::new(jobs.len(), workers);
+            let cursor = AtomicUsize::new(0);
+            std::thread::scope(|scope| {
+                for w in 0..workers {
+                    let collector = &collector;
+                    let cursor = &cursor;
+                    let view = &view;
+                    let slots = &slots;
+                    scope.spawn(move || loop {
+                        let i = cursor.fetch_add(1, Ordering::Relaxed);
+                        if i >= jobs.len() {
+                            break;
+                        }
+                        let r = run_segment(base, shared, &jobs[i], i, sync_every, view, &slots[i]);
+                        collector.push(w, i, r);
+                    });
+                }
+            });
+            let contributions =
+                collector.into_merged().into_iter().collect::<Result<Vec<HubContribution>>>()?;
+            hub.merge(&contributions)?;
+        }
+
+        let mut results = Vec::with_capacity(jobs.len());
+        for (job, slot) in jobs.iter().zip(&slots) {
+            let mut ctl = slot
+                .lock()
+                .unwrap()
+                .take()
+                .context("shared campaign lost a controller")?;
+            let outcome = ctl.finish_session()?;
+            results.push(JobOutcome { job: *job, outcome });
+        }
+        Ok(CampaignReport {
+            results,
+            wall_clock: started.elapsed(),
+            workers,
+            hub: Some(hub.summary()),
+        })
+    }
+}
+
+/// One job's segment of one round: create-and-begin on first touch,
+/// pull the hub view, run `sync_every` tuning runs, package the push.
+fn run_segment(
+    base: &TuningConfig,
+    shared: SharedLearning,
+    job: &CampaignJob,
+    job_index: usize,
+    sync_every: usize,
+    view: &HubView,
+    slot: &Mutex<Option<Controller>>,
+) -> Result<HubContribution> {
+    let mut guard = slot.lock().unwrap();
+    if guard.is_none() {
+        let cfg = TuningConfig {
+            agent: job.agent,
+            seed: job.seed,
+            machine: job.resolve_machine()?,
+            shared: Some(shared),
+            ..base.clone()
+        };
+        let mut ctl = Controller::new(cfg)?;
+        ctl.begin_session(job.workload, job.images)?;
+        *guard = Some(ctl);
+    }
+    let ctl = guard.as_mut().expect("slot populated above");
+    ctl.sync_from_hub(view)?;
+    ctl.step_session(sync_every)?;
+    ctl.hub_contribution(job_index)
+}

@@ -7,10 +7,17 @@ use anyhow::Result;
 use crate::runtime::{Manifest, QNet, RuntimeClient, TrainBatch};
 use crate::util::rng::Rng;
 
+use super::hub::{AgentState, HubView};
 use super::state::{NUM_ACTIONS, STATE_DIM};
 
 /// Q-value estimator interface.
-pub trait Agent {
+///
+/// `Send` is a supertrait because shared-learning campaigns move
+/// controllers (and therefore their boxed agents) between pool threads
+/// across merge rounds. (The offline PJRT stub is trivially `Send`;
+/// if the real `xla` bindings ever aren't, the `pjrt` feature build
+/// will say so at this bound.)
+pub trait Agent: Send {
     fn name(&self) -> &'static str;
 
     /// Q(s, ·) for one state.
@@ -21,6 +28,14 @@ pub trait Agent {
 
     /// Losses observed so far (diagnostics).
     fn loss_history(&self) -> &[f32];
+
+    /// Export the learnable state for a hub push (shared learning).
+    fn snapshot(&self) -> Result<AgentState>;
+
+    /// Adopt the hub's master state from a pulled view (shared
+    /// learning). A view with no master yet (round 0) is a no-op: the
+    /// agent keeps its own freshly-initialized state.
+    fn sync(&mut self, view: &HubView) -> Result<()>;
 }
 
 /// Which agent implementation to construct.
@@ -109,5 +124,29 @@ impl Agent for DqnAgent {
 
     fn loss_history(&self) -> &[f32] {
         &self.qnet.loss_history
+    }
+
+    fn snapshot(&self) -> Result<AgentState> {
+        Ok(AgentState::Dense {
+            params: self.qnet.params.clone(),
+            opt: self.qnet.opt.clone(),
+        })
+    }
+
+    fn sync(&mut self, view: &HubView) -> Result<()> {
+        match &view.master {
+            None => Ok(()),
+            Some(AgentState::Dense { params, opt }) => {
+                anyhow::ensure!(
+                    params.same_shape(&self.qnet.params),
+                    "hub parameter shapes do not match this network"
+                );
+                self.qnet.set_state(params.clone(), opt.clone());
+                Ok(())
+            }
+            Some(AgentState::Table(_)) => {
+                anyhow::bail!("hub holds tabular state; DQN agent cannot pull it")
+            }
+        }
     }
 }

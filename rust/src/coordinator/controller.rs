@@ -2,7 +2,7 @@
 //! the `AITuning_*` surface. Owns the agent, replay buffer, relative-
 //! pvar tracker and tuning schedule; drives the run→learn→act loop.
 
-use anyhow::Result;
+use anyhow::{Context, Result};
 
 use crate::metrics::recorder::{RunRecord, TuningLog};
 use crate::mpi_t::CvarSet;
@@ -14,11 +14,28 @@ use super::actions::Action;
 use super::agent::{Agent, AgentKind, DqnAgent};
 use super::ensemble::ensemble;
 use super::episode::run_episode;
+use super::hub::{HubContribution, HubView};
 use super::relative::RelativeTracker;
 use super::replay::{ReplayBuffer, Transition};
 use super::reward::reward;
 use super::state::{build_state, NUM_ACTIONS, STATE_DIM};
 use super::tabular::TabularAgent;
+
+/// Shared-learning mode (A3C-style): the controller participates in a
+/// [`crate::coordinator::hub::LearnerHub`] campaign, pulling the master
+/// state at segment boundaries and recording every new transition for
+/// the next hub push.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct SharedLearning {
+    /// Tuning runs between hub syncs (the merge cadence).
+    pub sync_every: usize,
+}
+
+impl Default for SharedLearning {
+    fn default() -> SharedLearning {
+        SharedLearning { sync_every: 5 }
+    }
+}
 
 /// Tuning hyper-parameters and environment description.
 #[derive(Debug, Clone)]
@@ -46,6 +63,9 @@ pub struct TuningConfig {
     pub seed: u64,
     /// Artifacts directory for the DQN agent.
     pub artifacts_dir: std::path::PathBuf,
+    /// Shared-learning participation (None = independent session, the
+    /// paper's original single-learner loop).
+    pub shared: Option<SharedLearning>,
 }
 
 impl Default for TuningConfig {
@@ -65,6 +85,7 @@ impl Default for TuningConfig {
             noise: 0.02,
             seed: 0,
             artifacts_dir: crate::runtime::default_artifacts_dir(),
+            shared: None,
         }
     }
 }
@@ -97,6 +118,26 @@ impl TuningOutcome {
     }
 }
 
+/// In-flight state of one tuning session, between
+/// [`Controller::begin_session`] and [`Controller::finish_session`].
+/// Holding it explicitly (instead of on `tune`'s stack) lets the
+/// shared-learning driver interleave segments of many sessions with
+/// hub merges; `tune` itself is now begin + one full-length step +
+/// finish, so the independent path executes the exact same sequence of
+/// RNG draws and episodes it always did.
+struct ActiveSession {
+    kind: WorkloadKind,
+    images: usize,
+    workload_seed: u64,
+    log: TuningLog,
+    tracker: RelativeTracker,
+    cvars: CvarSet,
+    prev_state: [f32; STATE_DIM],
+    reference_us: f64,
+    /// Next tuning-run index (1-based; run 0 was the reference).
+    next_run: usize,
+}
+
 /// The AITuning controller.
 pub struct Controller {
     pub cfg: TuningConfig,
@@ -106,6 +147,11 @@ pub struct Controller {
     /// Runs executed across the controller's lifetime (drives the
     /// §5.2 every-200-runs replay refresh across applications).
     lifetime_runs: usize,
+    /// Session in progress (segmented tuning).
+    session: Option<ActiveSession>,
+    /// Transitions generated since the last hub push (shared mode
+    /// only; stays empty for independent sessions).
+    pending: Vec<Transition>,
 }
 
 impl Controller {
@@ -120,7 +166,15 @@ impl Controller {
             AgentKind::Tabular => Box::new(TabularAgent::new()),
         };
         let replay = ReplayBuffer::new(cfg.replay_capacity);
-        Ok(Controller { cfg, agent, replay, rng, lifetime_runs: 0 })
+        Ok(Controller {
+            cfg,
+            agent,
+            replay,
+            rng,
+            lifetime_runs: 0,
+            session: None,
+            pending: Vec::new(),
+        })
     }
 
     /// Current exploration rate for tuning-run `i` of `n` (0-based).
@@ -166,12 +220,22 @@ impl Controller {
 
     /// Tune one application at one scale: the full §5 loop.
     pub fn tune(&mut self, kind: WorkloadKind, images: usize) -> Result<TuningOutcome> {
+        self.begin_session(kind, images)?;
+        self.step_session(self.cfg.runs)?;
+        self.finish_session()
+    }
+
+    /// Start a tuning session: execute the reference run (run 0,
+    /// `AITUNING_FIRST_RUN=1`, vanilla config) and set up the per-
+    /// session state. Follow with [`Controller::step_session`] calls
+    /// and a [`Controller::finish_session`].
+    pub fn begin_session(&mut self, kind: WorkloadKind, images: usize) -> Result<()> {
+        anyhow::ensure!(self.session.is_none(), "a tuning session is already in progress");
         let workload_seed = self.cfg.seed ^ seed_mix(kind, images);
         let mut log = TuningLog::new(kind.name(), images);
         let mut tracker = RelativeTracker::new();
-        let mut cvars = CvarSet::vanilla();
+        let cvars = CvarSet::vanilla();
 
-        // --- Run 0: reference (AITUNING_FIRST_RUN=1), vanilla config ---
         let run_seed = self.rng.next_u64();
         let reference = run_episode(
             kind, images, &self.cfg.machine, &cvars, self.cfg.noise, workload_seed, run_seed,
@@ -189,53 +253,135 @@ impl Controller {
             pvars: reference.pvars.clone(),
         });
 
-        let mut prev_state = build_state(
+        let prev_state = build_state(
             &reference.pvars, &tracker, &cvars, images, 0, reference.eager_fraction,
         );
+        self.session = Some(ActiveSession {
+            kind,
+            images,
+            workload_seed,
+            log,
+            tracker,
+            cvars,
+            prev_state,
+            reference_us,
+            next_run: 1,
+        });
+        Ok(())
+    }
 
-        // --- Tuning runs ---
-        for i in 1..=self.cfg.runs {
-            let eps = self.epsilon(i - 1, self.cfg.runs);
-            let action_idx = self.select_action(&prev_state, eps)?;
+    /// Execute up to `max_runs` tuning runs of the active session (the
+    /// shared-learning segment size); returns how many ran. The ε
+    /// schedule, action selection, replay pushes and training updates
+    /// are identical to the monolithic loop — segmentation changes
+    /// *when* the caller regains control, never what executes.
+    pub fn step_session(&mut self, max_runs: usize) -> Result<usize> {
+        let mut session = self.session.take().context("no tuning session in progress")?;
+        let total = self.cfg.runs;
+        let mut executed = 0;
+        while session.next_run <= total && executed < max_runs {
+            let i = session.next_run;
+            let eps = self.epsilon(i - 1, total);
+            let action_idx = self.select_action(&session.prev_state, eps)?;
             let action = Action::from_index(action_idx);
-            cvars = action.apply(&cvars);
+            session.cvars = action.apply(&session.cvars);
 
             let run_seed = self.rng.next_u64();
             let result = run_episode(
-                kind, images, &self.cfg.machine, &cvars, self.cfg.noise, workload_seed, run_seed,
+                session.kind,
+                session.images,
+                &self.cfg.machine,
+                &session.cvars,
+                self.cfg.noise,
+                session.workload_seed,
+                run_seed,
             )?;
-            let r = reward(reference_us, result.total_time_us);
+            let r = reward(session.reference_us, result.total_time_us);
             self.lifetime_runs += 1;
 
             let state = build_state(
-                &result.pvars, &tracker, &cvars, images, i, result.eager_fraction,
+                &result.pvars,
+                &session.tracker,
+                &session.cvars,
+                session.images,
+                i,
+                result.eager_fraction,
             );
-            self.replay.push(Transition {
-                state: prev_state,
+            let transition = Transition {
+                state: session.prev_state,
                 action: action_idx,
                 reward: r as f32,
                 next_state: state,
-                done: i == self.cfg.runs,
-            });
+                done: i == total,
+            };
+            if self.cfg.shared.is_some() {
+                self.pending.push(transition.clone());
+            }
+            self.replay.push(transition);
             self.learn()?;
 
-            log.push(RunRecord {
+            session.log.push(RunRecord {
                 run_index: i,
-                cvars: cvars.clone(),
+                cvars: session.cvars.clone(),
                 total_time_us: result.total_time_us,
                 reward: r,
                 action: Some(action_idx),
                 epsilon: eps,
                 pvars: result.pvars,
             });
-            prev_state = state;
+            session.prev_state = state;
+            session.next_run += 1;
+            executed += 1;
         }
+        self.session = Some(session);
+        Ok(executed)
+    }
 
+    /// Has the active session executed its full run budget?
+    pub fn session_done(&self) -> bool {
+        self.session.as_ref().is_some_and(|s| s.next_run > self.cfg.runs)
+    }
+
+    /// Close the active session: ensemble inference (§5.4) over the
+    /// accumulated log.
+    pub fn finish_session(&mut self) -> Result<TuningOutcome> {
+        let session = self.session.take().context("no tuning session in progress")?;
+        anyhow::ensure!(
+            session.next_run > self.cfg.runs,
+            "session finished early: {} of {} tuning runs executed",
+            session.next_run - 1,
+            self.cfg.runs
+        );
+        let log = session.log;
+        let reference_us = session.reference_us;
         let best_rec = log.best_run().expect("nonempty log");
         let best = best_rec.cvars.clone();
         let best_us = best_rec.total_time_us;
         let ensemble_cfg = ensemble(&log.runs[1..], reference_us);
         Ok(TuningOutcome { log, best, ensemble: ensemble_cfg, reference_us, best_us })
+    }
+
+    /// Pull the hub's master state (shared learning): adopt the merged
+    /// agent weights and replace the local replay buffer with the
+    /// global snapshot. Touches no controller RNG state, so the local
+    /// trajectory's randomness is unaffected by *when* syncs happen.
+    pub fn sync_from_hub(&mut self, view: &HubView) -> Result<()> {
+        self.agent.sync(view)?;
+        if view.master.is_some() {
+            self.replay = view.replay.clone();
+        }
+        Ok(())
+    }
+
+    /// Package this controller's push for the next hub merge: the local
+    /// agent state plus the replay shard accumulated since the last
+    /// push (drained).
+    pub fn hub_contribution(&mut self, job_index: usize) -> Result<HubContribution> {
+        Ok(HubContribution {
+            job_index,
+            state: self.agent.snapshot()?,
+            transitions: std::mem::take(&mut self.pending),
+        })
     }
 
     /// Evaluate a fixed configuration (no learning) — used to score the
@@ -365,6 +511,60 @@ mod tests {
         assert_eq!(out.improvement(), 0.0);
         let nan_ref = TuningOutcome { reference_us: f64::NAN, ..out };
         assert_eq!(nan_ref.improvement(), 0.0);
+    }
+
+    #[test]
+    fn segmented_session_replays_monolithic_tune_bitwise() {
+        // The shared-learning driver steps sessions in small segments;
+        // segmentation must not perturb the trajectory at all.
+        let mut a = Controller::new(tabular_cfg()).unwrap();
+        let out_a = a.tune(WorkloadKind::LatticeBoltzmann, 8).unwrap();
+
+        let mut b = Controller::new(tabular_cfg()).unwrap();
+        b.begin_session(WorkloadKind::LatticeBoltzmann, 8).unwrap();
+        assert!(!b.session_done());
+        while !b.session_done() {
+            b.step_session(3).unwrap();
+        }
+        let out_b = b.finish_session().unwrap();
+
+        assert_eq!(out_a.log.runs.len(), out_b.log.runs.len());
+        for (ra, rb) in out_a.log.runs.iter().zip(&out_b.log.runs) {
+            assert_eq!(ra.total_time_us.to_bits(), rb.total_time_us.to_bits());
+            assert_eq!(ra.action, rb.action);
+            assert_eq!(ra.cvars, rb.cvars);
+        }
+        assert_eq!(out_a.best_us.to_bits(), out_b.best_us.to_bits());
+        assert_eq!(out_a.ensemble, out_b.ensemble);
+    }
+
+    #[test]
+    fn session_misuse_is_an_error() {
+        let mut ctl = Controller::new(tabular_cfg()).unwrap();
+        assert!(ctl.step_session(1).is_err(), "no session begun");
+        assert!(ctl.finish_session().is_err(), "no session begun");
+        ctl.begin_session(WorkloadKind::LatticeBoltzmann, 4).unwrap();
+        assert!(
+            ctl.begin_session(WorkloadKind::LatticeBoltzmann, 4).is_err(),
+            "double begin"
+        );
+        assert!(ctl.finish_session().is_err(), "finish before the run budget is spent");
+    }
+
+    #[test]
+    fn pending_transitions_tracked_only_in_shared_mode() {
+        let mut plain = Controller::new(tabular_cfg()).unwrap();
+        plain.tune(WorkloadKind::LatticeBoltzmann, 4).unwrap();
+        assert!(plain.hub_contribution(0).unwrap().transitions.is_empty());
+
+        let cfg = TuningConfig { shared: Some(SharedLearning::default()), ..tabular_cfg() };
+        let mut shared = Controller::new(cfg).unwrap();
+        shared.tune(WorkloadKind::LatticeBoltzmann, 4).unwrap();
+        let push = shared.hub_contribution(3).unwrap();
+        assert_eq!(push.job_index, 3);
+        assert_eq!(push.transitions.len(), 10, "one transition per tuning run");
+        // The push drains the shard.
+        assert!(shared.hub_contribution(3).unwrap().transitions.is_empty());
     }
 
     #[test]

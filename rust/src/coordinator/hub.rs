@@ -1,0 +1,421 @@
+//! The `LearnerHub` parameter server: shared learning across parallel
+//! tuning sessions (the A3C-style merge the paper's single-session loop
+//! does not have).
+//!
+//! PR 1's campaign engine runs every `(workload, images)` cell as an
+//! *isolated* learner: 16 workers explore no better than 16 lonely
+//! ones. The hub converts the campaign into one distributed learner
+//! while keeping the engine's determinism contract:
+//!
+//! * the hub owns a **master agent state** (DQN: `QParams` + Adam
+//!   moments; tabular: the Q-table) and a **global replay buffer**;
+//! * workers *pull* a snapshot ([`LearnerHub::view`]) at segment start
+//!   and train locally for a fixed cadence of tuning runs
+//!   ([`crate::coordinator::SharedLearning::sync_every`]);
+//! * workers *push* [`HubContribution`]s — their locally-updated agent
+//!   state plus the replay shard of new transitions — and the hub
+//!   merges them **in job-index order** ([`LearnerHub::merge`]):
+//!   states are averaged with order-sequenced `f64` accumulation
+//!   ([`crate::runtime::average_params`]) and replay shards are
+//!   appended shard-by-shard in that same order.
+//!
+//! Because every merge input arrives in job order and every merge
+//! operation is order-sequenced, the hub state after round *r* is a
+//! pure function of the job list and the base config — never of worker
+//! count or thread scheduling. [`LearnerHub::digest`] folds the master
+//! state and the replay contents into the campaign fingerprint so the
+//! 1-vs-N-worker bit-identity checks cover shared learning too.
+
+use std::collections::BTreeMap;
+
+use anyhow::Result;
+
+use crate::runtime::{average_adam, average_params, AdamState, QParams};
+use crate::util::fnv::Fnv64;
+
+use super::replay::{ReplayBuffer, Transition};
+use super::state::NUM_ACTIONS;
+
+/// A portable snapshot of one agent's learnable state — the hub's wire
+/// format for both pull (master → worker) and push (worker → hub).
+#[derive(Debug, Clone)]
+pub enum AgentState {
+    /// Deep Q-network: parameters plus Adam moments (both merged, so a
+    /// pulled snapshot resumes optimization rather than restarting it).
+    Dense { params: QParams, opt: AdamState },
+    /// Tabular agent: the discretized Q-table as `(cell, Q(·))` entries
+    /// **sorted by cell key**, so digests and averages are independent
+    /// of `HashMap` iteration order.
+    Table(Vec<(u64, [f32; NUM_ACTIONS])>),
+}
+
+impl AgentState {
+    /// Deterministic average of homogeneous agent states.
+    ///
+    /// The slice must already be in job-index order: dense tensors are
+    /// averaged with in-order `f64` accumulation, and table cells are
+    /// averaged over the contributors that visited each cell, again
+    /// accumulating in slice order. Mixing dense and tabular states is
+    /// an error (a shared campaign must be agent-homogeneous).
+    pub fn average(states: &[&AgentState]) -> Result<AgentState> {
+        anyhow::ensure!(!states.is_empty(), "cannot average zero agent states");
+        match states[0] {
+            AgentState::Dense { .. } => {
+                let mut params = Vec::with_capacity(states.len());
+                let mut opts = Vec::with_capacity(states.len());
+                for s in states {
+                    match s {
+                        AgentState::Dense { params: p, opt: o } => {
+                            params.push(p);
+                            opts.push(o);
+                        }
+                        AgentState::Table(_) => {
+                            anyhow::bail!("cannot merge tabular state into a dense hub")
+                        }
+                    }
+                }
+                Ok(AgentState::Dense {
+                    params: average_params(&params)?,
+                    opt: average_adam(&opts)?,
+                })
+            }
+            AgentState::Table(_) => {
+                let mut acc: BTreeMap<u64, ([f64; NUM_ACTIONS], usize)> = BTreeMap::new();
+                for s in states {
+                    let entries = match s {
+                        AgentState::Table(e) => e,
+                        AgentState::Dense { .. } => {
+                            anyhow::bail!("cannot merge dense state into a tabular hub")
+                        }
+                    };
+                    for (key, q) in entries {
+                        let (sum, n) = acc.entry(*key).or_insert(([0.0; NUM_ACTIONS], 0));
+                        for (a, &x) in sum.iter_mut().zip(q) {
+                            *a += x as f64;
+                        }
+                        *n += 1;
+                    }
+                }
+                // BTreeMap iteration yields keys ascending — the Table
+                // sorted-by-key invariant holds by construction.
+                Ok(AgentState::Table(
+                    acc.into_iter()
+                        .map(|(key, (sum, n))| {
+                            let inv = 1.0 / n as f64;
+                            (key, sum.map(|x| (x * inv) as f32))
+                        })
+                        .collect(),
+                ))
+            }
+        }
+    }
+
+    /// Order-sensitive FNV-1a digest of the state.
+    pub fn digest(&self) -> u64 {
+        let mut h = Fnv64::new();
+        match self {
+            AgentState::Dense { params, opt } => {
+                h.mix(1);
+                h.mix(params.digest());
+                h.mix(opt.digest());
+            }
+            AgentState::Table(entries) => {
+                h.mix(2);
+                for (key, q) in entries {
+                    h.mix(*key);
+                    for v in q {
+                        h.mix(v.to_bits() as u64);
+                    }
+                }
+            }
+        }
+        h.finish()
+    }
+}
+
+/// What a worker pulls at segment start: the merge round, the master
+/// state (absent before the first merge) and a snapshot of the global
+/// replay buffer.
+#[derive(Debug, Clone)]
+pub struct HubView {
+    /// Merges completed before this snapshot was taken.
+    pub round: usize,
+    /// Master agent state; `None` until the first merge, in which case
+    /// workers keep their own freshly-initialized state.
+    pub master: Option<AgentState>,
+    /// Snapshot of the global replay buffer.
+    pub replay: ReplayBuffer,
+}
+
+/// One worker's push: its job index (the merge-order key), its
+/// locally-trained agent state, and the replay shard of transitions
+/// generated since the last sync.
+#[derive(Debug, Clone)]
+pub struct HubContribution {
+    pub job_index: usize,
+    pub state: AgentState,
+    pub transitions: Vec<Transition>,
+}
+
+/// Compact hub-state record attached to shared-campaign reports.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct HubSummary {
+    /// Merge rounds completed.
+    pub merges: usize,
+    /// Transitions currently held by the global replay buffer.
+    pub replay_len: usize,
+    /// Transitions pushed over the campaign's lifetime (pre-eviction).
+    pub total_transitions: usize,
+    /// [`LearnerHub::digest`] at campaign end.
+    pub digest: u64,
+}
+
+impl HubSummary {
+    /// One-line human rendering for campaign drivers.
+    pub fn describe(&self) -> String {
+        format!(
+            "{} merges, {} transitions pooled ({} resident), state digest {:016x}",
+            self.merges, self.total_transitions, self.replay_len, self.digest
+        )
+    }
+}
+
+/// The parameter server. Owned by the shared-campaign driver; all
+/// merges happen on the driver thread between rounds, so the hub itself
+/// needs no locking — the barrier *is* the synchronization.
+#[derive(Debug)]
+pub struct LearnerHub {
+    master: Option<AgentState>,
+    replay: ReplayBuffer,
+    merges: usize,
+    total_transitions: usize,
+}
+
+impl LearnerHub {
+    /// Fresh hub with an empty global replay buffer of `replay_capacity`
+    /// (use the campaign base config's capacity so worker pulls slot
+    /// straight into their controllers).
+    pub fn new(replay_capacity: usize) -> LearnerHub {
+        LearnerHub {
+            master: None,
+            replay: ReplayBuffer::new(replay_capacity),
+            merges: 0,
+            total_transitions: 0,
+        }
+    }
+
+    /// Snapshot for workers to pull at segment start.
+    pub fn view(&self) -> HubView {
+        HubView { round: self.merges, master: self.master.clone(), replay: self.replay.clone() }
+    }
+
+    /// Merge one round of contributions.
+    ///
+    /// `contributions` must be in strictly increasing `job_index` order
+    /// — the deterministic sequencing contract. (The campaign collector
+    /// already restores job order regardless of which worker finished
+    /// first; the hub re-checks rather than trusts.) The master state
+    /// becomes the order-sequenced average of all pushed states, and
+    /// each contribution's replay shard is appended to the global
+    /// buffer shard-by-shard, transitions in generation order.
+    pub fn merge(&mut self, contributions: &[HubContribution]) -> Result<()> {
+        anyhow::ensure!(!contributions.is_empty(), "merge needs at least one contribution");
+        for pair in contributions.windows(2) {
+            anyhow::ensure!(
+                pair[0].job_index < pair[1].job_index,
+                "contributions must arrive in strictly increasing job order ({} then {})",
+                pair[0].job_index,
+                pair[1].job_index
+            );
+        }
+        let states: Vec<&AgentState> = contributions.iter().map(|c| &c.state).collect();
+        self.master = Some(AgentState::average(&states)?);
+        for c in contributions {
+            for t in &c.transitions {
+                self.replay.push(t.clone());
+            }
+            self.total_transitions += c.transitions.len();
+        }
+        self.merges += 1;
+        Ok(())
+    }
+
+    pub fn master(&self) -> Option<&AgentState> {
+        self.master.as_ref()
+    }
+
+    pub fn replay(&self) -> &ReplayBuffer {
+        &self.replay
+    }
+
+    pub fn merges(&self) -> usize {
+        self.merges
+    }
+
+    /// Order-sensitive digest of the full hub state (master + replay).
+    /// Folded into [`crate::campaign::CampaignReport::fingerprint`] so
+    /// worker-count invariance checks cover shared learning.
+    pub fn digest(&self) -> u64 {
+        let mut h = Fnv64::new();
+        h.mix(self.merges as u64);
+        match &self.master {
+            Some(state) => h.mix(state.digest()),
+            None => h.mix(0),
+        }
+        for t in self.replay.iter() {
+            for v in &t.state {
+                h.mix(v.to_bits() as u64);
+            }
+            h.mix(t.action as u64);
+            h.mix(t.reward.to_bits() as u64);
+            for v in &t.next_state {
+                h.mix(v.to_bits() as u64);
+            }
+            h.mix(t.done as u64);
+        }
+        h.finish()
+    }
+
+    pub fn summary(&self) -> HubSummary {
+        HubSummary {
+            merges: self.merges,
+            replay_len: self.replay.len(),
+            total_transitions: self.total_transitions,
+            digest: self.digest(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::state::STATE_DIM;
+
+    fn table(entries: &[(u64, f32)]) -> AgentState {
+        AgentState::Table(
+            entries
+                .iter()
+                .map(|&(k, v)| {
+                    let mut q = [0.0; NUM_ACTIONS];
+                    q[0] = v;
+                    (k, q)
+                })
+                .collect(),
+        )
+    }
+
+    fn transition(reward: f32) -> Transition {
+        Transition {
+            state: [0.0; STATE_DIM],
+            action: 0,
+            reward,
+            next_state: [0.0; STATE_DIM],
+            done: false,
+        }
+    }
+
+    fn contribution(job_index: usize, state: AgentState, rewards: &[f32]) -> HubContribution {
+        HubContribution {
+            job_index,
+            state,
+            transitions: rewards.iter().map(|&r| transition(r)).collect(),
+        }
+    }
+
+    #[test]
+    fn table_average_is_per_visited_cell() {
+        // Cell 1 visited by both (mean), cells 2/3 by one each (kept).
+        let a = table(&[(1, 2.0), (2, 8.0)]);
+        let b = table(&[(1, 4.0), (3, 6.0)]);
+        let avg = AgentState::average(&[&a, &b]).unwrap();
+        match avg {
+            AgentState::Table(entries) => {
+                assert_eq!(entries.len(), 3);
+                assert_eq!(entries[0], {
+                    let mut q = [0.0; NUM_ACTIONS];
+                    q[0] = 3.0;
+                    (1, q)
+                });
+                assert_eq!(entries[1].1[0], 8.0);
+                assert_eq!(entries[2].1[0], 6.0);
+                // Sorted-by-key invariant.
+                assert!(entries.windows(2).all(|w| w[0].0 < w[1].0));
+            }
+            AgentState::Dense { .. } => panic!("expected table"),
+        }
+    }
+
+    #[test]
+    fn mixed_agent_kinds_refuse_to_merge() {
+        let t = table(&[(1, 1.0)]);
+        let d = AgentState::Dense {
+            params: crate::runtime::QParams::from_flat(vec![(vec![0.0], vec![1])]).unwrap(),
+            opt: crate::runtime::AdamState::new(
+                &crate::runtime::QParams::from_flat(vec![(vec![0.0], vec![1])]).unwrap(),
+            ),
+        };
+        assert!(AgentState::average(&[&t, &d]).is_err());
+        assert!(AgentState::average(&[&d, &t]).is_err());
+    }
+
+    #[test]
+    fn replay_shards_append_in_job_order() {
+        let mut hub = LearnerHub::new(64);
+        // Push order scrambled relative to job order would be a driver
+        // bug; the hub only accepts job order and appends shard 0's
+        // transitions before shard 1's, preserving in-shard order.
+        hub.merge(&[
+            contribution(0, table(&[(1, 1.0)]), &[10.0, 11.0]),
+            contribution(1, table(&[(1, 3.0)]), &[20.0]),
+            contribution(2, table(&[(1, 5.0)]), &[30.0, 31.0]),
+        ])
+        .unwrap();
+        let rewards: Vec<f32> = hub.replay().iter().map(|t| t.reward).collect();
+        assert_eq!(rewards, vec![10.0, 11.0, 20.0, 30.0, 31.0]);
+        assert_eq!(hub.merges(), 1);
+        assert_eq!(hub.summary().total_transitions, 5);
+    }
+
+    #[test]
+    fn out_of_order_contributions_are_rejected() {
+        let mut hub = LearnerHub::new(8);
+        let err = hub.merge(&[
+            contribution(1, table(&[(1, 1.0)]), &[]),
+            contribution(0, table(&[(1, 2.0)]), &[]),
+        ]);
+        assert!(err.is_err());
+        let dup = hub.merge(&[
+            contribution(0, table(&[(1, 1.0)]), &[]),
+            contribution(0, table(&[(1, 2.0)]), &[]),
+        ]);
+        assert!(dup.is_err());
+        assert!(hub.merge(&[]).is_err());
+    }
+
+    #[test]
+    fn digest_tracks_master_and_replay() {
+        let mut a = LearnerHub::new(8);
+        let mut b = LearnerHub::new(8);
+        assert_eq!(a.digest(), b.digest());
+        a.merge(&[contribution(0, table(&[(1, 1.0)]), &[1.0])]).unwrap();
+        b.merge(&[contribution(0, table(&[(1, 1.0)]), &[1.0])]).unwrap();
+        assert_eq!(a.digest(), b.digest());
+        b.merge(&[contribution(0, table(&[(1, 2.0)]), &[])]).unwrap();
+        assert_ne!(a.digest(), b.digest());
+    }
+
+    #[test]
+    fn view_snapshots_do_not_alias_the_hub() {
+        let mut hub = LearnerHub::new(8);
+        hub.merge(&[contribution(0, table(&[(7, 1.5)]), &[2.0])]).unwrap();
+        let view = hub.view();
+        hub.merge(&[contribution(0, table(&[(7, 9.0)]), &[3.0])]).unwrap();
+        assert_eq!(view.round, 1);
+        assert_eq!(view.replay.len(), 1);
+        assert_eq!(hub.replay().len(), 2);
+        match view.master.unwrap() {
+            AgentState::Table(entries) => assert_eq!(entries[0].1[0], 1.5),
+            AgentState::Dense { .. } => panic!("expected table"),
+        }
+    }
+}

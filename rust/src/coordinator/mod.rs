@@ -9,12 +9,18 @@
 //! stabilizes training (§3.1/§5.2; no Q-target network, as in the
 //! paper). After the tuning runs, ensemble inference (§5.4) merges the
 //! best configurations.
+//!
+//! Beyond the paper's single-session loop, [`hub`] adds a `LearnerHub`
+//! parameter server: parallel campaign workers pull/push weight and
+//! replay snapshots at a fixed cadence and the hub merges them in
+//! deterministic job order (see [`crate::campaign`] for the driver).
 
 pub mod actions;
 pub mod agent;
 pub mod controller;
 pub mod ensemble;
 pub mod episode;
+pub mod hub;
 pub mod relative;
 pub mod replay;
 pub mod reward;
@@ -23,8 +29,9 @@ pub mod tabular;
 
 pub use actions::Action;
 pub use agent::{Agent, AgentKind, DqnAgent};
-pub use controller::{Controller, TuningConfig, TuningOutcome};
+pub use controller::{Controller, SharedLearning, TuningConfig, TuningOutcome};
 pub use episode::{run_episode, EpisodeResult};
+pub use hub::{AgentState, HubContribution, HubSummary, HubView, LearnerHub};
 pub use relative::RelativeTracker;
 pub use replay::{ReplayBuffer, Transition};
 pub use state::{build_state, NUM_ACTIONS, STATE_DIM};

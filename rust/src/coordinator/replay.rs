@@ -10,7 +10,7 @@ use super::actions::one_hot;
 use super::state::{NUM_ACTIONS, STATE_DIM};
 
 /// One (s, a, r, s', done) experience tuple.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct Transition {
     pub state: [f32; STATE_DIM],
     pub action: usize,
@@ -20,7 +20,13 @@ pub struct Transition {
 }
 
 /// Bounded uniform replay buffer.
-#[derive(Debug)]
+///
+/// `Clone` is part of the shared-learning contract: the hub hands each
+/// worker a snapshot of the global buffer at sync points, and a clone
+/// reproduces the ring layout exactly (same slot order, same overwrite
+/// cursor), so a 1-job shared campaign replays the independent path
+/// bit-for-bit.
+#[derive(Debug, Clone)]
 pub struct ReplayBuffer {
     buf: Vec<Transition>,
     capacity: usize,
@@ -76,6 +82,16 @@ impl ReplayBuffer {
             done.push(if t.done { 1.0 } else { 0.0 });
         }
         TrainBatch { states, actions_onehot: actions, rewards, next_states, done }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    /// Stored transitions in ring-slot order (deterministic for a given
+    /// push sequence) — used by the hub digest and merge tests.
+    pub fn iter(&self) -> impl Iterator<Item = &Transition> {
+        self.buf.iter()
     }
 
     /// Most recent transition (per-run immediate training).

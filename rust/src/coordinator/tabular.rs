@@ -11,6 +11,7 @@ use anyhow::Result;
 use crate::runtime::TrainBatch;
 
 use super::agent::Agent;
+use super::hub::{AgentState, HubView};
 use super::state::{NUM_ACTIONS, STATE_DIM};
 
 /// Discretized-state Q-table agent.
@@ -91,6 +92,28 @@ impl Agent for TabularAgent {
     fn loss_history(&self) -> &[f32] {
         &self.losses
     }
+
+    fn snapshot(&self) -> Result<AgentState> {
+        // Sorted by cell key: the hub's Table invariant (HashMap
+        // iteration order must never leak into merge inputs).
+        let mut entries: Vec<(u64, [f32; NUM_ACTIONS])> =
+            self.q.iter().map(|(&k, &v)| (k, v)).collect();
+        entries.sort_unstable_by_key(|&(k, _)| k);
+        Ok(AgentState::Table(entries))
+    }
+
+    fn sync(&mut self, view: &HubView) -> Result<()> {
+        match &view.master {
+            None => Ok(()),
+            Some(AgentState::Table(entries)) => {
+                self.q = entries.iter().map(|&(k, v)| (k, v)).collect();
+                Ok(())
+            }
+            Some(AgentState::Dense { .. }) => {
+                anyhow::bail!("hub holds dense DQN state; tabular agent cannot pull it")
+            }
+        }
+    }
 }
 
 #[cfg(test)]
@@ -130,6 +153,35 @@ mod tests {
         agent.train(&batch(a, 1, 1.0, a), 0.0, 0.0).unwrap();
         assert_eq!(agent.q_values(&b).unwrap()[1], 0.0);
         assert!(agent.states_seen() >= 1);
+    }
+
+    #[test]
+    fn snapshot_sync_roundtrip_preserves_q_values() {
+        let mut a = TabularAgent::new();
+        let s = [0.3; STATE_DIM];
+        for _ in 0..20 {
+            a.train(&batch(s, 2, 1.0, s), 0.0, 0.5).unwrap();
+        }
+        let snap = a.snapshot().unwrap();
+        match &snap {
+            AgentState::Table(entries) => {
+                assert!(!entries.is_empty());
+                assert!(entries.windows(2).all(|w| w[0].0 < w[1].0), "sorted by key");
+            }
+            AgentState::Dense { .. } => panic!("expected table"),
+        }
+        let mut b = TabularAgent::new();
+        let view = HubView {
+            round: 1,
+            master: Some(snap),
+            replay: crate::coordinator::ReplayBuffer::new(4),
+        };
+        b.sync(&view).unwrap();
+        assert_eq!(a.q_values(&s).unwrap(), b.q_values(&s).unwrap());
+        // Round-0 view (no master) is a no-op, not an error.
+        let empty = HubView { round: 0, master: None, replay: crate::coordinator::ReplayBuffer::new(4) };
+        b.sync(&empty).unwrap();
+        assert_eq!(a.q_values(&s).unwrap(), b.q_values(&s).unwrap());
     }
 
     #[test]

@@ -11,8 +11,10 @@
 //!   ([`coarray`]), the MPI Tool Information Interface ([`mpi_t`]), the
 //!   paper's CAF workloads ([`workloads`]), tuning baselines
 //!   ([`baselines`]), and a multi-threaded campaign engine ([`campaign`])
-//!   that fans independent tuning sessions across cores with
-//!   deterministic, thread-count-invariant results.
+//!   that fans tuning sessions across cores with deterministic,
+//!   thread-count-invariant results — either as independent learners or
+//!   coupled through the [`coordinator::LearnerHub`] parameter server
+//!   (shared weights + pooled replay, merged in job order).
 //! * **L2/L1 (python/, build-time only)** — the deep Q-network (JAX) and
 //!   its fused-dense Pallas kernel, AOT-lowered to HLO text under
 //!   `artifacts/` and executed from [`runtime`] via the PJRT C API.

@@ -13,9 +13,11 @@
 use anyhow::{bail, Context, Result};
 
 use aituning::baselines::{human_tuned, Evolutionary, RandomSearch, Searcher};
-use aituning::campaign::{job_grid, CampaignConfig, CampaignEngine, CampaignJob};
+use aituning::campaign::{
+    ablation_table, job_grid, CampaignConfig, CampaignEngine, CampaignJob, EvalSpec,
+};
 use aituning::convergence::{run_convergence, ConvergenceConfig, SyntheticModel};
-use aituning::coordinator::{run_episode, AgentKind, Controller, TuningConfig};
+use aituning::coordinator::{run_episode, AgentKind, Controller, SharedLearning, TuningConfig};
 use aituning::mpi_t::{CvarId, CvarSet, MpichRegistry, VariableRegistry};
 use aituning::simmpi::Machine;
 use aituning::util::args::Args;
@@ -30,10 +32,13 @@ USAGE:
                        [--machine cheyenne|edison] [--seed N] [--noise F]
   aituning run         --workload icar --images 64 [--cvar NAME=VALUE,NAME=VALUE]
   aituning campaign    [--images 64,128,256] [--runs-per 20] [--agent dqn|tabular]
-                       [--workers N]   (0 = one per core; campaigns run in parallel)
+                       [--machine cheyenne|edison|both] [--workers N]  (0 = one per core)
+                       [--shared] [--sync-every 5]  (--shared couples the jobs through
+                       the LearnerHub and reports the independent-vs-shared ablation)
   aituning convergence [--model parabola|coupled|bool] [--noise 0.3] [--runs 400]
   aituning sweep       --cvar MPIR_CVAR_POLLS_BEFORE_YIELD --values 200,1000,1500
                        --workload icar --images 512 [--base async] [--workers N]
+                       [--machine cheyenne|edison|both]
   aituning baselines   --workload icar --images 256 [--budget 20] [--workers N]
 "
     );
@@ -61,6 +66,18 @@ fn parse_workload(args: &Args) -> Result<WorkloadKind> {
 fn parse_machine(args: &Args) -> Result<Machine> {
     let name = args.get_or("machine", "cheyenne");
     Machine::by_name(name).with_context(|| format!("unknown machine {name:?}"))
+}
+
+/// `--machine cheyenne|edison|both` — multi-machine subcommands lift
+/// the machine into the job/spec list so one worker pool spans both
+/// testbeds.
+fn parse_machines(args: &Args) -> Result<Vec<Machine>> {
+    match args.get_or("machine", "cheyenne") {
+        "both" | "all" => Ok(vec![Machine::cheyenne(), Machine::edison()]),
+        name => Ok(vec![
+            Machine::by_name(name).with_context(|| format!("unknown machine {name:?}"))?
+        ]),
+    }
 }
 
 fn parse_agent(args: &Args) -> Result<AgentKind> {
@@ -161,17 +178,55 @@ fn cmd_campaign(args: &Args) -> Result<()> {
         .split(',')
         .map(|s| s.parse().context("bad --images list"))
         .collect::<Result<_>>()?;
-    let base = TuningConfig { runs: args.usize_or("runs-per", 20)?, ..tuning_config(args)? };
-    let jobs = job_grid(&WorkloadKind::TRAINING, &images, base.agent, base.seed);
+    let machines = parse_machines(args)?;
+    let shared_mode = args.flag("shared");
+    let mut base = TuningConfig {
+        machine: machines[0].clone(),
+        agent: parse_agent(args)?,
+        runs: args.usize_or("runs-per", 20)?,
+        noise: args.f64_or("noise", 0.02)?,
+        seed: args.u64_or("seed", 0)?,
+        ..TuningConfig::default()
+    };
+    if shared_mode {
+        base.shared = Some(SharedLearning { sync_every: args.usize_or("sync-every", 5)? });
+    }
+    let jobs = job_grid(&machines, &WorkloadKind::TRAINING, &images, base.agent, base.seed);
     let engine = CampaignEngine::new(CampaignConfig {
         base,
         workers: args.usize_or("workers", 0)?,
     });
-    let report = engine.run(&jobs)?;
 
-    let mut t = Table::new(&["workload", "images", "reference (µs)", "best (µs)", "improvement"]);
+    if shared_mode {
+        // Independent-vs-shared ablation: same jobs, same seeds, the
+        // only difference is the LearnerHub coupling.
+        let independent = engine.run(&jobs)?;
+        let shared = engine.run_shared(&jobs)?;
+        ablation_table(&independent, &shared).print();
+        let hub = shared.hub.expect("shared report carries hub state");
+        println!(
+            "\ngeomean speedup: independent {:.3}x vs shared {:.3}x (sync cadence: {} runs)",
+            independent.geomean_speedup(),
+            shared.geomean_speedup(),
+            engine.config().base.shared.map(|s| s.sync_every).unwrap_or_default(),
+        );
+        println!("hub: {}", hub.describe());
+        println!(
+            "wall clock: independent {:.2}s, shared {:.2}s on {} workers",
+            independent.wall_clock.as_secs_f64(),
+            shared.wall_clock.as_secs_f64(),
+            shared.workers
+        );
+        return Ok(());
+    }
+
+    let report = engine.run(&jobs)?;
+    let mut t = Table::new(&[
+        "machine", "workload", "images", "reference (µs)", "best (µs)", "improvement",
+    ]);
     for r in &report.results {
         t.row(vec![
+            r.job.machine.to_string(),
             r.job.workload.name().to_string(),
             r.job.images.to_string(),
             format!("{:.0}", r.outcome.reference_us),
@@ -225,7 +280,7 @@ fn cmd_convergence(args: &Args) -> Result<()> {
 fn cmd_sweep(args: &Args) -> Result<()> {
     let kind = parse_workload(args)?;
     let images = args.usize_or("images", 512)?;
-    let machine = parse_machine(args)?;
+    let machines = parse_machines(args)?;
     let cvar_name = args.get("cvar").context("--cvar required")?;
     let d = MpichRegistry
         .cvar_by_name(cvar_name)
@@ -243,35 +298,43 @@ fn cmd_sweep(args: &Args) -> Result<()> {
     }
     let reps = args.usize_or("reps", 3)?;
 
-    // Each sweep point is an independent fixed-config evaluation: fan
-    // them across the campaign engine's worker pool.
-    let configs: Vec<CvarSet> = values
+    // Every (machine, sweep point) pair is an independent fixed-config
+    // evaluation: one spec list, one worker pool spanning both
+    // testbeds, per-episode work items.
+    let specs: Vec<EvalSpec> = machines
         .iter()
-        .map(|&v| {
-            let mut cv = base.clone();
-            cv.set(d.id, v);
-            cv
+        .flat_map(|machine| {
+            values.iter().map(|&v| {
+                let mut cv = base.clone();
+                cv.set(d.id, v);
+                EvalSpec { machine: machine.clone(), workload: kind, images, cvars: cv }
+            })
         })
         .collect();
     let engine = CampaignEngine::new(CampaignConfig {
         base: TuningConfig {
-            machine,
+            machine: machines[0].clone(),
             noise: args.f64_or("noise", 0.02)?,
             seed: args.u64_or("seed", 42)?,
             ..TuningConfig::default()
         },
         workers: args.usize_or("workers", 0)?,
     });
-    let means = engine.evaluate_batch(kind, images, &configs, reps)?;
+    let means = engine.evaluate_specs(&specs, reps)?;
 
-    let mut t = Table::new(&[cvar_name, "total (µs)", "vs first"]);
-    let base_t = means[0];
-    for (&v, &mean) in values.iter().zip(&means) {
-        t.row(vec![
-            v.to_string(),
-            format!("{mean:.0}"),
-            format!("{:+.2}%", (base_t - mean) / base_t * 100.0),
-        ]);
+    let mut t = Table::new(&["machine", cvar_name, "total (µs)", "vs first"]);
+    for (mi, machine) in machines.iter().enumerate() {
+        let row0 = mi * values.len();
+        let base_t = means[row0];
+        for (vi, &v) in values.iter().enumerate() {
+            let mean = means[row0 + vi];
+            t.row(vec![
+                machine.name.to_string(),
+                v.to_string(),
+                format!("{mean:.0}"),
+                format!("{:+.2}%", (base_t - mean) / base_t * 100.0),
+            ]);
+        }
     }
     t.print();
     Ok(())
@@ -317,6 +380,7 @@ fn cmd_baselines(args: &Args) -> Result<()> {
         workers: 1,
     });
     let report = tune_engine.run(&[CampaignJob {
+        machine: cfg.machine.name,
         workload: kind,
         images,
         agent: cfg.agent,

@@ -14,5 +14,7 @@ pub(crate) mod xla;
 
 pub use artifact::{default_artifacts_dir, ArtifactSpec, Manifest, TensorSpec};
 pub use client::{Executable, RuntimeClient};
-pub use params::{layer_dims as params_layer_dims, AdamState, QParams};
+pub use params::{
+    average_adam, average_params, layer_dims as params_layer_dims, AdamState, QParams,
+};
 pub use qnet::{argmax, QNet, TrainBatch};

@@ -8,6 +8,7 @@
 use anyhow::Result;
 
 use super::xla;
+use crate::util::fnv::Fnv64;
 use crate::util::rng::Rng;
 
 /// Layer dims of the Q-net MLP; must match `model.LAYER_DIMS`.
@@ -102,6 +103,59 @@ impl QParams {
         self.tensors.iter().map(|(d, _)| d.len()).sum()
     }
 
+    /// Do `other`'s tensors have exactly this parameter set's shapes?
+    pub fn same_shape(&self, other: &QParams) -> bool {
+        self.tensors.len() == other.tensors.len()
+            && self
+                .tensors
+                .iter()
+                .zip(&other.tensors)
+                .all(|((_, a), (_, b))| a == b)
+    }
+
+    /// Serialize to one flat `f32` vector in canonical tensor order
+    /// (the hub's wire format for pushing/pulling weight snapshots).
+    pub fn flatten(&self) -> Vec<f32> {
+        let mut out = Vec::with_capacity(self.num_parameters());
+        for (data, _) in &self.tensors {
+            out.extend_from_slice(data);
+        }
+        out
+    }
+
+    /// Rebuild from [`QParams::flatten`] output, taking shapes from
+    /// `self` (the deserialization half of the hub wire format).
+    pub fn unflatten_like(&self, flat: &[f32]) -> Result<QParams> {
+        anyhow::ensure!(
+            flat.len() == self.num_parameters(),
+            "flat parameter vector has {} values, expected {}",
+            flat.len(),
+            self.num_parameters()
+        );
+        let mut tensors = Vec::with_capacity(self.tensors.len());
+        let mut offset = 0;
+        for (data, shape) in &self.tensors {
+            tensors.push((flat[offset..offset + data.len()].to_vec(), shape.clone()));
+            offset += data.len();
+        }
+        Ok(QParams { tensors })
+    }
+
+    /// Order-sensitive FNV-1a digest over every parameter's raw bits
+    /// (feeds the campaign fingerprint that pins hub determinism).
+    pub fn digest(&self) -> u64 {
+        let mut h = Fnv64::new();
+        for (data, shape) in &self.tensors {
+            for &d in shape {
+                h.mix(d as u64);
+            }
+            for &x in data {
+                h.mix(x.to_bits() as u64);
+            }
+        }
+        h.finish()
+    }
+
     /// Mean absolute value across all parameters (drift diagnostics).
     pub fn mean_abs(&self) -> f32 {
         let (sum, n) = self.tensors.iter().fold((0.0f64, 0usize), |(s, n), (d, _)| {
@@ -109,6 +163,34 @@ impl QParams {
         });
         (sum / n.max(1) as f64) as f32
     }
+}
+
+/// Deterministic elementwise average of parameter sets.
+///
+/// Accumulation runs in **input order** with `f64` partial sums, so the
+/// result is a pure function of the slice order — the hub passes
+/// contributions in job-index order, which is what makes shared-learning
+/// merges bit-identical at any worker count. Averaging one parameter set
+/// returns it unchanged (bitwise: `f64::from(x) / 1.0` round-trips).
+pub fn average_params(params: &[&QParams]) -> Result<QParams> {
+    anyhow::ensure!(!params.is_empty(), "cannot average zero parameter sets");
+    let first = params[0];
+    for p in &params[1..] {
+        anyhow::ensure!(p.same_shape(first), "parameter shape mismatch in average");
+    }
+    let inv = 1.0 / params.len() as f64;
+    let mut tensors = Vec::with_capacity(first.tensors.len());
+    for (ti, (data0, shape)) in first.tensors.iter().enumerate() {
+        let mut acc: Vec<f64> = data0.iter().map(|&x| x as f64).collect();
+        for p in &params[1..] {
+            for (a, &x) in acc.iter_mut().zip(&p.tensors[ti].0) {
+                *a += x as f64;
+            }
+        }
+        let avg: Vec<f32> = acc.into_iter().map(|a| (a * inv) as f32).collect();
+        tensors.push((avg, shape.clone()));
+    }
+    Ok(QParams { tensors })
 }
 
 /// Adam optimizer state: first/second moments + step count.
@@ -123,6 +205,27 @@ impl AdamState {
     pub fn new(params: &QParams) -> AdamState {
         AdamState { m: params.zeros_like(), v: params.zeros_like(), step: 0.0 }
     }
+
+    /// Order-sensitive digest over moments and step: `m` and `v` fold
+    /// in sequence (not symmetrically), so exchanging the two moment
+    /// tensors changes the digest.
+    pub fn digest(&self) -> u64 {
+        let mut h = Fnv64::new();
+        h.mix(self.m.digest());
+        h.mix(self.v.digest());
+        h.mix(self.step.to_bits() as u64);
+        h.finish()
+    }
+}
+
+/// Deterministic average of Adam states (moments elementwise, step as
+/// the plain mean), same ordering contract as [`average_params`].
+pub fn average_adam(states: &[&AdamState]) -> Result<AdamState> {
+    anyhow::ensure!(!states.is_empty(), "cannot average zero optimizer states");
+    let m = average_params(&states.iter().map(|s| &s.m).collect::<Vec<_>>())?;
+    let v = average_params(&states.iter().map(|s| &s.v).collect::<Vec<_>>())?;
+    let step = (states.iter().map(|s| s.step as f64).sum::<f64>() / states.len() as f64) as f32;
+    Ok(AdamState { m, v, step })
 }
 
 #[cfg(test)]
@@ -160,5 +263,67 @@ mod tests {
     fn from_flat_validates() {
         assert!(QParams::from_flat(vec![(vec![0.0; 6], vec![2, 3])]).is_ok());
         assert!(QParams::from_flat(vec![(vec![0.0; 5], vec![2, 3])]).is_err());
+    }
+
+    #[test]
+    fn flatten_roundtrips() {
+        let mut rng = Rng::new(3);
+        let p = QParams::init(4, &[8], 3, &mut rng);
+        let flat = p.flatten();
+        assert_eq!(flat.len(), p.num_parameters());
+        let q = p.unflatten_like(&flat).unwrap();
+        assert_eq!(p, q);
+        assert!(p.unflatten_like(&flat[1..]).is_err());
+    }
+
+    #[test]
+    fn average_of_one_is_bitwise_identity() {
+        let mut rng = Rng::new(5);
+        let p = QParams::init(6, &[10], 4, &mut rng);
+        let avg = average_params(&[&p]).unwrap();
+        for ((a, _), (b, _)) in avg.tensors.iter().zip(&p.tensors) {
+            for (x, y) in a.iter().zip(b) {
+                assert_eq!(x.to_bits(), y.to_bits());
+            }
+        }
+    }
+
+    #[test]
+    fn average_is_elementwise_mean() {
+        let a = QParams::from_flat(vec![(vec![1.0, 3.0], vec![2])]).unwrap();
+        let b = QParams::from_flat(vec![(vec![3.0, 5.0], vec![2])]).unwrap();
+        let avg = average_params(&[&a, &b]).unwrap();
+        assert_eq!(avg.tensors[0].0, vec![2.0, 4.0]);
+        // Shape mismatch is rejected, not silently truncated.
+        let c = QParams::from_flat(vec![(vec![0.0; 3], vec![3])]).unwrap();
+        assert!(average_params(&[&a, &c]).is_err());
+        assert!(average_params(&[]).is_err());
+    }
+
+    #[test]
+    fn digest_is_order_and_value_sensitive() {
+        let a = QParams::from_flat(vec![(vec![1.0, 2.0], vec![2])]).unwrap();
+        let b = QParams::from_flat(vec![(vec![2.0, 1.0], vec![2])]).unwrap();
+        assert_eq!(a.digest(), a.clone().digest());
+        assert_ne!(a.digest(), b.digest());
+    }
+
+    #[test]
+    fn adam_average_covers_moments_and_step() {
+        let p = QParams::from_flat(vec![(vec![0.0, 0.0], vec![2])]).unwrap();
+        let mut s1 = AdamState::new(&p);
+        let mut s2 = AdamState::new(&p);
+        s1.m.tensors[0].0 = vec![2.0, 0.0];
+        s2.m.tensors[0].0 = vec![0.0, 4.0];
+        s1.step = 10.0;
+        s2.step = 20.0;
+        let avg = average_adam(&[&s1, &s2]).unwrap();
+        assert_eq!(avg.m.tensors[0].0, vec![1.0, 2.0]);
+        assert_eq!(avg.step, 15.0);
+        assert_ne!(s1.digest(), avg.digest());
+        // Exchanging the two moment tensors must change the digest
+        // (regression: an xor-combined digest was m/v-symmetric).
+        let swapped = AdamState { m: s1.v.clone(), v: s1.m.clone(), step: s1.step };
+        assert_ne!(swapped.digest(), s1.digest());
     }
 }

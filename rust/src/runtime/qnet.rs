@@ -108,6 +108,18 @@ impl QNet {
         self.target_params = None;
     }
 
+    /// Replace parameters *and* optimizer state together — the hub-pull
+    /// entry point for shared learning, where the merged Adam moments
+    /// must survive the swap (unlike [`QNet::set_params`], which resets
+    /// them). Invalidates the device-literal cache; the frozen target
+    /// network (ablation mode) is left untouched on purpose, since its
+    /// refresh cadence is owned by the agent.
+    pub fn set_state(&mut self, params: QParams, opt: AdamState) {
+        self.params = params;
+        self.opt = opt;
+        self.cached = None;
+    }
+
     /// Is the fixed-Q-targets artifact available?
     pub fn has_target_network(&self) -> bool {
         self.train_target.is_some()

@@ -8,6 +8,15 @@
 //! [`PjRtClient::cpu`], so the DQN path fails fast with a clear message
 //! while the tabular agent and the whole simulator stack stay fully
 //! usable offline.
+//!
+//! Contract note (shared learning): the hub's param-averaging and
+//! serialization entry points ([`crate::runtime::average_params`],
+//! `QParams::flatten`/`unflatten_like`) operate on the host-side
+//! `Vec<f32>` buffers only and deliberately never touch this surface —
+//! merged state re-enters PJRT through the existing
+//! `QParams::to_literals` upload path, so the stub needs no new entry
+//! points and stays in sync with the real binding by construction.
+//! Keep it that way if the averaging ops grow.
 
 #[cfg(feature = "pjrt")]
 pub use ::xla::*;

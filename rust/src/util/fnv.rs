@@ -1,0 +1,52 @@
+//! Order-sensitive FNV-1a folding over `u64` words.
+//!
+//! One implementation for every determinism digest in the crate
+//! (parameter/optimizer digests, hub state digests, campaign report
+//! fingerprints) so the offset basis, prime and mixing order cannot
+//! drift apart between the fingerprint families that must compose.
+
+/// Incremental FNV-1a hasher over `u64` words.
+#[derive(Debug, Clone)]
+pub struct Fnv64(u64);
+
+impl Fnv64 {
+    pub fn new() -> Fnv64 {
+        Fnv64(0xcbf2_9ce4_8422_2325)
+    }
+
+    /// Fold one word in (xor, then multiply — order-sensitive).
+    pub fn mix(&mut self, x: u64) {
+        self.0 ^= x;
+        self.0 = self.0.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+
+    pub fn finish(&self) -> u64 {
+        self.0
+    }
+}
+
+impl Default for Fnv64 {
+    fn default() -> Fnv64 {
+        Fnv64::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fold(xs: &[u64]) -> u64 {
+        let mut h = Fnv64::new();
+        for &x in xs {
+            h.mix(x);
+        }
+        h.finish()
+    }
+
+    #[test]
+    fn order_sensitive() {
+        assert_ne!(fold(&[1, 2]), fold(&[2, 1]));
+        assert_ne!(fold(&[0]), fold(&[]));
+        assert_eq!(fold(&[7, 8, 9]), fold(&[7, 8, 9]));
+    }
+}

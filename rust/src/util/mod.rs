@@ -5,6 +5,7 @@
 
 pub mod args;
 pub mod bench;
+pub mod fnv;
 pub mod json;
 pub mod prop;
 pub mod rng;

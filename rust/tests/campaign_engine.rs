@@ -5,6 +5,7 @@
 use aituning::campaign::{job_grid, CampaignConfig, CampaignEngine, CampaignJob};
 use aituning::coordinator::{AgentKind, Controller, TuningConfig};
 use aituning::mpi_t::{CvarId, CvarSet};
+use aituning::simmpi::Machine;
 use aituning::workloads::WorkloadKind;
 
 fn base_cfg(runs: usize) -> TuningConfig {
@@ -23,6 +24,7 @@ fn engine(runs: usize, workers: usize) -> CampaignEngine {
 
 fn small_grid() -> Vec<CampaignJob> {
     job_grid(
+        &[Machine::cheyenne()],
         &[WorkloadKind::LatticeBoltzmann, WorkloadKind::SkeletonPic],
         &[4, 8],
         AgentKind::Tabular,
@@ -58,6 +60,7 @@ fn campaign_matches_standalone_controller() {
     // An engine job must produce exactly what a hand-built controller
     // with the same seed produces: the pool adds no hidden coupling.
     let job = CampaignJob {
+        machine: "cheyenne",
         workload: WorkloadKind::LatticeBoltzmann,
         images: 8,
         agent: AgentKind::Tabular,
@@ -78,10 +81,38 @@ fn campaign_matches_standalone_controller() {
 
 #[test]
 fn more_workers_than_jobs_is_fine() {
-    let jobs = job_grid(&[WorkloadKind::PrkP2p], &[4, 8], AgentKind::Tabular, 3);
+    let jobs =
+        job_grid(&[Machine::cheyenne()], &[WorkloadKind::PrkP2p], &[4, 8], AgentKind::Tabular, 3);
     let report = engine(3, 64).run(&jobs).unwrap();
     assert_eq!(report.results.len(), 2);
     assert!(report.workers <= 2, "workers clamp to job count");
+}
+
+#[test]
+fn one_pool_spans_both_testbeds() {
+    // The machine rides in the job, so a single campaign covers
+    // cheyenne and edison cells; per-cell results must equal those of
+    // a single-machine engine whose base config names that machine.
+    let machines = [Machine::cheyenne(), Machine::edison()];
+    let jobs = job_grid(&machines, &[WorkloadKind::LatticeBoltzmann], &[4], AgentKind::Tabular, 7);
+    assert_eq!(jobs.len(), 2);
+    let report = engine(3, 2).run(&jobs).unwrap();
+    assert_ne!(
+        report.results[0].outcome.reference_us.to_bits(),
+        report.results[1].outcome.reference_us.to_bits(),
+        "different machine models must simulate differently"
+    );
+    for (machine, r) in machines.iter().zip(&report.results) {
+        let solo_cfg = TuningConfig { machine: machine.clone(), ..base_cfg(3) };
+        let solo = CampaignEngine::new(CampaignConfig { base: solo_cfg, workers: 1 })
+            .run(&[r.job])
+            .unwrap();
+        assert_eq!(
+            solo.results[0].outcome.best_us.to_bits(),
+            r.outcome.best_us.to_bits(),
+            "job machine must override the engine base machine"
+        );
+    }
 }
 
 #[test]
@@ -129,6 +160,41 @@ fn evaluate_batch_matches_serial_evaluate() {
         let s = serial_engine.evaluate(kind, 8, cv, 2).unwrap();
         assert_eq!(s.to_bits(), t.to_bits());
     }
+}
+
+#[test]
+fn evaluate_specs_spans_machines_and_matches_per_machine_engines() {
+    use aituning::campaign::EvalSpec;
+    let kind = WorkloadKind::LatticeBoltzmann;
+    let specs: Vec<EvalSpec> = [Machine::cheyenne(), Machine::edison()]
+        .into_iter()
+        .map(|machine| EvalSpec { machine, workload: kind, images: 4, cvars: CvarSet::vanilla() })
+        .collect();
+    let engine = engine(4, 4);
+    let means = engine.evaluate_specs(&specs, 3).unwrap();
+    assert_eq!(means.len(), 2);
+    for (spec, &mean) in specs.iter().zip(&means) {
+        let solo = CampaignEngine::new(CampaignConfig {
+            base: TuningConfig { machine: spec.machine.clone(), ..base_cfg(4) },
+            workers: 1,
+        });
+        let s = solo.evaluate(kind, 4, &CvarSet::vanilla(), 3).unwrap();
+        assert_eq!(s.to_bits(), mean.to_bits());
+    }
+}
+
+#[test]
+fn single_config_repeats_fan_out_and_stay_bit_identical() {
+    // Satellite check: evaluate_batch parallelizes *within* one
+    // config's repeats now; a 1-config/8-repeat batch on 8 workers must
+    // still equal the serial mean exactly.
+    let parallel_engine = engine(4, 8);
+    let batched =
+        parallel_engine.evaluate_batch(WorkloadKind::Icar, 8, &[CvarSet::vanilla()], 8).unwrap();
+    let serial_engine = engine(4, 1);
+    let serial = serial_engine.evaluate(WorkloadKind::Icar, 8, &CvarSet::vanilla(), 8).unwrap();
+    assert_eq!(batched[0].to_bits(), serial.to_bits());
+    assert_eq!(serial_engine.cache().misses(), 8, "8 distinct per-repeat episodes");
 }
 
 #[test]
