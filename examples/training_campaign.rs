@@ -7,20 +7,34 @@
 //! models, all four training codes, a range of image counts — scaled to
 //! minutes of simulated-cluster time, as **one** job grid spanning both
 //! testbeds fanned across all cores. Pass `--full` for the larger sweep
-//! (64..512 images), `--quick` for a smoke pass, and `--shared` to
-//! couple the jobs through the LearnerHub parameter server and print
-//! the independent-vs-shared ablation instead of the plain table.
+//! (64..512 images), `--quick` for a smoke pass, `--shared` to couple
+//! the jobs through the LearnerHub parameter server and print the
+//! independent-vs-shared ablation instead of the plain table, and
+//! `--replay uniform|stratified|prioritized` to pick the replay
+//! retention/selection policy.
 
 use aituning::campaign::{ablation_table, job_grid, CampaignConfig, CampaignEngine};
-use aituning::coordinator::{AgentKind, SharedLearning, TuningConfig};
+use aituning::coordinator::{AgentKind, ReplayPolicyKind, SharedLearning, TuningConfig};
 use aituning::simmpi::Machine;
 use aituning::util::bench::Table;
 use aituning::workloads::WorkloadKind;
 
 fn main() -> anyhow::Result<()> {
-    let full = std::env::args().any(|a| a == "--full");
-    let quick = std::env::args().any(|a| a == "--quick");
-    let shared_mode = std::env::args().any(|a| a == "--shared");
+    let argv: Vec<String> = std::env::args().collect();
+    let full = argv.iter().any(|a| a == "--full");
+    let quick = argv.iter().any(|a| a == "--quick");
+    let shared_mode = argv.iter().any(|a| a == "--shared");
+    // --replay uniform|stratified|prioritized (hub + controller buffers)
+    let replay_policy = match argv.iter().position(|a| a == "--replay") {
+        None => ReplayPolicyKind::default(),
+        Some(i) => {
+            let name = argv
+                .get(i + 1)
+                .expect("--replay needs a value (uniform|stratified|prioritized)");
+            ReplayPolicyKind::parse(name)
+                .unwrap_or_else(|| panic!("unknown replay policy {name:?}"))
+        }
+    };
     let image_counts: &[usize] = if full {
         &[64, 128, 256, 512]
     } else if quick {
@@ -41,6 +55,7 @@ fn main() -> anyhow::Result<()> {
         runs: runs_per,
         seed: 5,
         shared: shared_mode.then_some(SharedLearning { sync_every: if quick { 2 } else { 5 } }),
+        replay_policy,
         ..TuningConfig::default()
     };
     let jobs = job_grid(&machines, &WorkloadKind::TRAINING, image_counts, agent, base.seed);

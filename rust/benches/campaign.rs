@@ -8,11 +8,13 @@
 //! and on all cores and the fingerprints must match; the shared-learning
 //! campaign is likewise executed at both worker counts and its
 //! fingerprint (which folds in the final LearnerHub state) must match
-//! too. The independent-vs-shared ablation table then compares per-cell
-//! improvements at an identical run budget.
+//! too — under every replay policy. The independent-vs-shared ablation
+//! table compares per-cell improvements at an identical run budget, and
+//! the replay-policy ablation compares uniform / stratified /
+//! prioritized retention (resident occupancy + per-merge-round cost).
 
 use aituning::campaign::{ablation_table, job_grid, CampaignConfig, CampaignEngine};
-use aituning::coordinator::{AgentKind, SharedLearning, TuningConfig};
+use aituning::coordinator::{AgentKind, ReplayPolicyKind, SharedLearning, TuningConfig};
 use aituning::simmpi::Machine;
 use aituning::util::bench::Table;
 use aituning::workloads::WorkloadKind;
@@ -83,6 +85,46 @@ fn main() -> anyhow::Result<()> {
         jobs.len()
     );
     println!("hub: {}", hub.describe());
+
+    // --- replay-policy ablation: same shared campaign under each
+    // retention/selection policy. Per-policy fingerprints are asserted
+    // 1-vs-N (uniform was already checked above). The round-cost
+    // column reports how cheap a merge round is end-to-end; note it is
+    // dominated by episode simulation + training, so the zero-copy
+    // HubView pull itself is pinned by the Arc::ptr_eq unit tests in
+    // coordinator/hub.rs, not by this number. ---
+    let sync_every = base.shared.map(|s| s.sync_every).unwrap_or(5);
+    let rounds = runs_per.div_ceil(sync_every).max(1);
+    let mut ablation = Table::new(&[
+        "replay policy", "geomean speedup", "resident", "merge rounds", "round cost",
+    ]);
+    let mut policy_reports = vec![(ReplayPolicyKind::Uniform, shared_parallel.clone())];
+    for policy in [ReplayPolicyKind::Stratified, ReplayPolicyKind::Prioritized] {
+        let cfg = TuningConfig { replay_policy: policy, ..base.clone() };
+        let one = CampaignEngine::new(CampaignConfig { base: cfg.clone(), workers: 1 })
+            .run_shared(&jobs)?;
+        let many = CampaignEngine::new(CampaignConfig { base: cfg, workers: 0 })
+            .run_shared(&jobs)?;
+        assert_eq!(
+            one.fingerprint(),
+            many.fingerprint(),
+            "{policy} shared campaign must be bit-identical at 1 and {} workers",
+            many.workers
+        );
+        policy_reports.push((policy, many));
+    }
+    for (policy, report) in &policy_reports {
+        let hub = report.hub.expect("shared report carries hub state");
+        ablation.row(vec![
+            policy.to_string(),
+            format!("{:.3}x", report.geomean_speedup()),
+            format!("{}/{}", hub.replay_len, hub.total_transitions),
+            format!("{rounds}"),
+            format!("{:.1} ms", report.wall_clock.as_secs_f64() * 1e3 / rounds as f64),
+        ]);
+    }
+    println!("\n=== replay-policy ablation (shared mode, {} workers) ===", shared_parallel.workers);
+    ablation.print();
 
     // --- engine scaling (results verified bit-identical above) ---
     let mut timing = Table::new(&["mode", "jobs", "1 worker", "all cores", "speedup"]);

@@ -48,6 +48,7 @@ fn main() -> anyhow::Result<()> {
             reward: 0.1,
             next_state: st,
             done: false,
+            workload: None,
         });
     }
     let batch = replay.sample(qnet.replay_batch, &mut rng2);

@@ -88,6 +88,10 @@ impl CampaignReport {
             h.mix(hub.merges as u64);
             h.mix(hub.replay_len as u64);
             h.mix(hub.total_transitions as u64);
+            h.mix(hub.policy.ordinal() as u64);
+            for &n in &hub.occupancy {
+                h.mix(n as u64);
+            }
             h.mix(hub.digest);
         }
         h.finish()
@@ -119,12 +123,20 @@ impl CampaignReport {
             ),
         ];
         if let Some(hub) = &self.hub {
+            let occupancy: Vec<(&str, Json)> = crate::workloads::WorkloadKind::ALL
+                .iter()
+                .zip(&hub.occupancy)
+                .filter(|(_, &n)| n > 0)
+                .map(|(kind, &n)| (kind.name(), num(n as f64)))
+                .collect();
             fields.push((
                 "hub",
                 obj(vec![
                     ("merges", num(hub.merges as f64)),
                     ("replay_len", num(hub.replay_len as f64)),
                     ("total_transitions", num(hub.total_transitions as f64)),
+                    ("replay_policy", s(hub.policy.name())),
+                    ("occupancy", obj(occupancy)),
                     ("digest", s(&format!("{:016x}", hub.digest))),
                 ]),
             ));
@@ -232,11 +244,15 @@ mod tests {
         other_machine.results[0].job.machine = "edison";
         assert_ne!(a.fingerprint(), other_machine.fingerprint());
 
+        let mut occupancy = [0usize; WorkloadKind::COUNT];
+        occupancy[WorkloadKind::Icar.ordinal()] = 12;
         let mut shared = report(&[(100.0, 80.0)]);
         shared.hub = Some(crate::coordinator::HubSummary {
             merges: 3,
             replay_len: 12,
             total_transitions: 12,
+            policy: crate::coordinator::ReplayPolicyKind::Uniform,
+            occupancy,
             digest: 0xabc,
         });
         assert_ne!(a.fingerprint(), shared.fingerprint());
@@ -244,10 +260,20 @@ mod tests {
         assert_eq!(shared.fingerprint(), shared2.fingerprint());
         shared2.hub.as_mut().unwrap().digest = 0xdef;
         assert_ne!(shared.fingerprint(), shared2.fingerprint());
+        // Policy and retention shape are part of the fingerprint too.
+        let mut other_policy = shared.clone();
+        other_policy.hub.as_mut().unwrap().policy =
+            crate::coordinator::ReplayPolicyKind::Stratified;
+        assert_ne!(shared.fingerprint(), other_policy.fingerprint());
+        let mut other_occupancy = shared.clone();
+        other_occupancy.hub.as_mut().unwrap().occupancy[WorkloadKind::Icar.ordinal()] = 11;
+        assert_ne!(shared.fingerprint(), other_occupancy.fingerprint());
         // JSON labels the mode and carries the hub block.
         let j = shared.to_json();
         assert_eq!(j.at(&["mode"]).unwrap().as_str().unwrap(), "shared");
         assert!(j.at(&["hub", "merges"]).is_ok());
+        assert_eq!(j.at(&["hub", "replay_policy"]).unwrap().as_str().unwrap(), "uniform");
+        assert_eq!(j.at(&["hub", "occupancy", "icar"]).unwrap().as_usize().unwrap(), 12);
         assert_eq!(a.to_json().at(&["mode"]).unwrap().as_str().unwrap(), "independent");
     }
 

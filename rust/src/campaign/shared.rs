@@ -25,6 +25,12 @@
 //! [`SharedLearning::sync_every`] (runs per segment). Smaller cadence =
 //! tighter coupling and more merges; `sync_every >= runs` degenerates
 //! to a single end-of-session merge.
+//!
+//! The hub's global buffer runs the base config's
+//! [`crate::coordinator::ReplayPolicyKind`]; workers pull its frozen
+//! snapshot behind an `Arc` (O(1) per pull) and the determinism
+//! argument above is policy-independent, so the 1-vs-N fingerprint
+//! checks hold for uniform, stratified and prioritized replay alike.
 
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Mutex;
@@ -59,7 +65,7 @@ impl CampaignEngine {
         let workers = self.workers_for(jobs.len());
         let started = Instant::now();
 
-        let mut hub = LearnerHub::new(base.replay_capacity);
+        let mut hub = LearnerHub::new(base.replay_capacity, base.replay_policy);
         // One persistent controller per job; workers move them in and
         // out of the slots between rounds (dynamic claiming is safe —
         // within a round, segments touch disjoint slots).

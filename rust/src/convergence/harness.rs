@@ -123,6 +123,8 @@ pub fn run_convergence(
             reward,
             next_state: state,
             done: i == cfg.runs,
+            // Synthetic models stand in for no real application.
+            workload: None,
         });
         let batch = replay.sample(32, &mut rng);
         agent.train(&batch, cfg.lr, cfg.gamma)?;

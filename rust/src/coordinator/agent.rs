@@ -134,7 +134,7 @@ impl Agent for DqnAgent {
     }
 
     fn sync(&mut self, view: &HubView) -> Result<()> {
-        match &view.master {
+        match view.master.as_deref() {
             None => Ok(()),
             Some(AgentState::Dense { params, opt }) => {
                 anyhow::ensure!(

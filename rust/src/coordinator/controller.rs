@@ -16,7 +16,7 @@ use super::ensemble::ensemble;
 use super::episode::run_episode;
 use super::hub::{HubContribution, HubView};
 use super::relative::RelativeTracker;
-use super::replay::{ReplayBuffer, Transition};
+use super::replay::{LocalReplay, ReplayPolicyKind, Transition};
 use super::reward::reward;
 use super::state::{build_state, NUM_ACTIONS, STATE_DIM};
 use super::tabular::TabularAgent;
@@ -53,6 +53,10 @@ pub struct TuningConfig {
     /// Replay buffer capacity and minibatch size.
     pub replay_capacity: usize,
     pub replay_batch: usize,
+    /// Replay retention/selection policy (see
+    /// [`crate::coordinator::replay`]); also adopted by the hub's
+    /// global buffer in shared campaigns.
+    pub replay_policy: ReplayPolicyKind,
     /// Full replay refresh cadence (§5.2: every 200 runs).
     pub replay_refresh_every: usize,
     /// Extra minibatches per refresh.
@@ -80,6 +84,7 @@ impl Default for TuningConfig {
             lr: 1e-3,
             replay_capacity: 8192,
             replay_batch: 32,
+            replay_policy: ReplayPolicyKind::Uniform,
             replay_refresh_every: 200,
             replay_refresh_batches: 8,
             noise: 0.02,
@@ -142,7 +147,7 @@ struct ActiveSession {
 pub struct Controller {
     pub cfg: TuningConfig,
     agent: Box<dyn Agent>,
-    replay: ReplayBuffer,
+    replay: LocalReplay,
     rng: Rng,
     /// Runs executed across the controller's lifetime (drives the
     /// §5.2 every-200-runs replay refresh across applications).
@@ -165,7 +170,7 @@ impl Controller {
             }
             AgentKind::Tabular => Box::new(TabularAgent::new()),
         };
-        let replay = ReplayBuffer::new(cfg.replay_capacity);
+        let replay = LocalReplay::new(cfg.replay_capacity, cfg.replay_policy);
         Ok(Controller {
             cfg,
             agent,
@@ -313,6 +318,7 @@ impl Controller {
                 reward: r as f32,
                 next_state: state,
                 done: i == total,
+                workload: Some(session.kind),
             };
             if self.cfg.shared.is_some() {
                 self.pending.push(transition.clone());
@@ -362,13 +368,16 @@ impl Controller {
     }
 
     /// Pull the hub's master state (shared learning): adopt the merged
-    /// agent weights and replace the local replay buffer with the
-    /// global snapshot. Touches no controller RNG state, so the local
-    /// trajectory's randomness is unaffected by *when* syncs happen.
+    /// agent weights and the global replay snapshot. The snapshot rides
+    /// behind an `Arc` ([`crate::coordinator::replay::LocalReplay::adopt`])
+    /// — one pointer copy, never a ring clone; new local transitions
+    /// accumulate in a fresh tail on top of it. Touches no controller
+    /// RNG state, so the local trajectory's randomness is unaffected by
+    /// *when* syncs happen.
     pub fn sync_from_hub(&mut self, view: &HubView) -> Result<()> {
         self.agent.sync(view)?;
         if view.master.is_some() {
-            self.replay = view.replay.clone();
+            self.replay.adopt(std::sync::Arc::clone(&view.replay));
         }
         Ok(())
     }

@@ -82,6 +82,40 @@ mod tests {
     }
 
     #[test]
+    fn even_survivor_count_ships_the_lower_middle_value() {
+        // Four runs inside the 5% window with eager thresholds
+        // {4,5,6,7}e5: the shipped value must be 500_000 — the lower of
+        // the two middles, a configuration that actually ran. The old
+        // upper-middle median shipped 600_000 for every even-sized
+        // ensemble; a midpoint average would ship 550_000, which no run
+        // ever executed.
+        let records = vec![
+            rec(80.0, 700_000, 1),
+            rec(81.0, 400_000, 1),
+            rec(82.0, 600_000, 1),
+            rec(83.0, 500_000, 1),
+        ];
+        let out = ensemble(&records, 100.0);
+        assert_eq!(out.get(CvarId(5)), 500_000);
+        assert_eq!(out.get(CvarId(0)), 1);
+    }
+
+    #[test]
+    fn odd_survivor_count_ships_the_exact_middle_value() {
+        // Odd parity pin (the behavior that must NOT shift with the
+        // even-median fix): three survivors ship the true middle.
+        let records = vec![
+            rec(80.0, 700_000, 1),
+            rec(81.0, 400_000, 0),
+            rec(82.0, 600_000, 1),
+        ];
+        let out = ensemble(&records, 100.0);
+        assert_eq!(out.get(CvarId(5)), 600_000);
+        // Bool cvar over {1, 0, 1}: median 1.
+        assert_eq!(out.get(CvarId(0)), 1);
+    }
+
+    #[test]
     fn penalized_runs_discarded_even_if_close_to_best() {
         // best = 104, but everything is above the reference 100.
         let records = vec![rec(104.0, 300_000, 1), rec(105.0, 400_000, 1)];

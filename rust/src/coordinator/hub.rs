@@ -8,9 +8,13 @@
 //! while keeping the engine's determinism contract:
 //!
 //! * the hub owns a **master agent state** (DQN: `QParams` + Adam
-//!   moments; tabular: the Q-table) and a **global replay buffer**;
+//!   moments; tabular: the Q-table) and a **global replay buffer**
+//!   running one of the [`crate::coordinator::replay`] policies
+//!   (uniform / workload-stratified / prioritized retention);
 //! * workers *pull* a snapshot ([`LearnerHub::view`]) at segment start
-//!   and train locally for a fixed cadence of tuning runs
+//!   — both halves (master state and replay buffer) ride behind
+//!   `Arc`s, so a pull is O(1), never a tensor or ring copy — and
+//!   train locally for a fixed cadence of tuning runs
 //!   ([`crate::coordinator::SharedLearning::sync_every`]);
 //! * workers *push* [`HubContribution`]s — their locally-updated agent
 //!   state plus the replay shard of new transitions — and the hub
@@ -27,13 +31,15 @@
 //! 1-vs-N-worker bit-identity checks cover shared learning too.
 
 use std::collections::BTreeMap;
+use std::sync::Arc;
 
 use anyhow::Result;
 
 use crate::runtime::{average_adam, average_params, AdamState, QParams};
 use crate::util::fnv::Fnv64;
+use crate::workloads::WorkloadKind;
 
-use super::replay::{ReplayBuffer, Transition};
+use super::replay::{ReplayBuffer, ReplayPolicyKind, Transition};
 use super::state::NUM_ACTIONS;
 
 /// A portable snapshot of one agent's learnable state — the hub's wire
@@ -141,10 +147,14 @@ pub struct HubView {
     /// Merges completed before this snapshot was taken.
     pub round: usize,
     /// Master agent state; `None` until the first merge, in which case
-    /// workers keep their own freshly-initialized state.
-    pub master: Option<AgentState>,
-    /// Snapshot of the global replay buffer.
-    pub replay: ReplayBuffer,
+    /// workers keep their own freshly-initialized state. Shared behind
+    /// an `Arc` for the same reason as `replay`: a pull must not clone
+    /// the full parameter/Adam tensors per worker.
+    pub master: Option<Arc<AgentState>>,
+    /// Frozen snapshot of the global replay buffer, shared behind an
+    /// `Arc`: pulling it is one pointer copy, never a ring clone, so an
+    /// N-worker round costs O(1) per pull instead of O(capacity).
+    pub replay: Arc<ReplayBuffer>,
 }
 
 /// One worker's push: its job index (the merge-order key), its
@@ -166,6 +176,13 @@ pub struct HubSummary {
     pub replay_len: usize,
     /// Transitions pushed over the campaign's lifetime (pre-eviction).
     pub total_transitions: usize,
+    /// Replay policy the global buffer ran.
+    pub policy: ReplayPolicyKind,
+    /// Resident transitions per workload (ordinal-indexed; see
+    /// [`WorkloadKind::ordinal`]) — the §5.2 retention picture: under
+    /// eviction pressure a stratified buffer keeps every workload's
+    /// entry non-zero, a uniform ring does not.
+    pub occupancy: [usize; WorkloadKind::COUNT],
     /// [`LearnerHub::digest`] at campaign end.
     pub digest: u64,
 }
@@ -173,9 +190,20 @@ pub struct HubSummary {
 impl HubSummary {
     /// One-line human rendering for campaign drivers.
     pub fn describe(&self) -> String {
+        let mut occupancy = String::new();
+        for (i, &n) in self.occupancy.iter().enumerate() {
+            if n > 0 {
+                occupancy.push_str(&format!(" {}={n}", WorkloadKind::ALL[i].name()));
+            }
+        }
+        if occupancy.is_empty() {
+            occupancy.push_str(" (empty)");
+        }
         format!(
-            "{} merges, {} transitions pooled ({} resident), state digest {:016x}",
-            self.merges, self.total_transitions, self.replay_len, self.digest
+            "{} merges, {} transitions pooled ({} resident, {} policy), \
+             state digest {:016x}; occupancy:{}",
+            self.merges, self.total_transitions, self.replay_len, self.policy, self.digest,
+            occupancy
         )
     }
 }
@@ -185,28 +213,38 @@ impl HubSummary {
 /// needs no locking — the barrier *is* the synchronization.
 #[derive(Debug)]
 pub struct LearnerHub {
-    master: Option<AgentState>,
-    replay: ReplayBuffer,
+    master: Option<Arc<AgentState>>,
+    /// Global replay buffer. Kept behind an `Arc` so [`LearnerHub::view`]
+    /// hands out zero-copy snapshots; [`LearnerHub::merge`] mutates via
+    /// `Arc::make_mut`, which clones at most once per round (only while
+    /// workers still hold the previous round's snapshot).
+    replay: Arc<ReplayBuffer>,
     merges: usize,
     total_transitions: usize,
 }
 
 impl LearnerHub {
     /// Fresh hub with an empty global replay buffer of `replay_capacity`
-    /// (use the campaign base config's capacity so worker pulls slot
-    /// straight into their controllers).
-    pub fn new(replay_capacity: usize) -> LearnerHub {
+    /// running `policy` (use the campaign base config's values so worker
+    /// pulls slot straight into their controllers).
+    pub fn new(replay_capacity: usize, policy: ReplayPolicyKind) -> LearnerHub {
         LearnerHub {
             master: None,
-            replay: ReplayBuffer::new(replay_capacity),
+            replay: Arc::new(ReplayBuffer::with_policy(replay_capacity, policy)),
             merges: 0,
             total_transitions: 0,
         }
     }
 
-    /// Snapshot for workers to pull at segment start.
+    /// Snapshot for workers to pull at segment start. O(1): both the
+    /// master state and the replay snapshot are `Arc` clones of frozen
+    /// hub state — no tensor or ring copies.
     pub fn view(&self) -> HubView {
-        HubView { round: self.merges, master: self.master.clone(), replay: self.replay.clone() }
+        HubView {
+            round: self.merges,
+            master: self.master.clone(),
+            replay: Arc::clone(&self.replay),
+        }
     }
 
     /// Merge one round of contributions.
@@ -229,10 +267,13 @@ impl LearnerHub {
             );
         }
         let states: Vec<&AgentState> = contributions.iter().map(|c| &c.state).collect();
-        self.master = Some(AgentState::average(&states)?);
+        self.master = Some(Arc::new(AgentState::average(&states)?));
+        // Copy-on-write: detach from snapshots still held by workers
+        // (one buffer clone per round at most), then append in order.
+        let replay = Arc::make_mut(&mut self.replay);
         for c in contributions {
             for t in &c.transitions {
-                self.replay.push(t.clone());
+                replay.push(t.clone());
             }
             self.total_transitions += c.transitions.len();
         }
@@ -241,7 +282,7 @@ impl LearnerHub {
     }
 
     pub fn master(&self) -> Option<&AgentState> {
-        self.master.as_ref()
+        self.master.as_deref()
     }
 
     pub fn replay(&self) -> &ReplayBuffer {
@@ -252,12 +293,14 @@ impl LearnerHub {
         self.merges
     }
 
-    /// Order-sensitive digest of the full hub state (master + replay).
-    /// Folded into [`crate::campaign::CampaignReport::fingerprint`] so
-    /// worker-count invariance checks cover shared learning.
+    /// Order-sensitive digest of the full hub state (master + replay,
+    /// in the replay policy's canonical order). Folded into
+    /// [`crate::campaign::CampaignReport::fingerprint`] so worker-count
+    /// invariance checks cover shared learning under every policy.
     pub fn digest(&self) -> u64 {
         let mut h = Fnv64::new();
         h.mix(self.merges as u64);
+        h.mix(self.replay.kind().ordinal() as u64);
         match &self.master {
             Some(state) => h.mix(state.digest()),
             None => h.mix(0),
@@ -272,6 +315,8 @@ impl LearnerHub {
                 h.mix(v.to_bits() as u64);
             }
             h.mix(t.done as u64);
+            // 0 = unlabeled; ordinals shift by one.
+            h.mix(t.workload.map(|w| w.ordinal() as u64 + 1).unwrap_or(0));
         }
         h.finish()
     }
@@ -281,6 +326,8 @@ impl LearnerHub {
             merges: self.merges,
             replay_len: self.replay.len(),
             total_transitions: self.total_transitions,
+            policy: self.replay.kind(),
+            occupancy: self.replay.occupancy(),
             digest: self.digest(),
         }
     }
@@ -311,6 +358,7 @@ mod tests {
             reward,
             next_state: [0.0; STATE_DIM],
             done: false,
+            workload: Some(WorkloadKind::LatticeBoltzmann),
         }
     }
 
@@ -360,7 +408,7 @@ mod tests {
 
     #[test]
     fn replay_shards_append_in_job_order() {
-        let mut hub = LearnerHub::new(64);
+        let mut hub = LearnerHub::new(64, ReplayPolicyKind::Uniform);
         // Push order scrambled relative to job order would be a driver
         // bug; the hub only accepts job order and appends shard 0's
         // transitions before shard 1's, preserving in-shard order.
@@ -378,7 +426,7 @@ mod tests {
 
     #[test]
     fn out_of_order_contributions_are_rejected() {
-        let mut hub = LearnerHub::new(8);
+        let mut hub = LearnerHub::new(8, ReplayPolicyKind::Uniform);
         let err = hub.merge(&[
             contribution(1, table(&[(1, 1.0)]), &[]),
             contribution(0, table(&[(1, 2.0)]), &[]),
@@ -394,8 +442,8 @@ mod tests {
 
     #[test]
     fn digest_tracks_master_and_replay() {
-        let mut a = LearnerHub::new(8);
-        let mut b = LearnerHub::new(8);
+        let mut a = LearnerHub::new(8, ReplayPolicyKind::Uniform);
+        let mut b = LearnerHub::new(8, ReplayPolicyKind::Uniform);
         assert_eq!(a.digest(), b.digest());
         a.merge(&[contribution(0, table(&[(1, 1.0)]), &[1.0])]).unwrap();
         b.merge(&[contribution(0, table(&[(1, 1.0)]), &[1.0])]).unwrap();
@@ -406,16 +454,57 @@ mod tests {
 
     #[test]
     fn view_snapshots_do_not_alias_the_hub() {
-        let mut hub = LearnerHub::new(8);
+        // Copy-on-write: a merge after a pull must not mutate the
+        // snapshot the worker still holds.
+        let mut hub = LearnerHub::new(8, ReplayPolicyKind::Uniform);
         hub.merge(&[contribution(0, table(&[(7, 1.5)]), &[2.0])]).unwrap();
         let view = hub.view();
         hub.merge(&[contribution(0, table(&[(7, 9.0)]), &[3.0])]).unwrap();
         assert_eq!(view.round, 1);
         assert_eq!(view.replay.len(), 1);
         assert_eq!(hub.replay().len(), 2);
-        match view.master.unwrap() {
+        match view.master.as_deref().unwrap() {
             AgentState::Table(entries) => assert_eq!(entries[0].1[0], 1.5),
             AgentState::Dense { .. } => panic!("expected table"),
         }
+    }
+
+    #[test]
+    fn view_pull_is_zero_copy_until_the_next_merge() {
+        let mut hub = LearnerHub::new(8, ReplayPolicyKind::Uniform);
+        hub.merge(&[contribution(0, table(&[(1, 1.0)]), &[1.0, 2.0])]).unwrap();
+        // Every pull of the same round shares one frozen buffer.
+        let a = hub.view();
+        let b = hub.view();
+        assert!(Arc::ptr_eq(&a.replay, &b.replay), "pulls must share the snapshot");
+        assert!(
+            Arc::ptr_eq(a.master.as_ref().unwrap(), b.master.as_ref().unwrap()),
+            "pulls must share the master state"
+        );
+        // Only a merge detaches the hub from outstanding snapshots.
+        hub.merge(&[contribution(0, table(&[(1, 1.0)]), &[3.0])]).unwrap();
+        let c = hub.view();
+        assert!(!Arc::ptr_eq(&a.replay, &c.replay));
+        assert_eq!(a.replay.len(), 2);
+        assert_eq!(c.replay.len(), 3);
+    }
+
+    #[test]
+    fn summary_reports_policy_and_per_workload_occupancy() {
+        let mut hub = LearnerHub::new(16, ReplayPolicyKind::Stratified);
+        let mut pic = contribution(1, table(&[(2, 1.0)]), &[5.0]);
+        for t in &mut pic.transitions {
+            t.workload = Some(WorkloadKind::SkeletonPic);
+        }
+        hub.merge(&[contribution(0, table(&[(1, 1.0)]), &[1.0, 2.0]), pic]).unwrap();
+        let s = hub.summary();
+        assert_eq!(s.policy, ReplayPolicyKind::Stratified);
+        assert_eq!(s.occupancy[WorkloadKind::LatticeBoltzmann.ordinal()], 2);
+        assert_eq!(s.occupancy[WorkloadKind::SkeletonPic.ordinal()], 1);
+        assert_eq!(s.occupancy.iter().sum::<usize>(), s.replay_len);
+        let line = s.describe();
+        assert!(line.contains("stratified"), "{line}");
+        assert!(line.contains("lattice_boltzmann=2"), "{line}");
+        assert!(line.contains("skeleton_pic=1"), "{line}");
     }
 }

@@ -8,7 +8,9 @@
 //! and its total-time improvement is the *reward*. Experience replay
 //! stabilizes training (§3.1/§5.2; no Q-target network, as in the
 //! paper). After the tuning runs, ensemble inference (§5.4) merges the
-//! best configurations.
+//! best configurations. Experience retention and minibatch selection
+//! are a pluggable subsystem ([`replay`]: uniform / workload-stratified
+//! / prioritized policies behind the [`ReplayPolicy`] seam).
 //!
 //! Beyond the paper's single-session loop, [`hub`] adds a `LearnerHub`
 //! parameter server: parallel campaign workers pull/push weight and
@@ -33,6 +35,9 @@ pub use controller::{Controller, SharedLearning, TuningConfig, TuningOutcome};
 pub use episode::{run_episode, EpisodeResult};
 pub use hub::{AgentState, HubContribution, HubSummary, HubView, LearnerHub};
 pub use relative::RelativeTracker;
-pub use replay::{ReplayBuffer, Transition};
+pub use replay::{
+    LocalReplay, PrioritizedSampler, ReplayBuffer, ReplayPolicy, ReplayPolicyKind,
+    StratifiedRing, Transition, UniformRing,
+};
 pub use state::{build_state, NUM_ACTIONS, STATE_DIM};
 pub use tabular::TabularAgent;

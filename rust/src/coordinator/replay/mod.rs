@@ -1,0 +1,744 @@
+//! Experience replay (§3.1/§5.2) as a pluggable subsystem.
+//!
+//! The paper trains on a random *subset* of the accumulated experience
+//! to break temporal correlation. This module owns everything about
+//! which transitions are **retained** once capacity evicts and which
+//! are **selected** into a minibatch, behind one seam:
+//!
+//! * [`ReplayPolicy`] — the trait every retention/selection strategy
+//!   implements. A policy owns its storage, exposes the resident
+//!   transitions in a *canonical deterministic order* (`get(0)` =
+//!   first surviving position of that order), and prices each slot
+//!   with a selection [`ReplayPolicy::weight`].
+//! * [`UniformRing`] — the paper's behavior: FIFO retention, uniform
+//!   selection.
+//! * [`StratifiedRing`] — per-[`WorkloadKind`] slot quotas, so rare
+//!   workloads stay represented in the hub's global buffer when a
+//!   flood of transitions from common workloads would otherwise evict
+//!   them. Selection stays uniform over what is retained.
+//! * [`PrioritizedSampler`] — FIFO retention, reward-magnitude
+//!   proportional selection (a deterministic TD-error proxy) via
+//!   order-sequenced cumulative weights.
+//! * [`ReplayBuffer`] — the concrete policy-dispatched buffer used by
+//!   the [`crate::coordinator::LearnerHub`] and by independent
+//!   controllers.
+//! * [`LocalReplay`] — a controller's replay window: an optional
+//!   **`Arc`-shared frozen hub snapshot** plus a locally-owned tail.
+//!   Pulling a hub view costs one pointer copy instead of cloning the
+//!   whole ring, so an N-worker round is O(1) per pull.
+//!
+//! Every policy is a pure function of its push sequence, and every
+//! selection is a pure function of (resident sequence, RNG state), so
+//! the campaign engine's 1-vs-N-worker fingerprint bit-identity
+//! contract holds under all three policies.
+
+mod prioritized;
+mod stratified;
+mod uniform;
+
+pub use prioritized::{PrioritizedSampler, PRIORITY_FLOOR};
+pub use stratified::StratifiedRing;
+pub use uniform::UniformRing;
+
+use std::sync::Arc;
+
+use crate::runtime::TrainBatch;
+use crate::util::rng::Rng;
+use crate::workloads::WorkloadKind;
+
+use super::actions::one_hot;
+use super::state::{NUM_ACTIONS, STATE_DIM};
+
+/// One (s, a, r, s', done) experience tuple, tagged with the workload
+/// that generated it (`None` for synthetic-model transitions, which
+/// have no real application behind them). The tag is what stratified
+/// retention keys on and what per-workload occupancy reporting counts.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Transition {
+    pub state: [f32; STATE_DIM],
+    pub action: usize,
+    pub reward: f32,
+    pub next_state: [f32; STATE_DIM],
+    pub done: bool,
+    pub workload: Option<WorkloadKind>,
+}
+
+/// Which replay policy a buffer runs (CLI / config selection).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum ReplayPolicyKind {
+    /// FIFO ring, uniform selection — the paper's §5.2 baseline.
+    #[default]
+    Uniform,
+    /// Per-workload retention quotas, uniform selection.
+    Stratified,
+    /// FIFO ring, reward-magnitude proportional selection.
+    Prioritized,
+}
+
+impl ReplayPolicyKind {
+    pub const ALL: [ReplayPolicyKind; 3] = [
+        ReplayPolicyKind::Uniform,
+        ReplayPolicyKind::Stratified,
+        ReplayPolicyKind::Prioritized,
+    ];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            ReplayPolicyKind::Uniform => "uniform",
+            ReplayPolicyKind::Stratified => "stratified",
+            ReplayPolicyKind::Prioritized => "prioritized",
+        }
+    }
+
+    /// Dense index in [`ReplayPolicyKind::ALL`] (digest/fingerprint key).
+    pub fn ordinal(self) -> usize {
+        Self::ALL.iter().position(|&k| k == self).expect("listed in ALL")
+    }
+
+    pub fn parse(s: &str) -> Option<ReplayPolicyKind> {
+        match s.to_ascii_lowercase().as_str() {
+            "uniform" | "ring" => Some(ReplayPolicyKind::Uniform),
+            "stratified" | "strat" => Some(ReplayPolicyKind::Stratified),
+            "prioritized" | "per" | "priority" => Some(ReplayPolicyKind::Prioritized),
+            _ => None,
+        }
+    }
+}
+
+impl std::fmt::Display for ReplayPolicyKind {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// The replay seam: a deterministic retention + selection strategy.
+///
+/// Contract (what the campaign fingerprint tests actually pin):
+///
+/// 1. **Deterministic retention** — the resident set and its canonical
+///    order (`get(0..len)`) are a pure function of the push sequence.
+/// 2. **Deterministic pricing** — `weight(i)` depends only on the
+///    resident transition at position `i`; uniform policies return
+///    `1.0` and report `weighted() == false` so selection can take the
+///    without-replacement subset path.
+/// 3. **Newest-push survival** — `push` never evicts the transition it
+///    is inserting, and `latest()` always returns it.
+pub trait ReplayPolicy {
+    fn kind(&self) -> ReplayPolicyKind;
+    fn capacity(&self) -> usize;
+    /// Admit a transition, evicting per the policy's retention rule.
+    fn push(&mut self, t: Transition);
+    /// Resident transition count.
+    fn len(&self) -> usize;
+    fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+    /// Resident transition at position `i` of the canonical order.
+    fn get(&self, i: usize) -> &Transition;
+    /// Most recently pushed transition.
+    fn latest(&self) -> Option<&Transition>;
+    /// Proportional selection weight of position `i` (> 0).
+    fn weight(&self, _i: usize) -> f64 {
+        1.0
+    }
+    /// Whether `weight` is non-constant (selects the weighted-draw path).
+    fn weighted(&self) -> bool {
+        false
+    }
+}
+
+/// A read-only logical sequence of transitions to select minibatches
+/// from — either one policy store, or [`LocalReplay`]'s composition of
+/// a frozen shared base and a local tail.
+trait SampleSeq {
+    fn seq_len(&self) -> usize;
+    fn seq_get(&self, i: usize) -> &Transition;
+    fn seq_weighted(&self) -> bool;
+    fn seq_weight(&self, i: usize) -> f64;
+}
+
+/// Select `batch` positions from `seq` and shape them for the `q_train`
+/// artifact.
+///
+/// * Unweighted + `len >= batch`: a **without-replacement** subset via
+///   [`Rng::sample_indices`] — the paper trains on a random subset of
+///   the experience, and drawing with replacement over-weighted
+///   duplicate transitions inside one minibatch. (The previous
+///   implementation always drew with replacement.)
+/// * Unweighted + `len < batch` (warmup): with replacement — a subset
+///   of the required size does not exist yet.
+/// * Weighted: proportional draws with replacement over deterministic,
+///   order-sequenced cumulative weights (`f64` accumulated in canonical
+///   order, so the draw is bit-identical for identical sequences).
+fn sample_seq<S: SampleSeq + ?Sized>(seq: &S, batch: usize, rng: &mut Rng) -> TrainBatch {
+    let n = seq.seq_len();
+    assert!(n > 0, "sampling from empty replay buffer");
+    let picks: Vec<usize> = if seq.seq_weighted() {
+        let mut cumulative = Vec::with_capacity(n);
+        let mut total = 0.0f64;
+        for i in 0..n {
+            let w = seq.seq_weight(i);
+            debug_assert!(w > 0.0 && w.is_finite(), "selection weight must be positive");
+            total += w;
+            cumulative.push(total);
+        }
+        (0..batch)
+            .map(|_| {
+                let u = rng.f64() * total;
+                cumulative.partition_point(|&c| c <= u).min(n - 1)
+            })
+            .collect()
+    } else if n >= batch {
+        rng.sample_indices(n, batch)
+    } else {
+        (0..batch).map(|_| rng.below(n as u64) as usize).collect()
+    };
+
+    let mut states = Vec::with_capacity(batch * STATE_DIM);
+    let mut actions = Vec::with_capacity(batch * NUM_ACTIONS);
+    let mut rewards = Vec::with_capacity(batch);
+    let mut next_states = Vec::with_capacity(batch * STATE_DIM);
+    let mut done = Vec::with_capacity(batch);
+    for i in picks {
+        let t = seq.seq_get(i);
+        states.extend_from_slice(&t.state);
+        actions.extend_from_slice(&one_hot(t.action));
+        rewards.push(t.reward);
+        next_states.extend_from_slice(&t.next_state);
+        done.push(if t.done { 1.0 } else { 0.0 });
+    }
+    TrainBatch { states, actions_onehot: actions, rewards, next_states, done }
+}
+
+/// Policy-dispatched storage of a [`ReplayBuffer`].
+#[derive(Debug, Clone)]
+enum Store {
+    Uniform(UniformRing),
+    Stratified(StratifiedRing),
+    Prioritized(PrioritizedSampler),
+}
+
+/// Bounded replay buffer running one [`ReplayPolicy`].
+///
+/// `Clone` is part of the shared-learning contract: a clone reproduces
+/// the resident set, canonical order and retention cursors exactly, so
+/// hub merges are bit-reproducible. The hub hands snapshots to workers
+/// behind an `Arc` ([`crate::coordinator::HubView`]); cloning only
+/// happens when the hub itself mutates a still-shared buffer
+/// (`Arc::make_mut`, at most once per merge round).
+#[derive(Debug, Clone)]
+pub struct ReplayBuffer {
+    store: Store,
+    total_seen: usize,
+}
+
+impl ReplayBuffer {
+    /// Uniform-policy buffer (the historical constructor).
+    pub fn new(capacity: usize) -> ReplayBuffer {
+        ReplayBuffer::with_policy(capacity, ReplayPolicyKind::Uniform)
+    }
+
+    pub fn with_policy(capacity: usize, kind: ReplayPolicyKind) -> ReplayBuffer {
+        assert!(capacity > 0);
+        let store = match kind {
+            ReplayPolicyKind::Uniform => Store::Uniform(UniformRing::new(capacity)),
+            ReplayPolicyKind::Stratified => Store::Stratified(StratifiedRing::new(capacity)),
+            ReplayPolicyKind::Prioritized => Store::Prioritized(PrioritizedSampler::new(capacity)),
+        };
+        ReplayBuffer { store, total_seen: 0 }
+    }
+
+    /// The policy seam (read side).
+    pub fn policy(&self) -> &dyn ReplayPolicy {
+        match &self.store {
+            Store::Uniform(p) => p,
+            Store::Stratified(p) => p,
+            Store::Prioritized(p) => p,
+        }
+    }
+
+    fn policy_mut(&mut self) -> &mut dyn ReplayPolicy {
+        match &mut self.store {
+            Store::Uniform(p) => p,
+            Store::Stratified(p) => p,
+            Store::Prioritized(p) => p,
+        }
+    }
+
+    pub fn kind(&self) -> ReplayPolicyKind {
+        self.policy().kind()
+    }
+
+    pub fn push(&mut self, t: Transition) {
+        assert!(t.action < NUM_ACTIONS);
+        self.total_seen += 1;
+        self.policy_mut().push(t);
+    }
+
+    pub fn len(&self) -> usize {
+        self.policy().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Transitions pushed over the buffer's lifetime (pre-eviction).
+    pub fn total_seen(&self) -> usize {
+        self.total_seen
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.policy().capacity()
+    }
+
+    /// Resident transition at canonical position `i`.
+    pub fn get(&self, i: usize) -> &Transition {
+        self.policy().get(i)
+    }
+
+    /// Most recently pushed transition (per-run immediate training).
+    pub fn latest(&self) -> Option<&Transition> {
+        self.policy().latest()
+    }
+
+    /// Resident transitions in canonical order — used by the hub digest
+    /// and merge tests.
+    pub fn iter(&self) -> impl Iterator<Item = &Transition> {
+        (0..self.len()).map(move |i| self.get(i))
+    }
+
+    /// Resident transition count per workload (ordinal-indexed;
+    /// unlabeled synthetic transitions are not counted).
+    pub fn occupancy(&self) -> [usize; WorkloadKind::COUNT] {
+        let mut counts = [0usize; WorkloadKind::COUNT];
+        for t in self.iter() {
+            if let Some(kind) = t.workload {
+                counts[kind.ordinal()] += 1;
+            }
+        }
+        counts
+    }
+
+    /// Select a minibatch of `batch` transitions under the buffer's
+    /// policy (see [`sample_seq`] for the selection rules), shaped for
+    /// the `q_train` artifact.
+    pub fn sample(&self, batch: usize, rng: &mut Rng) -> TrainBatch {
+        sample_seq(self, batch, rng)
+    }
+}
+
+impl SampleSeq for ReplayBuffer {
+    fn seq_len(&self) -> usize {
+        self.len()
+    }
+    fn seq_get(&self, i: usize) -> &Transition {
+        self.get(i)
+    }
+    fn seq_weighted(&self) -> bool {
+        self.policy().weighted()
+    }
+    fn seq_weight(&self, i: usize) -> f64 {
+        self.policy().weight(i)
+    }
+}
+
+/// A controller's replay window: an optional frozen hub snapshot shared
+/// behind an `Arc` plus the locally-generated tail since the last sync.
+///
+/// Independent sessions never adopt a base, so the tail alone behaves
+/// exactly like a plain [`ReplayBuffer`]. Shared sessions
+/// ([`crate::coordinator::Controller::sync_from_hub`]) adopt the hub's
+/// snapshot as the base — **one `Arc` clone, no transition copies** —
+/// and push new experience into a fresh tail (those transitions are
+/// already queued for the next hub push, so the previous tail's content
+/// is resident in the adopted base).
+///
+/// Logically the window is `base ⧺ tail`. For generation-ordered
+/// policies (uniform, prioritized) it is truncated to `capacity` by
+/// dropping the oldest base entries, so a single contributor
+/// reproduces the plain ring bit-for-bit (pinned by the 1-job shared
+/// == independent test). A **stratified** base is ordered by workload,
+/// not by age — dropping its head would silently starve whichever
+/// workload sorts first, the exact failure stratified retention
+/// exists to prevent — so the stratified window instead overcommits by
+/// at most the tail length (bounded by one sync segment; the hub
+/// re-applies quotas at the next merge).
+#[derive(Debug, Clone)]
+pub struct LocalReplay {
+    base: Option<Arc<ReplayBuffer>>,
+    tail: ReplayBuffer,
+}
+
+impl LocalReplay {
+    pub fn new(capacity: usize, kind: ReplayPolicyKind) -> LocalReplay {
+        LocalReplay { base: None, tail: ReplayBuffer::with_policy(capacity, kind) }
+    }
+
+    /// Adopt a hub snapshot as the shared base (zero-copy: one `Arc`
+    /// clone) and start a fresh tail.
+    pub fn adopt(&mut self, snapshot: Arc<ReplayBuffer>) {
+        debug_assert_eq!(
+            snapshot.kind(),
+            self.tail.kind(),
+            "hub and controller must run the same replay policy"
+        );
+        self.tail = ReplayBuffer::with_policy(self.tail.capacity(), self.tail.kind());
+        self.base = Some(snapshot);
+    }
+
+    /// The adopted shared base, if any (tests assert pointer identity
+    /// with the hub's snapshot to pin the zero-copy contract).
+    pub fn base(&self) -> Option<&Arc<ReplayBuffer>> {
+        self.base.as_ref()
+    }
+
+    pub fn push(&mut self, t: Transition) {
+        self.tail.push(t);
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.tail.capacity()
+    }
+
+    /// Base entries logically evicted to respect `capacity`: the oldest
+    /// ones for generation-ordered bases, none for a stratified base
+    /// (whose canonical head is the first-sorted *workload*, not the
+    /// oldest experience — see the type docs).
+    fn skip(&self) -> usize {
+        if self.tail.kind() == ReplayPolicyKind::Stratified {
+            return 0;
+        }
+        let base_len = self.base.as_ref().map(|b| b.len()).unwrap_or(0);
+        (base_len + self.tail.len()).saturating_sub(self.capacity()).min(base_len)
+    }
+
+    /// Logical window length (`min(capacity, base + tail)`, except the
+    /// bounded stratified overcommit described in the type docs).
+    pub fn len(&self) -> usize {
+        let base_len = self.base.as_ref().map(|b| b.len()).unwrap_or(0);
+        base_len - self.skip() + self.tail.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Route logical position `i` to the buffer that holds it and the
+    /// position within that buffer — the single source of truth for the
+    /// base-vs-tail window layout, shared by `get` and `seq_weight` so
+    /// sampled transitions and their weights stay in lockstep.
+    fn locate(&self, i: usize) -> (&ReplayBuffer, usize) {
+        let visible_base = self.base.as_ref().map(|b| b.len()).unwrap_or(0) - self.skip();
+        if i < visible_base {
+            (self.base.as_ref().expect("visible_base > 0 implies base"), self.skip() + i)
+        } else {
+            (&self.tail, i - visible_base)
+        }
+    }
+
+    /// Transition at logical position `i` (base first, then tail).
+    pub fn get(&self, i: usize) -> &Transition {
+        let (buffer, j) = self.locate(i);
+        buffer.get(j)
+    }
+
+    /// Select a minibatch across the logical window (same selection
+    /// rules as [`ReplayBuffer::sample`]).
+    pub fn sample(&self, batch: usize, rng: &mut Rng) -> TrainBatch {
+        sample_seq(self, batch, rng)
+    }
+}
+
+impl SampleSeq for LocalReplay {
+    fn seq_len(&self) -> usize {
+        self.len()
+    }
+    fn seq_get(&self, i: usize) -> &Transition {
+        self.get(i)
+    }
+    fn seq_weighted(&self) -> bool {
+        self.tail.policy().weighted()
+    }
+    fn seq_weight(&self, i: usize) -> f64 {
+        let (buffer, j) = self.locate(i);
+        buffer.policy().weight(j)
+    }
+}
+
+#[cfg(test)]
+pub(crate) fn test_transition(reward: f32, workload: Option<WorkloadKind>) -> Transition {
+    Transition {
+        state: [0.0; STATE_DIM],
+        action: 1,
+        reward,
+        next_state: [0.0; STATE_DIM],
+        done: false,
+        workload,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn t(reward: f32) -> Transition {
+        test_transition(reward, None)
+    }
+
+    fn tw(reward: f32, kind: WorkloadKind) -> Transition {
+        test_transition(reward, Some(kind))
+    }
+
+    #[test]
+    fn ring_overwrites_oldest() {
+        let mut rb = ReplayBuffer::new(3);
+        for i in 0..5 {
+            rb.push(t(i as f32));
+        }
+        assert_eq!(rb.len(), 3);
+        assert_eq!(rb.total_seen(), 5);
+        assert_eq!(rb.latest().unwrap().reward, 4.0);
+        // Canonical order is generation order, oldest survivor first.
+        let rewards: Vec<f32> = rb.iter().map(|x| x.reward).collect();
+        assert_eq!(rewards, vec![2.0, 3.0, 4.0]);
+    }
+
+    #[test]
+    fn sample_shapes_match_artifact() {
+        let mut rb = ReplayBuffer::new(10);
+        for i in 0..4 {
+            rb.push(t(i as f32));
+        }
+        let mut rng = Rng::new(0);
+        let b = rb.sample(32, &mut rng);
+        assert!(b.validate(32, STATE_DIM, NUM_ACTIONS).is_ok());
+    }
+
+    #[test]
+    fn full_buffer_samples_without_replacement() {
+        // §5.2 bugfix pin: with len >= batch the minibatch is a subset —
+        // no transition may appear twice.
+        let mut rb = ReplayBuffer::new(64);
+        for i in 0..40 {
+            rb.push(t(i as f32));
+        }
+        let mut rng = Rng::new(7);
+        let b = rb.sample(32, &mut rng);
+        let mut rewards = b.rewards.clone();
+        rewards.sort_by(f32::total_cmp);
+        rewards.dedup();
+        assert_eq!(rewards.len(), 32, "duplicate transition in minibatch");
+    }
+
+    #[test]
+    fn warmup_buffer_still_fills_the_batch() {
+        let mut rb = ReplayBuffer::new(64);
+        for i in 0..5 {
+            rb.push(t(i as f32));
+        }
+        let mut rng = Rng::new(3);
+        let b = rb.sample(32, &mut rng);
+        assert_eq!(b.rewards.len(), 32);
+        assert!(b.rewards.iter().all(|r| (0.0..5.0).contains(r)));
+    }
+
+    #[test]
+    fn latest_across_fill_and_wrap_boundary() {
+        // Walk latest() through every phase: partial fill, the exact
+        // moment the buffer becomes full, the first eviction, and a
+        // second trip around the window.
+        let mut rb = ReplayBuffer::new(3);
+        assert!(rb.latest().is_none());
+        for i in 0..7 {
+            rb.push(t(i as f32));
+            assert_eq!(rb.latest().unwrap().reward, i as f32);
+            assert_eq!(rb.len(), (i + 1).min(3));
+        }
+        assert_eq!(rb.total_seen(), 7);
+    }
+
+    #[test]
+    fn capacity_one_ring() {
+        let mut rb = ReplayBuffer::new(1);
+        for i in 0..4 {
+            rb.push(t(i as f32));
+            assert_eq!(rb.latest().unwrap().reward, i as f32);
+            assert_eq!(rb.len(), 1);
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "empty replay")]
+    fn sample_empty_panics() {
+        let rb = ReplayBuffer::new(4);
+        let mut rng = Rng::new(0);
+        rb.sample(8, &mut rng);
+    }
+
+    #[test]
+    fn policy_kind_parse_round_trip() {
+        for kind in ReplayPolicyKind::ALL {
+            assert_eq!(ReplayPolicyKind::parse(kind.name()), Some(kind));
+            assert_eq!(ReplayPolicyKind::ALL[kind.ordinal()], kind);
+        }
+        assert_eq!(ReplayPolicyKind::parse("nope"), None);
+        assert_eq!(ReplayPolicyKind::default(), ReplayPolicyKind::Uniform);
+    }
+
+    #[test]
+    fn stratified_keeps_rare_workload_resident() {
+        // 6 slots, two workloads: a flood of LBM transitions must not
+        // evict the lone PIC transition (quota = 3 each).
+        let mut rb = ReplayBuffer::with_policy(6, ReplayPolicyKind::Stratified);
+        rb.push(tw(100.0, WorkloadKind::SkeletonPic));
+        for i in 0..50 {
+            rb.push(tw(i as f32, WorkloadKind::LatticeBoltzmann));
+        }
+        let occ = rb.occupancy();
+        assert_eq!(occ[WorkloadKind::SkeletonPic.ordinal()], 1);
+        assert_eq!(occ[WorkloadKind::LatticeBoltzmann.ordinal()], 3);
+        assert_eq!(rb.len(), 4);
+        // A plain ring under the same pushes loses PIC entirely.
+        let mut uni = ReplayBuffer::new(6);
+        uni.push(tw(100.0, WorkloadKind::SkeletonPic));
+        for i in 0..50 {
+            uni.push(tw(i as f32, WorkloadKind::LatticeBoltzmann));
+        }
+        assert_eq!(uni.occupancy()[WorkloadKind::SkeletonPic.ordinal()], 0);
+    }
+
+    #[test]
+    fn stratified_canonical_order_is_workload_then_generation() {
+        let mut rb = ReplayBuffer::with_policy(8, ReplayPolicyKind::Stratified);
+        rb.push(tw(2.0, WorkloadKind::SkeletonPic));
+        rb.push(tw(0.0, WorkloadKind::Icar));
+        rb.push(tw(3.0, WorkloadKind::SkeletonPic));
+        rb.push(t(9.0)); // unlabeled stratum sorts first
+        let rewards: Vec<f32> = rb.iter().map(|x| x.reward).collect();
+        assert_eq!(rewards, vec![9.0, 0.0, 2.0, 3.0]);
+        assert_eq!(rb.latest().unwrap().reward, 9.0);
+        assert_eq!(rb.occupancy()[WorkloadKind::Icar.ordinal()], 1);
+    }
+
+    #[test]
+    fn prioritized_prefers_large_magnitude_rewards() {
+        // One |reward| = 1.0 transition among 31 zero-reward ones: the
+        // heavy slot must be drawn far above its 1/32 uniform share.
+        let mut rb = ReplayBuffer::with_policy(64, ReplayPolicyKind::Prioritized);
+        for _ in 0..31 {
+            rb.push(t(0.0));
+        }
+        rb.push(t(-1.0));
+        let mut rng = Rng::new(5);
+        let b = rb.sample(512, &mut rng);
+        let heavy = b.rewards.iter().filter(|&&r| r == -1.0).count();
+        // Expected share = (1 + floor) / (1 + 32 * floor) ≈ 0.40 with
+        // floor = 0.05; uniform would give 16/512.
+        assert!(heavy > 100, "heavy transition drawn only {heavy}/512 times");
+    }
+
+    #[test]
+    fn prioritized_draws_are_deterministic() {
+        let mut rb = ReplayBuffer::with_policy(16, ReplayPolicyKind::Prioritized);
+        for i in 0..16 {
+            rb.push(t(i as f32 / 8.0 - 1.0));
+        }
+        let a = rb.sample(32, &mut Rng::new(42));
+        let b = rb.sample(32, &mut Rng::new(42));
+        assert_eq!(a.rewards, b.rewards);
+    }
+
+    #[test]
+    fn local_replay_without_base_is_a_plain_ring() {
+        let mut local = LocalReplay::new(3, ReplayPolicyKind::Uniform);
+        assert!(local.is_empty());
+        for i in 0..5 {
+            local.push(t(i as f32));
+        }
+        assert_eq!(local.len(), 3);
+        let rewards: Vec<f32> = (0..3).map(|i| local.get(i).reward).collect();
+        assert_eq!(rewards, vec![2.0, 3.0, 4.0]);
+    }
+
+    #[test]
+    fn local_replay_adopt_is_zero_copy_and_orders_base_before_tail() {
+        let mut hub = ReplayBuffer::new(8);
+        for i in 0..3 {
+            hub.push(t(i as f32));
+        }
+        let snapshot = Arc::new(hub);
+        let mut local = LocalReplay::new(8, ReplayPolicyKind::Uniform);
+        local.push(t(99.0)); // pre-sync tail content is dropped on adopt
+        local.adopt(Arc::clone(&snapshot));
+        assert!(Arc::ptr_eq(local.base().unwrap(), &snapshot), "adopt must share, not copy");
+        assert_eq!(Arc::strong_count(&snapshot), 2);
+        local.push(t(10.0));
+        local.push(t(11.0));
+        let rewards: Vec<f32> = (0..local.len()).map(|i| local.get(i).reward).collect();
+        assert_eq!(rewards, vec![0.0, 1.0, 2.0, 10.0, 11.0]);
+    }
+
+    #[test]
+    fn local_replay_capacity_evicts_oldest_base_entries() {
+        let mut hub = ReplayBuffer::new(4);
+        for i in 0..4 {
+            hub.push(t(i as f32));
+        }
+        let mut local = LocalReplay::new(4, ReplayPolicyKind::Uniform);
+        local.adopt(Arc::new(hub));
+        local.push(t(4.0));
+        local.push(t(5.0));
+        assert_eq!(local.len(), 4);
+        let rewards: Vec<f32> = (0..4).map(|i| local.get(i).reward).collect();
+        assert_eq!(rewards, vec![2.0, 3.0, 4.0, 5.0]);
+    }
+
+    #[test]
+    fn local_replay_stratified_window_never_drops_a_base_workload() {
+        // A full stratified base (cap 4: {pic x2, lbm x2}) plus new lbm
+        // tail pushes: truncating the canonical head would erase the
+        // first-sorted workload from the sampling window. The window
+        // overcommits instead, keeping every base workload visible.
+        let mut hub = ReplayBuffer::with_policy(4, ReplayPolicyKind::Stratified);
+        for i in 0..3 {
+            hub.push(tw(i as f32, WorkloadKind::LatticeBoltzmann));
+        }
+        for i in 0..3 {
+            hub.push(tw(10.0 + i as f32, WorkloadKind::SkeletonPic));
+        }
+        assert_eq!(hub.len(), 4); // quotas: 2 lbm + 2 pic
+        let mut local = LocalReplay::new(4, ReplayPolicyKind::Stratified);
+        local.adopt(Arc::new(hub));
+        local.push(tw(20.0, WorkloadKind::LatticeBoltzmann));
+        local.push(tw(21.0, WorkloadKind::LatticeBoltzmann));
+        assert_eq!(local.len(), 6, "stratified window overcommits by the tail length");
+        let visible: Vec<f32> = (0..local.len()).map(|i| local.get(i).reward).collect();
+        assert_eq!(visible, vec![1.0, 2.0, 11.0, 12.0, 20.0, 21.0]);
+    }
+
+    #[test]
+    fn local_replay_matches_plain_ring_sampling_bitwise() {
+        // The 1-job shared == independent contract in miniature: a base
+        // ⧺ tail window with the same logical content as a plain ring
+        // must produce the identical minibatch from the same RNG state.
+        let pushes: Vec<Transition> = (0..10).map(|i| t(i as f32)).collect();
+        let mut ring = ReplayBuffer::new(16);
+        let mut hub = ReplayBuffer::new(16);
+        for p in &pushes[..6] {
+            hub.push(p.clone());
+        }
+        let mut local = LocalReplay::new(16, ReplayPolicyKind::Uniform);
+        local.adopt(Arc::new(hub));
+        for p in &pushes {
+            ring.push(p.clone());
+        }
+        for p in &pushes[6..] {
+            local.push(p.clone());
+        }
+        let a = ring.sample(8, &mut Rng::new(17));
+        let b = local.sample(8, &mut Rng::new(17));
+        assert_eq!(a.rewards, b.rewards);
+        assert_eq!(a.states, b.states);
+    }
+}

@@ -1,0 +1,66 @@
+//! Priority-weighted selection: FIFO retention like the uniform ring,
+//! but minibatch draws are proportional to reward magnitude — a
+//! deterministic stand-in for TD-error prioritization (Schaul et al.'s
+//! PER) that needs no train-time priority feedback. Transitions whose
+//! configuration change moved the run time (|reward| large, either
+//! direction) carry the §5.2 learning signal; zero-reward transitions
+//! still get a floor weight so nothing becomes unsampleable.
+
+use super::uniform::UniformRing;
+use super::{ReplayPolicy, ReplayPolicyKind, Transition};
+
+/// Additive weight floor: a zero-reward transition's selection weight.
+/// Rewards are clamped to [-1, 1] upstream, so the floor gives the
+/// least-informative transition 5% of the weight of the most
+/// informative one.
+pub const PRIORITY_FLOOR: f64 = 0.05;
+
+/// Reward-magnitude proportional selection over FIFO retention.
+///
+/// Retention *is* a [`UniformRing`] (delegated, not duplicated, so the
+/// two policies cannot drift apart); only the selection pricing
+/// differs.
+#[derive(Debug, Clone)]
+pub struct PrioritizedSampler {
+    ring: UniformRing,
+}
+
+impl PrioritizedSampler {
+    pub fn new(capacity: usize) -> PrioritizedSampler {
+        PrioritizedSampler { ring: UniformRing::new(capacity) }
+    }
+}
+
+impl ReplayPolicy for PrioritizedSampler {
+    fn kind(&self) -> ReplayPolicyKind {
+        ReplayPolicyKind::Prioritized
+    }
+
+    fn capacity(&self) -> usize {
+        self.ring.capacity()
+    }
+
+    fn push(&mut self, t: Transition) {
+        self.ring.push(t);
+    }
+
+    fn len(&self) -> usize {
+        self.ring.len()
+    }
+
+    fn get(&self, i: usize) -> &Transition {
+        self.ring.get(i)
+    }
+
+    fn latest(&self) -> Option<&Transition> {
+        self.ring.latest()
+    }
+
+    fn weight(&self, i: usize) -> f64 {
+        self.ring.get(i).reward.abs() as f64 + PRIORITY_FLOOR
+    }
+
+    fn weighted(&self) -> bool {
+        true
+    }
+}

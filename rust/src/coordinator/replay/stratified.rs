@@ -1,0 +1,145 @@
+//! Workload-stratified retention: the global capacity is divided into
+//! per-[`WorkloadKind`] slot quotas so a rare workload's experience
+//! survives eviction even when a common workload floods the buffer.
+//! Wickramasinghe & Lumsdaine's survey point — tuning quality hinges on
+//! which measurements the learner *retains* across heterogeneous
+//! workloads — is exactly the failure mode of a plain FIFO ring in the
+//! hub's global buffer: shards are appended in job order, so whichever
+//! jobs merged last own the entire resident window.
+//!
+//! Selection stays uniform over what is retained; stratification is a
+//! retention policy, not an importance model.
+
+use std::collections::{BTreeMap, VecDeque};
+
+use crate::workloads::WorkloadKind;
+
+use super::{ReplayPolicy, ReplayPolicyKind, Transition};
+
+/// Stratum key: the generating workload, `None` for synthetic-model
+/// transitions. `Option<WorkloadKind>` is `Ord` (None first, then
+/// declaration order), which fixes the canonical iteration order.
+type Stratum = Option<WorkloadKind>;
+
+/// Per-workload sub-rings under a shared capacity.
+///
+/// Quotas are recomputed whenever a new stratum appears:
+/// `quota = max(1, capacity / strata)`, and every sub-ring is trimmed
+/// (oldest first) to the new quota. The `max(1, ·)` floor means a
+/// represented workload **never** loses its newest transition — even if
+/// that overcommits a buffer smaller than the stratum count (pinned by
+/// the property tests; the hub's capacities are far above
+/// [`WorkloadKind::COUNT`] in practice).
+#[derive(Debug, Clone)]
+pub struct StratifiedRing {
+    capacity: usize,
+    strata: BTreeMap<Stratum, VecDeque<Transition>>,
+    /// Stratum of the most recent push (for `latest`).
+    last: Option<Stratum>,
+}
+
+impl StratifiedRing {
+    pub fn new(capacity: usize) -> StratifiedRing {
+        assert!(capacity > 0);
+        StratifiedRing { capacity, strata: BTreeMap::new(), last: None }
+    }
+
+    /// Current per-stratum slot quota.
+    pub fn quota(&self) -> usize {
+        (self.capacity / self.strata.len().max(1)).max(1)
+    }
+}
+
+impl ReplayPolicy for StratifiedRing {
+    fn kind(&self) -> ReplayPolicyKind {
+        ReplayPolicyKind::Stratified
+    }
+
+    fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    fn push(&mut self, t: Transition) {
+        let stratum = t.workload;
+        if let std::collections::btree_map::Entry::Vacant(slot) = self.strata.entry(stratum) {
+            slot.insert(VecDeque::new());
+            // A new stratum shrinks everyone's quota: trim oldest-first
+            // so the steady-state invariant (every sub-ring ≤ quota)
+            // holds before the insert below.
+            let quota = self.quota();
+            for ring in self.strata.values_mut() {
+                while ring.len() > quota {
+                    ring.pop_front();
+                }
+            }
+        }
+        let quota = self.quota();
+        let ring = self.strata.get_mut(&stratum).expect("stratum present after entry check");
+        while ring.len() >= quota {
+            ring.pop_front();
+        }
+        ring.push_back(t);
+        self.last = Some(stratum);
+    }
+
+    fn len(&self) -> usize {
+        self.strata.values().map(|r| r.len()).sum()
+    }
+
+    /// Canonical order: strata in key order (unlabeled first, then
+    /// workload declaration order), each in generation order.
+    fn get(&self, mut i: usize) -> &Transition {
+        for ring in self.strata.values() {
+            if i < ring.len() {
+                return &ring[i];
+            }
+            i -= ring.len();
+        }
+        panic!("stratified replay index {i} out of bounds");
+    }
+
+    fn latest(&self) -> Option<&Transition> {
+        self.strata.get(&self.last?).and_then(|r| r.back())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::test_transition;
+    use super::*;
+
+    #[test]
+    fn quota_shrinks_as_strata_appear_and_floors_at_one() {
+        let mut rb = StratifiedRing::new(4);
+        assert_eq!(rb.quota(), 4);
+        for (i, kind) in WorkloadKind::ALL.iter().enumerate() {
+            rb.push(test_transition(i as f32, Some(*kind)));
+        }
+        // 7 strata in a 4-slot buffer: quota floors at 1, every
+        // workload keeps exactly its newest transition.
+        assert_eq!(rb.quota(), 1);
+        assert_eq!(rb.len(), WorkloadKind::COUNT);
+        for kind in WorkloadKind::ALL {
+            let resident: Vec<f32> = (0..rb.len())
+                .map(|i| rb.get(i))
+                .filter(|t| t.workload == Some(kind))
+                .map(|t| t.reward)
+                .collect();
+            assert_eq!(resident, vec![kind.ordinal() as f32]);
+        }
+    }
+
+    #[test]
+    fn new_stratum_trims_existing_rings_oldest_first() {
+        let mut rb = StratifiedRing::new(4);
+        for i in 0..4 {
+            rb.push(test_transition(i as f32, Some(WorkloadKind::Icar)));
+        }
+        assert_eq!(rb.len(), 4);
+        rb.push(test_transition(100.0, Some(WorkloadKind::CloverLeaf)));
+        // Quota drops to 2: Icar keeps its newest two, CloverLeaf one.
+        let rewards: Vec<f32> = (0..rb.len()).map(|i| rb.get(i).reward).collect();
+        assert_eq!(rewards, vec![2.0, 3.0, 100.0]);
+        assert_eq!(rb.latest().unwrap().reward, 100.0);
+    }
+}

@@ -1,0 +1,50 @@
+//! The paper's §5.2 baseline policy: a FIFO ring with uniform
+//! selection.
+
+use std::collections::VecDeque;
+
+use super::{ReplayPolicy, ReplayPolicyKind, Transition};
+
+/// Bounded FIFO ring; canonical order is generation order (oldest
+/// surviving transition first), so eviction is always `pop_front`.
+#[derive(Debug, Clone)]
+pub struct UniformRing {
+    buf: VecDeque<Transition>,
+    capacity: usize,
+}
+
+impl UniformRing {
+    pub fn new(capacity: usize) -> UniformRing {
+        assert!(capacity > 0);
+        UniformRing { buf: VecDeque::with_capacity(capacity), capacity }
+    }
+}
+
+impl ReplayPolicy for UniformRing {
+    fn kind(&self) -> ReplayPolicyKind {
+        ReplayPolicyKind::Uniform
+    }
+
+    fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    fn push(&mut self, t: Transition) {
+        if self.buf.len() == self.capacity {
+            self.buf.pop_front();
+        }
+        self.buf.push_back(t);
+    }
+
+    fn len(&self) -> usize {
+        self.buf.len()
+    }
+
+    fn get(&self, i: usize) -> &Transition {
+        &self.buf[i]
+    }
+
+    fn latest(&self) -> Option<&Transition> {
+        self.buf.back()
+    }
+}

@@ -103,7 +103,7 @@ impl Agent for TabularAgent {
     }
 
     fn sync(&mut self, view: &HubView) -> Result<()> {
-        match &view.master {
+        match view.master.as_deref() {
             None => Ok(()),
             Some(AgentState::Table(entries)) => {
                 self.q = entries.iter().map(|&(k, v)| (k, v)).collect();
@@ -173,13 +173,17 @@ mod tests {
         let mut b = TabularAgent::new();
         let view = HubView {
             round: 1,
-            master: Some(snap),
-            replay: crate::coordinator::ReplayBuffer::new(4),
+            master: Some(std::sync::Arc::new(snap)),
+            replay: std::sync::Arc::new(crate::coordinator::ReplayBuffer::new(4)),
         };
         b.sync(&view).unwrap();
         assert_eq!(a.q_values(&s).unwrap(), b.q_values(&s).unwrap());
         // Round-0 view (no master) is a no-op, not an error.
-        let empty = HubView { round: 0, master: None, replay: crate::coordinator::ReplayBuffer::new(4) };
+        let empty = HubView {
+            round: 0,
+            master: None,
+            replay: std::sync::Arc::new(crate::coordinator::ReplayBuffer::new(4)),
+        };
         b.sync(&empty).unwrap();
         assert_eq!(a.q_values(&s).unwrap(), b.q_values(&s).unwrap());
     }

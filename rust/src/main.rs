@@ -17,7 +17,9 @@ use aituning::campaign::{
     ablation_table, job_grid, CampaignConfig, CampaignEngine, CampaignJob, EvalSpec,
 };
 use aituning::convergence::{run_convergence, ConvergenceConfig, SyntheticModel};
-use aituning::coordinator::{run_episode, AgentKind, Controller, SharedLearning, TuningConfig};
+use aituning::coordinator::{
+    run_episode, AgentKind, Controller, ReplayPolicyKind, SharedLearning, TuningConfig,
+};
 use aituning::mpi_t::{CvarId, CvarSet, MpichRegistry, VariableRegistry};
 use aituning::simmpi::Machine;
 use aituning::util::args::Args;
@@ -30,16 +32,21 @@ fn usage() -> ! {
 USAGE:
   aituning tune        --workload icar --images 256 [--runs 20] [--agent dqn|tabular]
                        [--machine cheyenne|edison] [--seed N] [--noise F]
+                       [--replay uniform|stratified|prioritized]
   aituning run         --workload icar --images 64 [--cvar NAME=VALUE,NAME=VALUE]
   aituning campaign    [--images 64,128,256] [--runs-per 20] [--agent dqn|tabular]
                        [--machine cheyenne|edison|both] [--workers N]  (0 = one per core)
+                       [--replay uniform|stratified|prioritized]  (replay retention/
+                       selection policy; stratified keeps rare workloads resident in
+                       the shared hub buffer)
                        [--shared] [--sync-every 5]  (--shared couples the jobs through
                        the LearnerHub and reports the independent-vs-shared ablation)
   aituning convergence [--model parabola|coupled|bool] [--noise 0.3] [--runs 400]
   aituning sweep       --cvar MPIR_CVAR_POLLS_BEFORE_YIELD --values 200,1000,1500
                        --workload icar --images 512 [--base async] [--workers N]
-                       [--machine cheyenne|edison|both]
+                       [--machine cheyenne|edison|both] [--replay uniform|stratified|prioritized]
   aituning baselines   --workload icar --images 256 [--budget 20] [--workers N]
+                       [--replay uniform|stratified|prioritized]
 "
     );
     std::process::exit(2);
@@ -80,6 +87,15 @@ fn parse_machines(args: &Args) -> Result<Vec<Machine>> {
     }
 }
 
+/// `--replay uniform|stratified|prioritized` — replay retention and
+/// minibatch-selection policy (controller buffers and, under
+/// `--shared`, the hub's global buffer).
+fn parse_replay(args: &Args) -> Result<ReplayPolicyKind> {
+    let name = args.get_or("replay", "uniform");
+    ReplayPolicyKind::parse(name)
+        .with_context(|| format!("unknown replay policy {name:?} (uniform|stratified|prioritized)"))
+}
+
 fn parse_agent(args: &Args) -> Result<AgentKind> {
     match args.get_or("agent", "dqn") {
         "dqn" => Ok(AgentKind::Dqn),
@@ -96,6 +112,7 @@ fn tuning_config(args: &Args) -> Result<TuningConfig> {
         runs: args.usize_or("runs", 20)?,
         noise: args.f64_or("noise", 0.02)?,
         seed: args.u64_or("seed", 0)?,
+        replay_policy: parse_replay(args)?,
         ..TuningConfig::default()
     })
 }
@@ -186,6 +203,7 @@ fn cmd_campaign(args: &Args) -> Result<()> {
         runs: args.usize_or("runs-per", 20)?,
         noise: args.f64_or("noise", 0.02)?,
         seed: args.u64_or("seed", 0)?,
+        replay_policy: parse_replay(args)?,
         ..TuningConfig::default()
     };
     if shared_mode {
@@ -316,6 +334,7 @@ fn cmd_sweep(args: &Args) -> Result<()> {
             machine: machines[0].clone(),
             noise: args.f64_or("noise", 0.02)?,
             seed: args.u64_or("seed", 42)?,
+            replay_policy: parse_replay(args)?,
             ..TuningConfig::default()
         },
         workers: args.usize_or("workers", 0)?,

@@ -22,13 +22,23 @@ impl Default for Summary {
 
 impl Summary {
     /// Summarize a sample; empty samples give the zero summary.
+    ///
+    /// `std` is the *sample* standard deviation (Bessel-corrected,
+    /// `/ (n - 1)`): per-run pvar samples are small, and the population
+    /// form systematically understated the spread in the state features
+    /// fed to the agent. A single observation has no spread estimate and
+    /// reports 0.0.
     pub fn of(values: &[f64]) -> Summary {
         if values.is_empty() {
             return Summary::default();
         }
         let n = values.len() as f64;
         let mean = values.iter().sum::<f64>() / n;
-        let var = values.iter().map(|v| (v - mean) * (v - mean)).sum::<f64>() / n;
+        let var = if values.len() < 2 {
+            0.0
+        } else {
+            values.iter().map(|v| (v - mean) * (v - mean)).sum::<f64>() / (n - 1.0)
+        };
         let mut sorted: Vec<f64> = values.to_vec();
         sorted.sort_by(|a, b| a.total_cmp(b));
         let median = if sorted.len() % 2 == 1 {
@@ -47,11 +57,21 @@ impl Summary {
     }
 }
 
-/// Median of a sample (used by ensemble inference, §5.4).
+/// Median of an integer sample (used by ensemble inference, §5.4).
+///
+/// For an even-length sample this returns the **lower** of the two
+/// middle elements — never a midpoint average. The callers feed cvar
+/// values through here, and averaging two legal cvar settings can
+/// fabricate a value no run ever executed (e.g. a power-of-two eager
+/// threshold halfway between two tested thresholds); `Summary::of`
+/// keeps the averaged even median because f64 metrics have no such
+/// legality constraint. (The previous `values[len / 2]` took the
+/// *upper* middle, so even-sized §5.4 ensembles systematically shipped
+/// the larger cvar value.)
 pub fn median_i64(values: &mut Vec<i64>) -> i64 {
     assert!(!values.is_empty(), "median of empty sample");
     values.sort_unstable();
-    values[values.len() / 2]
+    values[(values.len() - 1) / 2]
 }
 
 /// Geometric mean (used for cross-workload campaign reporting).
@@ -74,6 +94,17 @@ mod tests {
         assert_eq!(s.max, 4.0);
         assert_eq!(s.median, 2.5);
         assert!((s.mean - 2.5).abs() < 1e-12);
+        // Sample (Bessel-corrected) std: var = 5/3 for this sample.
+        assert!((s.std - (5.0f64 / 3.0).sqrt()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn single_observation_has_zero_std() {
+        // n == 1 carries no spread information; with Bessel's n - 1
+        // divisor it must report 0.0, not NaN.
+        let s = Summary::of(&[42.0]);
+        assert_eq!(s.std, 0.0);
+        assert_eq!(s.mean, 42.0);
     }
 
     #[test]
@@ -85,6 +116,12 @@ mod tests {
     fn median_odd_even() {
         assert_eq!(Summary::of(&[1.0, 2.0, 9.0]).median, 2.0);
         assert_eq!(median_i64(&mut vec![5, 1, 3]), 3);
+        // Even length: f64 summaries average the middles; the integer
+        // median takes the LOWER middle (an observed value, never a
+        // fabricated midpoint).
+        assert_eq!(Summary::of(&[1.0, 2.0, 3.0, 9.0]).median, 2.5);
+        assert_eq!(median_i64(&mut vec![9, 1, 3, 2]), 2);
+        assert_eq!(median_i64(&mut vec![7, 7]), 7);
     }
 
     #[test]

@@ -22,7 +22,12 @@ pub trait Workload {
 }
 
 /// Enumeration of the built-in workloads (CLI/bench selection).
-#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+///
+/// `Ord` follows declaration order and is load-bearing for the
+/// deterministic iteration of workload-stratified replay buffers
+/// ([`crate::coordinator::StratifiedRing`]); [`WorkloadKind::ordinal`]
+/// is the matching dense index into [`WorkloadKind::ALL`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
 pub enum WorkloadKind {
     Icar,
     CloverLeaf,
@@ -52,6 +57,18 @@ impl WorkloadKind {
         WorkloadKind::SkeletonPic,
         WorkloadKind::PrkTranspose,
     ];
+
+    /// Number of built-in workloads (`ALL.len()` as a usable const).
+    pub const COUNT: usize = WorkloadKind::ALL.len();
+
+    /// Dense index of this kind in [`WorkloadKind::ALL`] — the slot key
+    /// for per-workload occupancy arrays and replay digests.
+    pub fn ordinal(self) -> usize {
+        WorkloadKind::ALL
+            .iter()
+            .position(|&k| k == self)
+            .expect("every WorkloadKind is listed in ALL")
+    }
 
     pub fn parse(s: &str) -> Option<WorkloadKind> {
         match s.to_ascii_lowercase().as_str() {
@@ -116,6 +133,17 @@ mod tests {
             assert_eq!(WorkloadKind::parse(kind.name()), Some(kind));
         }
         assert_eq!(WorkloadKind::parse("nope"), None);
+    }
+
+    #[test]
+    fn ordinal_indexes_all_and_ord_matches_declaration() {
+        assert_eq!(WorkloadKind::COUNT, WorkloadKind::ALL.len());
+        for (i, kind) in WorkloadKind::ALL.iter().enumerate() {
+            assert_eq!(kind.ordinal(), i);
+        }
+        // Ord (used by stratified replay's BTreeMap walk) agrees with
+        // the ordinal ordering.
+        assert!(WorkloadKind::ALL.windows(2).all(|w| w[0] < w[1]));
     }
 
     #[test]

@@ -2,13 +2,14 @@
 //! (in-crate `util::prop` harness; seeds reproduce failures).
 
 use aituning::coordinator::{build_state, Action, RelativeTracker, NUM_ACTIONS, STATE_DIM};
-use aituning::coordinator::{ReplayBuffer, Transition};
+use aituning::coordinator::{ReplayBuffer, ReplayPolicyKind, Transition};
 use aituning::metrics::stats::Summary;
 use aituning::mpi_t::{CvarDomain, CvarId, CvarSet, PvarId, PvarStats, MPICH_CVARS, NUM_CVARS};
 use aituning::prop_assert;
 use aituning::simmpi::{Engine, Machine, Op, SimConfig};
 use aituning::util::prop::forall;
 use aituning::util::rng::Rng;
+use aituning::workloads::WorkloadKind;
 
 fn random_cvars(rng: &mut Rng) -> CvarSet {
     let mut cv = CvarSet::vanilla();
@@ -90,24 +91,37 @@ fn prop_state_features_always_finite_and_bounded() {
     });
 }
 
+fn random_transition(rng: &mut Rng, workload: Option<WorkloadKind>) -> Transition {
+    let mut state = [0.0f32; STATE_DIM];
+    state[0] = rng.f64() as f32;
+    Transition {
+        state,
+        action: rng.below(NUM_ACTIONS as u64) as usize,
+        reward: rng.range_f64(-1.0, 1.0) as f32,
+        next_state: state,
+        done: rng.chance(0.1),
+        workload,
+    }
+}
+
 #[test]
 fn prop_replay_sample_always_well_formed() {
     forall("replay batch shape", 128, |rng| {
         let cap = rng.range_i64(1, 64) as usize;
-        let mut rb = ReplayBuffer::new(cap);
+        let policy = ReplayPolicyKind::ALL[rng.below(ReplayPolicyKind::ALL.len() as u64) as usize];
+        let mut rb = ReplayBuffer::with_policy(cap, policy);
         let n = rng.range_i64(1, 100) as usize;
         for _ in 0..n {
-            let mut state = [0.0f32; STATE_DIM];
-            state[0] = rng.f64() as f32;
-            rb.push(Transition {
-                state,
-                action: rng.below(NUM_ACTIONS as u64) as usize,
-                reward: rng.range_f64(-1.0, 1.0) as f32,
-                next_state: state,
-                done: rng.chance(0.1),
-            });
+            let workload = if rng.chance(0.5) {
+                Some(WorkloadKind::ALL[rng.below(WorkloadKind::COUNT as u64) as usize])
+            } else {
+                None
+            };
+            rb.push(random_transition(rng, workload));
         }
-        prop_assert!(rb.len() == n.min(cap), "ring size wrong");
+        if policy != ReplayPolicyKind::Stratified {
+            prop_assert!(rb.len() == n.min(cap), "ring size wrong");
+        }
         let batch = rb.sample(32, rng);
         prop_assert!(
             batch.validate(32, STATE_DIM, NUM_ACTIONS).is_ok(),
@@ -119,6 +133,92 @@ fn prop_replay_sample_always_well_formed() {
             let sum: f32 = row.iter().sum();
             prop_assert!((sum - 1.0).abs() < 1e-6, "row {i} one-hot sum {sum}");
         }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_uniform_full_batch_samples_without_replacement() {
+    // §5.2 bugfix invariant: whenever the buffer holds at least `batch`
+    // transitions, the minibatch is a *subset* — no duplicates.
+    forall("replay subset sampling", 128, |rng| {
+        let n = rng.range_i64(32, 200) as usize;
+        let mut rb = ReplayBuffer::new(n.max(32));
+        for i in 0..n {
+            // Unique rewards let duplicates be detected downstream.
+            let mut t = random_transition(rng, None);
+            t.reward = i as f32;
+            rb.push(t);
+        }
+        let batch = rb.sample(32, rng);
+        let mut rewards = batch.rewards.clone();
+        rewards.sort_by(f32::total_cmp);
+        rewards.dedup();
+        prop_assert!(rewards.len() == 32, "minibatch drew a transition twice");
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_stratified_never_evicts_a_represented_workloads_last_transition() {
+    forall("stratified retention floor", 128, |rng| {
+        let cap = rng.range_i64(1, 32) as usize;
+        let mut rb = ReplayBuffer::with_policy(cap, ReplayPolicyKind::Stratified);
+        let mut represented = std::collections::BTreeSet::new();
+        let n = rng.range_i64(1, 200) as usize;
+        for _ in 0..n {
+            let kind = WorkloadKind::ALL[rng.below(WorkloadKind::COUNT as u64) as usize];
+            represented.insert(kind);
+            rb.push(random_transition(rng, Some(kind)));
+        }
+        let occupancy = rb.occupancy();
+        for kind in &represented {
+            prop_assert!(
+                occupancy[kind.ordinal()] >= 1,
+                "workload {} evicted entirely (cap {cap})",
+                kind.name()
+            );
+        }
+        // Capacity is respected up to the one-slot-per-stratum floor.
+        prop_assert!(
+            rb.len() <= cap.max(represented.len()),
+            "resident {} exceeds cap {cap} with {} strata",
+            rb.len(),
+            represented.len()
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_prioritized_selection_is_deterministic_and_reward_weighted() {
+    forall("prioritized determinism", 64, |rng| {
+        // One |reward| = 1.0 transition among n zero-reward ones.
+        let n = rng.range_i64(4, 64) as usize;
+        let heavy_at = rng.below(n as u64 + 1) as usize;
+        let mut rb = ReplayBuffer::with_policy(128, ReplayPolicyKind::Prioritized);
+        for i in 0..=n {
+            let mut t = random_transition(rng, None);
+            t.reward = if i == heavy_at { 1.0 } else { 0.0 };
+            rb.push(t);
+        }
+        // Identical RNG state => bit-identical draw (the worker-count
+        // invariance argument for prioritized hubs, in miniature).
+        let seed = rng.next_u64();
+        let a = rb.sample(256, &mut Rng::new(seed));
+        let b = rb.sample(256, &mut Rng::new(seed));
+        prop_assert!(a.rewards == b.rewards, "same seed drew different batches");
+        prop_assert!(a.states == b.states, "same seed drew different batches");
+        // Reward weighting: the heavy slot's expected share is
+        // (1 + floor) / (1 + (n + 1) * floor) with floor = 0.05, which
+        // is >= 0.25 for n <= 63 — demand at least the uniform share
+        // 256 / (n + 1), far below expectation but well above flukes.
+        let heavy = a.rewards.iter().filter(|&&r| r == 1.0).count();
+        prop_assert!(
+            heavy > 256 / (n + 1),
+            "heavy transition drawn {heavy}/256 with {} resident",
+            n + 1
+        );
         Ok(())
     });
 }

@@ -4,7 +4,7 @@
 //! accounting, and an independent-vs-shared convergence smoke test.
 
 use aituning::campaign::{job_grid, CampaignConfig, CampaignEngine, CampaignJob, CampaignReport};
-use aituning::coordinator::{AgentKind, Controller, SharedLearning, TuningConfig};
+use aituning::coordinator::{AgentKind, Controller, ReplayPolicyKind, SharedLearning, TuningConfig};
 use aituning::simmpi::Machine;
 use aituning::workloads::WorkloadKind;
 
@@ -20,7 +20,17 @@ fn base_cfg(runs: usize, sync_every: usize) -> TuningConfig {
 }
 
 fn shared_engine(runs: usize, sync_every: usize, workers: usize) -> CampaignEngine {
-    CampaignEngine::new(CampaignConfig { base: base_cfg(runs, sync_every), workers })
+    shared_engine_with_policy(runs, sync_every, workers, ReplayPolicyKind::Uniform)
+}
+
+fn shared_engine_with_policy(
+    runs: usize,
+    sync_every: usize,
+    workers: usize,
+    replay_policy: ReplayPolicyKind,
+) -> CampaignEngine {
+    let base = TuningConfig { replay_policy, ..base_cfg(runs, sync_every) };
+    CampaignEngine::new(CampaignConfig { base, workers })
 }
 
 fn small_grid() -> Vec<CampaignJob> {
@@ -49,17 +59,33 @@ fn assert_reports_bit_identical(a: &CampaignReport, b: &CampaignReport) {
 }
 
 #[test]
-fn shared_campaign_identical_at_1_2_and_4_workers() {
+fn shared_campaign_identical_at_1_2_and_4_workers_under_every_replay_policy() {
+    // The tentpole determinism contract, per policy: worker count must
+    // never leak into the trajectories, the hub state or the resident
+    // replay set — for uniform, stratified and prioritized retention
+    // alike.
     let jobs = small_grid();
     assert_eq!(jobs.len(), 4);
-    let w1 = shared_engine(8, 2, 1).run_shared(&jobs).unwrap();
-    let w2 = shared_engine(8, 2, 2).run_shared(&jobs).unwrap();
-    let w4 = shared_engine(8, 2, 4).run_shared(&jobs).unwrap();
-    assert_eq!(w1.workers, 1);
-    assert_eq!(w2.workers, 2);
-    assert_eq!(w4.workers, 4);
-    assert_reports_bit_identical(&w1, &w2);
-    assert_reports_bit_identical(&w1, &w4);
+    let mut fingerprints = Vec::new();
+    for policy in ReplayPolicyKind::ALL {
+        let w1 = shared_engine_with_policy(8, 2, 1, policy).run_shared(&jobs).unwrap();
+        let w2 = shared_engine_with_policy(8, 2, 2, policy).run_shared(&jobs).unwrap();
+        let w4 = shared_engine_with_policy(8, 2, 4, policy).run_shared(&jobs).unwrap();
+        assert_eq!(w1.workers, 1);
+        assert_eq!(w2.workers, 2);
+        assert_eq!(w4.workers, 4);
+        assert_reports_bit_identical(&w1, &w2);
+        assert_reports_bit_identical(&w1, &w4);
+        assert_eq!(w1.hub.unwrap().policy, policy);
+        fingerprints.push(w1.fingerprint());
+    }
+    // The policies really are different subsystems: selection order
+    // (prioritized) and retention (stratified under pressure) change
+    // trajectories, and at minimum the fingerprint's policy tag splits
+    // them.
+    fingerprints.sort_unstable();
+    fingerprints.dedup();
+    assert_eq!(fingerprints.len(), ReplayPolicyKind::ALL.len());
 }
 
 #[test]
@@ -108,6 +134,43 @@ fn hub_accounting_matches_campaign_shape() {
     assert_eq!(hub.total_transitions, jobs.len() * runs);
     assert_eq!(hub.replay_len, jobs.len() * runs, "capacity not exceeded: nothing evicted");
     assert_eq!(report.total_app_runs(), jobs.len() * (runs + 1));
+    // Occupancy accounts for every resident transition: 2 jobs per
+    // workload x `runs` transitions each.
+    assert_eq!(hub.occupancy.iter().sum::<usize>(), hub.replay_len);
+    assert_eq!(hub.occupancy[WorkloadKind::LatticeBoltzmann.ordinal()], 2 * runs);
+    assert_eq!(hub.occupancy[WorkloadKind::SkeletonPic.ordinal()], 2 * runs);
+}
+
+#[test]
+fn stratified_hub_keeps_every_workload_resident_after_eviction() {
+    // Acceptance pin: a tiny 4-slot hub buffer under a 32-transition
+    // campaign. Shards merge in job order (lbm@4, lbm@8, pic@4, pic@8
+    // each round), so a uniform ring's resident window is whatever
+    // merged last — skeleton_pic only. Stratified quotas (4 / 2 = 2 per
+    // workload) must keep both workloads resident, bit-identically at
+    // any worker count.
+    let jobs = small_grid();
+    let run_with = |policy, workers| {
+        let base = TuningConfig { replay_capacity: 4, replay_policy: policy, ..base_cfg(8, 2) };
+        CampaignEngine::new(CampaignConfig { base, workers }).run_shared(&jobs).unwrap()
+    };
+
+    let stratified = run_with(ReplayPolicyKind::Stratified, 2);
+    let hub = stratified.hub.unwrap();
+    assert_eq!(hub.total_transitions, 32, "eviction must actually be exercised");
+    assert_eq!(hub.replay_len, 4);
+    let lbm = hub.occupancy[WorkloadKind::LatticeBoltzmann.ordinal()];
+    let pic = hub.occupancy[WorkloadKind::SkeletonPic.ordinal()];
+    assert_eq!((lbm, pic), (2, 2), "stratified quotas keep every workload resident");
+    assert_reports_bit_identical(&stratified, &run_with(ReplayPolicyKind::Stratified, 1));
+
+    let uniform = run_with(ReplayPolicyKind::Uniform, 2).hub.unwrap();
+    assert_eq!(
+        uniform.occupancy[WorkloadKind::LatticeBoltzmann.ordinal()],
+        0,
+        "FIFO retention starves the earlier-merged workload (the deferred ROADMAP bug)"
+    );
+    assert_eq!(uniform.occupancy[WorkloadKind::SkeletonPic.ordinal()], 4);
 }
 
 #[test]
