@@ -39,7 +39,10 @@ fn main() -> anyhow::Result<()> {
             format!("{:.0}", r.total_time_us),
             format!("{:+.4}", r.reward),
             r.action
-                .map(|a| Action::from_index(a).describe())
+                .map(|a| {
+                    let table = aituning::mpi_t::MPICH_CVARS;
+                    Action::from_index(table, a).describe(table)
+                })
                 .unwrap_or_else(|| "reference (vanilla MPICH)".into()),
         ]);
     }

@@ -58,7 +58,14 @@ fn main() -> anyhow::Result<()> {
         replay_policy,
         ..TuningConfig::default()
     };
-    let jobs = job_grid(&machines, &WorkloadKind::TRAINING, image_counts, agent, base.seed);
+    let jobs = job_grid(
+        aituning::backend::BackendId::Coarrays,
+        &machines,
+        &WorkloadKind::TRAINING,
+        image_counts,
+        agent,
+        base.seed,
+    );
     let engine = CampaignEngine::new(CampaignConfig { base, workers: 0 });
 
     if shared_mode {

@@ -46,6 +46,7 @@ fn main() -> anyhow::Result<()> {
     let jobs: Vec<CampaignJob> = agents
         .iter()
         .map(|&(_, agent)| CampaignJob {
+            backend: aituning::backend::BackendId::Coarrays,
             machine: base.machine.name,
             workload: kind,
             images,
@@ -107,6 +108,7 @@ fn main() -> anyhow::Result<()> {
     if have_artifacts && !quick {
         let report = CampaignEngine::new(CampaignConfig { base: base.clone(), workers: 1 })
             .run(&[CampaignJob {
+                backend: aituning::backend::BackendId::Coarrays,
                 machine: base.machine.name,
                 workload: kind,
                 images,
@@ -129,6 +131,7 @@ fn main() -> anyhow::Result<()> {
             workers: 1,
         });
         let report = variant.run(&[CampaignJob {
+            backend: aituning::backend::BackendId::Coarrays,
             machine: base.machine.name,
             workload: kind,
             images,

@@ -13,6 +13,7 @@
 //! the replay-policy ablation compares uniform / stratified /
 //! prioritized retention (resident occupancy + per-merge-round cost).
 
+use aituning::backend::BackendId;
 use aituning::campaign::{ablation_table, job_grid, CampaignConfig, CampaignEngine};
 use aituning::coordinator::{AgentKind, ReplayPolicyKind, SharedLearning, TuningConfig};
 use aituning::simmpi::Machine;
@@ -47,7 +48,14 @@ fn main() -> anyhow::Result<()> {
         shared: Some(SharedLearning { sync_every: if quick { 2 } else { 5 } }),
         ..TuningConfig::default()
     };
-    let jobs = job_grid(&machines, &WorkloadKind::TRAINING, image_counts, agent, base.seed);
+    let jobs = job_grid(
+        BackendId::Coarrays,
+        &machines,
+        &WorkloadKind::TRAINING,
+        image_counts,
+        agent,
+        base.seed,
+    );
 
     // --- independent mode: serial vs parallel, bit-identical ---
     let serial =
@@ -126,6 +134,60 @@ fn main() -> anyhow::Result<()> {
     println!("\n=== replay-policy ablation (shared mode, {} workers) ===", shared_parallel.workers);
     ablation.print();
 
+    // --- backend ablation: the same campaign machinery over the second
+    // tunable runtime (MPI collective-algorithm selection). The tabular
+    // agent sizes itself from the backend's derived action space (14
+    // actions incl. the enumerated algorithm selects), and the 1-vs-N
+    // fingerprint identity must hold for this backend exactly as it
+    // does for coarrays. ---
+    let coll_images: &[usize] = if quick { &[16, 32] } else { &[32, 64, 128] };
+    let coll_base = TuningConfig {
+        machine: machines[0].clone(),
+        backend: BackendId::Collectives,
+        agent: AgentKind::Tabular, // AOT artifacts are coarrays-shaped
+        runs: runs_per,
+        seed: 5,
+        ..TuningConfig::default()
+    };
+    let coll_jobs = job_grid(
+        BackendId::Collectives,
+        &machines,
+        BackendId::Collectives.runtime().training_workloads(),
+        coll_images,
+        coll_base.agent,
+        coll_base.seed,
+    );
+    let coll_serial = CampaignEngine::new(CampaignConfig { base: coll_base.clone(), workers: 1 })
+        .run(&coll_jobs)?;
+    let coll_parallel = CampaignEngine::new(CampaignConfig { base: coll_base.clone(), workers: 0 })
+        .run(&coll_jobs)?;
+    assert_eq!(
+        coll_serial.fingerprint(),
+        coll_parallel.fingerprint(),
+        "collectives campaign must be bit-identical at 1 and {} workers",
+        coll_parallel.workers
+    );
+    let mut backend_table = Table::new(&[
+        "backend", "cells", "geomean speedup", "best cell", "wall clock",
+    ]);
+    for (name, report) in
+        [("coarrays", &parallel), ("collectives", &coll_parallel)]
+    {
+        let best = report
+            .improvements()
+            .into_iter()
+            .fold(f64::NEG_INFINITY, f64::max);
+        backend_table.row(vec![
+            name.to_string(),
+            report.results.len().to_string(),
+            format!("{:.3}x", report.geomean_speedup()),
+            format!("{:+.1}%", best * 100.0),
+            format!("{:.2}s", report.wall_clock.as_secs_f64()),
+        ]);
+    }
+    println!("\n=== backend ablation (--backend coarrays vs collectives) ===");
+    backend_table.print();
+
     // --- engine scaling (results verified bit-identical above) ---
     let mut timing = Table::new(&["mode", "jobs", "1 worker", "all cores", "speedup"]);
     for (mode, s1, sn, w) in [
@@ -149,6 +211,8 @@ fn main() -> anyhow::Result<()> {
         serial.total_app_runs() + parallel.total_app_runs()
             + shared_serial.total_app_runs()
             + shared_parallel.total_app_runs()
+            + coll_serial.total_app_runs()
+            + coll_parallel.total_app_runs()
     );
     Ok(())
 }

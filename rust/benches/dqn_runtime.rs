@@ -40,10 +40,10 @@ fn main() -> anyhow::Result<()> {
     let mut replay = ReplayBuffer::new(1024);
     let mut rng2 = Rng::new(1);
     for i in 0..64 {
-        let mut st = [0.0f32; STATE_DIM];
+        let mut st = vec![0.0f32; STATE_DIM];
         st[0] = i as f32 / 64.0;
         replay.push(Transition {
-            state: st,
+            state: st.clone(),
             action: i % NUM_ACTIONS,
             reward: 0.1,
             next_state: st,
@@ -61,8 +61,9 @@ fn main() -> anyhow::Result<()> {
     let tracker = RelativeTracker::new();
     let stats = aituning::mpi_t::PvarStats::default();
     let cv = CvarSet::vanilla();
+    let state_machine = Machine::cheyenne();
     let s = time(10, samples * 10, || {
-        opaque(build_state(&stats, &tracker, &cv, 256, 3, 0.5));
+        opaque(build_state(&stats, &tracker, &cv, &state_machine, 256, 3, 0.5));
     });
     t.row(vec!["build_state (L3)".into(), format!("{:.2} µs", s.median_us()), format!("{:.2} µs", s.p90_ns / 1e3), s.iters.to_string()]);
 

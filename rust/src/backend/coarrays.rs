@@ -1,0 +1,221 @@
+//! The coarrays runtime — the paper's scenario (§5): OpenCoarrays over
+//! MPICH-3.2.1 one-sided communication.
+//!
+//! State layout (must match `python/compile/model.py`, which AOT-bakes
+//! these dimensions into the Q-network artifacts): the MPICH
+//! `unexpected_recvq_length` pvar, user-defined timing pvars
+//! (win_flush / put / get averages and maxima), total application
+//! time, the number of processes, the current normalized
+//! control-variable values and the run index.
+
+use anyhow::Result;
+
+use crate::coordinator::episode;
+use crate::coordinator::relative::RelativeTracker;
+use crate::coordinator::EpisodeResult;
+use crate::metrics::stats::Summary;
+use crate::mpi_t::{CvarDescriptor, CvarSet, PvarDescriptor, PvarId, PvarStats};
+use crate::simmpi::Machine;
+use crate::workloads::WorkloadKind;
+
+use super::{scale_feature, BackendId, TunableRuntime};
+
+/// Coarrays state feature count (compiled into the AOT artifacts).
+pub const STATE_DIM: usize = 18;
+
+/// Coarrays action count: 6 cvars × {up, down} + no-op.
+pub const NUM_ACTIONS: usize = 13;
+
+/// Compress a non-negative magnitude into ~[0, 1] smoothly.
+fn squash(v: f64) -> f32 {
+    ((1.0 + v.max(0.0)).ln() / 10.0).min(1.0) as f32
+}
+
+/// Build the 18-feature state vector for the Q-network.
+///
+/// Time-like pvars are *relative* (§5.1): expressed as the improvement
+/// fraction vs the reference run, so positive = faster than reference.
+/// The scale feature's ceiling derives from the machine description
+/// ([`Machine::max_images`]) instead of a baked-in 2048-image constant.
+#[allow(clippy::too_many_arguments)]
+pub fn build_state(
+    stats: &PvarStats,
+    reference: &RelativeTracker,
+    cvars: &CvarSet,
+    machine: &Machine,
+    images: usize,
+    run_index: usize,
+    eager_fraction: f64,
+) -> Vec<f32> {
+    let mut s = vec![0.0f32; STATE_DIM];
+    let zero = Summary::default();
+    let get = |id: usize| stats.get(PvarId(id)).copied().unwrap_or(zero);
+
+    // 0-1: unexpected queue (absolute level pvar, squashed)
+    let umq = get(0);
+    s[0] = squash(umq.mean);
+    s[1] = squash(umq.max);
+    // 2-7: flush/put/get timers, relative to reference
+    let flush = get(1);
+    s[2] = reference.relative(PvarId(1), flush.mean) as f32;
+    s[3] = reference.relative_max(PvarId(1), flush.max) as f32;
+    let put = get(2);
+    s[4] = reference.relative(PvarId(2), put.mean) as f32;
+    s[5] = reference.relative_max(PvarId(2), put.max) as f32;
+    let getp = get(3);
+    s[6] = reference.relative(PvarId(3), getp.mean) as f32;
+    s[7] = reference.relative_max(PvarId(3), getp.max) as f32;
+    // 8: total time, relative (the reward's sibling)
+    let total = get(4);
+    s[8] = reference.relative(PvarId(4), total.max) as f32;
+    // 9: scale, normalized by the machine's testbed capacity
+    s[9] = scale_feature(images, machine);
+    // 10-15: current cvar values (normalized)
+    s[10..16].copy_from_slice(&cvars.normalized());
+    // 16: tuning progress
+    s[16] = (run_index as f32 / 20.0).min(2.0);
+    // 17: protocol mix actually used
+    s[17] = eager_fraction as f32;
+
+    for (i, v) in s.iter().enumerate() {
+        debug_assert!(v.is_finite(), "state feature {i} not finite");
+    }
+    s
+}
+
+/// The paper's tunable runtime.
+#[derive(Debug, Default, Clone, Copy)]
+pub struct CoarraysRuntime;
+
+impl TunableRuntime for CoarraysRuntime {
+    fn id(&self) -> BackendId {
+        BackendId::Coarrays
+    }
+
+    fn layer(&self) -> &'static str {
+        "MPICH"
+    }
+
+    fn cvars(&self) -> &'static [CvarDescriptor] {
+        crate::mpi_t::MPICH_CVARS
+    }
+
+    fn pvars(&self) -> &'static [PvarDescriptor] {
+        crate::mpi_t::MPICH_PVARS
+    }
+
+    fn state_dim(&self) -> usize {
+        STATE_DIM
+    }
+
+    fn training_workloads(&self) -> &'static [WorkloadKind] {
+        &WorkloadKind::TRAINING
+    }
+
+    fn build_state(
+        &self,
+        stats: &PvarStats,
+        reference: &RelativeTracker,
+        cvars: &CvarSet,
+        machine: &Machine,
+        images: usize,
+        run_index: usize,
+        eager_fraction: f64,
+    ) -> Vec<f32> {
+        build_state(stats, reference, cvars, machine, images, run_index, eager_fraction)
+    }
+
+    fn run_episode(
+        &self,
+        kind: WorkloadKind,
+        images: usize,
+        machine: &Machine,
+        cvars: &CvarSet,
+        noise: f64,
+        workload_seed: u64,
+        run_seed: u64,
+    ) -> Result<EpisodeResult> {
+        episode::run_episode(kind, images, machine, cvars, noise, workload_seed, run_seed)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn constants_match_the_derived_layout() {
+        let rt = CoarraysRuntime;
+        assert_eq!(rt.state_dim(), STATE_DIM);
+        assert_eq!(rt.num_actions(), NUM_ACTIONS);
+        assert_eq!(crate::coordinator::actions::num_actions(rt.cvars()), NUM_ACTIONS);
+    }
+
+    fn stats_with(total: f64) -> PvarStats {
+        PvarStats {
+            summaries: vec![
+                (PvarId(0), Summary::of(&[2.0, 4.0])),
+                (PvarId(1), Summary::of(&[10.0])),
+                (PvarId(2), Summary::of(&[5.0])),
+                (PvarId(3), Summary::of(&[1.0])),
+                (PvarId(4), Summary::of(&[total])),
+            ],
+        }
+    }
+
+    #[test]
+    fn reference_run_gives_zero_relatives() {
+        let stats = stats_with(1000.0);
+        let mut reference = RelativeTracker::new();
+        reference.record_reference(&stats);
+        let m = Machine::cheyenne();
+        let s = build_state(&stats, &reference, &CvarSet::vanilla(), &m, 256, 0, 0.5);
+        assert_eq!(s.len(), STATE_DIM);
+        assert_eq!(s[2], 0.0);
+        assert_eq!(s[8], 0.0);
+        assert!(s[0] > 0.0);
+        assert_eq!(s[17], 0.5);
+    }
+
+    #[test]
+    fn faster_run_has_positive_relative_total() {
+        let reference_stats = stats_with(1000.0);
+        let mut reference = RelativeTracker::new();
+        reference.record_reference(&reference_stats);
+        let m = Machine::cheyenne();
+        let s =
+            build_state(&stats_with(800.0), &reference, &CvarSet::vanilla(), &m, 256, 3, 0.0);
+        assert!(s[8] > 0.0, "improvement must be positive: {}", s[8]);
+        let worse =
+            build_state(&stats_with(1500.0), &reference, &CvarSet::vanilla(), &m, 256, 3, 0.0);
+        assert!(worse[8] < 0.0);
+    }
+
+    #[test]
+    fn images_scale_feature() {
+        let stats = stats_with(1.0);
+        let mut r = RelativeTracker::new();
+        r.record_reference(&stats);
+        let m = Machine::cheyenne();
+        let s64 = build_state(&stats, &r, &CvarSet::vanilla(), &m, 64, 0, 0.0);
+        let s2048 = build_state(&stats, &r, &CvarSet::vanilla(), &m, 2048, 0, 0.0);
+        assert!(s64[9] < s2048[9]);
+        assert!((s2048[9] - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn scale_ceiling_follows_the_machine_description() {
+        // Satellite fix pin: a larger testbed must stretch the scale
+        // axis (the old `/ 11.0` constant pushed the feature past 1.0
+        // for anything beyond 2048 images on any machine).
+        let stats = stats_with(1.0);
+        let mut r = RelativeTracker::new();
+        r.record_reference(&stats);
+        let mut big = Machine::cheyenne();
+        big.max_images = 32_768; // hypothetical larger deployment
+        let s = build_state(&stats, &r, &CvarSet::vanilla(), &big, 32_768, 0, 0.0);
+        assert!((s[9] - 1.0).abs() < 1e-6, "full machine must sit at 1.0: {}", s[9]);
+        let mid = build_state(&stats, &r, &CvarSet::vanilla(), &big, 2048, 0, 0.0);
+        assert!(mid[9] < 1.0, "2048 images is mid-scale on a 32k machine: {}", mid[9]);
+    }
+}

@@ -1,0 +1,248 @@
+//! Tunable runtimes (backends): the seam that makes AITuning
+//! library-agnostic.
+//!
+//! The paper's central design claim is that "AITuning has been designed
+//! to be utilized with different run-time libraries" (§3). Everything
+//! that is specific to *one* library — which control variables exist
+//! (and their domains and tuning steps), which performance variables
+//! are observed, how the RL state vector is laid out, how large the
+//! action space is, and how an instrumented episode actually executes —
+//! lives behind the [`TunableRuntime`] trait. The RL layers above
+//! (controller, agents, replay, hub, campaign engine) are
+//! dimension-generic and consume only this interface.
+//!
+//! Two backends ship today:
+//!
+//! * [`coarrays`] — the paper's scenario: OpenCoarrays over MPICH-3.2.1
+//!   one-sided communication, six cvars (§5.3), five pvars, the
+//!   18-feature state compiled into the AOT artifacts.
+//! * [`collectives`] — MPI collective-algorithm selection, the scenario
+//!   studied by Hunold & Carpen-Amarie (arXiv:1707.09965) and surveyed
+//!   by Wickramasinghe & Lumsdaine (arXiv:1611.06334): categorical
+//!   cvars pick broadcast/allreduce algorithms, an integer cvar sets
+//!   the pipeline segment size, and episodes run an analytic model over
+//!   the [`crate::simmpi::collective`] cost functions.
+//!
+//! Action-space derivation is shared: `1 + 2 × num_cvars` step actions
+//! (no-op, per-cvar up/down) plus one *enumerated-choice* action per
+//! option of every categorical cvar (see
+//! [`crate::coordinator::actions::num_actions`]).
+
+pub mod coarrays;
+pub mod collectives;
+
+pub use coarrays::CoarraysRuntime;
+pub use collectives::CollectivesRuntime;
+
+use anyhow::Result;
+
+use crate::coordinator::relative::RelativeTracker;
+use crate::coordinator::EpisodeResult;
+use crate::mpi_t::{CvarDescriptor, CvarSet, PvarDescriptor, PvarStats};
+use crate::simmpi::Machine;
+use crate::workloads::WorkloadKind;
+
+/// Identity of a tunable runtime. `Ord` follows declaration order;
+/// [`BackendId::ordinal`] is the dense index into [`BackendId::ALL`]
+/// (digest/fingerprint key, like [`WorkloadKind::ordinal`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord, Default)]
+pub enum BackendId {
+    /// OpenCoarrays / MPICH one-sided communication (the paper's §5).
+    #[default]
+    Coarrays,
+    /// MPI collective-algorithm selection over the simmpi cost models.
+    Collectives,
+}
+
+impl BackendId {
+    pub const ALL: [BackendId; 2] = [BackendId::Coarrays, BackendId::Collectives];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            BackendId::Coarrays => "coarrays",
+            BackendId::Collectives => "collectives",
+        }
+    }
+
+    /// Dense index in [`BackendId::ALL`].
+    pub fn ordinal(self) -> usize {
+        Self::ALL.iter().position(|&b| b == self).expect("listed in ALL")
+    }
+
+    pub fn parse(s: &str) -> Option<BackendId> {
+        match s.to_ascii_lowercase().as_str() {
+            "coarrays" | "coarray" | "caf" | "mpich" => Some(BackendId::Coarrays),
+            "collectives" | "collective" | "coll" => Some(BackendId::Collectives),
+            _ => None,
+        }
+    }
+
+    /// The backend's [`TunableRuntime`] singleton.
+    pub fn runtime(self) -> &'static dyn TunableRuntime {
+        match self {
+            BackendId::Coarrays => &CoarraysRuntime,
+            BackendId::Collectives => &CollectivesRuntime,
+        }
+    }
+
+    /// The backend's control-variable registry. Delegates to the
+    /// runtime so the table has exactly one source of truth — a drift
+    /// between this accessor and [`TunableRuntime::cvars`] would make
+    /// ε-greedy draws and action decoding disagree.
+    pub fn cvars(self) -> &'static [CvarDescriptor] {
+        self.runtime().cvars()
+    }
+
+    pub fn num_cvars(self) -> usize {
+        self.cvars().len()
+    }
+
+    /// Derived action-space size (see [`crate::coordinator::actions`]).
+    pub fn num_actions(self) -> usize {
+        crate::coordinator::actions::num_actions(self.cvars())
+    }
+
+    /// The backend's RL state-vector width.
+    pub fn state_dim(self) -> usize {
+        self.runtime().state_dim()
+    }
+}
+
+impl std::fmt::Display for BackendId {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// One tunable run-time library, as seen by the RL layers.
+///
+/// A runtime owns the cvar registry (descriptors, domains, steps), the
+/// pvar schema, the state-vector layout, the derived action space, and
+/// episode execution. Implementations must be pure: two calls to
+/// [`TunableRuntime::run_episode`] with identical arguments return
+/// bit-identical results (the campaign engine's worker-count-invariance
+/// contract rests on this).
+pub trait TunableRuntime: Sync {
+    fn id(&self) -> BackendId;
+
+    /// Communication-layer name, as `AITuning_start(layer)` receives it.
+    fn layer(&self) -> &'static str;
+
+    /// Control variables this runtime exposes (registry order).
+    fn cvars(&self) -> &'static [CvarDescriptor];
+
+    /// Performance variables this runtime observes (registry order).
+    /// Index 4 is total application time by convention
+    /// ([`crate::mpi_t::TOTAL_TIME_PVAR`]).
+    fn pvars(&self) -> &'static [PvarDescriptor];
+
+    /// RL state-vector width (flows into Q-net construction and the
+    /// tabular discretizer).
+    fn state_dim(&self) -> usize;
+
+    /// Derived action count: `1 + 2 × num_cvars` plus the enumerated
+    /// choice actions of categorical cvars.
+    fn num_actions(&self) -> usize {
+        crate::coordinator::actions::num_actions(self.cvars())
+    }
+
+    /// The workloads a training campaign covers by default.
+    fn training_workloads(&self) -> &'static [WorkloadKind];
+
+    /// Build the state vector for one observed run (length must equal
+    /// [`TunableRuntime::state_dim`]).
+    #[allow(clippy::too_many_arguments)]
+    fn build_state(
+        &self,
+        stats: &PvarStats,
+        reference: &RelativeTracker,
+        cvars: &CvarSet,
+        machine: &Machine,
+        images: usize,
+        run_index: usize,
+        eager_fraction: f64,
+    ) -> Vec<f32>;
+
+    /// Execute one instrumented episode. `workload_seed` fixes the
+    /// problem instance; `run_seed` varies run-to-run noise.
+    #[allow(clippy::too_many_arguments)]
+    fn run_episode(
+        &self,
+        kind: WorkloadKind,
+        images: usize,
+        machine: &Machine,
+        cvars: &CvarSet,
+        noise: f64,
+        workload_seed: u64,
+        run_seed: u64,
+    ) -> Result<EpisodeResult>;
+
+    /// Reward for one run against the reference (§5.1 by default: the
+    /// clipped relative total-time improvement).
+    fn reward(&self, reference_us: f64, total_us: f64) -> f64 {
+        crate::coordinator::reward::reward(reference_us, total_us)
+    }
+}
+
+/// Scale feature shared by the backends: `log2(images)` normalized by
+/// the machine's testbed capacity instead of a baked-in constant. The
+/// feature reaches 1.0 exactly at [`Machine::max_images`], so a larger
+/// testbed raises its declared capacity rather than inheriting the old
+/// hard-coded 2048-image ceiling; like the legacy `/ 11.0` form, runs
+/// driven *past* the declared capacity exceed 1.0 rather than being
+/// clamped (both presets declare 2048, so the value is bit-identical
+/// to the legacy normalization — pinned by a property test).
+pub fn scale_feature(images: usize, machine: &Machine) -> f32 {
+    let ceiling = (machine.max_images.max(2) as f64).log2() as f32;
+    (images.max(1) as f64).log2() as f32 / ceiling
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn backend_ids_round_trip() {
+        for b in BackendId::ALL {
+            assert_eq!(BackendId::parse(b.name()), Some(b));
+            assert_eq!(BackendId::ALL[b.ordinal()], b);
+            assert_eq!(b.runtime().id(), b);
+        }
+        assert_eq!(BackendId::parse("nope"), None);
+        assert_eq!(BackendId::default(), BackendId::Coarrays);
+    }
+
+    #[test]
+    fn runtime_tables_are_consistent() {
+        for b in BackendId::ALL {
+            let rt = b.runtime();
+            assert_eq!(rt.cvars().len(), b.num_cvars());
+            assert!(rt.state_dim() > 0);
+            assert!(rt.num_actions() >= 1 + 2 * b.num_cvars());
+            assert!(!rt.training_workloads().is_empty());
+            // Index 4 is total time in every pvar schema (the
+            // RelativeTracker/reward contract).
+            assert_eq!(rt.pvars()[crate::mpi_t::TOTAL_TIME_PVAR.0].name, "total_time_us");
+            for (i, d) in rt.cvars().iter().enumerate() {
+                assert_eq!(d.id.0, i, "{b}: cvar table out of order");
+            }
+            for (i, d) in rt.pvars().iter().enumerate() {
+                assert_eq!(d.id.0, i, "{b}: pvar table out of order");
+            }
+        }
+    }
+
+    #[test]
+    fn scale_feature_derives_ceiling_from_machine() {
+        let cheyenne = Machine::cheyenne();
+        // 2048 images on the 2048-image testbed saturates the feature
+        // exactly — the historical `log2/11` value, now derived.
+        assert!((scale_feature(2048, &cheyenne) - 1.0).abs() < 1e-6);
+        assert!(scale_feature(64, &cheyenne) < scale_feature(2048, &cheyenne));
+        // A larger testbed stretches the axis instead of clipping.
+        let mut big = Machine::cheyenne();
+        big.max_images = 8192;
+        assert!(scale_feature(8192, &big) <= 1.0 + 1e-6);
+        assert!(scale_feature(2048, &big) < 1.0);
+    }
+}

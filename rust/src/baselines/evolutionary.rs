@@ -3,7 +3,8 @@
 
 use anyhow::Result;
 
-use crate::mpi_t::{CvarDomain, CvarId, CvarSet, MPICH_CVARS};
+use crate::backend::BackendId;
+use crate::mpi_t::{CvarDomain, CvarId, CvarSet};
 use crate::util::rng::Rng;
 
 use super::random::RandomSearch;
@@ -12,6 +13,7 @@ use super::Searcher;
 /// (µ+λ) evolutionary searcher with per-gene mutation.
 pub struct Evolutionary {
     rng: Rng,
+    backend: BackendId,
     /// Parents kept per generation.
     pub mu: usize,
     /// Offspring per generation.
@@ -21,13 +23,18 @@ pub struct Evolutionary {
 }
 
 impl Evolutionary {
+    /// Searcher over the coarrays (paper) space.
     pub fn new(seed: u64) -> Evolutionary {
-        Evolutionary { rng: Rng::new(seed), mu: 3, lambda: 6, mutation_rate: 0.35 }
+        Evolutionary::for_backend(seed, BackendId::Coarrays)
+    }
+
+    pub fn for_backend(seed: u64, backend: BackendId) -> Evolutionary {
+        Evolutionary { rng: Rng::new(seed), backend, mu: 3, lambda: 6, mutation_rate: 0.35 }
     }
 
     fn mutate(&mut self, parent: &CvarSet) -> CvarSet {
         let mut child = parent.clone();
-        for (i, d) in MPICH_CVARS.iter().enumerate() {
+        for (i, d) in self.backend.cvars().iter().enumerate() {
             if !self.rng.chance(self.mutation_rate) {
                 continue;
             }
@@ -39,6 +46,10 @@ impl Evolutionary {
                     let magnitude = 1 << self.rng.range_i64(0, 4);
                     let dir = if self.rng.chance(0.5) { 1 } else { -1 };
                     child.get(id) + dir * magnitude * step
+                }
+                CvarDomain::Choice { options } => {
+                    // Re-draw the option uniformly.
+                    self.rng.range_i64(0, options.len() as i64 - 1)
                 }
             };
             child.set(id, v); // set() clamps to the domain
@@ -60,11 +71,11 @@ impl Searcher for Evolutionary {
         let mut spent = 0usize;
         let mut population: Vec<(CvarSet, f64)> = Vec::new();
 
-        // Seed: vanilla + random immigrants.
-        let vanilla = CvarSet::vanilla();
+        // Seed: the backend defaults + random immigrants.
+        let vanilla = CvarSet::defaults(self.backend);
         population.push((vanilla.clone(), eval(&vanilla)?));
         spent += 1;
-        let mut seeder = RandomSearch::new(self.rng.next_u64());
+        let mut seeder = RandomSearch::for_backend(self.rng.next_u64(), self.backend);
         while population.len() < self.mu && spent < budget {
             let cand = seeder.sample();
             let t = eval(&cand)?;
@@ -102,9 +113,9 @@ impl Searcher for Evolutionary {
         let mut spent = 0usize;
         let mut population: Vec<(CvarSet, f64)> = Vec::new();
 
-        // Seed generation: vanilla + random immigrants, one batch.
-        let mut seeds = vec![CvarSet::vanilla()];
-        let mut seeder = RandomSearch::new(self.rng.next_u64());
+        // Seed generation: defaults + random immigrants, one batch.
+        let mut seeds = vec![CvarSet::defaults(self.backend)];
+        let mut seeder = RandomSearch::for_backend(self.rng.next_u64(), self.backend);
         while seeds.len() < self.mu && seeds.len() < budget {
             seeds.push(seeder.sample());
         }

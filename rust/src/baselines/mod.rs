@@ -15,7 +15,7 @@ mod random;
 
 pub use evolutionary::Evolutionary;
 pub use human::human_tuned;
-pub use random::{grid_search, grid_search_batched, RandomSearch};
+pub use random::{grid_search, grid_search_batched, grid_search_batched_for, RandomSearch};
 
 use anyhow::Result;
 

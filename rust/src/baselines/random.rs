@@ -2,30 +2,40 @@
 
 use anyhow::Result;
 
-use crate::mpi_t::{CvarDomain, CvarId, CvarSet, MPICH_CVARS};
+use crate::backend::BackendId;
+use crate::mpi_t::{CvarDomain, CvarId, CvarSet};
 use crate::util::rng::Rng;
 
 use super::Searcher;
 
-/// Uniform random sampling over the full cvar space.
+/// Uniform random sampling over the full cvar space of one backend.
 pub struct RandomSearch {
     rng: Rng,
+    backend: BackendId,
 }
 
 impl RandomSearch {
+    /// Searcher over the coarrays (paper) space.
     pub fn new(seed: u64) -> RandomSearch {
-        RandomSearch { rng: Rng::new(seed) }
+        RandomSearch::for_backend(seed, BackendId::Coarrays)
+    }
+
+    pub fn for_backend(seed: u64, backend: BackendId) -> RandomSearch {
+        RandomSearch { rng: Rng::new(seed), backend }
     }
 
     /// One uniformly random configuration.
     pub fn sample(&mut self) -> CvarSet {
-        let mut cv = CvarSet::vanilla();
-        for (i, d) in MPICH_CVARS.iter().enumerate() {
+        let mut cv = CvarSet::defaults(self.backend);
+        for (i, d) in self.backend.cvars().iter().enumerate() {
             let v = match d.domain {
                 CvarDomain::Bool => self.rng.range_i64(0, 1),
                 CvarDomain::Int { lo, hi, step } => {
                     let steps = (hi - lo) / step;
                     lo + self.rng.range_i64(0, steps) * step
+                }
+                CvarDomain::Choice { options } => {
+                    self.rng.range_i64(0, options.len() as i64 - 1)
                 }
             };
             cv.set(CvarId(i), v);
@@ -44,9 +54,10 @@ impl Searcher for RandomSearch {
         budget: usize,
         eval: &mut dyn FnMut(&CvarSet) -> Result<f64>,
     ) -> Result<(CvarSet, f64)> {
-        // First evaluation is always vanilla (same protocol as AITuning:
-        // the reference run counts against the budget).
-        let mut best = CvarSet::vanilla();
+        // First evaluation is always the backend's defaults (same
+        // protocol as AITuning: the reference run counts against the
+        // budget).
+        let mut best = CvarSet::defaults(self.backend);
         let mut best_t = eval(&best)?;
         for _ in 1..budget {
             let cand = self.sample();
@@ -69,7 +80,7 @@ impl Searcher for RandomSearch {
         budget: usize,
         eval_batch: &mut dyn FnMut(&[CvarSet]) -> Result<Vec<f64>>,
     ) -> Result<(CvarSet, f64)> {
-        let mut candidates = vec![CvarSet::vanilla()];
+        let mut candidates = vec![CvarSet::defaults(self.backend)];
         for _ in 1..budget {
             candidates.push(self.sample());
         }
@@ -100,9 +111,18 @@ pub fn grid_search_batched(
     levels: usize,
     eval_batch: &mut dyn FnMut(&[CvarSet]) -> Result<Vec<f64>>,
 ) -> Result<(CvarSet, f64)> {
+    grid_search_batched_for(BackendId::Coarrays, levels, eval_batch)
+}
+
+/// Backend-generic grid search (choice cvars enumerate every option).
+pub fn grid_search_batched_for(
+    backend: BackendId,
+    levels: usize,
+    eval_batch: &mut dyn FnMut(&[CvarSet]) -> Result<Vec<f64>>,
+) -> Result<(CvarSet, f64)> {
     assert!(levels >= 2, "need at least lo/hi levels");
     let mut axes: Vec<Vec<i64>> = Vec::new();
-    for d in MPICH_CVARS {
+    for d in backend.cvars() {
         match d.domain {
             CvarDomain::Bool => axes.push(vec![0, 1]),
             CvarDomain::Int { lo, hi, .. } => {
@@ -113,13 +133,16 @@ pub fn grid_search_batched(
                 }
                 axes.push(vals);
             }
+            CvarDomain::Choice { options } => {
+                axes.push((0..options.len() as i64).collect());
+            }
         }
     }
     // Enumerate the full grid in odometer order.
     let mut grid = Vec::new();
     let mut idx = vec![0usize; axes.len()];
     'outer: loop {
-        let mut cv = CvarSet::vanilla();
+        let mut cv = CvarSet::defaults(backend);
         for (c, &i) in idx.iter().enumerate() {
             cv.set(CvarId(c), axes[c][i]);
         }

@@ -15,7 +15,7 @@ use std::time::Instant;
 use anyhow::Result;
 
 use crate::coordinator::controller::seed_mix;
-use crate::coordinator::{run_episode, Controller, TuningConfig};
+use crate::coordinator::{Controller, TuningConfig};
 use crate::mpi_t::CvarSet;
 use crate::simmpi::Machine;
 use crate::workloads::WorkloadKind;
@@ -123,7 +123,9 @@ impl CampaignEngine {
     ) -> Result<crate::coordinator::EpisodeResult> {
         let base = &self.cfg.base;
         let workload_seed = base.seed ^ seed_mix(kind, images);
-        run_episode(kind, images, &base.machine, cvars, 0.0, workload_seed, 1)
+        cvars.backend().runtime().run_episode(
+            kind, images, &base.machine, cvars, 0.0, workload_seed, 1,
+        )
     }
 
     /// Score many fixed configurations in parallel (the batched path
@@ -227,15 +229,17 @@ pub struct EvalSpec {
 }
 
 /// Run one campaign job: an independent controller seeded from the job.
-/// The job's machine overrides the base config's (the job, not the
-/// engine, names the testbed), and `shared` is stripped — `run` is the
-/// independent path, so its controllers must not track hub-push shards
-/// even when the caller's base config also drives `run_shared`.
+/// The job's machine and backend override the base config's (the job,
+/// not the engine, names the testbed and the tunable runtime), and
+/// `shared` is stripped — `run` is the independent path, so its
+/// controllers must not track hub-push shards even when the caller's
+/// base config also drives `run_shared`.
 fn run_job(base: &TuningConfig, job: &CampaignJob) -> Result<JobOutcome> {
     let cfg = TuningConfig {
         agent: job.agent,
         seed: job.seed,
         machine: job.resolve_machine()?,
+        backend: job.backend,
         shared: None,
         ..base.clone()
     };
@@ -291,8 +295,16 @@ fn cached_episode_time(
     run_seed: u64,
     cache: Option<&EpisodeCache>,
 ) -> Result<f64> {
-    let simulate =
-        || Ok(run_episode(kind, images, machine, cvars, noise, workload_seed, run_seed)?.total_time_us);
+    // The configuration names its backend; the episode key includes
+    // the full CvarSet (backend tag and all), so the two runtimes can
+    // never collide in the cache.
+    let simulate = || {
+        Ok(cvars
+            .backend()
+            .runtime()
+            .run_episode(kind, images, machine, cvars, noise, workload_seed, run_seed)?
+            .total_time_us)
+    };
     match cache {
         Some(c) => {
             let key = EpisodeKey::new(kind, images, cvars, machine, noise, workload_seed, run_seed);

@@ -1,20 +1,25 @@
 //! Campaign job specs: one job = tune one (machine, workload, images)
 //! cell with one agent, from one deterministic seed.
 
+use crate::backend::BackendId;
 use crate::coordinator::AgentKind;
 use crate::simmpi::Machine;
 use crate::util::rng::Rng;
 use crate::workloads::WorkloadKind;
 
 /// One independent unit of campaign work: a full §5 tuning session of
-/// `workload` at `images` processes on `machine`, driven by `agent`,
-/// seeded with `seed`. Jobs carry everything that varies per cell —
-/// including the machine model, so one worker pool spans both testbeds
-/// instead of call sites looping over `Machine`. Shared settings (run
+/// `workload` at `images` processes on `machine`, driven by `agent`
+/// over `backend`'s tunable runtime, seeded with `seed`. Jobs carry
+/// everything that varies per cell — including the machine model and
+/// the backend, the same way `Machine` was lifted in the
+/// shared-learning refactor — so one worker pool can span testbeds
+/// (and, for independent campaigns, backends). Shared settings (run
 /// budget, hyper-parameters) live in the engine's base
 /// [`crate::coordinator::TuningConfig`].
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct CampaignJob {
+    /// Which tunable runtime this cell tunes.
+    pub backend: BackendId,
     /// Machine-model preset name (presets are fully determined by
     /// name; see [`Machine::by_name`]). Stored as the name rather than
     /// the struct so jobs stay `Copy + Eq`.
@@ -49,6 +54,7 @@ impl CampaignJob {
 /// indexing (and therefore every job seed) is identical to the old
 /// machine-less grid.
 pub fn job_grid(
+    backend: BackendId,
     machines: &[Machine],
     workloads: &[WorkloadKind],
     image_counts: &[usize],
@@ -62,6 +68,7 @@ pub fn job_grid(
             for &images in image_counts {
                 let mut stream = master.fork(jobs.len() as u64 + 1);
                 jobs.push(CampaignJob {
+                    backend,
                     machine: machine.name,
                     workload,
                     images,
@@ -81,6 +88,7 @@ mod tests {
     #[test]
     fn grid_covers_cross_product_in_stable_order() {
         let jobs = job_grid(
+            BackendId::Coarrays,
             &[Machine::cheyenne(), Machine::edison()],
             &[WorkloadKind::Icar, WorkloadKind::CloverLeaf],
             &[16, 32],
@@ -100,8 +108,14 @@ mod tests {
     #[test]
     fn seeds_are_deterministic_and_distinct() {
         let machines = [Machine::cheyenne(), Machine::edison()];
-        let a = job_grid(&machines, &WorkloadKind::TRAINING, &[8, 16], AgentKind::Tabular, 9);
-        let b = job_grid(&machines, &WorkloadKind::TRAINING, &[8, 16], AgentKind::Tabular, 9);
+        let a = job_grid(
+            BackendId::Coarrays, &machines, &WorkloadKind::TRAINING, &[8, 16],
+            AgentKind::Tabular, 9,
+        );
+        let b = job_grid(
+            BackendId::Coarrays, &machines, &WorkloadKind::TRAINING, &[8, 16],
+            AgentKind::Tabular, 9,
+        );
         assert_eq!(a, b);
         let mut seeds: Vec<u64> = a.iter().map(|j| j.seed).collect();
         seeds.sort_unstable();
@@ -114,6 +128,7 @@ mod tests {
         // Lifting the machine into the job must not re-seed existing
         // single-machine campaigns: cell k still forks stream k+1.
         let jobs = job_grid(
+            BackendId::Coarrays,
             &[Machine::cheyenne()],
             &[WorkloadKind::Icar],
             &[16, 32],
@@ -129,14 +144,21 @@ mod tests {
 
     #[test]
     fn different_master_seeds_give_different_job_seeds() {
-        let a = job_grid(&[Machine::cheyenne()], &[WorkloadKind::Icar], &[16], AgentKind::Tabular, 1);
-        let b = job_grid(&[Machine::cheyenne()], &[WorkloadKind::Icar], &[16], AgentKind::Tabular, 2);
+        let a = job_grid(
+            BackendId::Coarrays, &[Machine::cheyenne()], &[WorkloadKind::Icar], &[16],
+            AgentKind::Tabular, 1,
+        );
+        let b = job_grid(
+            BackendId::Coarrays, &[Machine::cheyenne()], &[WorkloadKind::Icar], &[16],
+            AgentKind::Tabular, 2,
+        );
         assert_ne!(a[0].seed, b[0].seed);
     }
 
     #[test]
     fn label_is_compact_and_machine_resolves() {
         let j = CampaignJob {
+            backend: BackendId::Coarrays,
             machine: "edison",
             workload: WorkloadKind::Icar,
             images: 256,

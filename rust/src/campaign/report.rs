@@ -67,6 +67,7 @@ impl CampaignReport {
     pub fn fingerprint(&self) -> u64 {
         let mut h = Fnv64::new();
         for r in &self.results {
+            h.mix(r.job.backend.ordinal() as u64);
             for b in r.job.machine.bytes() {
                 h.mix(b as u64);
             }
@@ -111,6 +112,7 @@ impl CampaignReport {
                 arr(self.results.iter().map(|r| {
                     obj(vec![
                         ("label", s(&r.job.label())),
+                        ("backend", s(r.job.backend.name())),
                         ("machine", s(r.job.machine)),
                         ("seed", num(r.job.seed as f64)),
                         ("reference_us", num(r.outcome.reference_us)),
@@ -202,6 +204,7 @@ mod tests {
                 .iter()
                 .map(|&(reference, best)| JobOutcome {
                     job: CampaignJob {
+                        backend: crate::backend::BackendId::Coarrays,
                         machine: "cheyenne",
                         workload: WorkloadKind::Icar,
                         images: 8,
@@ -243,6 +246,9 @@ mod tests {
         let mut other_machine = report(&[(100.0, 80.0)]);
         other_machine.results[0].job.machine = "edison";
         assert_ne!(a.fingerprint(), other_machine.fingerprint());
+        let mut other_backend = report(&[(100.0, 80.0)]);
+        other_backend.results[0].job.backend = crate::backend::BackendId::Collectives;
+        assert_ne!(a.fingerprint(), other_backend.fingerprint());
 
         let mut occupancy = [0usize; WorkloadKind::COUNT];
         occupancy[WorkloadKind::Icar.ordinal()] = 12;

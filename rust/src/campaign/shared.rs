@@ -59,13 +59,18 @@ impl CampaignEngine {
             jobs.iter().all(|j| j.agent == jobs[0].agent),
             "shared campaign jobs must share one agent kind"
         );
+        anyhow::ensure!(
+            jobs.iter().all(|j| j.backend == jobs[0].backend),
+            "shared campaign jobs must share one backend (the hub merges one \
+             state family and one replay dimensionality)"
+        );
         let shared = base.shared.unwrap_or_default();
         let sync_every = shared.sync_every.max(1);
         let rounds = base.runs.div_ceil(sync_every).max(1);
         let workers = self.workers_for(jobs.len());
         let started = Instant::now();
 
-        let mut hub = LearnerHub::new(base.replay_capacity, base.replay_policy);
+        let mut hub = LearnerHub::new(base.replay_capacity, base.replay_policy, jobs[0].backend);
         // One persistent controller per job; workers move them in and
         // out of the slots between rounds (dynamic claiming is safe —
         // within a round, segments touch disjoint slots).
@@ -133,6 +138,7 @@ fn run_segment(
             agent: job.agent,
             seed: job.seed,
             machine: job.resolve_machine()?,
+            backend: job.backend,
             shared: Some(shared),
             ..base.clone()
         };

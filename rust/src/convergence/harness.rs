@@ -4,11 +4,12 @@
 
 use anyhow::Result;
 
+use crate::backend::BackendId;
 use crate::coordinator::{
     actions::Action, Agent, AgentKind, DqnAgent, ReplayBuffer, TabularAgent, Transition,
     NUM_ACTIONS, STATE_DIM,
 };
-use crate::mpi_t::CvarSet;
+use crate::mpi_t::{CvarSet, MPICH_CVARS};
 use crate::util::rng::Rng;
 
 use super::models::SyntheticModel;
@@ -68,8 +69,8 @@ fn synth_state(
     aux: &[f64],
     cvars: &CvarSet,
     run: usize,
-) -> [f32; STATE_DIM] {
-    let mut s = [0.0f32; STATE_DIM];
+) -> Vec<f32> {
+    let mut s = vec![0.0f32; STATE_DIM];
     s[0] = (aux.first().copied().unwrap_or(0.0) as f32).clamp(-5.0, 5.0);
     s[1] = (aux.get(1).copied().unwrap_or(0.0) as f32 / 10.0).clamp(-5.0, 5.0);
     s[8] = (((reference - total) / reference) as f32).clamp(-2.0, 2.0);
@@ -86,11 +87,16 @@ pub fn run_convergence(
 ) -> Result<ConvergenceReport> {
     let mut rng = Rng::new(cfg.seed);
     let mut agent: Box<dyn Agent> = match cfg.agent {
-        AgentKind::Dqn => Box::new(DqnAgent::load(&cfg.artifacts_dir, &mut rng)?),
-        AgentKind::DqnTarget => {
-            Box::new(DqnAgent::load_with_mode(&cfg.artifacts_dir, &mut rng, true)?)
+        AgentKind::Dqn => {
+            Box::new(DqnAgent::load(&cfg.artifacts_dir, &mut rng, BackendId::Coarrays)?)
         }
-        AgentKind::Tabular => Box::new(TabularAgent::new()),
+        AgentKind::DqnTarget => Box::new(DqnAgent::load_with_mode(
+            &cfg.artifacts_dir,
+            &mut rng,
+            true,
+            BackendId::Coarrays,
+        )?),
+        AgentKind::Tabular => Box::new(TabularAgent::new(NUM_ACTIONS)),
     };
     let mut replay = ReplayBuffer::new(4096);
     let mut cvars = CvarSet::vanilla();
@@ -111,7 +117,7 @@ pub fn run_convergence(
         } else {
             crate::runtime::argmax(&agent.q_values(&prev_state)?)
         };
-        cvars = Action::from_index(action_idx).apply(&cvars);
+        cvars = Action::from_index(MPICH_CVARS, action_idx).apply(&cvars);
 
         let obs = model.observe(&cvars, cfg.noise, &mut rng);
         trajectory.push(obs.total_time_us);
@@ -121,7 +127,7 @@ pub fn run_convergence(
             state: prev_state,
             action: action_idx,
             reward,
-            next_state: state,
+            next_state: state.clone(),
             done: i == cfg.runs,
             // Synthetic models stand in for no real application.
             workload: None,

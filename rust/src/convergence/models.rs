@@ -119,6 +119,9 @@ fn normalized_distance(cvar: CvarId, v: i64, best: i64) -> f64 {
     match MPICH_CVARS[cvar.0].domain {
         CvarDomain::Bool => (v - best).abs() as f64,
         CvarDomain::Int { lo, hi, .. } => (v - best) as f64 / (hi - lo).max(1) as f64,
+        CvarDomain::Choice { options } => {
+            (v - best).abs() as f64 / (options.len() as i64 - 1).max(1) as f64
+        }
     }
 }
 

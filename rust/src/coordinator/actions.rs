@@ -1,67 +1,129 @@
-//! The action space: one fixed-step change to one control variable
-//! (§5.2), or no-op. 6 cvars × {up, down} + no-op = 13 actions.
+//! The action space, derived from a backend's cvar registry.
+//!
+//! Layout (§5.2 generalized): index 0 is no-op; indices `1 + 2c` /
+//! `2 + 2c` step cvar `c` up / down by its fixed step (booleans
+//! toggle, choices move to the neighbouring option); after the step
+//! block, every *categorical* cvar contributes one enumerated
+//! **select** action per option, in registry order. For the coarrays
+//! backend (six scalar cvars, no categorical domains) this reproduces
+//! the paper's `6 × {up, down} + no-op = 13` exactly.
 
-use crate::mpi_t::{CvarId, CvarSet, MPICH_CVARS};
-
-use super::state::NUM_ACTIONS;
+use crate::mpi_t::{CvarDescriptor, CvarDomain, CvarId, CvarSet};
 
 /// A tuning action.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Action {
     /// Keep the configuration.
     Noop,
-    /// Step `cvar` up or down by its fixed step (booleans toggle).
+    /// Step `cvar` up or down by its fixed step (booleans toggle,
+    /// choices move one option over).
     Step { cvar: CvarId, up: bool },
+    /// Jump a categorical cvar directly to one of its options.
+    Select { cvar: CvarId, choice: usize },
+}
+
+/// Derived action count for a cvar table:
+/// `1 + 2 × num_cvars + Σ options(categorical cvars)`.
+pub fn num_actions(table: &[CvarDescriptor]) -> usize {
+    1 + 2 * table.len()
+        + table
+            .iter()
+            .map(|d| match d.domain {
+                CvarDomain::Choice { options } => options.len(),
+                _ => 0,
+            })
+            .sum::<usize>()
 }
 
 impl Action {
-    /// Decode an action index (the Q-network's output ordering):
-    /// 0 = no-op; then `1 + 2*c` = cvar c up, `2 + 2*c` = cvar c down.
-    pub fn from_index(index: usize) -> Action {
-        assert!(index < NUM_ACTIONS, "action index {index} out of range");
+    /// Decode an action index (the Q-network's output ordering).
+    pub fn from_index(table: &[CvarDescriptor], index: usize) -> Action {
+        assert!(
+            index < num_actions(table),
+            "action index {index} out of range for {}-action table",
+            num_actions(table)
+        );
         if index == 0 {
             return Action::Noop;
         }
         let k = index - 1;
-        Action::Step { cvar: CvarId(k / 2), up: k % 2 == 0 }
+        if k < 2 * table.len() {
+            return Action::Step { cvar: CvarId(k / 2), up: k % 2 == 0 };
+        }
+        let mut k = k - 2 * table.len();
+        for d in table {
+            if let CvarDomain::Choice { options } = d.domain {
+                if k < options.len() {
+                    return Action::Select { cvar: d.id, choice: k };
+                }
+                k -= options.len();
+            }
+        }
+        unreachable!("index checked against num_actions above")
     }
 
-    pub fn index(&self) -> usize {
+    /// Inverse of [`Action::from_index`].
+    pub fn index(&self, table: &[CvarDescriptor]) -> usize {
         match *self {
             Action::Noop => 0,
             Action::Step { cvar, up } => 1 + 2 * cvar.0 + usize::from(!up),
+            Action::Select { cvar, choice } => {
+                let mut idx = 1 + 2 * table.len();
+                for d in &table[..cvar.0] {
+                    if let CvarDomain::Choice { options } = d.domain {
+                        idx += options.len();
+                    }
+                }
+                idx + choice
+            }
         }
     }
 
-    /// Apply to a configuration (clamped by the cvar's domain).
+    /// Apply to a configuration (clamped by the cvar's domain, using
+    /// the configuration's own backend registry).
     pub fn apply(&self, cvars: &CvarSet) -> CvarSet {
         match *self {
             Action::Noop => cvars.clone(),
             Action::Step { cvar, up } => {
                 let mut next = cvars.clone();
-                let d = &MPICH_CVARS[cvar.0];
+                let d = &cvars.table()[cvar.0];
                 next.set(cvar, d.step(cvars.get(cvar), up));
+                next
+            }
+            Action::Select { cvar, choice } => {
+                let mut next = cvars.clone();
+                next.set(cvar, choice as i64); // set() clamps to the domain
                 next
             }
         }
     }
 
     /// Human-readable description for logs.
-    pub fn describe(&self) -> String {
+    pub fn describe(&self, table: &[CvarDescriptor]) -> String {
+        let short = |d: &CvarDescriptor| {
+            d.name.strip_prefix("MPIR_CVAR_").unwrap_or(d.name).to_string()
+        };
         match *self {
             Action::Noop => "no-op".to_string(),
             Action::Step { cvar, up } => {
-                let d = &MPICH_CVARS[cvar.0];
-                let short = d.name.strip_prefix("MPIR_CVAR_").unwrap_or(d.name);
-                format!("{short} {}", if up { "+step" } else { "-step" })
+                format!("{} {}", short(&table[cvar.0]), if up { "+step" } else { "-step" })
+            }
+            Action::Select { cvar, choice } => {
+                let d = &table[cvar.0];
+                let option = match d.domain {
+                    CvarDomain::Choice { options } => options.get(choice).copied().unwrap_or("?"),
+                    _ => "?",
+                };
+                format!("{}={option}", short(d))
             }
         }
     }
 }
 
-/// One-hot encode an action index for the train batch.
-pub fn one_hot(index: usize) -> [f32; NUM_ACTIONS] {
-    let mut v = [0.0; NUM_ACTIONS];
+/// One-hot encode an action index for the train batch (`n` = action
+/// count of the backend that produced the index).
+pub fn one_hot(index: usize, n: usize) -> Vec<f32> {
+    let mut v = vec![0.0; n];
     v[index] = 1.0;
     v
 }
@@ -69,12 +131,44 @@ pub fn one_hot(index: usize) -> [f32; NUM_ACTIONS] {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::backend::BackendId;
+    use crate::mpi_t::{BCAST_ALGORITHMS, COLLECTIVE_CVARS, MPICH_CVARS};
 
     #[test]
-    fn index_round_trip() {
-        for i in 0..NUM_ACTIONS {
-            assert_eq!(Action::from_index(i).index(), i, "index {i}");
+    fn coarrays_layout_is_the_papers_13() {
+        assert_eq!(num_actions(MPICH_CVARS), 13);
+        for i in 0..13 {
+            assert_eq!(Action::from_index(MPICH_CVARS, i).index(MPICH_CVARS), i, "index {i}");
         }
+    }
+
+    #[test]
+    fn collectives_layout_adds_enumerated_choices() {
+        // 1 + 2*4 steps + (3 bcast + 2 allreduce) selects = 14.
+        assert_eq!(num_actions(COLLECTIVE_CVARS), 14);
+        for i in 0..14 {
+            let a = Action::from_index(COLLECTIVE_CVARS, i);
+            assert_eq!(a.index(COLLECTIVE_CVARS), i, "index {i} via {a:?}");
+        }
+        // First select action targets the first categorical cvar's
+        // first option.
+        let first_select = 1 + 2 * COLLECTIVE_CVARS.len();
+        assert_eq!(
+            Action::from_index(COLLECTIVE_CVARS, first_select),
+            Action::Select { cvar: CvarId(0), choice: 0 }
+        );
+        let last = Action::from_index(COLLECTIVE_CVARS, 13);
+        assert_eq!(last, Action::Select { cvar: CvarId(1), choice: 1 });
+    }
+
+    #[test]
+    fn select_jumps_directly_to_an_option() {
+        let base = CvarSet::defaults(BackendId::Collectives);
+        let jumped = Action::Select { cvar: CvarId(0), choice: 2 }.apply(&base);
+        assert_eq!(jumped.get(CvarId(0)), 2);
+        // Out-of-range choices clamp instead of panicking.
+        let clamped = Action::Select { cvar: CvarId(0), choice: 99 }.apply(&base);
+        assert_eq!(clamped.get(CvarId(0)), BCAST_ALGORITHMS.len() as i64 - 1);
     }
 
     #[test]
@@ -96,14 +190,32 @@ mod tests {
     }
 
     #[test]
+    fn step_moves_choice_to_neighbouring_option() {
+        let base = CvarSet::defaults(BackendId::Collectives);
+        let next = Action::Step { cvar: CvarId(0), up: true }.apply(&base);
+        assert_eq!(next.get(CvarId(0)), 1);
+        let back = Action::Step { cvar: CvarId(0), up: false }.apply(&next);
+        assert_eq!(back.get(CvarId(0)), 0);
+    }
+
+    #[test]
     fn noop_is_identity() {
         let base = CvarSet::vanilla();
         assert_eq!(Action::Noop.apply(&base), base);
     }
 
     #[test]
+    fn describe_names_options() {
+        let a = Action::Select { cvar: CvarId(1), choice: 1 };
+        assert_eq!(a.describe(COLLECTIVE_CVARS), "ALLREDUCE_INTRA_ALGORITHM=ring");
+        let s = Action::Step { cvar: CvarId(5), up: true };
+        assert_eq!(s.describe(MPICH_CVARS), "CH3_EAGER_MAX_MSG_SIZE +step");
+    }
+
+    #[test]
     fn one_hot_shape() {
-        let v = one_hot(3);
+        let v = one_hot(3, 13);
+        assert_eq!(v.len(), 13);
         assert_eq!(v.iter().sum::<f32>(), 1.0);
         assert_eq!(v[3], 1.0);
     }

@@ -1,14 +1,29 @@
 //! The AI component (§5.1): abstract over the Q-value estimator so the
 //! controller can run with the deep network (PJRT) or the tabular
-//! fallback (tests, ablations).
+//! fallback (tests, ablations). Agents are dimension-generic: state
+//! width and action count come from the backend at construction, never
+//! from compile-time constants.
 
 use anyhow::Result;
 
+use crate::backend::BackendId;
 use crate::runtime::{Manifest, QNet, RuntimeClient, TrainBatch};
 use crate::util::rng::Rng;
 
 use super::hub::{AgentState, HubView};
-use super::state::{NUM_ACTIONS, STATE_DIM};
+
+/// What one training update reports back: the scalar loss, plus —
+/// when the estimator can produce them — the *realized per-sample TD
+/// errors*, in batch row order. The controller feeds those back into
+/// the replay layer's [`crate::coordinator::ReplayPolicy::feedback`]
+/// seam (adaptive prioritized replay). `None` means "no per-sample
+/// signal available" and the prioritized policy keeps its static
+/// `|reward|` proxy — the deterministic fallback.
+#[derive(Debug, Clone)]
+pub struct TrainOutcome {
+    pub loss: f32,
+    pub td_errors: Option<Vec<f32>>,
+}
 
 /// Q-value estimator interface.
 ///
@@ -20,11 +35,11 @@ use super::state::{NUM_ACTIONS, STATE_DIM};
 pub trait Agent: Send {
     fn name(&self) -> &'static str;
 
-    /// Q(s, ·) for one state.
-    fn q_values(&mut self, state: &[f32; STATE_DIM]) -> Result<Vec<f32>>;
+    /// Q(s, ·) for one state (`state.len()` = the backend's state dim).
+    fn q_values(&mut self, state: &[f32]) -> Result<Vec<f32>>;
 
-    /// One training update on a replay minibatch; returns the loss.
-    fn train(&mut self, batch: &TrainBatch, lr: f32, gamma: f32) -> Result<f32>;
+    /// One training update on a replay minibatch.
+    fn train(&mut self, batch: &TrainBatch, lr: f32, gamma: f32) -> Result<TrainOutcome>;
 
     /// Losses observed so far (diagnostics).
     fn loss_history(&self) -> &[f32];
@@ -65,8 +80,14 @@ impl DqnAgent {
     pub const TARGET_SYNC_EVERY: usize = 25;
 
     /// Load artifacts and initialize (requires `make artifacts`).
-    pub fn load(artifacts_dir: &std::path::Path, rng: &mut Rng) -> Result<DqnAgent> {
-        Self::load_with_mode(artifacts_dir, rng, false)
+    /// The manifest's dimensions must match `backend`'s state/action
+    /// layout — AOT artifacts are compiled per backend.
+    pub fn load(
+        artifacts_dir: &std::path::Path,
+        rng: &mut Rng,
+        backend: BackendId,
+    ) -> Result<DqnAgent> {
+        Self::load_with_mode(artifacts_dir, rng, false, backend)
     }
 
     /// Load in fixed-Q-targets ablation mode.
@@ -74,12 +95,20 @@ impl DqnAgent {
         artifacts_dir: &std::path::Path,
         rng: &mut Rng,
         use_target: bool,
+        backend: BackendId,
     ) -> Result<DqnAgent> {
         let client = RuntimeClient::cpu()?;
         let manifest = Manifest::load(artifacts_dir)?;
         anyhow::ensure!(
-            manifest.state_dim == STATE_DIM && manifest.num_actions == NUM_ACTIONS,
-            "artifact layout mismatch"
+            manifest.state_dim == backend.state_dim()
+                && manifest.num_actions == backend.num_actions(),
+            "artifact layout ({}x{}) does not match the {} backend ({}x{}); \
+             re-run `make artifacts` for this backend",
+            manifest.state_dim,
+            manifest.num_actions,
+            backend,
+            backend.state_dim(),
+            backend.num_actions()
         );
         let qnet = QNet::load(&client, &manifest, rng)?;
         if use_target {
@@ -105,21 +134,25 @@ impl Agent for DqnAgent {
         }
     }
 
-    fn q_values(&mut self, state: &[f32; STATE_DIM]) -> Result<Vec<f32>> {
+    fn q_values(&mut self, state: &[f32]) -> Result<Vec<f32>> {
         self.qnet.q_values(state)
     }
 
-    fn train(&mut self, batch: &TrainBatch, lr: f32, gamma: f32) -> Result<f32> {
-        if self.use_target {
+    fn train(&mut self, batch: &TrainBatch, lr: f32, gamma: f32) -> Result<TrainOutcome> {
+        let loss = if self.use_target {
             if self.updates % Self::TARGET_SYNC_EVERY == 0 {
                 self.qnet.sync_target();
             }
             self.updates += 1;
-            self.qnet.train_step_with_target(batch, lr, gamma)
+            self.qnet.train_step_with_target(batch, lr, gamma)?
         } else {
             self.updates += 1;
-            self.qnet.train_step(batch, lr, gamma)
-        }
+            self.qnet.train_step(batch, lr, gamma)?
+        };
+        // The fused q_train artifact returns only the batch loss; no
+        // per-sample TD errors without a second device round-trip, so
+        // prioritized replay keeps its deterministic |reward| proxy.
+        Ok(TrainOutcome { loss, td_errors: None })
     }
 
     fn loss_history(&self) -> &[f32] {

@@ -4,6 +4,7 @@
 
 use anyhow::{Context, Result};
 
+use crate::backend::{BackendId, TunableRuntime};
 use crate::metrics::recorder::{RunRecord, TuningLog};
 use crate::mpi_t::CvarSet;
 use crate::simmpi::Machine;
@@ -13,12 +14,9 @@ use crate::workloads::WorkloadKind;
 use super::actions::Action;
 use super::agent::{Agent, AgentKind, DqnAgent};
 use super::ensemble::ensemble;
-use super::episode::run_episode;
 use super::hub::{HubContribution, HubView};
 use super::relative::RelativeTracker;
 use super::replay::{LocalReplay, ReplayPolicyKind, Transition};
-use super::reward::reward;
-use super::state::{build_state, NUM_ACTIONS, STATE_DIM};
 use super::tabular::TabularAgent;
 
 /// Shared-learning mode (A3C-style): the controller participates in a
@@ -41,6 +39,10 @@ impl Default for SharedLearning {
 #[derive(Debug, Clone)]
 pub struct TuningConfig {
     pub machine: Machine,
+    /// Which tunable runtime (backend) this controller drives: the
+    /// cvar/pvar registries, state layout, action space and episode
+    /// execution all come from it.
+    pub backend: BackendId,
     pub agent: AgentKind,
     /// Tuning runs per application (§5.4 recommends ≥ 20).
     pub runs: usize,
@@ -76,6 +78,7 @@ impl Default for TuningConfig {
     fn default() -> TuningConfig {
         TuningConfig {
             machine: Machine::cheyenne(),
+            backend: BackendId::Coarrays,
             agent: AgentKind::Dqn,
             runs: 20,
             eps_start: 0.8,
@@ -137,7 +140,7 @@ struct ActiveSession {
     log: TuningLog,
     tracker: RelativeTracker,
     cvars: CvarSet,
-    prev_state: [f32; STATE_DIM],
+    prev_state: Vec<f32>,
     reference_us: f64,
     /// Next tuning-run index (1-based; run 0 was the reference).
     next_run: usize,
@@ -164,13 +167,19 @@ impl Controller {
     pub fn new(cfg: TuningConfig) -> Result<Controller> {
         let mut rng = Rng::new(cfg.seed);
         let agent: Box<dyn Agent> = match cfg.agent {
-            AgentKind::Dqn => Box::new(DqnAgent::load(&cfg.artifacts_dir, &mut rng)?),
-            AgentKind::DqnTarget => {
-                Box::new(DqnAgent::load_with_mode(&cfg.artifacts_dir, &mut rng, true)?)
+            AgentKind::Dqn => {
+                Box::new(DqnAgent::load(&cfg.artifacts_dir, &mut rng, cfg.backend)?)
             }
-            AgentKind::Tabular => Box::new(TabularAgent::new()),
+            AgentKind::DqnTarget => Box::new(DqnAgent::load_with_mode(
+                &cfg.artifacts_dir,
+                &mut rng,
+                true,
+                cfg.backend,
+            )?),
+            AgentKind::Tabular => Box::new(TabularAgent::new(cfg.backend.num_actions())),
         };
-        let replay = LocalReplay::new(cfg.replay_capacity, cfg.replay_policy);
+        let replay =
+            LocalReplay::for_backend(cfg.replay_capacity, cfg.replay_policy, cfg.backend);
         Ok(Controller {
             cfg,
             agent,
@@ -180,6 +189,11 @@ impl Controller {
             session: None,
             pending: Vec::new(),
         })
+    }
+
+    /// The tunable runtime this controller drives.
+    pub fn runtime(&self) -> &'static dyn TunableRuntime {
+        self.cfg.backend.runtime()
     }
 
     /// Current exploration rate for tuning-run `i` of `n` (0-based).
@@ -197,13 +211,30 @@ impl Controller {
     }
 
     /// ε-greedy action selection.
-    fn select_action(&mut self, state: &[f32; STATE_DIM], eps: f64) -> Result<usize> {
+    fn select_action(&mut self, state: &[f32], eps: f64) -> Result<usize> {
         if self.rng.chance(eps) {
-            Ok(self.rng.below(NUM_ACTIONS as u64) as usize)
+            Ok(self.rng.below(self.cfg.backend.num_actions() as u64) as usize)
         } else {
             let q = self.agent.q_values(state)?;
             Ok(crate::runtime::argmax(&q))
         }
+    }
+
+    /// One minibatch: sample, train, and — when the agent reports
+    /// realized per-sample TD errors — feed them back into the replay
+    /// policy's priority state (adaptive PER; a no-op for priority-free
+    /// policies and for agents without a per-sample signal, which keep
+    /// the static |reward| proxy).
+    fn train_minibatch(&mut self) -> Result<()> {
+        let (batch, picks) =
+            self.replay.sample_with_picks(self.cfg.replay_batch, &mut self.rng);
+        let outcome = self.agent.train(&batch, self.cfg.lr, self.cfg.gamma)?;
+        if let Some(td_errors) = &outcome.td_errors {
+            for (&pick, &td) in picks.iter().zip(td_errors) {
+                self.replay.feedback(pick, td.abs() as f64);
+            }
+        }
+        Ok(())
     }
 
     /// Train on replay: one minibatch per run, plus the periodic
@@ -212,12 +243,10 @@ impl Controller {
         if self.replay.is_empty() {
             return Ok(());
         }
-        let batch = self.replay.sample(self.cfg.replay_batch, &mut self.rng);
-        self.agent.train(&batch, self.cfg.lr, self.cfg.gamma)?;
+        self.train_minibatch()?;
         if self.lifetime_runs % self.cfg.replay_refresh_every == 0 {
             for _ in 0..self.cfg.replay_refresh_batches {
-                let batch = self.replay.sample(self.cfg.replay_batch, &mut self.rng);
-                self.agent.train(&batch, self.cfg.lr, self.cfg.gamma)?;
+                self.train_minibatch()?;
             }
         }
         Ok(())
@@ -236,13 +265,14 @@ impl Controller {
     /// and a [`Controller::finish_session`].
     pub fn begin_session(&mut self, kind: WorkloadKind, images: usize) -> Result<()> {
         anyhow::ensure!(self.session.is_none(), "a tuning session is already in progress");
+        let runtime = self.runtime();
         let workload_seed = self.cfg.seed ^ seed_mix(kind, images);
         let mut log = TuningLog::new(kind.name(), images);
-        let mut tracker = RelativeTracker::new();
-        let cvars = CvarSet::vanilla();
+        let mut tracker = RelativeTracker::for_backend(self.cfg.backend);
+        let cvars = CvarSet::defaults(self.cfg.backend);
 
         let run_seed = self.rng.next_u64();
-        let reference = run_episode(
+        let reference = runtime.run_episode(
             kind, images, &self.cfg.machine, &cvars, self.cfg.noise, workload_seed, run_seed,
         )?;
         tracker.record_reference(&reference.pvars);
@@ -258,8 +288,14 @@ impl Controller {
             pvars: reference.pvars.clone(),
         });
 
-        let prev_state = build_state(
-            &reference.pvars, &tracker, &cvars, images, 0, reference.eager_fraction,
+        let prev_state = runtime.build_state(
+            &reference.pvars,
+            &tracker,
+            &cvars,
+            &self.cfg.machine,
+            images,
+            0,
+            reference.eager_fraction,
         );
         self.session = Some(ActiveSession {
             kind,
@@ -282,17 +318,18 @@ impl Controller {
     /// *when* the caller regains control, never what executes.
     pub fn step_session(&mut self, max_runs: usize) -> Result<usize> {
         let mut session = self.session.take().context("no tuning session in progress")?;
+        let runtime = self.runtime();
         let total = self.cfg.runs;
         let mut executed = 0;
         while session.next_run <= total && executed < max_runs {
             let i = session.next_run;
             let eps = self.epsilon(i - 1, total);
             let action_idx = self.select_action(&session.prev_state, eps)?;
-            let action = Action::from_index(action_idx);
+            let action = Action::from_index(runtime.cvars(), action_idx);
             session.cvars = action.apply(&session.cvars);
 
             let run_seed = self.rng.next_u64();
-            let result = run_episode(
+            let result = runtime.run_episode(
                 session.kind,
                 session.images,
                 &self.cfg.machine,
@@ -301,22 +338,23 @@ impl Controller {
                 session.workload_seed,
                 run_seed,
             )?;
-            let r = reward(session.reference_us, result.total_time_us);
+            let r = runtime.reward(session.reference_us, result.total_time_us);
             self.lifetime_runs += 1;
 
-            let state = build_state(
+            let state = runtime.build_state(
                 &result.pvars,
                 &session.tracker,
                 &session.cvars,
+                &self.cfg.machine,
                 session.images,
                 i,
                 result.eager_fraction,
             );
             let transition = Transition {
-                state: session.prev_state,
+                state: std::mem::take(&mut session.prev_state),
                 action: action_idx,
                 reward: r as f32,
-                next_state: state,
+                next_state: state.clone(),
                 done: i == total,
                 workload: Some(session.kind),
             };
@@ -363,7 +401,13 @@ impl Controller {
         let best_rec = log.best_run().expect("nonempty log");
         let best = best_rec.cvars.clone();
         let best_us = best_rec.total_time_us;
-        let ensemble_cfg = ensemble(&log.runs[1..], reference_us);
+        // A zero-run session has no tuning records: ship this backend's
+        // defaults rather than ensemble()'s coarrays fallback.
+        let ensemble_cfg = if log.runs.len() > 1 {
+            ensemble(&log.runs[1..], reference_us)
+        } else {
+            CvarSet::defaults(self.cfg.backend)
+        };
         Ok(TuningOutcome { log, best, ensemble: ensemble_cfg, reference_us, best_us })
     }
 
@@ -402,11 +446,12 @@ impl Controller {
         cvars: &CvarSet,
         repeats: usize,
     ) -> Result<f64> {
+        debug_assert_eq!(cvars.backend(), self.cfg.backend);
         let workload_seed = self.cfg.seed ^ seed_mix(kind, images);
         let mut total = 0.0;
         for _ in 0..repeats.max(1) {
             let run_seed = self.rng.next_u64();
-            let r = run_episode(
+            let r = self.runtime().run_episode(
                 kind, images, &self.cfg.machine, cvars, self.cfg.noise, workload_seed, run_seed,
             )?;
             total += r.total_time_us;

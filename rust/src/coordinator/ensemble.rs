@@ -4,7 +4,7 @@
 
 use crate::metrics::recorder::RunRecord;
 use crate::metrics::stats::median_i64;
-use crate::mpi_t::{CvarId, CvarSet, NUM_CVARS};
+use crate::mpi_t::{CvarId, CvarSet};
 
 /// Paper's "within 5% from the best" window.
 pub const ENSEMBLE_WINDOW: f64 = 0.05;
@@ -14,11 +14,16 @@ pub const ENSEMBLE_WINDOW: f64 = 0.05;
 /// `reference_us` is the first (vanilla) run's total time; runs slower
 /// than it are "penalized" and discarded before the 5% window applies.
 /// Falls back to the single best run's cvars if nothing else survives,
-/// and to vanilla if the log is empty.
+/// and to the coarrays defaults if the log is empty. The cvar count
+/// (and registry) come from the records' own backend, so the per-cvar
+/// median works for any backend's space — including categorical cvars,
+/// whose median is an option some surviving run actually selected
+/// (medians of resident values can never fabricate an out-of-domain
+/// choice index).
 pub fn ensemble(records: &[RunRecord], reference_us: f64) -> CvarSet {
-    if records.is_empty() {
+    let Some(first) = records.first() else {
         return CvarSet::vanilla();
-    }
+    };
     let best = records
         .iter()
         .map(|r| r.total_time_us)
@@ -39,8 +44,8 @@ pub fn ensemble(records: &[RunRecord], reference_us: f64) -> CvarSet {
         return least_bad.cvars.clone();
     }
 
-    let mut out = CvarSet::vanilla();
-    for c in 0..NUM_CVARS {
+    let mut out = CvarSet::defaults(first.cvars.backend());
+    for c in 0..out.len() {
         let mut values: Vec<i64> = good.iter().map(|r| r.cvars.get(CvarId(c))).collect();
         out.set(CvarId(c), median_i64(&mut values));
     }
@@ -133,6 +138,30 @@ mod tests {
     fn single_run_is_identity() {
         let out = ensemble(&[rec(90.0, 262_144, 1)], 100.0);
         assert_eq!(out.get(CvarId(5)), 262_144);
+        assert_eq!(out.get(CvarId(0)), 1);
+    }
+
+    #[test]
+    fn backend_generic_ensemble_medians_categorical_cvars() {
+        use crate::backend::BackendId;
+        let rec_c = |total: f64, bcast_alg: i64| {
+            let mut cv = CvarSet::defaults(BackendId::Collectives);
+            cv.set(CvarId(0), bcast_alg);
+            RunRecord {
+                run_index: 0,
+                cvars: cv,
+                total_time_us: total,
+                reward: 0.0,
+                action: None,
+                epsilon: 0.0,
+                pvars: PvarStats::default(),
+            }
+        };
+        // Survivors picked algorithms {1, 2, 1}: the shipped choice is
+        // the median resident option (1), an algorithm that really ran.
+        let out = ensemble(&[rec_c(80.0, 1), rec_c(81.0, 2), rec_c(82.0, 1)], 100.0);
+        assert_eq!(out.backend(), BackendId::Collectives);
+        assert_eq!(out.len(), 4);
         assert_eq!(out.get(CvarId(0)), 1);
     }
 }

@@ -39,8 +39,9 @@ use crate::runtime::{average_adam, average_params, AdamState, QParams};
 use crate::util::fnv::Fnv64;
 use crate::workloads::WorkloadKind;
 
+use crate::backend::BackendId;
+
 use super::replay::{ReplayBuffer, ReplayPolicyKind, Transition};
-use super::state::NUM_ACTIONS;
 
 /// A portable snapshot of one agent's learnable state — the hub's wire
 /// format for both pull (master → worker) and push (worker → hub).
@@ -51,8 +52,9 @@ pub enum AgentState {
     Dense { params: QParams, opt: AdamState },
     /// Tabular agent: the discretized Q-table as `(cell, Q(·))` entries
     /// **sorted by cell key**, so digests and averages are independent
-    /// of `HashMap` iteration order.
-    Table(Vec<(u64, [f32; NUM_ACTIONS])>),
+    /// of `HashMap` iteration order. Row width is the backend's action
+    /// count.
+    Table(Vec<(u64, Vec<f32>)>),
 }
 
 impl AgentState {
@@ -86,7 +88,7 @@ impl AgentState {
                 })
             }
             AgentState::Table(_) => {
-                let mut acc: BTreeMap<u64, ([f64; NUM_ACTIONS], usize)> = BTreeMap::new();
+                let mut acc: BTreeMap<u64, (Vec<f64>, usize)> = BTreeMap::new();
                 for s in states {
                     let entries = match s {
                         AgentState::Table(e) => e,
@@ -95,7 +97,12 @@ impl AgentState {
                         }
                     };
                     for (key, q) in entries {
-                        let (sum, n) = acc.entry(*key).or_insert(([0.0; NUM_ACTIONS], 0));
+                        let (sum, n) =
+                            acc.entry(*key).or_insert_with(|| (vec![0.0; q.len()], 0));
+                        anyhow::ensure!(
+                            sum.len() == q.len(),
+                            "tabular rows of mixed action width in one hub"
+                        );
                         for (a, &x) in sum.iter_mut().zip(q) {
                             *a += x as f64;
                         }
@@ -108,7 +115,7 @@ impl AgentState {
                     acc.into_iter()
                         .map(|(key, (sum, n))| {
                             let inv = 1.0 / n as f64;
-                            (key, sum.map(|x| (x * inv) as f32))
+                            (key, sum.into_iter().map(|x| (x * inv) as f32).collect())
                         })
                         .collect(),
                 ))
@@ -225,12 +232,17 @@ pub struct LearnerHub {
 
 impl LearnerHub {
     /// Fresh hub with an empty global replay buffer of `replay_capacity`
-    /// running `policy` (use the campaign base config's values so worker
-    /// pulls slot straight into their controllers).
-    pub fn new(replay_capacity: usize, policy: ReplayPolicyKind) -> LearnerHub {
+    /// running `policy` over `backend`'s dimensions (use the campaign
+    /// base config's values so worker pulls slot straight into their
+    /// controllers).
+    pub fn new(
+        replay_capacity: usize,
+        policy: ReplayPolicyKind,
+        backend: BackendId,
+    ) -> LearnerHub {
         LearnerHub {
             master: None,
-            replay: Arc::new(ReplayBuffer::with_policy(replay_capacity, policy)),
+            replay: Arc::new(ReplayBuffer::for_backend(replay_capacity, policy, backend)),
             merges: 0,
             total_transitions: 0,
         }
@@ -336,14 +348,14 @@ impl LearnerHub {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::coordinator::state::STATE_DIM;
+    use crate::backend::coarrays::{NUM_ACTIONS, STATE_DIM};
 
     fn table(entries: &[(u64, f32)]) -> AgentState {
         AgentState::Table(
             entries
                 .iter()
                 .map(|&(k, v)| {
-                    let mut q = [0.0; NUM_ACTIONS];
+                    let mut q = vec![0.0; NUM_ACTIONS];
                     q[0] = v;
                     (k, q)
                 })
@@ -353,10 +365,10 @@ mod tests {
 
     fn transition(reward: f32) -> Transition {
         Transition {
-            state: [0.0; STATE_DIM],
+            state: vec![0.0; STATE_DIM],
             action: 0,
             reward,
-            next_state: [0.0; STATE_DIM],
+            next_state: vec![0.0; STATE_DIM],
             done: false,
             workload: Some(WorkloadKind::LatticeBoltzmann),
         }
@@ -380,7 +392,7 @@ mod tests {
             AgentState::Table(entries) => {
                 assert_eq!(entries.len(), 3);
                 assert_eq!(entries[0], {
-                    let mut q = [0.0; NUM_ACTIONS];
+                    let mut q = vec![0.0; NUM_ACTIONS];
                     q[0] = 3.0;
                     (1, q)
                 });
@@ -408,7 +420,7 @@ mod tests {
 
     #[test]
     fn replay_shards_append_in_job_order() {
-        let mut hub = LearnerHub::new(64, ReplayPolicyKind::Uniform);
+        let mut hub = LearnerHub::new(64, ReplayPolicyKind::Uniform, BackendId::Coarrays);
         // Push order scrambled relative to job order would be a driver
         // bug; the hub only accepts job order and appends shard 0's
         // transitions before shard 1's, preserving in-shard order.
@@ -426,7 +438,7 @@ mod tests {
 
     #[test]
     fn out_of_order_contributions_are_rejected() {
-        let mut hub = LearnerHub::new(8, ReplayPolicyKind::Uniform);
+        let mut hub = LearnerHub::new(8, ReplayPolicyKind::Uniform, BackendId::Coarrays);
         let err = hub.merge(&[
             contribution(1, table(&[(1, 1.0)]), &[]),
             contribution(0, table(&[(1, 2.0)]), &[]),
@@ -442,8 +454,8 @@ mod tests {
 
     #[test]
     fn digest_tracks_master_and_replay() {
-        let mut a = LearnerHub::new(8, ReplayPolicyKind::Uniform);
-        let mut b = LearnerHub::new(8, ReplayPolicyKind::Uniform);
+        let mut a = LearnerHub::new(8, ReplayPolicyKind::Uniform, BackendId::Coarrays);
+        let mut b = LearnerHub::new(8, ReplayPolicyKind::Uniform, BackendId::Coarrays);
         assert_eq!(a.digest(), b.digest());
         a.merge(&[contribution(0, table(&[(1, 1.0)]), &[1.0])]).unwrap();
         b.merge(&[contribution(0, table(&[(1, 1.0)]), &[1.0])]).unwrap();
@@ -456,7 +468,7 @@ mod tests {
     fn view_snapshots_do_not_alias_the_hub() {
         // Copy-on-write: a merge after a pull must not mutate the
         // snapshot the worker still holds.
-        let mut hub = LearnerHub::new(8, ReplayPolicyKind::Uniform);
+        let mut hub = LearnerHub::new(8, ReplayPolicyKind::Uniform, BackendId::Coarrays);
         hub.merge(&[contribution(0, table(&[(7, 1.5)]), &[2.0])]).unwrap();
         let view = hub.view();
         hub.merge(&[contribution(0, table(&[(7, 9.0)]), &[3.0])]).unwrap();
@@ -471,7 +483,7 @@ mod tests {
 
     #[test]
     fn view_pull_is_zero_copy_until_the_next_merge() {
-        let mut hub = LearnerHub::new(8, ReplayPolicyKind::Uniform);
+        let mut hub = LearnerHub::new(8, ReplayPolicyKind::Uniform, BackendId::Coarrays);
         hub.merge(&[contribution(0, table(&[(1, 1.0)]), &[1.0, 2.0])]).unwrap();
         // Every pull of the same round shares one frozen buffer.
         let a = hub.view();
@@ -491,7 +503,7 @@ mod tests {
 
     #[test]
     fn summary_reports_policy_and_per_workload_occupancy() {
-        let mut hub = LearnerHub::new(16, ReplayPolicyKind::Stratified);
+        let mut hub = LearnerHub::new(16, ReplayPolicyKind::Stratified, BackendId::Coarrays);
         let mut pic = contribution(1, table(&[(2, 1.0)]), &[5.0]);
         for t in &mut pic.transitions {
             t.workload = Some(WorkloadKind::SkeletonPic);

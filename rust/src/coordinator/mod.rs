@@ -26,11 +26,10 @@ pub mod hub;
 pub mod relative;
 pub mod replay;
 pub mod reward;
-pub mod state;
 pub mod tabular;
 
-pub use actions::Action;
-pub use agent::{Agent, AgentKind, DqnAgent};
+pub use actions::{num_actions, one_hot, Action};
+pub use agent::{Agent, AgentKind, DqnAgent, TrainOutcome};
 pub use controller::{Controller, SharedLearning, TuningConfig, TuningOutcome};
 pub use episode::{run_episode, EpisodeResult};
 pub use hub::{AgentState, HubContribution, HubSummary, HubView, LearnerHub};
@@ -39,5 +38,9 @@ pub use replay::{
     LocalReplay, PrioritizedSampler, ReplayBuffer, ReplayPolicy, ReplayPolicyKind,
     StratifiedRing, Transition, UniformRing,
 };
-pub use state::{build_state, NUM_ACTIONS, STATE_DIM};
+// The coarrays backend's layout constants and state builder — kept as
+// re-exports for the paper-facing call sites (benches, the AOT
+// manifest contract); backend-generic code sizes everything from a
+// BackendId instead.
+pub use crate::backend::coarrays::{build_state, NUM_ACTIONS, STATE_DIM};
 pub use tabular::TabularAgent;

@@ -11,28 +11,41 @@
 
 use std::collections::HashMap;
 
-use crate::mpi_t::{PvarId, PvarStats, MPICH_PVARS};
+use crate::backend::BackendId;
+use crate::mpi_t::{PvarId, PvarStats, TOTAL_TIME_PVAR};
 
-/// Reference-run standardization state for relative pvars.
-#[derive(Debug, Default, Clone)]
+/// Reference-run standardization state for relative pvars. Which pvars
+/// are *declared relative* comes from the backend's pvar schema.
+#[derive(Debug, Clone)]
 pub struct RelativeTracker {
+    backend: BackendId,
     /// pvar id -> (reference mean, reference max)
     reference: HashMap<PvarId, (f64, f64)>,
 }
 
+impl Default for RelativeTracker {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
 impl RelativeTracker {
+    /// Tracker over the coarrays (paper) pvar schema.
     pub fn new() -> RelativeTracker {
-        RelativeTracker::default()
+        RelativeTracker::for_backend(BackendId::Coarrays)
+    }
+
+    /// Tracker over `backend`'s pvar schema.
+    pub fn for_backend(backend: BackendId) -> RelativeTracker {
+        RelativeTracker { backend, reference: HashMap::new() }
     }
 
     /// Record the reference (first) run — `AITUNING_FIRST_RUN=1`.
     pub fn record_reference(&mut self, stats: &PvarStats) {
+        let schema = self.backend.runtime().pvars();
         self.reference.clear();
         for (id, summary) in &stats.summaries {
-            let relative = MPICH_PVARS
-                .get(id.0)
-                .map(|d| d.relative)
-                .unwrap_or(true);
+            let relative = schema.get(id.0).map(|d| d.relative).unwrap_or(true);
             if relative {
                 self.reference.insert(*id, (summary.mean, summary.max));
             }
@@ -66,7 +79,7 @@ impl RelativeTracker {
 
     /// Reference total time (reward basis), if recorded.
     pub fn reference_total_us(&self) -> Option<f64> {
-        self.reference.get(&PvarId(4)).map(|&(_, max)| max)
+        self.reference.get(&TOTAL_TIME_PVAR).map(|&(_, max)| max)
     }
 }
 

@@ -8,17 +8,20 @@
 //! * [`ReplayPolicy`] — the trait every retention/selection strategy
 //!   implements. A policy owns its storage, exposes the resident
 //!   transitions in a *canonical deterministic order* (`get(0)` =
-//!   first surviving position of that order), and prices each slot
-//!   with a selection [`ReplayPolicy::weight`].
+//!   first surviving position of that order), prices each slot with a
+//!   selection [`ReplayPolicy::weight`], and may accept realized
+//!   TD-error [`ReplayPolicy::feedback`] from training.
 //! * [`UniformRing`] — the paper's behavior: FIFO retention, uniform
 //!   selection.
 //! * [`StratifiedRing`] — per-[`WorkloadKind`] slot quotas, so rare
 //!   workloads stay represented in the hub's global buffer when a
 //!   flood of transitions from common workloads would otherwise evict
 //!   them. Selection stays uniform over what is retained.
-//! * [`PrioritizedSampler`] — FIFO retention, reward-magnitude
-//!   proportional selection (a deterministic TD-error proxy) via
-//!   order-sequenced cumulative weights.
+//! * [`PrioritizedSampler`] — FIFO retention, priority-proportional
+//!   selection. Slots without train-time feedback price at the static
+//!   `|reward|` proxy; once [`ReplayPolicy::feedback`] delivers a
+//!   realized TD error for a slot, that error becomes the slot's
+//!   priority (classic adaptive PER, Schaul et al.).
 //! * [`ReplayBuffer`] — the concrete policy-dispatched buffer used by
 //!   the [`crate::coordinator::LearnerHub`] and by independent
 //!   controllers.
@@ -27,10 +30,17 @@
 //!   Pulling a hub view costs one pointer copy instead of cloning the
 //!   whole ring, so an N-worker round is O(1) per pull.
 //!
-//! Every policy is a pure function of its push sequence, and every
-//! selection is a pure function of (resident sequence, RNG state), so
-//! the campaign engine's 1-vs-N-worker fingerprint bit-identity
-//! contract holds under all three policies.
+//! Every policy is a pure function of its push **and feedback**
+//! sequence, and every selection is a pure function of (resident
+//! sequence, priorities, RNG state), so the campaign engine's
+//! 1-vs-N-worker fingerprint bit-identity contract holds under all
+//! three policies: feedback arrives from each controller's own
+//! deterministic training loop, never from a cross-thread channel.
+//!
+//! State vectors are dynamically sized ([`Transition`] carries
+//! `Vec<f32>`): the buffer is dimension-generic over the backend's
+//! [`crate::backend::TunableRuntime::state_dim`], and one-hot action
+//! rows are sized by the backend's action count.
 
 mod prioritized;
 mod stratified;
@@ -42,23 +52,24 @@ pub use uniform::UniformRing;
 
 use std::sync::Arc;
 
+use crate::backend::BackendId;
 use crate::runtime::TrainBatch;
 use crate::util::rng::Rng;
 use crate::workloads::WorkloadKind;
 
 use super::actions::one_hot;
-use super::state::{NUM_ACTIONS, STATE_DIM};
 
 /// One (s, a, r, s', done) experience tuple, tagged with the workload
 /// that generated it (`None` for synthetic-model transitions, which
 /// have no real application behind them). The tag is what stratified
 /// retention keys on and what per-workload occupancy reporting counts.
+/// State vectors are dynamically sized (the backend's `state_dim`).
 #[derive(Debug, Clone, PartialEq)]
 pub struct Transition {
-    pub state: [f32; STATE_DIM],
+    pub state: Vec<f32>,
     pub action: usize,
     pub reward: f32,
-    pub next_state: [f32; STATE_DIM],
+    pub next_state: Vec<f32>,
     pub done: bool,
     pub workload: Option<WorkloadKind>,
 }
@@ -71,7 +82,8 @@ pub enum ReplayPolicyKind {
     Uniform,
     /// Per-workload retention quotas, uniform selection.
     Stratified,
-    /// FIFO ring, reward-magnitude proportional selection.
+    /// FIFO ring, priority-proportional selection (|reward| proxy
+    /// until realized TD errors arrive via feedback).
     Prioritized,
 }
 
@@ -118,8 +130,9 @@ impl std::fmt::Display for ReplayPolicyKind {
 /// 1. **Deterministic retention** — the resident set and its canonical
 ///    order (`get(0..len)`) are a pure function of the push sequence.
 /// 2. **Deterministic pricing** — `weight(i)` depends only on the
-///    resident transition at position `i`; uniform policies return
-///    `1.0` and report `weighted() == false` so selection can take the
+///    resident transition at position `i` and the feedback that slot
+///    has received; uniform policies return `1.0` and report
+///    `weighted() == false` so selection can take the
 ///    without-replacement subset path.
 /// 3. **Newest-push survival** — `push` never evicts the transition it
 ///    is inserting, and `latest()` always returns it.
@@ -145,6 +158,10 @@ pub trait ReplayPolicy {
     fn weighted(&self) -> bool {
         false
     }
+    /// Deliver a realized training priority (|TD error|) for the
+    /// resident transition at canonical position `i`. Policies without
+    /// priority state ignore it.
+    fn feedback(&mut self, _i: usize, _priority: f64) {}
 }
 
 /// A read-only logical sequence of transitions to select minibatches
@@ -155,22 +172,29 @@ trait SampleSeq {
     fn seq_get(&self, i: usize) -> &Transition;
     fn seq_weighted(&self) -> bool;
     fn seq_weight(&self, i: usize) -> f64;
+    /// Action-space width of the backend whose transitions these are
+    /// (one-hot row length).
+    fn seq_num_actions(&self) -> usize;
 }
 
 /// Select `batch` positions from `seq` and shape them for the `q_train`
-/// artifact.
+/// artifact; also returns the drawn canonical positions so training can
+/// route realized TD errors back to the slots it visited.
 ///
 /// * Unweighted + `len >= batch`: a **without-replacement** subset via
 ///   [`Rng::sample_indices`] — the paper trains on a random subset of
 ///   the experience, and drawing with replacement over-weighted
-///   duplicate transitions inside one minibatch. (The previous
-///   implementation always drew with replacement.)
+///   duplicate transitions inside one minibatch.
 /// * Unweighted + `len < batch` (warmup): with replacement — a subset
 ///   of the required size does not exist yet.
 /// * Weighted: proportional draws with replacement over deterministic,
 ///   order-sequenced cumulative weights (`f64` accumulated in canonical
 ///   order, so the draw is bit-identical for identical sequences).
-fn sample_seq<S: SampleSeq + ?Sized>(seq: &S, batch: usize, rng: &mut Rng) -> TrainBatch {
+fn sample_seq<S: SampleSeq + ?Sized>(
+    seq: &S,
+    batch: usize,
+    rng: &mut Rng,
+) -> (TrainBatch, Vec<usize>) {
     let n = seq.seq_len();
     assert!(n > 0, "sampling from empty replay buffer");
     let picks: Vec<usize> = if seq.seq_weighted() {
@@ -194,20 +218,22 @@ fn sample_seq<S: SampleSeq + ?Sized>(seq: &S, batch: usize, rng: &mut Rng) -> Tr
         (0..batch).map(|_| rng.below(n as u64) as usize).collect()
     };
 
-    let mut states = Vec::with_capacity(batch * STATE_DIM);
-    let mut actions = Vec::with_capacity(batch * NUM_ACTIONS);
+    let num_actions = seq.seq_num_actions();
+    let state_dim = seq.seq_get(0).state.len();
+    let mut states = Vec::with_capacity(batch * state_dim);
+    let mut actions = Vec::with_capacity(batch * num_actions);
     let mut rewards = Vec::with_capacity(batch);
-    let mut next_states = Vec::with_capacity(batch * STATE_DIM);
+    let mut next_states = Vec::with_capacity(batch * state_dim);
     let mut done = Vec::with_capacity(batch);
-    for i in picks {
+    for &i in &picks {
         let t = seq.seq_get(i);
         states.extend_from_slice(&t.state);
-        actions.extend_from_slice(&one_hot(t.action));
+        actions.extend_from_slice(&one_hot(t.action, num_actions));
         rewards.push(t.reward);
         next_states.extend_from_slice(&t.next_state);
         done.push(if t.done { 1.0 } else { 0.0 });
     }
-    TrainBatch { states, actions_onehot: actions, rewards, next_states, done }
+    (TrainBatch { states, actions_onehot: actions, rewards, next_states, done }, picks)
 }
 
 /// Policy-dispatched storage of a [`ReplayBuffer`].
@@ -218,34 +244,46 @@ enum Store {
     Prioritized(PrioritizedSampler),
 }
 
-/// Bounded replay buffer running one [`ReplayPolicy`].
+/// Bounded replay buffer running one [`ReplayPolicy`], tagged with the
+/// backend whose dimensions its transitions carry.
 ///
 /// `Clone` is part of the shared-learning contract: a clone reproduces
-/// the resident set, canonical order and retention cursors exactly, so
-/// hub merges are bit-reproducible. The hub hands snapshots to workers
-/// behind an `Arc` ([`crate::coordinator::HubView`]); cloning only
-/// happens when the hub itself mutates a still-shared buffer
-/// (`Arc::make_mut`, at most once per merge round).
+/// the resident set, canonical order, retention cursors and priorities
+/// exactly, so hub merges are bit-reproducible. The hub hands snapshots
+/// to workers behind an `Arc` ([`crate::coordinator::HubView`]);
+/// cloning only happens when the hub itself mutates a still-shared
+/// buffer (`Arc::make_mut`, at most once per merge round).
 #[derive(Debug, Clone)]
 pub struct ReplayBuffer {
     store: Store,
+    backend: BackendId,
     total_seen: usize,
 }
 
 impl ReplayBuffer {
-    /// Uniform-policy buffer (the historical constructor).
+    /// Uniform-policy coarrays buffer (the historical constructor).
     pub fn new(capacity: usize) -> ReplayBuffer {
         ReplayBuffer::with_policy(capacity, ReplayPolicyKind::Uniform)
     }
 
+    /// Coarrays-backend buffer with an explicit policy.
     pub fn with_policy(capacity: usize, kind: ReplayPolicyKind) -> ReplayBuffer {
+        ReplayBuffer::for_backend(capacity, kind, BackendId::Coarrays)
+    }
+
+    /// Fully-specified buffer for any backend.
+    pub fn for_backend(
+        capacity: usize,
+        kind: ReplayPolicyKind,
+        backend: BackendId,
+    ) -> ReplayBuffer {
         assert!(capacity > 0);
         let store = match kind {
             ReplayPolicyKind::Uniform => Store::Uniform(UniformRing::new(capacity)),
             ReplayPolicyKind::Stratified => Store::Stratified(StratifiedRing::new(capacity)),
             ReplayPolicyKind::Prioritized => Store::Prioritized(PrioritizedSampler::new(capacity)),
         };
-        ReplayBuffer { store, total_seen: 0 }
+        ReplayBuffer { store, backend, total_seen: 0 }
     }
 
     /// The policy seam (read side).
@@ -269,8 +307,22 @@ impl ReplayBuffer {
         self.policy().kind()
     }
 
+    /// The backend whose dimensions this buffer's transitions carry.
+    pub fn backend(&self) -> BackendId {
+        self.backend
+    }
+
     pub fn push(&mut self, t: Transition) {
-        assert!(t.action < NUM_ACTIONS);
+        // Release-build guard (as before the backend lift): a foreign
+        // action index must fail here, at the push site, not as an
+        // out-of-bounds one-hot row during some later sample().
+        assert!(
+            t.action < self.backend.num_actions(),
+            "action {} out of range for the {} backend's {}-action space",
+            t.action,
+            self.backend,
+            self.backend.num_actions()
+        );
         self.total_seen += 1;
         self.policy_mut().push(t);
     }
@@ -324,7 +376,20 @@ impl ReplayBuffer {
     /// policy (see [`sample_seq`] for the selection rules), shaped for
     /// the `q_train` artifact.
     pub fn sample(&self, batch: usize, rng: &mut Rng) -> TrainBatch {
+        self.sample_with_picks(batch, rng).0
+    }
+
+    /// [`ReplayBuffer::sample`] plus the drawn canonical positions, so
+    /// the trainer can route realized TD errors back via
+    /// [`ReplayBuffer::feedback`].
+    pub fn sample_with_picks(&self, batch: usize, rng: &mut Rng) -> (TrainBatch, Vec<usize>) {
         sample_seq(self, batch, rng)
+    }
+
+    /// Deliver a realized training priority for canonical position `i`
+    /// (no-op under priority-free policies).
+    pub fn feedback(&mut self, i: usize, priority: f64) {
+        self.policy_mut().feedback(i, priority);
     }
 }
 
@@ -340,6 +405,9 @@ impl SampleSeq for ReplayBuffer {
     }
     fn seq_weight(&self, i: usize) -> f64 {
         self.policy().weight(i)
+    }
+    fn seq_num_actions(&self) -> usize {
+        self.backend.num_actions()
     }
 }
 
@@ -364,6 +432,12 @@ impl SampleSeq for ReplayBuffer {
 /// exists to prevent — so the stratified window instead overcommits by
 /// at most the tail length (bounded by one sync segment; the hub
 /// re-applies quotas at the next merge).
+///
+/// TD-error feedback only lands on **tail** positions: the base is a
+/// frozen snapshot shared by every worker, so mutating its priorities
+/// would both race and break worker-count invariance. Base slots keep
+/// the static `|reward|` proxy until the next merge round re-prices
+/// them locally.
 #[derive(Debug, Clone)]
 pub struct LocalReplay {
     base: Option<Arc<ReplayBuffer>>,
@@ -371,8 +445,17 @@ pub struct LocalReplay {
 }
 
 impl LocalReplay {
+    /// Coarrays-backend window (the historical constructor).
     pub fn new(capacity: usize, kind: ReplayPolicyKind) -> LocalReplay {
-        LocalReplay { base: None, tail: ReplayBuffer::with_policy(capacity, kind) }
+        LocalReplay::for_backend(capacity, kind, BackendId::Coarrays)
+    }
+
+    pub fn for_backend(
+        capacity: usize,
+        kind: ReplayPolicyKind,
+        backend: BackendId,
+    ) -> LocalReplay {
+        LocalReplay { base: None, tail: ReplayBuffer::for_backend(capacity, kind, backend) }
     }
 
     /// Adopt a hub snapshot as the shared base (zero-copy: one `Arc`
@@ -383,7 +466,13 @@ impl LocalReplay {
             self.tail.kind(),
             "hub and controller must run the same replay policy"
         );
-        self.tail = ReplayBuffer::with_policy(self.tail.capacity(), self.tail.kind());
+        debug_assert_eq!(
+            snapshot.backend(),
+            self.tail.backend(),
+            "hub and controller must run the same backend"
+        );
+        self.tail =
+            ReplayBuffer::for_backend(self.tail.capacity(), self.tail.kind(), self.tail.backend());
         self.base = Some(snapshot);
     }
 
@@ -424,12 +513,19 @@ impl LocalReplay {
         self.len() == 0
     }
 
+    /// Positions `0..visible_base` belong to the adopted base; the rest
+    /// to the tail.
+    fn visible_base(&self) -> usize {
+        self.base.as_ref().map(|b| b.len()).unwrap_or(0) - self.skip()
+    }
+
     /// Route logical position `i` to the buffer that holds it and the
     /// position within that buffer — the single source of truth for the
-    /// base-vs-tail window layout, shared by `get` and `seq_weight` so
-    /// sampled transitions and their weights stay in lockstep.
+    /// base-vs-tail window layout, shared by `get`, `seq_weight` and
+    /// `feedback` so sampled transitions, their weights and their
+    /// priority updates stay in lockstep.
     fn locate(&self, i: usize) -> (&ReplayBuffer, usize) {
-        let visible_base = self.base.as_ref().map(|b| b.len()).unwrap_or(0) - self.skip();
+        let visible_base = self.visible_base();
         if i < visible_base {
             (self.base.as_ref().expect("visible_base > 0 implies base"), self.skip() + i)
         } else {
@@ -446,7 +542,23 @@ impl LocalReplay {
     /// Select a minibatch across the logical window (same selection
     /// rules as [`ReplayBuffer::sample`]).
     pub fn sample(&self, batch: usize, rng: &mut Rng) -> TrainBatch {
+        self.sample_with_picks(batch, rng).0
+    }
+
+    /// [`LocalReplay::sample`] plus the drawn logical positions (for
+    /// TD-error feedback).
+    pub fn sample_with_picks(&self, batch: usize, rng: &mut Rng) -> (TrainBatch, Vec<usize>) {
         sample_seq(self, batch, rng)
+    }
+
+    /// Deliver a realized training priority for logical position `i`.
+    /// Only tail positions are re-priced (the base is a frozen shared
+    /// snapshot — see the type docs); base positions are ignored.
+    pub fn feedback(&mut self, i: usize, priority: f64) {
+        let visible_base = self.visible_base();
+        if i >= visible_base {
+            self.tail.feedback(i - visible_base, priority);
+        }
     }
 }
 
@@ -464,15 +576,19 @@ impl SampleSeq for LocalReplay {
         let (buffer, j) = self.locate(i);
         buffer.policy().weight(j)
     }
+    fn seq_num_actions(&self) -> usize {
+        self.tail.backend().num_actions()
+    }
 }
 
 #[cfg(test)]
 pub(crate) fn test_transition(reward: f32, workload: Option<WorkloadKind>) -> Transition {
+    let dim = BackendId::Coarrays.state_dim();
     Transition {
-        state: [0.0; STATE_DIM],
+        state: vec![0.0; dim],
         action: 1,
         reward,
-        next_state: [0.0; STATE_DIM],
+        next_state: vec![0.0; dim],
         done: false,
         workload,
     }
@@ -481,6 +597,9 @@ pub(crate) fn test_transition(reward: f32, workload: Option<WorkloadKind>) -> Tr
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    const STATE_DIM: usize = 18;
+    const NUM_ACTIONS: usize = 13;
 
     fn t(reward: f32) -> Transition {
         test_transition(reward, None)
@@ -513,6 +632,25 @@ mod tests {
         let mut rng = Rng::new(0);
         let b = rb.sample(32, &mut rng);
         assert!(b.validate(32, STATE_DIM, NUM_ACTIONS).is_ok());
+    }
+
+    #[test]
+    fn collectives_buffer_shapes_to_its_backend_dims() {
+        let backend = BackendId::Collectives;
+        let mut rb = ReplayBuffer::for_backend(16, ReplayPolicyKind::Uniform, backend);
+        assert_eq!(rb.backend(), backend);
+        for i in 0..6 {
+            rb.push(Transition {
+                state: vec![0.1; backend.state_dim()],
+                action: i % backend.num_actions(),
+                reward: 0.0,
+                next_state: vec![0.2; backend.state_dim()],
+                done: false,
+                workload: Some(WorkloadKind::PrkCollectives),
+            });
+        }
+        let b = rb.sample(8, &mut Rng::new(1));
+        assert!(b.validate(8, backend.state_dim(), backend.num_actions()).is_ok());
     }
 
     #[test]
@@ -650,6 +788,63 @@ mod tests {
     }
 
     #[test]
+    fn td_feedback_overrides_the_reward_proxy() {
+        // Adaptive PER: a zero-reward slot that keeps producing large
+        // TD errors must out-draw its |reward| proxy once feedback
+        // lands; feedback on a uniform buffer is a no-op.
+        let mut rb = ReplayBuffer::with_policy(8, ReplayPolicyKind::Prioritized);
+        for _ in 0..8 {
+            rb.push(t(0.0));
+        }
+        let before = rb.policy().weight(3);
+        assert!((before - PRIORITY_FLOOR).abs() < 1e-12);
+        rb.feedback(3, 1.0);
+        let after = rb.policy().weight(3);
+        assert!((after - (1.0 + PRIORITY_FLOOR)).abs() < 1e-12, "weight {after}");
+        // The heavy slot dominates draws now.
+        let b = rb.sample(256, &mut Rng::new(9));
+        let (_, picks) = rb.sample_with_picks(256, &mut Rng::new(9));
+        assert_eq!(b.rewards.len(), picks.len());
+        let heavy = picks.iter().filter(|&&i| i == 3).count();
+        assert!(heavy > 128, "fed-back slot drawn only {heavy}/256 times");
+
+        let mut uni = ReplayBuffer::new(8);
+        for _ in 0..8 {
+            uni.push(t(0.0));
+        }
+        uni.feedback(3, 1.0); // no-op
+        assert!((uni.policy().weight(3) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn td_feedback_evicts_with_its_transition() {
+        let mut rb = ReplayBuffer::with_policy(2, ReplayPolicyKind::Prioritized);
+        rb.push(t(0.0));
+        rb.push(t(0.0));
+        rb.feedback(0, 5.0);
+        // Pushing evicts slot 0; the learned priority must slide with
+        // the ring, not attach to position 0 forever.
+        rb.push(t(0.25));
+        assert!((rb.policy().weight(0) - PRIORITY_FLOOR).abs() < 1e-12, "stale priority kept");
+        assert!((rb.policy().weight(1) - (0.25 + PRIORITY_FLOOR)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn sample_with_picks_agrees_with_sample() {
+        let mut rb = ReplayBuffer::new(32);
+        for i in 0..20 {
+            rb.push(t(i as f32));
+        }
+        let plain = rb.sample(8, &mut Rng::new(4));
+        let (batch, picks) = rb.sample_with_picks(8, &mut Rng::new(4));
+        assert_eq!(plain.rewards, batch.rewards);
+        assert_eq!(picks.len(), 8);
+        for (&i, &r) in picks.iter().zip(&batch.rewards) {
+            assert_eq!(rb.get(i).reward, r, "pick {i} does not match its row");
+        }
+    }
+
+    #[test]
     fn local_replay_without_base_is_a_plain_ring() {
         let mut local = LocalReplay::new(3, ReplayPolicyKind::Uniform);
         assert!(local.is_empty());
@@ -740,5 +935,27 @@ mod tests {
         let b = local.sample(8, &mut Rng::new(17));
         assert_eq!(a.rewards, b.rewards);
         assert_eq!(a.states, b.states);
+    }
+
+    #[test]
+    fn local_replay_feedback_reaches_tail_and_skips_frozen_base() {
+        let mut hub = ReplayBuffer::with_policy(8, ReplayPolicyKind::Prioritized);
+        for _ in 0..3 {
+            hub.push(t(0.0));
+        }
+        let snapshot = Arc::new(hub);
+        let mut local = LocalReplay::for_backend(
+            8,
+            ReplayPolicyKind::Prioritized,
+            BackendId::Coarrays,
+        );
+        local.adopt(Arc::clone(&snapshot));
+        local.push(t(0.0));
+        local.push(t(0.0));
+        // Logical window: [base 0, base 1, base 2, tail 0, tail 1].
+        local.feedback(1, 7.0); // base position: ignored (frozen)
+        local.feedback(4, 7.0); // tail position: re-priced
+        assert!((snapshot.policy().weight(1) - PRIORITY_FLOOR).abs() < 1e-12);
+        assert!((local.tail.policy().weight(1) - (7.0 + PRIORITY_FLOOR)).abs() < 1e-12);
     }
 }

@@ -1,33 +1,51 @@
 //! Priority-weighted selection: FIFO retention like the uniform ring,
-//! but minibatch draws are proportional to reward magnitude — a
-//! deterministic stand-in for TD-error prioritization (Schaul et al.'s
-//! PER) that needs no train-time priority feedback. Transitions whose
-//! configuration change moved the run time (|reward| large, either
-//! direction) carry the §5.2 learning signal; zero-reward transitions
-//! still get a floor weight so nothing becomes unsampleable.
+//! but minibatch draws are proportional to each slot's priority
+//! (Schaul et al.'s PER).
+//!
+//! A freshly-pushed transition has no realized TD error yet, so it is
+//! priced by the deterministic `|reward|` proxy — transitions whose
+//! configuration change moved the run time carry the §5.2 learning
+//! signal. Once the trainer reports a realized TD error for a slot
+//! ([`super::ReplayPolicy::feedback`], routed from
+//! `Agent::train` through the controller), that error becomes the
+//! slot's priority and *adapts* as the estimator improves — classic
+//! prioritized experience replay, still fully deterministic because
+//! feedback arrives from the controller's own sequential training
+//! loop. Zero-priority slots keep a floor weight so nothing becomes
+//! unsampleable.
+
+use std::collections::VecDeque;
 
 use super::uniform::UniformRing;
 use super::{ReplayPolicy, ReplayPolicyKind, Transition};
 
-/// Additive weight floor: a zero-reward transition's selection weight.
-/// Rewards are clamped to [-1, 1] upstream, so the floor gives the
-/// least-informative transition 5% of the weight of the most
+/// Additive weight floor: a zero-priority transition's selection
+/// weight. Rewards are clamped to [-1, 1] upstream, so the floor gives
+/// the least-informative transition 5% of the weight of the most
 /// informative one.
 pub const PRIORITY_FLOOR: f64 = 0.05;
 
-/// Reward-magnitude proportional selection over FIFO retention.
+/// Priority-proportional selection over FIFO retention.
 ///
 /// Retention *is* a [`UniformRing`] (delegated, not duplicated, so the
 /// two policies cannot drift apart); only the selection pricing
-/// differs.
+/// differs. `learned` rides in lockstep with the ring's canonical
+/// (generation) order: `None` = no feedback yet, price by the
+/// `|reward|` proxy.
 #[derive(Debug, Clone)]
 pub struct PrioritizedSampler {
     ring: UniformRing,
+    learned: VecDeque<Option<f64>>,
 }
 
 impl PrioritizedSampler {
     pub fn new(capacity: usize) -> PrioritizedSampler {
-        PrioritizedSampler { ring: UniformRing::new(capacity) }
+        PrioritizedSampler { ring: UniformRing::new(capacity), learned: VecDeque::new() }
+    }
+
+    /// Slots that have received train-time feedback (diagnostics).
+    pub fn fed_back(&self) -> usize {
+        self.learned.iter().filter(|p| p.is_some()).count()
     }
 }
 
@@ -41,6 +59,12 @@ impl ReplayPolicy for PrioritizedSampler {
     }
 
     fn push(&mut self, t: Transition) {
+        // Mirror the ring's eviction so priorities stay aligned with
+        // canonical positions.
+        if self.ring.len() == self.ring.capacity() {
+            self.learned.pop_front();
+        }
+        self.learned.push_back(None);
         self.ring.push(t);
     }
 
@@ -57,10 +81,20 @@ impl ReplayPolicy for PrioritizedSampler {
     }
 
     fn weight(&self, i: usize) -> f64 {
-        self.ring.get(i).reward.abs() as f64 + PRIORITY_FLOOR
+        let proxy = || self.ring.get(i).reward.abs() as f64;
+        self.learned[i].unwrap_or_else(proxy) + PRIORITY_FLOOR
     }
 
     fn weighted(&self) -> bool {
         true
+    }
+
+    fn feedback(&mut self, i: usize, priority: f64) {
+        if let Some(slot) = self.learned.get_mut(i) {
+            // Guard against NaN/negative feedback poisoning the weights.
+            if priority.is_finite() {
+                *slot = Some(priority.max(0.0));
+            }
+        }
     }
 }

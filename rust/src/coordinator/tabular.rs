@@ -2,7 +2,9 @@
 //! Q in a hash table — the paper's §3.1 "just keeping track of the
 //! Q-values of all the visited states in a table". Used for tests that
 //! must not depend on the AOT artifacts, and as the DQN-vs-tabular
-//! ablation.
+//! ablation. Dimension-generic: the action count arrives at
+//! construction (the backend's derived action space) and the state
+//! width is whatever the batch rows carry.
 
 use std::collections::HashMap;
 
@@ -10,13 +12,14 @@ use anyhow::Result;
 
 use crate::runtime::TrainBatch;
 
-use super::agent::Agent;
+use super::agent::{Agent, TrainOutcome};
 use super::hub::{AgentState, HubView};
-use super::state::{NUM_ACTIONS, STATE_DIM};
 
 /// Discretized-state Q-table agent.
 pub struct TabularAgent {
-    q: HashMap<u64, [f32; NUM_ACTIONS]>,
+    q: HashMap<u64, Vec<f32>>,
+    /// Action-space width (row length of every table entry).
+    num_actions: usize,
     /// Per-feature quantization buckets.
     buckets: f32,
     /// Q-learning step size (table update).
@@ -25,8 +28,16 @@ pub struct TabularAgent {
 }
 
 impl TabularAgent {
-    pub fn new() -> TabularAgent {
-        TabularAgent { q: HashMap::new(), buckets: 8.0, alpha: 0.25, losses: Vec::new() }
+    /// Table over `num_actions` actions (the backend's derived count).
+    pub fn new(num_actions: usize) -> TabularAgent {
+        assert!(num_actions > 0);
+        TabularAgent {
+            q: HashMap::new(),
+            num_actions,
+            buckets: 8.0,
+            alpha: 0.25,
+            losses: Vec::new(),
+        }
     }
 
     /// Hash a state into its discretization cell.
@@ -43,11 +54,9 @@ impl TabularAgent {
     pub fn states_seen(&self) -> usize {
         self.q.len()
     }
-}
 
-impl Default for TabularAgent {
-    fn default() -> Self {
-        Self::new()
+    pub fn num_actions(&self) -> usize {
+        self.num_actions
     }
 }
 
@@ -56,18 +65,26 @@ impl Agent for TabularAgent {
         "tabular"
     }
 
-    fn q_values(&mut self, state: &[f32; STATE_DIM]) -> Result<Vec<f32>> {
+    fn q_values(&mut self, state: &[f32]) -> Result<Vec<f32>> {
         let key = self.key(state);
-        Ok(self.q.get(&key).map(|v| v.to_vec()).unwrap_or_else(|| vec![0.0; NUM_ACTIONS]))
+        Ok(self.q.get(&key).cloned().unwrap_or_else(|| vec![0.0; self.num_actions]))
     }
 
-    fn train(&mut self, batch: &TrainBatch, _lr: f32, gamma: f32) -> Result<f32> {
+    fn train(&mut self, batch: &TrainBatch, _lr: f32, gamma: f32) -> Result<TrainOutcome> {
         let b = batch.rewards.len();
+        anyhow::ensure!(b > 0, "empty train batch");
+        anyhow::ensure!(
+            batch.states.len() % b == 0 && batch.actions_onehot.len() == b * self.num_actions,
+            "batch shapes do not match a {}-action table",
+            self.num_actions
+        );
+        let state_dim = batch.states.len() / b;
+        let mut td_errors = Vec::with_capacity(b);
         let mut total_sq = 0.0f32;
         for i in 0..b {
-            let s = &batch.states[i * STATE_DIM..(i + 1) * STATE_DIM];
-            let s2 = &batch.next_states[i * STATE_DIM..(i + 1) * STATE_DIM];
-            let a = batch.actions_onehot[i * NUM_ACTIONS..(i + 1) * NUM_ACTIONS]
+            let s = &batch.states[i * state_dim..(i + 1) * state_dim];
+            let s2 = &batch.next_states[i * state_dim..(i + 1) * state_dim];
+            let a = batch.actions_onehot[i * self.num_actions..(i + 1) * self.num_actions]
                 .iter()
                 .position(|&x| x > 0.5)
                 .unwrap_or(0);
@@ -79,14 +96,17 @@ impl Agent for TabularAgent {
                 .unwrap_or(0.0);
             let target = batch.rewards[i] + gamma * (1.0 - batch.done[i]) * max_next;
             let key = self.key(s);
-            let entry = self.q.entry(key).or_insert([0.0; NUM_ACTIONS]);
+            let entry = self.q.entry(key).or_insert_with(|| vec![0.0; self.num_actions]);
             let td = target - entry[a];
             entry[a] += self.alpha * td;
+            td_errors.push(td);
             total_sq += td * td;
         }
         let loss = total_sq / b as f32;
         self.losses.push(loss);
-        Ok(loss)
+        // The table computes exact per-sample TD errors as a byproduct
+        // — the adaptive-PER feedback signal.
+        Ok(TrainOutcome { loss, td_errors: Some(td_errors) })
     }
 
     fn loss_history(&self) -> &[f32] {
@@ -96,8 +116,8 @@ impl Agent for TabularAgent {
     fn snapshot(&self) -> Result<AgentState> {
         // Sorted by cell key: the hub's Table invariant (HashMap
         // iteration order must never leak into merge inputs).
-        let mut entries: Vec<(u64, [f32; NUM_ACTIONS])> =
-            self.q.iter().map(|(&k, &v)| (k, v)).collect();
+        let mut entries: Vec<(u64, Vec<f32>)> =
+            self.q.iter().map(|(&k, v)| (k, v.clone())).collect();
         entries.sort_unstable_by_key(|&(k, _)| k);
         Ok(AgentState::Table(entries))
     }
@@ -106,7 +126,7 @@ impl Agent for TabularAgent {
         match view.master.as_deref() {
             None => Ok(()),
             Some(AgentState::Table(entries)) => {
-                self.q = entries.iter().map(|&(k, v)| (k, v)).collect();
+                self.q = entries.iter().map(|(k, v)| (*k, v.clone())).collect();
                 Ok(())
             }
             Some(AgentState::Dense { .. }) => {
@@ -119,12 +139,17 @@ impl Agent for TabularAgent {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::backend::coarrays::{NUM_ACTIONS, STATE_DIM};
     use crate::coordinator::actions::one_hot;
+
+    fn agent() -> TabularAgent {
+        TabularAgent::new(NUM_ACTIONS)
+    }
 
     fn batch(s: [f32; STATE_DIM], a: usize, r: f32, s2: [f32; STATE_DIM]) -> TrainBatch {
         TrainBatch {
             states: s.to_vec(),
-            actions_onehot: one_hot(a).to_vec(),
+            actions_onehot: one_hot(a, NUM_ACTIONS),
             rewards: vec![r],
             next_states: s2.to_vec(),
             done: vec![0.0],
@@ -133,7 +158,7 @@ mod tests {
 
     #[test]
     fn learns_action_values() {
-        let mut agent = TabularAgent::new();
+        let mut agent = agent();
         let s = [0.1; STATE_DIM];
         let s2 = [0.9; STATE_DIM];
         for _ in 0..50 {
@@ -145,8 +170,53 @@ mod tests {
     }
 
     #[test]
+    fn reports_per_sample_td_errors() {
+        let mut agent = agent();
+        let s = [0.1; STATE_DIM];
+        let out = agent.train(&batch(s, 2, 1.0, s), 0.0, 0.0).unwrap();
+        let tds = out.td_errors.expect("tabular agent reports TD errors");
+        assert_eq!(tds.len(), 1);
+        assert!((tds[0] - 1.0).abs() < 1e-6, "first TD error is the full reward");
+        // As the entry converges the TD error shrinks.
+        for _ in 0..60 {
+            agent.train(&batch(s, 2, 1.0, s), 0.0, 0.0).unwrap();
+        }
+        let late = agent.train(&batch(s, 2, 1.0, s), 0.0, 0.0).unwrap();
+        assert!(late.td_errors.unwrap()[0].abs() < 0.01);
+    }
+
+    #[test]
+    fn arbitrary_action_width_is_respected() {
+        // The collectives backend's 14-action table must shape rows
+        // accordingly — nothing assumes 13.
+        let n = crate::backend::BackendId::Collectives.num_actions();
+        let mut agent = TabularAgent::new(n);
+        let s = vec![0.25f32; 15];
+        let b = TrainBatch {
+            states: s.clone(),
+            actions_onehot: one_hot(n - 1, n),
+            rewards: vec![0.5],
+            next_states: s.clone(),
+            done: vec![0.0],
+        };
+        agent.train(&b, 0.0, 0.0).unwrap();
+        let q = agent.q_values(&s).unwrap();
+        assert_eq!(q.len(), n);
+        assert!(q[n - 1] > 0.0);
+        // A mismatched one-hot width is rejected, not misread.
+        let bad = TrainBatch {
+            states: s.clone(),
+            actions_onehot: one_hot(2, 13),
+            rewards: vec![0.5],
+            next_states: s,
+            done: vec![0.0],
+        };
+        assert!(agent.train(&bad, 0.0, 0.0).is_err());
+    }
+
+    #[test]
     fn distinct_states_do_not_collide() {
-        let mut agent = TabularAgent::new();
+        let mut agent = agent();
         let a = [0.0; STATE_DIM];
         let mut b = [0.0; STATE_DIM];
         b[5] = 1.5;
@@ -157,7 +227,7 @@ mod tests {
 
     #[test]
     fn snapshot_sync_roundtrip_preserves_q_values() {
-        let mut a = TabularAgent::new();
+        let mut a = agent();
         let s = [0.3; STATE_DIM];
         for _ in 0..20 {
             a.train(&batch(s, 2, 1.0, s), 0.0, 0.5).unwrap();
@@ -170,7 +240,7 @@ mod tests {
             }
             AgentState::Dense { .. } => panic!("expected table"),
         }
-        let mut b = TabularAgent::new();
+        let mut b = agent();
         let view = HubView {
             round: 1,
             master: Some(std::sync::Arc::new(snap)),
@@ -192,12 +262,12 @@ mod tests {
     fn loss_decreases_on_repetition() {
         // With s' = s and gamma = 0.9 the fixed point is Q = 5.0; the TD
         // error contracts by (1 - alpha(1-gamma)) per update.
-        let mut agent = TabularAgent::new();
+        let mut agent = agent();
         let s = [0.2; STATE_DIM];
-        let first = agent.train(&batch(s, 0, 0.5, s), 0.0, 0.9).unwrap();
+        let first = agent.train(&batch(s, 0, 0.5, s), 0.0, 0.9).unwrap().loss;
         let mut last = first;
         for _ in 0..300 {
-            last = agent.train(&batch(s, 0, 0.5, s), 0.0, 0.9).unwrap();
+            last = agent.train(&batch(s, 0, 0.5, s), 0.0, 0.9).unwrap().loss;
         }
         assert!(last < first * 0.01, "TD error should shrink: {first} -> {last}");
     }

@@ -22,6 +22,7 @@
 //! Python never runs on the tuning path: after `make artifacts`, the
 //! `aituning` binary is self-contained.
 
+pub mod backend;
 pub mod baselines;
 pub mod campaign;
 pub mod coarray;

@@ -12,15 +12,16 @@
 
 use anyhow::{bail, Context, Result};
 
+use aituning::backend::BackendId;
 use aituning::baselines::{human_tuned, Evolutionary, RandomSearch, Searcher};
 use aituning::campaign::{
     ablation_table, job_grid, CampaignConfig, CampaignEngine, CampaignJob, EvalSpec,
 };
 use aituning::convergence::{run_convergence, ConvergenceConfig, SyntheticModel};
 use aituning::coordinator::{
-    run_episode, AgentKind, Controller, ReplayPolicyKind, SharedLearning, TuningConfig,
+    AgentKind, Controller, ReplayPolicyKind, SharedLearning, TuningConfig,
 };
-use aituning::mpi_t::{CvarId, CvarSet, MpichRegistry, VariableRegistry};
+use aituning::mpi_t::{registry_for_backend, CvarId, CvarSet, VariableRegistry};
 use aituning::simmpi::Machine;
 use aituning::util::args::Args;
 use aituning::util::bench::Table;
@@ -32,10 +33,14 @@ fn usage() -> ! {
 USAGE:
   aituning tune        --workload icar --images 256 [--runs 20] [--agent dqn|tabular]
                        [--machine cheyenne|edison] [--seed N] [--noise F]
+                       [--backend coarrays|collectives]
                        [--replay uniform|stratified|prioritized]
   aituning run         --workload icar --images 64 [--cvar NAME=VALUE,NAME=VALUE]
+                       [--backend coarrays|collectives]
   aituning campaign    [--images 64,128,256] [--runs-per 20] [--agent dqn|tabular]
                        [--machine cheyenne|edison|both] [--workers N]  (0 = one per core)
+                       [--backend coarrays|collectives]  (which tunable runtime; the
+                       workload list defaults to the backend's training set)
                        [--replay uniform|stratified|prioritized]  (replay retention/
                        selection policy; stratified keeps rare workloads resident in
                        the shared hub buffer)
@@ -44,8 +49,10 @@ USAGE:
   aituning convergence [--model parabola|coupled|bool] [--noise 0.3] [--runs 400]
   aituning sweep       --cvar MPIR_CVAR_POLLS_BEFORE_YIELD --values 200,1000,1500
                        --workload icar --images 512 [--base async] [--workers N]
+                       [--backend coarrays|collectives]
                        [--machine cheyenne|edison|both] [--replay uniform|stratified|prioritized]
   aituning baselines   --workload icar --images 256 [--budget 20] [--workers N]
+                       [--backend coarrays|collectives]
                        [--replay uniform|stratified|prioritized]
 "
     );
@@ -87,6 +94,13 @@ fn parse_machines(args: &Args) -> Result<Vec<Machine>> {
     }
 }
 
+/// `--backend coarrays|collectives` — which tunable runtime to drive.
+fn parse_backend(args: &Args) -> Result<BackendId> {
+    let name = args.get_or("backend", "coarrays");
+    BackendId::parse(name)
+        .with_context(|| format!("unknown backend {name:?} (coarrays|collectives)"))
+}
+
 /// `--replay uniform|stratified|prioritized` — replay retention and
 /// minibatch-selection policy (controller buffers and, under
 /// `--shared`, the hub's global buffer).
@@ -108,6 +122,7 @@ fn parse_agent(args: &Args) -> Result<AgentKind> {
 fn tuning_config(args: &Args) -> Result<TuningConfig> {
     Ok(TuningConfig {
         machine: parse_machine(args)?,
+        backend: parse_backend(args)?,
         agent: parse_agent(args)?,
         runs: args.usize_or("runs", 20)?,
         noise: args.f64_or("noise", 0.02)?,
@@ -132,7 +147,10 @@ fn cmd_tune(args: &Args) -> Result<()> {
             format!("{:.0}", r.total_time_us),
             format!("{:+.4}", r.reward),
             r.action
-                .map(|a| aituning::coordinator::Action::from_index(a).describe())
+                .map(|a| {
+                    aituning::coordinator::Action::from_index(ctl.cfg.backend.cvars(), a)
+                        .describe(ctl.cfg.backend.cvars())
+                })
                 .unwrap_or_else(|| "reference".into()),
             format!("{:.2}", r.epsilon),
         ]);
@@ -155,18 +173,20 @@ fn cmd_run(args: &Args) -> Result<()> {
     let kind = parse_workload(args)?;
     let images = args.usize_or("images", 64)?;
     let machine = parse_machine(args)?;
-    let mut cvars = CvarSet::vanilla();
+    let backend = parse_backend(args)?;
+    let registry = registry_for_backend(backend);
+    let mut cvars = CvarSet::defaults(backend);
     // --cvar NAME=VALUE[,NAME=VALUE...]
     if let Some(spec) = args.get("cvar") {
         for part in spec.split(',') {
             let (name, value) = part.split_once('=').context("--cvar NAME=VALUE")?;
-            let d = MpichRegistry
+            let d = registry
                 .cvar_by_name(name)
-                .with_context(|| format!("unknown cvar {name:?}"))?;
+                .with_context(|| format!("unknown cvar {name:?} for backend {backend}"))?;
             cvars.set(d.id, value.parse().context("cvar value must be integer")?);
         }
     }
-    let r = run_episode(
+    let r = backend.runtime().run_episode(
         kind,
         images,
         &machine,
@@ -175,17 +195,33 @@ fn cmd_run(args: &Args) -> Result<()> {
         args.u64_or("seed", 42)?,
         args.u64_or("run-seed", 1)?,
     )?;
-    println!("workload={} images={images} machine={}", kind.name(), machine.name);
+    println!(
+        "backend={backend} workload={} images={images} machine={}",
+        kind.name(),
+        machine.name
+    );
     println!("config: {cvars}");
     println!("total: {:.0} µs", r.total_time_us);
-    println!(
-        "eager/rdv: {}/{}  umq max: {:.0}  flush mean: {:.1} µs  yields: {}",
-        r.raw.eager_msgs,
-        r.raw.rendezvous_msgs,
-        r.raw.umq_summary().max,
-        r.raw.flush_summary().mean,
-        r.raw.yields
-    );
+    if backend == BackendId::Coarrays {
+        println!(
+            "eager/rdv: {}/{}  umq max: {:.0}  flush mean: {:.1} µs  yields: {}",
+            r.raw.eager_msgs,
+            r.raw.rendezvous_msgs,
+            r.raw.umq_summary().max,
+            r.raw.flush_summary().mean,
+            r.raw.yields
+        );
+    } else {
+        // The collectives model reports per-class pvar statistics.
+        for d in backend.runtime().pvars() {
+            if let Some(summary) = r.pvars.get(d.id) {
+                println!(
+                    "{}: mean {:.1}  max {:.1}  (n={})",
+                    d.name, summary.mean, summary.max, summary.count
+                );
+            }
+        }
+    }
     Ok(())
 }
 
@@ -196,9 +232,11 @@ fn cmd_campaign(args: &Args) -> Result<()> {
         .map(|s| s.parse().context("bad --images list"))
         .collect::<Result<_>>()?;
     let machines = parse_machines(args)?;
+    let backend = parse_backend(args)?;
     let shared_mode = args.flag("shared");
     let mut base = TuningConfig {
         machine: machines[0].clone(),
+        backend,
         agent: parse_agent(args)?,
         runs: args.usize_or("runs-per", 20)?,
         noise: args.f64_or("noise", 0.02)?,
@@ -209,7 +247,8 @@ fn cmd_campaign(args: &Args) -> Result<()> {
     if shared_mode {
         base.shared = Some(SharedLearning { sync_every: args.usize_or("sync-every", 5)? });
     }
-    let jobs = job_grid(&machines, &WorkloadKind::TRAINING, &images, base.agent, base.seed);
+    let workloads = backend.runtime().training_workloads();
+    let jobs = job_grid(backend, &machines, workloads, &images, base.agent, base.seed);
     let engine = CampaignEngine::new(CampaignConfig {
         base,
         workers: args.usize_or("workers", 0)?,
@@ -299,10 +338,11 @@ fn cmd_sweep(args: &Args) -> Result<()> {
     let kind = parse_workload(args)?;
     let images = args.usize_or("images", 512)?;
     let machines = parse_machines(args)?;
+    let backend = parse_backend(args)?;
     let cvar_name = args.get("cvar").context("--cvar required")?;
-    let d = MpichRegistry
+    let d = registry_for_backend(backend)
         .cvar_by_name(cvar_name)
-        .with_context(|| format!("unknown cvar {cvar_name:?}"))?
+        .with_context(|| format!("unknown cvar {cvar_name:?} for backend {backend}"))?
         .clone();
     let values: Vec<i64> = args
         .get("values")
@@ -310,8 +350,8 @@ fn cmd_sweep(args: &Args) -> Result<()> {
         .split(',')
         .map(|s| s.parse().context("bad value"))
         .collect::<Result<_>>()?;
-    let mut base = CvarSet::vanilla();
-    if args.get_or("base", "") == "async" {
+    let mut base = CvarSet::defaults(backend);
+    if backend == BackendId::Coarrays && args.get_or("base", "") == "async" {
         base.set(CvarId(0), 1);
     }
     let reps = args.usize_or("reps", 3)?;
@@ -332,6 +372,7 @@ fn cmd_sweep(args: &Args) -> Result<()> {
     let engine = CampaignEngine::new(CampaignConfig {
         base: TuningConfig {
             machine: machines[0].clone(),
+            backend,
             noise: args.f64_or("noise", 0.02)?,
             seed: args.u64_or("seed", 42)?,
             replay_policy: parse_replay(args)?,
@@ -371,22 +412,27 @@ fn cmd_baselines(args: &Args) -> Result<()> {
         workers: args.usize_or("workers", 0)?,
     });
 
-    let vanilla = engine.evaluate(kind, images, &CvarSet::vanilla(), 3)?;
-    let human = engine.evaluate(kind, images, &human_tuned(), 3)?;
+    let backend = cfg.backend;
+    let vanilla = engine.evaluate(kind, images, &CvarSet::defaults(backend), 3)?;
 
-    let mut t = Table::new(&["method", "total (µs)", "vs vanilla"]);
+    let mut t = Table::new(&["method", "total (µs)", "vs default"]);
     let pct = |v: f64| format!("{:+.1}%", (vanilla - v) / vanilla * 100.0);
-    t.row(vec!["vanilla".into(), format!("{vanilla:.0}"), "+0.0%".into()]);
-    t.row(vec!["human (eager x10)".into(), format!("{human:.0}"), pct(human)]);
+    t.row(vec!["default".into(), format!("{vanilla:.0}"), "+0.0%".into()]);
+    if backend == BackendId::Coarrays {
+        // The paper's §6.2 manual baseline is specific to the eager
+        // threshold — a coarrays knob.
+        let human = engine.evaluate(kind, images, &human_tuned(), 3)?;
+        t.row(vec!["human (eager x10)".into(), format!("{human:.0}"), pct(human)]);
+    }
 
-    let mut random = RandomSearch::new(cfg.seed + 1);
+    let mut random = RandomSearch::for_backend(cfg.seed + 1, backend);
     let (_, rand_t) = {
         let mut eval = |cvs: &[CvarSet]| engine.evaluate_batch(kind, images, cvs, 1);
         random.search_batched(budget, &mut eval)?
     };
     t.row(vec!["random".into(), format!("{rand_t:.0}"), pct(rand_t)]);
 
-    let mut evo = Evolutionary::new(cfg.seed + 2);
+    let mut evo = Evolutionary::for_backend(cfg.seed + 2, backend);
     let (_, evo_t) = {
         let mut eval = |cvs: &[CvarSet]| engine.evaluate_batch(kind, images, cvs, 1);
         evo.search_batched(budget, &mut eval)?
@@ -399,6 +445,7 @@ fn cmd_baselines(args: &Args) -> Result<()> {
         workers: 1,
     });
     let report = tune_engine.run(&[CampaignJob {
+        backend,
         machine: cfg.machine.name,
         workload: kind,
         images,

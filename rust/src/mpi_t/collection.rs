@@ -103,6 +103,25 @@ impl CollectionCreator for MpichCollectionCreator {
     }
 }
 
+/// Collection creator for the collectives backend: algorithm-selector
+/// cvars plus per-collective-class timing pvars.
+#[derive(Debug, Default)]
+pub struct CollectivesCollectionCreator;
+
+impl CollectionCreator for CollectivesCollectionCreator {
+    fn layer(&self) -> &'static str {
+        "MPICH-collectives"
+    }
+
+    fn control_variables(&self) -> Vec<CvarDescriptor> {
+        super::cvar::COLLECTIVE_CVARS.to_vec()
+    }
+
+    fn performance_variables(&self) -> Vec<PvarDescriptor> {
+        super::pvar::COLLECTIVE_PVARS.to_vec()
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -116,6 +135,18 @@ mod tests {
         assert_eq!(c.probes.len(), 5);
         let names: Vec<_> = c.cvars.iter().map(|d| d.name).collect();
         assert!(names.contains(&"MPIR_CVAR_POLLS_BEFORE_YIELD"));
+    }
+
+    #[test]
+    fn collectives_collection_has_backend_variables() {
+        let c = CollectivesCollectionCreator.create();
+        assert_eq!(c.layer, "MPICH-collectives");
+        assert_eq!(c.cvars.len(), 4);
+        assert_eq!(c.pvars.len(), 5);
+        assert_eq!(c.probes.len(), 5);
+        let names: Vec<_> = c.cvars.iter().map(|d| d.name).collect();
+        assert!(names.contains(&"MPIR_CVAR_ALLREDUCE_INTRA_ALGORITHM"));
+        assert!(c.pvars.iter().any(|p| p.descriptor.name == "bcast_time_us"));
     }
 
     #[test]

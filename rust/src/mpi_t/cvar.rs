@@ -1,9 +1,14 @@
 //! Control variables: the knobs AITuning tunes.
 //!
-//! The six MPICH-3.2.1 cvars from the paper (§5.3), each with its domain
-//! and the fixed action "step" AITuning uses to change it (§5.2).
+//! Descriptors are grouped into per-backend registries: the six
+//! MPICH-3.2.1 cvars from the paper (§5.3) for the coarrays runtime,
+//! and the collective-algorithm selectors for the collectives runtime.
+//! A [`CvarSet`] carries its [`BackendId`], so domain clamping,
+//! normalization and display always consult the right table.
 
 use std::fmt;
+
+use crate::backend::BackendId;
 
 /// Identifier for a control variable (index into the registry order).
 #[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
@@ -17,6 +22,12 @@ pub enum CvarDomain {
     /// Integer range with a fixed tuning step, e.g.
     /// `MPIR_CVAR_CH3_EAGER_MAX_MSG_SIZE` stepping by 1024.
     Int { lo: i64, hi: i64, step: i64 },
+    /// Enumerated choice (categorical), e.g. a collective-algorithm
+    /// selector. Values are indices into `options`; stepping moves to
+    /// the neighbouring option, and the action space additionally gets
+    /// one direct *select* action per option (see
+    /// [`crate::coordinator::actions`]).
+    Choice { options: &'static [&'static str] },
 }
 
 /// Static description of a control variable.
@@ -35,17 +46,19 @@ impl CvarDescriptor {
         match self.domain {
             CvarDomain::Bool => i64::from(v != 0),
             CvarDomain::Int { lo, hi, .. } => v.clamp(lo, hi),
+            CvarDomain::Choice { options } => v.clamp(0, options.len() as i64 - 1),
         }
     }
 
     /// One tuning step up/down (paper §5.2: fixed per-cvar step;
-    /// booleans toggle).
+    /// booleans toggle, choices move to the neighbouring option).
     pub fn step(&self, current: i64, up: bool) -> i64 {
         match self.domain {
             CvarDomain::Bool => i64::from(current == 0),
             CvarDomain::Int { step, .. } => {
                 self.clamp(current + if up { step } else { -step })
             }
+            CvarDomain::Choice { .. } => self.clamp(current + if up { 1 } else { -1 }),
         }
     }
 
@@ -60,11 +73,19 @@ impl CvarDescriptor {
                     (v - lo) as f32 / (hi - lo) as f32
                 }
             }
+            CvarDomain::Choice { options } => {
+                if options.len() <= 1 {
+                    0.0
+                } else {
+                    v as f32 / (options.len() - 1) as f32
+                }
+            }
         }
     }
 }
 
-/// The MPICH-3.2.1 control-variable set the paper tunes (§5.3).
+/// The MPICH-3.2.1 control-variable set the paper tunes (§5.3) — the
+/// coarrays backend's registry.
 pub const MPICH_CVARS: &[CvarDescriptor] = &[
     CvarDescriptor {
         id: CvarId(0),
@@ -110,13 +131,60 @@ pub const MPICH_CVARS: &[CvarDescriptor] = &[
     },
 ];
 
-/// Number of tunable cvars (state/action layout depends on this).
+/// Broadcast algorithm options of the collectives backend (value =
+/// index into this list).
+pub const BCAST_ALGORITHMS: &[&str] =
+    &["binomial", "scatter_allgather", "scatter_ring_allgather"];
+
+/// Allreduce algorithm options of the collectives backend.
+pub const ALLREDUCE_ALGORITHMS: &[&str] = &["recursive_doubling", "ring"];
+
+/// The collectives backend's registry: MPICH collective-algorithm
+/// selectors (categorical), a pipeline segment size, and the SMP
+/// (hierarchical) toggle — the tuning space of Hunold &
+/// Carpen-Amarie's performance-guidelines work.
+pub const COLLECTIVE_CVARS: &[CvarDescriptor] = &[
+    CvarDescriptor {
+        id: CvarId(0),
+        name: "MPIR_CVAR_BCAST_INTRA_ALGORITHM",
+        domain: CvarDomain::Choice { options: BCAST_ALGORITHMS },
+        default: 0,
+        description: "algorithm used for MPI_Bcast inside a communicator",
+    },
+    CvarDescriptor {
+        id: CvarId(1),
+        name: "MPIR_CVAR_ALLREDUCE_INTRA_ALGORITHM",
+        domain: CvarDomain::Choice { options: ALLREDUCE_ALGORITHMS },
+        default: 0,
+        description: "algorithm used for MPI_Allreduce inside a communicator",
+    },
+    CvarDescriptor {
+        id: CvarId(2),
+        name: "MPIR_CVAR_COLL_SEGMENT_SIZE",
+        domain: CvarDomain::Int { lo: 8192, hi: 1 << 20, step: 32_768 },
+        default: 1 << 20,
+        description: "pipeline segment size for segmented collective algorithms (bytes)",
+    },
+    CvarDescriptor {
+        id: CvarId(3),
+        name: "MPIR_CVAR_ENABLE_SMP_COLLECTIVES",
+        domain: CvarDomain::Bool,
+        default: 0,
+        description: "use node-hierarchical (SMP-aware) collective algorithms",
+    },
+];
+
+/// Number of tunable cvars in the coarrays (paper) backend. The
+/// coarrays state/action layout compiled into the AOT artifacts
+/// depends on this; other backends size everything dynamically.
 pub const NUM_CVARS: usize = 6;
 
-/// A concrete assignment of values to all control variables.
+/// A concrete assignment of values to all control variables of one
+/// backend's registry.
 #[derive(Debug, Clone, PartialEq, Eq, Hash)]
 pub struct CvarSet {
-    values: [i64; NUM_CVARS],
+    backend: BackendId,
+    values: Vec<i64>,
 }
 
 /// Typed view of one value (for display).
@@ -124,16 +192,39 @@ pub struct CvarSet {
 pub enum CvarValue {
     Bool(bool),
     Int(i64),
+    /// Choice index plus its option name.
+    Choice(usize, &'static str),
 }
 
 impl CvarSet {
-    /// All defaults — the "vanilla" MPICH configuration of the paper.
+    /// All defaults of the coarrays backend — the "vanilla" MPICH
+    /// configuration of the paper (the historical constructor).
     pub fn vanilla() -> CvarSet {
-        let mut values = [0i64; NUM_CVARS];
-        for (i, d) in MPICH_CVARS.iter().enumerate() {
-            values[i] = d.default;
-        }
-        CvarSet { values }
+        CvarSet::defaults(BackendId::Coarrays)
+    }
+
+    /// All defaults of `backend`'s registry.
+    pub fn defaults(backend: BackendId) -> CvarSet {
+        CvarSet { backend, values: backend.cvars().iter().map(|d| d.default).collect() }
+    }
+
+    /// The backend whose registry this set indexes.
+    pub fn backend(&self) -> BackendId {
+        self.backend
+    }
+
+    /// The backing descriptor table.
+    pub fn table(&self) -> &'static [CvarDescriptor] {
+        self.backend.cvars()
+    }
+
+    /// Number of cvars in the set.
+    pub fn len(&self) -> usize {
+        self.values.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.values.is_empty()
     }
 
     pub fn get(&self, id: CvarId) -> i64 {
@@ -142,52 +233,64 @@ impl CvarSet {
 
     /// Set with domain clamping.
     pub fn set(&mut self, id: CvarId, v: i64) {
-        self.values[id.0] = MPICH_CVARS[id.0].clamp(v);
+        self.values[id.0] = self.table()[id.0].clamp(v);
     }
 
     pub fn typed(&self, id: CvarId) -> CvarValue {
-        match MPICH_CVARS[id.0].domain {
+        match self.table()[id.0].domain {
             CvarDomain::Bool => CvarValue::Bool(self.values[id.0] != 0),
             CvarDomain::Int { .. } => CvarValue::Int(self.values[id.0]),
+            CvarDomain::Choice { options } => {
+                let i = self.values[id.0] as usize;
+                CvarValue::Choice(i, options[i])
+            }
         }
     }
 
-    // Typed accessors used by the simulator hot path.
+    // Typed accessors used by the simulator hot path (coarrays layout;
+    // the debug assert catches a set from the wrong registry before it
+    // silently misreads an index).
 
     pub fn async_progress(&self) -> bool {
+        debug_assert_eq!(self.backend, BackendId::Coarrays);
         self.values[0] != 0
     }
 
     pub fn enable_hcoll(&self) -> bool {
+        debug_assert_eq!(self.backend, BackendId::Coarrays);
         self.values[1] != 0
     }
 
     pub fn delay_piggyback(&self) -> bool {
+        debug_assert_eq!(self.backend, BackendId::Coarrays);
         self.values[2] != 0
     }
 
     pub fn piggyback_size(&self) -> i64 {
+        debug_assert_eq!(self.backend, BackendId::Coarrays);
         self.values[3]
     }
 
     pub fn polls_before_yield(&self) -> i64 {
+        debug_assert_eq!(self.backend, BackendId::Coarrays);
         self.values[4]
     }
 
     pub fn eager_max(&self) -> i64 {
+        debug_assert_eq!(self.backend, BackendId::Coarrays);
         self.values[5]
     }
 
     /// Normalized values for the RL state vector, registry order.
-    pub fn normalized(&self) -> [f32; NUM_CVARS] {
-        let mut out = [0.0f32; NUM_CVARS];
-        for (i, d) in MPICH_CVARS.iter().enumerate() {
-            out[i] = d.normalize(self.values[i]);
-        }
-        out
+    pub fn normalized(&self) -> Vec<f32> {
+        self.table()
+            .iter()
+            .zip(&self.values)
+            .map(|(d, &v)| d.normalize(v))
+            .collect()
     }
 
-    pub fn as_slice(&self) -> &[i64; NUM_CVARS] {
+    pub fn as_slice(&self) -> &[i64] {
         &self.values
     }
 }
@@ -199,14 +302,18 @@ impl Default for CvarSet {
 }
 
 impl fmt::Display for CvarSet {
-    /// Compact `NAME=value` pairs with the `MPIR_CVAR_` prefix stripped.
+    /// Compact `NAME=value` pairs with the `MPIR_CVAR_` prefix stripped;
+    /// choice cvars print the selected option's name.
     fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
-        for (i, d) in MPICH_CVARS.iter().enumerate() {
+        for (i, d) in self.table().iter().enumerate() {
             if i > 0 {
                 write!(f, " ")?;
             }
             let short = d.name.strip_prefix("MPIR_CVAR_").unwrap_or(d.name);
-            write!(f, "{short}={}", self.values[i])?;
+            match self.typed(CvarId(i)) {
+                CvarValue::Choice(_, name) => write!(f, "{short}={name}")?,
+                _ => write!(f, "{short}={}", self.values[i])?,
+            }
         }
         Ok(())
     }
@@ -219,6 +326,8 @@ mod tests {
     #[test]
     fn vanilla_matches_defaults() {
         let v = CvarSet::vanilla();
+        assert_eq!(v.backend(), BackendId::Coarrays);
+        assert_eq!(v.len(), NUM_CVARS);
         assert!(!v.async_progress());
         assert_eq!(v.eager_max(), 131_072);
         assert_eq!(v.polls_before_yield(), 1000);
@@ -246,10 +355,36 @@ mod tests {
     }
 
     #[test]
+    fn choice_domain_steps_and_clamps() {
+        let d = &COLLECTIVE_CVARS[0];
+        assert_eq!(d.step(0, true), 1);
+        assert_eq!(d.step(2, true), 2); // clamped at last option
+        assert_eq!(d.step(0, false), 0); // clamped at first option
+        assert_eq!(d.clamp(99), BCAST_ALGORITHMS.len() as i64 - 1);
+        assert_eq!(d.clamp(-3), 0);
+        assert!((d.normalize(2) - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn collectives_defaults_and_typed_views() {
+        let cv = CvarSet::defaults(BackendId::Collectives);
+        assert_eq!(cv.backend(), BackendId::Collectives);
+        assert_eq!(cv.len(), COLLECTIVE_CVARS.len());
+        assert_eq!(cv.typed(CvarId(0)), CvarValue::Choice(0, "binomial"));
+        assert_eq!(cv.get(CvarId(2)), 1 << 20);
+        let mut tuned = cv.clone();
+        tuned.set(CvarId(1), 1);
+        assert_eq!(tuned.typed(CvarId(1)), CvarValue::Choice(1, "ring"));
+        assert_ne!(tuned, cv);
+    }
+
+    #[test]
     fn normalize_in_unit_range() {
-        for d in MPICH_CVARS {
-            let n = d.normalize(d.default);
-            assert!((0.0..=1.0).contains(&n), "{}: {n}", d.name);
+        for table in [MPICH_CVARS, COLLECTIVE_CVARS] {
+            for d in table {
+                let n = d.normalize(d.default);
+                assert!((0.0..=1.0).contains(&n), "{}: {n}", d.name);
+            }
         }
     }
 
@@ -258,5 +393,7 @@ mod tests {
         let s = CvarSet::vanilla().to_string();
         assert!(s.contains("ASYNC_PROGRESS=0"), "{s}");
         assert!(s.contains("CH3_EAGER_MAX_MSG_SIZE=131072"), "{s}");
+        let c = CvarSet::defaults(BackendId::Collectives).to_string();
+        assert!(c.contains("BCAST_INTRA_ALGORITHM=binomial"), "{c}");
     }
 }

@@ -16,10 +16,20 @@ mod pvar;
 mod registry;
 mod session;
 
-pub use collection::{Collection, CollectionCreator, MpichCollectionCreator};
-pub use cvar::{CvarDescriptor, CvarDomain, CvarId, CvarSet, CvarValue, MPICH_CVARS, NUM_CVARS};
+pub use collection::{
+    Collection, CollectionCreator, CollectivesCollectionCreator, MpichCollectionCreator,
+};
+pub use cvar::{
+    CvarDescriptor, CvarDomain, CvarId, CvarSet, CvarValue, ALLREDUCE_ALGORITHMS,
+    BCAST_ALGORITHMS, COLLECTIVE_CVARS, MPICH_CVARS, NUM_CVARS,
+};
 pub use pmpi::{NullHooks, PmpiHooks, PmpiLayer};
 pub use probe::{Probe, ProbeError};
-pub use pvar::{PvarClass, PvarDescriptor, PvarId, PvarStats, UserDefinedPvar, MPICH_PVARS, NUM_PVARS};
-pub use registry::{registry_for, MpichRegistry, VariableRegistry};
+pub use pvar::{
+    PvarClass, PvarDescriptor, PvarId, PvarStats, UserDefinedPvar, COLLECTIVE_PVARS,
+    MPICH_PVARS, NUM_PVARS, TOTAL_TIME_PVAR,
+};
+pub use registry::{
+    registry_for, registry_for_backend, BackendRegistry, MpichRegistry, VariableRegistry,
+};
 pub use session::{InitState, Session, SessionError};

@@ -76,8 +76,54 @@ pub const MPICH_PVARS: &[PvarDescriptor] = &[
     },
 ];
 
-/// Number of pvars in the MPICH collection.
+/// Number of pvars in the MPICH (coarrays backend) collection.
 pub const NUM_PVARS: usize = 5;
+
+/// Index of the total-application-time pvar — shared across every
+/// backend's schema by convention, so the reward basis and the
+/// [`crate::coordinator::relative::RelativeTracker`] total lookup are
+/// schema-independent.
+pub const TOTAL_TIME_PVAR: PvarId = PvarId(4);
+
+/// The collectives backend's pvar schema: per-collective-class timers
+/// plus the observed payload sizes and total application time.
+pub const COLLECTIVE_PVARS: &[PvarDescriptor] = &[
+    PvarDescriptor {
+        id: PvarId(0),
+        name: "bcast_time_us",
+        class: PvarClass::Timer,
+        relative: true,
+        range: (0.0, 1e12),
+    },
+    PvarDescriptor {
+        id: PvarId(1),
+        name: "allreduce_time_us",
+        class: PvarClass::Timer,
+        relative: true,
+        range: (0.0, 1e12),
+    },
+    PvarDescriptor {
+        id: PvarId(2),
+        name: "barrier_time_us",
+        class: PvarClass::Timer,
+        relative: true,
+        range: (0.0, 1e12),
+    },
+    PvarDescriptor {
+        id: PvarId(3),
+        name: "coll_payload_bytes",
+        class: PvarClass::Level,
+        relative: false,
+        range: (0.0, 1e12),
+    },
+    PvarDescriptor {
+        id: PvarId(4),
+        name: "total_time_us",
+        class: PvarClass::Timer,
+        relative: true,
+        range: (0.0, 1e15),
+    },
+];
 
 /// A user-defined performance variable (§5.1, Listing 2): values are
 /// registered through a [`crate::mpi_t::Probe`] during the run, and the
@@ -127,7 +173,7 @@ impl PvarStats {
 
     /// Total application time (the reward's basis), if recorded.
     pub fn total_time_us(&self) -> Option<f64> {
-        self.get(PvarId(4)).map(|s| s.max)
+        self.get(TOTAL_TIME_PVAR).map(|s| s.max)
     }
 }
 
@@ -153,12 +199,16 @@ mod tests {
     #[test]
     fn pvar_table_is_consistent() {
         assert_eq!(MPICH_PVARS.len(), NUM_PVARS);
-        for (i, d) in MPICH_PVARS.iter().enumerate() {
-            assert_eq!(d.id.0, i);
-            assert!(d.range.0 <= d.range.1);
+        for table in [MPICH_PVARS, COLLECTIVE_PVARS] {
+            for (i, d) in table.iter().enumerate() {
+                assert_eq!(d.id.0, i);
+                assert!(d.range.0 <= d.range.1);
+            }
+            // total_time must be relative (paper: cannot be absolute)
+            // and sit at the schema-independent index.
+            assert_eq!(table[TOTAL_TIME_PVAR.0].name, "total_time_us");
+            assert!(table[TOTAL_TIME_PVAR.0].relative);
         }
-        // total_time must be relative (paper: cannot be absolute)
-        assert!(MPICH_PVARS[4].relative);
     }
 
     #[test]

@@ -7,6 +7,8 @@
 
 use anyhow::{bail, Result};
 
+use crate::backend::BackendId;
+
 use super::cvar::{CvarDescriptor, CvarId, MPICH_CVARS};
 use super::pvar::{PvarDescriptor, MPICH_PVARS};
 
@@ -59,16 +61,53 @@ impl VariableRegistry for MpichRegistry {
     }
 }
 
+/// Registry over any backend's variable tables — the discovery surface
+/// a [`crate::backend::TunableRuntime`] exposes.
+#[derive(Debug, Clone, Copy)]
+pub struct BackendRegistry(pub BackendId);
+
+impl VariableRegistry for BackendRegistry {
+    fn num_cvars(&self) -> usize {
+        self.0.cvars().len()
+    }
+
+    fn cvar_info(&self, index: usize) -> Option<&CvarDescriptor> {
+        self.0.cvars().get(index)
+    }
+
+    fn cvar_by_name(&self, name: &str) -> Option<&CvarDescriptor> {
+        self.0.cvars().iter().find(|d| d.name == name)
+    }
+
+    fn num_pvars(&self) -> usize {
+        self.0.runtime().pvars().len()
+    }
+
+    fn pvar_info(&self, index: usize) -> Option<&PvarDescriptor> {
+        self.0.runtime().pvars().get(index)
+    }
+
+    fn pvar_by_name(&self, name: &str) -> Option<&PvarDescriptor> {
+        self.0.runtime().pvars().iter().find(|d| d.name == name)
+    }
+}
+
 /// Resolve a registry for a communication layer string, as
 /// `AITuning_start("MPICH")` does in the paper (Listing 1).
 pub fn registry_for(layer: &str) -> Result<Box<dyn VariableRegistry>> {
     match layer {
         "MPICH" => Ok(Box::new(MpichRegistry)),
+        "MPICH-collectives" => Ok(Box::new(BackendRegistry(BackendId::Collectives))),
         other => bail!(
-            "no MPI_T registry for layer {other:?} (supported: MPICH); \
+            "no MPI_T registry for layer {other:?} (supported: MPICH, MPICH-collectives); \
              GASNet and OpenMPI collections are future work in the paper"
         ),
     }
+}
+
+/// Registry for a backend id (CLI cvar lookups).
+pub fn registry_for_backend(backend: BackendId) -> BackendRegistry {
+    BackendRegistry(backend)
 }
 
 /// Convenience: the CvarId for a cvar name, via the MPICH registry.
@@ -101,7 +140,24 @@ mod tests {
     #[test]
     fn registry_for_layers() {
         assert!(registry_for("MPICH").is_ok());
+        assert!(registry_for("MPICH-collectives").is_ok());
         assert!(registry_for("GASNet").is_err());
+    }
+
+    #[test]
+    fn backend_registry_discovers_collective_variables() {
+        let r = registry_for_backend(BackendId::Collectives);
+        assert_eq!(r.num_cvars(), 4);
+        assert_eq!(r.num_pvars(), 5);
+        let d = r.cvar_by_name("MPIR_CVAR_BCAST_INTRA_ALGORITHM").unwrap();
+        assert_eq!(d.id, CvarId(0));
+        assert!(r.pvar_by_name("allreduce_time_us").is_some());
+        assert!(r.cvar_by_name("MPIR_CVAR_ASYNC_PROGRESS").is_none());
+        // The coarrays backend registry agrees with the historical
+        // MPICH registry.
+        let c = registry_for_backend(BackendId::Coarrays);
+        assert_eq!(c.num_cvars(), MpichRegistry.num_cvars());
+        assert_eq!(c.num_pvars(), MpichRegistry.num_pvars());
     }
 
     #[test]

@@ -1,24 +1,196 @@
-//! Collective operation timing: plain binomial algorithms vs the
-//! hierarchical "HCOLL" family toggled by `CH3_ENABLE_HCOLL`.
+//! Collective operation timing.
 //!
-//! Plain algorithms pay `2·log2(p)` network rounds for an allreduce and
-//! are oblivious to node topology. HCOLL exploits the intra-node tree
-//! (cheap shared-memory stage + one inter-node stage per round), cutting
-//! the effective round count — at the cost of a per-call setup. Small
-//! jobs with few nodes may lose; big collective-heavy jobs win.
+//! Two layers live here:
+//!
+//! * The **engine-facing** costs the coarray simulator charges for
+//!   `co_sum` / `co_broadcast` / barriers: plain binomial /
+//!   recursive-doubling algorithms vs the hierarchical "HCOLL" family
+//!   toggled by `CH3_ENABLE_HCOLL`. Plain algorithms pay `2·log2(p)`
+//!   network rounds for an allreduce and are oblivious to node
+//!   topology; HCOLL exploits the intra-node tree — at the cost of a
+//!   per-call setup. Small jobs with few nodes may lose; big
+//!   collective-heavy jobs win.
+//! * The **algorithm-parameterized** costs the collectives backend
+//!   tunes over ([`bcast_alg_us`], [`allreduce_alg_us`]): the
+//!   selectors studied by Hunold & Carpen-Amarie's performance
+//!   guidelines (binomial vs scatter+allgather broadcast,
+//!   recursive-doubling vs ring allreduce, pipeline segmenting).
+//!   These functions never read `cfg.cvars` — the algorithm arrives
+//!   explicitly — so they work for any backend's configuration. Ring
+//!   phases exchange with fixed nearest neighbours, which dodges the
+//!   scale-dependent fabric contention the doubling patterns pay
+//!   ([`network::effective_bandwidth`]); that is what makes the
+//!   selection scale- and size-sensitive rather than dominated by one
+//!   algorithm everywhere.
 
 use super::config::SimConfig;
 use super::network;
 
-/// Time for a barrier (dissemination, log2(p) rounds).
-pub fn barrier_us(cfg: &SimConfig, p: usize) -> f64 {
-    let rounds = (p.max(2) as f64).log2().ceil();
-    rounds * (network::transfer_us(cfg, 64) + cfg.machine.mpi_service_us)
+/// Broadcast algorithm selector (the collectives backend's
+/// `MPIR_CVAR_BCAST_INTRA_ALGORITHM`; see
+/// [`crate::mpi_t::BCAST_ALGORITHMS`] for the value order).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BcastAlgorithm {
+    /// Binomial tree, optionally segmented/pipelined.
+    Binomial,
+    /// Scatter + recursive-doubling allgather.
+    ScatterAllgather,
+    /// Scatter + ring allgather (nearest-neighbour, contention-free).
+    ScatterRingAllgather,
 }
 
-/// Time for an allreduce (`co_sum`) of `bytes` across `p` images.
+impl BcastAlgorithm {
+    /// Decode a cvar value (clamped upstream by the Choice domain).
+    pub fn from_cvar(v: i64) -> BcastAlgorithm {
+        match v {
+            0 => BcastAlgorithm::Binomial,
+            1 => BcastAlgorithm::ScatterAllgather,
+            _ => BcastAlgorithm::ScatterRingAllgather,
+        }
+    }
+}
+
+/// Allreduce algorithm selector
+/// (`MPIR_CVAR_ALLREDUCE_INTRA_ALGORITHM`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AllreduceAlgorithm {
+    /// Recursive doubling: log-rounds of full-size exchanges.
+    RecursiveDoubling,
+    /// Reduce-scatter + allgather over a ring of neighbours.
+    Ring,
+}
+
+impl AllreduceAlgorithm {
+    pub fn from_cvar(v: i64) -> AllreduceAlgorithm {
+        match v {
+            0 => AllreduceAlgorithm::RecursiveDoubling,
+            _ => AllreduceAlgorithm::Ring,
+        }
+    }
+}
+
+fn log2_rounds(p: usize) -> f64 {
+    (p.max(2) as f64).log2().ceil()
+}
+
+fn per_round(cfg: &SimConfig, bytes: u64) -> f64 {
+    network::transfer_us(cfg, bytes) + cfg.machine.mpi_service_us
+}
+
+/// Time for a barrier (dissemination, log2(p) rounds).
+pub fn barrier_us(cfg: &SimConfig, p: usize) -> f64 {
+    log2_rounds(p) * per_round(cfg, 64)
+}
+
+/// Recursive-doubling allreduce: 2·log2(p) rounds of full-size
+/// exchanges end-to-end (the engine's plain `co_sum` cost).
+pub fn allreduce_recursive_doubling_us(cfg: &SimConfig, p: usize, bytes: u64) -> f64 {
+    2.0 * log2_rounds(p) * per_round(cfg, bytes)
+}
+
+/// Ring allreduce (reduce-scatter + allgather): 2·(p−1) rounds of
+/// `bytes/p` chunks between fixed neighbours. Pays many latencies but
+/// moves only ~2·bytes per rank over *uncontended* neighbour links —
+/// the large-message/large-scale winner.
+pub fn allreduce_ring_us(cfg: &SimConfig, p: usize, bytes: u64) -> f64 {
+    let p = p.max(2);
+    let chunk = (bytes as f64 / p as f64).max(1.0);
+    let rounds = 2.0 * (p - 1) as f64;
+    rounds * (cfg.machine.latency_us + chunk / cfg.machine.bandwidth_bpus)
+        + rounds * cfg.machine.mpi_service_us
+}
+
+/// Algorithm-parameterized allreduce (the collectives backend's cost).
+pub fn allreduce_alg_us(
+    cfg: &SimConfig,
+    p: usize,
+    bytes: u64,
+    alg: AllreduceAlgorithm,
+    smp: bool,
+) -> f64 {
+    let flat = |p: usize| match alg {
+        AllreduceAlgorithm::RecursiveDoubling => allreduce_recursive_doubling_us(cfg, p, bytes),
+        AllreduceAlgorithm::Ring => allreduce_ring_us(cfg, p, bytes),
+    };
+    if smp {
+        // Hierarchical: intra-node reduce at memcpy speed, then the
+        // selected algorithm across node leaders only.
+        let nodes = cfg.nodes().max(2);
+        let intra = network::memcpy_us(cfg, bytes) * 2.0
+            + (cfg.machine.cores_per_node.min(p) as f64).log2().ceil()
+                * cfg.machine.mpi_service_us;
+        cfg.machine.hcoll_setup_us + intra + flat(nodes)
+    } else {
+        flat(p)
+    }
+}
+
+/// Segmented binomial-tree broadcast: `log2(p)` tree levels pipelined
+/// over `ceil(bytes / segment)` segments — the classic
+/// `(rounds + segments − 1) · per_segment` pipeline. An unsegmented
+/// call (`segment >= bytes`) degenerates to the engine's plain cost.
+pub fn bcast_binomial_us(cfg: &SimConfig, p: usize, bytes: u64, segment: u64) -> f64 {
+    let rounds = log2_rounds(p);
+    if segment >= bytes.max(1) {
+        return rounds * per_round(cfg, bytes);
+    }
+    let seg = segment.max(1);
+    let segments = bytes.div_ceil(seg) as f64;
+    (rounds + segments - 1.0) * per_round(cfg, seg)
+}
+
+/// Scatter + allgather broadcast. The scatter phase (log2(p) rounds,
+/// halving payloads) moves `bytes·(p−1)/p` through the contended
+/// fabric; the allgather phase reassembles either by recursive
+/// doubling (contended) or over the neighbour ring (uncontended).
+pub fn bcast_scatter_allgather_us(
+    cfg: &SimConfig,
+    p: usize,
+    bytes: u64,
+    ring_allgather: bool,
+) -> f64 {
+    let p = p.max(2);
+    let l = log2_rounds(p);
+    let moved = bytes as f64 * (p - 1) as f64 / p as f64;
+    let scatter = l * (cfg.machine.latency_us + cfg.machine.mpi_service_us)
+        + moved / network::effective_bandwidth(cfg);
+    let allgather = if ring_allgather {
+        (p - 1) as f64 * (cfg.machine.latency_us + cfg.machine.mpi_service_us)
+            + moved / cfg.machine.bandwidth_bpus
+    } else {
+        l * (cfg.machine.latency_us + cfg.machine.mpi_service_us)
+            + moved / network::effective_bandwidth(cfg)
+    };
+    scatter + allgather
+}
+
+/// Algorithm-parameterized broadcast (the collectives backend's cost).
+pub fn bcast_alg_us(
+    cfg: &SimConfig,
+    p: usize,
+    bytes: u64,
+    alg: BcastAlgorithm,
+    segment: u64,
+    smp: bool,
+) -> f64 {
+    let flat = |p: usize| match alg {
+        BcastAlgorithm::Binomial => bcast_binomial_us(cfg, p, bytes, segment),
+        BcastAlgorithm::ScatterAllgather => bcast_scatter_allgather_us(cfg, p, bytes, false),
+        BcastAlgorithm::ScatterRingAllgather => bcast_scatter_allgather_us(cfg, p, bytes, true),
+    };
+    if smp {
+        let nodes = cfg.nodes().max(2);
+        let intra = network::memcpy_us(cfg, bytes)
+            + (cfg.machine.cores_per_node.min(p) as f64).log2().ceil() * 0.2;
+        cfg.machine.hcoll_setup_us + intra + flat(nodes)
+    } else {
+        flat(p)
+    }
+}
+
+/// Time for an allreduce (`co_sum`) of `bytes` across `p` images — the
+/// coarray engine's cost, steered by `CH3_ENABLE_HCOLL`.
 pub fn allreduce_us(cfg: &SimConfig, p: usize, bytes: u64) -> f64 {
-    let per_round = network::transfer_us(cfg, bytes) + cfg.machine.mpi_service_us;
     if cfg.cvars.enable_hcoll() {
         // Hierarchical: intra-node reduce (memcpy-speed) + inter-node
         // rounds over node leaders only.
@@ -26,25 +198,24 @@ pub fn allreduce_us(cfg: &SimConfig, p: usize, bytes: u64) -> f64 {
         let intra = network::memcpy_us(cfg, bytes) * 2.0
             + (cfg.machine.cores_per_node.min(p) as f64).log2().ceil()
                 * cfg.machine.mpi_service_us;
-        let inter = (nodes.max(2) as f64).log2().ceil() * per_round;
+        let inter = (nodes.max(2) as f64).log2().ceil() * per_round(cfg, bytes);
         cfg.machine.hcoll_setup_us + intra + inter
     } else {
-        // Recursive doubling: 2·log2(p) rounds end-to-end.
-        2.0 * (p.max(2) as f64).log2().ceil() * per_round
+        allreduce_recursive_doubling_us(cfg, p, bytes)
     }
 }
 
-/// Time for a broadcast of `bytes` across `p` images.
+/// Time for a broadcast of `bytes` across `p` images — the coarray
+/// engine's cost, steered by `CH3_ENABLE_HCOLL`.
 pub fn broadcast_us(cfg: &SimConfig, p: usize, bytes: u64) -> f64 {
-    let per_round = network::transfer_us(cfg, bytes) + cfg.machine.mpi_service_us;
     if cfg.cvars.enable_hcoll() {
         let nodes = cfg.nodes().max(1);
         let intra = network::memcpy_us(cfg, bytes)
             + (cfg.machine.cores_per_node.min(p) as f64).log2().ceil() * 0.2;
-        let inter = (nodes.max(2) as f64).log2().ceil() * per_round;
+        let inter = (nodes.max(2) as f64).log2().ceil() * per_round(cfg, bytes);
         cfg.machine.hcoll_setup_us + intra + inter
     } else {
-        (p.max(2) as f64).log2().ceil() * per_round
+        bcast_binomial_us(cfg, p, bytes, u64::MAX)
     }
 }
 
@@ -90,5 +261,76 @@ mod tests {
     fn broadcast_cheaper_than_allreduce() {
         let c = cfg(512, false);
         assert!(broadcast_us(&c, 512, 4096) < allreduce_us(&c, 512, 4096));
+    }
+
+    #[test]
+    fn engine_costs_equal_their_parameterized_twins() {
+        // The refactor onto the algorithm-parameterized functions must
+        // not move the coarray engine's numbers by a single bit.
+        let c = cfg(256, false);
+        assert_eq!(
+            allreduce_us(&c, 256, 8192).to_bits(),
+            allreduce_recursive_doubling_us(&c, 256, 8192).to_bits()
+        );
+        assert_eq!(
+            broadcast_us(&c, 256, 8192).to_bits(),
+            bcast_binomial_us(&c, 256, 8192, u64::MAX).to_bits()
+        );
+    }
+
+    #[test]
+    fn ring_allreduce_wins_large_messages_loses_small_ones() {
+        let c = cfg(512, false);
+        let big = 1 << 20;
+        let rd_big = allreduce_alg_us(&c, 512, big, AllreduceAlgorithm::RecursiveDoubling, false);
+        let ring_big = allreduce_alg_us(&c, 512, big, AllreduceAlgorithm::Ring, false);
+        assert!(ring_big < rd_big, "ring={ring_big} rd={rd_big} (1 MiB, 512 ranks)");
+        let small = 2048;
+        let rd_small =
+            allreduce_alg_us(&c, 512, small, AllreduceAlgorithm::RecursiveDoubling, false);
+        let ring_small = allreduce_alg_us(&c, 512, small, AllreduceAlgorithm::Ring, false);
+        assert!(rd_small < ring_small, "rd={rd_small} ring={ring_small} (2 KiB, 512 ranks)");
+    }
+
+    #[test]
+    fn scatter_allgather_bcast_wins_large_messages_loses_small_ones() {
+        let c = cfg(256, false);
+        let big = 1 << 20;
+        let binomial = bcast_alg_us(&c, 256, big, BcastAlgorithm::Binomial, u64::MAX, false);
+        let sag = bcast_alg_us(&c, 256, big, BcastAlgorithm::ScatterAllgather, u64::MAX, false);
+        assert!(sag < binomial, "sag={sag} binomial={binomial} (1 MiB, 256 ranks)");
+        let small = 1024;
+        let binomial_s = bcast_alg_us(&c, 256, small, BcastAlgorithm::Binomial, u64::MAX, false);
+        let sag_s = bcast_alg_us(&c, 256, small, BcastAlgorithm::ScatterAllgather, u64::MAX, false);
+        assert!(binomial_s < sag_s, "binomial={binomial_s} sag={sag_s} (1 KiB)");
+    }
+
+    #[test]
+    fn segmenting_pipelines_large_binomial_broadcasts() {
+        let c = cfg(256, false);
+        let whole = bcast_binomial_us(&c, 256, 1 << 20, u64::MAX);
+        let segmented = bcast_binomial_us(&c, 256, 1 << 20, 64 * 1024);
+        assert!(segmented < whole, "segmented={segmented} whole={whole}");
+        // Over-segmenting (per-segment latency dominates) backfires.
+        let shredded = bcast_binomial_us(&c, 256, 1 << 20, 256);
+        assert!(shredded > segmented, "shredded={shredded} segmented={segmented}");
+    }
+
+    #[test]
+    fn smp_hierarchy_helps_multi_node_allreduce() {
+        let c = cfg(1024, false);
+        let flat =
+            allreduce_alg_us(&c, 1024, 8192, AllreduceAlgorithm::RecursiveDoubling, false);
+        let smp = allreduce_alg_us(&c, 1024, 8192, AllreduceAlgorithm::RecursiveDoubling, true);
+        assert!(smp < flat, "smp={smp} flat={flat}");
+    }
+
+    #[test]
+    fn algorithm_selectors_decode_cvar_values() {
+        assert_eq!(BcastAlgorithm::from_cvar(0), BcastAlgorithm::Binomial);
+        assert_eq!(BcastAlgorithm::from_cvar(1), BcastAlgorithm::ScatterAllgather);
+        assert_eq!(BcastAlgorithm::from_cvar(2), BcastAlgorithm::ScatterRingAllgather);
+        assert_eq!(AllreduceAlgorithm::from_cvar(0), AllreduceAlgorithm::RecursiveDoubling);
+        assert_eq!(AllreduceAlgorithm::from_cvar(1), AllreduceAlgorithm::Ring);
     }
 }

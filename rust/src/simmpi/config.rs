@@ -13,6 +13,12 @@ use crate::mpi_t::CvarSet;
 pub struct Machine {
     pub name: &'static str,
     pub cores_per_node: usize,
+    /// Largest image (process) count the testbed supports — the
+    /// normalization ceiling of the RL scale feature
+    /// ([`crate::backend::scale_feature`]). Both paper testbeds ran up
+    /// to 2048 images (§6); a larger deployment raises this instead of
+    /// silently pushing the feature past 1.0.
+    pub max_images: usize,
     /// Base one-way network latency.
     pub latency_us: f64,
     /// Large-message network bandwidth (bytes per µs).
@@ -51,6 +57,7 @@ impl Machine {
         Machine {
             name: "cheyenne",
             cores_per_node: 36,
+            max_images: 2048,
             latency_us: 1.3,
             bandwidth_bpus: 6_000.0,
             per_msg_overhead_us: 0.45,
@@ -73,6 +80,7 @@ impl Machine {
         Machine {
             name: "edison",
             cores_per_node: 24,
+            max_images: 2048,
             latency_us: 1.0,
             bandwidth_bpus: 5_000.0,
             per_msg_overhead_us: 0.35,

@@ -1,0 +1,98 @@
+//! PRK-style collective-heavy kernel: a bulk-synchronous iteration
+//! dominated by large broadcasts and reductions.
+//!
+//! Shape of many spectral/ensemble codes (and of the MPI
+//! collective-benchmark suites in Hunold & Carpen-Amarie's
+//! performance-guidelines work): each timestep the root fans a large
+//! parameter block out to every rank (`co_broadcast`), ranks compute,
+//! then global sums reduce the step's observables (`co_sum`) before a
+//! barrier closes the step. Point-to-point traffic is negligible by
+//! construction — this is the workload that exercises
+//! collective-algorithm selection, the second tunable backend's knob
+//! space. The skeleton builds real CAF programs, so the coarrays
+//! backend can also run it through the discrete-event engine.
+
+use crate::coarray::CafProgram;
+use crate::util::rng::Rng;
+use crate::workloads::spec::Workload;
+
+/// Collective-heavy kernel skeleton.
+#[derive(Debug, Clone)]
+pub struct Collectives {
+    /// Timesteps.
+    pub steps: usize,
+    /// Broadcast payload per step (bytes).
+    pub bcast_bytes: u64,
+    /// Reduction payload per step (bytes).
+    pub allreduce_bytes: u64,
+    /// Reductions per step.
+    pub allreduces_per_step: usize,
+    /// Compute per rank per step, µs.
+    pub compute_us: f64,
+}
+
+impl Default for Collectives {
+    fn default() -> Collectives {
+        Collectives {
+            steps: 10,
+            bcast_bytes: 1 << 20,
+            allreduce_bytes: 256 * 1024,
+            allreduces_per_step: 2,
+            compute_us: 150.0,
+        }
+    }
+}
+
+impl Workload for Collectives {
+    fn name(&self) -> &'static str {
+        "prk_collectives"
+    }
+
+    fn build(&self, images: usize, rng: &mut Rng) -> Vec<CafProgram> {
+        assert!(images >= 2);
+        // Static per-rank compute imbalance: the problem instance, not
+        // run-to-run noise (that's the simulator's job).
+        let imbalance: Vec<f64> =
+            (0..images).map(|_| 1.0 + 0.1 * (rng.f64() - 0.5)).collect();
+        (1..=images)
+            .map(|img| {
+                let mut p = CafProgram::new(img, images);
+                for _ in 0..self.steps {
+                    p.co_broadcast(self.bcast_bytes);
+                    p.compute(self.compute_us * imbalance[img - 1]);
+                    for _ in 0..self.allreduces_per_step {
+                        p.co_sum(self.allreduce_bytes);
+                    }
+                    p.sync_all();
+                }
+                p
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builds_collective_dominated_programs() {
+        let mut rng = Rng::new(3);
+        let progs = Collectives::default().build(8, &mut rng);
+        assert_eq!(progs.len(), 8);
+        for p in &progs {
+            let collectives = p
+                .ops
+                .iter()
+                .filter(|op| {
+                    matches!(
+                        op,
+                        crate::coarray::CafOp::CoSum { .. }
+                            | crate::coarray::CafOp::CoBroadcast { .. }
+                    )
+                })
+                .count();
+            assert_eq!(collectives, 10 * 3, "bcast + 2 co_sum per step");
+        }
+    }
+}

@@ -6,12 +6,17 @@
 //! * [`Transpose`] — staged all-to-all of tiles: message-count stress,
 //!   where piggybacking and eager thresholds dominate;
 //! * [`SynchP2p`] — pipelined wavefront: pure latency/progress stress,
-//!   the kernel most sensitive to poll/yield and async progress.
+//!   the kernel most sensitive to poll/yield and async progress;
+//! * [`Collectives`] — broadcast/reduction-dominated bulk-synchronous
+//!   iteration: the workload that exercises collective-algorithm
+//!   selection (the `collectives` tunable backend).
 
+mod collectives;
 mod p2p;
 mod stencil;
 mod transpose;
 
+pub use collectives::Collectives;
 pub use p2p::SynchP2p;
 pub use stencil::Stencil;
 pub use transpose::Transpose;

@@ -36,10 +36,11 @@ pub enum WorkloadKind {
     PrkStencil,
     PrkTranspose,
     PrkP2p,
+    PrkCollectives,
 }
 
 impl WorkloadKind {
-    pub const ALL: [WorkloadKind; 7] = [
+    pub const ALL: [WorkloadKind; 8] = [
         WorkloadKind::Icar,
         WorkloadKind::CloverLeaf,
         WorkloadKind::LatticeBoltzmann,
@@ -47,6 +48,7 @@ impl WorkloadKind {
         WorkloadKind::PrkStencil,
         WorkloadKind::PrkTranspose,
         WorkloadKind::PrkP2p,
+        WorkloadKind::PrkCollectives,
     ];
 
     /// The paper's four *training* codes (ICAR is held out for
@@ -81,6 +83,7 @@ impl WorkloadKind {
             "prk_stencil" | "stencil" => Some(WorkloadKind::PrkStencil),
             "prk_transpose" | "transpose" => Some(WorkloadKind::PrkTranspose),
             "prk_p2p" | "p2p" => Some(WorkloadKind::PrkP2p),
+            "prk_collectives" | "collectives" => Some(WorkloadKind::PrkCollectives),
             _ => None,
         }
     }
@@ -94,6 +97,7 @@ impl WorkloadKind {
             WorkloadKind::PrkStencil => Box::new(super::prk::Stencil::default()),
             WorkloadKind::PrkTranspose => Box::new(super::prk::Transpose::default()),
             WorkloadKind::PrkP2p => Box::new(super::prk::SynchP2p::default()),
+            WorkloadKind::PrkCollectives => Box::new(super::prk::Collectives::default()),
         }
     }
 
@@ -106,6 +110,7 @@ impl WorkloadKind {
             WorkloadKind::PrkStencil => "prk_stencil",
             WorkloadKind::PrkTranspose => "prk_transpose",
             WorkloadKind::PrkP2p => "prk_p2p",
+            WorkloadKind::PrkCollectives => "prk_collectives",
         }
     }
 }

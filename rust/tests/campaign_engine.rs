@@ -2,6 +2,7 @@
 //! engine's core contract), episode-cache correctness, and report
 //! consistency — all against the real simulator with the tabular agent.
 
+use aituning::backend::BackendId;
 use aituning::campaign::{job_grid, CampaignConfig, CampaignEngine, CampaignJob};
 use aituning::coordinator::{AgentKind, Controller, TuningConfig};
 use aituning::mpi_t::{CvarId, CvarSet};
@@ -24,6 +25,7 @@ fn engine(runs: usize, workers: usize) -> CampaignEngine {
 
 fn small_grid() -> Vec<CampaignJob> {
     job_grid(
+        BackendId::Coarrays,
         &[Machine::cheyenne()],
         &[WorkloadKind::LatticeBoltzmann, WorkloadKind::SkeletonPic],
         &[4, 8],
@@ -60,6 +62,7 @@ fn campaign_matches_standalone_controller() {
     // An engine job must produce exactly what a hand-built controller
     // with the same seed produces: the pool adds no hidden coupling.
     let job = CampaignJob {
+        backend: BackendId::Coarrays,
         machine: "cheyenne",
         workload: WorkloadKind::LatticeBoltzmann,
         images: 8,
@@ -81,8 +84,14 @@ fn campaign_matches_standalone_controller() {
 
 #[test]
 fn more_workers_than_jobs_is_fine() {
-    let jobs =
-        job_grid(&[Machine::cheyenne()], &[WorkloadKind::PrkP2p], &[4, 8], AgentKind::Tabular, 3);
+    let jobs = job_grid(
+        BackendId::Coarrays,
+        &[Machine::cheyenne()],
+        &[WorkloadKind::PrkP2p],
+        &[4, 8],
+        AgentKind::Tabular,
+        3,
+    );
     let report = engine(3, 64).run(&jobs).unwrap();
     assert_eq!(report.results.len(), 2);
     assert!(report.workers <= 2, "workers clamp to job count");
@@ -94,7 +103,14 @@ fn one_pool_spans_both_testbeds() {
     // cheyenne and edison cells; per-cell results must equal those of
     // a single-machine engine whose base config names that machine.
     let machines = [Machine::cheyenne(), Machine::edison()];
-    let jobs = job_grid(&machines, &[WorkloadKind::LatticeBoltzmann], &[4], AgentKind::Tabular, 7);
+    let jobs = job_grid(
+        BackendId::Coarrays,
+        &machines,
+        &[WorkloadKind::LatticeBoltzmann],
+        &[4],
+        AgentKind::Tabular,
+        7,
+    );
     assert_eq!(jobs.len(), 2);
     let report = engine(3, 2).run(&jobs).unwrap();
     assert_ne!(
@@ -112,6 +128,46 @@ fn one_pool_spans_both_testbeds() {
             r.outcome.best_us.to_bits(),
             "job machine must override the engine base machine"
         );
+    }
+}
+
+#[test]
+fn one_independent_pool_spans_backends() {
+    // Independent campaigns may mix backends in one job list: each
+    // controller sizes its own state/action space from its job's
+    // backend, and per-cell results equal those of single-backend
+    // engines.
+    let mut jobs = job_grid(
+        BackendId::Coarrays,
+        &[Machine::cheyenne()],
+        &[WorkloadKind::LatticeBoltzmann],
+        &[4],
+        AgentKind::Tabular,
+        7,
+    );
+    jobs.extend(job_grid(
+        BackendId::Collectives,
+        &[Machine::cheyenne()],
+        &[WorkloadKind::PrkCollectives],
+        &[16],
+        AgentKind::Tabular,
+        7,
+    ));
+    let report = engine(3, 2).run(&jobs).unwrap();
+    assert_eq!(report.results.len(), 2);
+    for r in &report.results {
+        let solo = CampaignEngine::new(CampaignConfig {
+            base: TuningConfig { backend: r.job.backend, ..base_cfg(3) },
+            workers: 1,
+        })
+        .run(&[r.job])
+        .unwrap();
+        assert_eq!(
+            solo.results[0].outcome.best_us.to_bits(),
+            r.outcome.best_us.to_bits(),
+            "job backend must override the engine base backend"
+        );
+        assert_eq!(r.outcome.ensemble.backend(), r.job.backend);
     }
 }
 

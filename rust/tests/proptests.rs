@@ -1,36 +1,48 @@
 //! Property-based tests over coordinator and simulator invariants
 //! (in-crate `util::prop` harness; seeds reproduce failures).
+//!
+//! The action-codec and domain-closure properties are parameterized
+//! over *arbitrary* backend cvar tables — random counts, random
+//! Bool/Int/Choice domains — not just the two shipped registries, so
+//! adding a third backend cannot silently break the index layout.
 
-use aituning::coordinator::{build_state, Action, RelativeTracker, NUM_ACTIONS, STATE_DIM};
-use aituning::coordinator::{ReplayBuffer, ReplayPolicyKind, Transition};
+use aituning::backend::BackendId;
+use aituning::coordinator::{build_state, num_actions, Action, RelativeTracker};
+use aituning::coordinator::{ReplayBuffer, ReplayPolicyKind, Transition, NUM_ACTIONS, STATE_DIM};
 use aituning::metrics::stats::Summary;
-use aituning::mpi_t::{CvarDomain, CvarId, CvarSet, PvarId, PvarStats, MPICH_CVARS, NUM_CVARS};
+use aituning::mpi_t::{
+    CvarDescriptor, CvarDomain, CvarId, CvarSet, PvarId, PvarStats,
+};
 use aituning::prop_assert;
 use aituning::simmpi::{Engine, Machine, Op, SimConfig};
 use aituning::util::prop::forall;
 use aituning::util::rng::Rng;
 use aituning::workloads::WorkloadKind;
 
-fn random_cvars(rng: &mut Rng) -> CvarSet {
-    let mut cv = CvarSet::vanilla();
-    for i in 0..NUM_CVARS {
+fn random_cvars(rng: &mut Rng, backend: BackendId) -> CvarSet {
+    let mut cv = CvarSet::defaults(backend);
+    for i in 0..cv.len() {
         // Intentionally out-of-domain raw values: set() must clamp.
         cv.set(CvarId(i), rng.range_i64(-1 << 40, 1 << 40));
     }
     cv
 }
 
+/// Is `v` a member of `d`'s domain?
+fn in_domain(d: &CvarDescriptor, v: i64) -> bool {
+    d.clamp(v) == v
+}
+
 #[test]
-fn prop_cvar_set_always_in_domain() {
+fn prop_cvar_set_always_in_domain_for_every_backend() {
     forall("cvar clamping", 256, |rng| {
-        let cv = random_cvars(rng);
-        for (i, d) in MPICH_CVARS.iter().enumerate() {
-            let v = cv.get(CvarId(i));
-            match d.domain {
-                CvarDomain::Bool => prop_assert!(v == 0 || v == 1, "bool {i} = {v}"),
-                CvarDomain::Int { lo, hi, .. } => {
-                    prop_assert!((lo..=hi).contains(&v), "int {i} = {v} outside [{lo},{hi}]")
-                }
+        for backend in BackendId::ALL {
+            let cv = random_cvars(rng, backend);
+            for (i, d) in backend.cvars().iter().enumerate() {
+                let v = cv.get(CvarId(i));
+                prop_assert!(in_domain(d, v), "{backend} cvar {i} = {v} out of domain");
+                let n = d.normalize(v);
+                prop_assert!((0.0..=1.0).contains(&n), "{backend} cvar {i} normalize {n}");
             }
         }
         Ok(())
@@ -38,34 +50,162 @@ fn prop_cvar_set_always_in_domain() {
 }
 
 #[test]
-fn prop_actions_keep_configs_valid_and_invertible() {
+fn prop_actions_keep_configs_valid_and_change_at_most_one_cvar() {
     forall("action domain closure", 256, |rng| {
-        let cv = random_cvars(rng);
-        let idx = rng.below(NUM_ACTIONS as u64) as usize;
-        let action = Action::from_index(idx);
-        let next = action.apply(&cv);
-        // closure: result still in domain
-        for (i, d) in MPICH_CVARS.iter().enumerate() {
-            let v = next.get(CvarId(i));
-            prop_assert!(d.clamp(v) == v, "action {idx} left cvar {i} out of domain: {v}");
+        for backend in BackendId::ALL {
+            let table = backend.cvars();
+            let cv = random_cvars(rng, backend);
+            let idx = rng.below(backend.num_actions() as u64) as usize;
+            let action = Action::from_index(table, idx);
+            let next = action.apply(&cv);
+            // closure: result still in domain
+            for (i, d) in table.iter().enumerate() {
+                let v = next.get(CvarId(i));
+                prop_assert!(
+                    in_domain(d, v),
+                    "{backend} action {idx} left cvar {i} out of domain: {v}"
+                );
+            }
+            // at most one cvar changed
+            let changed: Vec<usize> = (0..cv.len())
+                .filter(|&i| next.get(CvarId(i)) != cv.get(CvarId(i)))
+                .collect();
+            prop_assert!(changed.len() <= 1, "{backend} action {idx} changed {changed:?}");
+            // a Select lands exactly on its option
+            if let Action::Select { cvar, choice } = action {
+                prop_assert!(
+                    next.get(cvar) == choice as i64,
+                    "{backend} select {choice} landed on {}",
+                    next.get(cvar)
+                );
+            }
         }
-        // at most one cvar changed
-        let changed: Vec<usize> = (0..NUM_CVARS)
-            .filter(|&i| next.get(CvarId(i)) != cv.get(CvarId(i)))
-            .collect();
-        prop_assert!(changed.len() <= 1, "action {idx} changed {changed:?}");
+        Ok(())
+    });
+}
+
+// --- arbitrary-backend action-codec properties (satellite: the codec
+// is a pure function of any descriptor table, not of the fixed 13) ---
+
+fn leak_str(s: String) -> &'static str {
+    Box::leak(s.into_boxed_str())
+}
+
+/// A random cvar table: 1..=9 cvars, each Bool, Int or Choice(2..=5).
+/// Leaked allocations are fine in a test process.
+fn arbitrary_table(rng: &mut Rng) -> &'static [CvarDescriptor] {
+    let n = rng.range_i64(1, 9) as usize;
+    let mut table = Vec::with_capacity(n);
+    for i in 0..n {
+        let domain = match rng.below(3) {
+            0 => CvarDomain::Bool,
+            1 => {
+                let lo = rng.range_i64(-1000, 1000);
+                let hi = lo + rng.range_i64(1, 100_000);
+                let step = rng.range_i64(1, 4096);
+                CvarDomain::Int { lo, hi, step }
+            }
+            _ => {
+                let k = rng.range_i64(2, 5) as usize;
+                let options: Vec<&'static str> =
+                    (0..k).map(|j| leak_str(format!("opt{j}"))).collect();
+                CvarDomain::Choice { options: Box::leak(options.into_boxed_slice()) }
+            }
+        };
+        let default = match domain {
+            CvarDomain::Bool => rng.range_i64(0, 1),
+            CvarDomain::Int { lo, hi, .. } => rng.range_i64(lo, hi),
+            CvarDomain::Choice { options } => rng.range_i64(0, options.len() as i64 - 1),
+        };
+        table.push(CvarDescriptor {
+            id: CvarId(i),
+            name: leak_str(format!("SYN_CVAR_{i}")),
+            domain,
+            default,
+        description: "synthetic property-test cvar",
+        });
+    }
+    Box::leak(table.into_boxed_slice())
+}
+
+#[test]
+fn prop_action_index_round_trips_over_arbitrary_tables() {
+    forall("action index bijection (arbitrary backends)", 128, |rng| {
+        let table = arbitrary_table(rng);
+        let n = num_actions(table);
+        let expected_selects: usize = table
+            .iter()
+            .map(|d| match d.domain {
+                CvarDomain::Choice { options } => options.len(),
+                _ => 0,
+            })
+            .sum();
+        prop_assert!(
+            n == 1 + 2 * table.len() + expected_selects,
+            "derived action count {n} wrong for {} cvars + {expected_selects} selects",
+            table.len()
+        );
+        // Exhaustive round trip — every index decodes and re-encodes.
+        let mut seen_selects = 0;
+        for idx in 0..n {
+            let action = Action::from_index(table, idx);
+            prop_assert!(
+                action.index(table) == idx,
+                "index {idx} decoded to {action:?} which re-encodes to {}",
+                action.index(table)
+            );
+            match action {
+                Action::Noop => prop_assert!(idx == 0, "noop at {idx}"),
+                Action::Step { cvar, .. } => {
+                    prop_assert!(cvar.0 < table.len(), "step targets cvar {}", cvar.0)
+                }
+                Action::Select { cvar, choice } => {
+                    seen_selects += 1;
+                    match table[cvar.0].domain {
+                        CvarDomain::Choice { options } => prop_assert!(
+                            choice < options.len(),
+                            "select choice {choice} out of {} options",
+                            options.len()
+                        ),
+                        _ => prop_assert!(false, "select targets non-categorical cvar"),
+                    }
+                }
+            }
+        }
+        prop_assert!(seen_selects == expected_selects, "select actions miscounted");
         Ok(())
     });
 }
 
 #[test]
-fn prop_action_index_round_trip() {
-    forall("action index bijection", 64, |rng| {
-        let idx = rng.below(NUM_ACTIONS as u64) as usize;
-        prop_assert!(
-            Action::from_index(idx).index() == idx,
-            "index {idx} did not round-trip"
-        );
+fn prop_action_application_clamps_over_arbitrary_tables() {
+    // Descriptor-level twin of the CvarSet property: stepping or
+    // selecting from ANY in-domain value stays in-domain, for any
+    // domain shape.
+    forall("action clamping (arbitrary backends)", 128, |rng| {
+        let table = arbitrary_table(rng);
+        for d in table {
+            let raw = rng.range_i64(-1 << 40, 1 << 40);
+            let current = d.clamp(raw);
+            prop_assert!(in_domain(d, current), "clamp not idempotent");
+            for up in [false, true] {
+                let stepped = d.step(current, up);
+                prop_assert!(
+                    in_domain(d, stepped),
+                    "{}: step({current}, {up}) = {stepped} escaped the domain",
+                    d.name
+                );
+            }
+            if let CvarDomain::Choice { options } = d.domain {
+                // Every enumerated select value is directly valid...
+                for choice in 0..options.len() {
+                    prop_assert!(in_domain(d, choice as i64), "choice {choice} invalid");
+                }
+                // ...and stepping walks to adjacent options only.
+                let up = d.step(current, true);
+                prop_assert!((up - current).abs() <= 1, "choice step jumped {current}->{up}");
+            }
+        }
         Ok(())
     });
 }
@@ -75,27 +215,40 @@ fn prop_state_features_always_finite_and_bounded() {
     forall("state finiteness", 256, |rng| {
         let mut stats = PvarStats::default();
         for id in 0..5 {
-            let vals: Vec<f64> = (0..rng.range_i64(1, 20)).map(|_| rng.range_f64(0.0, 1e9)).collect();
+            let vals: Vec<f64> =
+                (0..rng.range_i64(1, 20)).map(|_| rng.range_f64(0.0, 1e9)).collect();
             stats.summaries.push((PvarId(id), Summary::of(&vals)));
         }
-        let mut tracker = RelativeTracker::new();
-        tracker.record_reference(&stats);
-        let cv = random_cvars(rng);
-        let images = 1 << rng.range_i64(1, 11);
-        let s = build_state(&stats, &tracker, &cv, images as usize, rng.below(40) as usize, rng.f64());
-        for (i, v) in s.iter().enumerate() {
-            prop_assert!(v.is_finite(), "feature {i} not finite");
-            prop_assert!(v.abs() <= 5.0, "feature {i} unbounded: {v}");
+        let machine = if rng.chance(0.5) { Machine::cheyenne() } else { Machine::edison() };
+        for backend in BackendId::ALL {
+            let mut tracker = RelativeTracker::for_backend(backend);
+            tracker.record_reference(&stats);
+            let cv = random_cvars(rng, backend);
+            let images = 1 << rng.range_i64(1, 11);
+            let s = backend.runtime().build_state(
+                &stats,
+                &tracker,
+                &cv,
+                &machine,
+                images as usize,
+                rng.below(40) as usize,
+                rng.f64(),
+            );
+            prop_assert!(s.len() == backend.state_dim(), "{backend} state length {}", s.len());
+            for (i, v) in s.iter().enumerate() {
+                prop_assert!(v.is_finite(), "{backend} feature {i} not finite");
+                prop_assert!(v.abs() <= 5.0, "{backend} feature {i} unbounded: {v}");
+            }
         }
         Ok(())
     });
 }
 
 fn random_transition(rng: &mut Rng, workload: Option<WorkloadKind>) -> Transition {
-    let mut state = [0.0f32; STATE_DIM];
+    let mut state = vec![0.0f32; STATE_DIM];
     state[0] = rng.f64() as f32;
     Transition {
-        state,
+        state: state.clone(),
         action: rng.below(NUM_ACTIONS as u64) as usize,
         reward: rng.range_f64(-1.0, 1.0) as f32,
         next_state: state,
@@ -224,6 +377,39 @@ fn prop_prioritized_selection_is_deterministic_and_reward_weighted() {
 }
 
 #[test]
+fn prop_td_feedback_is_deterministic_and_reprices_slots() {
+    // Adaptive PER: identical (push, feedback) sequences produce
+    // bit-identical draws, and a fed-back slot's draw frequency follows
+    // its realized TD error, not its stale |reward| proxy.
+    forall("adaptive PER feedback", 64, |rng| {
+        let n = rng.range_i64(8, 48) as usize;
+        let hot = rng.below(n as u64) as usize;
+        let build = || {
+            let mut rb = ReplayBuffer::with_policy(64, ReplayPolicyKind::Prioritized);
+            for _ in 0..n {
+                let mut t = random_transition(&mut Rng::new(n as u64), None);
+                t.reward = 0.0;
+                rb.push(t);
+            }
+            rb.feedback(hot, 1.0);
+            rb
+        };
+        let a = build();
+        let b = build();
+        let seed = rng.next_u64();
+        let (_, picks_a) = a.sample_with_picks(128, &mut Rng::new(seed));
+        let (_, picks_b) = b.sample_with_picks(128, &mut Rng::new(seed));
+        prop_assert!(picks_a == picks_b, "same feedback sequence drew differently");
+        let hot_draws = picks_a.iter().filter(|&&i| i == hot).count();
+        prop_assert!(
+            hot_draws > 128 / n,
+            "fed-back slot drawn {hot_draws}/128 with {n} resident"
+        );
+        Ok(())
+    });
+}
+
+#[test]
 fn prop_simulator_time_nonnegative_and_monotone_in_compute() {
     forall("sim sanity", 48, |rng| {
         let images = rng.range_i64(2, 12) as usize;
@@ -297,6 +483,51 @@ fn prop_relative_tracker_sign_convention() {
         prop_assert!(
             (cur < reference) == (rel > 0.0) || cur == reference,
             "sign convention broken: ref {reference}, cur {cur}, rel {rel}"
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_collectives_episodes_are_pure_functions_of_their_seeds() {
+    forall("collectives episode purity", 32, |rng| {
+        let rt = BackendId::Collectives.runtime();
+        let machine = if rng.chance(0.5) { Machine::cheyenne() } else { Machine::edison() };
+        let images = rng.range_i64(2, 256) as usize;
+        let cv = random_cvars(rng, BackendId::Collectives);
+        let wseed = rng.next_u64();
+        let rseed = rng.next_u64();
+        let run = || {
+            rt.run_episode(WorkloadKind::PrkCollectives, images, &machine, &cv, 0.05, wseed, rseed)
+                .unwrap()
+        };
+        let a = run();
+        let b = run();
+        prop_assert!(
+            a.total_time_us.to_bits() == b.total_time_us.to_bits(),
+            "episode not bit-reproducible"
+        );
+        prop_assert!(a.total_time_us > 0.0, "non-positive total");
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_coarrays_build_state_matches_legacy_normalization() {
+    // Fingerprint-preservation pin for the satellite scale-ceiling fix:
+    // on the 2048-image presets, the machine-derived ceiling reproduces
+    // the historical `log2(images)/11.0` feature bit-for-bit.
+    forall("scale feature compatibility", 64, |rng| {
+        let machine = if rng.chance(0.5) { Machine::cheyenne() } else { Machine::edison() };
+        let images = 1usize << rng.range_i64(0, 12);
+        let stats = PvarStats::default();
+        let tracker = RelativeTracker::new();
+        let s = build_state(&stats, &tracker, &CvarSet::vanilla(), &machine, images, 0, 0.0);
+        let legacy = (images.max(1) as f64).log2() as f32 / 11.0;
+        prop_assert!(
+            s[9].to_bits() == legacy.to_bits(),
+            "scale feature moved: {} vs legacy {legacy}",
+            s[9]
         );
         Ok(())
     });

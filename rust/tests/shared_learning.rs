@@ -3,6 +3,7 @@
 //! of a 1-job shared campaign with the independent path, hub/replay
 //! accounting, and an independent-vs-shared convergence smoke test.
 
+use aituning::backend::BackendId;
 use aituning::campaign::{job_grid, CampaignConfig, CampaignEngine, CampaignJob, CampaignReport};
 use aituning::coordinator::{AgentKind, Controller, ReplayPolicyKind, SharedLearning, TuningConfig};
 use aituning::simmpi::Machine;
@@ -35,6 +36,7 @@ fn shared_engine_with_policy(
 
 fn small_grid() -> Vec<CampaignJob> {
     job_grid(
+        BackendId::Coarrays,
         &[Machine::cheyenne()],
         &[WorkloadKind::LatticeBoltzmann, WorkloadKind::SkeletonPic],
         &[4, 8],
@@ -95,6 +97,7 @@ fn one_job_shared_campaign_replays_the_independent_path() {
     // must reproduce the plain Controller::tune trajectory bit-for-bit
     // — pinning that pull/push plumbing adds no hidden perturbation.
     let job = CampaignJob {
+        backend: BackendId::Coarrays,
         machine: "cheyenne",
         workload: WorkloadKind::LatticeBoltzmann,
         images: 8,
@@ -198,6 +201,7 @@ fn shared_mode_reaches_independent_best_on_prk_stencil() {
     // independent mode's, with a 1-percentage-point tolerance absorbing
     // trajectory divergence from the coupled exploration.
     let jobs = job_grid(
+        BackendId::Coarrays,
         &[Machine::cheyenne()],
         &[WorkloadKind::PrkStencil],
         &[4, 8],
@@ -223,4 +227,126 @@ fn shared_mode_reaches_independent_best_on_prk_stencil() {
     // Both modes ran the identical budget.
     assert_eq!(independent.total_app_runs(), shared.total_app_runs());
     assert!(shared.hub.unwrap().total_transitions > 0);
+}
+
+// --- backend-generic campaigns (the TunableRuntime seam) ---
+
+fn collectives_grid() -> Vec<CampaignJob> {
+    job_grid(
+        BackendId::Collectives,
+        &[Machine::cheyenne()],
+        &[WorkloadKind::PrkCollectives, WorkloadKind::PrkTranspose],
+        &[16, 64],
+        AgentKind::Tabular,
+        13,
+    )
+}
+
+fn backend_cfg(backend: BackendId, runs: usize, sync_every: usize) -> TuningConfig {
+    TuningConfig {
+        backend,
+        agent: AgentKind::Tabular,
+        runs,
+        noise: 0.01,
+        seed: 13,
+        shared: Some(SharedLearning { sync_every }),
+        ..TuningConfig::default()
+    }
+}
+
+#[test]
+fn per_backend_campaign_fingerprints_identical_at_1_2_and_4_workers() {
+    // The acceptance pin: worker-count invariance must hold for every
+    // tunable runtime — independent and shared mode alike.
+    for backend in BackendId::ALL {
+        let jobs = match backend {
+            BackendId::Coarrays => small_grid(),
+            BackendId::Collectives => collectives_grid(),
+        };
+        let run = |workers: usize| {
+            let base = backend_cfg(backend, 8, 2);
+            CampaignEngine::new(CampaignConfig { base, workers })
+        };
+        // Independent path.
+        let i1 = run(1).run(&jobs).unwrap();
+        let i2 = run(2).run(&jobs).unwrap();
+        let i4 = run(4).run(&jobs).unwrap();
+        assert_eq!(i1.fingerprint(), i2.fingerprint(), "{backend}: independent 1 vs 2");
+        assert_eq!(i1.fingerprint(), i4.fingerprint(), "{backend}: independent 1 vs 4");
+        // Shared path (hub state folded into the fingerprint).
+        let s1 = run(1).run_shared(&jobs).unwrap();
+        let s2 = run(2).run_shared(&jobs).unwrap();
+        let s4 = run(4).run_shared(&jobs).unwrap();
+        assert_reports_bit_identical(&s1, &s2);
+        assert_reports_bit_identical(&s1, &s4);
+        assert!(s1.hub.unwrap().total_transitions > 0, "{backend}: hub pooled nothing");
+    }
+}
+
+#[test]
+fn shared_campaign_rejects_mixed_backends() {
+    let mut jobs = small_grid();
+    jobs.extend(collectives_grid());
+    let engine = CampaignEngine::new(CampaignConfig { base: backend_cfg(BackendId::Coarrays, 4, 2), workers: 2 });
+    assert!(engine.run_shared(&jobs).is_err(), "hub cannot merge two state families");
+}
+
+#[test]
+fn collectives_tuned_config_beats_its_default_on_the_collective_heavy_workload() {
+    // Acceptance smoke: a deterministic tuning session over the
+    // collectives backend must discover a configuration that beats the
+    // MPICH defaults (binomial bcast + recursive-doubling allreduce) on
+    // the collective-heavy workload. High exploration + a 1 MiB-class
+    // payload mix at 128 ranks make several actions (algorithm selects,
+    // SMP toggle, segment steps) individually profitable, so the pinned
+    // seed is nowhere near a knife edge.
+    let cfg = TuningConfig {
+        backend: BackendId::Collectives,
+        agent: AgentKind::Tabular,
+        runs: 25,
+        eps_start: 1.0,
+        eps_end: 0.3,
+        noise: 0.01,
+        seed: 5,
+        ..TuningConfig::default()
+    };
+    let mut ctl = Controller::new(cfg).unwrap();
+    let out = ctl.tune(WorkloadKind::PrkCollectives, 128).unwrap();
+    assert_eq!(out.log.runs.len(), 26);
+    assert!(
+        out.improvement() > 0.01,
+        "tuning must beat the default collective algorithms: {:+.2}% (best {} vs reference {})",
+        out.improvement() * 100.0,
+        out.best_us,
+        out.reference_us
+    );
+    // The shipped ensemble stays a valid collectives configuration.
+    assert_eq!(out.ensemble.backend(), BackendId::Collectives);
+    let ens = ctl.evaluate(WorkloadKind::PrkCollectives, 128, &out.ensemble, 3).unwrap();
+    assert!(ens <= out.reference_us * 1.05, "ensemble {ens} vs reference {}", out.reference_us);
+}
+
+#[test]
+fn collectives_hand_tuned_model_beats_default_deterministically() {
+    // Model-level pin (no RL in the loop): the landscape the backend
+    // exposes really has the documented optimum direction.
+    use aituning::mpi_t::{CvarId, CvarSet};
+    let rt = BackendId::Collectives.runtime();
+    let m = Machine::cheyenne();
+    let default = rt
+        .run_episode(WorkloadKind::PrkCollectives, 128, &m, &CvarSet::defaults(BackendId::Collectives), 0.0, 7, 1)
+        .unwrap();
+    let mut tuned_cv = CvarSet::defaults(BackendId::Collectives);
+    tuned_cv.set(CvarId(0), 1); // scatter_allgather bcast
+    tuned_cv.set(CvarId(1), 1); // ring allreduce
+    tuned_cv.set(CvarId(3), 1); // SMP hierarchy
+    let tuned = rt
+        .run_episode(WorkloadKind::PrkCollectives, 128, &m, &tuned_cv, 0.0, 7, 1)
+        .unwrap();
+    assert!(
+        tuned.total_time_us < default.total_time_us * 0.9,
+        "tuned {} vs default {}",
+        tuned.total_time_us,
+        default.total_time_us
+    );
 }
