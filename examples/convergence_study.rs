@@ -35,13 +35,9 @@ fn main() -> anyhow::Result<()> {
         ("bool-step(async)", SyntheticModel::BoolStep { cvar: CvarId(0), gain: 0.3 }),
     ];
 
-    let agent = if aituning::runtime::default_artifacts_dir().join("manifest.json").exists()
-        && !quick
-    {
-        AgentKind::Dqn
-    } else {
-        AgentKind::Tabular
-    };
+    // Native DQN engine: no artifacts required; quick mode stays
+    // tabular for wall-clock only.
+    let agent = if quick { AgentKind::Tabular } else { AgentKind::Dqn };
     let runs = if quick { 100 } else { 400 };
 
     let mut t = Table::new(&["model", "noise", "dist-to-best", "time ratio", "converged?"]);
@@ -69,6 +65,7 @@ fn main() -> anyhow::Result<()> {
     }
     let agent_name = match agent {
         AgentKind::Dqn => "dqn",
+        AgentKind::DqnAot => "dqn-aot",
         AgentKind::DqnTarget => "dqn+target",
         AgentKind::Tabular => "tabular",
     };

@@ -5,7 +5,9 @@
 //!
 //! 1. **Pre-training** — the controller learns across the paper's four
 //!    training codes at several scales (a scaled-down §6 campaign),
-//!    with the deep Q-network executing through PJRT on every step.
+//!    with the deep Q-network training natively in Rust on every step
+//!    (swap in the AOT/PJRT engine with `--agent dqn-aot` once
+//!    artifacts are built).
 //! 2. **Inference on ICAR** (held out from training): 20 tuning runs at
 //!    256 and 512 images on the Cheyenne machine model, then ensemble
 //!    inference (§5.4).
@@ -13,9 +15,10 @@
 //!    AITuning-optimized total times, with the paper's reported
 //!    improvements alongside.
 //!
-//! All layers compose here: Pallas kernel → JAX train graph → HLO text →
-//! PJRT execution from the Rust tuning loop → discrete-event simulated
-//! cluster. Results are recorded in EXPERIMENTS.md.
+//! All layers compose here: native Q-engine (or, with artifacts, the
+//! Pallas kernel → JAX train graph → HLO text → PJRT path) → Rust
+//! tuning loop → discrete-event simulated cluster. Results are
+//! recorded in EXPERIMENTS.md.
 
 use aituning::baselines::human_tuned;
 use aituning::coordinator::{AgentKind, Controller, TuningConfig};
@@ -95,14 +98,14 @@ fn main() -> anyhow::Result<()> {
     fig1.print();
 
     // Loss curve summary (learning diagnostic).
-    let losses = ctl.loss_history();
+    let losses = ctl.losses();
     if !losses.is_empty() {
-        let head = &losses[..losses.len().min(10)];
-        let tail = &losses[losses.len().saturating_sub(10)..];
+        let recent = losses.recent();
+        let tail = &recent[recent.len().saturating_sub(10)..];
         let mean = |xs: &[f32]| xs.iter().sum::<f32>() / xs.len() as f32;
         println!(
-            "\nDQN loss: first-10 mean {:.4} -> last-10 mean {:.4} over {} updates",
-            mean(head),
+            "\nDQN loss: running mean {:.4} -> last-10 mean {:.4} over {} updates",
+            losses.mean(),
             mean(tail),
             losses.len()
         );

@@ -1,34 +1,39 @@
 //! Quickstart: tune one workload with AITuning in ~a minute.
 //!
 //! ```sh
-//! make artifacts                      # once: AOT-compile the Q-network
-//! cargo run --release --example quickstart
+//! cargo run --release --example quickstart          # 15 tuning runs
+//! cargo run --release --example quickstart 3        # tiny smoke (CI)
 //! ```
 //!
-//! Runs the paper's §5 loop — reference run, 15 tuning runs driven by
-//! the deep Q-network (falling back to the tabular agent if artifacts
-//! are missing), ensemble inference — on the Lattice-Boltzmann workload,
-//! then prints the per-run log and the shipped configuration.
+//! Runs the paper's §5 loop — reference run, N tuning runs driven by
+//! the deep Q-network on the **native engine** (pure Rust: no
+//! artifacts, no PJRT, works on every backend), ensemble inference —
+//! on the Lattice-Boltzmann workload, then prints the per-run log and
+//! the shipped configuration.
 
 use aituning::coordinator::{Action, AgentKind, Controller, TuningConfig};
 use aituning::util::bench::Table;
 use aituning::workloads::WorkloadKind;
 
 fn main() -> anyhow::Result<()> {
-    let artifacts = aituning::runtime::default_artifacts_dir();
-    let agent = if artifacts.join("manifest.json").exists() {
-        AgentKind::Dqn
-    } else {
-        eprintln!("artifacts not found — falling back to the tabular agent");
-        AgentKind::Tabular
+    // An unparseable count must error, not silently fall back — CI's
+    // tiny-smoke invocation depends on the argument taking effect.
+    let runs: usize = match std::env::args().nth(1) {
+        None => 15,
+        Some(arg) => arg
+            .parse()
+            .map_err(|_| anyhow::anyhow!("run count must be an integer, got {arg:?}"))?,
     };
-
-    let cfg = TuningConfig { agent, runs: 15, seed: 7, ..TuningConfig::default() };
+    let cfg = TuningConfig { agent: AgentKind::Dqn, runs, seed: 7, ..TuningConfig::default() };
     let mut ctl = Controller::new(cfg)?;
 
     let kind = WorkloadKind::LatticeBoltzmann;
     let images = 64;
-    println!("tuning {} at {images} images ({} agent)\n", kind.name(), ctl.agent_name());
+    println!(
+        "tuning {} at {images} images ({} agent, native engine, {runs} runs)\n",
+        kind.name(),
+        ctl.agent_name()
+    );
 
     let out = ctl.tune(kind, images)?;
 
@@ -50,6 +55,11 @@ fn main() -> anyhow::Result<()> {
 
     println!("\nreference: {:.0} µs", out.reference_us);
     println!("best:      {:.0} µs ({:+.1}%)", out.best_us, out.improvement() * 100.0);
+    println!(
+        "DQN losses: {} updates, running mean {:.4}",
+        ctl.losses().len(),
+        ctl.losses().mean()
+    );
     println!("shipped ensemble configuration (§5.4):\n  {}", out.ensemble);
     let ens = ctl.evaluate(kind, images, &out.ensemble, 3)?;
     println!(

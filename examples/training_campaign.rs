@@ -44,17 +44,14 @@ fn main() -> anyhow::Result<()> {
     };
     let runs_per = if quick { 6 } else { 20 };
     let machines = [Machine::cheyenne(), Machine::edison()];
-    let agent = if aituning::runtime::default_artifacts_dir().join("manifest.json").exists() {
-        AgentKind::Dqn
-    } else {
-        AgentKind::Tabular
-    };
+    // Native DQN engine: no artifacts required.
+    let agent = AgentKind::Dqn;
     let base = TuningConfig {
         machine: machines[0].clone(),
         agent,
         runs: runs_per,
         seed: 5,
-        shared: shared_mode.then_some(SharedLearning { sync_every: if quick { 2 } else { 5 } }),
+        shared: shared_mode.then_some(SharedLearning { sync_every: if quick { 2 } else { 5 }, ..SharedLearning::default() }),
         replay_policy,
         ..TuningConfig::default()
     };

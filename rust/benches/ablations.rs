@@ -40,7 +40,8 @@ fn main() -> anyhow::Result<()> {
 
     // --- agent ablation: DQN vs tabular, run as one parallel campaign ---
     let mut agents = vec![("tabular agent", AgentKind::Tabular)];
-    if have_artifacts && !quick {
+    if !quick {
+        // Native engine: no artifacts required.
         agents.insert(0, ("dqn agent", AgentKind::Dqn));
     }
     let jobs: Vec<CampaignJob> = agents
@@ -83,7 +84,7 @@ fn main() -> anyhow::Result<()> {
     //     rows above. Stays on one controller: the point is the shared
     //     replay/weights accumulated *across* workloads, which is
     //     inherently sequential. ---
-    if have_artifacts && !quick {
+    if !quick {
         let mut ctl = Controller::new(TuningConfig { agent: AgentKind::Dqn, ..base.clone() })?;
         for k in aituning::workloads::WorkloadKind::TRAINING {
             let _ = ctl.tune(k, 32)?;

@@ -31,13 +31,9 @@ fn main() -> anyhow::Result<()> {
         &[64, 128, 256]
     };
     let runs_per = if quick { 6 } else { 15 };
-    let agent = if aituning::runtime::default_artifacts_dir().join("manifest.json").exists()
-        && !quick
-    {
-        AgentKind::Dqn
-    } else {
-        AgentKind::Tabular
-    };
+    // The native engine needs no artifacts; quick mode stays tabular
+    // for wall-clock only.
+    let agent = if quick { AgentKind::Tabular } else { AgentKind::Dqn };
     let machines = [Machine::cheyenne(), Machine::edison()];
 
     let base = TuningConfig {
@@ -45,7 +41,7 @@ fn main() -> anyhow::Result<()> {
         agent,
         runs: runs_per,
         seed: 5,
-        shared: Some(SharedLearning { sync_every: if quick { 2 } else { 5 } }),
+        shared: Some(SharedLearning { sync_every: if quick { 2 } else { 5 }, ..SharedLearning::default() }),
         ..TuningConfig::default()
     };
     let jobs = job_grid(

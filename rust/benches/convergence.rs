@@ -11,8 +11,6 @@ use aituning::util::bench::Table;
 
 fn main() -> anyhow::Result<()> {
     let quick = std::env::args().any(|a| a == "--quick");
-    let have_artifacts =
-        aituning::runtime::default_artifacts_dir().join("manifest.json").exists();
     let runs = if quick { 80 } else { 300 };
 
     let models: Vec<(&str, SyntheticModel)> = vec![
@@ -32,10 +30,10 @@ fn main() -> anyhow::Result<()> {
         ),
         ("bool-step", SyntheticModel::BoolStep { cvar: CvarId(0), gain: 0.3 }),
     ];
-    let agents: Vec<(&str, AgentKind)> = if have_artifacts && !quick {
-        vec![("dqn", AgentKind::Dqn), ("tabular", AgentKind::Tabular)]
-    } else {
+    let agents: Vec<(&str, AgentKind)> = if quick {
         vec![("tabular", AgentKind::Tabular)]
+    } else {
+        vec![("dqn", AgentKind::Dqn), ("tabular", AgentKind::Tabular)]
     };
 
     let mut t =

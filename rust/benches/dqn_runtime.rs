@@ -1,80 +1,147 @@
-//! L1/L2/L3 hot-path microbenchmarks: Q-network forward (action
-//! selection), train step (replay update), state construction, and
-//! their share of one tuning iteration vs the simulated run itself.
+//! Q-engine ablation + tuning-overhead microbenchmarks.
 //!
-//! §Perf target: tuning overhead (forward + train + state build) must
-//! be negligible against one application run.
+//! Part 1 — the engine ablation: forward (action selection) and one
+//! replay train step (batch 32) on the native MLP engine, the tabular
+//! fallback, and the AOT/PJRT artifact path (reported as unavailable
+//! when the `pjrt` feature or the artifacts are absent — the stub row
+//! documents exactly what the native engine replaces).
+//!
+//! Part 2 — §Perf context: state construction, replay sampling, and
+//! one simulated application run. Tuning overhead (forward + train +
+//! state build) must stay negligible against the run itself.
 
-use aituning::coordinator::{build_state, RelativeTracker, NUM_ACTIONS, STATE_DIM};
-use aituning::coordinator::{run_episode, ReplayBuffer, Transition};
+use aituning::backend::BackendId;
+use aituning::coordinator::{
+    build_state, run_episode, Agent, RelativeTracker, ReplayBuffer, TabularAgent, Transition,
+};
 use aituning::mpi_t::CvarSet;
-use aituning::runtime::{Manifest, QNet, RuntimeClient};
+use aituning::runtime::{Manifest, NativeQNet, RuntimeClient, TrainBatch};
 use aituning::simmpi::Machine;
 use aituning::util::bench::{opaque, time, Table};
 use aituning::util::rng::Rng;
 use aituning::workloads::WorkloadKind;
 
-fn main() -> anyhow::Result<()> {
-    let quick = std::env::args().any(|a| a == "--quick");
-    let dir = aituning::runtime::default_artifacts_dir();
-    if !dir.join("manifest.json").exists() {
-        eprintln!("artifacts not built; run `make artifacts` first");
-        return Ok(());
-    }
-    let client = RuntimeClient::cpu()?;
-    let manifest = Manifest::load(&dir)?;
-    let mut rng = Rng::new(0);
-    let mut qnet = QNet::load(&client, &manifest, &mut rng)?;
-    let samples = if quick { 20 } else { 100 };
-
-    let mut t = Table::new(&["operation", "median", "p90", "iters"]);
-
-    // L2/L1: forward pass (action selection path)
-    let state = vec![0.3f32; STATE_DIM];
-    let s = time(5, samples, || {
-        opaque(qnet.q_values(&state).unwrap());
-    });
-    t.row(vec!["q_forward (batch 1)".into(), format!("{:.1} µs", s.median_us()), format!("{:.1} µs", s.p90_ns / 1e3), s.iters.to_string()]);
-
-    // L2/L1: replay train step
-    let mut replay = ReplayBuffer::new(1024);
-    let mut rng2 = Rng::new(1);
+/// A 64-transition buffer plus one 32-row minibatch drawn from it —
+/// shared by the engine ablation (the batch) and the sampling-overhead
+/// timing (the buffer).
+fn replay_fixture(backend: BackendId, rng: &mut Rng) -> (ReplayBuffer, TrainBatch) {
+    let mut replay = ReplayBuffer::for_backend(
+        1024,
+        aituning::coordinator::ReplayPolicyKind::Uniform,
+        backend,
+    );
     for i in 0..64 {
-        let mut st = vec![0.0f32; STATE_DIM];
+        let mut st = vec![0.0f32; backend.state_dim()];
         st[0] = i as f32 / 64.0;
         replay.push(Transition {
             state: st.clone(),
-            action: i % NUM_ACTIONS,
+            action: i % backend.num_actions(),
             reward: 0.1,
             next_state: st,
             done: false,
             workload: None,
         });
     }
-    let batch = replay.sample(qnet.replay_batch, &mut rng2);
-    let s = time(3, samples, || {
-        opaque(qnet.train_step(&batch, 1e-3, 0.9).unwrap());
-    });
-    t.row(vec!["q_train (batch 32, Adam)".into(), format!("{:.1} µs", s.median_us()), format!("{:.1} µs", s.p90_ns / 1e3), s.iters.to_string()]);
+    let batch = replay.sample(32, rng);
+    (replay, batch)
+}
 
-    // L3: state construction
+/// Time the AOT engine, or explain why it is unavailable (no artifacts
+/// / `pjrt` feature off) — the "AOT-stub" row of the ablation table.
+fn aot_row(state: &[f32], batch: &TrainBatch, samples: usize) -> anyhow::Result<Vec<String>> {
+    let dir = aituning::runtime::default_artifacts_dir();
+    anyhow::ensure!(dir.join("manifest.json").exists(), "artifacts not built");
+    let client = RuntimeClient::cpu()?;
+    let manifest = Manifest::load(&dir)?;
+    let mut qnet = aituning::runtime::AotQNet::load(&client, &manifest, &mut Rng::new(0))?;
+    let fwd = time(5, samples, || {
+        opaque(qnet.q_values(state).unwrap());
+    });
+    let trn = time(3, samples, || {
+        opaque(qnet.train_step(batch, 1e-3, 0.9).unwrap());
+    });
+    Ok(vec![
+        "aot (pjrt)".into(),
+        format!("{:.1} µs", fwd.median_us()),
+        format!("{:.1} µs", trn.median_us()),
+        "compiled artifacts, coarrays layout".into(),
+    ])
+}
+
+fn main() -> anyhow::Result<()> {
+    let quick = std::env::args().any(|a| a == "--quick");
+    let samples = if quick { 20 } else { 100 };
+    let backend = BackendId::Coarrays;
+    let state = vec![0.3f32; backend.state_dim()];
+    let mut rng = Rng::new(1);
+    let (replay, batch) = replay_fixture(backend, &mut rng);
+
+    // --- engine ablation: native vs tabular vs AOT ---
+    let mut t = Table::new(&["engine", "q_forward (batch 1)", "q_train (batch 32)", "notes"]);
+
+    let mut init_rng = Rng::new(0);
+    let mut native =
+        NativeQNet::with_default_shape(backend.state_dim(), backend.num_actions(), &mut init_rng);
+    let fwd = time(5, samples, || {
+        opaque(native.q_values(&state).unwrap());
+    });
+    let trn = time(3, samples, || {
+        opaque(native.train_step(&batch, 1e-3, 0.9).unwrap());
+    });
+    t.row(vec![
+        "native".into(),
+        format!("{:.1} µs", fwd.median_us()),
+        format!("{:.1} µs", trn.median_us()),
+        "pure Rust, any backend, no artifacts".into(),
+    ]);
+
+    let mut tabular = TabularAgent::new(backend.num_actions());
+    let fwd = time(5, samples, || {
+        opaque(tabular.q_values(&state).unwrap());
+    });
+    let trn = time(3, samples, || {
+        opaque(tabular.train(&batch, 1e-3, 0.9).unwrap());
+    });
+    t.row(vec![
+        "tabular".into(),
+        format!("{:.2} µs", fwd.median_us()),
+        format!("{:.1} µs", trn.median_us()),
+        "discretized Q-table (ablation)".into(),
+    ]);
+
+    t.row(aot_row(&state, &batch, samples).unwrap_or_else(|e| {
+        vec!["aot (stub)".into(), "—".into(), "—".into(), format!("unavailable: {e}")]
+    }));
+
+    println!("=== Q-engine ablation: native vs tabular vs AOT ===");
+    t.print();
+
+    // --- tuning-overhead context (L3 + the simulated run) ---
+    let mut t = Table::new(&["operation", "median", "p90", "iters"]);
     let tracker = RelativeTracker::new();
     let stats = aituning::mpi_t::PvarStats::default();
     let cv = CvarSet::vanilla();
-    let state_machine = Machine::cheyenne();
-    let s = time(10, samples * 10, || {
-        opaque(build_state(&stats, &tracker, &cv, &state_machine, 256, 3, 0.5));
-    });
-    t.row(vec!["build_state (L3)".into(), format!("{:.2} µs", s.median_us()), format!("{:.2} µs", s.p90_ns / 1e3), s.iters.to_string()]);
-
-    // L3: replay sampling
-    let s = time(10, samples * 10, || {
-        opaque(replay.sample(32, &mut rng2));
-    });
-    t.row(vec!["replay sample (32)".into(), format!("{:.2} µs", s.median_us()), format!("{:.2} µs", s.p90_ns / 1e3), s.iters.to_string()]);
-
-    // Reference: one simulated application run (the thing tuning wraps).
     let machine = Machine::cheyenne();
+    let s = time(10, samples * 10, || {
+        opaque(build_state(&stats, &tracker, &cv, &machine, 256, 3, 0.5));
+    });
+    t.row(vec![
+        "build_state (L3)".into(),
+        format!("{:.2} µs", s.median_us()),
+        format!("{:.2} µs", s.p90_ns / 1e3),
+        s.iters.to_string(),
+    ]);
+
+    let s = time(10, samples * 10, || {
+        opaque(replay.sample(32, &mut rng));
+    });
+    t.row(vec![
+        "replay sample (32)".into(),
+        format!("{:.2} µs", s.median_us()),
+        format!("{:.2} µs", s.p90_ns / 1e3),
+        s.iters.to_string(),
+    ]);
+
     let images = if quick { 16 } else { 64 };
     let s = time(1, if quick { 3 } else { 10 }, || {
         opaque(
@@ -89,7 +156,7 @@ fn main() -> anyhow::Result<()> {
         s.iters.to_string(),
     ]);
 
-    println!("=== DQN runtime + tuning-overhead microbenchmarks ===");
+    println!("\n=== tuning-overhead context ===");
     t.print();
     println!("\ntuning overhead per iteration = forward + train + state build");
     Ok(())

@@ -15,11 +15,8 @@ use aituning::workloads::WorkloadKind;
 
 fn main() -> anyhow::Result<()> {
     let quick = std::env::args().any(|a| a == "--quick");
-    let agent = if aituning::runtime::default_artifacts_dir().join("manifest.json").exists() {
-        AgentKind::Dqn
-    } else {
-        AgentKind::Tabular
-    };
+    // Native DQN engine: no artifacts required.
+    let agent = AgentKind::Dqn;
     let cfg = TuningConfig { agent, runs: 20, seed: 1, ..TuningConfig::default() };
     let mut ctl = Controller::new(cfg)?;
 

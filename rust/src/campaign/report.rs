@@ -90,6 +90,7 @@ impl CampaignReport {
             h.mix(hub.replay_len as u64);
             h.mix(hub.total_transitions as u64);
             h.mix(hub.policy.ordinal() as u64);
+            h.mix(hub.merge.ordinal() as u64);
             for &n in &hub.occupancy {
                 h.mix(n as u64);
             }
@@ -138,6 +139,7 @@ impl CampaignReport {
                     ("replay_len", num(hub.replay_len as f64)),
                     ("total_transitions", num(hub.total_transitions as f64)),
                     ("replay_policy", s(hub.policy.name())),
+                    ("merge_mode", s(hub.merge.name())),
                     ("occupancy", obj(occupancy)),
                     ("digest", s(&format!("{:016x}", hub.digest))),
                 ]),
@@ -258,6 +260,7 @@ mod tests {
             replay_len: 12,
             total_transitions: 12,
             policy: crate::coordinator::ReplayPolicyKind::Uniform,
+            merge: crate::coordinator::MergeMode::Weights,
             occupancy,
             digest: 0xabc,
         });
@@ -274,6 +277,13 @@ mod tests {
         let mut other_occupancy = shared.clone();
         other_occupancy.hub.as_mut().unwrap().occupancy[WorkloadKind::Icar.ordinal()] = 11;
         assert_ne!(shared.fingerprint(), other_occupancy.fingerprint());
+        let mut other_merge = shared.clone();
+        other_merge.hub.as_mut().unwrap().merge = crate::coordinator::MergeMode::Grads;
+        assert_ne!(shared.fingerprint(), other_merge.fingerprint());
+        assert_eq!(
+            other_merge.to_json().at(&["hub", "merge_mode"]).unwrap().as_str().unwrap(),
+            "grads"
+        );
         // JSON labels the mode and carries the hub block.
         let j = shared.to_json();
         assert_eq!(j.at(&["mode"]).unwrap().as_str().unwrap(), "shared");

@@ -38,7 +38,10 @@ use std::time::Instant;
 
 use anyhow::{Context, Result};
 
-use crate::coordinator::{Controller, HubContribution, HubView, LearnerHub, SharedLearning, TuningConfig};
+use crate::coordinator::{
+    AgentKind, Controller, HubContribution, HubView, LearnerHub, MergeMode, SharedLearning,
+    TuningConfig,
+};
 
 use super::collector::ShardedCollector;
 use super::engine::CampaignEngine;
@@ -65,12 +68,19 @@ impl CampaignEngine {
              state family and one replay dimensionality)"
         );
         let shared = base.shared.unwrap_or_default();
+        anyhow::ensure!(
+            shared.merge != MergeMode::Grads || jobs[0].agent == AgentKind::Dqn,
+            "gradient-level merging (--merge grads) requires the native DQN agent \
+             (--agent dqn) on every job; got {:?}",
+            jobs[0].agent
+        );
         let sync_every = shared.sync_every.max(1);
         let rounds = base.runs.div_ceil(sync_every).max(1);
         let workers = self.workers_for(jobs.len());
         let started = Instant::now();
 
-        let mut hub = LearnerHub::new(base.replay_capacity, base.replay_policy, jobs[0].backend);
+        let mut hub = LearnerHub::new(base.replay_capacity, base.replay_policy, jobs[0].backend)
+            .with_merge(shared.merge, base.lr);
         // One persistent controller per job; workers move them in and
         // out of the slots between rounds (dynamic claiming is safe —
         // within a round, segments touch disjoint slots).

@@ -87,7 +87,8 @@ pub fn run_convergence(
 ) -> Result<ConvergenceReport> {
     let mut rng = Rng::new(cfg.seed);
     let mut agent: Box<dyn Agent> = match cfg.agent {
-        AgentKind::Dqn => {
+        AgentKind::Dqn => Box::new(DqnAgent::native(BackendId::Coarrays, &mut rng)),
+        AgentKind::DqnAot => {
             Box::new(DqnAgent::load(&cfg.artifacts_dir, &mut rng, BackendId::Coarrays)?)
         }
         AgentKind::DqnTarget => Box::new(DqnAgent::load_with_mode(

@@ -1,29 +1,18 @@
 //! The AI component (§5.1): abstract over the Q-value estimator so the
-//! controller can run with the deep network (PJRT) or the tabular
-//! fallback (tests, ablations). Agents are dimension-generic: state
-//! width and action count come from the backend at construction, never
-//! from compile-time constants.
+//! controller can run with the deep network (native or AOT/PJRT engine)
+//! or the tabular fallback (tests, ablations). Agents are
+//! dimension-generic: state width and action count come from the
+//! backend at construction, never from compile-time constants.
 
-use anyhow::Result;
+use anyhow::{Context, Result};
 
 use crate::backend::BackendId;
-use crate::runtime::{Manifest, QNet, RuntimeClient, TrainBatch};
+use crate::runtime::{Manifest, QNet, QParams, RuntimeClient, TrainBatch};
 use crate::util::rng::Rng;
 
 use super::hub::{AgentState, HubView};
 
-/// What one training update reports back: the scalar loss, plus —
-/// when the estimator can produce them — the *realized per-sample TD
-/// errors*, in batch row order. The controller feeds those back into
-/// the replay layer's [`crate::coordinator::ReplayPolicy::feedback`]
-/// seam (adaptive prioritized replay). `None` means "no per-sample
-/// signal available" and the prioritized policy keeps its static
-/// `|reward|` proxy — the deterministic fallback.
-#[derive(Debug, Clone)]
-pub struct TrainOutcome {
-    pub loss: f32,
-    pub td_errors: Option<Vec<f32>>,
-}
+pub use crate::runtime::TrainOutcome;
 
 /// Q-value estimator interface.
 ///
@@ -41,8 +30,8 @@ pub trait Agent: Send {
     /// One training update on a replay minibatch.
     fn train(&mut self, batch: &TrainBatch, lr: f32, gamma: f32) -> Result<TrainOutcome>;
 
-    /// Losses observed so far (diagnostics).
-    fn loss_history(&self) -> &[f32];
+    /// Bounded training-loss diagnostics.
+    fn losses(&self) -> &crate::runtime::LossRing;
 
     /// Export the learnable state for a hub push (shared learning).
     fn snapshot(&self) -> Result<AgentState>;
@@ -51,15 +40,29 @@ pub trait Agent: Send {
     /// learning). A view with no master yet (round 0) is a no-op: the
     /// agent keeps its own freshly-initialized state.
     fn sync(&mut self, view: &HubView) -> Result<()>;
+
+    /// Drain the raw gradients accumulated since the last call — the
+    /// push payload of gradient-merge shared learning
+    /// ([`crate::coordinator::MergeMode::Grads`]). `None` means this
+    /// estimator cannot export gradients (tabular, fused AOT artifact)
+    /// or was not asked to accumulate them.
+    fn take_grads(&mut self) -> Option<QParams> {
+        None
+    }
 }
 
 /// Which agent implementation to construct.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum AgentKind {
-    /// Deep Q-network via the AOT artifacts (the paper's approach:
-    /// experience replay, **no** Q-target network, §5.2).
+    /// Deep Q-network on the **native engine** (the paper's approach:
+    /// experience replay, **no** Q-target network, §5.2). Dimension-
+    /// generic — works on every backend, no artifacts required.
     Dqn,
-    /// DQN with a fixed target network refreshed every
+    /// Deep Q-network via the AOT/PJRT artifacts (the original path;
+    /// requires `make artifacts` for the chosen backend's layout and
+    /// the `pjrt` feature at build time).
+    DqnAot,
+    /// AOT DQN with a fixed target network refreshed every
     /// [`DqnAgent::TARGET_SYNC_EVERY`] updates (ablation; the paper
     /// cites but deliberately does not implement this stabilizer).
     DqnTarget,
@@ -67,19 +70,92 @@ pub enum AgentKind {
     Tabular,
 }
 
-/// The deep Q-learning agent: wraps the PJRT-compiled Q-network.
+/// f64 accumulator for raw gradients across the train steps of one
+/// sync segment (gradient-merge shared learning). Sums in canonical
+/// tensor order with `f64` partials — the same discipline as
+/// [`crate::runtime::average_params`] — and casts to `f32` once at
+/// drain time, so the pushed payload is a pure function of the
+/// worker's own deterministic training trajectory.
+struct GradAccum {
+    tensors: Vec<(Vec<f64>, Vec<usize>)>,
+}
+
+impl GradAccum {
+    fn new(like: &QParams) -> GradAccum {
+        GradAccum {
+            tensors: like
+                .tensors
+                .iter()
+                .map(|(data, shape)| (vec![0.0f64; data.len()], shape.clone()))
+                .collect(),
+        }
+    }
+
+    fn add(&mut self, grads: &QParams) {
+        debug_assert_eq!(grads.tensors.len(), self.tensors.len());
+        for ((acc, _), (g, _)) in self.tensors.iter_mut().zip(&grads.tensors) {
+            for (a, &x) in acc.iter_mut().zip(g) {
+                *a += x as f64;
+            }
+        }
+    }
+
+    /// The accumulated sum as `f32` tensors; resets the accumulator.
+    fn drain(&mut self) -> QParams {
+        QParams {
+            tensors: self
+                .tensors
+                .iter_mut()
+                .map(|(acc, shape)| {
+                    let out: Vec<f32> = acc.iter().map(|&x| x as f32).collect();
+                    acc.iter_mut().for_each(|x| *x = 0.0);
+                    (out, shape.clone())
+                })
+                .collect(),
+        }
+    }
+}
+
+/// The deep Q-learning agent: wraps a [`QNet`] (native or AOT engine).
 pub struct DqnAgent {
     qnet: QNet,
-    /// Fixed-Q-targets ablation mode.
+    /// Fixed-Q-targets ablation mode (AOT engine only).
     use_target: bool,
     updates: usize,
+    /// Present when the agent is accumulating raw gradients for
+    /// gradient-merge shared learning (native engine only).
+    grad_accum: Option<GradAccum>,
 }
 
 impl DqnAgent {
     /// Target refresh cadence in the ablation mode (updates).
     pub const TARGET_SYNC_EVERY: usize = 25;
 
-    /// Load artifacts and initialize (requires `make artifacts`).
+    /// Native-engine DQN sized from the backend's state/action layout.
+    /// No artifacts, no manifest — works for every backend.
+    pub fn native(backend: BackendId, rng: &mut Rng) -> DqnAgent {
+        DqnAgent {
+            qnet: QNet::native(backend.state_dim(), backend.num_actions(), rng),
+            use_target: false,
+            updates: 0,
+            grad_accum: None,
+        }
+    }
+
+    /// Start accumulating raw gradients across train steps (the
+    /// gradient-merge push payload). Native engine only — the fused
+    /// AOT artifact cannot export gradients.
+    pub fn enable_grad_accumulation(&mut self) -> Result<()> {
+        anyhow::ensure!(
+            matches!(self.qnet.engine(), crate::runtime::QBackend::Native(_)),
+            "gradient accumulation requires the native DQN engine (--agent dqn); the fused \
+             AOT q_train artifact returns no raw gradients"
+        );
+        self.grad_accum = Some(GradAccum::new(self.qnet.params()));
+        Ok(())
+    }
+
+    /// Load AOT artifacts and initialize (requires `make artifacts`).
     /// The manifest's dimensions must match `backend`'s state/action
     /// layout — AOT artifacts are compiled per backend.
     pub fn load(
@@ -97,31 +173,59 @@ impl DqnAgent {
         use_target: bool,
         backend: BackendId,
     ) -> Result<DqnAgent> {
-        let client = RuntimeClient::cpu()?;
-        let manifest = Manifest::load(artifacts_dir)?;
+        // Manifest first (pure file I/O): a missing or mismatched
+        // artifact set must fail with the backend-layout message below,
+        // not with a PJRT client error.
+        let manifest = Manifest::load(artifacts_dir).with_context(|| {
+            format!(
+                "no usable AOT artifact set for the {backend} backend ({}x{} layout) in {}; \
+                 run `make artifacts` for this layout, or use the native engine \
+                 (--agent dqn), which needs no artifacts",
+                backend.state_dim(),
+                backend.num_actions(),
+                artifacts_dir.display()
+            )
+        })?;
         anyhow::ensure!(
             manifest.state_dim == backend.state_dim()
                 && manifest.num_actions == backend.num_actions(),
-            "artifact layout ({}x{}) does not match the {} backend ({}x{}); \
-             re-run `make artifacts` for this backend",
+            "artifact layout ({}x{}) does not match the {} backend ({}x{}); re-run \
+             `make artifacts` for this backend, or use the native engine (--agent dqn), \
+             which sizes itself from the backend directly",
             manifest.state_dim,
             manifest.num_actions,
             backend,
             backend.state_dim(),
             backend.num_actions()
         );
-        let qnet = QNet::load(&client, &manifest, rng)?;
+        let client = RuntimeClient::cpu().with_context(|| {
+            format!(
+                "starting the PJRT client for the AOT engine ({backend} backend); \
+                 the native engine (--agent dqn) runs without PJRT"
+            )
+        })?;
+        let qnet = crate::runtime::AotQNet::load(&client, &manifest, rng)?;
         if use_target {
             anyhow::ensure!(
                 qnet.has_target_network(),
                 "q_train_target artifact missing; re-run `make artifacts`"
             );
         }
-        Ok(DqnAgent { qnet, use_target, updates: 0 })
+        Ok(DqnAgent {
+            qnet: QNet::from_aot(qnet),
+            use_target,
+            updates: 0,
+            grad_accum: None,
+        })
     }
 
     pub fn replay_batch(&self) -> usize {
-        self.qnet.replay_batch
+        self.qnet.replay_batch()
+    }
+
+    /// The engine behind this agent ("native" / "aot").
+    pub fn engine_name(&self) -> &'static str {
+        self.qnet.engine_name()
     }
 }
 
@@ -130,7 +234,10 @@ impl Agent for DqnAgent {
         if self.use_target {
             "dqn+target"
         } else {
-            "dqn"
+            match self.qnet.engine() {
+                crate::runtime::QBackend::Native(_) => "dqn",
+                crate::runtime::QBackend::Aot(_) => "dqn-aot",
+            }
         }
     }
 
@@ -139,30 +246,30 @@ impl Agent for DqnAgent {
     }
 
     fn train(&mut self, batch: &TrainBatch, lr: f32, gamma: f32) -> Result<TrainOutcome> {
-        let loss = if self.use_target {
+        if self.use_target {
             if self.updates % Self::TARGET_SYNC_EVERY == 0 {
                 self.qnet.sync_target();
             }
             self.updates += 1;
-            self.qnet.train_step_with_target(batch, lr, gamma)?
-        } else {
-            self.updates += 1;
-            self.qnet.train_step(batch, lr, gamma)?
-        };
-        // The fused q_train artifact returns only the batch loss; no
-        // per-sample TD errors without a second device round-trip, so
-        // prioritized replay keeps its deterministic |reward| proxy.
-        Ok(TrainOutcome { loss, td_errors: None })
+            let loss = self.qnet.train_with_target(batch, lr, gamma)?;
+            return Ok(TrainOutcome { loss, td_errors: None });
+        }
+        self.updates += 1;
+        let (outcome, grads) = self.qnet.train(batch, lr, gamma)?;
+        if let (Some(acc), Some(g)) = (self.grad_accum.as_mut(), grads.as_ref()) {
+            acc.add(g);
+        }
+        Ok(outcome)
     }
 
-    fn loss_history(&self) -> &[f32] {
-        &self.qnet.loss_history
+    fn losses(&self) -> &crate::runtime::LossRing {
+        self.qnet.losses()
     }
 
     fn snapshot(&self) -> Result<AgentState> {
         Ok(AgentState::Dense {
-            params: self.qnet.params.clone(),
-            opt: self.qnet.opt.clone(),
+            params: self.qnet.params().clone(),
+            opt: self.qnet.opt().clone(),
         })
     }
 
@@ -171,15 +278,86 @@ impl Agent for DqnAgent {
             None => Ok(()),
             Some(AgentState::Dense { params, opt }) => {
                 anyhow::ensure!(
-                    params.same_shape(&self.qnet.params),
+                    params.same_shape(self.qnet.params()),
                     "hub parameter shapes do not match this network"
                 );
-                self.qnet.set_state(params.clone(), opt.clone());
-                Ok(())
+                self.qnet.set_state(params.clone(), opt.clone())
             }
             Some(AgentState::Table(_)) => {
                 anyhow::bail!("hub holds tabular state; DQN agent cannot pull it")
             }
+        }
+    }
+
+    fn take_grads(&mut self) -> Option<QParams> {
+        self.grad_accum.as_mut().map(GradAccum::drain)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn native_agent_is_dimension_generic_across_backends() {
+        for backend in BackendId::ALL {
+            let mut rng = Rng::new(4);
+            let mut agent = DqnAgent::native(backend, &mut rng);
+            assert_eq!(agent.name(), "dqn");
+            assert_eq!(agent.engine_name(), "native");
+            let state = vec![0.1; backend.state_dim()];
+            let q = agent.q_values(&state).unwrap();
+            assert_eq!(q.len(), backend.num_actions());
+        }
+    }
+
+    #[test]
+    fn grad_accumulation_sums_across_steps_and_drains() {
+        let backend = BackendId::Coarrays;
+        let mut rng = Rng::new(9);
+        let mut agent = DqnAgent::native(backend, &mut rng);
+        agent.enable_grad_accumulation().unwrap();
+        let dim = backend.state_dim();
+        let n = backend.num_actions();
+        let batch = TrainBatch {
+            states: vec![0.3; dim],
+            actions_onehot: super::super::actions::one_hot(2, n),
+            rewards: vec![1.0],
+            next_states: vec![0.1; dim],
+            done: vec![1.0],
+        };
+        agent.train(&batch, 1e-3, 0.9).unwrap();
+        agent.train(&batch, 1e-3, 0.9).unwrap();
+        let g = agent.take_grads().expect("accumulating agent exports gradients");
+        assert!(g.same_shape(&agent.snapshot_params()));
+        assert!(g.tensors.iter().any(|(d, _)| d.iter().any(|&x| x != 0.0)));
+        // The drain resets the accumulator.
+        let empty = agent.take_grads().unwrap();
+        assert!(empty.tensors.iter().all(|(d, _)| d.iter().all(|&x| x == 0.0)));
+    }
+
+    impl DqnAgent {
+        fn snapshot_params(&self) -> QParams {
+            self.qnet.params().clone()
+        }
+    }
+
+    #[test]
+    fn aot_load_failure_names_the_backend_and_suggests_the_native_engine() {
+        let mut rng = Rng::new(0);
+        let missing = std::path::Path::new("/nonexistent/artifacts");
+        for backend in BackendId::ALL {
+            let err = DqnAgent::load(missing, &mut rng, backend)
+                .err()
+                .map(|e| format!("{e:?}"))
+                .unwrap_or_default();
+            // The manifest is loaded before any PJRT call, so even
+            // offline builds get the layout-naming context.
+            assert!(err.contains("--agent dqn"), "unhelpful AOT failure for {backend}: {err}");
+            assert!(
+                err.contains(&format!("{}x{}", backend.state_dim(), backend.num_actions())),
+                "AOT failure must name the expected layout for {backend}: {err}"
+            );
         }
     }
 }

@@ -14,24 +14,27 @@ use crate::workloads::WorkloadKind;
 use super::actions::Action;
 use super::agent::{Agent, AgentKind, DqnAgent};
 use super::ensemble::ensemble;
-use super::hub::{HubContribution, HubView};
+use super::hub::{HubContribution, HubView, MergeMode};
 use super::relative::RelativeTracker;
 use super::replay::{LocalReplay, ReplayPolicyKind, Transition};
 use super::tabular::TabularAgent;
 
 /// Shared-learning mode (A3C-style): the controller participates in a
 /// [`crate::coordinator::hub::LearnerHub`] campaign, pulling the master
-/// state at segment boundaries and recording every new transition for
-/// the next hub push.
+/// state at segment boundaries and recording every new transition (and,
+/// in gradient-merge mode, every raw gradient) for the next hub push.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct SharedLearning {
     /// Tuning runs between hub syncs (the merge cadence).
     pub sync_every: usize,
+    /// How the hub folds pushes into the master state
+    /// (`--merge weights|grads`; grads requires the native DQN agent).
+    pub merge: MergeMode,
 }
 
 impl Default for SharedLearning {
     fn default() -> SharedLearning {
-        SharedLearning { sync_every: 5 }
+        SharedLearning { sync_every: 5, merge: MergeMode::Weights }
     }
 }
 
@@ -160,14 +163,32 @@ pub struct Controller {
     /// Transitions generated since the last hub push (shared mode
     /// only; stays empty for independent sessions).
     pending: Vec<Transition>,
+    /// Did the last hub pull carry a master state? Once it does, a
+    /// gradient-merge worker stops shipping full state snapshots — the
+    /// hub reads nothing but the gradients after its bootstrap round.
+    seen_master: bool,
 }
 
 impl Controller {
     /// `AITuning_start`: construct the controller for a layer.
     pub fn new(cfg: TuningConfig) -> Result<Controller> {
         let mut rng = Rng::new(cfg.seed);
+        let grads_mode = cfg.shared.is_some_and(|s| s.merge == MergeMode::Grads);
+        anyhow::ensure!(
+            !grads_mode || cfg.agent == AgentKind::Dqn,
+            "gradient-level shared learning (--merge grads) requires the native DQN engine \
+             (--agent dqn); the {:?} agent cannot export raw gradients",
+            cfg.agent
+        );
         let agent: Box<dyn Agent> = match cfg.agent {
             AgentKind::Dqn => {
+                let mut agent = DqnAgent::native(cfg.backend, &mut rng);
+                if grads_mode {
+                    agent.enable_grad_accumulation()?;
+                }
+                Box::new(agent)
+            }
+            AgentKind::DqnAot => {
                 Box::new(DqnAgent::load(&cfg.artifacts_dir, &mut rng, cfg.backend)?)
             }
             AgentKind::DqnTarget => Box::new(DqnAgent::load_with_mode(
@@ -188,6 +209,7 @@ impl Controller {
             lifetime_runs: 0,
             session: None,
             pending: Vec::new(),
+            seen_master: false,
         })
     }
 
@@ -421,19 +443,32 @@ impl Controller {
     pub fn sync_from_hub(&mut self, view: &HubView) -> Result<()> {
         self.agent.sync(view)?;
         if view.master.is_some() {
+            self.seen_master = true;
             self.replay.adopt(std::sync::Arc::clone(&view.replay));
         }
         Ok(())
     }
 
     /// Package this controller's push for the next hub merge: the local
-    /// agent state plus the replay shard accumulated since the last
-    /// push (drained).
+    /// agent state, the replay shard accumulated since the last push
+    /// (drained) and — when the agent accumulates them — the segment's
+    /// raw gradients (drained; gradient-merge campaigns). Once a
+    /// gradient-merge hub has a master, the state snapshot is skipped:
+    /// the hub reads only the gradients past its bootstrap round, so
+    /// cloning the full params + Adam moments every round would be
+    /// pure waste.
     pub fn hub_contribution(&mut self, job_index: usize) -> Result<HubContribution> {
+        let grads = self.agent.take_grads();
+        let state = if grads.is_some() && self.seen_master {
+            None
+        } else {
+            Some(self.agent.snapshot()?)
+        };
         Ok(HubContribution {
             job_index,
-            state: self.agent.snapshot()?,
+            state,
             transitions: std::mem::take(&mut self.pending),
+            grads,
         })
     }
 
@@ -483,8 +518,15 @@ impl Controller {
         self.replay.len()
     }
 
-    pub fn loss_history(&self) -> &[f32] {
-        self.agent.loss_history()
+    /// The controller's replay window (diagnostics: occupancy and
+    /// selection-weight inspection — e.g. the adaptive-PER tests).
+    pub fn replay(&self) -> &LocalReplay {
+        &self.replay
+    }
+
+    /// Bounded training-loss diagnostics (ring + running stats).
+    pub fn losses(&self) -> &crate::runtime::LossRing {
+        self.agent.losses()
     }
 
     pub fn lifetime_runs(&self) -> usize {

@@ -33,15 +33,63 @@
 use std::collections::BTreeMap;
 use std::sync::Arc;
 
-use anyhow::Result;
+use anyhow::{Context, Result};
 
-use crate::runtime::{average_adam, average_params, AdamState, QParams};
+use crate::runtime::{adam_step, average_adam, average_params, AdamState, QParams};
 use crate::util::fnv::Fnv64;
 use crate::workloads::WorkloadKind;
 
 use crate::backend::BackendId;
 
 use super::replay::{ReplayBuffer, ReplayPolicyKind, Transition};
+
+/// How the hub folds one round of contributions into the master state.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum MergeMode {
+    /// Average the pushed agent states (weights + Adam moments /
+    /// Q-tables) in job order — the PR 2 semantics, and the only mode
+    /// every agent kind supports.
+    #[default]
+    Weights,
+    /// A3C-style gradient merging: workers push the raw gradients
+    /// accumulated over their segment (native DQN engine only) and the
+    /// hub applies **one job-order-sequenced Adam step per round** to
+    /// the master parameters with the hub-owned optimizer moments. The
+    /// first round bootstraps the master from the state average (the
+    /// pushed states already embody that segment's local updates), so
+    /// no learning is discarded.
+    Grads,
+}
+
+impl MergeMode {
+    pub const ALL: [MergeMode; 2] = [MergeMode::Weights, MergeMode::Grads];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            MergeMode::Weights => "weights",
+            MergeMode::Grads => "grads",
+        }
+    }
+
+    /// Dense index in [`MergeMode::ALL`] (digest/fingerprint key).
+    pub fn ordinal(self) -> usize {
+        Self::ALL.iter().position(|&m| m == self).expect("listed in ALL")
+    }
+
+    pub fn parse(s: &str) -> Option<MergeMode> {
+        match s.to_ascii_lowercase().as_str() {
+            "weights" | "weight" | "avg" => Some(MergeMode::Weights),
+            "grads" | "grad" | "gradients" => Some(MergeMode::Grads),
+            _ => None,
+        }
+    }
+}
+
+impl std::fmt::Display for MergeMode {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
 
 /// A portable snapshot of one agent's learnable state — the hub's wire
 /// format for both pull (master → worker) and push (worker → hub).
@@ -165,13 +213,23 @@ pub struct HubView {
 }
 
 /// One worker's push: its job index (the merge-order key), its
-/// locally-trained agent state, and the replay shard of transitions
-/// generated since the last sync.
+/// locally-trained agent state, the replay shard of transitions
+/// generated since the last sync, and — in gradient-merge campaigns —
+/// the raw gradients accumulated over the segment.
 #[derive(Debug, Clone)]
 pub struct HubContribution {
     pub job_index: usize,
-    pub state: AgentState,
+    /// Locally-trained agent state. `None` is allowed only in
+    /// gradient-merge rounds after the master was bootstrapped — the
+    /// hub reads nothing but `grads` then, so workers skip the full
+    /// params + Adam-moments clone ([`crate::coordinator::Controller::hub_contribution`]).
+    pub state: Option<AgentState>,
     pub transitions: Vec<Transition>,
+    /// Segment-accumulated raw gradients (`None` unless the agent runs
+    /// the native DQN engine with gradient accumulation enabled).
+    /// Required by [`MergeMode::Grads`]; ignored by
+    /// [`MergeMode::Weights`].
+    pub grads: Option<QParams>,
 }
 
 /// Compact hub-state record attached to shared-campaign reports.
@@ -185,6 +243,8 @@ pub struct HubSummary {
     pub total_transitions: usize,
     /// Replay policy the global buffer ran.
     pub policy: ReplayPolicyKind,
+    /// How contributions were folded into the master state.
+    pub merge: MergeMode,
     /// Resident transitions per workload (ordinal-indexed; see
     /// [`WorkloadKind::ordinal`]) — the §5.2 retention picture: under
     /// eviction pressure a stratified buffer keeps every workload's
@@ -207,10 +267,10 @@ impl HubSummary {
             occupancy.push_str(" (empty)");
         }
         format!(
-            "{} merges, {} transitions pooled ({} resident, {} policy), \
+            "{} merges ({} merge), {} transitions pooled ({} resident, {} policy), \
              state digest {:016x}; occupancy:{}",
-            self.merges, self.total_transitions, self.replay_len, self.policy, self.digest,
-            occupancy
+            self.merges, self.merge, self.total_transitions, self.replay_len, self.policy,
+            self.digest, occupancy
         )
     }
 }
@@ -228,6 +288,11 @@ pub struct LearnerHub {
     replay: Arc<ReplayBuffer>,
     merges: usize,
     total_transitions: usize,
+    /// How each round's contributions update the master state.
+    merge_mode: MergeMode,
+    /// Learning rate of the hub-side Adam step ([`MergeMode::Grads`]
+    /// only; mirrors the campaign base config's `lr`).
+    lr: f32,
 }
 
 impl LearnerHub {
@@ -245,7 +310,22 @@ impl LearnerHub {
             replay: Arc::new(ReplayBuffer::for_backend(replay_capacity, policy, backend)),
             merges: 0,
             total_transitions: 0,
+            merge_mode: MergeMode::Weights,
+            lr: 1e-3,
         }
+    }
+
+    /// Select the merge mode (builder-style). `lr` is the hub-side Adam
+    /// learning rate, used only by [`MergeMode::Grads`]; pass the
+    /// campaign base config's `lr` so the hub step matches the workers'.
+    pub fn with_merge(mut self, merge: MergeMode, lr: f32) -> LearnerHub {
+        self.merge_mode = merge;
+        self.lr = lr;
+        self
+    }
+
+    pub fn merge_mode(&self) -> MergeMode {
+        self.merge_mode
     }
 
     /// Snapshot for workers to pull at segment start. O(1): both the
@@ -264,10 +344,14 @@ impl LearnerHub {
     /// `contributions` must be in strictly increasing `job_index` order
     /// — the deterministic sequencing contract. (The campaign collector
     /// already restores job order regardless of which worker finished
-    /// first; the hub re-checks rather than trusts.) The master state
-    /// becomes the order-sequenced average of all pushed states, and
-    /// each contribution's replay shard is appended to the global
-    /// buffer shard-by-shard, transitions in generation order.
+    /// first; the hub re-checks rather than trusts.) In
+    /// [`MergeMode::Weights`] the master state becomes the
+    /// order-sequenced average of all pushed states; in
+    /// [`MergeMode::Grads`] it takes one Adam step on the
+    /// order-sequenced average of the pushed gradient accumulations
+    /// (after a bootstrap round that averages states). Either way, each
+    /// contribution's replay shard is appended to the global buffer
+    /// shard-by-shard, transitions in generation order.
     pub fn merge(&mut self, contributions: &[HubContribution]) -> Result<()> {
         anyhow::ensure!(!contributions.is_empty(), "merge needs at least one contribution");
         for pair in contributions.windows(2) {
@@ -278,8 +362,62 @@ impl LearnerHub {
                 pair[1].job_index
             );
         }
-        let states: Vec<&AgentState> = contributions.iter().map(|c| &c.state).collect();
-        self.master = Some(Arc::new(AgentState::average(&states)?));
+        let collect_states = |contributions: &[HubContribution]| {
+            contributions
+                .iter()
+                .map(|c| {
+                    c.state.as_ref().with_context(|| {
+                        format!(
+                            "job {} pushed no agent state; state-averaging merges \
+                             require one from every job",
+                            c.job_index
+                        )
+                    })
+                })
+                .collect::<Result<Vec<&AgentState>>>()
+        };
+        match self.merge_mode {
+            MergeMode::Weights => {
+                self.master = Some(Arc::new(AgentState::average(&collect_states(contributions)?)?));
+            }
+            MergeMode::Grads => {
+                // Strict at every round so a misconfigured worker fails
+                // at its first push, not mid-campaign.
+                let grads = contributions
+                    .iter()
+                    .map(|c| {
+                        c.grads.as_ref().with_context(|| {
+                            format!(
+                                "job {} pushed no gradients; MergeMode::Grads requires the \
+                                 native DQN engine (--agent dqn)",
+                                c.job_index
+                            )
+                        })
+                    })
+                    .collect::<Result<Vec<&QParams>>>()?;
+                match self.master.as_mut() {
+                    // Bootstrap round: the pushed states already embody
+                    // this segment's local updates, so averaging them
+                    // (job-order-sequenced) loses nothing; from the next
+                    // round on, only hub Adam steps move the master.
+                    None => {
+                        let avg = AgentState::average(&collect_states(contributions)?)?;
+                        self.master = Some(Arc::new(avg));
+                    }
+                    Some(master) => {
+                        let avg = average_params(&grads)?;
+                        match Arc::make_mut(master) {
+                            AgentState::Dense { params, opt } => {
+                                adam_step(params, opt, &avg, self.lr)?
+                            }
+                            AgentState::Table(_) => anyhow::bail!(
+                                "gradient merge requires a dense (DQN) master state"
+                            ),
+                        }
+                    }
+                }
+            }
+        }
         // Copy-on-write: detach from snapshots still held by workers
         // (one buffer clone per round at most), then append in order.
         let replay = Arc::make_mut(&mut self.replay);
@@ -313,6 +451,7 @@ impl LearnerHub {
         let mut h = Fnv64::new();
         h.mix(self.merges as u64);
         h.mix(self.replay.kind().ordinal() as u64);
+        h.mix(self.merge_mode.ordinal() as u64);
         match &self.master {
             Some(state) => h.mix(state.digest()),
             None => h.mix(0),
@@ -339,6 +478,7 @@ impl LearnerHub {
             replay_len: self.replay.len(),
             total_transitions: self.total_transitions,
             policy: self.replay.kind(),
+            merge: self.merge_mode,
             occupancy: self.replay.occupancy(),
             digest: self.digest(),
         }
@@ -377,8 +517,30 @@ mod tests {
     fn contribution(job_index: usize, state: AgentState, rewards: &[f32]) -> HubContribution {
         HubContribution {
             job_index,
-            state,
+            state: Some(state),
             transitions: rewards.iter().map(|&r| transition(r)).collect(),
+            grads: None,
+        }
+    }
+
+    fn dense(values: Vec<f32>) -> AgentState {
+        let n = values.len();
+        let params = QParams::from_flat(vec![(values, vec![n])]).unwrap();
+        let opt = crate::runtime::AdamState::new(&params);
+        AgentState::Dense { params, opt }
+    }
+
+    fn grad_contribution(
+        job_index: usize,
+        state: Option<AgentState>,
+        grads: Vec<f32>,
+    ) -> HubContribution {
+        let n = grads.len();
+        HubContribution {
+            job_index,
+            state,
+            transitions: Vec::new(),
+            grads: Some(QParams::from_flat(vec![(grads, vec![n])]).unwrap()),
         }
     }
 
@@ -499,6 +661,100 @@ mod tests {
         assert!(!Arc::ptr_eq(&a.replay, &c.replay));
         assert_eq!(a.replay.len(), 2);
         assert_eq!(c.replay.len(), 3);
+    }
+
+    #[test]
+    fn grads_merge_bootstraps_then_applies_one_adam_step_per_round() {
+        let mut hub = LearnerHub::new(8, ReplayPolicyKind::Uniform, BackendId::Coarrays)
+            .with_merge(MergeMode::Grads, 0.5);
+        assert_eq!(hub.merge_mode(), MergeMode::Grads);
+        // Round 0: no master yet — bootstrap from the state average
+        // (the pushed states already embody the segment's local steps).
+        hub.merge(&[
+            grad_contribution(0, Some(dense(vec![1.0, 3.0])), vec![9.0, 9.0]),
+            grad_contribution(1, Some(dense(vec![3.0, 5.0])), vec![9.0, 9.0]),
+        ])
+        .unwrap();
+        match hub.master().unwrap() {
+            AgentState::Dense { params, opt } => {
+                assert_eq!(params.tensors[0].0, vec![2.0, 4.0]);
+                assert_eq!(opt.step, 0.0, "bootstrap does not consume an optimizer step");
+            }
+            AgentState::Table(_) => panic!("expected dense master"),
+        }
+        // Round 1: one hub-side Adam step on the job-order-sequenced
+        // gradient average [2, 0]. At t = 1 the bias corrections cancel,
+        // so the step is ≈ lr·sign(g) on the first entry and exactly
+        // zero on the second.
+        // Past the bootstrap, contributions need not (and, from real
+        // workers, do not) carry state snapshots at all.
+        hub.merge(&[
+            grad_contribution(0, None, vec![1.0, 0.0]),
+            grad_contribution(1, None, vec![3.0, 0.0]),
+        ])
+        .unwrap();
+        match hub.master().unwrap() {
+            AgentState::Dense { params, opt } => {
+                let p = &params.tensors[0].0;
+                assert!((p[0] - 1.5).abs() < 1e-6, "master moved by ≈ lr: {p:?}");
+                assert_eq!(p[1], 4.0, "zero gradient leaves the entry untouched");
+                assert_eq!(opt.step, 1.0);
+            }
+            AgentState::Table(_) => panic!("expected dense master"),
+        }
+        assert_eq!(hub.merges(), 2);
+    }
+
+    #[test]
+    fn grads_merge_rejects_contributions_without_gradients() {
+        let mut hub = LearnerHub::new(8, ReplayPolicyKind::Uniform, BackendId::Coarrays)
+            .with_merge(MergeMode::Grads, 0.1);
+        let err = hub.merge(&[contribution(0, dense(vec![1.0]), &[])]).unwrap_err();
+        let msg = format!("{err:?}");
+        assert!(msg.contains("native DQN engine"), "unhelpful error: {msg}");
+        // A tabular master cannot take gradient steps either.
+        let mut tab_hub = LearnerHub::new(8, ReplayPolicyKind::Uniform, BackendId::Coarrays)
+            .with_merge(MergeMode::Grads, 0.1);
+        tab_hub.merge(&[grad_contribution(0, Some(table(&[(1, 1.0)])), vec![1.0])]).unwrap();
+        assert!(tab_hub
+            .merge(&[grad_contribution(0, Some(table(&[(1, 1.0)])), vec![1.0])])
+            .is_err());
+        // A state-less push is only legal once a master exists; the
+        // bootstrap round must reject it with a named job.
+        let mut fresh = LearnerHub::new(8, ReplayPolicyKind::Uniform, BackendId::Coarrays)
+            .with_merge(MergeMode::Grads, 0.1);
+        let err = fresh.merge(&[grad_contribution(2, None, vec![1.0])]).unwrap_err();
+        assert!(format!("{err:?}").contains("job 2"), "{err:?}");
+    }
+
+    #[test]
+    fn merge_mode_splits_the_hub_digest() {
+        let build = |mode| {
+            let mut hub = LearnerHub::new(8, ReplayPolicyKind::Uniform, BackendId::Coarrays)
+                .with_merge(mode, 1e-3);
+            hub.merge(&[grad_contribution(0, Some(dense(vec![1.0, 2.0])), vec![0.5, 0.5])])
+                .unwrap();
+            hub
+        };
+        let weights = build(MergeMode::Weights);
+        let grads = build(MergeMode::Grads);
+        // After one (bootstrap) round the master states coincide, but
+        // the digest must still distinguish the modes.
+        assert_ne!(weights.digest(), grads.digest());
+        assert_eq!(weights.summary().merge, MergeMode::Weights);
+        assert_eq!(grads.summary().merge, MergeMode::Grads);
+        assert!(grads.summary().describe().contains("grads"));
+    }
+
+    #[test]
+    fn merge_mode_parse_round_trip() {
+        for mode in MergeMode::ALL {
+            assert_eq!(MergeMode::parse(mode.name()), Some(mode));
+            assert_eq!(MergeMode::ALL[mode.ordinal()], mode);
+        }
+        assert_eq!(MergeMode::parse("gradients"), Some(MergeMode::Grads));
+        assert_eq!(MergeMode::parse("nope"), None);
+        assert_eq!(MergeMode::default(), MergeMode::Weights);
     }
 
     #[test]

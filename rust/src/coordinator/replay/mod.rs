@@ -551,6 +551,14 @@ impl LocalReplay {
         sample_seq(self, batch, rng)
     }
 
+    /// Selection weight of logical position `i` under the window's
+    /// policy (diagnostics: lets tests distinguish learned adaptive-PER
+    /// priorities from the static `|reward|` proxy).
+    pub fn selection_weight(&self, i: usize) -> f64 {
+        let (buffer, j) = self.locate(i);
+        buffer.policy().weight(j)
+    }
+
     /// Deliver a realized training priority for logical position `i`.
     /// Only tail positions are re-priced (the base is a frozen shared
     /// snapshot — see the type docs); base positions are ignored.

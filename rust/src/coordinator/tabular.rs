@@ -10,7 +10,7 @@ use std::collections::HashMap;
 
 use anyhow::Result;
 
-use crate::runtime::TrainBatch;
+use crate::runtime::{LossRing, TrainBatch};
 
 use super::agent::{Agent, TrainOutcome};
 use super::hub::{AgentState, HubView};
@@ -24,7 +24,7 @@ pub struct TabularAgent {
     buckets: f32,
     /// Q-learning step size (table update).
     alpha: f32,
-    losses: Vec<f32>,
+    losses: LossRing,
 }
 
 impl TabularAgent {
@@ -36,7 +36,7 @@ impl TabularAgent {
             num_actions,
             buckets: 8.0,
             alpha: 0.25,
-            losses: Vec::new(),
+            losses: LossRing::default(),
         }
     }
 
@@ -109,7 +109,7 @@ impl Agent for TabularAgent {
         Ok(TrainOutcome { loss, td_errors: Some(td_errors) })
     }
 
-    fn loss_history(&self) -> &[f32] {
+    fn losses(&self) -> &LossRing {
         &self.losses
     }
 

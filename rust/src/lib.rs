@@ -15,12 +15,17 @@
 //!   thread-count-invariant results — either as independent learners or
 //!   coupled through the [`coordinator::LearnerHub`] parameter server
 //!   (shared weights + pooled replay, merged in job order).
-//! * **L2/L1 (python/, build-time only)** — the deep Q-network (JAX) and
-//!   its fused-dense Pallas kernel, AOT-lowered to HLO text under
-//!   `artifacts/` and executed from [`runtime`] via the PJRT C API.
+//! * **L2/L1** — the deep Q-network. By default it runs on the **native
+//!   engine** ([`runtime::native`]): a pure-Rust MLP (backprop, Huber
+//!   loss, Adam) sized from any backend's state/action layout, so the
+//!   `aituning` binary is self-contained on a bare checkout. The
+//!   original path survives behind [`runtime::QBackend::Aot`]: the JAX
+//!   Q-network and its fused-dense Pallas kernel (python/, build-time
+//!   only), AOT-lowered to HLO text under `artifacts/` and executed via
+//!   the PJRT C API.
 //!
-//! Python never runs on the tuning path: after `make artifacts`, the
-//! `aituning` binary is self-contained.
+//! Python never runs on the tuning path — and with the native engine it
+//! never runs at all.
 
 pub mod backend;
 pub mod baselines;

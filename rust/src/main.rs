@@ -19,7 +19,7 @@ use aituning::campaign::{
 };
 use aituning::convergence::{run_convergence, ConvergenceConfig, SyntheticModel};
 use aituning::coordinator::{
-    AgentKind, Controller, ReplayPolicyKind, SharedLearning, TuningConfig,
+    AgentKind, Controller, MergeMode, ReplayPolicyKind, SharedLearning, TuningConfig,
 };
 use aituning::mpi_t::{registry_for_backend, CvarId, CvarSet, VariableRegistry};
 use aituning::simmpi::Machine;
@@ -31,13 +31,17 @@ fn usage() -> ! {
     eprintln!(
         "aituning — ML-based tuning for run-time communication libraries
 USAGE:
-  aituning tune        --workload icar --images 256 [--runs 20] [--agent dqn|tabular]
+  aituning tune        --workload icar --images 256 [--runs 20]
+                       [--agent dqn|dqn-aot|dqn-target|tabular]  (dqn = the native
+                       engine, works on every backend; dqn-aot = compiled PJRT
+                       artifacts, coarrays layout only)
                        [--machine cheyenne|edison] [--seed N] [--noise F]
                        [--backend coarrays|collectives]
                        [--replay uniform|stratified|prioritized]
   aituning run         --workload icar --images 64 [--cvar NAME=VALUE,NAME=VALUE]
                        [--backend coarrays|collectives]
-  aituning campaign    [--images 64,128,256] [--runs-per 20] [--agent dqn|tabular]
+  aituning campaign    [--images 64,128,256] [--runs-per 20]
+                       [--agent dqn|dqn-aot|dqn-target|tabular]
                        [--machine cheyenne|edison|both] [--workers N]  (0 = one per core)
                        [--backend coarrays|collectives]  (which tunable runtime; the
                        workload list defaults to the backend's training set)
@@ -46,6 +50,9 @@ USAGE:
                        the shared hub buffer)
                        [--shared] [--sync-every 5]  (--shared couples the jobs through
                        the LearnerHub and reports the independent-vs-shared ablation)
+                       [--merge weights|grads]  (how the hub folds pushes: averaged
+                       weights, or A3C-style accumulated gradients + one hub Adam
+                       step per round — grads needs the native DQN agent)
   aituning convergence [--model parabola|coupled|bool] [--noise 0.3] [--runs 400]
   aituning sweep       --cvar MPIR_CVAR_POLLS_BEFORE_YIELD --values 200,1000,1500
                        --workload icar --images 512 [--base async] [--workers N]
@@ -112,11 +119,19 @@ fn parse_replay(args: &Args) -> Result<ReplayPolicyKind> {
 
 fn parse_agent(args: &Args) -> Result<AgentKind> {
     match args.get_or("agent", "dqn") {
-        "dqn" => Ok(AgentKind::Dqn),
+        "dqn" | "native" | "dqn-native" => Ok(AgentKind::Dqn),
+        "dqn-aot" | "aot" => Ok(AgentKind::DqnAot),
         "dqn-target" => Ok(AgentKind::DqnTarget),
         "tabular" => Ok(AgentKind::Tabular),
-        other => bail!("unknown agent {other:?} (dqn|dqn-target|tabular)"),
+        other => bail!("unknown agent {other:?} (dqn|dqn-aot|dqn-target|tabular)"),
     }
+}
+
+/// `--merge weights|grads` — how a shared campaign's hub folds worker
+/// pushes into the master state.
+fn parse_merge(args: &Args) -> Result<MergeMode> {
+    let name = args.get_or("merge", "weights");
+    MergeMode::parse(name).with_context(|| format!("unknown merge mode {name:?} (weights|grads)"))
 }
 
 fn tuning_config(args: &Args) -> Result<TuningConfig> {
@@ -244,8 +259,14 @@ fn cmd_campaign(args: &Args) -> Result<()> {
         replay_policy: parse_replay(args)?,
         ..TuningConfig::default()
     };
+    // Parse --merge unconditionally so a typo'd mode (or a --merge
+    // without --shared, which would otherwise be silently ignored)
+    // fails loudly instead of running an unintended campaign.
+    let merge = parse_merge(args)?;
     if shared_mode {
-        base.shared = Some(SharedLearning { sync_every: args.usize_or("sync-every", 5)? });
+        base.shared = Some(SharedLearning { sync_every: args.usize_or("sync-every", 5)?, merge });
+    } else if args.get("merge").is_some() {
+        bail!("--merge only applies to shared campaigns; add --shared");
     }
     let workloads = backend.runtime().training_workloads();
     let jobs = job_grid(backend, &machines, workloads, &images, base.agent, base.seed);

@@ -1,0 +1,286 @@
+//! The AOT/PJRT Q-network engine: compiled PJRT executables plus
+//! Rust-owned parameters and optimizer state — the original deep-Q path,
+//! preserved behind the [`crate::runtime::QBackend::Aot`] variant.
+//!
+//! Three entry points (see `python/compile/aot.py`):
+//! * `q_forward_1` — Q(s, ·) for one state (ε-greedy action selection);
+//! * `q_forward_b` — Q(s, ·) for a replay batch (diagnostics);
+//! * `q_train`     — one replay-minibatch Q-learning update (Bellman
+//!   targets from the same network — the paper does not use Q-targets —
+//!   Huber loss, Adam), returning updated params + moments + loss.
+//!
+//! Artifacts are compiled for one fixed `(state_dim, num_actions)`
+//! layout; [`crate::coordinator::DqnAgent::load`] validates the
+//! manifest against the chosen backend. For a dimension-generic engine
+//! that needs no artifacts at all, see [`crate::runtime::NativeQNet`].
+
+use anyhow::{Context, Result};
+
+use super::artifact::Manifest;
+use super::client::{literal_f32_1d, literal_f32_2d, literal_f32_scalar, Executable, RuntimeClient};
+use super::params::{AdamState, QParams};
+use super::qnet::{argmax, LossRing, TrainBatch};
+use super::xla;
+use crate::util::rng::Rng;
+
+/// Compiled Q-network + owned training state.
+pub struct AotQNet {
+    forward_1: Executable,
+    forward_b: Executable,
+    train: Executable,
+    /// Fixed-Q-targets ablation entry point (the paper does not use
+    /// Q-targets, §5.2; this exists for the ablation bench).
+    train_target: Option<Executable>,
+    /// Frozen target-network parameters (ablation only).
+    target_params: Option<QParams>,
+    pub params: QParams,
+    pub opt: AdamState,
+    pub state_dim: usize,
+    pub num_actions: usize,
+    pub replay_batch: usize,
+    /// Bounded per-step loss diagnostics (ring + running stats).
+    pub loss_history: LossRing,
+    /// Device-literal cache of (params, m, v): rebuilt only when the
+    /// training step replaces them (§Perf: avoids re-marshalling ~25k
+    /// floats on every action selection / train call).
+    cached: Option<CachedLiterals>,
+}
+
+struct CachedLiterals {
+    params: Vec<xla::Literal>,
+    m: Vec<xla::Literal>,
+    v: Vec<xla::Literal>,
+}
+
+impl AotQNet {
+    /// Compile all three artifacts and initialize parameters.
+    pub fn load(client: &RuntimeClient, manifest: &Manifest, rng: &mut Rng) -> Result<AotQNet> {
+        let forward_1 = client.load_hlo_text(manifest.hlo_path("q_forward_1")?)?;
+        let forward_b = client.load_hlo_text(manifest.hlo_path("q_forward_b")?)?;
+        let train = client.load_hlo_text(manifest.hlo_path("q_train")?)?;
+        let train_target = match manifest.hlo_path("q_train_target") {
+            Ok(path) if path.exists() => Some(client.load_hlo_text(path)?),
+            _ => None,
+        };
+        let params =
+            QParams::init(manifest.state_dim, &manifest.hidden, manifest.num_actions, rng);
+        let opt = AdamState::new(&params);
+        Ok(AotQNet {
+            forward_1,
+            forward_b,
+            train,
+            train_target,
+            target_params: None,
+            params,
+            opt,
+            state_dim: manifest.state_dim,
+            num_actions: manifest.num_actions,
+            replay_batch: manifest.replay_batch,
+            loss_history: LossRing::default(),
+            cached: None,
+        })
+    }
+
+    /// Replace parameters (e.g. restored from a checkpoint / golden test).
+    pub fn set_params(&mut self, params: QParams) {
+        self.opt = AdamState::new(&params);
+        self.params = params;
+        self.cached = None;
+        self.target_params = None;
+    }
+
+    /// Replace parameters *and* optimizer state together — the hub-pull
+    /// entry point for shared learning, where the merged Adam moments
+    /// must survive the swap (unlike [`AotQNet::set_params`], which resets
+    /// them). Validates shapes (same contract as
+    /// [`crate::runtime::NativeQNet::set_state`]) so a mismatched pull
+    /// fails here, not as an opaque PJRT arity error mid-train.
+    /// Invalidates the device-literal cache; the frozen target network
+    /// (ablation mode) is left untouched on purpose, since its refresh
+    /// cadence is owned by the agent.
+    pub fn set_state(&mut self, params: QParams, opt: AdamState) -> Result<()> {
+        anyhow::ensure!(
+            params.same_shape(&self.params),
+            "replacement parameters do not match this network's shapes"
+        );
+        anyhow::ensure!(
+            opt.m.same_shape(&params) && opt.v.same_shape(&params),
+            "replacement optimizer moments do not match the parameters"
+        );
+        self.params = params;
+        self.opt = opt;
+        self.cached = None;
+        Ok(())
+    }
+
+    /// Is the fixed-Q-targets artifact available?
+    pub fn has_target_network(&self) -> bool {
+        self.train_target.is_some()
+    }
+
+    /// Copy the online network into the frozen target (ablation).
+    pub fn sync_target(&mut self) {
+        self.target_params = Some(self.params.clone());
+    }
+
+    /// Ensure the device-literal cache is populated.
+    fn ensure_cache(&mut self) -> Result<&CachedLiterals> {
+        if self.cached.is_none() {
+            self.cached = Some(CachedLiterals {
+                params: self.params.to_literals()?,
+                m: self.opt.m.to_literals()?,
+                v: self.opt.v.to_literals()?,
+            });
+        }
+        Ok(self.cached.as_ref().unwrap())
+    }
+
+    /// Q(s, ·) for a single state.
+    pub fn q_values(&mut self, state: &[f32]) -> Result<Vec<f32>> {
+        anyhow::ensure!(
+            state.len() == self.state_dim,
+            "state has {} features, expected {}",
+            state.len(),
+            self.state_dim
+        );
+        let state_lit = literal_f32_2d(state, 1, self.state_dim)?;
+        self.ensure_cache()?;
+        let cache = self.cached.as_ref().unwrap();
+        let mut inputs: Vec<&xla::Literal> = cache.params.iter().collect();
+        inputs.push(&state_lit);
+        let out = self.forward_1.run_refs(&inputs)?;
+        let q = out[0].to_vec::<f32>().context("q_forward_1 output")?;
+        anyhow::ensure!(q.len() == self.num_actions, "bad q length {}", q.len());
+        Ok(q)
+    }
+
+    /// Greedy action for a state (argmax over Q).
+    pub fn greedy_action(&mut self, state: &[f32]) -> Result<usize> {
+        let q = self.q_values(state)?;
+        Ok(argmax(&q))
+    }
+
+    /// Q(s, ·) for a full replay batch (`[B, state_dim]` flat).
+    pub fn q_values_batch(&mut self, states: &[f32]) -> Result<Vec<f32>> {
+        anyhow::ensure!(
+            states.len() == self.replay_batch * self.state_dim,
+            "batch states size {} != {}",
+            states.len(),
+            self.replay_batch * self.state_dim
+        );
+        let states_lit = literal_f32_2d(states, self.replay_batch, self.state_dim)?;
+        self.ensure_cache()?;
+        let cache = self.cached.as_ref().unwrap();
+        let mut inputs: Vec<&xla::Literal> = cache.params.iter().collect();
+        inputs.push(&states_lit);
+        let out = self.forward_b.run_refs(&inputs)?;
+        Ok(out[0].to_vec::<f32>()?)
+    }
+
+    /// One Q-learning update on a replay minibatch. Returns the loss.
+    pub fn train_step(&mut self, batch: &TrainBatch, lr: f32, gamma: f32) -> Result<f32> {
+        batch.validate(self.replay_batch, self.state_dim, self.num_actions)?;
+        let b = self.replay_batch;
+
+        let step_lit = literal_f32_scalar(self.opt.step);
+        let batch_lits = [
+            literal_f32_2d(&batch.states, b, self.state_dim)?,
+            literal_f32_2d(&batch.actions_onehot, b, self.num_actions)?,
+            literal_f32_1d(&batch.rewards),
+            literal_f32_2d(&batch.next_states, b, self.state_dim)?,
+            literal_f32_1d(&batch.done),
+            literal_f32_scalar(lr),
+            literal_f32_scalar(gamma),
+        ];
+        self.ensure_cache()?;
+        let cache = self.cached.as_ref().unwrap();
+        let mut inputs: Vec<&xla::Literal> = Vec::with_capacity(26);
+        inputs.extend(cache.params.iter());
+        inputs.extend(cache.m.iter());
+        inputs.extend(cache.v.iter());
+        inputs.push(&step_lit);
+        inputs.extend(batch_lits.iter());
+
+        let mut out = self.train.run_refs(&inputs)?;
+        let n = self.params.tensors.len();
+        anyhow::ensure!(
+            out.len() == 3 * n + 2,
+            "train output arity {} != {}",
+            out.len(),
+            3 * n + 2
+        );
+
+        self.params.update_from_literals(&out[..n])?;
+        self.opt.m.update_from_literals(&out[n..2 * n])?;
+        self.opt.v.update_from_literals(&out[2 * n..3 * n])?;
+        self.opt.step = out[3 * n].to_vec::<f32>()?[0];
+        let loss = out[3 * n + 1].to_vec::<f32>()?[0];
+        anyhow::ensure!(loss.is_finite(), "train step produced non-finite loss {loss}");
+        self.loss_history.push(loss);
+        // Recycle the output literals as the new device cache: the next
+        // call uploads nothing but the batch.
+        let v: Vec<xla::Literal> = out.drain(2 * n..3 * n).collect();
+        let m: Vec<xla::Literal> = out.drain(n..2 * n).collect();
+        let params: Vec<xla::Literal> = out.drain(..n).collect();
+        self.cached = Some(CachedLiterals { params, m, v });
+        Ok(loss)
+    }
+
+    /// One Q-learning update with Bellman targets from the *frozen*
+    /// target network (fixed-Q-targets ablation; not in the paper).
+    /// Call [`AotQNet::sync_target`] periodically to refresh the target.
+    pub fn train_step_with_target(
+        &mut self,
+        batch: &TrainBatch,
+        lr: f32,
+        gamma: f32,
+    ) -> Result<f32> {
+        anyhow::ensure!(
+            self.train_target.is_some(),
+            "q_train_target artifact not built (re-run `make artifacts`)"
+        );
+        batch.validate(self.replay_batch, self.state_dim, self.num_actions)?;
+        if self.target_params.is_none() {
+            self.target_params = Some(self.params.clone());
+        }
+        let b = self.replay_batch;
+
+        let target_lits = self.target_params.as_ref().unwrap().to_literals()?;
+        let step_lit = literal_f32_scalar(self.opt.step);
+        let batch_lits = [
+            literal_f32_2d(&batch.states, b, self.state_dim)?,
+            literal_f32_2d(&batch.actions_onehot, b, self.num_actions)?,
+            literal_f32_1d(&batch.rewards),
+            literal_f32_2d(&batch.next_states, b, self.state_dim)?,
+            literal_f32_1d(&batch.done),
+            literal_f32_scalar(lr),
+            literal_f32_scalar(gamma),
+        ];
+        self.ensure_cache()?;
+        let cache = self.cached.as_ref().unwrap();
+        let exe = self.train_target.as_ref().unwrap();
+        let mut inputs: Vec<&xla::Literal> = Vec::with_capacity(32);
+        inputs.extend(cache.params.iter());
+        inputs.extend(target_lits.iter());
+        inputs.extend(cache.m.iter());
+        inputs.extend(cache.v.iter());
+        inputs.push(&step_lit);
+        inputs.extend(batch_lits.iter());
+
+        let mut out = exe.run_refs(&inputs)?;
+        let n = self.params.tensors.len();
+        anyhow::ensure!(out.len() == 3 * n + 2, "target train output arity {}", out.len());
+        self.params.update_from_literals(&out[..n])?;
+        self.opt.m.update_from_literals(&out[n..2 * n])?;
+        self.opt.v.update_from_literals(&out[2 * n..3 * n])?;
+        self.opt.step = out[3 * n].to_vec::<f32>()?[0];
+        let loss = out[3 * n + 1].to_vec::<f32>()?[0];
+        anyhow::ensure!(loss.is_finite(), "non-finite loss {loss}");
+        self.loss_history.push(loss);
+        let v: Vec<xla::Literal> = out.drain(2 * n..3 * n).collect();
+        let m: Vec<xla::Literal> = out.drain(n..2 * n).collect();
+        let params: Vec<xla::Literal> = out.drain(..n).collect();
+        self.cached = Some(CachedLiterals { params, m, v });
+        Ok(loss)
+    }
+}

@@ -1,20 +1,34 @@
-//! PJRT runtime: load AOT-compiled HLO text artifacts and execute them.
+//! The Q-network runtime layer: the [`QBackend`] seam plus its two
+//! engines.
 //!
-//! This is the only bridge between the Rust coordinator and the L2/L1
-//! compute: `make artifacts` lowers the JAX Q-network (with its Pallas
-//! fused-dense kernel) to `artifacts/*.hlo.txt`; this module compiles
-//! those modules once on the PJRT CPU client and executes them on the
-//! tuning path. Python never runs at tuning time.
+//! * [`native`] — the default: a pure-Rust, dependency-free MLP engine
+//!   (forward, backprop, Huber loss, Adam) constructed straight from a
+//!   backend's `(state_dim, num_actions)`. Dimension-generic, so
+//!   `--agent dqn` works on every [`crate::backend::TunableRuntime`],
+//!   and it exposes per-sample TD errors and raw gradients (adaptive
+//!   PER; gradient-level hub merging).
+//! * [`aot`] — the original AOT/PJRT path: `make artifacts` lowers the
+//!   JAX Q-network (with its Pallas fused-dense kernel) to
+//!   `artifacts/*.hlo.txt`; [`AotQNet`] compiles those modules once on
+//!   the PJRT CPU client and executes them at tuning time (requires the
+//!   `pjrt` cargo feature + the external `xla` bindings; offline builds
+//!   get a fail-fast stub). Python never runs at tuning time.
+//!
+//! [`QNet`] is the coordinator-facing dispatcher over the seam.
 
+mod aot;
 mod artifact;
 mod client;
-mod params;
+pub mod native;
+pub(crate) mod params;
 mod qnet;
 pub(crate) mod xla;
 
+pub use aot::AotQNet;
 pub use artifact::{default_artifacts_dir, ArtifactSpec, Manifest, TensorSpec};
 pub use client::{Executable, RuntimeClient};
+pub use native::{adam_step, NativeQNet};
 pub use params::{
     average_adam, average_params, layer_dims as params_layer_dims, AdamState, QParams,
 };
-pub use qnet::{argmax, QNet, TrainBatch};
+pub use qnet::{argmax, LossRing, QBackend, QNet, TrainBatch, TrainOutcome};

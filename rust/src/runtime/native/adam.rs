@@ -1,0 +1,111 @@
+//! Adam optimizer step over host-side parameter buffers.
+//!
+//! The native analogue of the optimizer half of the fused `q_train`
+//! artifact (`python/compile/model.py::train_step`), and the primitive
+//! the [`crate::coordinator::LearnerHub`] uses in gradient-merge mode
+//! (`MergeMode::Grads` applies one step per merge round to the master
+//! state). Elementwise arithmetic runs in `f64` and stores back `f32`,
+//! sequenced tensor-by-tensor in canonical order — the update is a pure
+//! function of `(params, opt, grads, lr)`, with no accumulation-order
+//! freedom at all.
+
+use anyhow::Result;
+
+use crate::runtime::{AdamState, QParams};
+
+/// First-moment decay (matches `model.ADAM_B1`).
+pub const ADAM_BETA1: f64 = 0.9;
+/// Second-moment decay (matches `model.ADAM_B2`).
+pub const ADAM_BETA2: f64 = 0.999;
+/// Denominator stabilizer (matches `model.ADAM_EPS`).
+pub const ADAM_EPS: f64 = 1e-8;
+
+/// One in-place Adam update of `params`/`opt` with the given raw
+/// gradients: `m ← β₁m + (1−β₁)g`, `v ← β₂v + (1−β₂)g²`,
+/// `p ← p − lr · m̂ / (√v̂ + ε)` with bias-corrected `m̂`, `v̂`, and
+/// `opt.step` advanced by one.
+pub fn adam_step(
+    params: &mut QParams,
+    opt: &mut AdamState,
+    grads: &QParams,
+    lr: f32,
+) -> Result<()> {
+    anyhow::ensure!(grads.same_shape(params), "gradient shapes do not match the parameters");
+    anyhow::ensure!(
+        opt.m.same_shape(params) && opt.v.same_shape(params),
+        "optimizer moment shapes do not match the parameters"
+    );
+    let t = opt.step as f64 + 1.0;
+    let bc1 = 1.0 - ADAM_BETA1.powf(t);
+    let bc2 = 1.0 - ADAM_BETA2.powf(t);
+    for ti in 0..params.tensors.len() {
+        let g = &grads.tensors[ti].0;
+        let p = &mut params.tensors[ti].0;
+        let m = &mut opt.m.tensors[ti].0;
+        let v = &mut opt.v.tensors[ti].0;
+        for k in 0..p.len() {
+            let gk = g[k] as f64;
+            let mk = ADAM_BETA1 * m[k] as f64 + (1.0 - ADAM_BETA1) * gk;
+            let vk = ADAM_BETA2 * v[k] as f64 + (1.0 - ADAM_BETA2) * gk * gk;
+            let update = lr as f64 * (mk / bc1) / ((vk / bc2).sqrt() + ADAM_EPS);
+            m[k] = mk as f32;
+            v[k] = vk as f32;
+            p[k] = (p[k] as f64 - update) as f32;
+        }
+    }
+    opt.step = t as f32;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn flat(values: Vec<f32>) -> QParams {
+        let n = values.len();
+        QParams::from_flat(vec![(values, vec![n])]).unwrap()
+    }
+
+    #[test]
+    fn first_step_moves_by_lr_in_the_gradient_sign() {
+        // At t = 1 the bias corrections cancel the decay factors
+        // exactly: m̂ = g, v̂ = g², so the update is lr·g/(|g| + ε) ≈
+        // lr·sign(g) for any nonzero gradient.
+        let mut p = flat(vec![1.0, -2.0, 3.0]);
+        let mut opt = AdamState::new(&p);
+        let g = flat(vec![4.0, -0.25, 0.0]);
+        adam_step(&mut p, &mut opt, &g, 0.5).unwrap();
+        let got = &p.tensors[0].0;
+        assert!((got[0] - 0.5).abs() < 1e-6, "{got:?}");
+        assert!((got[1] - -1.5).abs() < 1e-6, "{got:?}");
+        assert_eq!(got[2], 3.0, "zero gradient leaves the weight untouched");
+        assert_eq!(opt.step, 1.0);
+        assert!((opt.m.tensors[0].0[0] - 0.4).abs() < 1e-6, "m = (1−β₁)g");
+        assert!((opt.v.tensors[0].0[0] - 0.016).abs() < 1e-6, "v = (1−β₂)g²");
+    }
+
+    #[test]
+    fn shape_mismatches_are_rejected() {
+        let mut p = flat(vec![0.0, 0.0]);
+        let mut opt = AdamState::new(&p);
+        let bad = flat(vec![0.0; 3]);
+        assert!(adam_step(&mut p, &mut opt, &bad, 0.1).is_err());
+        // Moment-shape mismatch is caught too, not just gradient shape.
+        let g = flat(vec![1.0, 1.0]);
+        opt.m = bad.zeros_like();
+        assert!(adam_step(&mut p, &mut opt, &g, 0.1).is_err());
+    }
+
+    #[test]
+    fn repeated_steps_advance_the_counter_and_stay_finite() {
+        let mut p = flat(vec![1.0]);
+        let mut opt = AdamState::new(&p);
+        let g = flat(vec![1.0]);
+        for i in 1..=50 {
+            adam_step(&mut p, &mut opt, &g, 0.1).unwrap();
+            assert_eq!(opt.step, i as f32);
+        }
+        assert!(p.tensors[0].0[0].is_finite());
+        assert!(p.tensors[0].0[0] < 1.0, "constant positive gradient must descend");
+    }
+}

@@ -1,0 +1,365 @@
+//! The native Q-network engine: a pure-Rust, dependency-free MLP with
+//! backprop, Huber loss and Adam — the default [`crate::runtime::QNet`]
+//! backend.
+//!
+//! Why it exists: the AOT/PJRT path executes artifacts compiled for one
+//! fixed `(state_dim, num_actions)` layout, so deep-RL tuning used to
+//! work only on backends that had a compiled artifact set (historically
+//! just the coarrays 18×13). The native engine is **dimension-generic**
+//! — construct it straight from any
+//! [`crate::backend::TunableRuntime`]'s `state_dim`/`num_actions`, no
+//! manifest, no Python, no PJRT — which puts the paper's actual
+//! algorithm (deep Q-network, experience replay, no Q-target, §5.2) on
+//! every backend.
+//!
+//! Determinism rules (the campaign fingerprint contract):
+//!
+//! * He-uniform init draws from the caller's [`Rng`] in canonical
+//!   `(w1, b1, w2, b2, …)` order — same seed, same weights, bitwise.
+//! * All math is `f32` storage with **order-sequenced `f64`
+//!   accumulation** ([`mlp`]), the same discipline as
+//!   [`crate::runtime::average_params`]; no parallelism, no
+//!   hash-ordered iteration anywhere.
+//! * [`NativeQNet::train_grads`] is a pure function of
+//!   `(params, batch, gamma)`; [`adam_step`] is a pure function of
+//!   `(params, opt, grads, lr)`. Training is their composition, so two
+//!   identically-seeded sessions replay each other exactly.
+//!
+//! Beyond parity with the fused `q_train` artifact, the native engine
+//! exposes what the fused artifact cannot: realized **per-sample TD
+//! errors** (adaptive prioritized replay feedback) and **raw
+//! gradients** without applying them ([`NativeQNet::train_grads`]),
+//! which is what the hub's gradient-level `MergeMode::Grads` merge
+//! consumes.
+
+mod adam;
+mod mlp;
+
+pub use adam::{adam_step, ADAM_BETA1, ADAM_BETA2, ADAM_EPS};
+
+use anyhow::Result;
+
+use crate::runtime::params::layer_dims;
+use crate::runtime::{AdamState, LossRing, QParams, TrainBatch, TrainOutcome};
+use crate::util::rng::Rng;
+
+/// Hidden-layer widths used when a caller does not specify them —
+/// matching the AOT model (`python/compile/model.py::HIDDEN`), so the
+/// native and artifact engines train the same architecture.
+pub const DEFAULT_HIDDEN: [usize; 2] = [64, 64];
+
+/// Default replay minibatch size (matches `model.REPLAY_BATCH`).
+pub const DEFAULT_REPLAY_BATCH: usize = 32;
+
+/// The native deep Q-network: parameters, Adam state and the layer
+/// plan, everything host-side.
+#[derive(Debug, Clone)]
+pub struct NativeQNet {
+    pub params: QParams,
+    pub opt: AdamState,
+    state_dim: usize,
+    num_actions: usize,
+    hidden: Vec<usize>,
+    pub replay_batch: usize,
+    /// Bounded training-loss diagnostics (ring + running stats).
+    pub losses: LossRing,
+}
+
+impl NativeQNet {
+    /// Fresh network with He-uniform weights drawn from `rng`.
+    pub fn new(
+        state_dim: usize,
+        hidden: &[usize],
+        num_actions: usize,
+        replay_batch: usize,
+        rng: &mut Rng,
+    ) -> NativeQNet {
+        assert!(state_dim > 0 && num_actions > 0 && replay_batch > 0);
+        let params = QParams::init(state_dim, hidden, num_actions, rng);
+        let opt = AdamState::new(&params);
+        NativeQNet {
+            params,
+            opt,
+            state_dim,
+            num_actions,
+            hidden: hidden.to_vec(),
+            replay_batch,
+            losses: LossRing::default(),
+        }
+    }
+
+    /// Standard-architecture network for a backend's dimensions.
+    pub fn with_default_shape(state_dim: usize, num_actions: usize, rng: &mut Rng) -> NativeQNet {
+        NativeQNet::new(state_dim, &DEFAULT_HIDDEN, num_actions, DEFAULT_REPLAY_BATCH, rng)
+    }
+
+    pub fn state_dim(&self) -> usize {
+        self.state_dim
+    }
+
+    pub fn num_actions(&self) -> usize {
+        self.num_actions
+    }
+
+    pub fn hidden(&self) -> &[usize] {
+        &self.hidden
+    }
+
+    /// Replace parameters *and* optimizer state together (the hub-pull
+    /// entry point; merged Adam moments survive the swap).
+    pub fn set_state(&mut self, params: QParams, opt: AdamState) -> Result<()> {
+        anyhow::ensure!(
+            params.same_shape(&self.params),
+            "replacement parameters do not match this network's shapes"
+        );
+        anyhow::ensure!(
+            opt.m.same_shape(&params) && opt.v.same_shape(&params),
+            "replacement optimizer moments do not match the parameters"
+        );
+        self.params = params;
+        self.opt = opt;
+        Ok(())
+    }
+
+    /// `(d_in, d_out)` per layer, in parameter order.
+    fn dims(&self) -> Vec<(usize, usize)> {
+        layer_dims(self.state_dim, &self.hidden, self.num_actions)
+    }
+
+    /// Forward pass keeping every layer's activations (`acts[0]` is the
+    /// input; `acts[l + 1]` is layer `l`'s output, post-ReLU for hidden
+    /// layers).
+    fn forward_acts(&self, states: &[f32], batch: usize) -> Vec<Vec<f32>> {
+        let dims = self.dims();
+        let mut acts: Vec<Vec<f32>> = Vec::with_capacity(dims.len() + 1);
+        acts.push(states.to_vec());
+        for (l, &(d_in, d_out)) in dims.iter().enumerate() {
+            let relu = l + 1 < dims.len();
+            let w = &self.params.tensors[2 * l].0;
+            let b = &self.params.tensors[2 * l + 1].0;
+            let y = mlp::dense_forward(acts[l].as_slice(), batch, d_in, w, b, d_out, relu);
+            acts.push(y);
+        }
+        acts
+    }
+
+    /// Q(s, ·) for a `[batch, state_dim]` flat slice of states.
+    pub fn q_values_batch(&self, states: &[f32], batch: usize) -> Result<Vec<f32>> {
+        anyhow::ensure!(
+            states.len() == batch * self.state_dim && batch > 0,
+            "batch states size {} != {} x {}",
+            states.len(),
+            batch,
+            self.state_dim
+        );
+        Ok(self.forward_acts(states, batch).pop().expect("at least one layer"))
+    }
+
+    /// Q(s, ·) for a single state.
+    pub fn q_values(&self, state: &[f32]) -> Result<Vec<f32>> {
+        anyhow::ensure!(
+            state.len() == self.state_dim,
+            "state has {} features, expected {}",
+            state.len(),
+            self.state_dim
+        );
+        self.q_values_batch(state, 1)
+    }
+
+    /// The Q-learning loss of `batch` under the current parameters
+    /// (no gradients, no state change) — diagnostics and the
+    /// finite-difference gradient checks.
+    pub fn loss(&self, batch: &TrainBatch, gamma: f32) -> Result<f32> {
+        let (_, loss, _) = self.per_sample_grads(batch, gamma, false)?;
+        Ok(loss)
+    }
+
+    /// Raw gradients of the Q-learning loss on `batch` — Bellman
+    /// targets from the same network (no Q-target, §5.2), Huber loss —
+    /// **without applying them**. Returns `(grads, loss, td_errors)`;
+    /// `td_errors[i] = pred_i − target_i` in batch row order. Pure:
+    /// touches no network state.
+    pub fn train_grads(&self, batch: &TrainBatch, gamma: f32) -> Result<(QParams, f32, Vec<f32>)> {
+        let (grads, loss, td) = self.per_sample_grads(batch, gamma, true)?;
+        Ok((grads.expect("gradients requested"), loss, td))
+    }
+
+    /// One Q-learning update: compute gradients, apply one [`adam_step`]
+    /// and record the loss. Returns the outcome (with realized per-
+    /// sample TD errors — the adaptive-PER feedback signal the fused
+    /// AOT artifact cannot produce) plus the raw gradients that were
+    /// applied (the gradient-merge push payload).
+    pub fn train_step(
+        &mut self,
+        batch: &TrainBatch,
+        lr: f32,
+        gamma: f32,
+    ) -> Result<(TrainOutcome, QParams)> {
+        let (grads, loss, td_errors) = self.train_grads(batch, gamma)?;
+        anyhow::ensure!(loss.is_finite(), "train step produced non-finite loss {loss}");
+        adam_step(&mut self.params, &mut self.opt, &grads, lr)?;
+        self.losses.push(loss);
+        Ok((TrainOutcome { loss, td_errors: Some(td_errors) }, grads))
+    }
+
+    /// Shared loss/gradient core. `want_grads = false` skips the
+    /// backward pass (loss-only probes).
+    fn per_sample_grads(
+        &self,
+        batch: &TrainBatch,
+        gamma: f32,
+        want_grads: bool,
+    ) -> Result<(Option<QParams>, f32, Vec<f32>)> {
+        let b = batch.rewards.len();
+        anyhow::ensure!(b > 0, "empty train batch");
+        batch.validate(b, self.state_dim, self.num_actions)?;
+        let a = self.num_actions;
+
+        let acts = self.forward_acts(&batch.states, b);
+        let q = acts.last().expect("output layer");
+        let q_next = self.q_values_batch(&batch.next_states, b)?;
+
+        // Per-sample targets, residuals and dL/dq rows.
+        let mut dq = vec![0.0f32; b * a];
+        let mut td_errors = Vec::with_capacity(b);
+        let mut loss_acc = 0.0f64;
+        for i in 0..b {
+            let max_next = q_next[i * a..(i + 1) * a]
+                .iter()
+                .cloned()
+                .fold(f32::NEG_INFINITY, f32::max);
+            let target = batch.rewards[i] + gamma * (1.0 - batch.done[i]) * max_next;
+            let mut pred = 0.0f64;
+            for j in 0..a {
+                pred += q[i * a + j] as f64 * batch.actions_onehot[i * a + j] as f64;
+            }
+            let err = pred as f32 - target;
+            td_errors.push(err);
+            loss_acc += mlp::huber(err) as f64;
+            if want_grads {
+                // d mean-Huber / d pred_i, routed to the acted entry.
+                let g = mlp::huber_grad(err) / b as f32;
+                for j in 0..a {
+                    dq[i * a + j] = g * batch.actions_onehot[i * a + j];
+                }
+            }
+        }
+        let loss = (loss_acc / b as f64) as f32;
+        if !want_grads {
+            return Ok((None, loss, td_errors));
+        }
+
+        // Backprop through the layers, newest first; ReLU masks come
+        // from the stored post-activation outputs (h > 0 ⇔ pre > 0).
+        let dims = self.dims();
+        let mut grads = self.params.zeros_like();
+        let mut dz = dq;
+        for l in (0..dims.len()).rev() {
+            let (d_in, d_out) = dims[l];
+            let w = &self.params.tensors[2 * l].0;
+            let (dw, db, dx) = mlp::dense_backward(&acts[l], b, d_in, w, d_out, &dz);
+            grads.tensors[2 * l].0 = dw;
+            grads.tensors[2 * l + 1].0 = db;
+            if l > 0 {
+                dz = dx;
+                for (z, &h) in dz.iter_mut().zip(&acts[l]) {
+                    if h <= 0.0 {
+                        *z = 0.0;
+                    }
+                }
+            }
+        }
+        Ok((Some(grads), loss, td_errors))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::one_hot;
+
+    /// Single linear layer (2 → 2) with hand-set weights:
+    /// w = [[1, 2], [3, 4]], b = [0.5, −0.5].
+    fn tiny_net() -> NativeQNet {
+        let mut rng = Rng::new(0);
+        let mut net = NativeQNet::new(2, &[], 2, 1, &mut rng);
+        let params = QParams::from_flat(vec![
+            (vec![1.0, 2.0, 3.0, 4.0], vec![2, 2]),
+            (vec![0.5, -0.5], vec![2]),
+        ])
+        .unwrap();
+        let opt = AdamState::new(&params);
+        net.set_state(params, opt).unwrap();
+        net
+    }
+
+    #[test]
+    fn forward_is_exact_on_the_tiny_net() {
+        let net = tiny_net();
+        // q = [1·1 + 1·3 + 0.5, 1·2 + 1·4 − 0.5] = [4.5, 5.5].
+        assert_eq!(net.q_values(&[1.0, 1.0]).unwrap(), vec![4.5, 5.5]);
+        assert!(net.q_values(&[1.0]).is_err(), "wrong state width rejected");
+    }
+
+    #[test]
+    fn train_grads_match_the_hand_derivation() {
+        // Terminal sample (done = 1): target = r = 1, pred = q[0] = 4.5,
+        // err = 3.5, loss = huber(3.5) = 3.0, dpred = clip(3.5) = 1.
+        // dW = xᵀ·[1, 0] = [[1, 0], [1, 0]], db = [1, 0].
+        let net = tiny_net();
+        let batch = TrainBatch {
+            states: vec![1.0, 1.0],
+            actions_onehot: one_hot(0, 2),
+            rewards: vec![1.0],
+            next_states: vec![0.0, 0.0],
+            done: vec![1.0],
+        };
+        let (grads, loss, td) = net.train_grads(&batch, 0.9).unwrap();
+        assert_eq!(loss, 3.0);
+        assert_eq!(td, vec![3.5]);
+        assert_eq!(grads.tensors[0].0, vec![1.0, 0.0, 1.0, 0.0]);
+        assert_eq!(grads.tensors[1].0, vec![1.0, 0.0]);
+        assert_eq!(net.loss(&batch, 0.9).unwrap(), 3.0);
+    }
+
+    #[test]
+    fn relu_masks_gradients_of_inactive_hidden_units() {
+        // 1 → [1] → 1 with w1 = [1]: x = −1 drives the hidden unit
+        // inactive, so only the output bias can receive gradient.
+        let mut rng = Rng::new(1);
+        let mut net = NativeQNet::new(1, &[1], 1, 1, &mut rng);
+        let params = QParams::from_flat(vec![
+            (vec![1.0], vec![1, 1]),
+            (vec![0.0], vec![1]),
+            (vec![2.0], vec![1, 1]),
+            (vec![0.0], vec![1]),
+        ])
+        .unwrap();
+        let opt = AdamState::new(&params);
+        net.set_state(params, opt).unwrap();
+        let batch = TrainBatch {
+            states: vec![-1.0],
+            actions_onehot: vec![1.0],
+            rewards: vec![1.0],
+            next_states: vec![-1.0],
+            done: vec![1.0],
+        };
+        let (grads, _, _) = net.train_grads(&batch, 0.0).unwrap();
+        assert_eq!(grads.tensors[0].0, vec![0.0], "masked w1");
+        assert_eq!(grads.tensors[1].0, vec![0.0], "masked b1");
+        assert_eq!(grads.tensors[2].0, vec![0.0], "h = 0 kills the w2 gradient");
+        assert_ne!(grads.tensors[3].0, vec![0.0], "b2 still learns");
+    }
+
+    #[test]
+    fn seeded_construction_is_deterministic() {
+        let a = NativeQNet::with_default_shape(18, 13, &mut Rng::new(7));
+        let b = NativeQNet::with_default_shape(18, 13, &mut Rng::new(7));
+        assert_eq!(a.params.digest(), b.params.digest());
+        assert_ne!(
+            a.params.digest(),
+            NativeQNet::with_default_shape(18, 13, &mut Rng::new(8)).params.digest()
+        );
+        assert_eq!(a.params.num_parameters(), 18 * 64 + 64 + 64 * 64 + 64 + 64 * 13 + 13);
+    }
+}

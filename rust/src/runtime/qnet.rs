@@ -1,19 +1,31 @@
-//! The deep Q-network as seen from the coordinator: compiled PJRT
-//! executables plus Rust-owned parameters and optimizer state.
+//! The deep Q-network as seen from the coordinator: one unified [`QNet`]
+//! surface dispatching over the [`QBackend`] seam.
 //!
-//! Three entry points (see `python/compile/aot.py`):
-//! * `q_forward_1` — Q(s, ·) for one state (ε-greedy action selection);
-//! * `q_forward_b` — Q(s, ·) for a replay batch (diagnostics);
-//! * `q_train`     — one replay-minibatch Q-learning update (Bellman
-//!   targets from the same network — the paper does not use Q-targets —
-//!   Huber loss, Adam), returning updated params + moments + loss.
+//! Two engines implement the seam:
+//!
+//! * [`QBackend::Native`] — the default: a pure-Rust MLP
+//!   ([`NativeQNet`]) constructed straight from a backend's
+//!   `(state_dim, num_actions)`. No artifacts, no manifest, works for
+//!   **every** [`crate::backend::TunableRuntime`], and reports realized
+//!   per-sample TD errors plus raw gradients (adaptive PER and
+//!   gradient-level hub merging need both).
+//! * [`QBackend::Aot`] — the original AOT/PJRT artifact path
+//!   ([`AotQNet`]), preserved unchanged for layouts that have compiled
+//!   artifacts (the coarrays 18×13 today; requires the `pjrt` feature +
+//!   `make artifacts` at run time). Its fused `q_train` returns only
+//!   the batch loss, so it keeps the |reward| replay-priority proxy.
+//!
+//! The seam contract both engines honor: `q_values` is a pure function
+//! of `(params, state)`; `train` consumes one [`TrainBatch`], applies
+//! exactly one optimizer step, records the loss in a **bounded**
+//! [`LossRing`], and returns a [`TrainOutcome`]; `set_state` swaps
+//! parameters *and* Adam moments together (the hub-pull entry point).
 
-use anyhow::{Context, Result};
+use anyhow::Result;
 
-use super::artifact::Manifest;
-use super::client::{literal_f32_1d, literal_f32_2d, literal_f32_scalar, Executable, RuntimeClient};
+use super::aot::AotQNet;
+use super::native::NativeQNet;
 use super::params::{AdamState, QParams};
-use super::xla;
 use crate::util::rng::Rng;
 
 /// One replay minibatch in flat row-major layout.
@@ -42,248 +54,254 @@ impl TrainBatch {
     }
 }
 
-/// Compiled Q-network + owned training state.
-pub struct QNet {
-    forward_1: Executable,
-    forward_b: Executable,
-    train: Executable,
-    /// Fixed-Q-targets ablation entry point (the paper does not use
-    /// Q-targets, §5.2; this exists for the ablation bench).
-    train_target: Option<Executable>,
-    /// Frozen target-network parameters (ablation only).
-    target_params: Option<QParams>,
-    pub params: QParams,
-    pub opt: AdamState,
-    pub state_dim: usize,
-    pub num_actions: usize,
-    pub replay_batch: usize,
-    /// Losses observed per train step (diagnostics / convergence tests).
-    pub loss_history: Vec<f32>,
-    /// Device-literal cache of (params, m, v): rebuilt only when the
-    /// training step replaces them (§Perf: avoids re-marshalling ~25k
-    /// floats on every action selection / train call).
-    cached: Option<CachedLiterals>,
+/// What one training update reports back: the scalar loss, plus — when
+/// the engine can produce them — the *realized per-sample TD errors*,
+/// in batch row order. The controller feeds those back into the replay
+/// layer's priority state (adaptive prioritized replay); `None` means
+/// "no per-sample signal available" and the prioritized policy keeps
+/// its static `|reward|` proxy.
+#[derive(Debug, Clone)]
+pub struct TrainOutcome {
+    pub loss: f32,
+    pub td_errors: Option<Vec<f32>>,
 }
 
-struct CachedLiterals {
-    params: Vec<xla::Literal>,
-    m: Vec<xla::Literal>,
-    v: Vec<xla::Literal>,
+/// Fixed-capacity ring of recent training losses plus running
+/// count/mean — the bounded replacement for the per-step `loss_history`
+/// vector that used to grow without limit over multi-thousand-run
+/// campaigns. Keeps the last [`LossRing::capacity`] values for curve
+/// diagnostics and exact running statistics over everything observed.
+#[derive(Debug, Clone)]
+pub struct LossRing {
+    recent: Vec<f32>,
+    /// Next overwrite position once the window is full.
+    head: usize,
+    observed: usize,
+    sum: f64,
+    capacity: usize,
+}
+
+impl LossRing {
+    /// Default retained-window size (observations, not bytes).
+    pub const DEFAULT_CAPACITY: usize = 256;
+
+    pub fn new(capacity: usize) -> LossRing {
+        assert!(capacity > 0);
+        LossRing { recent: Vec::new(), head: 0, observed: 0, sum: 0.0, capacity }
+    }
+
+    pub fn push(&mut self, loss: f32) {
+        self.sum += loss as f64;
+        self.observed += 1;
+        if self.recent.len() < self.capacity {
+            self.recent.push(loss);
+        } else {
+            self.recent[self.head] = loss;
+            self.head = (self.head + 1) % self.capacity;
+        }
+    }
+
+    /// Losses observed over the lifetime (not just those retained).
+    pub fn len(&self) -> usize {
+        self.observed
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.observed == 0
+    }
+
+    /// How many observations the window currently retains.
+    pub fn retained(&self) -> usize {
+        self.recent.len()
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    /// Running mean over **all** observed losses (not just the window).
+    pub fn mean(&self) -> f32 {
+        if self.observed == 0 {
+            0.0
+        } else {
+            (self.sum / self.observed as f64) as f32
+        }
+    }
+
+    /// Most recently recorded loss.
+    pub fn last(&self) -> Option<f32> {
+        if self.recent.is_empty() {
+            return None;
+        }
+        let idx = if self.recent.len() < self.capacity {
+            self.recent.len() - 1
+        } else {
+            (self.head + self.capacity - 1) % self.capacity
+        };
+        Some(self.recent[idx])
+    }
+
+    /// The retained window, oldest → newest.
+    pub fn recent(&self) -> Vec<f32> {
+        if self.recent.len() < self.capacity {
+            return self.recent.clone();
+        }
+        (0..self.capacity).map(|k| self.recent[(self.head + k) % self.capacity]).collect()
+    }
+}
+
+impl Default for LossRing {
+    fn default() -> LossRing {
+        LossRing::new(LossRing::DEFAULT_CAPACITY)
+    }
+}
+
+/// Which engine computes Q-values and training updates — the seam that
+/// decouples deep-RL tuning from per-backend compiled artifacts.
+pub enum QBackend {
+    /// Pure-Rust MLP engine (default): dimension-generic, no manifest.
+    Native(NativeQNet),
+    /// AOT-compiled PJRT artifacts (the original path).
+    Aot(AotQNet),
+}
+
+/// The coordinator-facing Q-network: a thin dispatcher over [`QBackend`].
+pub struct QNet {
+    engine: QBackend,
 }
 
 impl QNet {
-    /// Compile all three artifacts and initialize parameters.
-    pub fn load(client: &RuntimeClient, manifest: &Manifest, rng: &mut Rng) -> Result<QNet> {
-        let forward_1 = client.load_hlo_text(manifest.hlo_path("q_forward_1")?)?;
-        let forward_b = client.load_hlo_text(manifest.hlo_path("q_forward_b")?)?;
-        let train = client.load_hlo_text(manifest.hlo_path("q_train")?)?;
-        let train_target = match manifest.hlo_path("q_train_target") {
-            Ok(path) if path.exists() => Some(client.load_hlo_text(path)?),
-            _ => None,
-        };
-        let params =
-            QParams::init(manifest.state_dim, &manifest.hidden, manifest.num_actions, rng);
-        let opt = AdamState::new(&params);
-        Ok(QNet {
-            forward_1,
-            forward_b,
-            train,
-            train_target,
-            target_params: None,
-            params,
-            opt,
-            state_dim: manifest.state_dim,
-            num_actions: manifest.num_actions,
-            replay_batch: manifest.replay_batch,
-            loss_history: Vec::new(),
-            cached: None,
-        })
+    /// Native engine with the standard architecture, sized for a
+    /// backend's `(state_dim, num_actions)` — no artifacts involved.
+    pub fn native(state_dim: usize, num_actions: usize, rng: &mut Rng) -> QNet {
+        let net = NativeQNet::with_default_shape(state_dim, num_actions, rng);
+        QNet { engine: QBackend::Native(net) }
     }
 
-    /// Replace parameters (e.g. restored from a checkpoint / golden test).
-    pub fn set_params(&mut self, params: QParams) {
-        self.opt = AdamState::new(&params);
-        self.params = params;
-        self.cached = None;
-        self.target_params = None;
+    /// Wrap a loaded AOT engine.
+    pub fn from_aot(net: AotQNet) -> QNet {
+        QNet { engine: QBackend::Aot(net) }
     }
 
-    /// Replace parameters *and* optimizer state together — the hub-pull
-    /// entry point for shared learning, where the merged Adam moments
-    /// must survive the swap (unlike [`QNet::set_params`], which resets
-    /// them). Invalidates the device-literal cache; the frozen target
-    /// network (ablation mode) is left untouched on purpose, since its
-    /// refresh cadence is owned by the agent.
-    pub fn set_state(&mut self, params: QParams, opt: AdamState) {
-        self.params = params;
-        self.opt = opt;
-        self.cached = None;
+    pub fn engine(&self) -> &QBackend {
+        &self.engine
     }
 
-    /// Is the fixed-Q-targets artifact available?
-    pub fn has_target_network(&self) -> bool {
-        self.train_target.is_some()
-    }
-
-    /// Copy the online network into the frozen target (ablation).
-    pub fn sync_target(&mut self) {
-        self.target_params = Some(self.params.clone());
-    }
-
-    /// Ensure the device-literal cache is populated.
-    fn ensure_cache(&mut self) -> Result<&CachedLiterals> {
-        if self.cached.is_none() {
-            self.cached = Some(CachedLiterals {
-                params: self.params.to_literals()?,
-                m: self.opt.m.to_literals()?,
-                v: self.opt.v.to_literals()?,
-            });
+    pub fn engine_name(&self) -> &'static str {
+        match &self.engine {
+            QBackend::Native(_) => "native",
+            QBackend::Aot(_) => "aot",
         }
-        Ok(self.cached.as_ref().unwrap())
     }
 
-    /// Q(s, ·) for a single state.
+    pub fn state_dim(&self) -> usize {
+        match &self.engine {
+            QBackend::Native(n) => n.state_dim(),
+            QBackend::Aot(a) => a.state_dim,
+        }
+    }
+
+    pub fn num_actions(&self) -> usize {
+        match &self.engine {
+            QBackend::Native(n) => n.num_actions(),
+            QBackend::Aot(a) => a.num_actions,
+        }
+    }
+
+    pub fn replay_batch(&self) -> usize {
+        match &self.engine {
+            QBackend::Native(n) => n.replay_batch,
+            QBackend::Aot(a) => a.replay_batch,
+        }
+    }
+
+    pub fn params(&self) -> &QParams {
+        match &self.engine {
+            QBackend::Native(n) => &n.params,
+            QBackend::Aot(a) => &a.params,
+        }
+    }
+
+    pub fn opt(&self) -> &AdamState {
+        match &self.engine {
+            QBackend::Native(n) => &n.opt,
+            QBackend::Aot(a) => &a.opt,
+        }
+    }
+
+    /// Replace parameters and optimizer state together (hub pull).
+    /// Both engines validate shapes themselves (same contract).
+    pub fn set_state(&mut self, params: QParams, opt: AdamState) -> Result<()> {
+        match &mut self.engine {
+            QBackend::Native(n) => n.set_state(params, opt),
+            QBackend::Aot(a) => a.set_state(params, opt),
+        }
+    }
+
+    /// Q(s, ·) for one state.
     pub fn q_values(&mut self, state: &[f32]) -> Result<Vec<f32>> {
-        anyhow::ensure!(
-            state.len() == self.state_dim,
-            "state has {} features, expected {}",
-            state.len(),
-            self.state_dim
-        );
-        let state_lit = literal_f32_2d(state, 1, self.state_dim)?;
-        self.ensure_cache()?;
-        let cache = self.cached.as_ref().unwrap();
-        let mut inputs: Vec<&xla::Literal> = cache.params.iter().collect();
-        inputs.push(&state_lit);
-        let out = self.forward_1.run_refs(&inputs)?;
-        let q = out[0].to_vec::<f32>().context("q_forward_1 output")?;
-        anyhow::ensure!(q.len() == self.num_actions, "bad q length {}", q.len());
-        Ok(q)
+        match &mut self.engine {
+            QBackend::Native(n) => n.q_values(state),
+            QBackend::Aot(a) => a.q_values(state),
+        }
     }
 
-    /// Greedy action for a state (argmax over Q).
-    pub fn greedy_action(&mut self, state: &[f32]) -> Result<usize> {
-        let q = self.q_values(state)?;
-        Ok(argmax(&q))
-    }
-
-    /// Q(s, ·) for a full replay batch (`[B, state_dim]` flat).
-    pub fn q_values_batch(&mut self, states: &[f32]) -> Result<Vec<f32>> {
-        anyhow::ensure!(
-            states.len() == self.replay_batch * self.state_dim,
-            "batch states size {} != {}",
-            states.len(),
-            self.replay_batch * self.state_dim
-        );
-        let states_lit = literal_f32_2d(states, self.replay_batch, self.state_dim)?;
-        self.ensure_cache()?;
-        let cache = self.cached.as_ref().unwrap();
-        let mut inputs: Vec<&xla::Literal> = cache.params.iter().collect();
-        inputs.push(&states_lit);
-        let out = self.forward_b.run_refs(&inputs)?;
-        Ok(out[0].to_vec::<f32>()?)
-    }
-
-    /// One Q-learning update on a replay minibatch. Returns the loss.
-    pub fn train_step(&mut self, batch: &TrainBatch, lr: f32, gamma: f32) -> Result<f32> {
-        batch.validate(self.replay_batch, self.state_dim, self.num_actions)?;
-        let b = self.replay_batch;
-
-        let step_lit = literal_f32_scalar(self.opt.step);
-        let batch_lits = [
-            literal_f32_2d(&batch.states, b, self.state_dim)?,
-            literal_f32_2d(&batch.actions_onehot, b, self.num_actions)?,
-            literal_f32_1d(&batch.rewards),
-            literal_f32_2d(&batch.next_states, b, self.state_dim)?,
-            literal_f32_1d(&batch.done),
-            literal_f32_scalar(lr),
-            literal_f32_scalar(gamma),
-        ];
-        self.ensure_cache()?;
-        let cache = self.cached.as_ref().unwrap();
-        let mut inputs: Vec<&xla::Literal> = Vec::with_capacity(26);
-        inputs.extend(cache.params.iter());
-        inputs.extend(cache.m.iter());
-        inputs.extend(cache.v.iter());
-        inputs.push(&step_lit);
-        inputs.extend(batch_lits.iter());
-
-        let mut out = self.train.run_refs(&inputs)?;
-        let n = self.params.tensors.len();
-        anyhow::ensure!(out.len() == 3 * n + 2, "train output arity {} != {}", out.len(), 3 * n + 2);
-
-        self.params.update_from_literals(&out[..n])?;
-        self.opt.m.update_from_literals(&out[n..2 * n])?;
-        self.opt.v.update_from_literals(&out[2 * n..3 * n])?;
-        self.opt.step = out[3 * n].to_vec::<f32>()?[0];
-        let loss = out[3 * n + 1].to_vec::<f32>()?[0];
-        anyhow::ensure!(loss.is_finite(), "train step produced non-finite loss {loss}");
-        self.loss_history.push(loss);
-        // Recycle the output literals as the new device cache: the next
-        // call uploads nothing but the batch.
-        let v: Vec<xla::Literal> = out.drain(2 * n..3 * n).collect();
-        let m: Vec<xla::Literal> = out.drain(n..2 * n).collect();
-        let params: Vec<xla::Literal> = out.drain(..n).collect();
-        self.cached = Some(CachedLiterals { params, m, v });
-        Ok(loss)
-    }
-
-    /// One Q-learning update with Bellman targets from the *frozen*
-    /// target network (fixed-Q-targets ablation; not in the paper).
-    /// Call [`QNet::sync_target`] periodically to refresh the target.
-    pub fn train_step_with_target(
+    /// One Q-learning update. Returns the outcome plus, for the native
+    /// engine, the raw gradients that were applied (the gradient-merge
+    /// push payload; `None` from the fused AOT artifact).
+    pub fn train(
         &mut self,
         batch: &TrainBatch,
         lr: f32,
         gamma: f32,
-    ) -> Result<f32> {
-        anyhow::ensure!(
-            self.train_target.is_some(),
-            "q_train_target artifact not built (re-run `make artifacts`)"
-        );
-        batch.validate(self.replay_batch, self.state_dim, self.num_actions)?;
-        if self.target_params.is_none() {
-            self.target_params = Some(self.params.clone());
+    ) -> Result<(TrainOutcome, Option<QParams>)> {
+        match &mut self.engine {
+            QBackend::Native(n) => {
+                let (outcome, grads) = n.train_step(batch, lr, gamma)?;
+                Ok((outcome, Some(grads)))
+            }
+            QBackend::Aot(a) => {
+                // The fused q_train artifact returns only the batch
+                // loss: no per-sample TD errors and no raw gradients
+                // without a second device round-trip.
+                let loss = a.train_step(batch, lr, gamma)?;
+                Ok((TrainOutcome { loss, td_errors: None }, None))
+            }
         }
-        let b = self.replay_batch;
+    }
 
-        let target_lits = self.target_params.as_ref().unwrap().to_literals()?;
-        let step_lit = literal_f32_scalar(self.opt.step);
-        let batch_lits = [
-            literal_f32_2d(&batch.states, b, self.state_dim)?,
-            literal_f32_2d(&batch.actions_onehot, b, self.num_actions)?,
-            literal_f32_1d(&batch.rewards),
-            literal_f32_2d(&batch.next_states, b, self.state_dim)?,
-            literal_f32_1d(&batch.done),
-            literal_f32_scalar(lr),
-            literal_f32_scalar(gamma),
-        ];
-        self.ensure_cache()?;
-        let cache = self.cached.as_ref().unwrap();
-        let exe = self.train_target.as_ref().unwrap();
-        let mut inputs: Vec<&xla::Literal> = Vec::with_capacity(32);
-        inputs.extend(cache.params.iter());
-        inputs.extend(target_lits.iter());
-        inputs.extend(cache.m.iter());
-        inputs.extend(cache.v.iter());
-        inputs.push(&step_lit);
-        inputs.extend(batch_lits.iter());
+    /// Fixed-Q-targets ablation step (AOT engine only).
+    pub fn train_with_target(&mut self, batch: &TrainBatch, lr: f32, gamma: f32) -> Result<f32> {
+        match &mut self.engine {
+            QBackend::Aot(a) => a.train_step_with_target(batch, lr, gamma),
+            QBackend::Native(_) => anyhow::bail!(
+                "the fixed-Q-targets ablation runs on the AOT engine (--agent dqn-target); \
+                 the native engine implements the paper-faithful no-target update only"
+            ),
+        }
+    }
 
-        let mut out = exe.run_refs(&inputs)?;
-        let n = self.params.tensors.len();
-        anyhow::ensure!(out.len() == 3 * n + 2, "target train output arity {}", out.len());
-        self.params.update_from_literals(&out[..n])?;
-        self.opt.m.update_from_literals(&out[n..2 * n])?;
-        self.opt.v.update_from_literals(&out[2 * n..3 * n])?;
-        self.opt.step = out[3 * n].to_vec::<f32>()?[0];
-        let loss = out[3 * n + 1].to_vec::<f32>()?[0];
-        anyhow::ensure!(loss.is_finite(), "non-finite loss {loss}");
-        self.loss_history.push(loss);
-        let v: Vec<xla::Literal> = out.drain(2 * n..3 * n).collect();
-        let m: Vec<xla::Literal> = out.drain(n..2 * n).collect();
-        let params: Vec<xla::Literal> = out.drain(..n).collect();
-        self.cached = Some(CachedLiterals { params, m, v });
-        Ok(loss)
+    /// Is the fixed-Q-targets artifact available?
+    pub fn has_target_network(&self) -> bool {
+        match &self.engine {
+            QBackend::Aot(a) => a.has_target_network(),
+            QBackend::Native(_) => false,
+        }
+    }
+
+    /// Copy the online network into the frozen target (AOT ablation).
+    pub fn sync_target(&mut self) {
+        if let QBackend::Aot(a) = &mut self.engine {
+            a.sync_target();
+        }
+    }
+
+    /// Bounded training-loss diagnostics.
+    pub fn losses(&self) -> &LossRing {
+        match &self.engine {
+            QBackend::Native(n) => &n.losses,
+            QBackend::Aot(a) => &a.loss_history,
+        }
     }
 }
 
@@ -319,5 +337,58 @@ mod tests {
         };
         assert!(b.validate(2, 2, 3).is_ok());
         assert!(b.validate(2, 3, 3).is_err());
+    }
+
+    #[test]
+    fn loss_ring_is_bounded_with_exact_running_stats() {
+        let mut ring = LossRing::new(4);
+        assert!(ring.is_empty());
+        assert_eq!(ring.last(), None);
+        for i in 1..=10 {
+            ring.push(i as f32);
+        }
+        // Lifetime stats cover all ten observations...
+        assert_eq!(ring.len(), 10);
+        assert_eq!(ring.mean(), 5.5);
+        assert_eq!(ring.last(), Some(10.0));
+        // ...while memory holds only the newest four, in order.
+        assert_eq!(ring.retained(), 4);
+        assert_eq!(ring.recent(), vec![7.0, 8.0, 9.0, 10.0]);
+    }
+
+    #[test]
+    fn loss_ring_below_capacity_keeps_everything() {
+        let mut ring = LossRing::new(8);
+        ring.push(2.0);
+        ring.push(4.0);
+        assert_eq!(ring.recent(), vec![2.0, 4.0]);
+        assert_eq!(ring.last(), Some(4.0));
+        assert_eq!(ring.mean(), 3.0);
+        assert_eq!(ring.retained(), 2);
+    }
+
+    #[test]
+    fn native_qnet_dispatches_through_the_seam() {
+        use crate::util::rng::Rng;
+        let mut rng = Rng::new(3);
+        let mut q = QNet::native(6, 4, &mut rng);
+        assert_eq!(q.engine_name(), "native");
+        assert_eq!((q.state_dim(), q.num_actions()), (6, 4));
+        assert!(!q.has_target_network());
+        let qs = q.q_values(&[0.1; 6]).unwrap();
+        assert_eq!(qs.len(), 4);
+        // The ablation entry point is AOT-only and says so.
+        let batch = TrainBatch {
+            states: vec![0.0; 6],
+            actions_onehot: vec![1.0, 0.0, 0.0, 0.0],
+            rewards: vec![0.0],
+            next_states: vec![0.0; 6],
+            done: vec![1.0],
+        };
+        assert!(q.train_with_target(&batch, 1e-3, 0.9).is_err());
+        let (outcome, grads) = q.train(&batch, 1e-3, 0.9).unwrap();
+        assert!(outcome.td_errors.is_some(), "native engine reports per-sample TDs");
+        assert!(grads.is_some(), "native engine exposes raw gradients");
+        assert_eq!(q.losses().len(), 1);
     }
 }

@@ -44,7 +44,8 @@ mod stub {
     fn unavailable<T>() -> Result<T, Error> {
         Err(Error(
             "XLA/PJRT backend not compiled in (build with the `pjrt` feature and the \
-             external `xla` crate); use the tabular agent instead"
+             external `xla` crate); use the native DQN engine (--agent dqn) or the \
+             tabular agent instead — neither needs PJRT"
                 .to_string(),
         ))
     }

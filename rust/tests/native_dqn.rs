@@ -1,0 +1,344 @@
+//! Native DQN engine integration tests: hand-computed golden values
+//! for the MLP math, finite-difference gradient verification, the
+//! `--backend collectives --agent dqn` end-to-end smoke (the seam's
+//! acceptance pin), 1/2/4-worker fingerprint identity for native-DQN
+//! shared campaigns in both merge modes, and adaptive-PER priority
+//! divergence from the static |reward| proxy.
+
+use aituning::backend::BackendId;
+use aituning::campaign::{job_grid, CampaignConfig, CampaignEngine, CampaignJob, CampaignReport};
+use aituning::coordinator::replay::PRIORITY_FLOOR;
+use aituning::coordinator::{
+    one_hot, AgentKind, Controller, MergeMode, ReplayPolicyKind, SharedLearning, TuningConfig,
+};
+use aituning::runtime::{AdamState, NativeQNet, QParams, TrainBatch};
+use aituning::simmpi::Machine;
+use aituning::util::rng::Rng;
+use aituning::workloads::WorkloadKind;
+
+// --- engine-level golden values ---
+
+/// 2 → [2] → 2 network with hand-set parameters whose pre-activations
+/// and TD residuals sit far from every ReLU/Huber kink (safe for the
+/// finite-difference check below).
+fn fd_net() -> NativeQNet {
+    let mut rng = Rng::new(11);
+    let mut net = NativeQNet::new(2, &[2], 2, 2, &mut rng);
+    let params = QParams::from_flat(vec![
+        (vec![0.6, -0.4, 0.3, 0.8], vec![2, 2]),
+        (vec![0.1, 0.2], vec![2]),
+        (vec![0.5, -0.3, -0.2, 0.7], vec![2, 2]),
+        (vec![0.05, -0.05], vec![2]),
+    ])
+    .unwrap();
+    let opt = AdamState::new(&params);
+    net.set_state(params, opt).unwrap();
+    net
+}
+
+fn fd_batch() -> TrainBatch {
+    let mut actions = one_hot(0, 2);
+    actions.extend(one_hot(1, 2));
+    TrainBatch {
+        states: vec![1.0, 0.5, -0.5, 1.0],
+        actions_onehot: actions,
+        rewards: vec![0.2, 0.5],
+        // done = 1 on both rows: the Bellman target reduces to the
+        // reward, so the loss depends on the parameters only through
+        // pred — exactly the stop-gradient semantics the analytic
+        // gradient implements, which makes central differences valid.
+        next_states: vec![0.0, 0.0, 0.0, 0.0],
+        done: vec![1.0, 1.0],
+    }
+}
+
+#[test]
+fn forward_pass_matches_hand_computed_values() {
+    let net = fd_net();
+    // s = [1, 0.5]: h = relu([0.85, 0.2]), q = [0.435, -0.165].
+    let q = net.q_values(&[1.0, 0.5]).unwrap();
+    assert!((q[0] - 0.435).abs() < 1e-6, "{q:?}");
+    assert!((q[1] - -0.165).abs() < 1e-6, "{q:?}");
+    // s = [-0.5, 1]: h = relu([0.1, 1.2]), q = [0.05 + 0.05 - 0.24, ...]
+    let q2 = net.q_values(&[-0.5, 1.0]).unwrap();
+    assert!((q2[1] - 0.76).abs() < 1e-6, "{q2:?}");
+}
+
+#[test]
+fn analytic_gradients_match_central_finite_differences() {
+    let mut net = fd_net();
+    let batch = fd_batch();
+    let gamma = 0.9;
+    let (grads, loss, td) = net.train_grads(&batch, gamma).unwrap();
+    assert!((td[0] - 0.235).abs() < 1e-5, "{td:?}");
+    assert!((td[1] - 0.26).abs() < 1e-5, "{td:?}");
+    assert!(loss > 0.0 && loss < 0.1);
+
+    let h = 1e-2f32;
+    let mut checked = 0;
+    for ti in 0..grads.tensors.len() {
+        for k in 0..grads.tensors[ti].0.len() {
+            let orig = net.params.tensors[ti].0[k];
+            net.params.tensors[ti].0[k] = orig + h;
+            let plus = net.loss(&batch, gamma).unwrap();
+            net.params.tensors[ti].0[k] = orig - h;
+            let minus = net.loss(&batch, gamma).unwrap();
+            net.params.tensors[ti].0[k] = orig;
+            let numeric = (plus - minus) / (2.0 * h);
+            let analytic = grads.tensors[ti].0[k];
+            assert!(
+                (numeric - analytic).abs() < 5e-3,
+                "tensor {ti}[{k}]: numeric {numeric} vs analytic {analytic}"
+            );
+            checked += 1;
+        }
+    }
+    assert_eq!(checked, net.params.num_parameters());
+}
+
+#[test]
+fn fixed_seed_training_is_bitwise_reproducible_and_reduces_loss() {
+    // Fixed seed → identical init digests; three identical train steps
+    // → bitwise-identical losses and post-train parameter digests; a
+    // longer run on the same batch descends.
+    let batch = fd_batch();
+    let run = |steps: usize| {
+        let mut net = NativeQNet::new(2, &[8], 2, 2, &mut Rng::new(21));
+        let mut losses = Vec::new();
+        for _ in 0..steps {
+            let (outcome, _) = net.train_step(&batch, 1e-2, 0.9).unwrap();
+            losses.push(outcome.loss);
+        }
+        (losses, net.params.digest())
+    };
+    let (la, da) = run(3);
+    let (lb, db) = run(3);
+    assert_eq!(
+        la.iter().map(|l| l.to_bits()).collect::<Vec<_>>(),
+        lb.iter().map(|l| l.to_bits()).collect::<Vec<_>>(),
+        "loss after 3 steps must be bitwise reproducible"
+    );
+    assert_eq!(da, db, "post-train parameter digest must be bitwise reproducible");
+    let init_digest = NativeQNet::new(2, &[8], 2, 2, &mut Rng::new(21)).params.digest();
+    assert_ne!(da, init_digest, "training must move the parameters");
+    let (long, _) = run(40);
+    assert!(long[39] < long[0], "Adam on a fixed batch must descend: {long:?}");
+    assert!(long.iter().all(|l| l.is_finite()));
+}
+
+// --- the QBackend seam end-to-end: DQN on every backend ---
+
+#[test]
+fn native_dqn_tunes_collectives_end_to_end() {
+    // The acceptance pin: `--backend collectives --agent dqn` trains on
+    // the native engine with no artifacts anywhere. High exploration +
+    // the 128-rank collective-heavy workload make several actions
+    // (algorithm selects, SMP toggle, segment steps) individually
+    // profitable, so the pinned seed is nowhere near a knife edge (same
+    // landscape as the tabular pin in shared_learning.rs).
+    let cfg = TuningConfig {
+        backend: BackendId::Collectives,
+        agent: AgentKind::Dqn,
+        runs: 25,
+        eps_start: 1.0,
+        eps_end: 0.3,
+        noise: 0.01,
+        seed: 5,
+        ..TuningConfig::default()
+    };
+    let mut ctl = Controller::new(cfg).unwrap();
+    assert_eq!(ctl.agent_name(), "dqn");
+    let out = ctl.tune(WorkloadKind::PrkCollectives, 128).unwrap();
+    assert_eq!(out.log.runs.len(), 26);
+    assert!(
+        out.improvement() > 0.01,
+        "native DQN must beat the default collective algorithms: {:+.2}% (best {} vs \
+         reference {})",
+        out.improvement() * 100.0,
+        out.best_us,
+        out.reference_us
+    );
+    assert!(!ctl.losses().is_empty(), "the deep network must actually have trained");
+    assert!(ctl.losses().recent().iter().all(|l| l.is_finite()));
+    assert_eq!(out.ensemble.backend(), BackendId::Collectives);
+    let ens = ctl.evaluate(WorkloadKind::PrkCollectives, 128, &out.ensemble, 3).unwrap();
+    assert!(ens <= out.reference_us * 1.10, "ensemble {ens} vs reference {}", out.reference_us);
+}
+
+#[test]
+fn native_dqn_runs_on_both_backends_with_backend_sized_networks() {
+    for backend in BackendId::ALL {
+        let cfg = TuningConfig {
+            backend,
+            agent: AgentKind::Dqn,
+            runs: 4,
+            noise: 0.01,
+            seed: 2,
+            ..TuningConfig::default()
+        };
+        let mut ctl = Controller::new(cfg).unwrap();
+        let kind = backend.runtime().training_workloads()[0];
+        let out = ctl.tune(kind, 8).unwrap();
+        assert_eq!(out.log.runs.len(), 5, "{backend}");
+        assert!(!ctl.losses().is_empty(), "{backend}");
+    }
+}
+
+// --- shared campaigns: worker-count invariance in both merge modes ---
+
+fn assert_reports_bit_identical(a: &CampaignReport, b: &CampaignReport) {
+    assert_eq!(a.fingerprint(), b.fingerprint());
+    assert_eq!(a.hub, b.hub, "hub summaries (incl. state digest) must match");
+    for (ra, rb) in a.results.iter().zip(&b.results) {
+        assert_eq!(ra.job, rb.job);
+        assert_eq!(ra.outcome.best_us.to_bits(), rb.outcome.best_us.to_bits());
+        for (xa, xb) in ra.outcome.log.runs.iter().zip(&rb.outcome.log.runs) {
+            assert_eq!(xa.total_time_us.to_bits(), xb.total_time_us.to_bits());
+            assert_eq!(xa.action, xb.action);
+            assert_eq!(xa.cvars, xb.cvars);
+        }
+    }
+}
+
+fn dqn_grid(backend: BackendId) -> Vec<CampaignJob> {
+    let (workloads, images): (&[WorkloadKind], &[usize]) = match backend {
+        BackendId::Coarrays => {
+            (&[WorkloadKind::LatticeBoltzmann, WorkloadKind::SkeletonPic], &[4, 8])
+        }
+        BackendId::Collectives => {
+            (&[WorkloadKind::PrkCollectives, WorkloadKind::PrkTranspose], &[16, 64])
+        }
+    };
+    job_grid(backend, &[Machine::cheyenne()], workloads, images, AgentKind::Dqn, 31)
+}
+
+fn dqn_engine(backend: BackendId, merge: MergeMode, workers: usize) -> CampaignEngine {
+    let base = TuningConfig {
+        backend,
+        agent: AgentKind::Dqn,
+        runs: 6,
+        noise: 0.01,
+        seed: 31,
+        shared: Some(SharedLearning { sync_every: 2, merge }),
+        ..TuningConfig::default()
+    };
+    CampaignEngine::new(CampaignConfig { base, workers })
+}
+
+#[test]
+fn native_dqn_shared_campaigns_identical_at_1_2_and_4_workers_in_both_merge_modes() {
+    // The acceptance pin: per backend and per merge mode, worker count
+    // must never leak into trajectories, hub state or replay contents.
+    for backend in BackendId::ALL {
+        let jobs = dqn_grid(backend);
+        let mut mode_fingerprints = Vec::new();
+        for merge in MergeMode::ALL {
+            let w1 = dqn_engine(backend, merge, 1).run_shared(&jobs).unwrap();
+            let w2 = dqn_engine(backend, merge, 2).run_shared(&jobs).unwrap();
+            let w4 = dqn_engine(backend, merge, 4).run_shared(&jobs).unwrap();
+            assert_reports_bit_identical(&w1, &w2);
+            assert_reports_bit_identical(&w1, &w4);
+            let hub = w1.hub.expect("shared campaign reports hub state");
+            assert_eq!(hub.merges, 3, "{backend}/{merge}: ceil(6/2) merge rounds");
+            assert_eq!(hub.merge, merge);
+            assert!(hub.total_transitions > 0);
+            mode_fingerprints.push(w1.fingerprint());
+        }
+        assert_ne!(
+            mode_fingerprints[0], mode_fingerprints[1],
+            "{backend}: weights- and grads-merge campaigns must not coincide"
+        );
+    }
+}
+
+#[test]
+fn grads_merge_rejects_agents_without_gradients() {
+    // The tabular agent (and the fused AOT artifact) cannot export raw
+    // gradients; both the controller and the campaign driver must say
+    // so up front instead of failing mid-campaign.
+    let cfg = TuningConfig {
+        agent: AgentKind::Tabular,
+        shared: Some(SharedLearning { sync_every: 2, merge: MergeMode::Grads }),
+        ..TuningConfig::default()
+    };
+    let err = Controller::new(cfg.clone()).err().map(|e| format!("{e:?}")).unwrap_or_default();
+    assert!(err.contains("--agent dqn"), "unhelpful error: {err}");
+
+    let jobs = job_grid(
+        BackendId::Coarrays,
+        &[Machine::cheyenne()],
+        &[WorkloadKind::LatticeBoltzmann],
+        &[4],
+        AgentKind::Tabular,
+        1,
+    );
+    let engine = CampaignEngine::new(CampaignConfig { base: cfg, workers: 1 });
+    assert!(engine.run_shared(&jobs).is_err());
+}
+
+// --- adaptive PER: the native engine's TD errors reach the sampler ---
+
+#[test]
+fn learned_priorities_diverge_from_the_reward_proxy_under_native_dqn() {
+    // Closes the "DQN adaptive PER" deferred item: the native engine
+    // reports realized per-sample TD errors, the controller feeds them
+    // into PrioritizedSampler, and the resident slots' selection
+    // weights stop being the static |reward| + floor proxy.
+    let cfg = TuningConfig {
+        agent: AgentKind::Dqn,
+        replay_policy: ReplayPolicyKind::Prioritized,
+        runs: 10,
+        noise: 0.01,
+        seed: 3,
+        ..TuningConfig::default()
+    };
+    let mut ctl = Controller::new(cfg).unwrap();
+    ctl.tune(WorkloadKind::LatticeBoltzmann, 8).unwrap();
+    let replay = ctl.replay();
+    assert_eq!(replay.len(), 10);
+    let diverged = (0..replay.len())
+        .filter(|&i| {
+            let proxy = replay.get(i).reward.abs() as f64 + PRIORITY_FLOOR;
+            (replay.selection_weight(i) - proxy).abs() > 1e-9
+        })
+        .count();
+    assert!(
+        diverged > 0,
+        "every slot still prices at the |reward| proxy — TD feedback never arrived"
+    );
+
+    // Control: under the uniform policy weights stay exactly 1.0 —
+    // the proxy-vs-learned distinction only exists for prioritized.
+    let cfg = TuningConfig {
+        agent: AgentKind::Dqn,
+        replay_policy: ReplayPolicyKind::Uniform,
+        runs: 5,
+        noise: 0.01,
+        seed: 3,
+        ..TuningConfig::default()
+    };
+    let mut ctl = Controller::new(cfg).unwrap();
+    ctl.tune(WorkloadKind::LatticeBoltzmann, 8).unwrap();
+    for i in 0..ctl.replay().len() {
+        assert_eq!(ctl.replay().selection_weight(i), 1.0);
+    }
+}
+
+// --- failure modes stay actionable ---
+
+#[test]
+fn aot_agent_failures_name_the_layout_and_suggest_the_native_engine() {
+    let cfg = TuningConfig {
+        agent: AgentKind::DqnAot,
+        backend: BackendId::Collectives,
+        artifacts_dir: std::path::PathBuf::from("/nonexistent/artifacts"),
+        ..TuningConfig::default()
+    };
+    let err = Controller::new(cfg).err().map(|e| format!("{e:?}")).unwrap_or_default();
+    let b = BackendId::Collectives;
+    assert!(
+        err.contains(&format!("{}x{}", b.state_dim(), b.num_actions())),
+        "error must name the backend layout: {err}"
+    );
+    assert!(err.contains("--agent dqn"), "error must suggest the native engine: {err}");
+}

@@ -4,7 +4,9 @@
 //! This is the correctness seal on the whole L1→L2→L3 bridge: Pallas
 //! kernel → JAX model → HLO text → PJRT compile → Rust execution.
 
-use aituning::runtime::{Manifest, QNet, QParams, RuntimeClient, TrainBatch};
+// The golden pins target the AOT/PJRT engine specifically (the native
+// engine has its own hand-computed pins in native_dqn.rs).
+use aituning::runtime::{AotQNet as QNet, Manifest, QParams, RuntimeClient, TrainBatch};
 use aituning::util::json::Json;
 use aituning::util::rng::Rng;
 

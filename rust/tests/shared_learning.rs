@@ -15,7 +15,7 @@ fn base_cfg(runs: usize, sync_every: usize) -> TuningConfig {
         runs,
         noise: 0.01,
         seed: 11,
-        shared: Some(SharedLearning { sync_every }),
+        shared: Some(SharedLearning { sync_every, ..SharedLearning::default() }),
         ..TuningConfig::default()
     }
 }
@@ -249,7 +249,7 @@ fn backend_cfg(backend: BackendId, runs: usize, sync_every: usize) -> TuningConf
         runs,
         noise: 0.01,
         seed: 13,
-        shared: Some(SharedLearning { sync_every }),
+        shared: Some(SharedLearning { sync_every, ..SharedLearning::default() }),
         ..TuningConfig::default()
     }
 }
