@@ -1,3 +1,4 @@
+#![allow(clippy::unwrap_used)] // test/bench code panics by design
 //! Design-choice ablations (DESIGN.md): experience replay on/off,
 //! ensemble vs single-best vs last-config inference, DQN vs tabular
 //! agent, and AITuning vs the random/evolutionary/human baselines at

@@ -1,3 +1,4 @@
+#![allow(clippy::unwrap_used)] // test/bench code panics by design
 //! Q-engine ablation + tuning-overhead microbenchmarks.
 //!
 //! Part 1 — the engine ablation: forward (action selection) and one

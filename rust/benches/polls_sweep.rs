@@ -1,3 +1,4 @@
+#![allow(clippy::unwrap_used)] // test/bench code panics by design
 //! §6.2 POLLS_BEFORE_YIELD analysis: sweep the poll budget on ICAR at
 //! 256 and 512 images (base config: async progress on, as AITuning
 //! found for ICAR).

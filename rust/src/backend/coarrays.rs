@@ -140,6 +140,7 @@ impl TunableRuntime for CoarraysRuntime {
 }
 
 #[cfg(test)]
+#[allow(clippy::unwrap_used)] // tests panic by design
 mod tests {
     use super::*;
 

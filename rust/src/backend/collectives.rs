@@ -264,6 +264,7 @@ impl TunableRuntime for CollectivesRuntime {
 }
 
 #[cfg(test)]
+#[allow(clippy::unwrap_used)] // tests panic by design
 mod tests {
     use super::*;
 

@@ -66,7 +66,10 @@ impl BackendId {
 
     /// Dense index in [`BackendId::ALL`].
     pub fn ordinal(self) -> usize {
-        Self::ALL.iter().position(|&b| b == self).expect("listed in ALL")
+        match self {
+            BackendId::Coarrays => 0,
+            BackendId::Collectives => 1,
+        }
     }
 
     pub fn parse(s: &str) -> Option<BackendId> {
@@ -123,34 +126,54 @@ impl std::fmt::Display for BackendId {
 /// bit-identical results (the campaign engine's worker-count-invariance
 /// contract rests on this).
 pub trait TunableRuntime: Sync {
+    /// This runtime's identity.
+    ///
+    /// Determinism: constant — `ALL[id().ordinal()] == id()` always.
     fn id(&self) -> BackendId;
 
     /// Communication-layer name, as `AITuning_start(layer)` receives it.
+    ///
+    /// Determinism: constant for the lifetime of the process.
     fn layer(&self) -> &'static str;
 
     /// Control variables this runtime exposes (registry order).
+    ///
+    /// Determinism: a `'static` table — registry order is declaration
+    /// order, never hash order, so action decoding is stable.
     fn cvars(&self) -> &'static [CvarDescriptor];
 
     /// Performance variables this runtime observes (registry order).
     /// Index 4 is total application time by convention
     /// ([`crate::mpi_t::TOTAL_TIME_PVAR`]).
+    ///
+    /// Determinism: a `'static` table in declaration order.
     fn pvars(&self) -> &'static [PvarDescriptor];
 
     /// RL state-vector width (flows into Q-net construction and the
     /// tabular discretizer).
+    ///
+    /// Determinism: constant for the lifetime of the process.
     fn state_dim(&self) -> usize;
 
     /// Derived action count: `1 + 2 × num_cvars` plus the enumerated
     /// choice actions of categorical cvars.
+    ///
+    /// Determinism: pure function of the `'static` cvar table.
     fn num_actions(&self) -> usize {
         crate::coordinator::actions::num_actions(self.cvars())
     }
 
     /// The workloads a training campaign covers by default.
+    ///
+    /// Determinism: a `'static` table in declaration order.
     fn training_workloads(&self) -> &'static [WorkloadKind];
 
     /// Build the state vector for one observed run (length must equal
     /// [`TunableRuntime::state_dim`]).
+    ///
+    /// Determinism: pure function of the arguments — no clocks, no
+    /// ambient randomness, no hash iteration; identical inputs produce
+    /// bit-identical vectors on every host and worker count.
     #[allow(clippy::too_many_arguments)]
     fn build_state(
         &self,
@@ -165,6 +188,10 @@ pub trait TunableRuntime: Sync {
 
     /// Execute one instrumented episode. `workload_seed` fixes the
     /// problem instance; `run_seed` varies run-to-run noise.
+    ///
+    /// Determinism: pure function of the arguments — two calls with
+    /// identical arguments return bit-identical results (the campaign
+    /// engine's worker-count-invariance contract rests on this).
     #[allow(clippy::too_many_arguments)]
     fn run_episode(
         &self,
@@ -179,6 +206,8 @@ pub trait TunableRuntime: Sync {
 
     /// Reward for one run against the reference (§5.1 by default: the
     /// clipped relative total-time improvement).
+    ///
+    /// Determinism: pure function of the two times, computed in `f64`.
     fn reward(&self, reference_us: f64, total_us: f64) -> f64 {
         crate::coordinator::reward::reward(reference_us, total_us)
     }
@@ -198,6 +227,7 @@ pub fn scale_feature(images: usize, machine: &Machine) -> f32 {
 }
 
 #[cfg(test)]
+#[allow(clippy::unwrap_used)] // tests panic by design
 mod tests {
     use super::*;
 

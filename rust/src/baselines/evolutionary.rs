@@ -152,6 +152,7 @@ impl Searcher for Evolutionary {
 }
 
 #[cfg(test)]
+#[allow(clippy::unwrap_used)] // tests panic by design
 mod tests {
     use super::*;
 

@@ -13,6 +13,7 @@ pub fn human_tuned() -> CvarSet {
 }
 
 #[cfg(test)]
+#[allow(clippy::unwrap_used)] // tests panic by design
 mod tests {
     use super::*;
 

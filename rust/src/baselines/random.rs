@@ -167,6 +167,7 @@ pub fn grid_search_batched_for(
 }
 
 #[cfg(test)]
+#[allow(clippy::unwrap_used)] // tests panic by design
 mod tests {
     use super::*;
 

@@ -66,9 +66,23 @@ impl EpisodeKey {
 /// bit-identical regardless of interleaving.
 #[derive(Debug, Default)]
 pub struct EpisodeCache {
+    /// Audited lookup-only (detlint R1): this map is only ever probed
+    /// by key (`get`/`insert`/`len`/`is_empty`) — nothing iterates it,
+    /// so its hash order can never reach a report or fingerprint. If a
+    /// future change needs to enumerate entries, switch to `BTreeMap`.
     map: Mutex<HashMap<EpisodeKey, f64>>,
     hits: AtomicUsize,
     misses: AtomicUsize,
+}
+
+/// Recover the guarded map even if another worker panicked mid-insert:
+/// entries are idempotent (pure function of the key), so a poisoned
+/// lock holds valid data and propagating the poison would only turn
+/// one worker's panic into a campaign-wide abort.
+fn lock_map(
+    map: &Mutex<HashMap<EpisodeKey, f64>>,
+) -> std::sync::MutexGuard<'_, HashMap<EpisodeKey, f64>> {
+    map.lock().unwrap_or_else(|poisoned| poisoned.into_inner())
 }
 
 impl EpisodeCache {
@@ -82,23 +96,23 @@ impl EpisodeCache {
         key: EpisodeKey,
         run: impl FnOnce() -> Result<f64>,
     ) -> Result<f64> {
-        if let Some(&t) = self.map.lock().unwrap().get(&key) {
+        if let Some(&t) = lock_map(&self.map).get(&key) {
             self.hits.fetch_add(1, Ordering::Relaxed);
             return Ok(t);
         }
         self.misses.fetch_add(1, Ordering::Relaxed);
         let t = run()?;
-        self.map.lock().unwrap().insert(key, t);
+        lock_map(&self.map).insert(key, t);
         Ok(t)
     }
 
     /// Number of distinct episodes stored.
     pub fn len(&self) -> usize {
-        self.map.lock().unwrap().len()
+        lock_map(&self.map).len()
     }
 
     pub fn is_empty(&self) -> bool {
-        self.map.lock().unwrap().is_empty()
+        lock_map(&self.map).is_empty()
     }
 
     /// Lookups answered from the map.
@@ -113,6 +127,7 @@ impl EpisodeCache {
 }
 
 #[cfg(test)]
+#[allow(clippy::unwrap_used)] // tests panic by design
 mod tests {
     use super::*;
 

@@ -25,8 +25,16 @@ impl<T> ShardedCollector<T> {
     }
 
     /// Record the result for global index `index` from worker `shard`.
+    ///
+    /// A poisoned shard lock is recovered, not propagated: the vector
+    /// behind it is append-only, so a panicking sibling can never leave
+    /// it in a torn state, and `into_merged` still catches any item it
+    /// failed to deliver.
     pub fn push(&self, shard: usize, index: usize, item: T) {
-        self.shards[shard % self.shards.len()].lock().unwrap().push((index, item));
+        self.shards[shard % self.shards.len()]
+            .lock()
+            .unwrap_or_else(|poisoned| poisoned.into_inner())
+            .push((index, item));
     }
 
     /// Merge all shards back into index order.
@@ -37,7 +45,7 @@ impl<T> ShardedCollector<T> {
     pub fn into_merged(self) -> Vec<T> {
         let mut all: Vec<(usize, T)> = Vec::with_capacity(self.expected);
         for shard in self.shards {
-            all.extend(shard.into_inner().unwrap());
+            all.extend(shard.into_inner().unwrap_or_else(|poisoned| poisoned.into_inner()));
         }
         all.sort_by_key(|(i, _)| *i);
         assert_eq!(all.len(), self.expected, "collector item count mismatch");
@@ -49,6 +57,7 @@ impl<T> ShardedCollector<T> {
 }
 
 #[cfg(test)]
+#[allow(clippy::unwrap_used)] // tests panic by design
 mod tests {
     use super::*;
 

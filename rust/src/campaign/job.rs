@@ -82,6 +82,7 @@ pub fn job_grid(
 }
 
 #[cfg(test)]
+#[allow(clippy::unwrap_used)] // tests panic by design
 mod tests {
     use super::*;
 

@@ -171,6 +171,7 @@ pub fn ablation_table(independent: &CampaignReport, shared: &CampaignReport) -> 
 }
 
 #[cfg(test)]
+#[allow(clippy::unwrap_used)] // tests panic by design
 mod tests {
     use super::*;
     use crate::coordinator::AgentKind;

@@ -34,6 +34,7 @@
 
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Mutex;
+// detlint: allow(R3) -- wall-clock is reporting-only (CampaignReport.wall_clock); it never feeds fingerprint()
 use std::time::Instant;
 
 use anyhow::{Context, Result};
@@ -77,6 +78,7 @@ impl CampaignEngine {
         let sync_every = shared.sync_every.max(1);
         let rounds = base.runs.div_ceil(sync_every).max(1);
         let workers = self.workers_for(jobs.len());
+        // detlint: allow(R3) -- reporting-only: elapsed time is displayed, never fingerprinted
         let started = Instant::now();
 
         let mut hub = LearnerHub::new(base.replay_capacity, base.replay_policy, jobs[0].backend)
@@ -114,9 +116,12 @@ impl CampaignEngine {
 
         let mut results = Vec::with_capacity(jobs.len());
         for (job, slot) in jobs.iter().zip(&slots) {
+            // A poisoned slot means a worker panicked mid-segment; the
+            // panic has already surfaced through the scoped join, so
+            // recover the guard rather than double-reporting here.
             let mut ctl = slot
                 .lock()
-                .unwrap()
+                .unwrap_or_else(|poisoned| poisoned.into_inner())
                 .take()
                 .context("shared campaign lost a controller")?;
             let outcome = ctl.finish_session()?;
@@ -142,22 +147,29 @@ fn run_segment(
     view: &HubView,
     slot: &Mutex<Option<Controller>>,
 ) -> Result<HubContribution> {
-    let mut guard = slot.lock().unwrap();
-    if guard.is_none() {
-        let cfg = TuningConfig {
-            agent: job.agent,
-            seed: job.seed,
-            machine: job.resolve_machine()?,
-            backend: job.backend,
-            shared: Some(shared),
-            ..base.clone()
-        };
-        let mut ctl = Controller::new(cfg)?;
-        ctl.begin_session(job.workload, job.images)?;
-        *guard = Some(ctl);
-    }
-    let ctl = guard.as_mut().expect("slot populated above");
+    let mut guard = slot.lock().unwrap_or_else(|poisoned| poisoned.into_inner());
+    // Take the controller out of the slot (creating it on first touch),
+    // run the segment, and put it back — the take/put-back shape avoids
+    // ever holding an `Option` that later code must re-prove is `Some`.
+    let mut ctl = match guard.take() {
+        Some(ctl) => ctl,
+        None => {
+            let cfg = TuningConfig {
+                agent: job.agent,
+                seed: job.seed,
+                machine: job.resolve_machine()?,
+                backend: job.backend,
+                shared: Some(shared),
+                ..base.clone()
+            };
+            let mut ctl = Controller::new(cfg)?;
+            ctl.begin_session(job.workload, job.images)?;
+            ctl
+        }
+    };
     ctl.sync_from_hub(view)?;
     ctl.step_session(sync_every)?;
-    ctl.hub_contribution(job_index)
+    let contribution = ctl.hub_contribution(job_index);
+    *guard = Some(ctl);
+    contribution
 }

@@ -83,6 +83,7 @@ pub fn lower_all(progs: &[CafProgram], opts: &RuntimeOptions) -> Vec<Program> {
 }
 
 #[cfg(test)]
+#[allow(clippy::unwrap_used)] // tests panic by design
 mod tests {
     use super::*;
     use crate::mpi_t::CvarSet;

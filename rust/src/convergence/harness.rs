@@ -156,6 +156,7 @@ pub fn run_convergence(
 }
 
 #[cfg(test)]
+#[allow(clippy::unwrap_used)] // tests panic by design
 mod tests {
     use super::*;
     use crate::mpi_t::CvarId;

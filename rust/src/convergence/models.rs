@@ -126,6 +126,7 @@ fn normalized_distance(cvar: CvarId, v: i64, best: i64) -> f64 {
 }
 
 #[cfg(test)]
+#[allow(clippy::unwrap_used)] // tests panic by design
 mod tests {
     use super::*;
 

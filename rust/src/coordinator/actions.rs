@@ -129,6 +129,7 @@ pub fn one_hot(index: usize, n: usize) -> Vec<f32> {
 }
 
 #[cfg(test)]
+#[allow(clippy::unwrap_used)] // tests panic by design
 mod tests {
     use super::*;
     use crate::backend::BackendId;

@@ -22,23 +22,45 @@ pub use crate::runtime::TrainOutcome;
 /// if the real `xla` bindings ever aren't, the `pjrt` feature build
 /// will say so at this bound.)
 pub trait Agent: Send {
+    /// Short estimator name for reports ("dqn", "tabular", ...).
+    ///
+    /// Determinism: constant per configuration (engine + mode).
     fn name(&self) -> &'static str;
 
     /// Q(s, ·) for one state (`state.len()` = the backend's state dim).
+    ///
+    /// Determinism: pure function of (learned state, input state) — no
+    /// clocks, no ambient randomness; identical histories produce
+    /// bit-identical Q-vectors on every host.
     fn q_values(&mut self, state: &[f32]) -> Result<Vec<f32>>;
 
     /// One training update on a replay minibatch.
+    ///
+    /// Determinism: the post-update learned state is a pure function of
+    /// (prior state, batch, lr, gamma); any internal reduction follows
+    /// the canonical-order f64-accumulation discipline.
     fn train(&mut self, batch: &TrainBatch, lr: f32, gamma: f32) -> Result<TrainOutcome>;
 
     /// Bounded training-loss diagnostics.
+    ///
+    /// Determinism: pure function of the training history (the ring
+    /// records realized losses in update order).
     fn losses(&self) -> &crate::runtime::LossRing;
 
     /// Export the learnable state for a hub push (shared learning).
+    ///
+    /// Determinism: a faithful copy of the learned state — snapshots of
+    /// identical histories are bit-identical, so hub digests agree
+    /// across worker counts.
     fn snapshot(&self) -> Result<AgentState>;
 
     /// Adopt the hub's master state from a pulled view (shared
     /// learning). A view with no master yet (round 0) is a no-op: the
     /// agent keeps its own freshly-initialized state.
+    ///
+    /// Determinism: the post-sync state is a pure function of (prior
+    /// state, view) — every worker that pulls the same view lands in
+    /// the same state.
     fn sync(&mut self, view: &HubView) -> Result<()>;
 
     /// Drain the raw gradients accumulated since the last call — the
@@ -46,6 +68,10 @@ pub trait Agent: Send {
     /// ([`crate::coordinator::MergeMode::Grads`]). `None` means this
     /// estimator cannot export gradients (tabular, fused AOT artifact)
     /// or was not asked to accumulate them.
+    ///
+    /// Determinism: the drained sum is accumulated in canonical tensor
+    /// order with f64 partials, so the payload is a pure function of
+    /// the worker's own training trajectory.
     fn take_grads(&mut self) -> Option<QParams> {
         None
     }
@@ -295,6 +321,7 @@ impl Agent for DqnAgent {
 }
 
 #[cfg(test)]
+#[allow(clippy::unwrap_used)] // tests panic by design
 mod tests {
     use super::*;
 

@@ -420,7 +420,7 @@ impl Controller {
         );
         let log = session.log;
         let reference_us = session.reference_us;
-        let best_rec = log.best_run().expect("nonempty log");
+        let best_rec = log.best_run().context("finished session has an empty run log")?;
         let best = best_rec.cvars.clone();
         let best_us = best_rec.total_time_us;
         // A zero-run session has no tuning records: ship this backend's
@@ -543,6 +543,7 @@ pub(crate) fn seed_mix(kind: WorkloadKind, images: usize) -> u64 {
 }
 
 #[cfg(test)]
+#[allow(clippy::unwrap_used)] // tests panic by design
 mod tests {
     use super::*;
 

@@ -3,7 +3,7 @@
 //! variables before `MPI_Init`, probes register user-defined pvar values
 //! during execution, and the `MPI_Finalize` wrapper collects statistics.
 
-use anyhow::Result;
+use anyhow::{Context, Result};
 
 use crate::coarray::{lower_all, RuntimeOptions};
 use crate::mpi_t::{
@@ -34,11 +34,15 @@ struct TuningHooks {
 impl PmpiHooks for TuningHooks {
     fn before_init(&mut self, session: &mut Session) {
         // AITuning_setControlVariables (Listing 1): before PMPI_Init.
+        // The hook signature returns (), mirroring the C shim; a cvar
+        // set that fails before init is an unrecoverable config error.
+        // detlint: allow(R4) -- PmpiHooks returns (); config failure here cannot be propagated
         session.set_all_cvars(&self.install).expect("cvars set before init");
     }
 
     fn after_init(&mut self, session: &mut Session) {
         // AITuning_setPerformanceVariables: sessions/handles after init.
+        // detlint: allow(R4) -- PmpiHooks returns (); session creation failure here cannot be propagated
         session.create_pvar_session().expect("pvar session after init");
     }
 
@@ -115,7 +119,7 @@ pub fn run_episode(
         raw
     };
 
-    let pvars = hooks.finalized.expect("finalize populated stats");
+    let pvars = hooks.finalized.context("finalize populated stats")?;
     Ok(EpisodeResult {
         total_time_us: raw.total_time_us,
         eager_fraction: raw.eager_fraction(),
@@ -125,6 +129,7 @@ pub fn run_episode(
 }
 
 #[cfg(test)]
+#[allow(clippy::unwrap_used)] // tests panic by design
 mod tests {
     use super::*;
     use crate::mpi_t::PvarId;

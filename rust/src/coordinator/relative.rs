@@ -20,6 +20,10 @@ use crate::mpi_t::{PvarId, PvarStats, TOTAL_TIME_PVAR};
 pub struct RelativeTracker {
     backend: BackendId,
     /// pvar id -> (reference mean, reference max)
+    ///
+    /// Audited lookup-only (detlint R1): probed with `get`, mutated
+    /// with `insert`/`clear` — never iterated, so hash order cannot
+    /// reach state vectors or fingerprints.
     reference: HashMap<PvarId, (f64, f64)>,
 }
 
@@ -84,6 +88,7 @@ impl RelativeTracker {
 }
 
 #[cfg(test)]
+#[allow(clippy::unwrap_used)] // tests panic by design
 mod tests {
     use super::*;
     use crate::metrics::stats::Summary;

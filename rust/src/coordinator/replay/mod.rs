@@ -104,7 +104,11 @@ impl ReplayPolicyKind {
 
     /// Dense index in [`ReplayPolicyKind::ALL`] (digest/fingerprint key).
     pub fn ordinal(self) -> usize {
-        Self::ALL.iter().position(|&k| k == self).expect("listed in ALL")
+        match self {
+            ReplayPolicyKind::Uniform => 0,
+            ReplayPolicyKind::Stratified => 1,
+            ReplayPolicyKind::Prioritized => 2,
+        }
     }
 
     pub fn parse(s: &str) -> Option<ReplayPolicyKind> {
@@ -137,30 +141,62 @@ impl std::fmt::Display for ReplayPolicyKind {
 /// 3. **Newest-push survival** — `push` never evicts the transition it
 ///    is inserting, and `latest()` always returns it.
 pub trait ReplayPolicy {
+    /// Which policy this store implements.
+    ///
+    /// Determinism: constant for the lifetime of the store.
     fn kind(&self) -> ReplayPolicyKind;
+    /// Maximum resident transitions (stratified stores may round quotas).
+    ///
+    /// Determinism: constant for the lifetime of the store.
     fn capacity(&self) -> usize;
     /// Admit a transition, evicting per the policy's retention rule.
+    ///
+    /// Determinism: the resulting resident set and canonical order are
+    /// a pure function of the push sequence — no clocks, no ambient
+    /// randomness, no address-dependent (hash) ordering.
     fn push(&mut self, t: Transition);
     /// Resident transition count.
+    ///
+    /// Determinism: pure function of the push sequence.
     fn len(&self) -> usize;
+    /// Whether no transitions are resident.
+    ///
+    /// Determinism: pure function of the push sequence (via `len`).
     fn is_empty(&self) -> bool {
         self.len() == 0
     }
     /// Resident transition at position `i` of the canonical order.
+    ///
+    /// Determinism: the canonical order is a pure function of the push
+    /// sequence; `get(i)` never depends on hash iteration order.
     fn get(&self, i: usize) -> &Transition;
     /// Most recently pushed transition.
+    ///
+    /// Determinism: always the final push (newest-push survival), a
+    /// pure function of the push sequence.
     fn latest(&self) -> Option<&Transition>;
     /// Proportional selection weight of position `i` (> 0).
+    ///
+    /// Determinism: pure function of the resident transition at `i` and
+    /// the feedback that slot has received — identical histories price
+    /// identically on every host.
     fn weight(&self, _i: usize) -> f64 {
         1.0
     }
     /// Whether `weight` is non-constant (selects the weighted-draw path).
+    ///
+    /// Determinism: constant per policy; uniform policies return false
+    /// so selection takes the without-replacement subset path.
     fn weighted(&self) -> bool {
         false
     }
     /// Deliver a realized training priority (|TD error|) for the
     /// resident transition at canonical position `i`. Policies without
     /// priority state ignore it.
+    ///
+    /// Determinism: state after feedback is a pure function of the
+    /// interleaved push/feedback sequence; feedback arrives only from
+    /// each controller's own deterministic training loop.
     fn feedback(&mut self, _i: usize, _priority: f64) {}
 }
 
@@ -526,10 +562,11 @@ impl LocalReplay {
     /// priority updates stay in lockstep.
     fn locate(&self, i: usize) -> (&ReplayBuffer, usize) {
         let visible_base = self.visible_base();
-        if i < visible_base {
-            (self.base.as_ref().expect("visible_base > 0 implies base"), self.skip() + i)
-        } else {
-            (&self.tail, i - visible_base)
+        match self.base.as_deref() {
+            // `visible_base` can only be nonzero when a base is adopted,
+            // so positions below it always resolve inside `base`.
+            Some(base) if i < visible_base => (base, self.skip() + i),
+            _ => (&self.tail, i - visible_base),
         }
     }
 
@@ -603,6 +640,7 @@ pub(crate) fn test_transition(reward: f32, workload: Option<WorkloadKind>) -> Tr
 }
 
 #[cfg(test)]
+#[allow(clippy::unwrap_used)] // tests panic by design
 mod tests {
     use super::*;
 

@@ -74,11 +74,14 @@ impl ReplayPolicy for StratifiedRing {
             }
         }
         let quota = self.quota();
-        let ring = self.strata.get_mut(&stratum).expect("stratum present after entry check");
-        while ring.len() >= quota {
-            ring.pop_front();
+        // The entry check above guarantees the stratum exists; written
+        // as `if let` so a logic regression cannot panic the learner.
+        if let Some(ring) = self.strata.get_mut(&stratum) {
+            while ring.len() >= quota {
+                ring.pop_front();
+            }
+            ring.push_back(t);
         }
-        ring.push_back(t);
         self.last = Some(stratum);
     }
 
@@ -104,6 +107,7 @@ impl ReplayPolicy for StratifiedRing {
 }
 
 #[cfg(test)]
+#[allow(clippy::unwrap_used)] // tests panic by design
 mod tests {
     use super::super::test_transition;
     use super::*;

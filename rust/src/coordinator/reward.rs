@@ -20,6 +20,7 @@ pub fn is_penalized(reference_us: f64, total_us: f64) -> bool {
 }
 
 #[cfg(test)]
+#[allow(clippy::unwrap_used)] // tests panic by design
 mod tests {
     use super::*;
 

@@ -1,12 +1,12 @@
 //! Tabular Q-learning fallback: discretizes the state vector and keeps
-//! Q in a hash table — the paper's §3.1 "just keeping track of the
+//! Q in a table — the paper's §3.1 "just keeping track of the
 //! Q-values of all the visited states in a table". Used for tests that
 //! must not depend on the AOT artifacts, and as the DQN-vs-tabular
 //! ablation. Dimension-generic: the action count arrives at
 //! construction (the backend's derived action space) and the state
 //! width is whatever the batch rows carry.
 
-use std::collections::HashMap;
+use std::collections::BTreeMap;
 
 use anyhow::Result;
 
@@ -17,7 +17,9 @@ use super::hub::{AgentState, HubView};
 
 /// Discretized-state Q-table agent.
 pub struct TabularAgent {
-    q: HashMap<u64, Vec<f32>>,
+    /// BTreeMap so any iteration (snapshots, future diagnostics) is in
+    /// cell-key order by construction, never hash order.
+    q: BTreeMap<u64, Vec<f32>>,
     /// Action-space width (row length of every table entry).
     num_actions: usize,
     /// Per-feature quantization buckets.
@@ -32,7 +34,7 @@ impl TabularAgent {
     pub fn new(num_actions: usize) -> TabularAgent {
         assert!(num_actions > 0);
         TabularAgent {
-            q: HashMap::new(),
+            q: BTreeMap::new(),
             num_actions,
             buckets: 8.0,
             alpha: 0.25,
@@ -114,11 +116,11 @@ impl Agent for TabularAgent {
     }
 
     fn snapshot(&self) -> Result<AgentState> {
-        // Sorted by cell key: the hub's Table invariant (HashMap
-        // iteration order must never leak into merge inputs).
-        let mut entries: Vec<(u64, Vec<f32>)> =
+        // The hub's Table invariant: entries sorted by cell key. The
+        // BTreeMap iterates in key order already, so the snapshot is
+        // canonical by construction.
+        let entries: Vec<(u64, Vec<f32>)> =
             self.q.iter().map(|(&k, v)| (k, v.clone())).collect();
-        entries.sort_unstable_by_key(|&(k, _)| k);
         Ok(AgentState::Table(entries))
     }
 
@@ -137,6 +139,7 @@ impl Agent for TabularAgent {
 }
 
 #[cfg(test)]
+#[allow(clippy::unwrap_used)] // tests panic by design
 mod tests {
     use super::*;
     use crate::backend::coarrays::{NUM_ACTIONS, STATE_DIM};

@@ -281,7 +281,7 @@ fn cmd_campaign(args: &Args) -> Result<()> {
         let independent = engine.run(&jobs)?;
         let shared = engine.run_shared(&jobs)?;
         ablation_table(&independent, &shared).print();
-        let hub = shared.hub.expect("shared report carries hub state");
+        let hub = shared.hub.context("shared report carries hub state")?;
         println!(
             "\ngeomean speedup: independent {:.3}x vs shared {:.3}x (sync cadence: {} runs)",
             independent.geomean_speedup(),

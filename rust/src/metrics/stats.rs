@@ -49,7 +49,7 @@ impl Summary {
         Summary {
             count: values.len(),
             mean,
-            max: *sorted.last().unwrap(),
+            max: sorted[sorted.len() - 1],
             min: sorted[0],
             median,
             std: var.sqrt(),
@@ -83,6 +83,7 @@ pub fn geomean(values: &[f64]) -> f64 {
 }
 
 #[cfg(test)]
+#[allow(clippy::unwrap_used)] // tests panic by design
 mod tests {
     use super::*;
 

@@ -123,6 +123,7 @@ impl CollectionCreator for CollectivesCollectionCreator {
 }
 
 #[cfg(test)]
+#[allow(clippy::unwrap_used)] // tests panic by design
 mod tests {
     use super::*;
 

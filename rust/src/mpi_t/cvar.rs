@@ -320,6 +320,7 @@ impl fmt::Display for CvarSet {
 }
 
 #[cfg(test)]
+#[allow(clippy::unwrap_used)] // tests panic by design
 mod tests {
     use super::*;
 

@@ -98,6 +98,7 @@ impl<'h> PmpiLayer<'h> {
 }
 
 #[cfg(test)]
+#[allow(clippy::unwrap_used)] // tests panic by design
 mod tests {
     use super::*;
     use crate::mpi_t::cvar::CvarId;

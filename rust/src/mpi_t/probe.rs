@@ -77,6 +77,7 @@ impl Probe {
 }
 
 #[cfg(test)]
+#[allow(clippy::unwrap_used)] // tests panic by design
 mod tests {
     use super::*;
     use crate::mpi_t::pvar::MPICH_PVARS;

@@ -116,6 +116,7 @@ pub fn cvar_id(name: &str) -> Option<CvarId> {
 }
 
 #[cfg(test)]
+#[allow(clippy::unwrap_used)] // tests panic by design
 mod tests {
     use super::*;
 

@@ -153,6 +153,7 @@ impl PvarSessionHandle {
 }
 
 #[cfg(test)]
+#[allow(clippy::unwrap_used)] // tests panic by design
 mod tests {
     use super::*;
     use crate::mpi_t::pvar::MPICH_PVARS;

@@ -124,7 +124,7 @@ impl AotQNet {
     }
 
     /// Ensure the device-literal cache is populated.
-    fn ensure_cache(&mut self) -> Result<&CachedLiterals> {
+    fn ensure_cache(&mut self) -> Result<()> {
         if self.cached.is_none() {
             self.cached = Some(CachedLiterals {
                 params: self.params.to_literals()?,
@@ -132,7 +132,13 @@ impl AotQNet {
                 v: self.opt.v.to_literals()?,
             });
         }
-        Ok(self.cached.as_ref().unwrap())
+        Ok(())
+    }
+
+    /// The populated device-literal cache (call [`AotQNet::ensure_cache`]
+    /// first; split so callers can hold `&self` borrows of the cache).
+    fn cache(&self) -> Result<&CachedLiterals> {
+        self.cached.as_ref().context("device-literal cache not populated")
     }
 
     /// Q(s, ·) for a single state.
@@ -145,7 +151,7 @@ impl AotQNet {
         );
         let state_lit = literal_f32_2d(state, 1, self.state_dim)?;
         self.ensure_cache()?;
-        let cache = self.cached.as_ref().unwrap();
+        let cache = self.cache()?;
         let mut inputs: Vec<&xla::Literal> = cache.params.iter().collect();
         inputs.push(&state_lit);
         let out = self.forward_1.run_refs(&inputs)?;
@@ -170,7 +176,7 @@ impl AotQNet {
         );
         let states_lit = literal_f32_2d(states, self.replay_batch, self.state_dim)?;
         self.ensure_cache()?;
-        let cache = self.cached.as_ref().unwrap();
+        let cache = self.cache()?;
         let mut inputs: Vec<&xla::Literal> = cache.params.iter().collect();
         inputs.push(&states_lit);
         let out = self.forward_b.run_refs(&inputs)?;
@@ -193,7 +199,7 @@ impl AotQNet {
             literal_f32_scalar(gamma),
         ];
         self.ensure_cache()?;
-        let cache = self.cached.as_ref().unwrap();
+        let cache = self.cache()?;
         let mut inputs: Vec<&xla::Literal> = Vec::with_capacity(26);
         inputs.extend(cache.params.iter());
         inputs.extend(cache.m.iter());
@@ -245,7 +251,10 @@ impl AotQNet {
         }
         let b = self.replay_batch;
 
-        let target_lits = self.target_params.as_ref().unwrap().to_literals()?;
+        let target_lits = match self.target_params.as_ref() {
+            Some(target) => target.to_literals()?,
+            None => anyhow::bail!("target network not initialized"),
+        };
         let step_lit = literal_f32_scalar(self.opt.step);
         let batch_lits = [
             literal_f32_2d(&batch.states, b, self.state_dim)?,
@@ -257,8 +266,11 @@ impl AotQNet {
             literal_f32_scalar(gamma),
         ];
         self.ensure_cache()?;
-        let cache = self.cached.as_ref().unwrap();
-        let exe = self.train_target.as_ref().unwrap();
+        let cache = self.cache()?;
+        let exe = self
+            .train_target
+            .as_ref()
+            .context("q_train_target artifact not built")?;
         let mut inputs: Vec<&xla::Literal> = Vec::with_capacity(32);
         inputs.extend(cache.params.iter());
         inputs.extend(target_lits.iter());

@@ -58,6 +58,7 @@ pub fn adam_step(
 }
 
 #[cfg(test)]
+#[allow(clippy::unwrap_used)] // tests panic by design
 mod tests {
     use super::*;
 

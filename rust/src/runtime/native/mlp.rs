@@ -110,6 +110,7 @@ pub(super) fn dense_backward(
 }
 
 #[cfg(test)]
+#[allow(clippy::unwrap_used)] // tests panic by design
 mod tests {
     use super::*;
 

@@ -37,7 +37,7 @@ mod mlp;
 
 pub use adam::{adam_step, ADAM_BETA1, ADAM_BETA2, ADAM_EPS};
 
-use anyhow::Result;
+use anyhow::{Context, Result};
 
 use crate::runtime::params::layer_dims;
 use crate::runtime::{AdamState, LossRing, QParams, TrainBatch, TrainOutcome};
@@ -152,7 +152,7 @@ impl NativeQNet {
             batch,
             self.state_dim
         );
-        Ok(self.forward_acts(states, batch).pop().expect("at least one layer"))
+        self.forward_acts(states, batch).pop().context("forward produced no activations")
     }
 
     /// Q(s, ·) for a single state.
@@ -181,7 +181,7 @@ impl NativeQNet {
     /// touches no network state.
     pub fn train_grads(&self, batch: &TrainBatch, gamma: f32) -> Result<(QParams, f32, Vec<f32>)> {
         let (grads, loss, td) = self.per_sample_grads(batch, gamma, true)?;
-        Ok((grads.expect("gradients requested"), loss, td))
+        Ok((grads.context("gradients requested but not produced")?, loss, td))
     }
 
     /// One Q-learning update: compute gradients, apply one [`adam_step`]
@@ -216,7 +216,7 @@ impl NativeQNet {
         let a = self.num_actions;
 
         let acts = self.forward_acts(&batch.states, b);
-        let q = acts.last().expect("output layer");
+        let q = acts.last().context("forward produced no activations")?;
         let q_next = self.q_values_batch(&batch.next_states, b)?;
 
         // Per-sample targets, residuals and dL/dq rows.
@@ -274,6 +274,7 @@ impl NativeQNet {
 }
 
 #[cfg(test)]
+#[allow(clippy::unwrap_used)] // tests panic by design
 mod tests {
     use super::*;
     use crate::coordinator::one_hot;

@@ -229,6 +229,7 @@ pub fn average_adam(states: &[&AdamState]) -> Result<AdamState> {
 }
 
 #[cfg(test)]
+#[allow(clippy::unwrap_used)] // tests panic by design
 mod tests {
     use super::*;
 

@@ -317,6 +317,7 @@ pub fn argmax(xs: &[f32]) -> usize {
 }
 
 #[cfg(test)]
+#[allow(clippy::unwrap_used)] // tests panic by design
 mod tests {
     use super::*;
 

@@ -220,6 +220,7 @@ pub fn broadcast_us(cfg: &SimConfig, p: usize, bytes: u64) -> f64 {
 }
 
 #[cfg(test)]
+#[allow(clippy::unwrap_used)] // tests panic by design
 mod tests {
     use super::*;
     use crate::mpi_t::{CvarId, CvarSet};

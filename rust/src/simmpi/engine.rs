@@ -7,7 +7,7 @@
 //! model — see [`super::polling`].
 
 use std::cmp::Reverse;
-use std::collections::{BinaryHeap, HashMap};
+use std::collections::{BTreeMap, BinaryHeap};
 
 use super::collective;
 use super::config::SimConfig;
@@ -93,7 +93,8 @@ pub struct Engine {
     collective: EpochState,
     /// Team-scoped rendezvous states, keyed by team id (Fortran 2018
     /// teams: OpenCoarrays ships a partial implementation, §4.2).
-    teams: HashMap<u32, EpochState>,
+    /// BTreeMap keeps any future enumeration of teams in key order.
+    teams: BTreeMap<u32, EpochState>,
     rng: Rng,
     /// Per-image NIC send/receive availability: bulk transfers
     /// serialize among sends at the origin and among receives at the
@@ -134,7 +135,7 @@ impl Engine {
             clock: 0.0,
             barrier: EpochState::default(),
             collective: EpochState::default(),
-            teams: HashMap::new(),
+            teams: BTreeMap::new(),
             rng,
             nic_tx_us,
             nic_rx_us,
@@ -436,14 +437,14 @@ impl Engine {
         }
         // Batch per destination: one combined message per target (the
         // piggybacking win: one overhead + one lock for many small ops).
-        let mut by_dst: std::collections::HashMap<usize, u64> = std::collections::HashMap::new();
+        // BTreeMap so the issue order below is destination order by
+        // construction — never hash order.
+        let mut by_dst: std::collections::BTreeMap<usize, u64> = std::collections::BTreeMap::new();
         for (t, b) in mine {
             *by_dst.entry(t).or_insert(0) += b;
         }
         let mut cursor = now;
-        let mut dsts: Vec<_> = by_dst.into_iter().collect();
-        dsts.sort_unstable();
-        for (dst, bytes) in dsts {
+        for (dst, bytes) in by_dst {
             cursor = self.issue_put(origin, dst, bytes, cursor);
         }
         cursor
@@ -625,7 +626,13 @@ impl Engine {
     }
 
     fn team_done(&mut self, t: f64, team: u32) {
-        let state = self.teams.get_mut(&team).expect("unknown team epoch");
+        // A TeamDone event is only ever scheduled by team_arrive, which
+        // inserts the epoch state first; an unknown team would be a
+        // scheduling bug, caught in debug builds.
+        let Some(state) = self.teams.get_mut(&team) else {
+            debug_assert!(false, "TeamDone for unknown team {team}");
+            return;
+        };
         let participants = std::mem::take(&mut state.participants);
         state.arrived = 0;
         state.last_arrival_us = 0.0;
@@ -651,6 +658,7 @@ impl Engine {
 }
 
 #[cfg(test)]
+#[allow(clippy::unwrap_used)] // tests panic by design
 mod tests {
     use super::*;
     use crate::mpi_t::{CvarId, CvarSet};

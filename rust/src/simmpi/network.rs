@@ -24,6 +24,7 @@ pub fn memcpy_us(cfg: &SimConfig, bytes: u64) -> f64 {
 }
 
 #[cfg(test)]
+#[allow(clippy::unwrap_used)] // tests panic by design
 mod tests {
     use super::*;
     use crate::mpi_t::CvarSet;

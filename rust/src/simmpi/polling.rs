@@ -68,6 +68,7 @@ pub fn compute_tax_factor(cfg: &SimConfig) -> f64 {
 }
 
 #[cfg(test)]
+#[allow(clippy::unwrap_used)] // tests panic by design
 mod tests {
     use super::*;
     use crate::mpi_t::{CvarId, CvarSet};

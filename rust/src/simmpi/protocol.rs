@@ -78,6 +78,7 @@ pub fn rendezvous_data_us(cfg: &SimConfig, bytes: u64) -> f64 {
 }
 
 #[cfg(test)]
+#[allow(clippy::unwrap_used)] // tests panic by design
 mod tests {
     use super::*;
     use crate::mpi_t::{CvarId, CvarSet};

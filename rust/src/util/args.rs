@@ -22,12 +22,7 @@ impl Args {
             if let Some(key) = arg.strip_prefix("--") {
                 if let Some((k, v)) = key.split_once('=') {
                     out.options.insert(k.to_string(), v.to_string());
-                } else if iter
-                    .peek()
-                    .map(|n| !n.starts_with("--"))
-                    .unwrap_or(false)
-                {
-                    let v = iter.next().unwrap();
+                } else if let Some(v) = iter.next_if(|n| !n.starts_with("--")) {
                     out.options.insert(key.to_string(), v);
                 } else {
                     out.flags.push(key.to_string());
@@ -84,6 +79,7 @@ impl Args {
 }
 
 #[cfg(test)]
+#[allow(clippy::unwrap_used)] // tests panic by design
 mod tests {
     use super::*;
 

@@ -96,6 +96,7 @@ pub fn opaque<T>(x: T) -> T {
 }
 
 #[cfg(test)]
+#[allow(clippy::unwrap_used)] // tests panic by design
 mod tests {
     use super::*;
 

@@ -356,6 +356,7 @@ pub fn arr<I: IntoIterator<Item = Json>>(items: I) -> Json {
 }
 
 #[cfg(test)]
+#[allow(clippy::unwrap_used)] // tests panic by design
 mod tests {
     use super::*;
 

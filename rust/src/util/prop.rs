@@ -39,6 +39,7 @@ macro_rules! prop_assert {
 }
 
 #[cfg(test)]
+#[allow(clippy::unwrap_used)] // tests panic by design
 mod tests {
     use super::*;
 

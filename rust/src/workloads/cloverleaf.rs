@@ -94,6 +94,7 @@ impl Workload for CloverLeaf {
 }
 
 #[cfg(test)]
+#[allow(clippy::unwrap_used)] // tests panic by design
 mod tests {
     use super::*;
     use crate::coarray::{lower_all, RuntimeOptions};

@@ -124,6 +124,7 @@ impl Workload for Icar {
 }
 
 #[cfg(test)]
+#[allow(clippy::unwrap_used)] // tests panic by design
 mod tests {
     use super::*;
     use crate::coarray::{lower_all, RuntimeOptions};

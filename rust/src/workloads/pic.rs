@@ -86,6 +86,7 @@ impl Workload for SkeletonPic {
 }
 
 #[cfg(test)]
+#[allow(clippy::unwrap_used)] // tests panic by design
 mod tests {
     use super::*;
     use crate::coarray::{lower_all, RuntimeOptions};

@@ -72,6 +72,7 @@ impl Workload for Stencil {
 }
 
 #[cfg(test)]
+#[allow(clippy::unwrap_used)] // tests panic by design
 mod tests {
     use super::*;
     use crate::coarray::{lower_all, RuntimeOptions};

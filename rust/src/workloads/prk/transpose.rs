@@ -64,6 +64,7 @@ impl Workload for Transpose {
 }
 
 #[cfg(test)]
+#[allow(clippy::unwrap_used)] // tests panic by design
 mod tests {
     use super::*;
     use crate::coarray::{lower_all, RuntimeOptions};

@@ -66,10 +66,16 @@ impl WorkloadKind {
     /// Dense index of this kind in [`WorkloadKind::ALL`] — the slot key
     /// for per-workload occupancy arrays and replay digests.
     pub fn ordinal(self) -> usize {
-        WorkloadKind::ALL
-            .iter()
-            .position(|&k| k == self)
-            .expect("every WorkloadKind is listed in ALL")
+        match self {
+            WorkloadKind::Icar => 0,
+            WorkloadKind::CloverLeaf => 1,
+            WorkloadKind::LatticeBoltzmann => 2,
+            WorkloadKind::SkeletonPic => 3,
+            WorkloadKind::PrkStencil => 4,
+            WorkloadKind::PrkTranspose => 5,
+            WorkloadKind::PrkP2p => 6,
+            WorkloadKind::PrkCollectives => 7,
+        }
     }
 
     pub fn parse(s: &str) -> Option<WorkloadKind> {
@@ -129,6 +135,7 @@ impl WorkloadSpec {
 }
 
 #[cfg(test)]
+#[allow(clippy::unwrap_used)] // tests panic by design
 mod tests {
     use super::*;
 

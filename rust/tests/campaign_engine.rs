@@ -1,3 +1,4 @@
+#![allow(clippy::unwrap_used)] // test/bench code panics by design
 //! Campaign-engine integration tests: thread-count invariance (the
 //! engine's core contract), episode-cache correctness, and report
 //! consistency — all against the real simulator with the tabular agent.

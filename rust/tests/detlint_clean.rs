@@ -1,0 +1,35 @@
+//! The live repository passes its own determinism lint.
+//!
+//! This is the tier-1 wiring for `tools/detlint`: `cargo test` fails
+//! the moment a hash-ordered iteration, an f32 accumulation, a
+//! wall-clock read, a bare `.unwrap()`, or an undocumented trait
+//! method lands in library code (docs/determinism.md catalogues the
+//! rules). CI also runs the binary directly for file:line output, but
+//! this test makes the check inseparable from the ordinary test run.
+
+use std::path::Path;
+
+#[test]
+fn repository_is_detlint_clean() {
+    let root = Path::new(env!("CARGO_MANIFEST_DIR"));
+    let diags = match detlint::scan_repo(root) {
+        Ok(diags) => diags,
+        Err(e) => panic!("detlint walk failed from {}: {e}", root.display()),
+    };
+    if !diags.is_empty() {
+        let mut report = String::new();
+        for d in &diags {
+            report.push_str(&format!("  {d}\n"));
+        }
+        for (rule, n) in detlint::rule_counts(&diags) {
+            if n > 0 {
+                report.push_str(&format!("  {rule}: {n} ({})\n", rule.describe()));
+            }
+        }
+        panic!(
+            "{n} detlint finding(s) — fix them or add \
+             `// detlint: allow(<rule>) -- <reason>`:\n{report}",
+            n = diags.len()
+        );
+    }
+}

@@ -1,0 +1,281 @@
+//! Self-consistent performance-guideline verification over the
+//! `simmpi::collective` cost models.
+//!
+//! Hunold & Carpen-Amarie (arXiv:1707.09965) verify MPI libraries
+//! against *self-consistent performance guidelines* in the tradition of
+//! Träff et al.: a specialized collective must not lose to its own
+//! emulation from other collectives, and costs must respond sanely to
+//! message size and process count. The collectives backend trains an
+//! agent over exactly these cost functions, so the same guidelines
+//! double as a regression fence for the model landscape the agent
+//! sees: if a guideline breaks, the tuning problem silently changes
+//! shape (e.g. one algorithm starts dominating everywhere and the
+//! "selection" becomes vacuous).
+//!
+//! Guidelines checked:
+//!
+//! * **G1 (monotonicity in n)** — every algorithm's cost is
+//!   non-decreasing in message size.
+//! * **G2 (monotonicity in p)** — every algorithm's cost is
+//!   non-decreasing in process count (configs rebuilt per p so fabric
+//!   contention scales with the job).
+//! * **G3 (Bcast ≤ Scatter + Allgather)** — the best broadcast never
+//!   loses to the scatter+allgather emulation, at any size.
+//! * **G4 (Allreduce ≤ Reduce + Bcast)** — the best allreduce never
+//!   loses to a reduce+broadcast emulation over binomial trees.
+//! * **G5 (split-robustness)** — one Bcast(n) is no worse than k
+//!   back-to-back Bcast(n/k) calls.
+//! * **G6 (no dominant algorithm)** — the argmin algorithm differs
+//!   across the (size, scale) grid for both bcast and allreduce; the
+//!   selection problem the backend tunes is non-degenerate.
+//! * **G7 (Barrier ≤ small Allreduce)** — synchronizing is never
+//!   dearer than reducing a value.
+
+use aituning::mpi_t::CvarSet;
+use aituning::simmpi::collective::{
+    allreduce_alg_us, allreduce_recursive_doubling_us, barrier_us, bcast_alg_us,
+    bcast_binomial_us, bcast_scatter_allgather_us, AllreduceAlgorithm, BcastAlgorithm,
+};
+use aituning::simmpi::{Machine, SimConfig};
+
+const BCAST_ALGS: [BcastAlgorithm; 3] = [
+    BcastAlgorithm::Binomial,
+    BcastAlgorithm::ScatterAllgather,
+    BcastAlgorithm::ScatterRingAllgather,
+];
+
+const ALLREDUCE_ALGS: [AllreduceAlgorithm; 2] =
+    [AllreduceAlgorithm::RecursiveDoubling, AllreduceAlgorithm::Ring];
+
+/// Message-size ladder (64 B to 4 MiB), odd sizes included so segment
+/// rounding paths are exercised.
+const SIZES: [u64; 8] = [64, 1024, 4096, 65_536, 262_144, 1_048_576, 3_000_001, 4_194_304];
+
+/// Process-count ladder; powers of two and one ragged count.
+const SCALES: [usize; 5] = [16, 64, 100, 512, 1024];
+
+fn cfg(images: usize) -> SimConfig {
+    SimConfig::new(Machine::cheyenne(), CvarSet::vanilla(), images)
+}
+
+/// Best achievable broadcast time over all algorithms, unsegmented.
+fn best_bcast(c: &SimConfig, p: usize, bytes: u64, smp: bool) -> f64 {
+    BCAST_ALGS
+        .iter()
+        .map(|&a| bcast_alg_us(c, p, bytes, a, u64::MAX, smp))
+        .fold(f64::INFINITY, f64::min)
+}
+
+fn best_allreduce(c: &SimConfig, p: usize, bytes: u64, smp: bool) -> f64 {
+    ALLREDUCE_ALGS
+        .iter()
+        .map(|&a| allreduce_alg_us(c, p, bytes, a, smp))
+        .fold(f64::INFINITY, f64::min)
+}
+
+#[test]
+fn g1_bcast_cost_monotone_in_message_size() {
+    for &p in &SCALES {
+        let c = cfg(p);
+        for &alg in &BCAST_ALGS {
+            for smp in [false, true] {
+                let mut prev = 0.0_f64;
+                for &bytes in &SIZES {
+                    let t = bcast_alg_us(&c, p, bytes, alg, u64::MAX, smp);
+                    assert!(t.is_finite() && t > 0.0, "{alg:?} p={p} n={bytes}: t={t}");
+                    assert!(
+                        t >= prev,
+                        "{alg:?} p={p} smp={smp}: cost fell {prev} -> {t} at n={bytes}"
+                    );
+                    prev = t;
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn g1_allreduce_cost_monotone_in_message_size() {
+    for &p in &SCALES {
+        let c = cfg(p);
+        for &alg in &ALLREDUCE_ALGS {
+            for smp in [false, true] {
+                let mut prev = 0.0_f64;
+                for &bytes in &SIZES {
+                    let t = allreduce_alg_us(&c, p, bytes, alg, smp);
+                    assert!(t.is_finite() && t > 0.0, "{alg:?} p={p} n={bytes}: t={t}");
+                    assert!(
+                        t >= prev,
+                        "{alg:?} p={p} smp={smp}: cost fell {prev} -> {t} at n={bytes}"
+                    );
+                    prev = t;
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn g1_segmented_bcast_monotone_in_message_size() {
+    // The pipelined path has its own rounding arithmetic; walk it too.
+    let c = cfg(256);
+    for segment in [4096_u64, 65_536] {
+        let mut prev = 0.0_f64;
+        for &bytes in &SIZES {
+            let t = bcast_binomial_us(&c, 256, bytes, segment);
+            assert!(t >= prev, "segment={segment}: cost fell {prev} -> {t} at n={bytes}");
+            prev = t;
+        }
+    }
+}
+
+#[test]
+fn g2_costs_monotone_in_process_count() {
+    // Rebuild the config at every scale so contention tracks job size,
+    // exactly as the backend's episodes see it.
+    for &bytes in &[4096_u64, 1_048_576] {
+        for &alg in &BCAST_ALGS {
+            let mut prev = 0.0_f64;
+            for &p in &SCALES {
+                let t = bcast_alg_us(&cfg(p), p, bytes, alg, u64::MAX, false);
+                assert!(t >= prev, "{alg:?} n={bytes}: cost fell {prev} -> {t} at p={p}");
+                prev = t;
+            }
+        }
+        for &alg in &ALLREDUCE_ALGS {
+            let mut prev = 0.0_f64;
+            for &p in &SCALES {
+                let t = allreduce_alg_us(&cfg(p), p, bytes, alg, false);
+                assert!(t >= prev, "{alg:?} n={bytes}: cost fell {prev} -> {t} at p={p}");
+                prev = t;
+            }
+        }
+    }
+    let mut prev = 0.0_f64;
+    for &p in &SCALES {
+        let t = barrier_us(&cfg(p), p);
+        assert!(t >= prev, "barrier: cost fell {prev} -> {t} at p={p}");
+        prev = t;
+    }
+}
+
+#[test]
+fn g3_bcast_never_loses_to_scatter_allgather_emulation() {
+    for &p in &SCALES {
+        let c = cfg(p);
+        for &bytes in &SIZES {
+            let best = best_bcast(&c, p, bytes, false);
+            let emulation = bcast_scatter_allgather_us(&c, p, bytes, false);
+            assert!(
+                best <= emulation,
+                "p={p} n={bytes}: best bcast {best} > scatter+allgather {emulation}"
+            );
+        }
+    }
+}
+
+#[test]
+fn g4_allreduce_never_loses_to_reduce_plus_bcast_emulation() {
+    // A binomial-tree reduce costs the same round structure as a
+    // binomial broadcast, so reduce-then-broadcast emulation is
+    // 2 × bcast_binomial (unsegmented). Recursive doubling matches it
+    // round for round, so the best allreduce can never lose to it.
+    for &p in &SCALES {
+        let c = cfg(p);
+        for &bytes in &SIZES {
+            let best = best_allreduce(&c, p, bytes, false);
+            let emulation = 2.0 * bcast_binomial_us(&c, p, bytes, u64::MAX);
+            assert!(
+                best <= emulation + 1e-9,
+                "p={p} n={bytes}: best allreduce {best} > reduce+bcast {emulation}"
+            );
+        }
+    }
+}
+
+#[test]
+fn g5_one_bcast_beats_k_split_bcasts() {
+    // Split-robustness: broadcasting n bytes at once is no worse than
+    // k broadcasts of n/k — per-call latency and service time are paid
+    // once, not k times.
+    for &p in &[64_usize, 512] {
+        let c = cfg(p);
+        for &bytes in &[65_536_u64, 1_048_576] {
+            for k in [2_u64, 4, 16] {
+                for &alg in &BCAST_ALGS {
+                    let whole = bcast_alg_us(&c, p, bytes, alg, u64::MAX, false);
+                    let split = k as f64 * bcast_alg_us(&c, p, bytes / k, alg, u64::MAX, false);
+                    assert!(
+                        whole <= split + 1e-9,
+                        "{alg:?} p={p} n={bytes} k={k}: whole {whole} > split {split}"
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn g6_no_algorithm_dominates_the_tuning_grid() {
+    // The backend's selection problem is only meaningful if the argmin
+    // moves across the (size, scale) grid. Collect winners over the
+    // full grid and require at least two distinct winners per family.
+    let mut bcast_winners = [false; BCAST_ALGS.len()];
+    let mut allreduce_winners = [false; ALLREDUCE_ALGS.len()];
+    for &p in &SCALES {
+        let c = cfg(p);
+        for &bytes in &SIZES {
+            let (mut bi, mut bt) = (0, f64::INFINITY);
+            for (i, &a) in BCAST_ALGS.iter().enumerate() {
+                let t = bcast_alg_us(&c, p, bytes, a, u64::MAX, false);
+                if t < bt {
+                    (bi, bt) = (i, t);
+                }
+            }
+            bcast_winners[bi] = true;
+            let (mut ai, mut at) = (0, f64::INFINITY);
+            for (i, &a) in ALLREDUCE_ALGS.iter().enumerate() {
+                let t = allreduce_alg_us(&c, p, bytes, a, false);
+                if t < at {
+                    (ai, at) = (i, t);
+                }
+            }
+            allreduce_winners[ai] = true;
+        }
+    }
+    assert!(
+        bcast_winners.iter().filter(|&&w| w).count() >= 2,
+        "one bcast algorithm dominates the whole grid: {bcast_winners:?}"
+    );
+    assert!(
+        allreduce_winners.iter().filter(|&&w| w).count() >= 2,
+        "one allreduce algorithm dominates the whole grid: {allreduce_winners:?}"
+    );
+}
+
+#[test]
+fn g7_barrier_no_dearer_than_small_allreduce() {
+    // A barrier carries no payload; it must not cost more than
+    // reducing a 64-byte value (which synchronizes as a side effect).
+    for &p in &SCALES {
+        let c = cfg(p);
+        let b = barrier_us(&c, p);
+        let ar = allreduce_recursive_doubling_us(&c, p, 64);
+        assert!(b <= ar, "p={p}: barrier {b} > 64-byte allreduce {ar}");
+    }
+}
+
+#[test]
+fn guideline_costs_are_deterministic() {
+    // Two evaluations of the same point are bit-identical — the cost
+    // models are pure functions (the detlint R3 contract, observed
+    // from outside).
+    let c = cfg(512);
+    for &bytes in &SIZES {
+        for &alg in &BCAST_ALGS {
+            let a = bcast_alg_us(&c, 512, bytes, alg, 4096, true);
+            let b = bcast_alg_us(&cfg(512), 512, bytes, alg, 4096, true);
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+    }
+}

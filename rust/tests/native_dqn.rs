@@ -1,3 +1,4 @@
+#![allow(clippy::unwrap_used)] // test/bench code panics by design
 //! Native DQN engine integration tests: hand-computed golden values
 //! for the MLP math, finite-difference gradient verification, the
 //! `--backend collectives --agent dqn` end-to-end smoke (the seam's

@@ -1,3 +1,4 @@
+#![allow(clippy::unwrap_used)] // test/bench code panics by design
 //! Property-based tests over coordinator and simulator invariants
 //! (in-crate `util::prop` harness; seeds reproduce failures).
 //!

@@ -1,3 +1,4 @@
+#![allow(clippy::unwrap_used)] // test/bench code panics by design
 //! End-to-end runtime test: the AOT artifacts produce the same numbers
 //! through Rust/PJRT that JAX produced at build time (golden.json).
 //!

@@ -1,3 +1,4 @@
+#![allow(clippy::unwrap_used)] // test/bench code panics by design
 //! Shared-learning campaign integration tests: worker-count invariance
 //! of the LearnerHub (the tentpole determinism contract), equivalence
 //! of a 1-job shared campaign with the independent path, hub/replay

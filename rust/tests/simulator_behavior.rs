@@ -1,3 +1,4 @@
+#![allow(clippy::unwrap_used)] // test/bench code panics by design
 //! Integration tests: the simulator's cvar-sensitivity landscape must
 //! have the qualitative shape the paper reports (these are the facts
 //! the RL agent learns from, so they are correctness, not tuning).

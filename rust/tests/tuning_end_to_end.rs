@@ -1,3 +1,4 @@
+#![allow(clippy::unwrap_used)] // test/bench code panics by design
 //! End-to-end tuning tests: the whole §5 loop against the simulated
 //! cluster, with both agents, plus failure-injection on the MPI_T
 //! ordering rules.

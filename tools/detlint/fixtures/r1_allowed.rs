@@ -1,0 +1,18 @@
+// detlint: allow(R1) -- fixture: import kept to exercise suppression
+use std::collections::HashMap;
+
+pub struct Hub {
+    table: HashMap<u64, f64>, // detlint: allow(R1) -- fixture: lookup-only episode cache
+}
+
+pub fn snapshot(hub: &Hub) -> Vec<(u64, f64)> {
+    // detlint: allow(R1) -- fixture: sorted by the next statement before any digest sees it
+    let mut rows: Vec<(u64, f64)> = hub.table.iter().map(|(k, v)| (*k, *v)).collect();
+    rows.sort_unstable_by_key(|r| r.0);
+    rows
+}
+
+pub fn ordered_keys(hub: &Hub) -> Vec<u64> {
+    let sorted: std::collections::BTreeSet<u64> = hub.table.keys().copied().collect();
+    sorted.into_iter().collect()
+}

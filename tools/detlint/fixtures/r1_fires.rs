@@ -1,0 +1,13 @@
+use std::collections::HashMap;
+
+pub struct Hub {
+    table: HashMap<u64, f64>,
+}
+
+pub fn digest(hub: &Hub) -> u64 {
+    let mut acc = 0u64;
+    for (k, v) in hub.table.iter() {
+        acc ^= k.wrapping_add(v.to_bits());
+    }
+    acc
+}

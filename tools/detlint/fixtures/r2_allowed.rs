@@ -1,0 +1,18 @@
+pub fn mean(rows: &[Vec<f32>]) -> f32 {
+    // The legal shape: order-sequenced f64 accumulation, one cast at
+    // the end (the discipline of runtime/params.rs).
+    let mut acc = 0.0f64;
+    for row in rows {
+        for &x in row {
+            acc += x as f64;
+        }
+    }
+    (acc / rows.len() as f64) as f32
+}
+
+pub fn bounded(pair: [f32; 2]) -> f32 {
+    let mut small = 0.0f32;
+    // detlint: allow(R2) -- fixture: two-element sum, order fixed by the array
+    small += pair[0] + pair[1];
+    small
+}

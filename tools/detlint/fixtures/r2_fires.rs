@@ -1,0 +1,11 @@
+pub fn mean(rows: &[Vec<f32>]) -> f32 {
+    let mut acc = 0.0f32;
+    for row in rows {
+        acc += row.iter().sum::<f32>();
+    }
+    let mut count = 0.0f32;
+    for _row in rows {
+        count += 1.0;
+    }
+    acc / count
+}

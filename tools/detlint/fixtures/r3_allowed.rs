@@ -1,0 +1,7 @@
+use std::time::Instant;
+
+pub fn wall_clock() -> f64 {
+    // detlint: allow(R3) -- fixture: reporting-only, never mixed into fingerprint()
+    let t0 = Instant::now();
+    t0.elapsed().as_secs_f64()
+}

@@ -1,0 +1,10 @@
+use std::time::Instant;
+
+pub fn stamp() -> f64 {
+    let t0 = Instant::now();
+    t0.elapsed().as_secs_f64()
+}
+
+pub fn ambient() -> Option<String> {
+    std::env::var("AITUNING_SEED").ok()
+}

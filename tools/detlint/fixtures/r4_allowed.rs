@@ -1,0 +1,11 @@
+pub fn checked(v: Option<u32>) -> u32 {
+    v.expect("fixture: invariant upheld by caller") // detlint: allow(R4) -- fixture: invariant documented at the call site
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn unwrap_is_fine_in_tests() {
+        assert_eq!(super::checked(Some(1)), Some(1).unwrap());
+    }
+}

@@ -1,0 +1,7 @@
+pub fn take(v: Option<u32>) -> u32 {
+    v.unwrap()
+}
+
+pub fn must(v: Option<u32>) -> u32 {
+    v.expect("fixture: must be set")
+}

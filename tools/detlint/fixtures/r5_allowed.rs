@@ -1,0 +1,13 @@
+pub trait ReplayPolicy {
+    /// Determinism: canonical order, stable across workers.
+    fn get(&self, i: usize) -> u64;
+
+    /// Default method bodies are not trait items.
+    /// Determinism: derived from `get`, inherits its contract.
+    fn first(&self) -> u64 {
+        let x = self.get(0);
+        x
+    }
+
+    fn latest(&self) -> Option<u64>; // detlint: allow(R5) -- fixture: contract documented on the blanket impl
+}

@@ -1,0 +1,7 @@
+pub trait TunableRuntime: Sync {
+    /// Determinism: pure function of its arguments.
+    fn id(&self) -> u32;
+
+    /// Runs one episode (no contract documented — fires).
+    fn run_episode(&self, seed: u64) -> f64;
+}

@@ -1,0 +1,992 @@
+//! detlint — determinism & invariant lint for this repository.
+//!
+//! Every result the reproduction claims (1/2/4-worker fingerprint
+//! identity, bit-identical shared learning) rests on invariants that
+//! used to live only in comments: order-sequenced `f64` accumulation,
+//! `BTreeMap`-only merge/digest paths, seeded RNG, no ambient clocks in
+//! anything a fingerprint can reach. detlint turns those comments into
+//! machine-checked rules (see `docs/determinism.md` for the catalogue
+//! and rationale):
+//!
+//! * **R1** — no `HashMap`/`HashSet` in fingerprint/digest/merge
+//!   modules at all; elsewhere, no *iteration* over hash containers
+//!   (`.iter()`, `.values()`, `.keys()`, `.into_iter()`, `.drain()`,
+//!   `for … in`) unless the same statement chain sorts the result.
+//! * **R2** — no `f32` accumulation loops in restricted modules;
+//!   reductions must use the order-sequenced `f64` discipline of
+//!   `runtime/params.rs`.
+//! * **R3** — no wall-clock / ambient nondeterminism (`Instant::now`,
+//!   `SystemTime`, `thread::current`, `std::env`) in restricted
+//!   modules.
+//! * **R4** — no `.unwrap()` / `.expect("…")` in library code under
+//!   `rust/src` (`#[cfg(test)]` regions are exempt).
+//! * **R5** — every `fn` on the `TunableRuntime` / `Agent` /
+//!   `ReplayPolicy` seams documents its determinism contract
+//!   (a doc line containing "Determinism").
+//!
+//! Suppression is per-site and must carry a reason:
+//!
+//! ```text
+//! // detlint: allow(R4) -- invariant: entry inserted two lines up
+//! ```
+//!
+//! A trailing annotation covers its own line; an annotation on a
+//! comment-only line covers the next line that has code. An annotation
+//! without a ` -- reason` is itself a diagnostic (R0).
+//!
+//! The scanner is a comment/string-aware line scanner, not a parser
+//! (`syn` is not in the offline image). Known limits, acceptable for
+//! this codebase: raw byte-strings with embedded quotes are not
+//! handled; `.expect(` only fires when the opening `"` of the message
+//! is on the same line; hash-container tracking is per-file and
+//! name-based. The corresponding fixture corpus lives in
+//! `tools/detlint/fixtures/`.
+
+use std::fmt;
+use std::fs;
+use std::io;
+use std::path::{Path, PathBuf};
+
+/// Lint rules. `BadAllow` (reported as `R0`) marks a malformed
+/// suppression annotation, which must never pass silently.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Rule {
+    BadAllow,
+    R1,
+    R2,
+    R3,
+    R4,
+    R5,
+}
+
+impl Rule {
+    /// The five checked rules, in report order (`BadAllow` is emitted
+    /// by the annotation parser, not checked against code).
+    pub const CHECKS: [Rule; 5] = [Rule::R1, Rule::R2, Rule::R3, Rule::R4, Rule::R5];
+
+    pub fn id(self) -> &'static str {
+        match self {
+            Rule::BadAllow => "R0",
+            Rule::R1 => "R1",
+            Rule::R2 => "R2",
+            Rule::R3 => "R3",
+            Rule::R4 => "R4",
+            Rule::R5 => "R5",
+        }
+    }
+
+    /// One-line description for the summary table.
+    pub fn describe(self) -> &'static str {
+        match self {
+            Rule::BadAllow => "malformed detlint annotation (missing rule or ` -- reason`)",
+            Rule::R1 => "hash-container iteration on a fingerprint/digest/merge path",
+            Rule::R2 => "f32 accumulation in a restricted module (use sequenced f64)",
+            Rule::R3 => "ambient nondeterminism (clock/env/thread-id) in a restricted module",
+            Rule::R4 => "unwrap()/expect() in library code (tests exempt)",
+            Rule::R5 => "seam trait fn without a documented determinism contract",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Rule> {
+        match s.trim() {
+            "R1" => Some(Rule::R1),
+            "R2" => Some(Rule::R2),
+            "R3" => Some(Rule::R3),
+            "R4" => Some(Rule::R4),
+            "R5" => Some(Rule::R5),
+            _ => None,
+        }
+    }
+}
+
+impl fmt::Display for Rule {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.id())
+    }
+}
+
+/// One finding: `path:line: rule: message`.
+#[derive(Debug, Clone)]
+pub struct Diagnostic {
+    pub path: String,
+    /// 1-based line number.
+    pub line: usize,
+    pub rule: Rule,
+    pub message: String,
+}
+
+impl fmt::Display for Diagnostic {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}:{}: {}: {}", self.path, self.line, self.rule, self.message)
+    }
+}
+
+/// A source line split into code (comments stripped, string contents
+/// blanked but their delimiting quotes kept) and comment text.
+#[derive(Debug, Default)]
+struct SrcLine {
+    code: String,
+    comment: String,
+}
+
+impl SrcLine {
+    fn has_code(&self) -> bool {
+        !self.code.trim().is_empty()
+    }
+}
+
+/// Split a file into per-line (code, comment) pairs. String contents
+/// are blanked so patterns inside messages never fire; the delimiting
+/// quotes survive so `.expect("` is still visible. Nested block
+/// comments, char literals (including `b'"'`) and raw strings are
+/// handled; lifetimes are not mistaken for char literals.
+fn preprocess(source: &str) -> Vec<SrcLine> {
+    #[derive(PartialEq)]
+    enum St {
+        Code,
+        LineComment,
+        Block(u32),
+        Str,
+        RawStr(u32),
+    }
+    let chars: Vec<char> = source.chars().collect();
+    let mut lines: Vec<SrcLine> = Vec::new();
+    let mut cur = SrcLine::default();
+    let mut st = St::Code;
+    let mut i = 0;
+    while i < chars.len() {
+        let c = chars[i];
+        if c == '\n' {
+            if st == St::LineComment {
+                st = St::Code;
+            }
+            lines.push(std::mem::take(&mut cur));
+            i += 1;
+            continue;
+        }
+        match st {
+            St::Code => {
+                let next = chars.get(i + 1).copied();
+                if c == '/' && next == Some('/') {
+                    st = St::LineComment;
+                    cur.comment.push_str("//");
+                    i += 2;
+                } else if c == '/' && next == Some('*') {
+                    st = St::Block(1);
+                    i += 2;
+                } else if c == '"' {
+                    cur.code.push('"');
+                    st = St::Str;
+                    i += 1;
+                } else if c == 'r'
+                    && !cur.code.ends_with(|p: char| p.is_alphanumeric() || p == '_')
+                {
+                    // Possible raw string r"…" / r#"…"#.
+                    let mut j = i + 1;
+                    let mut hashes = 0u32;
+                    while chars.get(j) == Some(&'#') {
+                        hashes += 1;
+                        j += 1;
+                    }
+                    if chars.get(j) == Some(&'"') {
+                        cur.code.push('"');
+                        st = St::RawStr(hashes);
+                        i = j + 1;
+                    } else {
+                        cur.code.push(c);
+                        i += 1;
+                    }
+                } else if c == '\'' {
+                    if next == Some('\\') {
+                        // Escaped char literal: skip to the closing quote.
+                        let mut j = i + 3; // past '\ and the escaped char
+                        while j < chars.len() && chars[j] != '\'' && chars[j] != '\n' {
+                            j += 1;
+                        }
+                        cur.code.push_str("' '");
+                        i = if chars.get(j) == Some(&'\'') { j + 1 } else { j };
+                    } else if chars.get(i + 2) == Some(&'\'') && next != Some('\'') {
+                        // Plain char literal 'x' (covers '"' too).
+                        cur.code.push_str("' '");
+                        i += 3;
+                    } else {
+                        // Lifetime.
+                        cur.code.push('\'');
+                        i += 1;
+                    }
+                } else {
+                    cur.code.push(c);
+                    i += 1;
+                }
+            }
+            St::LineComment => {
+                cur.comment.push(c);
+                i += 1;
+            }
+            St::Block(depth) => {
+                let next = chars.get(i + 1).copied();
+                if c == '*' && next == Some('/') {
+                    st = if depth == 1 { St::Code } else { St::Block(depth - 1) };
+                    i += 2;
+                } else if c == '/' && next == Some('*') {
+                    st = St::Block(depth + 1);
+                    i += 2;
+                } else {
+                    i += 1;
+                }
+            }
+            St::Str => {
+                if c == '\\' {
+                    cur.code.push(' ');
+                    // Skip the escaped char unless it is the newline of a
+                    // line-continuation (the top-of-loop handles those).
+                    if chars.get(i + 1).is_some_and(|&n| n != '\n') {
+                        i += 2;
+                    } else {
+                        i += 1;
+                    }
+                } else if c == '"' {
+                    cur.code.push('"');
+                    st = St::Code;
+                    i += 1;
+                } else {
+                    cur.code.push(' ');
+                    i += 1;
+                }
+            }
+            St::RawStr(hashes) => {
+                if c == '"' {
+                    let mut ok = true;
+                    for k in 0..hashes as usize {
+                        if chars.get(i + 1 + k) != Some(&'#') {
+                            ok = false;
+                            break;
+                        }
+                    }
+                    if ok {
+                        cur.code.push('"');
+                        st = St::Code;
+                        i += 1 + hashes as usize;
+                    } else {
+                        cur.code.push(' ');
+                        i += 1;
+                    }
+                } else {
+                    cur.code.push(' ');
+                    i += 1;
+                }
+            }
+        }
+    }
+    lines.push(cur);
+    lines
+}
+
+/// Parse `detlint: allow(R1, R4) -- reason` out of a comment. Returns
+/// the allowed rules, or a `BadAllow` diagnostic if the annotation is
+/// present but malformed (unknown rule, or no ` -- reason`).
+fn parse_allow(comment: &str) -> Option<Result<Vec<Rule>, String>> {
+    let at = comment.find("detlint:")?;
+    let rest = comment[at + "detlint:".len()..].trim_start();
+    let Some(args) = rest.strip_prefix("allow(") else {
+        return Some(Err("expected `allow(<rule>, …)` after `detlint:`".to_string()));
+    };
+    let Some(close) = args.find(')') else {
+        return Some(Err("unclosed `allow(` in detlint annotation".to_string()));
+    };
+    let mut rules = Vec::new();
+    for part in args[..close].split(',') {
+        match Rule::parse(part) {
+            Some(r) => rules.push(r),
+            None => {
+                return Some(Err(format!("unknown rule {:?} in detlint annotation", part.trim())))
+            }
+        }
+    }
+    if rules.is_empty() {
+        return Some(Err("empty rule list in detlint annotation".to_string()));
+    }
+    let tail = args[close + 1..].trim_start();
+    match tail.strip_prefix("--") {
+        Some(reason) if !reason.trim().is_empty() => Some(Ok(rules)),
+        _ => Some(Err("detlint annotation needs a reason: `-- <why this is safe>`".to_string())),
+    }
+}
+
+/// Where a file sits in the rule matrix, derived from its path.
+struct FileClass {
+    /// Fingerprint/digest/merge-reachable module: R1 (strict), R2, R3.
+    restricted: bool,
+    /// Library code under `rust/src`: R4 applies outside tests.
+    library: bool,
+}
+
+fn classify(path: &str) -> FileClass {
+    let p = path.replace('\\', "/");
+    const RESTRICTED: [&str; 5] = [
+        "coordinator/hub.rs",
+        "campaign/collector.rs",
+        "campaign/report.rs",
+        "campaign/shared.rs",
+        "runtime/params.rs",
+    ];
+    let restricted =
+        RESTRICTED.iter().any(|m| p.ends_with(m)) || p.contains("coordinator/replay/");
+    let library = p.contains("rust/src/");
+    FileClass { restricted, library }
+}
+
+fn is_ident_char(c: char) -> bool {
+    c.is_alphanumeric() || c == '_'
+}
+
+/// Does `pat` occur in `code` with no identifier character immediately
+/// before it (so `q.iter()` does not match `freq.iter()`)?
+fn find_with_boundary(code: &str, pat: &str) -> bool {
+    let mut from = 0;
+    while let Some(rel) = code[from..].find(pat) {
+        let at = from + rel;
+        let bounded = at == 0 || !code[..at].chars().next_back().is_some_and(is_ident_char);
+        if bounded {
+            return true;
+        }
+        from = at + pat.len();
+    }
+    false
+}
+
+/// Extract the identifier that ends at byte offset `end` (exclusive),
+/// skipping trailing whitespace.
+fn ident_ending_at(code: &str, end: usize) -> Option<String> {
+    let head = code[..end].trim_end();
+    let start = head
+        .char_indices()
+        .rev()
+        .take_while(|&(_, c)| is_ident_char(c))
+        .last()
+        .map(|(i, _)| i)?;
+    let ident = &head[start..];
+    if ident.is_empty() || ident.chars().next().is_some_and(|c| c.is_ascii_digit()) {
+        return None;
+    }
+    Some(ident.to_string())
+}
+
+/// If this line declares a hash-container binding or field
+/// (`name: …HashMap<…>` / `name = HashMap::new()`), return its name.
+fn hash_decl_name(code: &str) -> Option<String> {
+    let pos = match (code.find("HashMap"), code.find("HashSet")) {
+        (Some(a), Some(b)) => a.min(b),
+        (Some(a), None) => Some(a)?,
+        (None, Some(b)) => Some(b)?,
+        (None, None) => return None,
+    };
+    // Walk back over type-ish characters to the `:` (type ascription)
+    // or `=` (initializer) that binds the name.
+    let bytes = code.as_bytes();
+    let mut k = pos;
+    while k > 0 {
+        let c = bytes[k - 1] as char;
+        if c == ':' {
+            if k >= 2 && bytes[k - 2] == b':' {
+                k -= 2; // path separator `::`, keep walking
+                continue;
+            }
+            return ident_ending_at(code, k - 1);
+        }
+        if c == '=' {
+            return ident_ending_at(code, k - 1);
+        }
+        if is_ident_char(c) || matches!(c, '<' | '>' | '&' | ' ' | '\t' | '(' | ',') {
+            k -= 1;
+            continue;
+        }
+        return None;
+    }
+    None
+}
+
+/// Does this line iterate the hash container `name`? Returns the
+/// offending operation for the message.
+fn iteration_hit(code: &str, name: &str) -> Option<String> {
+    const METHODS: [&str; 8] = [
+        ".iter()",
+        ".iter_mut()",
+        ".into_iter()",
+        ".values()",
+        ".values_mut()",
+        ".keys()",
+        ".drain(",
+        ".retain(",
+    ];
+    for m in METHODS {
+        let pat = format!("{name}{m}");
+        if find_with_boundary(code, &pat) {
+            return Some(format!("{name}{m}"));
+        }
+    }
+    if code.contains("for ") {
+        for prefix in ["in &mut ", "in &", "in "] {
+            let pat = format!("{prefix}{name}");
+            let mut from = 0;
+            while let Some(rel) = code[from..].find(&pat) {
+                let at = from + rel;
+                let end = at + pat.len();
+                let before_ok =
+                    at == 0 || !code[..at].chars().next_back().is_some_and(is_ident_char);
+                let after_ok = !code[end..].chars().next().is_some_and(is_ident_char);
+                if before_ok && after_ok {
+                    return Some(format!("for … in {name}"));
+                }
+                from = end;
+            }
+        }
+    }
+    None
+}
+
+/// The statement chain starting at `start`: lines up to and including
+/// the first line containing `;` (capped at 8 lines).
+fn chain_text(lines: &[SrcLine], start: usize) -> String {
+    let mut out = String::new();
+    for line in lines.iter().skip(start).take(8) {
+        out.push_str(&line.code);
+        out.push('\n');
+        if line.code.contains(';') {
+            break;
+        }
+    }
+    out
+}
+
+/// Seam traits whose every `fn` must document its determinism contract.
+const SEAM_TRAITS: [&str; 3] = ["TunableRuntime", "Agent", "ReplayPolicy"];
+
+/// Scan one file. `path` is only used to classify the file and label
+/// diagnostics, so fixture tests can pass synthetic paths.
+pub fn scan_file(path: &str, source: &str) -> Vec<Diagnostic> {
+    let class = classify(path);
+    let lines = preprocess(source);
+    let n = lines.len();
+    let mut diags: Vec<Diagnostic> = Vec::new();
+
+    // Brace depth before/after each line (over blanked code only).
+    let mut depth_before = vec![0i64; n];
+    let mut depth_after = vec![0i64; n];
+    let mut d = 0i64;
+    for (i, line) in lines.iter().enumerate() {
+        depth_before[i] = d;
+        for c in line.code.chars() {
+            match c {
+                '{' => d += 1,
+                '}' => d -= 1,
+                _ => {}
+            }
+        }
+        depth_after[i] = d;
+    }
+
+    // `#[cfg(test)]` regions: the attribute line, the item it guards,
+    // and (if the item opens a brace) everything until that brace
+    // closes. All rules skip test code — it cannot perturb runtime
+    // determinism, and R4 explicitly exempts it.
+    let mut in_test = vec![false; n];
+    let mut pending_cfg = false;
+    let mut region_floor: Option<i64> = None;
+    for i in 0..n {
+        if let Some(floor) = region_floor {
+            in_test[i] = true;
+            if depth_after[i] <= floor {
+                region_floor = None;
+            }
+            continue;
+        }
+        if lines[i].code.contains("#[cfg(test)]") {
+            in_test[i] = true;
+            pending_cfg = true;
+            continue;
+        }
+        if pending_cfg && lines[i].has_code() {
+            in_test[i] = true;
+            // Further attribute lines (`#[allow(...)]`, `#[test]`, ...)
+            // stacked between the cfg and its item stay part of the
+            // pending prefix — the guarded item is the first
+            // non-attribute code line.
+            if lines[i].code.trim_start().starts_with("#[") {
+                continue;
+            }
+            pending_cfg = false;
+            if depth_after[i] > depth_before[i] {
+                region_floor = Some(depth_before[i]);
+            }
+        }
+    }
+
+    // Per-line allowed rules from annotations. A trailing annotation
+    // covers its own line; a comment-line annotation covers the next
+    // line with code.
+    let mut allowed: Vec<Vec<Rule>> = vec![Vec::new(); n];
+    let mut pending_allow: Vec<Rule> = Vec::new();
+    for i in 0..n {
+        match parse_allow(&lines[i].comment) {
+            Some(Ok(rules)) => {
+                if lines[i].has_code() {
+                    allowed[i].extend(rules);
+                } else {
+                    pending_allow.extend(rules);
+                }
+            }
+            Some(Err(msg)) => {
+                diags.push(Diagnostic {
+                    path: path.to_string(),
+                    line: i + 1,
+                    rule: Rule::BadAllow,
+                    message: msg,
+                });
+            }
+            None => {}
+        }
+        if lines[i].has_code() && !pending_allow.is_empty() {
+            allowed[i].append(&mut pending_allow);
+        }
+    }
+
+    let push = |diags: &mut Vec<Diagnostic>, line: usize, rule: Rule, message: String| {
+        if !allowed[line].contains(&rule) {
+            diags.push(Diagnostic { path: path.to_string(), line: line + 1, rule, message });
+        }
+    };
+
+    // Pass 1: collect hash-container binding names and f32-typed
+    // mutable accumulators (non-test code).
+    let mut hash_names: Vec<String> = Vec::new();
+    let mut f32_names: Vec<String> = Vec::new();
+    for i in 0..n {
+        if in_test[i] {
+            continue;
+        }
+        let code = &lines[i].code;
+        if let Some(name) = hash_decl_name(code) {
+            if !hash_names.contains(&name) {
+                hash_names.push(name);
+            }
+        }
+        if code.contains("f32") {
+            if let Some(at) = code.find("let mut ") {
+                let name: String = code[at + "let mut ".len()..]
+                    .chars()
+                    .take_while(|&c| is_ident_char(c))
+                    .collect();
+                if !name.is_empty() && !f32_names.contains(&name) {
+                    f32_names.push(name);
+                }
+            }
+        }
+    }
+
+    // Pass 2: per-line rules.
+    for i in 0..n {
+        if in_test[i] {
+            continue;
+        }
+        let code = &lines[i].code;
+        if !lines[i].has_code() {
+            continue;
+        }
+
+        // R1 strict tier: restricted modules must not mention hash
+        // containers at all (BTreeMap is the only legal merge carrier).
+        if class.restricted && (code.contains("HashMap") || code.contains("HashSet")) {
+            push(
+                &mut diags,
+                i,
+                Rule::R1,
+                "hash container in a fingerprint/digest/merge module; use BTreeMap/BTreeSet"
+                    .to_string(),
+            );
+        } else {
+            // R1 general tier: no unsorted iteration over a tracked
+            // hash container anywhere scanned.
+            for name in &hash_names {
+                if let Some(op) = iteration_hit(code, name) {
+                    let chain = chain_text(&lines, i);
+                    let sorted = chain.contains("sort") || chain.contains("BTree");
+                    if !sorted {
+                        push(
+                            &mut diags,
+                            i,
+                            Rule::R1,
+                            format!(
+                                "iteration over hash container `{op}` with no sort on the \
+                                 statement chain"
+                            ),
+                        );
+                    }
+                    break;
+                }
+            }
+        }
+
+        if class.restricted {
+            // R2: f32 accumulation (the PR 3 ensemble-median class of
+            // bug). Flag `+=` on an f32-typed line, `sum::<f32>` and
+            // `fold(0.0f32 / 0f32` reductions.
+            let mut f32_accum = (code.contains("+=") && code.contains("f32"))
+                || code.contains("sum::<f32>")
+                || code.contains("fold(0.0f32")
+                || code.contains("fold(0f32");
+            if !f32_accum && code.contains("+=") {
+                // Accumulation into a binding declared `let mut x … f32`
+                // earlier in the file.
+                f32_accum = f32_names.iter().any(|name| {
+                    find_with_boundary(code, &format!("{name} +="))
+                        || code.contains(&format!("*{name} +="))
+                });
+            }
+            if f32_accum {
+                push(
+                    &mut diags,
+                    i,
+                    Rule::R2,
+                    "f32 accumulation in a restricted module; use the order-sequenced f64 \
+                     discipline of runtime/params.rs"
+                        .to_string(),
+                );
+            }
+
+            // R3: ambient nondeterminism near fingerprint/digest paths.
+            const AMBIENT: [&str; 5] =
+                ["Instant::now", "SystemTime", "thread::current", "std::env::", "env::var"];
+            for pat in AMBIENT {
+                if code.contains(pat) {
+                    push(
+                        &mut diags,
+                        i,
+                        Rule::R3,
+                        format!("ambient nondeterminism `{pat}` in a restricted module"),
+                    );
+                    break;
+                }
+            }
+        }
+
+        // R4: unwrap/expect in library code.
+        if class.library {
+            if code.contains(".unwrap()") {
+                push(
+                    &mut diags,
+                    i,
+                    Rule::R4,
+                    "unwrap() in library code; return Result (anyhow::Context) or restructure"
+                        .to_string(),
+                );
+            }
+            if code.contains(".expect(\"") {
+                push(
+                    &mut diags,
+                    i,
+                    Rule::R4,
+                    "expect() in library code; return Result (anyhow::Context) or restructure"
+                        .to_string(),
+                );
+            }
+        }
+    }
+
+    // Pass 3 (R5): every fn on a seam trait documents its determinism
+    // contract with a doc line containing "Determinism".
+    let mut i = 0;
+    while i < n {
+        let code = &lines[i].code;
+        let is_seam = SEAM_TRAITS.iter().any(|t| {
+            let pat = format!("pub trait {t}");
+            code.find(&pat).is_some_and(|at| {
+                !code[at + pat.len()..].chars().next().is_some_and(is_ident_char)
+            })
+        });
+        if !is_seam || in_test[i] {
+            i += 1;
+            continue;
+        }
+        let trait_depth = depth_before[i];
+        let mut j = i + 1;
+        while j < n && depth_before[j] > trait_depth {
+            // A trait item lives at depth trait_depth + 1; anything
+            // deeper is a default-method body.
+            if depth_before[j] == trait_depth + 1 {
+                let trimmed = lines[j].code.trim_start();
+                if trimmed.starts_with("fn ") || trimmed.starts_with("unsafe fn ") {
+                    let name_part = trimmed.trim_start_matches("unsafe ");
+                    let name: String = name_part["fn ".len()..]
+                        .chars()
+                        .take_while(|&c| is_ident_char(c))
+                        .collect();
+                    let mut documented = false;
+                    let mut k = j;
+                    while k > 0 {
+                        k -= 1;
+                        let above = &lines[k];
+                        if above.comment.contains("Determinism") {
+                            documented = true;
+                            break;
+                        }
+                        let attr_only = !above.has_code()
+                            || above.code.trim_start().starts_with("#[");
+                        if !attr_only {
+                            break;
+                        }
+                    }
+                    if !documented {
+                        push(
+                            &mut diags,
+                            j,
+                            Rule::R5,
+                            format!(
+                                "seam trait fn `{name}` lacks a determinism contract \
+                                 (add a `/// Determinism: …` doc line)"
+                            ),
+                        );
+                    }
+                }
+            }
+            j += 1;
+        }
+        i = j;
+    }
+
+    diags.sort_by(|a, b| (a.line, a.rule).cmp(&(b.line, b.rule)));
+    diags
+}
+
+/// Recursively collect `.rs` files under `dir`, sorted by path so
+/// output (and the diagnostic fingerprint of a run) is deterministic.
+fn collect_rs(dir: &Path, out: &mut Vec<PathBuf>) -> io::Result<()> {
+    if !dir.exists() {
+        return Ok(());
+    }
+    let mut entries: Vec<PathBuf> =
+        fs::read_dir(dir)?.map(|e| e.map(|e| e.path())).collect::<io::Result<_>>()?;
+    entries.sort();
+    for path in entries {
+        if path.is_dir() {
+            collect_rs(&path, out)?;
+        } else if path.extension() == Some(std::ffi::OsStr::new("rs")) {
+            out.push(path);
+        }
+    }
+    Ok(())
+}
+
+/// Scan the repository rooted at `root`: `rust/src`, `rust/benches`
+/// and `examples` (`rust/tests` and `tools/` are out of scope — test
+/// code is exempt by design, and detlint does not lint itself).
+pub fn scan_repo(root: &Path) -> io::Result<Vec<Diagnostic>> {
+    let mut files = Vec::new();
+    for sub in ["rust/src", "rust/benches", "examples"] {
+        collect_rs(&root.join(sub), &mut files)?;
+    }
+    let mut diags = Vec::new();
+    for file in files {
+        let source = fs::read_to_string(&file)?;
+        let label = file
+            .strip_prefix(root)
+            .unwrap_or(&file)
+            .to_string_lossy()
+            .replace('\\', "/");
+        diags.extend(scan_file(&label, &source));
+    }
+    Ok(diags)
+}
+
+/// Per-rule counts for the summary table, in `R0..R5` order.
+pub fn rule_counts(diags: &[Diagnostic]) -> Vec<(Rule, usize)> {
+    let mut order = vec![Rule::BadAllow];
+    order.extend(Rule::CHECKS);
+    order
+        .into_iter()
+        .map(|r| (r, diags.iter().filter(|d| d.rule == r).count()))
+        .collect()
+}
+
+/// JSON-encode diagnostics (hand-rolled: no serde in the image).
+pub fn to_json(diags: &[Diagnostic]) -> String {
+    fn esc(s: &str) -> String {
+        let mut out = String::with_capacity(s.len());
+        for c in s.chars() {
+            match c {
+                '"' => out.push_str("\\\""),
+                '\\' => out.push_str("\\\\"),
+                '\n' => out.push_str("\\n"),
+                '\t' => out.push_str("\\t"),
+                c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+                c => out.push(c),
+            }
+        }
+        out
+    }
+    let mut out = String::from("[");
+    for (i, dg) in diags.iter().enumerate() {
+        if i > 0 {
+            out.push(',');
+        }
+        out.push_str(&format!(
+            "{{\"path\":\"{}\",\"line\":{},\"rule\":\"{}\",\"message\":\"{}\"}}",
+            esc(&dg.path),
+            dg.line,
+            dg.rule,
+            esc(&dg.message)
+        ));
+    }
+    out.push(']');
+    out
+}
+
+#[cfg(test)]
+#[allow(clippy::unwrap_used)]
+mod tests {
+    use super::*;
+
+    fn rules_at(diags: &[Diagnostic]) -> Vec<(usize, Rule)> {
+        diags.iter().map(|d| (d.line, d.rule)).collect()
+    }
+
+    #[test]
+    fn preprocess_blanks_strings_and_comments() {
+        let lines = preprocess("let x = \"a.unwrap()\"; // .unwrap()\nlet y = 1;");
+        assert!(!lines[0].code.contains("unwrap"));
+        assert!(lines[0].comment.contains(".unwrap()"));
+        assert!(lines[0].code.contains('"'), "delimiting quotes survive");
+        assert_eq!(lines[1].code, "let y = 1;");
+    }
+
+    #[test]
+    fn preprocess_handles_quote_char_literal() {
+        // The json.rs idiom that motivated `.expect("` matching: a
+        // byte-char literal containing a double quote must not open a
+        // string.
+        let lines = preprocess("self.expect(b'\"')?;\nlet z = 2;");
+        assert_eq!(lines[1].code, "let z = 2;");
+        assert!(!lines[0].code.contains('"'), "char-literal quote blanked");
+    }
+
+    #[test]
+    fn preprocess_keeps_lifetimes() {
+        let lines = preprocess("fn f<'a>(x: &'a str) -> &'a str { x }");
+        assert!(lines[0].code.contains("'a"));
+    }
+
+    #[test]
+    fn r4_fires_on_unwrap_and_expect_in_library_code() {
+        let src = "pub fn f() { x.unwrap(); }\npub fn g() { y.expect(\"msg\"); }\n";
+        let d = scan_file("rust/src/foo.rs", src);
+        assert_eq!(rules_at(&d), vec![(1, Rule::R4), (2, Rule::R4)]);
+    }
+
+    #[test]
+    fn r4_exempts_tests_and_non_src() {
+        let src = "#[cfg(test)]\nmod tests {\n    fn t() { x.unwrap(); }\n}\n";
+        assert!(scan_file("rust/src/foo.rs", src).is_empty());
+        assert!(scan_file("rust/benches/b.rs", "fn f() { x.unwrap(); }").is_empty());
+    }
+
+    #[test]
+    fn cfg_test_region_survives_stacked_attributes() {
+        // The repo's test mods carry `#[allow(clippy::unwrap_used)]`
+        // between the cfg and the mod; the region must still cover the
+        // mod body, and must still end when its brace closes.
+        let src = "#[cfg(test)]\n#[allow(clippy::unwrap_used)]\nmod tests {\n    fn t() { x.unwrap(); }\n}\npub fn f() { y.unwrap(); }\n";
+        let d = scan_file("rust/src/foo.rs", src);
+        assert_eq!(rules_at(&d), vec![(6, Rule::R4)]);
+    }
+
+    #[test]
+    fn r4_ignores_expect_method_on_parser() {
+        // util/json.rs defines its own `expect(b'"')` — no string
+        // literal opens, so `.expect("` must not fire.
+        let d = scan_file("rust/src/util/json.rs", "fn f() { self.expect(b'{')?; }");
+        assert!(d.is_empty(), "{d:?}");
+    }
+
+    #[test]
+    fn allow_annotation_suppresses_with_reason() {
+        let src = "pub fn f() { x.unwrap(); } // detlint: allow(R4) -- test helper\n";
+        assert!(scan_file("rust/src/foo.rs", src).is_empty());
+        let above = "// detlint: allow(R4) -- invariant: set above\npub fn f() { x.unwrap(); }\n";
+        assert!(scan_file("rust/src/foo.rs", above).is_empty());
+    }
+
+    #[test]
+    fn allow_without_reason_is_a_diagnostic() {
+        let src = "pub fn f() { x.unwrap(); } // detlint: allow(R4)\n";
+        let d = scan_file("rust/src/foo.rs", src);
+        assert!(d.iter().any(|x| x.rule == Rule::BadAllow));
+        assert!(d.iter().any(|x| x.rule == Rule::R4), "malformed allow must not suppress");
+    }
+
+    #[test]
+    fn r1_strict_in_restricted_modules() {
+        let d = scan_file("rust/src/coordinator/hub.rs", "use std::collections::HashMap;\n");
+        assert_eq!(rules_at(&d), vec![(1, Rule::R1)]);
+    }
+
+    #[test]
+    fn r1_iteration_requires_sort_on_chain() {
+        let src = "let m: HashMap<u64, f64> = HashMap::new();\n\
+                   let v: Vec<_> = m.iter().collect();\n";
+        let d = scan_file("rust/src/foo.rs", src);
+        assert_eq!(rules_at(&d), vec![(2, Rule::R1)]);
+        let sorted = "let m: HashMap<u64, f64> = HashMap::new();\n\
+                      let mut v: Vec<_> = m.iter().collect();\n\
+                      v.sort();  ";
+        // Sort on the *same chain* is what passes; this two-statement
+        // form still fires (the chain ends at the first `;`).
+        assert_eq!(rules_at(&scan_file("rust/src/foo.rs", sorted)), vec![(2, Rule::R1)]);
+        let chained = "let m: HashMap<u64, f64> = HashMap::new();\n\
+                       let v: Vec<_> = m.iter()\n    .sorted()\n    .collect();\n";
+        assert!(scan_file("rust/src/foo.rs", chained).is_empty());
+    }
+
+    #[test]
+    fn r1_boundary_does_not_match_suffixes() {
+        let src = "let m: HashMap<u64, f64> = HashMap::new();\nlet s = freq.iter().sum::<f64>();\n";
+        let d = scan_file("rust/src/foo.rs", &src.replace("m:", "q:"));
+        assert!(d.is_empty(), "freq must not match tracked name q: {d:?}");
+    }
+
+    #[test]
+    fn r2_and_r3_fire_only_in_restricted_modules() {
+        let src = "let mut acc = 0.0f32;\nacc += x as f32;\nlet t = Instant::now();\n";
+        let d = scan_file("rust/src/runtime/params.rs", src);
+        assert_eq!(rules_at(&d), vec![(2, Rule::R2), (3, Rule::R3)]);
+        assert!(scan_file("rust/src/foo.rs", src).is_empty());
+    }
+
+    #[test]
+    fn r5_requires_determinism_docs_on_seam_traits() {
+        let src = "pub trait Agent: Send {\n\
+                   \x20   /// Determinism: pure.\n\
+                   \x20   fn name(&self) -> &'static str;\n\
+                   \x20   /// Just a doc.\n\
+                   \x20   fn train(&mut self);\n\
+                   }\n";
+        let d = scan_file("rust/src/coordinator/agent.rs", src);
+        assert_eq!(rules_at(&d), vec![(5, Rule::R5)]);
+        assert!(d[0].message.contains("`train`"));
+        // Non-seam traits are not checked.
+        let other = "pub trait Workload {\n    fn build(&self);\n}\n";
+        assert!(scan_file("rust/src/foo.rs", other).is_empty());
+    }
+
+    #[test]
+    fn json_escapes_quotes() {
+        let d = vec![Diagnostic {
+            path: "a.rs".into(),
+            line: 3,
+            rule: Rule::R4,
+            message: "bad \"msg\"".into(),
+        }];
+        let j = to_json(&d);
+        assert!(j.contains("\\\"msg\\\""));
+        assert!(j.starts_with('[') && j.ends_with(']'));
+    }
+}

@@ -1,0 +1,73 @@
+//! detlint CLI: scan the repository and report determinism-invariant
+//! violations (see `docs/determinism.md`).
+//!
+//! ```text
+//! cargo run -p detlint                # human-readable, nonzero exit on findings
+//! cargo run -p detlint -- --json     # machine-readable (CI)
+//! cargo run -p detlint -- --root X   # scan a different checkout
+//! ```
+
+use std::path::PathBuf;
+use std::process::ExitCode;
+
+use detlint::{rule_counts, scan_repo, to_json, Rule};
+
+fn main() -> ExitCode {
+    let mut json = false;
+    let mut root = PathBuf::from(".");
+    let mut args = std::env::args().skip(1);
+    while let Some(arg) = args.next() {
+        match arg.as_str() {
+            "--json" => json = true,
+            "--root" => match args.next() {
+                Some(dir) => root = PathBuf::from(dir),
+                None => {
+                    eprintln!("detlint: --root needs a directory");
+                    return ExitCode::from(2);
+                }
+            },
+            "--help" | "-h" => {
+                println!("usage: detlint [--json] [--root <dir>]");
+                println!("rules:");
+                for rule in Rule::CHECKS {
+                    println!("  {}  {}", rule.id(), rule.describe());
+                }
+                return ExitCode::SUCCESS;
+            }
+            other => {
+                eprintln!("detlint: unknown argument {other:?} (try --help)");
+                return ExitCode::from(2);
+            }
+        }
+    }
+
+    let diags = match scan_repo(&root) {
+        Ok(diags) => diags,
+        Err(err) => {
+            eprintln!("detlint: scan failed under {}: {err}", root.display());
+            return ExitCode::from(2);
+        }
+    };
+
+    if json {
+        println!("{}", to_json(&diags));
+        return if diags.is_empty() { ExitCode::SUCCESS } else { ExitCode::FAILURE };
+    }
+
+    for d in &diags {
+        println!("{d}");
+    }
+    if diags.is_empty() {
+        println!("detlint: clean");
+        return ExitCode::SUCCESS;
+    }
+    println!("\nrule summary:");
+    for (rule, count) in rule_counts(&diags) {
+        if count > 0 {
+            println!("  {}  {:>4}  {}", rule.id(), count, rule.describe());
+        }
+    }
+    println!("\n{} finding(s). Suppress only with", diags.len());
+    println!("  // detlint: allow(<rule>) -- <reason>");
+    ExitCode::FAILURE
+}

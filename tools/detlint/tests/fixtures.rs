@@ -1,0 +1,124 @@
+//! Golden fixture tests: each rule has one fixture proving it fires
+//! (checked against an expected-diagnostics file) and one proving the
+//! `detlint: allow` annotation (or the legal idiom) silences it.
+
+#![allow(clippy::unwrap_used)]
+
+use detlint::{scan_file, Diagnostic};
+
+/// Parse an expected-diagnostics file: one `<line> <rule-id>` per line.
+fn parse_expected(expected: &str) -> Vec<(usize, String)> {
+    expected
+        .lines()
+        .filter(|l| !l.trim().is_empty())
+        .map(|l| {
+            let mut parts = l.split_whitespace();
+            let line: usize = parts.next().expect("line number").parse().expect("numeric line");
+            let rule = parts.next().expect("rule id").to_string();
+            (line, rule)
+        })
+        .collect()
+}
+
+fn found(diags: &[Diagnostic]) -> Vec<(usize, String)> {
+    diags.iter().map(|d| (d.line, d.rule.id().to_string())).collect()
+}
+
+fn check_fires(label: &str, source: &str, expected: &str) {
+    let diags = scan_file(label, source);
+    assert_eq!(
+        found(&diags),
+        parse_expected(expected),
+        "diagnostics for {label} diverge from the golden file:\n{diags:#?}"
+    );
+}
+
+fn check_clean(label: &str, source: &str) {
+    let diags = scan_file(label, source);
+    assert!(diags.is_empty(), "expected {label} to scan clean, got:\n{diags:#?}");
+}
+
+#[test]
+fn r1_fires_golden() {
+    check_fires(
+        "rust/src/coordinator/hub.rs",
+        include_str!("../fixtures/r1_fires.rs"),
+        include_str!("../fixtures/expected/r1_fires.txt"),
+    );
+}
+
+#[test]
+fn r1_allowed_is_clean() {
+    check_clean("rust/src/coordinator/hub.rs", include_str!("../fixtures/r1_allowed.rs"));
+}
+
+#[test]
+fn r2_fires_golden() {
+    check_fires(
+        "rust/src/runtime/params.rs",
+        include_str!("../fixtures/r2_fires.rs"),
+        include_str!("../fixtures/expected/r2_fires.txt"),
+    );
+}
+
+#[test]
+fn r2_allowed_is_clean() {
+    check_clean("rust/src/runtime/params.rs", include_str!("../fixtures/r2_allowed.rs"));
+}
+
+#[test]
+fn r3_fires_golden() {
+    check_fires(
+        "rust/src/campaign/shared.rs",
+        include_str!("../fixtures/r3_fires.rs"),
+        include_str!("../fixtures/expected/r3_fires.txt"),
+    );
+}
+
+#[test]
+fn r3_allowed_is_clean() {
+    check_clean("rust/src/campaign/shared.rs", include_str!("../fixtures/r3_allowed.rs"));
+}
+
+#[test]
+fn r4_fires_golden() {
+    check_fires(
+        "rust/src/util/lint_fixture.rs",
+        include_str!("../fixtures/r4_fires.rs"),
+        include_str!("../fixtures/expected/r4_fires.txt"),
+    );
+}
+
+#[test]
+fn r4_allowed_is_clean() {
+    check_clean("rust/src/util/lint_fixture.rs", include_str!("../fixtures/r4_allowed.rs"));
+}
+
+#[test]
+fn r4_does_not_apply_outside_library_code() {
+    // Same source as the firing fixture, but under benches: exempt.
+    check_clean("rust/benches/lint_fixture.rs", include_str!("../fixtures/r4_fires.rs"));
+}
+
+#[test]
+fn r5_fires_golden() {
+    check_fires(
+        "rust/src/backend/mod.rs",
+        include_str!("../fixtures/r5_fires.rs"),
+        include_str!("../fixtures/expected/r5_fires.txt"),
+    );
+}
+
+#[test]
+fn r5_allowed_is_clean() {
+    check_clean("rust/src/coordinator/replay/mod.rs", include_str!("../fixtures/r5_allowed.rs"));
+}
+
+#[test]
+fn r0_bad_allow_golden() {
+    check_fires(
+        "rust/src/util/lint_fixture.rs",
+        include_str!("../fixtures/r0_bad_allow.rs"),
+        include_str!("../fixtures/expected/r0_bad_allow.txt"),
+    );
+}
