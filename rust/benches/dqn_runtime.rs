@@ -1,5 +1,15 @@
 #![allow(clippy::unwrap_used)] // test/bench code panics by design
-//! Q-engine ablation + tuning-overhead microbenchmarks.
+//! Q-engine roofline + ablation + tuning-overhead microbenchmarks.
+//!
+//! Part 0 — the kernel roofline: batched forward through the native
+//! engine's `Scalar` and `Blocked` dense kernels over batch sizes
+//! {1, 8, 32, 128, 512}, plus the AOT/PJRT path where artifacts exist
+//! (its fused single-state artifact is looped per row — batch layout
+//! is compiled in). Per-sample µs and the throughput multiple over the
+//! per-sample scalar path (batch 1) — the number the campaign round's
+//! batched greedy selection banks on. The two kernels are bitwise-
+//! identical (`runtime/native/kernels.rs`), so this table measures
+//! pure speed, never accuracy.
 //!
 //! Part 1 — the engine ablation: forward (action selection) and one
 //! replay train step (batch 32) on the native MLP engine, the tabular
@@ -10,17 +20,34 @@
 //! Part 2 — §Perf context: state construction, replay sampling, and
 //! one simulated application run. Tuning overhead (forward + train +
 //! state build) must stay negligible against the run itself.
+//!
+//! `--quick` shrinks sample counts (the CI perf smoke); `--json`
+//! additionally writes `BENCH_dqn_runtime.json` (engine × batch ×
+//! median/p90 µs) so the perf trajectory is tracked across PRs.
 
 use aituning::backend::BackendId;
 use aituning::coordinator::{
     build_state, run_episode, Agent, RelativeTracker, ReplayBuffer, TabularAgent, Transition,
 };
 use aituning::mpi_t::CvarSet;
-use aituning::runtime::{Manifest, NativeQNet, RuntimeClient, TrainBatch};
+use aituning::runtime::{DenseKernel, Manifest, NativeQNet, RuntimeClient, TrainBatch};
 use aituning::simmpi::Machine;
 use aituning::util::bench::{opaque, time, Table};
+use aituning::util::json::{arr, num, obj, s as js, Json};
 use aituning::util::rng::Rng;
 use aituning::workloads::WorkloadKind;
+
+/// Batch sizes the roofline sweeps.
+const ROOFLINE_BATCHES: [usize; 5] = [1, 8, 32, 128, 512];
+
+/// One measured (engine, batch) cell, kept for the JSON report.
+struct RooflineRow {
+    engine: &'static str,
+    batch: usize,
+    median_us: f64,
+    p90_us: f64,
+    per_sample_us: f64,
+}
 
 /// A 64-transition buffer plus one 32-row minibatch drawn from it —
 /// shared by the engine ablation (the batch) and the sampling-overhead
@@ -47,14 +74,153 @@ fn replay_fixture(backend: BackendId, rng: &mut Rng) -> (ReplayBuffer, TrainBatc
     (replay, batch)
 }
 
-/// Time the AOT engine, or explain why it is unavailable (no artifacts
-/// / `pjrt` feature off) — the "AOT-stub" row of the ablation table.
-fn aot_row(state: &[f32], batch: &TrainBatch, samples: usize) -> anyhow::Result<Vec<String>> {
+/// Load the AOT engine if its artifacts (and the `pjrt` feature) are
+/// present.
+fn load_aot(rng: &mut Rng) -> anyhow::Result<aituning::runtime::AotQNet> {
     let dir = aituning::runtime::default_artifacts_dir();
     anyhow::ensure!(dir.join("manifest.json").exists(), "artifacts not built");
     let client = RuntimeClient::cpu()?;
     let manifest = Manifest::load(&dir)?;
-    let mut qnet = aituning::runtime::AotQNet::load(&client, &manifest, &mut Rng::new(0))?;
+    aituning::runtime::AotQNet::load(&client, &manifest, rng)
+}
+
+/// One native-kernel roofline cell: time `forward_batch` under
+/// `kernel`, record it, return `(call µs, per-sample µs)`.
+fn native_cell(
+    net: &mut NativeQNet,
+    states: &[f32],
+    batch: usize,
+    n: usize,
+    kernel: DenseKernel,
+    rows: &mut Vec<RooflineRow>,
+) -> (f64, f64) {
+    net.set_kernel(kernel);
+    let sample = time(3, n, || {
+        opaque(net.forward_batch(states, batch).unwrap());
+    });
+    let per_sample = sample.median_us() / batch as f64;
+    rows.push(RooflineRow {
+        engine: kernel.name(),
+        batch,
+        median_us: sample.median_us(),
+        p90_us: sample.p90_us(),
+        per_sample_us: per_sample,
+    });
+    (sample.median_us(), per_sample)
+}
+
+/// Part 0: the scalar-vs-blocked-vs-AOT roofline over batch sizes.
+/// Returns the measured rows for the JSON report.
+fn roofline(backend: BackendId, samples: usize) -> Vec<RooflineRow> {
+    let dim = backend.state_dim();
+    let mut init_rng = Rng::new(0);
+    let mut net = NativeQNet::with_default_shape(dim, backend.num_actions(), &mut init_rng);
+    let mut aot = load_aot(&mut Rng::new(0)).ok();
+
+    let mut rows: Vec<RooflineRow> = Vec::new();
+    let mut state_rng = Rng::new(2);
+    let mut table = Table::new(&[
+        "batch",
+        "scalar fwd",
+        "scalar /sample",
+        "blocked fwd",
+        "blocked /sample",
+        "speedup vs scalar b=1",
+        "aot /sample",
+    ]);
+
+    // The per-sample scalar path at batch 1 — the baseline every other
+    // cell's speedup is quoted against (what the engine did before the
+    // kernel seam existed).
+    let mut scalar_b1_us = f64::NAN;
+
+    for &batch in &ROOFLINE_BATCHES {
+        let states: Vec<f32> =
+            (0..batch * dim).map(|_| state_rng.range_f64(-1.0, 1.0) as f32).collect();
+        // Big batches do proportionally more work per call: scale the
+        // sample count down (deterministically) to keep runtime sane.
+        let n = (samples * 8 / (8 + batch)).max(10);
+
+        let (scalar_us, scalar_per) =
+            native_cell(&mut net, &states, batch, n, DenseKernel::Scalar, &mut rows);
+        let (blocked_us, blocked_per) =
+            native_cell(&mut net, &states, batch, n, DenseKernel::Blocked, &mut rows);
+        if batch == 1 {
+            scalar_b1_us = scalar_per;
+        }
+
+        let aot_cell = match aot.as_mut() {
+            Some(engine) => {
+                let sample = time(3, n, || {
+                    for r in 0..batch {
+                        opaque(engine.q_values(&states[r * dim..(r + 1) * dim]).unwrap());
+                    }
+                });
+                let per_sample = sample.median_us() / batch as f64;
+                rows.push(RooflineRow {
+                    engine: "aot",
+                    batch,
+                    median_us: sample.median_us(),
+                    p90_us: sample.p90_us(),
+                    per_sample_us: per_sample,
+                });
+                format!("{per_sample:.2} µs")
+            }
+            None => "—".into(),
+        };
+
+        table.row(vec![
+            batch.to_string(),
+            format!("{scalar_us:.1} µs"),
+            format!("{scalar_per:.2} µs"),
+            format!("{blocked_us:.1} µs"),
+            format!("{blocked_per:.2} µs"),
+            format!("{:.1}x", scalar_b1_us / blocked_per),
+            aot_cell,
+        ]);
+    }
+
+    println!("=== dense-kernel roofline: scalar vs blocked vs AOT ===");
+    table.print();
+    println!(
+        "speedup = per-sample scalar forward at batch 1 (the pre-seam path) / this cell;\n\
+         the campaign round's batched greedy selection rides the blocked column.\n\
+         kernels are bitwise-identical — see runtime/native/kernels.rs\n"
+    );
+    if aot.is_none() {
+        println!("aot column unavailable: no compiled artifacts / pjrt feature off\n");
+    }
+    rows
+}
+
+fn write_json(rows: &[RooflineRow], quick: bool) -> anyhow::Result<()> {
+    let json = obj(vec![
+        ("bench", js("dqn_runtime")),
+        ("backend", js("coarrays")),
+        ("quick", Json::Bool(quick)),
+        (
+            "roofline",
+            arr(rows.iter().map(|r| {
+                obj(vec![
+                    ("engine", js(r.engine)),
+                    ("batch", num(r.batch as f64)),
+                    ("median_us", num(r.median_us)),
+                    ("p90_us", num(r.p90_us)),
+                    ("per_sample_us", num(r.per_sample_us)),
+                ])
+            })),
+        ),
+    ]);
+    let path = "BENCH_dqn_runtime.json";
+    std::fs::write(path, json.to_string() + "\n")?;
+    println!("wrote {path} ({} roofline cells)\n", rows.len());
+    Ok(())
+}
+
+/// Time the AOT engine, or explain why it is unavailable (no artifacts
+/// / `pjrt` feature off) — the "AOT-stub" row of the ablation table.
+fn aot_row(state: &[f32], batch: &TrainBatch, samples: usize) -> anyhow::Result<Vec<String>> {
+    let mut qnet = load_aot(&mut Rng::new(0))?;
     let fwd = time(5, samples, || {
         opaque(qnet.q_values(state).unwrap());
     });
@@ -71,11 +237,18 @@ fn aot_row(state: &[f32], batch: &TrainBatch, samples: usize) -> anyhow::Result<
 
 fn main() -> anyhow::Result<()> {
     let quick = std::env::args().any(|a| a == "--quick");
+    let json = std::env::args().any(|a| a == "--json");
     let samples = if quick { 20 } else { 100 };
     let backend = BackendId::Coarrays;
     let state = vec![0.3f32; backend.state_dim()];
     let mut rng = Rng::new(1);
     let (replay, batch) = replay_fixture(backend, &mut rng);
+
+    // --- kernel roofline ---
+    let roofline_rows = roofline(backend, samples);
+    if json {
+        write_json(&roofline_rows, quick)?;
+    }
 
     // --- engine ablation: native vs tabular vs AOT ---
     let mut t = Table::new(&["engine", "q_forward (batch 1)", "q_train (batch 32)", "notes"]);
@@ -129,7 +302,7 @@ fn main() -> anyhow::Result<()> {
     t.row(vec![
         "build_state (L3)".into(),
         format!("{:.2} µs", s.median_us()),
-        format!("{:.2} µs", s.p90_ns / 1e3),
+        format!("{:.2} µs", s.p90_us()),
         s.iters.to_string(),
     ]);
 
@@ -139,7 +312,7 @@ fn main() -> anyhow::Result<()> {
     t.row(vec![
         "replay sample (32)".into(),
         format!("{:.2} µs", s.median_us()),
-        format!("{:.2} µs", s.p90_ns / 1e3),
+        format!("{:.2} µs", s.p90_us()),
         s.iters.to_string(),
     ]);
 
@@ -153,7 +326,7 @@ fn main() -> anyhow::Result<()> {
     t.row(vec![
         format!("one simulated LBM run ({images} img)"),
         format!("{:.1} ms", s.median_ms()),
-        format!("{:.1} ms", s.p90_ns / 1e6),
+        format!("{:.1} ms", s.p90_ms()),
         s.iters.to_string(),
     ]);
 

@@ -74,6 +74,12 @@ impl CampaignEngine {
     /// Run a full tuning campaign: every job is an independent seeded
     /// tuning session; results come back in job order regardless of
     /// scheduling. Fails with the first (by job index) job error.
+    ///
+    /// Unlike [`CampaignEngine::run_shared`], this path has no batched
+    /// greedy selection: independent jobs hold *distinct* weights from
+    /// the first training step on, so there is no shared parameter set
+    /// to evaluate all pending states against in one pass — batching
+    /// across jobs here would change which network answers each row.
     pub fn run(&self, jobs: &[CampaignJob]) -> Result<CampaignReport> {
         let workers = self.workers_for(jobs.len());
         let started = Instant::now();

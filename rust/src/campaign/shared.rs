@@ -40,9 +40,10 @@ use std::time::Instant;
 use anyhow::{Context, Result};
 
 use crate::coordinator::{
-    AgentKind, Controller, HubContribution, HubView, LearnerHub, MergeMode, SharedLearning,
-    TuningConfig,
+    AgentKind, AgentState, Controller, HubContribution, HubView, LearnerHub, MergeMode,
+    SharedLearning, TuningConfig,
 };
+use crate::runtime::{argmax, q_values_batch_of, DenseKernel};
 
 use super::collector::ShardedCollector;
 use super::engine::CampaignEngine;
@@ -91,6 +92,11 @@ impl CampaignEngine {
 
         for _round in 0..rounds {
             let view = hub.view();
+            // Batched best_action: every live job's first greedy
+            // selection of this round shares one blocked GEMM over the
+            // master parameters (computed once, on this thread — the
+            // result is worker-count invariant by construction).
+            let hints = round_hints(&view, jobs, &slots)?;
             let collector = ShardedCollector::new(jobs.len(), workers);
             let cursor = AtomicUsize::new(0);
             std::thread::scope(|scope| {
@@ -99,12 +105,15 @@ impl CampaignEngine {
                     let cursor = &cursor;
                     let view = &view;
                     let slots = &slots;
+                    let hints = &hints;
                     scope.spawn(move || loop {
                         let i = cursor.fetch_add(1, Ordering::Relaxed);
                         if i >= jobs.len() {
                             break;
                         }
-                        let r = run_segment(base, shared, &jobs[i], i, sync_every, view, &slots[i]);
+                        let r = run_segment(
+                            base, shared, &jobs[i], i, sync_every, view, &slots[i], hints[i],
+                        );
                         collector.push(w, i, r);
                     });
                 }
@@ -136,8 +145,63 @@ impl CampaignEngine {
     }
 }
 
+/// Batched greedy selection for one campaign round: one GEMM instead
+/// of one forward per live job.
+///
+/// After a round's merge, every native-DQN worker adopts the *same*
+/// dense master state at its next segment start ([`Controller::sync_from_hub`]),
+/// so the first greedy selection of each job's segment is the argmax
+/// of one shared network at that job's pending session state. This
+/// evaluates all of those states as a single `[live_jobs, state_dim]`
+/// batch over the master parameters and stages each argmax as a
+/// [`Controller::stage_greedy_hint`].
+///
+/// Determinism: hints are computed before workers spawn, from state
+/// that does not depend on worker count; `q_values_batch_of` rows are
+/// bit-identical to the per-job single-state forwards they replace
+/// (the kernel contract), and a hint replaces only the Q-value
+/// computation — never an RNG draw — so trajectories and fingerprints
+/// are unchanged. Debug builds re-verify every consumed hint against
+/// the live agent. Jobs without a master yet (round 0; the grads-mode
+/// bootstrap round) or on a non-native agent get no hint: the AOT
+/// engine's forward is not bitwise-comparable to the native kernels,
+/// and tabular state is not a dense network.
+fn round_hints(
+    view: &HubView,
+    jobs: &[CampaignJob],
+    slots: &[Mutex<Option<Controller>>],
+) -> Result<Vec<Option<usize>>> {
+    let mut hints: Vec<Option<usize>> = vec![None; jobs.len()];
+    if jobs[0].agent != AgentKind::Dqn {
+        return Ok(hints);
+    }
+    let Some(AgentState::Dense { params, .. }) = view.master.as_deref() else {
+        return Ok(hints);
+    };
+    let mut rows: Vec<usize> = Vec::new();
+    let mut states: Vec<f32> = Vec::new();
+    for (i, slot) in slots.iter().enumerate() {
+        let guard = slot.lock().unwrap_or_else(|poisoned| poisoned.into_inner());
+        if let Some(state) = guard.as_ref().and_then(Controller::session_state) {
+            rows.push(i);
+            states.extend_from_slice(state);
+        }
+    }
+    if rows.is_empty() {
+        return Ok(hints);
+    }
+    let q = q_values_batch_of(params, &states, rows.len(), DenseKernel::default())?;
+    let num_actions = q.len() / rows.len();
+    for (k, &i) in rows.iter().enumerate() {
+        hints[i] = Some(argmax(&q[k * num_actions..(k + 1) * num_actions]));
+    }
+    Ok(hints)
+}
+
 /// One job's segment of one round: create-and-begin on first touch,
-/// pull the hub view, run `sync_every` tuning runs, package the push.
+/// pull the hub view, stage the round's batched greedy hint, run
+/// `sync_every` tuning runs, package the push.
+#[allow(clippy::too_many_arguments)]
 fn run_segment(
     base: &TuningConfig,
     shared: SharedLearning,
@@ -146,6 +210,7 @@ fn run_segment(
     sync_every: usize,
     view: &HubView,
     slot: &Mutex<Option<Controller>>,
+    hint: Option<usize>,
 ) -> Result<HubContribution> {
     let mut guard = slot.lock().unwrap_or_else(|poisoned| poisoned.into_inner());
     // Take the controller out of the slot (creating it on first touch),
@@ -168,6 +233,10 @@ fn run_segment(
         }
     };
     ctl.sync_from_hub(view)?;
+    // Staged *after* the pull so the hint's provenance (the master
+    // parameters the batch was evaluated over) is exactly the agent
+    // state making the next selection.
+    ctl.stage_greedy_hint(hint);
     ctl.step_session(sync_every)?;
     let contribution = ctl.hub_contribution(job_index);
     *guard = Some(ctl);

@@ -34,6 +34,31 @@ pub trait Agent: Send {
     /// bit-identical Q-vectors on every host.
     fn q_values(&mut self, state: &[f32]) -> Result<Vec<f32>>;
 
+    /// Q(s, ·) for a `[batch, state_dim]` flat row-major matrix of
+    /// states, returned as a `[batch, num_actions]` flat matrix. The
+    /// default implementation loops [`Agent::q_values`] row by row;
+    /// estimators with a real batched kernel override it (the native
+    /// DQN engine answers with one blocked GEMM per layer).
+    ///
+    /// Determinism: row `r` of the result is bit-identical to
+    /// `q_values(&states[r * dim..])` under the same learned state —
+    /// batching is a throughput optimization, never a numerics change.
+    /// The campaign round's shared greedy selection rests on this
+    /// equivalence.
+    fn q_values_batch(&mut self, states: &[f32], batch: usize) -> Result<Vec<f32>> {
+        anyhow::ensure!(
+            batch > 0 && states.len() % batch == 0,
+            "batch of {batch} does not evenly divide {} state values",
+            states.len()
+        );
+        let dim = states.len() / batch;
+        let mut out = Vec::new();
+        for r in 0..batch {
+            out.extend(self.q_values(&states[r * dim..(r + 1) * dim])?);
+        }
+        Ok(out)
+    }
+
     /// One training update on a replay minibatch.
     ///
     /// Determinism: the post-update learned state is a pure function of
@@ -269,6 +294,10 @@ impl Agent for DqnAgent {
 
     fn q_values(&mut self, state: &[f32]) -> Result<Vec<f32>> {
         self.qnet.q_values(state)
+    }
+
+    fn q_values_batch(&mut self, states: &[f32], batch: usize) -> Result<Vec<f32>> {
+        self.qnet.q_values_batch(states, batch)
     }
 
     fn train(&mut self, batch: &TrainBatch, lr: f32, gamma: f32) -> Result<TrainOutcome> {

@@ -167,6 +167,12 @@ pub struct Controller {
     /// gradient-merge worker stops shipping full state snapshots — the
     /// hub reads nothing but the gradients after its bootstrap round.
     seen_master: bool,
+    /// Precomputed greedy action for the *next* selection, staged by
+    /// the campaign round's batched `best_action` path
+    /// ([`Controller::stage_greedy_hint`]). Consumed (or invalidated)
+    /// by exactly one selection, so a stale hint can never leak into a
+    /// later run.
+    greedy_hint: Option<usize>,
 }
 
 impl Controller {
@@ -210,6 +216,7 @@ impl Controller {
             session: None,
             pending: Vec::new(),
             seen_master: false,
+            greedy_hint: None,
         })
     }
 
@@ -232,14 +239,92 @@ impl Controller {
         self.cfg.eps_start + (self.cfg.eps_end - self.cfg.eps_start) * f
     }
 
-    /// ε-greedy action selection.
+    /// ε-greedy action selection. The RNG draw order is fixed — one
+    /// `chance` draw always, one `below` draw on the explore branch —
+    /// so a staged greedy hint (which replaces only the Q-value
+    /// *computation*, never a draw) cannot shift the random stream.
     fn select_action(&mut self, state: &[f32], eps: f64) -> Result<usize> {
+        // Valid for this one selection only, whichever branch wins.
+        let hint = self.greedy_hint.take();
         if self.rng.chance(eps) {
-            Ok(self.rng.below(self.cfg.backend.num_actions() as u64) as usize)
-        } else {
-            let q = self.agent.q_values(state)?;
-            Ok(crate::runtime::argmax(&q))
+            return Ok(self.rng.below(self.cfg.backend.num_actions() as u64) as usize);
         }
+        if let Some(h) = hint {
+            #[cfg(debug_assertions)]
+            {
+                let q = self.agent.q_values(state)?;
+                debug_assert_eq!(
+                    h,
+                    crate::runtime::argmax(&q),
+                    "staged greedy hint disagrees with the live agent's argmax"
+                );
+            }
+            return Ok(h);
+        }
+        let q = self.agent.q_values(state)?;
+        Ok(crate::runtime::argmax(&q))
+    }
+
+    /// ε-greedy selection for a `[batch, state_dim]` matrix of states
+    /// through **one** batched forward pass. Draw-for-draw equivalent
+    /// to calling [`Controller::select_action`] on each row in order:
+    /// the per-row `chance`/`below` draws happen first, in row order,
+    /// exactly as the sequential path would make them; only then are
+    /// the greedy rows' Q-values computed, as a single
+    /// [`Agent::q_values_batch`] call instead of one forward per row.
+    pub fn select_actions_batch(
+        &mut self,
+        states: &[f32],
+        batch: usize,
+        eps: f64,
+    ) -> Result<Vec<usize>> {
+        let dim = self.cfg.backend.state_dim();
+        let n = self.cfg.backend.num_actions();
+        anyhow::ensure!(
+            batch > 0 && states.len() == batch * dim,
+            "batch states size {} != {batch} x {dim}",
+            states.len()
+        );
+        let mut actions = vec![0usize; batch];
+        let mut greedy_rows: Vec<usize> = Vec::new();
+        let mut greedy_states: Vec<f32> = Vec::new();
+        for r in 0..batch {
+            if self.rng.chance(eps) {
+                actions[r] = self.rng.below(n as u64) as usize;
+            } else {
+                greedy_rows.push(r);
+                greedy_states.extend_from_slice(&states[r * dim..(r + 1) * dim]);
+            }
+        }
+        if !greedy_rows.is_empty() {
+            let q = self.agent.q_values_batch(&greedy_states, greedy_rows.len())?;
+            for (k, &r) in greedy_rows.iter().enumerate() {
+                actions[r] = crate::runtime::argmax(&q[k * n..(k + 1) * n]);
+            }
+        }
+        Ok(actions)
+    }
+
+    /// Stage the precomputed greedy action for this controller's next
+    /// selection — the campaign round's batched `best_action` path.
+    /// The caller guarantees `hint` is the argmax of the **current**
+    /// agent's Q-values at the pending session state (i.e. the batch
+    /// was evaluated over exactly the parameters this agent holds);
+    /// debug builds re-verify that against the live agent. `None`
+    /// clears any leftover hint.
+    pub fn stage_greedy_hint(&mut self, hint: Option<usize>) {
+        self.greedy_hint = hint;
+    }
+
+    /// The pending RL state of the active session — the input of its
+    /// next action selection — if a session is open with runs still to
+    /// execute. This is what the campaign round batches across jobs
+    /// for the shared greedy-selection GEMM.
+    pub fn session_state(&self) -> Option<&[f32]> {
+        self.session
+            .as_ref()
+            .filter(|s| s.next_run <= self.cfg.runs)
+            .map(|s| s.prev_state.as_slice())
     }
 
     /// One minibatch: sample, train, and — when the agent reports
@@ -669,5 +754,89 @@ mod tests {
         let mut ctl = Controller::new(tabular_cfg()).unwrap();
         let t = ctl.evaluate(WorkloadKind::LatticeBoltzmann, 4, &CvarSet::vanilla(), 2).unwrap();
         assert!(t > 0.0);
+    }
+
+    fn dqn_cfg(seed: u64) -> TuningConfig {
+        TuningConfig {
+            agent: AgentKind::Dqn,
+            runs: 6,
+            noise: 0.01,
+            seed,
+            ..TuningConfig::default()
+        }
+    }
+
+    #[test]
+    fn select_actions_batch_matches_sequential_selection() {
+        // Same seed, same states: the batched path must reproduce the
+        // sequential path's actions AND leave the RNG stream in the
+        // same position at every exploration rate.
+        for eps in [0.0, 0.35, 1.0] {
+            let mut a = Controller::new(dqn_cfg(17)).unwrap();
+            let mut b = Controller::new(dqn_cfg(17)).unwrap();
+            let dim = a.cfg.backend.state_dim();
+            let batch = 7;
+            let states: Vec<f32> =
+                (0..batch * dim).map(|i| (i % 13) as f32 / 13.0 - 0.4).collect();
+            let batched = a.select_actions_batch(&states, batch, eps).unwrap();
+            let sequential: Vec<usize> = (0..batch)
+                .map(|r| b.select_action(&states[r * dim..(r + 1) * dim], eps).unwrap())
+                .collect();
+            assert_eq!(batched, sequential, "eps {eps}");
+            assert_eq!(a.rng.next_u64(), b.rng.next_u64(), "RNG streams diverged at eps {eps}");
+        }
+    }
+
+    #[test]
+    fn greedy_hint_is_consumed_once_and_never_leaks() {
+        let mut ctl = Controller::new(dqn_cfg(23)).unwrap();
+        let state = vec![0.2f32; ctl.cfg.backend.state_dim()];
+        let expect = crate::runtime::argmax(&ctl.agent.q_values(&state).unwrap());
+        ctl.stage_greedy_hint(Some(expect));
+        assert_eq!(ctl.select_action(&state, 0.0).unwrap(), expect);
+        assert!(ctl.greedy_hint.is_none(), "hint consumed by its selection");
+        // The next selection recomputes from the live agent and agrees.
+        assert_eq!(ctl.select_action(&state, 0.0).unwrap(), expect);
+        // An explore-branch selection still invalidates the hint.
+        ctl.stage_greedy_hint(Some(expect));
+        ctl.select_action(&state, 1.0).unwrap();
+        assert!(ctl.greedy_hint.is_none(), "hint dropped on the explore branch");
+        // Staging None clears an earlier hint.
+        ctl.stage_greedy_hint(Some(expect));
+        ctl.stage_greedy_hint(None);
+        assert!(ctl.greedy_hint.is_none());
+    }
+
+    #[test]
+    fn hinted_selection_replays_unhinted_selection_bitwise() {
+        // A correctly-staged hint must not change the action or the RNG
+        // stream relative to the unhinted path.
+        let mut hinted = Controller::new(dqn_cfg(41)).unwrap();
+        let mut plain = Controller::new(dqn_cfg(41)).unwrap();
+        let dim = hinted.cfg.backend.state_dim();
+        let state: Vec<f32> = (0..dim).map(|i| (i as f32) / dim as f32 - 0.5).collect();
+        for eps in [0.0, 0.5, 0.9] {
+            let h = crate::runtime::argmax(&hinted.agent.q_values(&state).unwrap());
+            hinted.stage_greedy_hint(Some(h));
+            let a = hinted.select_action(&state, eps).unwrap();
+            let b = plain.select_action(&state, eps).unwrap();
+            assert_eq!(a, b, "eps {eps}");
+        }
+        assert_eq!(hinted.rng.next_u64(), plain.rng.next_u64());
+    }
+
+    #[test]
+    fn session_state_tracks_the_pending_selection_input() {
+        let mut ctl = Controller::new(tabular_cfg()).unwrap();
+        assert!(ctl.session_state().is_none(), "no session, no state");
+        ctl.begin_session(WorkloadKind::LatticeBoltzmann, 4).unwrap();
+        let dim = ctl.cfg.backend.state_dim();
+        assert_eq!(ctl.session_state().map(<[f32]>::len), Some(dim));
+        while !ctl.session_done() {
+            ctl.step_session(3).unwrap();
+        }
+        assert!(ctl.session_state().is_none(), "exhausted session has no pending selection");
+        ctl.finish_session().unwrap();
+        assert!(ctl.session_state().is_none());
     }
 }

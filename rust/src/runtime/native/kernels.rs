@@ -1,0 +1,441 @@
+//! Dense-kernel seam for the native Q-engine: one dispatch enum, two
+//! interchangeable implementations of the forward/backward primitives.
+//!
+//! # Why a seam
+//!
+//! The scalar loops (the PR 5 implementation, preserved verbatim as
+//! [`DenseKernel::Scalar`]) walk the row-major `[d_in, d_out]` weight
+//! matrix with stride `d_out` in the hot inner loop and carry exactly
+//! one f64 dependency chain per output element — they are latency- and
+//! cache-bound, not throughput-bound. [`DenseKernel::Blocked`] register
+//! -tiles the same computation: a lane of [`FWD_LANES`] (or
+//! [`DX_LANES`]) *independent* f64 accumulators walks contiguous weight
+//! rows, so each loaded cache line feeds every lane and the FMA chains
+//! overlap. A whole `[batch, d_in]` matrix amortizes the weight traffic
+//! further — that is what `NativeQNet::forward_batch` and the campaign
+//! round's batched greedy selection buy.
+//!
+//! # Accumulation-order proof (the determinism contract)
+//!
+//! The campaign fingerprint rests on bitwise reproducibility, and f64
+//! addition is not associative — so the blocked kernels are constructed
+//! to *reassociate index ranges, never summation order*:
+//!
+//! * every output element (a `y[b, j]`, `dw[i, j]`, `db[j]` or
+//!   `dx[b, i]`) is produced by exactly one accumulator;
+//! * that accumulator receives exactly the same addends in exactly the
+//!   same ascending-index order as the scalar kernel (`i` order for the
+//!   forward, `b` order for `dw`/`db`, `j` order for `dx`), starting
+//!   from the same seed value (the bias for the forward, `0.0` else);
+//! * the lane structure only changes *which outputs are in flight
+//!   concurrently* — lanes never exchange or combine partial sums, and
+//!   remainder columns fall back to the scalar column loop, which is
+//!   the identical computation.
+//!
+//! Per output element the two kernels therefore execute the identical
+//! sequence of f64 operations and one final `as f32` cast: `Blocked`
+//! and `Scalar` are bit-identical on every input, which
+//! `rust/tests/proptests.rs::prop_blocked_kernel_is_bitwise_identical_to_scalar`
+//! pins across random shapes and batch sizes. No fingerprint
+//! re-pinning was needed anywhere.
+
+/// Which dense-kernel implementation the native engine dispatches to.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum DenseKernel {
+    /// Reference per-element loops (the original implementation). Kept
+    /// as the differential-testing baseline and for the roofline table.
+    Scalar,
+    /// Register-tiled loops with explicit independent accumulator
+    /// lanes (8-wide over output columns, 4-wide over `dx` rows).
+    /// Bit-identical to [`DenseKernel::Scalar`]; several times faster.
+    #[default]
+    Blocked,
+}
+
+impl DenseKernel {
+    pub const ALL: [DenseKernel; 2] = [DenseKernel::Scalar, DenseKernel::Blocked];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            DenseKernel::Scalar => "scalar",
+            DenseKernel::Blocked => "blocked",
+        }
+    }
+}
+
+/// Output-column lane width of the blocked forward / `dw` / `db`
+/// kernels (8 independent f64 accumulators — two AVX2 registers' worth,
+/// and enough overlapping add chains to hide FP latency on anything
+/// narrower).
+pub const FWD_LANES: usize = 8;
+
+/// Input-row lane width of the blocked `dx` kernel (each lane streams
+/// its own contiguous weight row while sharing one `dz` load).
+pub const DX_LANES: usize = 4;
+
+/// `y[b, j] = act(Σ_i x[b, i] · w[i, j] + bias[j])`, dispatched.
+#[allow(clippy::too_many_arguments)]
+pub(super) fn dense_forward(
+    kernel: DenseKernel,
+    x: &[f32],
+    batch: usize,
+    d_in: usize,
+    w: &[f32],
+    bias: &[f32],
+    d_out: usize,
+    relu: bool,
+) -> Vec<f32> {
+    debug_assert_eq!(x.len(), batch * d_in);
+    debug_assert_eq!(w.len(), d_in * d_out);
+    debug_assert_eq!(bias.len(), d_out);
+    match kernel {
+        DenseKernel::Scalar => forward_scalar(x, batch, d_in, w, bias, d_out, relu),
+        DenseKernel::Blocked => forward_blocked(x, batch, d_in, w, bias, d_out, relu),
+    }
+}
+
+/// Backward pass of one dense layer, dispatched. Returns
+/// `(dw, db, dx)`; the caller applies the previous layer's ReLU mask
+/// to `dx` before recursing.
+pub(super) fn dense_backward(
+    kernel: DenseKernel,
+    x: &[f32],
+    batch: usize,
+    d_in: usize,
+    w: &[f32],
+    d_out: usize,
+    dz: &[f32],
+) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+    debug_assert_eq!(x.len(), batch * d_in);
+    debug_assert_eq!(w.len(), d_in * d_out);
+    debug_assert_eq!(dz.len(), batch * d_out);
+    match kernel {
+        DenseKernel::Scalar => backward_scalar(x, batch, d_in, w, d_out, dz),
+        DenseKernel::Blocked => backward_blocked(x, batch, d_in, w, d_out, dz),
+    }
+}
+
+// --- scalar reference kernels (moved verbatim from mlp.rs) ---
+
+fn forward_scalar(
+    x: &[f32],
+    batch: usize,
+    d_in: usize,
+    w: &[f32],
+    bias: &[f32],
+    d_out: usize,
+    relu: bool,
+) -> Vec<f32> {
+    let mut y = vec![0.0f32; batch * d_out];
+    for b in 0..batch {
+        let row = &x[b * d_in..(b + 1) * d_in];
+        let out = &mut y[b * d_out..(b + 1) * d_out];
+        for (j, slot) in out.iter_mut().enumerate() {
+            *slot = forward_column(row, w, bias, d_out, j, relu);
+        }
+    }
+    y
+}
+
+/// One output element of the forward pass: bias-seeded f64 accumulation
+/// over `i` in ascending order. Shared by the scalar kernel and the
+/// blocked kernel's remainder columns, so the two are the same
+/// computation by construction.
+#[inline]
+fn forward_column(row: &[f32], w: &[f32], bias: &[f32], d_out: usize, j: usize, relu: bool) -> f32 {
+    let mut acc = bias[j] as f64;
+    for (i, &xi) in row.iter().enumerate() {
+        acc += xi as f64 * w[i * d_out + j] as f64;
+    }
+    let v = acc as f32;
+    if relu {
+        v.max(0.0)
+    } else {
+        v
+    }
+}
+
+fn backward_scalar(
+    x: &[f32],
+    batch: usize,
+    d_in: usize,
+    w: &[f32],
+    d_out: usize,
+    dz: &[f32],
+) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+    // dw[i, j] = Σ_b x[b, i] · dz[b, j] — f64 partials in batch order.
+    let mut dw = vec![0.0f32; d_in * d_out];
+    for i in 0..d_in {
+        for j in 0..d_out {
+            let mut acc = 0.0f64;
+            for b in 0..batch {
+                acc += x[b * d_in + i] as f64 * dz[b * d_out + j] as f64;
+            }
+            dw[i * d_out + j] = acc as f32;
+        }
+    }
+    // db[j] = Σ_b dz[b, j].
+    let mut db = vec![0.0f32; d_out];
+    for (j, slot) in db.iter_mut().enumerate() {
+        let mut acc = 0.0f64;
+        for b in 0..batch {
+            acc += dz[b * d_out + j] as f64;
+        }
+        *slot = acc as f32;
+    }
+    // dx[b, i] = Σ_j dz[b, j] · w[i, j].
+    let mut dx = vec![0.0f32; batch * d_in];
+    for b in 0..batch {
+        for i in 0..d_in {
+            dx[b * d_in + i] = dx_element(w, d_out, dz, b, i);
+        }
+    }
+    (dw, db, dx)
+}
+
+/// One `dx[b, i]` element: f64 accumulation over `j` in ascending
+/// order. Shared with the blocked kernel's remainder rows.
+#[inline]
+fn dx_element(w: &[f32], d_out: usize, dz: &[f32], b: usize, i: usize) -> f32 {
+    let mut acc = 0.0f64;
+    for j in 0..d_out {
+        acc += dz[b * d_out + j] as f64 * w[i * d_out + j] as f64;
+    }
+    acc as f32
+}
+
+// --- blocked / register-tiled kernels ---
+
+fn forward_blocked(
+    x: &[f32],
+    batch: usize,
+    d_in: usize,
+    w: &[f32],
+    bias: &[f32],
+    d_out: usize,
+    relu: bool,
+) -> Vec<f32> {
+    let mut y = vec![0.0f32; batch * d_out];
+    let tiles = d_out / FWD_LANES * FWD_LANES;
+    for b in 0..batch {
+        let row = &x[b * d_in..(b + 1) * d_in];
+        let out = &mut y[b * d_out..(b + 1) * d_out];
+        let mut j0 = 0;
+        while j0 < tiles {
+            // 8 independent accumulators, one per output column; every
+            // addend lands on its own lane in ascending-i order — the
+            // scalar kernel's exact per-element sequence.
+            let mut acc = [0.0f64; FWD_LANES];
+            for (k, a) in acc.iter_mut().enumerate() {
+                *a = bias[j0 + k] as f64;
+            }
+            for (i, &xi) in row.iter().enumerate() {
+                let xi = xi as f64;
+                let wrow = &w[i * d_out + j0..i * d_out + j0 + FWD_LANES];
+                for (a, &wk) in acc.iter_mut().zip(wrow) {
+                    *a += xi * wk as f64;
+                }
+            }
+            for (k, &a) in acc.iter().enumerate() {
+                let v = a as f32;
+                out[j0 + k] = if relu { v.max(0.0) } else { v };
+            }
+            j0 += FWD_LANES;
+        }
+        // Remainder columns take the shared scalar column path.
+        for (j, slot) in out.iter_mut().enumerate().skip(tiles) {
+            *slot = forward_column(row, w, bias, d_out, j, relu);
+        }
+    }
+    y
+}
+
+fn backward_blocked(
+    x: &[f32],
+    batch: usize,
+    d_in: usize,
+    w: &[f32],
+    d_out: usize,
+    dz: &[f32],
+) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+    let col_tiles = d_out / FWD_LANES * FWD_LANES;
+
+    // dw[i, j] = Σ_b x[b, i] · dz[b, j]: per (i, j-lane) tile, each
+    // lane accumulates its own column in ascending-b order; `dz` rows
+    // are read contiguously.
+    let mut dw = vec![0.0f32; d_in * d_out];
+    for i in 0..d_in {
+        let mut j0 = 0;
+        while j0 < col_tiles {
+            let mut acc = [0.0f64; FWD_LANES];
+            for b in 0..batch {
+                let xi = x[b * d_in + i] as f64;
+                let dzrow = &dz[b * d_out + j0..b * d_out + j0 + FWD_LANES];
+                for (a, &g) in acc.iter_mut().zip(dzrow) {
+                    *a += xi * g as f64;
+                }
+            }
+            for (k, &a) in acc.iter().enumerate() {
+                dw[i * d_out + j0 + k] = a as f32;
+            }
+            j0 += FWD_LANES;
+        }
+        for j in col_tiles..d_out {
+            let mut acc = 0.0f64;
+            for b in 0..batch {
+                acc += x[b * d_in + i] as f64 * dz[b * d_out + j] as f64;
+            }
+            dw[i * d_out + j] = acc as f32;
+        }
+    }
+
+    // db[j] = Σ_b dz[b, j]: j-lanes over contiguous dz rows, b order.
+    let mut db = vec![0.0f32; d_out];
+    let mut j0 = 0;
+    while j0 < col_tiles {
+        let mut acc = [0.0f64; FWD_LANES];
+        for b in 0..batch {
+            let dzrow = &dz[b * d_out + j0..b * d_out + j0 + FWD_LANES];
+            for (a, &g) in acc.iter_mut().zip(dzrow) {
+                *a += g as f64;
+            }
+        }
+        for (k, &a) in acc.iter().enumerate() {
+            db[j0 + k] = a as f32;
+        }
+        j0 += FWD_LANES;
+    }
+    for (j, slot) in db.iter_mut().enumerate().skip(col_tiles) {
+        let mut acc = 0.0f64;
+        for b in 0..batch {
+            acc += dz[b * d_out + j] as f64;
+        }
+        *slot = acc as f32;
+    }
+
+    // dx[b, i] = Σ_j dz[b, j] · w[i, j]: i-lanes share each dz load
+    // while every lane streams its own contiguous weight row; per
+    // (b, i) the adds run in ascending-j order.
+    let row_tiles = d_in / DX_LANES * DX_LANES;
+    let mut dx = vec![0.0f32; batch * d_in];
+    for b in 0..batch {
+        let dzrow = &dz[b * d_out..(b + 1) * d_out];
+        let mut i0 = 0;
+        while i0 < row_tiles {
+            let mut acc = [0.0f64; DX_LANES];
+            for (j, &g) in dzrow.iter().enumerate() {
+                let g = g as f64;
+                for (k, a) in acc.iter_mut().enumerate() {
+                    *a += g * w[(i0 + k) * d_out + j] as f64;
+                }
+            }
+            for (k, &a) in acc.iter().enumerate() {
+                dx[b * d_in + i0 + k] = a as f32;
+            }
+            i0 += DX_LANES;
+        }
+        for i in row_tiles..d_in {
+            dx[b * d_in + i] = dx_element(w, d_out, dz, b, i);
+        }
+    }
+
+    (dw, db, dx)
+}
+
+#[cfg(test)]
+#[allow(clippy::unwrap_used)] // tests panic by design
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn random_vec(rng: &mut Rng, n: usize) -> Vec<f32> {
+        (0..n).map(|_| rng.range_f64(-1.5, 1.5) as f32).collect()
+    }
+
+    fn bits(xs: &[f32]) -> Vec<u32> {
+        xs.iter().map(|x| x.to_bits()).collect()
+    }
+
+    #[test]
+    fn blocked_forward_is_bitwise_scalar_across_shapes() {
+        // Shapes straddle the lane width: below, at, above and far past
+        // FWD_LANES, with and without remainders, batch 1..=9.
+        let mut rng = Rng::new(42);
+        for &(d_in, d_out) in
+            &[(1, 1), (3, 2), (2, 8), (5, 9), (7, 13), (18, 64), (64, 13), (6, 16)]
+        {
+            for batch in [1, 2, 5, 9] {
+                let x = random_vec(&mut rng, batch * d_in);
+                let w = random_vec(&mut rng, d_in * d_out);
+                let bias = random_vec(&mut rng, d_out);
+                for relu in [false, true] {
+                    let a = dense_forward(
+                        DenseKernel::Scalar,
+                        &x,
+                        batch,
+                        d_in,
+                        &w,
+                        &bias,
+                        d_out,
+                        relu,
+                    );
+                    let b = dense_forward(
+                        DenseKernel::Blocked,
+                        &x,
+                        batch,
+                        d_in,
+                        &w,
+                        &bias,
+                        d_out,
+                        relu,
+                    );
+                    assert_eq!(bits(&a), bits(&b), "{d_in}x{d_out} batch {batch} relu {relu}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn blocked_backward_is_bitwise_scalar_across_shapes() {
+        let mut rng = Rng::new(7);
+        for &(d_in, d_out) in &[(1, 1), (4, 3), (5, 8), (9, 13), (18, 64), (64, 13), (3, 17)] {
+            for batch in [1, 2, 6, 11] {
+                let x = random_vec(&mut rng, batch * d_in);
+                let w = random_vec(&mut rng, d_in * d_out);
+                let dz = random_vec(&mut rng, batch * d_out);
+                let (dw_s, db_s, dx_s) =
+                    dense_backward(DenseKernel::Scalar, &x, batch, d_in, &w, d_out, &dz);
+                let (dw_b, db_b, dx_b) =
+                    dense_backward(DenseKernel::Blocked, &x, batch, d_in, &w, d_out, &dz);
+                assert_eq!(bits(&dw_s), bits(&dw_b), "dw {d_in}x{d_out} batch {batch}");
+                assert_eq!(bits(&db_s), bits(&db_b), "db {d_in}x{d_out} batch {batch}");
+                assert_eq!(bits(&dx_s), bits(&dx_b), "dx {d_in}x{d_out} batch {batch}");
+            }
+        }
+    }
+
+    #[test]
+    fn blocked_forward_matches_hand_computation_with_remainder() {
+        // d_out = 2 < FWD_LANES: the whole output is remainder columns,
+        // which must be the scalar column computation exactly.
+        let y = dense_forward(
+            DenseKernel::Blocked,
+            &[1.0, 2.0],
+            1,
+            2,
+            &[1.0, 2.0, 3.0, 4.0],
+            &[0.5, -0.5],
+            2,
+            false,
+        );
+        assert_eq!(y, vec![7.5, 9.5]);
+    }
+
+    #[test]
+    fn kernel_names_and_default() {
+        assert_eq!(DenseKernel::default(), DenseKernel::Blocked);
+        assert_eq!(DenseKernel::Scalar.name(), "scalar");
+        assert_eq!(DenseKernel::Blocked.name(), "blocked");
+        assert_eq!(DenseKernel::ALL.len(), 2);
+    }
+}

@@ -1,17 +1,23 @@
-//! Dense-layer forward/backward primitives for the native Q-network.
+//! Dense-layer forward/backward entry points for the native Q-network —
+//! thin wrappers over the [`kernels`](super::kernels) seam — plus the
+//! Huber loss.
 //!
 //! Determinism discipline (shared with `runtime/params.rs`): parameters
 //! and activations are stored as `f32`; every dot product and batch
 //! reduction accumulates partial sums in `f64` **in index order** and
-//! casts back to `f32` exactly once per output element. The code is
-//! single-threaded and branch-free over data values (apart from the
-//! ReLU max), so two calls with identical inputs are bit-identical on
-//! any machine the workspace targets — the property the campaign
-//! engine's 1-vs-N-worker fingerprint contract rests on.
+//! casts back to `f32` exactly once per output element. Both kernels
+//! behind the seam honor this identically (the blocked one by the
+//! construction proved in `kernels.rs`), the code is single-threaded
+//! and branch-free over data values (apart from the ReLU max), so two
+//! calls with identical inputs are bit-identical on any machine the
+//! workspace targets — the property the campaign engine's
+//! 1-vs-N-worker fingerprint contract rests on.
 //!
 //! Weight layout matches [`crate::runtime::QParams::init`]: a layer's
 //! weight tensor is row-major `[d_in, d_out]` (`w[i * d_out + j]`
 //! connects input `i` to output `j`), biases are `[d_out]`.
+
+use super::kernels::{self, DenseKernel};
 
 /// Huber transition point (standard DQN choice; matches
 /// `python/compile/model.py::HUBER_DELTA`).
@@ -31,8 +37,10 @@ pub(super) fn huber_grad(err: f32) -> f32 {
 
 /// `y[b, j] = act(Σ_i x[b, i] · w[i, j] + bias[j])` for a
 /// `[batch, d_in]` input and a row-major `[d_in, d_out]` weight matrix,
-/// with optional ReLU.
+/// with optional ReLU, evaluated by `kernel`.
+#[allow(clippy::too_many_arguments)]
 pub(super) fn dense_forward(
+    kernel: DenseKernel,
     x: &[f32],
     batch: usize,
     d_in: usize,
@@ -41,30 +49,16 @@ pub(super) fn dense_forward(
     d_out: usize,
     relu: bool,
 ) -> Vec<f32> {
-    debug_assert_eq!(x.len(), batch * d_in);
-    debug_assert_eq!(w.len(), d_in * d_out);
-    debug_assert_eq!(bias.len(), d_out);
-    let mut y = vec![0.0f32; batch * d_out];
-    for b in 0..batch {
-        let row = &x[b * d_in..(b + 1) * d_in];
-        let out = &mut y[b * d_out..(b + 1) * d_out];
-        for (j, slot) in out.iter_mut().enumerate() {
-            let mut acc = bias[j] as f64;
-            for (i, &xi) in row.iter().enumerate() {
-                acc += xi as f64 * w[i * d_out + j] as f64;
-            }
-            let v = acc as f32;
-            *slot = if relu { v.max(0.0) } else { v };
-        }
-    }
-    y
+    kernels::dense_forward(kernel, x, batch, d_in, w, bias, d_out, relu)
 }
 
 /// Backward pass of one dense layer given `dz = dL/d(pre-activation
 /// output)` (`[batch, d_out]`) and the layer's input activations `x`
-/// (`[batch, d_in]`). Returns `(dw, db, dx)`; the caller applies the
-/// previous layer's ReLU mask to `dx` before recursing.
+/// (`[batch, d_in]`), evaluated by `kernel`. Returns `(dw, db, dx)`;
+/// the caller applies the previous layer's ReLU mask to `dx` before
+/// recursing.
 pub(super) fn dense_backward(
+    kernel: DenseKernel,
     x: &[f32],
     batch: usize,
     d_in: usize,
@@ -72,41 +66,7 @@ pub(super) fn dense_backward(
     d_out: usize,
     dz: &[f32],
 ) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
-    debug_assert_eq!(x.len(), batch * d_in);
-    debug_assert_eq!(w.len(), d_in * d_out);
-    debug_assert_eq!(dz.len(), batch * d_out);
-    // dw[i, j] = Σ_b x[b, i] · dz[b, j] — f64 partials in batch order.
-    let mut dw = vec![0.0f32; d_in * d_out];
-    for i in 0..d_in {
-        for j in 0..d_out {
-            let mut acc = 0.0f64;
-            for b in 0..batch {
-                acc += x[b * d_in + i] as f64 * dz[b * d_out + j] as f64;
-            }
-            dw[i * d_out + j] = acc as f32;
-        }
-    }
-    // db[j] = Σ_b dz[b, j].
-    let mut db = vec![0.0f32; d_out];
-    for (j, slot) in db.iter_mut().enumerate() {
-        let mut acc = 0.0f64;
-        for b in 0..batch {
-            acc += dz[b * d_out + j] as f64;
-        }
-        *slot = acc as f32;
-    }
-    // dx[b, i] = Σ_j dz[b, j] · w[i, j].
-    let mut dx = vec![0.0f32; batch * d_in];
-    for b in 0..batch {
-        for i in 0..d_in {
-            let mut acc = 0.0f64;
-            for j in 0..d_out {
-                acc += dz[b * d_out + j] as f64 * w[i * d_out + j] as f64;
-            }
-            dx[b * d_in + i] = acc as f32;
-        }
-    }
-    (dw, db, dx)
+    kernels::dense_backward(kernel, x, batch, d_in, w, d_out, dz)
 }
 
 #[cfg(test)]
@@ -118,16 +78,29 @@ mod tests {
     fn forward_matches_hand_computation() {
         // x = [1, 2], w = [[1, 2], [3, 4]] (row-major), b = [0.5, -0.5]:
         // y = [1·1 + 2·3 + 0.5, 1·2 + 2·4 − 0.5] = [7.5, 9.5].
-        let y = dense_forward(&[1.0, 2.0], 1, 2, &[1.0, 2.0, 3.0, 4.0], &[0.5, -0.5], 2, false);
-        assert_eq!(y, vec![7.5, 9.5]);
+        for kernel in DenseKernel::ALL {
+            let y = dense_forward(
+                kernel,
+                &[1.0, 2.0],
+                1,
+                2,
+                &[1.0, 2.0, 3.0, 4.0],
+                &[0.5, -0.5],
+                2,
+                false,
+            );
+            assert_eq!(y, vec![7.5, 9.5], "{}", kernel.name());
+        }
     }
 
     #[test]
     fn relu_clamps_negative_preactivations() {
-        let y = dense_forward(&[1.0], 1, 1, &[-2.0], &[0.5], 1, true);
-        assert_eq!(y, vec![0.0]);
-        let lin = dense_forward(&[1.0], 1, 1, &[-2.0], &[0.5], 1, false);
-        assert_eq!(lin, vec![-1.5]);
+        for kernel in DenseKernel::ALL {
+            let y = dense_forward(kernel, &[1.0], 1, 1, &[-2.0], &[0.5], 1, true);
+            assert_eq!(y, vec![0.0], "{}", kernel.name());
+            let lin = dense_forward(kernel, &[1.0], 1, 1, &[-2.0], &[0.5], 1, false);
+            assert_eq!(lin, vec![-1.5], "{}", kernel.name());
+        }
     }
 
     #[test]
@@ -135,11 +108,20 @@ mod tests {
         // One sample, x = [1, 2], dz = [1, -1], w = [[1, 2], [3, 4]]:
         // dw = xᵀ dz = [[1, -1], [2, -2]], db = [1, -1],
         // dx = dz · wᵀ = [1·1 − 1·2, 1·3 − 1·4] = [-1, -1].
-        let (dw, db, dx) =
-            dense_backward(&[1.0, 2.0], 1, 2, &[1.0, 2.0, 3.0, 4.0], 2, &[1.0, -1.0]);
-        assert_eq!(dw, vec![1.0, -1.0, 2.0, -2.0]);
-        assert_eq!(db, vec![1.0, -1.0]);
-        assert_eq!(dx, vec![-1.0, -1.0]);
+        for kernel in DenseKernel::ALL {
+            let (dw, db, dx) = dense_backward(
+                kernel,
+                &[1.0, 2.0],
+                1,
+                2,
+                &[1.0, 2.0, 3.0, 4.0],
+                2,
+                &[1.0, -1.0],
+            );
+            assert_eq!(dw, vec![1.0, -1.0, 2.0, -2.0], "{}", kernel.name());
+            assert_eq!(db, vec![1.0, -1.0], "{}", kernel.name());
+            assert_eq!(dx, vec![-1.0, -1.0], "{}", kernel.name());
+        }
     }
 
     #[test]
@@ -147,10 +129,12 @@ mod tests {
         // Two identical samples double dw and db but keep per-sample dx.
         let x = [1.0, 2.0, 1.0, 2.0];
         let dz = [1.0, -1.0, 1.0, -1.0];
-        let (dw, db, dx) = dense_backward(&x, 2, 2, &[1.0, 2.0, 3.0, 4.0], 2, &dz);
-        assert_eq!(dw, vec![2.0, -2.0, 4.0, -4.0]);
-        assert_eq!(db, vec![2.0, -2.0]);
-        assert_eq!(dx, vec![-1.0, -1.0, -1.0, -1.0]);
+        for kernel in DenseKernel::ALL {
+            let (dw, db, dx) = dense_backward(kernel, &x, 2, 2, &[1.0, 2.0, 3.0, 4.0], 2, &dz);
+            assert_eq!(dw, vec![2.0, -2.0, 4.0, -4.0], "{}", kernel.name());
+            assert_eq!(db, vec![2.0, -2.0], "{}", kernel.name());
+            assert_eq!(dx, vec![-1.0, -1.0, -1.0, -1.0], "{}", kernel.name());
+        }
     }
 
     #[test]

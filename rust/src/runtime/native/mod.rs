@@ -33,9 +33,11 @@
 //! consumes.
 
 mod adam;
+mod kernels;
 mod mlp;
 
 pub use adam::{adam_step, ADAM_BETA1, ADAM_BETA2, ADAM_EPS};
+pub use kernels::{DenseKernel, DX_LANES, FWD_LANES};
 
 use anyhow::{Context, Result};
 
@@ -63,6 +65,10 @@ pub struct NativeQNet {
     pub replay_batch: usize,
     /// Bounded training-loss diagnostics (ring + running stats).
     pub losses: LossRing,
+    /// Which dense kernel evaluates forward/backward passes. Not part
+    /// of any digest or snapshot: both kernels are bit-identical
+    /// (`kernels.rs`), so this is a pure throughput knob.
+    kernel: DenseKernel,
 }
 
 impl NativeQNet {
@@ -85,6 +91,7 @@ impl NativeQNet {
             hidden: hidden.to_vec(),
             replay_batch,
             losses: LossRing::default(),
+            kernel: DenseKernel::default(),
         }
     }
 
@@ -103,6 +110,18 @@ impl NativeQNet {
 
     pub fn hidden(&self) -> &[usize] {
         &self.hidden
+    }
+
+    /// The dense kernel this network dispatches to.
+    pub fn kernel(&self) -> DenseKernel {
+        self.kernel
+    }
+
+    /// Switch the dense kernel. Safe at any point in training: the
+    /// kernels are bitwise-identical, so this can never change a
+    /// trajectory or a fingerprint — only how fast it is produced.
+    pub fn set_kernel(&mut self, kernel: DenseKernel) {
+        self.kernel = kernel;
     }
 
     /// Replace parameters *and* optimizer state together (the hub-pull
@@ -137,22 +156,42 @@ impl NativeQNet {
             let relu = l + 1 < dims.len();
             let w = &self.params.tensors[2 * l].0;
             let b = &self.params.tensors[2 * l + 1].0;
-            let y = mlp::dense_forward(acts[l].as_slice(), batch, d_in, w, b, d_out, relu);
+            let y = mlp::dense_forward(
+                self.kernel,
+                acts[l].as_slice(),
+                batch,
+                d_in,
+                w,
+                b,
+                d_out,
+                relu,
+            );
             acts.push(y);
         }
         acts
     }
 
-    /// Q(s, ·) for a `[batch, state_dim]` flat slice of states.
-    pub fn q_values_batch(&self, states: &[f32], batch: usize) -> Result<Vec<f32>> {
+    /// One full forward pass over a `[batch, state_dim]` matrix,
+    /// returning the `[batch, num_actions]` Q-value matrix. One blocked
+    /// GEMM per layer instead of `batch` single-state passes — the
+    /// throughput entry point the batched action-selection stack
+    /// ([`crate::coordinator::Agent::q_values_batch`] and the campaign
+    /// round's shared greedy selection) bottoms out in. Row `r` of the
+    /// result is bit-identical to `q_values(&states[r * state_dim..])`.
+    pub fn forward_batch(&self, states: &[f32], batch: usize) -> Result<Vec<f32>> {
         anyhow::ensure!(
-            states.len() == batch * self.state_dim && batch > 0,
+            batch > 0 && states.len() == batch * self.state_dim,
             "batch states size {} != {} x {}",
             states.len(),
             batch,
             self.state_dim
         );
         self.forward_acts(states, batch).pop().context("forward produced no activations")
+    }
+
+    /// Q(s, ·) for a `[batch, state_dim]` flat slice of states.
+    pub fn q_values_batch(&self, states: &[f32], batch: usize) -> Result<Vec<f32>> {
+        self.forward_batch(states, batch)
     }
 
     /// Q(s, ·) for a single state.
@@ -257,7 +296,7 @@ impl NativeQNet {
         for l in (0..dims.len()).rev() {
             let (d_in, d_out) = dims[l];
             let w = &self.params.tensors[2 * l].0;
-            let (dw, db, dx) = mlp::dense_backward(&acts[l], b, d_in, w, d_out, &dz);
+            let (dw, db, dx) = mlp::dense_backward(self.kernel, &acts[l], b, d_in, w, d_out, &dz);
             grads.tensors[2 * l].0 = dw;
             grads.tensors[2 * l + 1].0 = db;
             if l > 0 {
@@ -271,6 +310,70 @@ impl NativeQNet {
         }
         Ok((Some(grads), loss, td_errors))
     }
+}
+
+/// Q(s, ·) for a `[batch, state_dim]` matrix of states evaluated
+/// directly over a raw parameter set — no optimizer state, no network
+/// object. This is the campaign round's batched-greedy entry point:
+/// the hub's dense master parameters are evaluated for every live
+/// job's pending state in one blocked pass. The layer plan is derived
+/// from the tensor shapes, so any `(w, b)*` chain produced by
+/// [`QParams::init`] works.
+///
+/// Determinism: pure; row `r` of the result is bit-identical to a
+/// single-state forward of that row through a [`NativeQNet`] holding
+/// `params` under the same `kernel` (both kernels are themselves
+/// bit-identical, see `kernels.rs`).
+pub fn q_values_batch_of(
+    params: &QParams,
+    states: &[f32],
+    batch: usize,
+    kernel: DenseKernel,
+) -> Result<Vec<f32>> {
+    let dims = infer_layer_dims(params)?;
+    let state_dim = dims[0].0;
+    anyhow::ensure!(
+        batch > 0 && states.len() == batch * state_dim,
+        "batch states size {} != {} x {}",
+        states.len(),
+        batch,
+        state_dim
+    );
+    let mut act = states.to_vec();
+    for (l, &(d_in, d_out)) in dims.iter().enumerate() {
+        let relu = l + 1 < dims.len();
+        let w = &params.tensors[2 * l].0;
+        let b = &params.tensors[2 * l + 1].0;
+        act = mlp::dense_forward(kernel, &act, batch, d_in, w, b, d_out, relu);
+    }
+    Ok(act)
+}
+
+/// `(d_in, d_out)` per layer recovered from a `(w1, b1, w2, b2, …)`
+/// tensor chain, validating that the shapes actually form one.
+fn infer_layer_dims(params: &QParams) -> Result<Vec<(usize, usize)>> {
+    anyhow::ensure!(
+        !params.tensors.is_empty() && params.tensors.len() % 2 == 0,
+        "parameter set is not a (weight, bias) chain: {} tensors",
+        params.tensors.len()
+    );
+    let mut dims: Vec<(usize, usize)> = Vec::with_capacity(params.tensors.len() / 2);
+    for pair in params.tensors.chunks(2) {
+        let (w_shape, b_shape) = (&pair[0].1, &pair[1].1);
+        anyhow::ensure!(
+            w_shape.len() == 2 && b_shape.len() == 1 && w_shape[1] == b_shape[0],
+            "tensor pair shapes {w_shape:?} / {b_shape:?} are not a dense layer"
+        );
+        if let Some(&(_, prev_out)) = dims.last() {
+            anyhow::ensure!(
+                prev_out == w_shape[0],
+                "layer input {} does not match previous output {prev_out}",
+                w_shape[0]
+            );
+        }
+        dims.push((w_shape[0], w_shape[1]));
+    }
+    Ok(dims)
 }
 
 #[cfg(test)]
@@ -362,5 +465,53 @@ mod tests {
             NativeQNet::with_default_shape(18, 13, &mut Rng::new(8)).params.digest()
         );
         assert_eq!(a.params.num_parameters(), 18 * 64 + 64 + 64 * 64 + 64 + 64 * 13 + 13);
+    }
+
+    #[test]
+    fn forward_batch_rows_are_bitwise_single_forwards() {
+        let mut rng = Rng::new(11);
+        let mut net = NativeQNet::new(5, &[7, 9], 3, 4, &mut rng);
+        let batch = 6;
+        let states: Vec<f32> =
+            (0..batch * 5).map(|_| rng.range_f64(-1.0, 1.0) as f32).collect();
+        for kernel in DenseKernel::ALL {
+            net.set_kernel(kernel);
+            let flat = net.forward_batch(&states, batch).unwrap();
+            assert_eq!(flat.len(), batch * 3);
+            for r in 0..batch {
+                let single = net.q_values(&states[r * 5..(r + 1) * 5]).unwrap();
+                let row: Vec<u32> =
+                    flat[r * 3..(r + 1) * 3].iter().map(|x| x.to_bits()).collect();
+                let want: Vec<u32> = single.iter().map(|x| x.to_bits()).collect();
+                assert_eq!(row, want, "row {r} under {}", kernel.name());
+            }
+        }
+        assert!(net.forward_batch(&states, batch + 1).is_err(), "size mismatch rejected");
+    }
+
+    #[test]
+    fn q_values_batch_of_matches_the_owning_network() {
+        // The raw-parameter evaluator (the campaign hint path) must
+        // reproduce the network's own forward bitwise.
+        let mut rng = Rng::new(21);
+        let net = NativeQNet::new(4, &[6], 5, 4, &mut rng);
+        let batch = 3;
+        let states: Vec<f32> =
+            (0..batch * 4).map(|_| rng.range_f64(-1.0, 1.0) as f32).collect();
+        let via_net = net.q_values_batch(&states, batch).unwrap();
+        let via_params =
+            q_values_batch_of(&net.params, &states, batch, net.kernel()).unwrap();
+        let a: Vec<u32> = via_net.iter().map(|x| x.to_bits()).collect();
+        let b: Vec<u32> = via_params.iter().map(|x| x.to_bits()).collect();
+        assert_eq!(a, b);
+        assert!(q_values_batch_of(&net.params, &states, batch + 1, net.kernel()).is_err());
+    }
+
+    #[test]
+    fn infer_layer_dims_recovers_the_layer_plan() {
+        let net = NativeQNet::new(18, &[64, 64], 13, 32, &mut Rng::new(3));
+        assert_eq!(infer_layer_dims(&net.params).unwrap(), vec![(18, 64), (64, 64), (64, 13)]);
+        let bad = QParams::from_flat(vec![(vec![0.0; 4], vec![2, 2])]).unwrap();
+        assert!(infer_layer_dims(&bad).is_err(), "odd tensor chain rejected");
     }
 }

@@ -246,6 +246,31 @@ impl QNet {
         }
     }
 
+    /// Q(s, ·) for a `[batch, state_dim]` flat matrix, returned as a
+    /// `[batch, num_actions]` flat matrix. The native engine answers
+    /// with one blocked batched forward; the AOT engine loops its
+    /// fused single-state artifact (the batch layout is compiled in).
+    /// Row `r` is bit-identical to `q_values(&states[r * dim..])` on
+    /// both engines.
+    pub fn q_values_batch(&mut self, states: &[f32], batch: usize) -> Result<Vec<f32>> {
+        match &mut self.engine {
+            QBackend::Native(n) => n.q_values_batch(states, batch),
+            QBackend::Aot(a) => {
+                let dim = a.state_dim;
+                anyhow::ensure!(
+                    batch > 0 && states.len() == batch * dim,
+                    "batch states size {} != {batch} x {dim}",
+                    states.len()
+                );
+                let mut out = Vec::with_capacity(batch * a.num_actions);
+                for r in 0..batch {
+                    out.extend(a.q_values(&states[r * dim..(r + 1) * dim])?);
+                }
+                Ok(out)
+            }
+        }
+    }
+
     /// One Q-learning update. Returns the outcome plus, for the native
     /// engine, the raw gradients that were applied (the gradient-merge
     /// push payload; `None` from the fused AOT artifact).
@@ -391,5 +416,23 @@ mod tests {
         assert!(outcome.td_errors.is_some(), "native engine reports per-sample TDs");
         assert!(grads.is_some(), "native engine exposes raw gradients");
         assert_eq!(q.losses().len(), 1);
+    }
+
+    #[test]
+    fn q_values_batch_rows_match_single_calls() {
+        use crate::util::rng::Rng;
+        let mut rng = Rng::new(9);
+        let mut q = QNet::native(3, 5, &mut rng);
+        let batch = 4;
+        let states: Vec<f32> = (0..batch * 3).map(|_| rng.range_f64(-1.0, 1.0) as f32).collect();
+        let flat = q.q_values_batch(&states, batch).unwrap();
+        assert_eq!(flat.len(), batch * 5);
+        for r in 0..batch {
+            let single = q.q_values(&states[r * 3..(r + 1) * 3]).unwrap();
+            let row: Vec<u32> = flat[r * 5..(r + 1) * 5].iter().map(|x| x.to_bits()).collect();
+            let want: Vec<u32> = single.iter().map(|x| x.to_bits()).collect();
+            assert_eq!(row, want, "row {r}");
+        }
+        assert!(q.q_values_batch(&states, batch + 1).is_err());
     }
 }

@@ -24,6 +24,17 @@ impl Sample {
     pub fn median_us(&self) -> f64 {
         self.median_ns / 1e3
     }
+
+    /// p90 in microseconds — use this instead of hand-dividing
+    /// `p90_ns` at call sites (a recurring unit-mistake hazard).
+    pub fn p90_us(&self) -> f64 {
+        self.p90_ns / 1e3
+    }
+
+    /// p90 in milliseconds.
+    pub fn p90_ms(&self) -> f64 {
+        self.p90_ns / 1e6
+    }
 }
 
 /// Time `f` with `warmup` throwaway calls then `samples` measured calls.
@@ -108,6 +119,15 @@ mod tests {
         assert!(s.p10_ns <= s.median_ns && s.median_ns <= s.p90_ns);
         assert!(s.median_ns > 0.0);
         assert_eq!(s.iters, 32);
+    }
+
+    #[test]
+    fn unit_helpers_agree_with_raw_nanoseconds() {
+        let s = Sample { median_ns: 2e6, mean_ns: 2e6, p10_ns: 1e6, p90_ns: 3e6, iters: 1 };
+        assert_eq!(s.median_us(), 2000.0);
+        assert_eq!(s.median_ms(), 2.0);
+        assert_eq!(s.p90_us(), 3000.0);
+        assert_eq!(s.p90_ms(), 3.0);
     }
 
     #[test]

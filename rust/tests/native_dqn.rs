@@ -10,7 +10,8 @@ use aituning::backend::BackendId;
 use aituning::campaign::{job_grid, CampaignConfig, CampaignEngine, CampaignJob, CampaignReport};
 use aituning::coordinator::replay::PRIORITY_FLOOR;
 use aituning::coordinator::{
-    one_hot, AgentKind, Controller, MergeMode, ReplayPolicyKind, SharedLearning, TuningConfig,
+    one_hot, Agent, AgentKind, Controller, DqnAgent, MergeMode, ReplayPolicyKind, SharedLearning,
+    TabularAgent, TuningConfig,
 };
 use aituning::runtime::{AdamState, NativeQNet, QParams, TrainBatch};
 use aituning::simmpi::Machine;
@@ -275,6 +276,105 @@ fn grads_merge_rejects_agents_without_gradients() {
     );
     let engine = CampaignEngine::new(CampaignConfig { base: cfg, workers: 1 });
     assert!(engine.run_shared(&jobs).is_err());
+}
+
+// --- batched Q-values: the Agent-level contract behind round hints ---
+
+/// Row `r` of `q_values_batch` must be bit-identical to the single
+/// `q_values` call it replaces — the equivalence the campaign round's
+/// batched greedy selection rests on.
+fn assert_batch_matches_singles(agent: &mut dyn Agent, states: &[f32], batch: usize) {
+    let dim = states.len() / batch;
+    let rows = agent.q_values_batch(states, batch).unwrap();
+    let n = rows.len() / batch;
+    assert!(n > 0, "{}: empty batch result", agent.name());
+    for r in 0..batch {
+        let single = agent.q_values(&states[r * dim..(r + 1) * dim]).unwrap();
+        assert_eq!(
+            rows[r * n..(r + 1) * n].iter().map(|q| q.to_bits()).collect::<Vec<_>>(),
+            single.iter().map(|q| q.to_bits()).collect::<Vec<_>>(),
+            "{}: batch row {r} diverged from the single-state call",
+            agent.name()
+        );
+    }
+}
+
+#[test]
+fn q_values_batch_rows_match_single_calls_for_every_agent_impl() {
+    // Native override: one blocked GEMM per layer, both backends.
+    let mut rng = Rng::new(77);
+    for backend in BackendId::ALL {
+        let dim = backend.state_dim();
+        let mut dqn = DqnAgent::native(backend, &mut rng);
+        let states: Vec<f32> = (0..6 * dim).map(|_| rng.range_f64(-1.0, 1.0) as f32).collect();
+        assert_batch_matches_singles(&mut dqn, &states, 6);
+    }
+
+    // Tabular inherits the default row-loop; train a couple of cells
+    // first so the compared Q-vectors are not all zeros.
+    let mut tab = TabularAgent::new(3);
+    let mut actions = one_hot(0, 3);
+    actions.extend(one_hot(2, 3));
+    let batch = TrainBatch {
+        states: vec![0.2, 0.4, 0.6, 0.8, -0.3, 0.1, 0.9, -0.7],
+        actions_onehot: actions,
+        rewards: vec![0.5, -0.25],
+        next_states: vec![0.0; 8],
+        done: vec![1.0, 1.0],
+    };
+    tab.train(&batch, 0.25, 0.9).unwrap();
+    // Two trained rows plus one unseen row (table miss path).
+    let states = vec![0.2, 0.4, 0.6, 0.8, -0.3, 0.1, 0.9, -0.7, 0.5, 0.5, 0.5, 0.5];
+    assert_batch_matches_singles(&mut tab, &states, 3);
+
+    // Shape validation: flat length must match batch x state_dim.
+    let mut dqn = DqnAgent::native(BackendId::Coarrays, &mut rng);
+    assert!(dqn.q_values_batch(&[0.0; 10], 3).is_err());
+}
+
+// --- the round-hint path end-to-end: shared(1 job) == independent ---
+
+#[test]
+fn one_job_shared_dqn_campaign_replays_the_independent_tune_bitwise() {
+    // DQN sibling of the tabular pin in shared_learning.rs, and the
+    // end-to-end check on batched greedy hints: with one contributor
+    // the weights-merge master is bitwise the worker's own state
+    // (average of one round-trips through f64), so from round 1 every
+    // segment starts by consuming a hint computed by the batched
+    // kernel over that master. Any numerical or ordering drift between
+    // the hinted and the live selection would fork the trajectory and
+    // fail here.
+    let job = CampaignJob {
+        backend: BackendId::Coarrays,
+        machine: "cheyenne",
+        workload: WorkloadKind::LatticeBoltzmann,
+        images: 8,
+        agent: AgentKind::Dqn,
+        seed: 31,
+    };
+    let report =
+        dqn_engine(BackendId::Coarrays, MergeMode::Weights, 2).run_shared(&[job]).unwrap();
+
+    let mut ctl = Controller::new(TuningConfig {
+        backend: BackendId::Coarrays,
+        agent: AgentKind::Dqn,
+        runs: 6,
+        noise: 0.01,
+        seed: 31,
+        shared: None,
+        ..TuningConfig::default()
+    })
+    .unwrap();
+    let direct = ctl.tune(WorkloadKind::LatticeBoltzmann, 8).unwrap();
+
+    let pooled = &report.results[0].outcome;
+    assert_eq!(pooled.log.runs.len(), direct.log.runs.len());
+    for (a, b) in pooled.log.runs.iter().zip(&direct.log.runs) {
+        assert_eq!(a.total_time_us.to_bits(), b.total_time_us.to_bits());
+        assert_eq!(a.action, b.action);
+    }
+    assert_eq!(pooled.best_us.to_bits(), direct.best_us.to_bits());
+    assert_eq!(pooled.ensemble, direct.ensemble);
 }
 
 // --- adaptive PER: the native engine's TD errors reach the sampler ---

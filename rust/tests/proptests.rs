@@ -8,13 +8,14 @@
 //! adding a third backend cannot silently break the index layout.
 
 use aituning::backend::BackendId;
-use aituning::coordinator::{build_state, num_actions, Action, RelativeTracker};
+use aituning::coordinator::{build_state, num_actions, one_hot, Action, RelativeTracker};
 use aituning::coordinator::{ReplayBuffer, ReplayPolicyKind, Transition, NUM_ACTIONS, STATE_DIM};
 use aituning::metrics::stats::Summary;
 use aituning::mpi_t::{
     CvarDescriptor, CvarDomain, CvarId, CvarSet, PvarId, PvarStats,
 };
 use aituning::prop_assert;
+use aituning::runtime::{q_values_batch_of, DenseKernel, NativeQNet, TrainBatch};
 use aituning::simmpi::{Engine, Machine, Op, SimConfig};
 use aituning::util::prop::forall;
 use aituning::util::rng::Rng;
@@ -509,6 +510,72 @@ fn prop_collectives_episodes_are_pure_functions_of_their_seeds() {
             "episode not bit-reproducible"
         );
         prop_assert!(a.total_time_us > 0.0, "non-positive total");
+        Ok(())
+    });
+}
+
+/// Random Q-learning minibatch for the kernel-identity property below.
+fn random_train_batch(rng: &mut Rng, batch: usize, d_in: usize, n_actions: usize) -> TrainBatch {
+    let mut actions_onehot = Vec::with_capacity(batch * n_actions);
+    for _ in 0..batch {
+        actions_onehot.extend(one_hot(rng.below(n_actions as u64) as usize, n_actions));
+    }
+    TrainBatch {
+        states: (0..batch * d_in).map(|_| rng.range_f64(-2.0, 2.0) as f32).collect(),
+        actions_onehot,
+        rewards: (0..batch).map(|_| rng.range_f64(-1.0, 1.0) as f32).collect(),
+        next_states: (0..batch * d_in).map(|_| rng.range_f64(-2.0, 2.0) as f32).collect(),
+        done: (0..batch).map(|_| if rng.chance(0.3) { 1.0 } else { 0.0 }).collect(),
+    }
+}
+
+#[test]
+fn prop_blocked_kernel_is_bitwise_identical_to_scalar() {
+    // The register-tiled kernel reassociates which output elements are
+    // computed together, never the addend order within one element, so
+    // it must agree with the scalar loops to the last bit — forward,
+    // backward (gradients, loss, TD errors) and the free-function
+    // forward the campaign round's batched greedy hints run on —
+    // across arbitrary layer shapes (lane remainders included) and
+    // batch sizes.
+    forall("dense kernel bitwise identity", 64, |rng| {
+        let d_in = 1 + rng.below(20) as usize;
+        let n_actions = 1 + rng.below(15) as usize;
+        let hidden: Vec<usize> =
+            (0..rng.below(3)).map(|_| 1 + rng.below(36) as usize).collect();
+        let batch = 1 + rng.below(8) as usize;
+        let seed = rng.next_u64();
+
+        let mut scalar = NativeQNet::new(d_in, &hidden, n_actions, batch, &mut Rng::new(seed));
+        scalar.set_kernel(DenseKernel::Scalar);
+        let mut blocked = NativeQNet::new(d_in, &hidden, n_actions, batch, &mut Rng::new(seed));
+        blocked.set_kernel(DenseKernel::Blocked);
+
+        let shape = format!("{d_in}->{hidden:?}->{n_actions} batch {batch}");
+        let states: Vec<f32> =
+            (0..batch * d_in).map(|_| rng.range_f64(-2.0, 2.0) as f32).collect();
+        let qs = scalar.q_values_batch(&states, batch).map_err(|e| e.to_string())?;
+        let qb = blocked.q_values_batch(&states, batch).map_err(|e| e.to_string())?;
+        prop_assert!(
+            qs.iter().zip(&qb).all(|(a, b)| a.to_bits() == b.to_bits()),
+            "forward diverged for {shape}"
+        );
+        let qf = q_values_batch_of(&scalar.params, &states, batch, DenseKernel::Blocked)
+            .map_err(|e| e.to_string())?;
+        prop_assert!(
+            qf.iter().zip(&qs).all(|(a, b)| a.to_bits() == b.to_bits()),
+            "hint-path forward diverged for {shape}"
+        );
+
+        let tb = random_train_batch(rng, batch, d_in, n_actions);
+        let (gs, ls, tds) = scalar.train_grads(&tb, 0.9).map_err(|e| e.to_string())?;
+        let (gb, lb, tdb) = blocked.train_grads(&tb, 0.9).map_err(|e| e.to_string())?;
+        prop_assert!(gs.digest() == gb.digest(), "gradients diverged for {shape}");
+        prop_assert!(ls.to_bits() == lb.to_bits(), "loss diverged for {shape}");
+        prop_assert!(
+            tds.iter().zip(&tdb).all(|(a, b)| a.to_bits() == b.to_bits()),
+            "TD errors diverged for {shape}"
+        );
         Ok(())
     });
 }

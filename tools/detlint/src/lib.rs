@@ -323,12 +323,16 @@ struct FileClass {
 
 fn classify(path: &str) -> FileClass {
     let p = path.replace('\\', "/");
-    const RESTRICTED: [&str; 5] = [
+    const RESTRICTED: [&str; 6] = [
         "coordinator/hub.rs",
         "campaign/collector.rs",
         "campaign/report.rs",
         "campaign/shared.rs",
         "runtime/params.rs",
+        // The dense kernels compute every Q-value a fingerprinted
+        // trajectory consumes: an f32 accumulation or ambient-state
+        // read here would break bitwise reproducibility at the root.
+        "runtime/native/kernels.rs",
     ];
     let restricted =
         RESTRICTED.iter().any(|m| p.ends_with(m)) || p.contains("coordinator/replay/");
@@ -959,6 +963,18 @@ mod tests {
         let d = scan_file("rust/src/runtime/params.rs", src);
         assert_eq!(rules_at(&d), vec![(2, Rule::R2), (3, Rule::R3)]);
         assert!(scan_file("rust/src/foo.rs", src).is_empty());
+    }
+
+    #[test]
+    fn dense_kernels_are_a_restricted_module() {
+        // kernels.rs computes every Q-value a fingerprinted trajectory
+        // consumes; R2/R3 must police it like params.rs.
+        let src = "let mut acc = 0.0f32;\nacc += x as f32;\nlet t = Instant::now();\n";
+        let d = scan_file("rust/src/runtime/native/kernels.rs", src);
+        assert_eq!(rules_at(&d), vec![(2, Rule::R2), (3, Rule::R3)]);
+        // The sibling wrapper module stays unrestricted (it holds no
+        // reductions of its own).
+        assert!(scan_file("rust/src/runtime/native/mlp.rs", src).is_empty());
     }
 
     #[test]
