@@ -12,17 +12,185 @@
 //! table compares per-cell improvements at an identical run budget, and
 //! the replay-policy ablation compares uniform / stratified /
 //! prioritized retention (resident occupancy + per-merge-round cost).
+//!
+//! `--spill-scale` instead runs the campaign-store scaling study:
+//! synthetic outcome streams of 10³/10⁴/10⁵ jobs (10⁶ with `--full`)
+//! pushed through a spilling [`ShardedCollector`] + [`OutcomeSink`],
+//! asserting that peak collector residency stays flat (within 2× of
+//! the smallest size) while the in-memory collector grows linearly —
+//! the memory bound `campaign --spill-dir` rests on.
+
+use std::collections::BTreeSet;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
+use std::time::Instant;
 
 use aituning::backend::BackendId;
-use aituning::campaign::{ablation_table, job_grid, CampaignConfig, CampaignEngine};
-use aituning::coordinator::{AgentKind, ReplayPolicyKind, SharedLearning, TuningConfig};
+use aituning::campaign::store::{CampaignStore, Manifest, OutcomeSink, StoreMode};
+use aituning::campaign::{
+    ablation_table, job_grid, CampaignConfig, CampaignEngine, CampaignJob, JobOutcome,
+    ReportAccumulator, ShardedCollector, SpillSink,
+};
+use aituning::coordinator::{AgentKind, ReplayPolicyKind, SharedLearning, TuningConfig, TuningOutcome};
+use aituning::metrics::{RunRecord, TuningLog};
+use aituning::mpi_t::{CvarSet, PvarStats};
 use aituning::simmpi::Machine;
 use aituning::util::bench::Table;
+use aituning::util::rng::Rng;
 use aituning::workloads::WorkloadKind;
+
+/// One synthetic finished job: realistic shape (3-run log, cvar sets,
+/// bit-varied times) without paying for simulation, so the collector
+/// and store are the only things measured.
+fn synthetic_outcome(i: usize) -> JobOutcome {
+    let mut rng = Rng::with_stream(0xbe9c_5ca1e, i as u64);
+    let job = CampaignJob {
+        backend: BackendId::Coarrays,
+        machine: "cheyenne",
+        workload: WorkloadKind::LatticeBoltzmann,
+        images: 8,
+        agent: AgentKind::Tabular,
+        seed: i as u64,
+    };
+    let mut log = TuningLog::new(job.workload.name(), job.images);
+    let reference_us = rng.range_f64(900.0, 1100.0);
+    let best_us = reference_us * rng.range_f64(0.85, 1.0);
+    for run in 0..3 {
+        log.push(RunRecord {
+            run_index: run,
+            cvars: CvarSet::vanilla(),
+            total_time_us: rng.range_f64(800.0, 1200.0),
+            reward: rng.range_f64(-1.0, 1.0),
+            action: Some(run % 7),
+            epsilon: 0.5,
+            pvars: PvarStats::default(),
+        });
+    }
+    JobOutcome {
+        job,
+        outcome: TuningOutcome {
+            log,
+            best: CvarSet::vanilla(),
+            ensemble: CvarSet::vanilla(),
+            reference_us,
+            best_us,
+        },
+    }
+}
+
+/// The `--spill-scale` study: flat spilled residency vs linear
+/// in-memory growth, plus streamed re-aggregation timing.
+fn spill_scale(full: bool) -> anyhow::Result<()> {
+    let sizes: &[usize] =
+        if full { &[1_000, 10_000, 100_000, 1_000_000] } else { &[1_000, 10_000, 100_000] };
+    // The in-memory leg exists to show linear growth, which 10⁴ rows
+    // already demonstrate — no need to hold 10⁶ logs resident.
+    const IN_MEMORY_CAP: usize = 10_000;
+    let workers = 4;
+
+    let mut t = Table::new(&[
+        "jobs", "spilled peak resident", "in-memory peak resident", "store MB", "spill wall",
+        "stream-merge wall",
+    ]);
+    let mut spilled_residents: Vec<usize> = Vec::new();
+    for &n in sizes {
+        let dir = std::env::temp_dir()
+            .join(format!("aituning-spill-scale-{n}-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let store = CampaignStore::create(&dir, Manifest::new(StoreMode::Independent, 0, n))?;
+
+        // Spilled leg: the engine's exact push path (worker threads,
+        // shared cursor, per-shard segments).
+        let started = Instant::now();
+        let sink = Arc::new(OutcomeSink::create(store.dir(), store.next_generation()?, workers)?);
+        let collector = ShardedCollector::with_spill(
+            n,
+            workers,
+            sink as Arc<dyn SpillSink<anyhow::Result<JobOutcome>>>,
+        );
+        let cursor = AtomicUsize::new(0);
+        std::thread::scope(|scope| {
+            for w in 0..workers {
+                let collector = &collector;
+                let cursor = &cursor;
+                scope.spawn(move || loop {
+                    let i = cursor.fetch_add(1, Ordering::Relaxed);
+                    if i >= n {
+                        break;
+                    }
+                    collector.push(w, i, Ok(synthetic_outcome(i)));
+                });
+            }
+        });
+        // Everything spilled: the in-flight items are the residency.
+        let resident = collector.peak_buffered() + workers;
+        let bytes = collector.spilled_bytes();
+        let attempted: BTreeSet<usize> = (0..n).collect();
+        let residue = collector.into_spill_residue(&attempted)?;
+        assert!(residue.is_empty(), "synthetic jobs never fail");
+        let spill_wall = started.elapsed();
+        spilled_residents.push(resident);
+
+        // Stream the store back through the report accumulator (the
+        // resume/rebuild path) — O(shards) memory, never O(jobs).
+        let started = Instant::now();
+        let mut acc = ReportAccumulator::new();
+        let mut merge = store.merge()?;
+        while let Some((i, record)) = merge.next_record()? {
+            let (_, outcome) = aituning::campaign::store::format::decode_record(&record)?;
+            assert_eq!(i, acc.len(), "records must stream in job-index order");
+            acc.push(&outcome);
+        }
+        assert_eq!(acc.len(), n);
+        let merge_wall = started.elapsed();
+
+        // In-memory leg: the classic collector buffers every row.
+        let in_memory_peak = if n <= IN_MEMORY_CAP {
+            let collector = ShardedCollector::new(n, workers);
+            for i in 0..n {
+                collector.push(i % workers, i, synthetic_outcome(i));
+            }
+            let peak = collector.peak_buffered();
+            assert_eq!(peak, n, "in-memory residency is linear in job count");
+            format!("{peak}")
+        } else {
+            format!("(= {n})")
+        };
+
+        t.row(vec![
+            n.to_string(),
+            resident.to_string(),
+            in_memory_peak,
+            format!("{:.1}", bytes as f64 / (1024.0 * 1024.0)),
+            format!("{:.2}s", spill_wall.as_secs_f64()),
+            format!("{:.2}s", merge_wall.as_secs_f64()),
+        ]);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+    println!("=== campaign-store spill scaling ({workers} workers) ===");
+    t.print();
+    let base = spilled_residents[0];
+    for (&n, &resident) in sizes.iter().zip(&spilled_residents) {
+        assert!(
+            resident <= base.saturating_mul(2),
+            "spilled residency must stay flat: {resident} rows at {n} jobs vs {base} at {}",
+            sizes[0]
+        );
+    }
+    println!(
+        "peak spilled residency stayed within 2x of the {}-job baseline across {}x more jobs",
+        sizes[0],
+        sizes[sizes.len() - 1] / sizes[0]
+    );
+    Ok(())
+}
 
 fn main() -> anyhow::Result<()> {
     let quick = std::env::args().any(|a| a == "--quick");
     let full = std::env::args().any(|a| a == "--full");
+    if std::env::args().any(|a| a == "--spill-scale") {
+        return spill_scale(full);
+    }
     let image_counts: &[usize] = if full {
         &[64, 128, 256, 512, 1024, 2048]
     } else if quick {

@@ -9,18 +9,26 @@
 //! instead of re-run. Keys include every input that affects the
 //! simulated total time, so a hit is exact by construction.
 
-use std::collections::HashMap;
+use std::collections::BTreeMap;
+use std::fs::File;
+use std::io::{BufReader, BufWriter, Write};
+use std::path::Path;
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Mutex;
 
-use anyhow::Result;
+use anyhow::{Context, Result};
 
 use crate::mpi_t::CvarSet;
 use crate::simmpi::Machine;
+use crate::util::json::{num, obj, s, Json};
 use crate::workloads::WorkloadKind;
 
+use super::store::format::{self, FrameReader};
+
 /// Everything that determines one simulated episode's total time.
-#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+/// Ordered (derive order = field order) so the persisted cache file is
+/// written in one canonical key order regardless of insertion order.
+#[derive(Debug, Clone, PartialEq, Eq, PartialOrd, Ord, Hash)]
 pub struct EpisodeKey {
     pub workload: WorkloadKind,
     pub images: usize,
@@ -66,11 +74,11 @@ impl EpisodeKey {
 /// bit-identical regardless of interleaving.
 #[derive(Debug, Default)]
 pub struct EpisodeCache {
-    /// Audited lookup-only (detlint R1): this map is only ever probed
-    /// by key (`get`/`insert`/`len`/`is_empty`) — nothing iterates it,
-    /// so its hash order can never reach a report or fingerprint. If a
-    /// future change needs to enumerate entries, switch to `BTreeMap`.
-    map: Mutex<HashMap<EpisodeKey, f64>>,
+    /// `BTreeMap`, not a hash map: [`EpisodeCache::save_to`] iterates
+    /// the entries into a persisted file, and key order is the only
+    /// iteration order that makes two caches with the same entries
+    /// serialize to the same bytes regardless of insertion history.
+    map: Mutex<BTreeMap<EpisodeKey, f64>>,
     hits: AtomicUsize,
     misses: AtomicUsize,
 }
@@ -80,9 +88,40 @@ pub struct EpisodeCache {
 /// lock holds valid data and propagating the poison would only turn
 /// one worker's panic into a campaign-wide abort.
 fn lock_map(
-    map: &Mutex<HashMap<EpisodeKey, f64>>,
-) -> std::sync::MutexGuard<'_, HashMap<EpisodeKey, f64>> {
+    map: &Mutex<BTreeMap<EpisodeKey, f64>>,
+) -> std::sync::MutexGuard<'_, BTreeMap<EpisodeKey, f64>> {
     map.lock().unwrap_or_else(|poisoned| poisoned.into_inner())
+}
+
+fn encode_key(k: &EpisodeKey) -> Json {
+    obj(vec![
+        ("workload", s(k.workload.name())),
+        ("images", num(k.images as f64)),
+        ("cvars", format::encode_cvars(&k.cvars)),
+        ("machine", s(k.machine)),
+        ("noise_bits", format::hex_u64(k.noise_bits)),
+        ("workload_seed", format::hex_u64(k.workload_seed)),
+        ("run_seed", format::hex_u64(k.run_seed)),
+    ])
+}
+
+fn decode_key(j: &Json) -> Result<EpisodeKey> {
+    let workload_name =
+        j.at(&["workload"])?.as_str().context("episode key workload must be a string")?;
+    let machine_name =
+        j.at(&["machine"])?.as_str().context("episode key machine must be a string")?;
+    Ok(EpisodeKey {
+        workload: WorkloadKind::parse(workload_name)
+            .with_context(|| format!("unknown workload {workload_name:?} in episode cache"))?,
+        images: format::usize_of(j.at(&["images"])?)?,
+        cvars: format::decode_cvars(j.at(&["cvars"])?)?,
+        machine: Machine::by_name(machine_name)
+            .with_context(|| format!("unknown machine {machine_name:?} in episode cache"))?
+            .name,
+        noise_bits: format::u64_of(j.at(&["noise_bits"])?)?,
+        workload_seed: format::u64_of(j.at(&["workload_seed"])?)?,
+        run_seed: format::u64_of(j.at(&["run_seed"])?)?,
+    })
 }
 
 impl EpisodeCache {
@@ -123,6 +162,46 @@ impl EpisodeCache {
     /// Lookups that had to simulate.
     pub fn misses(&self) -> usize {
         self.misses.load(Ordering::Relaxed)
+    }
+
+    /// Persist every entry to `path` in the campaign store's frame
+    /// format ([`format::write_frame`]), key-ascending, f64 values as
+    /// exact bit patterns. Byte-stable: two caches holding the same
+    /// entries write identical files regardless of insertion order.
+    pub fn save_to(&self, path: &Path) -> Result<()> {
+        let mut out = BufWriter::new(
+            File::create(path).with_context(|| format!("creating {}", path.display()))?,
+        );
+        for (key, &us) in lock_map(&self.map).iter() {
+            let record = obj(vec![("key", encode_key(key)), ("us", format::hex_f64(us))]);
+            format::write_frame(&mut out, &record)?;
+        }
+        out.flush().with_context(|| format!("flushing {}", path.display()))?;
+        Ok(())
+    }
+
+    /// Merge entries from `path` into the cache (a missing file is an
+    /// empty cache — the first run of a fresh store). A torn trailing
+    /// frame (crash mid-save) drops only that frame. Returns the
+    /// number of entries loaded.
+    pub fn load_from(&self, path: &Path) -> Result<usize> {
+        if !path.exists() {
+            return Ok(0);
+        }
+        let file = File::open(path).with_context(|| format!("opening {}", path.display()))?;
+        let mut reader = FrameReader::new(BufReader::new(file));
+        let mut entries = Vec::new();
+        while let Some(record) = reader.next_frame()? {
+            let key = decode_key(record.at(&["key"])?)?;
+            let us = format::f64_of(record.at(&["us"])?)?;
+            entries.push((key, us));
+        }
+        let loaded = entries.len();
+        let mut map = lock_map(&self.map);
+        for (key, us) in entries {
+            map.insert(key, us);
+        }
+        Ok(loaded)
     }
 }
 
@@ -177,5 +256,63 @@ mod tests {
         assert!(cache.get_or_run(key(1), || anyhow::bail!("boom")).is_err());
         assert!(cache.is_empty());
         assert_eq!(cache.get_or_run(key(1), || Ok(5.0)).unwrap(), 5.0);
+    }
+
+    fn temp_file(tag: &str) -> std::path::PathBuf {
+        std::env::temp_dir()
+            .join(format!("aituning-cache-{tag}-{}.jsonl", std::process::id()))
+    }
+
+    #[test]
+    fn save_load_round_trips_and_is_insertion_order_independent() {
+        let path = temp_file("roundtrip");
+        let a = EpisodeCache::new();
+        a.get_or_run(key(1), || Ok(1.5)).unwrap();
+        a.get_or_run(key(2), || Ok(f64::from_bits(0x7ff8_0000_0000_0001))).unwrap();
+        a.save_to(&path).unwrap();
+        let bytes_a = std::fs::read(&path).unwrap();
+
+        // Same entries inserted in the opposite order → same bytes.
+        let b = EpisodeCache::new();
+        b.get_or_run(key(2), || Ok(f64::from_bits(0x7ff8_0000_0000_0001))).unwrap();
+        b.get_or_run(key(1), || Ok(1.5)).unwrap();
+        b.save_to(&path).unwrap();
+        assert_eq!(std::fs::read(&path).unwrap(), bytes_a);
+
+        let c = EpisodeCache::new();
+        assert_eq!(c.load_from(&path).unwrap(), 2);
+        assert_eq!(c.len(), 2);
+        // Loaded values answer lookups bit-exactly (NaN payload included).
+        let mut ran = false;
+        let t = c
+            .get_or_run(key(2), || {
+                ran = true;
+                Ok(0.0)
+            })
+            .unwrap();
+        assert!(!ran, "loaded entry must be a cache hit");
+        assert_eq!(t.to_bits(), 0x7ff8_0000_0000_0001);
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn loading_a_missing_file_is_empty_not_an_error() {
+        let cache = EpisodeCache::new();
+        assert_eq!(cache.load_from(&temp_file("missing-never-created")).unwrap(), 0);
+        assert!(cache.is_empty());
+    }
+
+    #[test]
+    fn torn_trailing_frame_drops_only_that_entry() {
+        let path = temp_file("torn");
+        let a = EpisodeCache::new();
+        a.get_or_run(key(1), || Ok(1.0)).unwrap();
+        a.get_or_run(key(2), || Ok(2.0)).unwrap();
+        a.save_to(&path).unwrap();
+        let bytes = std::fs::read(&path).unwrap();
+        std::fs::write(&path, &bytes[..bytes.len() - 9]).unwrap();
+        let b = EpisodeCache::new();
+        assert_eq!(b.load_from(&path).unwrap(), 1);
+        std::fs::remove_file(&path).unwrap();
     }
 }

@@ -4,55 +4,261 @@
 //! lock ever contended is uncontended in steady state; the merge step
 //! then reassembles the items in job-index order, making the collected
 //! output independent of thread scheduling.
+//!
+//! With a [`SpillSink`] attached, a pushed item that the sink persists
+//! is dropped from memory immediately — the shard keeps only the
+//! `(index, spilled)` marker — so the collector's residency is bounded
+//! by the handful of in-flight items rather than by campaign size.
+//! Items the sink *declines* (e.g. failed jobs, which have no durable
+//! representation) stay buffered exactly as in the in-memory path.
 
-use std::sync::Mutex;
+use std::collections::BTreeSet;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+
+/// Where a collector spills completed items.
+///
+/// Determinism: `spill` observes one `(shard, index, item)` at a time
+/// and must not reorder or transform records — the store it writes is
+/// merged back in index order, so whatever it persists must decode to
+/// exactly the item it was handed. Returns `Ok(Some(bytes))` when the
+/// item was durably persisted (the collector may drop it),
+/// `Ok(None)` to decline (the collector keeps it in memory), `Err` to
+/// abort the campaign (the first error is surfaced after the pool
+/// joins; subsequent items are kept, not spilled).
+pub trait SpillSink<T>: Send + Sync {
+    fn spill(&self, shard: usize, index: usize, item: &T) -> anyhow::Result<Option<usize>>;
+}
+
+/// Typed merge failure: exactly which indices a crashed or buggy pool
+/// failed to deliver (and which arrived twice). `--resume` reporting
+/// depends on the indices, not just the counts.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct CollectorError {
+    pub expected: usize,
+    pub collected: usize,
+    pub missing: Vec<usize>,
+    pub duplicates: Vec<usize>,
+}
+
+/// How many offending indices an error message lists before eliding.
+const LISTED_INDICES: usize = 16;
+
+fn list_indices(ixs: &[usize]) -> String {
+    let mut out = String::new();
+    for (n, i) in ixs.iter().take(LISTED_INDICES).enumerate() {
+        if n > 0 {
+            out.push_str(", ");
+        }
+        out.push_str(&i.to_string());
+    }
+    if ixs.len() > LISTED_INDICES {
+        out.push_str(&format!(", … ({} total)", ixs.len()));
+    }
+    out
+}
+
+impl std::fmt::Display for CollectorError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "collector holds {} of {} items", self.collected, self.expected)?;
+        if !self.missing.is_empty() {
+            write!(f, "; missing indices [{}]", list_indices(&self.missing))?;
+        }
+        if !self.duplicates.is_empty() {
+            write!(f, "; duplicated indices [{}]", list_indices(&self.duplicates))?;
+        }
+        Ok(())
+    }
+}
+
+impl std::error::Error for CollectorError {}
 
 /// Per-worker sharded `(index, item)` store with an order-restoring
-/// merge.
-#[derive(Debug)]
+/// merge and an optional bounded-memory spill path.
 pub struct ShardedCollector<T> {
-    shards: Vec<Mutex<Vec<(usize, T)>>>,
+    /// `None` marks an item the sink persisted (index accounted for,
+    /// payload on disk).
+    shards: Vec<Mutex<Vec<(usize, Option<T>)>>>,
     expected: usize,
+    sink: Option<Arc<dyn SpillSink<T>>>,
+    /// First sink failure; later pushes fall back to buffering.
+    sink_error: Mutex<Option<anyhow::Error>>,
+    buffered: AtomicUsize,
+    peak_buffered: AtomicUsize,
+    spilled: AtomicUsize,
+    spilled_bytes: AtomicUsize,
 }
 
 impl<T> ShardedCollector<T> {
-    /// Collector for `expected` items spread over `shards` workers.
+    /// In-memory collector for `expected` items over `shards` workers.
     pub fn new(expected: usize, shards: usize) -> ShardedCollector<T> {
         ShardedCollector {
             shards: (0..shards.max(1)).map(|_| Mutex::new(Vec::new())).collect(),
             expected,
+            sink: None,
+            sink_error: Mutex::new(None),
+            buffered: AtomicUsize::new(0),
+            peak_buffered: AtomicUsize::new(0),
+            spilled: AtomicUsize::new(0),
+            spilled_bytes: AtomicUsize::new(0),
         }
+    }
+
+    /// Spilling collector: pushed items are offered to `sink` first and
+    /// only buffered if the sink declines (or has already failed).
+    pub fn with_spill(
+        expected: usize,
+        shards: usize,
+        sink: Arc<dyn SpillSink<T>>,
+    ) -> ShardedCollector<T> {
+        let mut c = ShardedCollector::new(expected, shards);
+        c.sink = Some(sink);
+        c
     }
 
     /// Record the result for global index `index` from worker `shard`.
     ///
     /// A poisoned shard lock is recovered, not propagated: the vector
     /// behind it is append-only, so a panicking sibling can never leave
-    /// it in a torn state, and `into_merged` still catches any item it
+    /// it in a torn state, and the merge still catches any item it
     /// failed to deliver.
     pub fn push(&self, shard: usize, index: usize, item: T) {
+        let entry = match &self.sink {
+            Some(sink) if self.sink_error.lock().unwrap_or_else(|p| p.into_inner()).is_none() => {
+                match sink.spill(shard, index, &item) {
+                    Ok(Some(bytes)) => {
+                        self.spilled.fetch_add(1, Ordering::Relaxed);
+                        self.spilled_bytes.fetch_add(bytes, Ordering::Relaxed);
+                        (index, None)
+                    }
+                    Ok(None) => (index, Some(item)),
+                    Err(e) => {
+                        let mut slot =
+                            self.sink_error.lock().unwrap_or_else(|p| p.into_inner());
+                        if slot.is_none() {
+                            *slot = Some(e);
+                        }
+                        (index, Some(item))
+                    }
+                }
+            }
+            _ => (index, Some(item)),
+        };
+        if entry.1.is_some() {
+            let now = self.buffered.fetch_add(1, Ordering::Relaxed) + 1;
+            self.peak_buffered.fetch_max(now, Ordering::Relaxed);
+        }
         self.shards[shard % self.shards.len()]
             .lock()
             .unwrap_or_else(|poisoned| poisoned.into_inner())
-            .push((index, item));
+            .push(entry);
     }
 
-    /// Merge all shards back into index order.
-    ///
-    /// Panics if the number of collected items differs from `expected`
-    /// or any index is duplicated/missing — either would mean a worker
-    /// died without reporting, which must not be silent.
-    pub fn into_merged(self) -> Vec<T> {
-        let mut all: Vec<(usize, T)> = Vec::with_capacity(self.expected);
+    /// Most items held in memory at once (spill mode: the declined /
+    /// not-yet-spilled residency, the number the scaling bench pins).
+    pub fn peak_buffered(&self) -> usize {
+        self.peak_buffered.load(Ordering::Relaxed)
+    }
+
+    /// Items the sink persisted.
+    pub fn spilled(&self) -> usize {
+        self.spilled.load(Ordering::Relaxed)
+    }
+
+    /// Total bytes the sink reported writing.
+    pub fn spilled_bytes(&self) -> usize {
+        self.spilled_bytes.load(Ordering::Relaxed)
+    }
+
+    fn drain(self) -> (Vec<(usize, Option<T>)>, Option<anyhow::Error>) {
+        let mut all: Vec<(usize, Option<T>)> = Vec::with_capacity(self.expected.min(1 << 20));
         for shard in self.shards {
             all.extend(shard.into_inner().unwrap_or_else(|poisoned| poisoned.into_inner()));
         }
         all.sort_by_key(|(i, _)| *i);
-        assert_eq!(all.len(), self.expected, "collector item count mismatch");
-        for (pos, (i, _)) in all.iter().enumerate() {
-            assert_eq!(*i, pos, "collector indices must be exactly 0..expected");
+        let err = self.sink_error.into_inner().unwrap_or_else(|poisoned| poisoned.into_inner());
+        (all, err)
+    }
+
+    fn index_error(expected_ixs: &BTreeSet<usize>, got: &[usize]) -> CollectorError {
+        let got_set: BTreeSet<usize> = got.iter().copied().collect();
+        let mut duplicates: Vec<usize> = Vec::new();
+        for w in got.windows(2) {
+            if w[0] == w[1] && duplicates.last() != Some(&w[0]) {
+                duplicates.push(w[0]);
+            }
         }
-        all.into_iter().map(|(_, item)| item).collect()
+        CollectorError {
+            expected: expected_ixs.len(),
+            collected: got.len(),
+            missing: expected_ixs.difference(&got_set).copied().collect(),
+            duplicates,
+        }
+    }
+
+    /// Merge all shards back into index order. Errors (instead of
+    /// panicking) when the delivered index set is not exactly
+    /// `0..expected`, naming the missing/duplicated indices — in spill
+    /// mode that is a recoverable state (`--resume` re-runs them).
+    /// Only valid without a sink: a spilled item has no in-memory
+    /// payload to merge (use [`ShardedCollector::into_spill_residue`]).
+    pub fn into_merged(self) -> Result<Vec<T>, CollectorError> {
+        let expected_ixs: BTreeSet<usize> = (0..self.expected).collect();
+        let (all, _) = self.drain();
+        let got: Vec<usize> = all.iter().map(|(i, _)| *i).collect();
+        let ok = got.len() == expected_ixs.len() && got.iter().enumerate().all(|(p, i)| p == *i);
+        if !ok {
+            return Err(Self::index_error(&expected_ixs, &got));
+        }
+        let mut out = Vec::with_capacity(all.len());
+        for (i, item) in all {
+            match item {
+                Some(item) => out.push(item),
+                // A spilled marker in a merge-from-memory call: the
+                // payload is on disk, not here.
+                None => {
+                    return Err(CollectorError {
+                        expected: self.expected,
+                        collected: i,
+                        missing: vec![i],
+                        duplicates: Vec::new(),
+                    });
+                }
+            }
+        }
+        Ok(out)
+    }
+
+    /// Finish a spill-mode pool: surface the first sink error, check
+    /// that exactly the `attempted` indices were delivered, and return
+    /// the items the sink declined (index-ascending). The engine
+    /// inspects these — for campaign outcomes they are the failed jobs.
+    pub fn into_spill_residue(
+        self,
+        attempted: &BTreeSet<usize>,
+    ) -> anyhow::Result<Vec<(usize, T)>> {
+        let (all, sink_error) = self.drain();
+        if let Some(e) = sink_error {
+            return Err(e.context("campaign spill sink failed"));
+        }
+        let got: Vec<usize> = all.iter().map(|(i, _)| *i).collect();
+        let delivered: BTreeSet<usize> = got.iter().copied().collect();
+        if delivered != *attempted || got.len() != attempted.len() {
+            return Err(Self::index_error(attempted, &got).into());
+        }
+        Ok(all.into_iter().filter_map(|(i, item)| item.map(|t| (i, t))).collect())
+    }
+}
+
+impl<T> std::fmt::Debug for ShardedCollector<T> {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("ShardedCollector")
+            .field("shards", &self.shards.len())
+            .field("expected", &self.expected)
+            .field("spilling", &self.sink.is_some())
+            .field("spilled", &self.spilled())
+            .field("peak_buffered", &self.peak_buffered())
+            .finish()
     }
 }
 
@@ -69,7 +275,7 @@ mod tests {
         c.push(1, 1, "b");
         c.push(0, 4, "e");
         c.push(0, 2, "c");
-        assert_eq!(c.into_merged(), vec!["a", "b", "c", "d", "e"]);
+        assert_eq!(c.into_merged().unwrap(), vec!["a", "b", "c", "d", "e"]);
     }
 
     #[test]
@@ -77,15 +283,40 @@ mod tests {
         let c = ShardedCollector::new(2, 1);
         c.push(7, 1, 10);
         c.push(3, 0, 20);
-        assert_eq!(c.into_merged(), vec![20, 10]);
+        assert_eq!(c.into_merged().unwrap(), vec![20, 10]);
     }
 
     #[test]
-    #[should_panic(expected = "count mismatch")]
-    fn missing_items_panic() {
-        let c: ShardedCollector<u32> = ShardedCollector::new(3, 2);
+    fn missing_items_error_names_the_indices() {
+        let c: ShardedCollector<u32> = ShardedCollector::new(4, 2);
         c.push(0, 0, 1);
-        c.into_merged();
+        c.push(1, 2, 3);
+        let err = c.into_merged().unwrap_err();
+        assert_eq!(err.expected, 4);
+        assert_eq!(err.collected, 2);
+        assert_eq!(err.missing, vec![1, 3]);
+        assert!(err.duplicates.is_empty());
+        let msg = err.to_string();
+        assert!(msg.contains("missing indices [1, 3]"), "{msg}");
+    }
+
+    #[test]
+    fn duplicate_items_error_names_the_indices() {
+        let c: ShardedCollector<u32> = ShardedCollector::new(2, 2);
+        c.push(0, 0, 1);
+        c.push(0, 1, 2);
+        c.push(1, 1, 3);
+        let err = c.into_merged().unwrap_err();
+        assert_eq!(err.duplicates, vec![1]);
+        assert!(err.to_string().contains("duplicated indices [1]"), "{}", err);
+    }
+
+    #[test]
+    fn long_index_lists_are_elided() {
+        let c: ShardedCollector<u32> = ShardedCollector::new(40, 1);
+        let err = c.into_merged().unwrap_err();
+        assert_eq!(err.missing.len(), 40);
+        assert!(err.to_string().contains("… (40 total)"), "{}", err);
     }
 
     #[test]
@@ -101,8 +332,69 @@ mod tests {
                 });
             }
         });
-        let merged = c.into_merged();
+        let merged = c.into_merged().unwrap();
         assert_eq!(merged.len(), 64);
         assert!(merged.iter().enumerate().all(|(i, &v)| v == i * 10));
+    }
+
+    /// Sink that persists even items (into a shared Vec) and declines
+    /// odd ones.
+    struct EvenSink(Mutex<Vec<(usize, i32)>>);
+    impl SpillSink<i32> for EvenSink {
+        fn spill(&self, _shard: usize, index: usize, item: &i32) -> anyhow::Result<Option<usize>> {
+            if index % 2 == 0 {
+                self.0.lock().unwrap().push((index, *item));
+                Ok(Some(8))
+            } else {
+                Ok(None)
+            }
+        }
+    }
+
+    #[test]
+    fn spill_mode_bounds_residency_and_keeps_declined_items() {
+        let sink = Arc::new(EvenSink(Mutex::new(Vec::new())));
+        let c = ShardedCollector::with_spill(6, 2, sink.clone() as Arc<dyn SpillSink<i32>>);
+        for i in 0..6 {
+            c.push(i % 2, i, i as i32 * 100);
+        }
+        assert_eq!(c.spilled(), 3);
+        assert_eq!(c.spilled_bytes(), 24);
+        assert_eq!(c.peak_buffered(), 3); // only the declined odd items
+        let attempted: BTreeSet<usize> = (0..6).collect();
+        let residue = c.into_spill_residue(&attempted).unwrap();
+        assert_eq!(residue, vec![(1, 100), (3, 300), (5, 500)]);
+        assert_eq!(sink.0.lock().unwrap().as_slice(), &[(0, 0), (2, 200), (4, 400)]);
+    }
+
+    #[test]
+    fn spill_residue_validates_the_attempted_set() {
+        let sink = Arc::new(EvenSink(Mutex::new(Vec::new())));
+        let c = ShardedCollector::with_spill(4, 1, sink as Arc<dyn SpillSink<i32>>);
+        c.push(0, 0, 1);
+        c.push(0, 3, 2);
+        let attempted: BTreeSet<usize> = (0..4).collect();
+        let err = c.into_spill_residue(&attempted).unwrap_err();
+        let collector_err = err.downcast_ref::<CollectorError>().unwrap();
+        assert_eq!(collector_err.missing, vec![1, 2]);
+    }
+
+    struct FailingSink;
+    impl SpillSink<i32> for FailingSink {
+        fn spill(&self, _s: usize, _i: usize, _t: &i32) -> anyhow::Result<Option<usize>> {
+            anyhow::bail!("disk full")
+        }
+    }
+
+    #[test]
+    fn first_sink_error_is_surfaced_and_items_fall_back_to_memory() {
+        let c = ShardedCollector::with_spill(2, 1, Arc::new(FailingSink) as Arc<dyn SpillSink<i32>>);
+        c.push(0, 0, 1);
+        c.push(0, 1, 2);
+        assert_eq!(c.spilled(), 0);
+        assert_eq!(c.peak_buffered(), 2); // both kept despite the sink
+        let attempted: BTreeSet<usize> = (0..2).collect();
+        let err = c.into_spill_residue(&attempted).unwrap_err();
+        assert!(format!("{err:#}").contains("disk full"), "{err:#}");
     }
 }

@@ -9,21 +9,25 @@
 //! merged back in job-index order, the campaign report is bit-identical
 //! at 1 worker and at N workers — parallelism changes wall-clock only.
 
+use std::collections::BTreeSet;
+use std::path::Path;
 use std::sync::atomic::{AtomicUsize, Ordering};
-use std::time::Instant;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
 
-use anyhow::Result;
+use anyhow::{Context, Result};
 
 use crate::coordinator::controller::seed_mix;
-use crate::coordinator::{Controller, TuningConfig};
+use crate::coordinator::{Controller, HubSummary, TuningConfig};
 use crate::mpi_t::CvarSet;
 use crate::simmpi::Machine;
 use crate::workloads::WorkloadKind;
 
 use super::cache::{EpisodeCache, EpisodeKey};
-use super::collector::ShardedCollector;
+use super::collector::{ShardedCollector, SpillSink};
 use super::job::CampaignJob;
-use super::report::{CampaignReport, JobOutcome};
+use super::report::{CampaignReport, JobOutcome, ReportAccumulator, SpilledReport};
+use super::store::{campaign_digest, format, CampaignStore, Manifest, OutcomeSink, StoreMode};
 
 /// Engine settings: the shared tuning template plus the pool size.
 #[derive(Debug, Clone)]
@@ -99,8 +103,107 @@ impl CampaignEngine {
                 });
             }
         });
-        let results = collector.into_merged().into_iter().collect::<Result<Vec<_>>>()?;
+        let results = collector.into_merged()?.into_iter().collect::<Result<Vec<_>>>()?;
         Ok(CampaignReport { results, wall_clock: started.elapsed(), workers, hub: None })
+    }
+
+    /// [`CampaignEngine::run`] with bounded memory and crash resume:
+    /// workers spill each completed job to a per-shard segment in
+    /// `dir`, aggregation streams the store back in job-index order,
+    /// and the returned report's fingerprint is bitwise identical to
+    /// the in-memory path's. With `opts.resume`, jobs the store
+    /// already holds are skipped — the resumed campaign's fingerprint
+    /// equals an uninterrupted run's because both paths aggregate the
+    /// same bit-exact records in the same order.
+    pub fn run_spilled(
+        &self,
+        jobs: &[CampaignJob],
+        dir: &Path,
+        opts: &SpillOptions,
+    ) -> Result<SpillRun> {
+        anyhow::ensure!(!jobs.is_empty(), "campaign needs at least one job");
+        let digest = campaign_digest(&self.cfg.base, jobs, None);
+        let started = Instant::now();
+        let mut store = if opts.resume {
+            let store = CampaignStore::open(dir)?;
+            store.validate(StoreMode::Independent, digest, jobs.len())?;
+            store
+        } else {
+            CampaignStore::create(dir, Manifest::new(StoreMode::Independent, digest, jobs.len()))?
+        };
+        self.cache.load_from(&store.episodes_path())?;
+        let completed = if opts.resume { store.scan_completed()? } else { BTreeSet::new() };
+        if let Some(&stray) = completed.range(jobs.len()..).next() {
+            anyhow::bail!(
+                "store {} holds job index {stray}, past this {}-job campaign",
+                dir.display(),
+                jobs.len()
+            );
+        }
+        let loaded = completed.len();
+        let mut pending: Vec<usize> = (0..jobs.len()).filter(|i| !completed.contains(i)).collect();
+        let budget = opts.crash_after.unwrap_or(pending.len()).min(pending.len());
+        let interrupted = budget < pending.len();
+        pending.truncate(budget);
+
+        if !pending.is_empty() {
+            let workers = self.workers_for(pending.len());
+            let sink = Arc::new(OutcomeSink::create(store.dir(), store.next_generation()?, workers)?);
+            let collector = ShardedCollector::with_spill(
+                pending.len(),
+                workers,
+                sink as Arc<dyn SpillSink<Result<JobOutcome>>>,
+            );
+            let cursor = AtomicUsize::new(0);
+            let pending = &pending;
+            std::thread::scope(|scope| {
+                for w in 0..workers {
+                    let collector = &collector;
+                    let cursor = &cursor;
+                    let base = &self.cfg.base;
+                    scope.spawn(move || loop {
+                        let k = cursor.fetch_add(1, Ordering::Relaxed);
+                        if k >= pending.len() {
+                            break;
+                        }
+                        // Pushed under the *global* job index: segment
+                        // records must merge into 0..jobs.len() across
+                        // resume attempts.
+                        let i = pending[k];
+                        collector.push(w, i, run_job(base, &jobs[i]));
+                    });
+                }
+            });
+            let attempted: BTreeSet<usize> = pending.iter().copied().collect();
+            // The sink persists every successful outcome, so the
+            // residue is the error channel: surface the first (by job
+            // index) failure, like the in-memory path does.
+            for (i, r) in collector.into_spill_residue(&attempted)? {
+                match r {
+                    Err(e) => {
+                        return Err(e.context(format!(
+                            "campaign job {i} ({}) failed",
+                            jobs[i].label()
+                        )))
+                    }
+                    Ok(_) => anyhow::bail!(
+                        "internal: job {i} succeeded but its outcome was not spilled"
+                    ),
+                }
+            }
+            self.cache.save_to(&store.episodes_path())?;
+        }
+
+        if interrupted {
+            return Ok(SpillRun::Interrupted { completed: loaded + pending.len(), total: jobs.len() });
+        }
+        let workers = self.workers_for(jobs.len());
+        let mut report = finalize_report(&store, jobs, started.elapsed(), workers, None)?;
+        report.jobs_loaded = loaded;
+        report.jobs_executed = jobs.len() - loaded;
+        store.manifest_mut().complete = true;
+        store.save_manifest()?;
+        Ok(SpillRun::Complete(report))
     }
 
     /// Score one fixed configuration (mean total time over `repeats`
@@ -206,7 +309,7 @@ impl CampaignEngine {
                 });
             }
         });
-        let times = collector.into_merged().into_iter().collect::<Result<Vec<f64>>>()?;
+        let times = collector.into_merged()?.into_iter().collect::<Result<Vec<f64>>>()?;
         // Per-spec mean, summing repeats in seed order — the same
         // accumulation the serial path performs.
         Ok(times
@@ -220,6 +323,82 @@ impl CampaignEngine {
             })
             .collect())
     }
+}
+
+/// Options for the spillable/resumable campaign paths.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct SpillOptions {
+    /// Open an existing store and skip (independent) or replay-validate
+    /// (shared) the work it already holds.
+    pub resume: bool,
+    /// Deterministic crash hook for tests and the CI resume smoke:
+    /// stop after this many newly-executed jobs (independent) or merge
+    /// rounds (shared) and return [`SpillRun::Interrupted`].
+    pub crash_after: Option<usize>,
+}
+
+/// Result of a spilled campaign attempt.
+#[derive(Debug)]
+pub enum SpillRun {
+    Complete(SpilledReport),
+    /// The crash budget ran out first; everything finished so far is
+    /// durable in the store and `--resume` picks up from here.
+    Interrupted { completed: usize, total: usize },
+}
+
+impl SpillRun {
+    /// Unwrap a completed run (test/CLI convenience).
+    pub fn into_complete(self) -> Result<SpilledReport> {
+        match self {
+            SpillRun::Complete(report) => Ok(report),
+            SpillRun::Interrupted { completed, total } => anyhow::bail!(
+                "campaign interrupted after {completed}/{total} units; resume it first"
+            ),
+        }
+    }
+}
+
+/// Stream every segment of `store` through a [`ReportAccumulator`] in
+/// global job-index order, cross-checking each record against the live
+/// job list. This is the only way reports are built from a store —
+/// completion, resume and rebuild all converge here, so they cannot
+/// disagree with each other (or with the in-memory fingerprint, which
+/// shares the accumulator's mix sequence).
+pub(super) fn finalize_report(
+    store: &CampaignStore,
+    jobs: &[CampaignJob],
+    wall_clock: Duration,
+    workers: usize,
+    hub: Option<HubSummary>,
+) -> Result<SpilledReport> {
+    let mut acc = ReportAccumulator::new();
+    let mut merge = store.merge()?;
+    let mut pos = 0usize;
+    while let Some((i, record)) = merge.next_record()? {
+        anyhow::ensure!(
+            pos < jobs.len() && i == pos,
+            "campaign store {} does not hold exactly jobs 0..{} (next stored index: {i}, expected {pos})",
+            store.dir().display(),
+            jobs.len()
+        );
+        let (_, outcome) = format::decode_record(&record)
+            .with_context(|| format!("decoding stored job {i}"))?;
+        anyhow::ensure!(
+            outcome.job == jobs[i],
+            "stored job {i} ({}) does not match this campaign's job list ({})",
+            outcome.job.label(),
+            jobs[i].label()
+        );
+        acc.push(&outcome);
+        pos += 1;
+    }
+    anyhow::ensure!(
+        pos == jobs.len(),
+        "campaign store {} holds {pos} of {} jobs (crash-interrupted? resume it)",
+        store.dir().display(),
+        jobs.len()
+    );
+    Ok(acc.finish(wall_clock, workers, hub))
 }
 
 /// One fixed-configuration evaluation cell: a configuration scored on a

@@ -34,11 +34,23 @@
 //!   replay snapshots at a fixed cadence with job-order-sequenced
 //!   merges.
 //!
+//! Both modes also run against an on-disk [`store`] (the spillable,
+//! crash-resumable campaign store): [`CampaignEngine::run_spilled`]
+//! bounds collector memory by spilling each completed job to per-shard
+//! segment files and streaming them back through a
+//! [`ReportAccumulator`] in job-index order, and
+//! [`CampaignEngine::run_shared_spilled`] checkpoints per-round hub
+//! digests so a killed campaign resumes (independent: skip finished
+//! jobs; shared: replay with digest validation) with a fingerprint
+//! bitwise identical to an uninterrupted in-memory run. See
+//! `docs/campaign_store.md`.
+//!
 //! The contract the whole module is built around: **campaign results
 //! are a pure function of the job list and the base config**. Worker
 //! count, scheduling order and cache hit/miss interleaving change
 //! wall-clock time, never numbers — in both modes (the shared-mode
-//! fingerprint also covers the hub's final state).
+//! fingerprint also covers the hub's final state), in memory or
+//! through the store.
 
 mod cache;
 mod collector;
@@ -46,9 +58,15 @@ mod engine;
 mod job;
 mod report;
 mod shared;
+pub mod store;
 
 pub use cache::{EpisodeCache, EpisodeKey};
-pub use collector::ShardedCollector;
-pub use engine::{evaluate_config, CampaignConfig, CampaignEngine, EvalSpec};
+pub use collector::{CollectorError, ShardedCollector, SpillSink};
+pub use engine::{
+    evaluate_config, CampaignConfig, CampaignEngine, EvalSpec, SpillOptions, SpillRun,
+};
 pub use job::{job_grid, CampaignJob};
-pub use report::{ablation_table, CampaignReport, JobOutcome};
+pub use report::{
+    ablation_table, CampaignReport, JobOutcome, JobRow, ReportAccumulator, SpilledReport,
+};
+pub use store::{campaign_digest, CampaignStore};

@@ -63,38 +63,17 @@ impl CampaignReport {
     /// Two campaign runs produced the same tuning trajectories (and,
     /// in shared mode, the same distributed-learner state) if and only
     /// if their fingerprints match — this is what the 1-worker vs
-    /// N-worker determinism checks compare.
+    /// N-worker determinism checks compare, and what a resumed spilled
+    /// campaign must reproduce bit-for-bit (the streaming path in
+    /// [`ReportAccumulator`] folds the same `mix_outcome`/`mix_hub`
+    /// sequence, so the two can never diverge).
     pub fn fingerprint(&self) -> u64 {
         let mut h = Fnv64::new();
         for r in &self.results {
-            h.mix(r.job.backend.ordinal() as u64);
-            for b in r.job.machine.bytes() {
-                h.mix(b as u64);
-            }
-            for b in r.job.workload.name().bytes() {
-                h.mix(b as u64);
-            }
-            h.mix(r.job.images as u64);
-            h.mix(r.job.seed);
-            for run in &r.outcome.log.runs {
-                h.mix(run.total_time_us.to_bits());
-                for &v in run.cvars.as_slice() {
-                    h.mix(v as u64);
-                }
-            }
-            h.mix(r.outcome.best_us.to_bits());
-            h.mix(r.outcome.reference_us.to_bits());
+            mix_outcome(&mut h, r);
         }
         if let Some(hub) = &self.hub {
-            h.mix(hub.merges as u64);
-            h.mix(hub.replay_len as u64);
-            h.mix(hub.total_transitions as u64);
-            h.mix(hub.policy.ordinal() as u64);
-            h.mix(hub.merge.ordinal() as u64);
-            for &n in &hub.occupancy {
-                h.mix(n as u64);
-            }
-            h.mix(hub.digest);
+            mix_hub(&mut h, hub);
         }
         h.finish()
     }
@@ -146,6 +125,175 @@ impl CampaignReport {
             ));
         }
         obj(fields)
+    }
+}
+
+/// Fold one job's spec and outcome into a campaign fingerprint — the
+/// per-result body of [`CampaignReport::fingerprint`], shared with the
+/// streaming [`ReportAccumulator`] so the two paths are one sequence
+/// of `mix` calls by construction.
+fn mix_outcome(h: &mut Fnv64, r: &JobOutcome) {
+    h.mix(r.job.backend.ordinal() as u64);
+    for b in r.job.machine.bytes() {
+        h.mix(b as u64);
+    }
+    for b in r.job.workload.name().bytes() {
+        h.mix(b as u64);
+    }
+    h.mix(r.job.images as u64);
+    h.mix(r.job.seed);
+    for run in &r.outcome.log.runs {
+        h.mix(run.total_time_us.to_bits());
+        for &v in run.cvars.as_slice() {
+            h.mix(v as u64);
+        }
+    }
+    h.mix(r.outcome.best_us.to_bits());
+    h.mix(r.outcome.reference_us.to_bits());
+}
+
+/// Fold the final hub state into a campaign fingerprint (shared-mode
+/// tail of [`CampaignReport::fingerprint`]).
+fn mix_hub(h: &mut Fnv64, hub: &HubSummary) {
+    h.mix(hub.merges as u64);
+    h.mix(hub.replay_len as u64);
+    h.mix(hub.total_transitions as u64);
+    h.mix(hub.policy.ordinal() as u64);
+    h.mix(hub.merge.ordinal() as u64);
+    for &n in &hub.occupancy {
+        h.mix(n as u64);
+    }
+    h.mix(hub.digest);
+}
+
+/// Per-job summary row a streaming aggregation retains: everything the
+/// CLI tables and summary statistics need, without the full tuning log.
+#[derive(Debug, Clone, Copy)]
+pub struct JobRow {
+    pub job: CampaignJob,
+    pub reference_us: f64,
+    pub best_us: f64,
+    /// Application runs in this job's tuning log.
+    pub runs: usize,
+}
+
+impl JobRow {
+    /// Best-run improvement; same degenerate-reference guard as
+    /// [`TuningOutcome::improvement`].
+    pub fn improvement(&self) -> f64 {
+        if !(self.reference_us > 0.0 && self.reference_us.is_finite()) {
+            return 0.0;
+        }
+        (self.reference_us - self.best_us) / self.reference_us
+    }
+}
+
+/// Streaming replacement for building a [`CampaignReport`] in memory:
+/// push outcomes **in job-index order**, one at a time, and finish
+/// into a [`SpilledReport`] whose fingerprint is bit-identical to
+/// [`CampaignReport::fingerprint`] over the same sequence. Memory held
+/// is one [`JobRow`] per job (no logs, no cvar histories) — the
+/// aggregation side of the bounded-memory spill path.
+#[derive(Debug, Default)]
+pub struct ReportAccumulator {
+    h: Fnv64,
+    rows: Vec<JobRow>,
+    total_app_runs: usize,
+}
+
+impl ReportAccumulator {
+    pub fn new() -> ReportAccumulator {
+        ReportAccumulator::default()
+    }
+
+    /// Fold the next outcome. Order matters: the digest is
+    /// order-sensitive, and callers feed it from the job-index-order
+    /// segment merge.
+    pub fn push(&mut self, r: &JobOutcome) {
+        mix_outcome(&mut self.h, r);
+        self.total_app_runs += r.outcome.log.runs.len();
+        self.rows.push(JobRow {
+            job: r.job,
+            reference_us: r.outcome.reference_us,
+            best_us: r.outcome.best_us,
+            runs: r.outcome.log.runs.len(),
+        });
+    }
+
+    pub fn len(&self) -> usize {
+        self.rows.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.rows.is_empty()
+    }
+
+    pub fn finish(
+        mut self,
+        wall_clock: Duration,
+        workers: usize,
+        hub: Option<HubSummary>,
+    ) -> SpilledReport {
+        if let Some(hub) = &hub {
+            mix_hub(&mut self.h, hub);
+        }
+        SpilledReport {
+            rows: self.rows,
+            wall_clock,
+            workers,
+            hub,
+            fingerprint: self.h.finish(),
+            total_app_runs: self.total_app_runs,
+            jobs_loaded: 0,
+            jobs_executed: 0,
+        }
+    }
+}
+
+/// The bounded-memory counterpart of [`CampaignReport`], produced by
+/// streaming a campaign store through a [`ReportAccumulator`]: summary
+/// rows plus the precomputed fingerprint.
+#[derive(Debug, Clone)]
+pub struct SpilledReport {
+    pub rows: Vec<JobRow>,
+    pub wall_clock: Duration,
+    pub workers: usize,
+    pub hub: Option<HubSummary>,
+    fingerprint: u64,
+    total_app_runs: usize,
+    /// Jobs answered from the store by `--resume` (not re-executed).
+    pub jobs_loaded: usize,
+    /// Jobs executed by this process.
+    pub jobs_executed: usize,
+}
+
+impl SpilledReport {
+    /// The campaign fingerprint — bit-identical to what
+    /// [`CampaignReport::fingerprint`] returns for the same outcomes.
+    pub fn fingerprint(&self) -> u64 {
+        self.fingerprint
+    }
+
+    /// Best-run improvement per job, in job order.
+    pub fn improvements(&self) -> Vec<f64> {
+        self.rows.iter().map(|r| r.improvement()).collect()
+    }
+
+    /// Geometric-mean speedup across cells (see
+    /// [`CampaignReport::geomean_speedup`]).
+    pub fn geomean_speedup(&self) -> f64 {
+        let speedups: Vec<f64> = self.improvements().iter().map(|i| 1.0 + i).collect();
+        geomean(&speedups)
+    }
+
+    /// Distribution of per-cell improvements.
+    pub fn improvement_summary(&self) -> Summary {
+        Summary::of(&self.improvements())
+    }
+
+    /// Total simulated application runs across every job's tuning log.
+    pub fn total_app_runs(&self) -> usize {
+        self.total_app_runs
     }
 }
 
@@ -300,5 +448,45 @@ mod tests {
         let j = r.to_json();
         assert_eq!(j.at(&["workers"]).unwrap().as_usize().unwrap(), 2);
         assert_eq!(j.at(&["jobs"]).unwrap().as_arr().unwrap().len(), 1);
+    }
+
+    #[test]
+    fn accumulator_matches_in_memory_fingerprint_and_summaries() {
+        let mut r = report(&[(100.0, 80.0), (90.0, 70.0), (0.0, 5.0)]);
+        let mut occupancy = [0usize; WorkloadKind::COUNT];
+        occupancy[WorkloadKind::Icar.ordinal()] = 6;
+        r.hub = Some(crate::coordinator::HubSummary {
+            merges: 2,
+            replay_len: 6,
+            total_transitions: 6,
+            policy: crate::coordinator::ReplayPolicyKind::Prioritized,
+            merge: crate::coordinator::MergeMode::Weights,
+            occupancy,
+            digest: 0x1234,
+        });
+        let mut acc = ReportAccumulator::new();
+        for jr in &r.results {
+            acc.push(jr);
+        }
+        let sp = acc.finish(r.wall_clock, r.workers, r.hub.clone());
+        assert_eq!(sp.fingerprint(), r.fingerprint());
+        assert_eq!(sp.total_app_runs(), r.total_app_runs());
+        assert_eq!(sp.improvements(), r.improvements());
+        assert_eq!(sp.geomean_speedup().to_bits(), r.geomean_speedup().to_bits());
+        assert_eq!(sp.improvement_summary().mean, r.improvement_summary().mean);
+        // The degenerate-reference guard carried over to JobRow.
+        assert_eq!(sp.rows[2].improvement(), 0.0);
+    }
+
+    #[test]
+    fn accumulator_without_hub_matches_too() {
+        let r = report(&[(100.0, 80.0)]);
+        let mut acc = ReportAccumulator::new();
+        for jr in &r.results {
+            acc.push(jr);
+        }
+        assert_eq!(acc.len(), 1);
+        let sp = acc.finish(r.wall_clock, r.workers, None);
+        assert_eq!(sp.fingerprint(), r.fingerprint());
     }
 }

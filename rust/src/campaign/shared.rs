@@ -32,6 +32,7 @@
 //! argument above is policy-independent, so the 1-vs-N fingerprint
 //! checks hold for uniform, stratified and prioritized replay alike.
 
+use std::path::Path;
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Mutex;
 // detlint: allow(R3) -- wall-clock is reporting-only (CampaignReport.wall_clock); it never feeds fingerprint()
@@ -46,18 +47,94 @@ use crate::coordinator::{
 use crate::runtime::{argmax, q_values_batch_of, DenseKernel};
 
 use super::collector::ShardedCollector;
-use super::engine::CampaignEngine;
+use super::engine::{finalize_report, CampaignEngine, SpillOptions, SpillRun};
 use super::job::CampaignJob;
 use super::report::{CampaignReport, JobOutcome};
+use super::store::{campaign_digest, CampaignStore, Manifest, OutcomeSink, StoreMode};
+
+/// The in-flight state of one shared-learning campaign: hub, slots and
+/// the round parameters. [`CampaignEngine::run_shared`] drives it start
+/// to finish; the spilled/resumable path drives the *same* rounds with
+/// digest checkpoints between them, so the two can never diverge in
+/// behavior — they are one loop body.
+struct SharedCampaign<'a> {
+    base: &'a TuningConfig,
+    shared: SharedLearning,
+    jobs: &'a [CampaignJob],
+    sync_every: usize,
+    rounds: usize,
+    workers: usize,
+    hub: LearnerHub,
+    /// One persistent controller per job; workers move them in and
+    /// out of the slots between rounds (dynamic claiming is safe —
+    /// within a round, segments touch disjoint slots).
+    slots: Vec<Mutex<Option<Controller>>>,
+}
+
+impl SharedCampaign<'_> {
+    /// One pull/train/push round: batched greedy hints, the parallel
+    /// segment pool, then the job-index-order hub merge.
+    fn round(&mut self) -> Result<()> {
+        let view = self.hub.view();
+        // Batched best_action: every live job's first greedy
+        // selection of this round shares one blocked GEMM over the
+        // master parameters (computed once, on this thread — the
+        // result is worker-count invariant by construction).
+        let hints = round_hints(&view, self.jobs, &self.slots)?;
+        let collector = ShardedCollector::new(self.jobs.len(), self.workers);
+        let cursor = AtomicUsize::new(0);
+        let jobs = self.jobs;
+        let base = self.base;
+        let shared = self.shared;
+        let sync_every = self.sync_every;
+        let slots = &self.slots;
+        std::thread::scope(|scope| {
+            for w in 0..self.workers {
+                let collector = &collector;
+                let cursor = &cursor;
+                let view = &view;
+                let hints = &hints;
+                scope.spawn(move || loop {
+                    let i = cursor.fetch_add(1, Ordering::Relaxed);
+                    if i >= jobs.len() {
+                        break;
+                    }
+                    let r = run_segment(
+                        base, shared, &jobs[i], i, sync_every, view, &slots[i], hints[i],
+                    );
+                    collector.push(w, i, r);
+                });
+            }
+        });
+        let contributions =
+            collector.into_merged()?.into_iter().collect::<Result<Vec<HubContribution>>>()?;
+        self.hub.merge(&contributions)
+    }
+
+    /// Finish every session in job order and return the outcomes plus
+    /// the final hub.
+    fn finish(self) -> Result<(Vec<JobOutcome>, LearnerHub)> {
+        let SharedCampaign { jobs, slots, hub, .. } = self;
+        let mut results = Vec::with_capacity(jobs.len());
+        for (job, slot) in jobs.iter().zip(&slots) {
+            // A poisoned slot means a worker panicked mid-segment; the
+            // panic has already surfaced through the scoped join, so
+            // recover the guard rather than double-reporting here.
+            let mut ctl = slot
+                .lock()
+                .unwrap_or_else(|poisoned| poisoned.into_inner())
+                .take()
+                .context("shared campaign lost a controller")?;
+            let outcome = ctl.finish_session()?;
+            results.push(JobOutcome { job: *job, outcome });
+        }
+        Ok((results, hub))
+    }
+}
 
 impl CampaignEngine {
-    /// Run a shared-learning campaign over `jobs`.
-    ///
-    /// All jobs must use the same agent kind (the hub merges one state
-    /// family). The report carries the final [`crate::coordinator::HubSummary`];
-    /// [`CampaignReport::fingerprint`] covers it, so the 1-vs-N-worker
-    /// identity check extends to the hub.
-    pub fn run_shared(&self, jobs: &[CampaignJob]) -> Result<CampaignReport> {
+    /// Validate a shared job list and set up its campaign state.
+    fn shared_campaign<'a>(&'a self, jobs: &'a [CampaignJob]) -> Result<SharedCampaign<'a>> {
         anyhow::ensure!(!jobs.is_empty(), "shared campaign needs at least one job");
         let base = &self.config().base;
         anyhow::ensure!(
@@ -78,70 +155,138 @@ impl CampaignEngine {
         );
         let sync_every = shared.sync_every.max(1);
         let rounds = base.runs.div_ceil(sync_every).max(1);
-        let workers = self.workers_for(jobs.len());
+        let hub = LearnerHub::new(base.replay_capacity, base.replay_policy, jobs[0].backend)
+            .with_merge(shared.merge, base.lr);
+        Ok(SharedCampaign {
+            base,
+            shared,
+            jobs,
+            sync_every,
+            rounds,
+            workers: self.workers_for(jobs.len()),
+            hub,
+            slots: jobs.iter().map(|_| Mutex::new(None)).collect(),
+        })
+    }
+
+    /// Run a shared-learning campaign over `jobs`.
+    ///
+    /// All jobs must use the same agent kind (the hub merges one state
+    /// family). The report carries the final [`crate::coordinator::HubSummary`];
+    /// [`CampaignReport::fingerprint`] covers it, so the 1-vs-N-worker
+    /// identity check extends to the hub.
+    pub fn run_shared(&self, jobs: &[CampaignJob]) -> Result<CampaignReport> {
         // detlint: allow(R3) -- reporting-only: elapsed time is displayed, never fingerprinted
         let started = Instant::now();
-
-        let mut hub = LearnerHub::new(base.replay_capacity, base.replay_policy, jobs[0].backend)
-            .with_merge(shared.merge, base.lr);
-        // One persistent controller per job; workers move them in and
-        // out of the slots between rounds (dynamic claiming is safe —
-        // within a round, segments touch disjoint slots).
-        let slots: Vec<Mutex<Option<Controller>>> =
-            jobs.iter().map(|_| Mutex::new(None)).collect();
-
-        for _round in 0..rounds {
-            let view = hub.view();
-            // Batched best_action: every live job's first greedy
-            // selection of this round shares one blocked GEMM over the
-            // master parameters (computed once, on this thread — the
-            // result is worker-count invariant by construction).
-            let hints = round_hints(&view, jobs, &slots)?;
-            let collector = ShardedCollector::new(jobs.len(), workers);
-            let cursor = AtomicUsize::new(0);
-            std::thread::scope(|scope| {
-                for w in 0..workers {
-                    let collector = &collector;
-                    let cursor = &cursor;
-                    let view = &view;
-                    let slots = &slots;
-                    let hints = &hints;
-                    scope.spawn(move || loop {
-                        let i = cursor.fetch_add(1, Ordering::Relaxed);
-                        if i >= jobs.len() {
-                            break;
-                        }
-                        let r = run_segment(
-                            base, shared, &jobs[i], i, sync_every, view, &slots[i], hints[i],
-                        );
-                        collector.push(w, i, r);
-                    });
-                }
-            });
-            let contributions =
-                collector.into_merged().into_iter().collect::<Result<Vec<HubContribution>>>()?;
-            hub.merge(&contributions)?;
+        let mut campaign = self.shared_campaign(jobs)?;
+        for _round in 0..campaign.rounds {
+            campaign.round()?;
         }
-
-        let mut results = Vec::with_capacity(jobs.len());
-        for (job, slot) in jobs.iter().zip(&slots) {
-            // A poisoned slot means a worker panicked mid-segment; the
-            // panic has already surfaced through the scoped join, so
-            // recover the guard rather than double-reporting here.
-            let mut ctl = slot
-                .lock()
-                .unwrap_or_else(|poisoned| poisoned.into_inner())
-                .take()
-                .context("shared campaign lost a controller")?;
-            let outcome = ctl.finish_session()?;
-            results.push(JobOutcome { job: *job, outcome });
-        }
+        let workers = campaign.workers;
+        let (results, hub) = campaign.finish()?;
         Ok(CampaignReport {
             results,
             wall_clock: started.elapsed(),
             workers,
             hub: Some(hub.summary()),
         })
+    }
+
+    /// [`CampaignEngine::run_shared`] against a campaign store, with
+    /// crash resume.
+    ///
+    /// A shared campaign cannot *skip* finished jobs the way the
+    /// independent path does — every session contributes to every
+    /// merge round, so the learning trajectory is sequential in
+    /// rounds. Resume therefore means **replay with validation**: the
+    /// rounds re-run from scratch, and after each merge the hub digest
+    /// must equal the digest the manifest recorded for that round
+    /// before the crash (self-consistency in the Hunold &
+    /// Carpen-Amarie sense — a measurement that cannot be reproduced
+    /// bit-identically is reported as divergence, not silently
+    /// accepted). What resume *saves* is the simulator work memoized
+    /// in the persisted episode cache, and — for a store that already
+    /// completed — everything: a complete store short-circuits to a
+    /// pure segment replay with no simulation at all.
+    ///
+    /// `opts.crash_after` counts merge **rounds** here, not jobs.
+    pub fn run_shared_spilled(
+        &self,
+        jobs: &[CampaignJob],
+        dir: &Path,
+        opts: &SpillOptions,
+    ) -> Result<SpillRun> {
+        // detlint: allow(R3) -- reporting-only wall clock, never fingerprinted
+        let started = Instant::now();
+        anyhow::ensure!(!jobs.is_empty(), "shared campaign needs at least one job");
+        let base = &self.config().base;
+        let shared_cfg = base.shared.unwrap_or_default();
+        let digest = campaign_digest(base, jobs, Some(shared_cfg));
+        let mut store = if opts.resume {
+            let store = CampaignStore::open(dir)?;
+            store.validate(StoreMode::Shared, digest, jobs.len())?;
+            store
+        } else {
+            CampaignStore::create(dir, Manifest::new(StoreMode::Shared, digest, jobs.len()))?
+        };
+        self.cache().load_from(&store.episodes_path())?;
+
+        if store.manifest().complete {
+            // Finished store: rebuild the report purely from segments.
+            let hub = store
+                .manifest()
+                .hub
+                .context("complete shared store lacks a hub summary")?;
+            let workers = self.workers_for(jobs.len());
+            let mut report =
+                finalize_report(&store, jobs, started.elapsed(), workers, Some(hub))?;
+            report.jobs_loaded = jobs.len();
+            return Ok(SpillRun::Complete(report));
+        }
+
+        let recorded = store.manifest().round_digests.clone();
+        let mut campaign = self.shared_campaign(jobs)?;
+        let budget = opts.crash_after.unwrap_or(campaign.rounds).min(campaign.rounds);
+        for round in 0..budget {
+            campaign.round()?;
+            let hub_digest = campaign.hub.digest();
+            match recorded.get(round) {
+                Some(&expected) => anyhow::ensure!(
+                    hub_digest == expected,
+                    "resumed shared campaign diverged at round {round}: hub digest \
+                     {hub_digest:016x}, store recorded {expected:016x} — the replayed \
+                     merge sequence no longer matches the original run"
+                ),
+                None => {
+                    store.manifest_mut().round_digests.push(hub_digest);
+                    store.save_manifest()?;
+                }
+            }
+        }
+        self.cache().save_to(&store.episodes_path())?;
+        if budget < campaign.rounds {
+            return Ok(SpillRun::Interrupted { completed: budget, total: campaign.rounds });
+        }
+
+        let workers = campaign.workers;
+        let (results, hub) = campaign.finish()?;
+        // Segments of an incomplete shared store are artifacts of a
+        // finalize that crashed mid-write; the replay just regenerated
+        // every outcome bit-identically, so clear and rewrite.
+        store.clear_segments()?;
+        let sink = OutcomeSink::create(store.dir(), store.next_generation()?, 1)?;
+        for (i, result) in results.iter().enumerate() {
+            sink.append(0, i, result)?;
+        }
+        let summary = hub.summary();
+        store.manifest_mut().hub = Some(summary);
+        store.manifest_mut().complete = true;
+        store.save_manifest()?;
+        // Round-trip through the store so the fingerprint we report is
+        // the one any later rebuild will reproduce.
+        let mut report = finalize_report(&store, jobs, started.elapsed(), workers, Some(summary))?;
+        report.jobs_executed = jobs.len();
+        Ok(SpillRun::Complete(report))
     }
 }
 

@@ -1,0 +1,449 @@
+//! Bit-exact JSON encoding of campaign records plus the
+//! length-prefixed frame format segment files are written in.
+//!
+//! Every floating-point field is serialized as its 16-hex-digit
+//! IEEE-754 bit pattern (and every seed/digest as a 16-hex-digit
+//! `u64`), so decode∘encode is the identity on bits — NaN payloads,
+//! signed zeros and subnormals included. That round-trip identity is
+//! what lets a resumed campaign rebuild a [`crate::campaign::CampaignReport`]
+//! fingerprint that is *bitwise equal* to the uninterrupted run's: the
+//! fingerprint mixes `f64::to_bits`, and this codec preserves exactly
+//! those bits. See `docs/campaign_store.md` for the format layout.
+//!
+//! Frames are `{decimal payload length}\t{json}\n`. A reader treats an
+//! incomplete trailing frame (the artifact a crash mid-append leaves)
+//! as end-of-segment, but a corrupt *complete* frame is a hard error —
+//! silent data loss must never masquerade as a clean resume.
+
+use std::io::{BufRead, Read, Write};
+
+use anyhow::{bail, Context, Result};
+
+use crate::backend::BackendId;
+use crate::coordinator::{AgentKind, TuningOutcome};
+use crate::metrics::recorder::{RunRecord, TuningLog};
+use crate::metrics::stats::Summary;
+use crate::mpi_t::{CvarId, CvarSet, PvarId, PvarStats};
+use crate::simmpi::Machine;
+use crate::util::json::{arr, num, obj, s, Json};
+use crate::workloads::WorkloadKind;
+
+use super::super::job::CampaignJob;
+use super::super::report::JobOutcome;
+
+/// Upper bound on one frame's payload; a header past this is corrupt,
+/// not merely large (the biggest real record is a few hundred KiB).
+const MAX_FRAME_BYTES: usize = 64 * 1024 * 1024;
+
+/// An `f64` as its 16-hex-digit bit pattern — exact for every value.
+pub fn hex_f64(v: f64) -> Json {
+    Json::Str(format!("{:016x}", v.to_bits()))
+}
+
+/// A `u64` (seed, digest, noise bits) as 16 hex digits.
+pub fn hex_u64(v: u64) -> Json {
+    Json::Str(format!("{v:016x}"))
+}
+
+/// Decode a [`hex_u64`] field.
+pub fn u64_of(j: &Json) -> Result<u64> {
+    let t = j.as_str().context("expected a 16-hex-digit bits string")?;
+    anyhow::ensure!(t.len() == 16, "hex-bits field must be 16 digits, got {t:?}");
+    u64::from_str_radix(t, 16).with_context(|| format!("bad hex-bits field {t:?}"))
+}
+
+/// Decode a [`hex_f64`] field.
+pub fn f64_of(j: &Json) -> Result<f64> {
+    Ok(f64::from_bits(u64_of(j)?))
+}
+
+/// Decode a non-negative integer count (rejects fractions and values
+/// past exact-f64 range, which `Json::as_usize` would silently accept).
+pub fn usize_of(j: &Json) -> Result<usize> {
+    let n = j.as_f64().context("expected a number")?;
+    anyhow::ensure!(
+        n >= 0.0 && n.fract() == 0.0 && n <= 9_007_199_254_740_992.0,
+        "expected a non-negative integer, got {n}"
+    );
+    Ok(n as usize)
+}
+
+/// Encode a configuration as its backend name plus raw values.
+pub fn encode_cvars(cv: &CvarSet) -> Json {
+    obj(vec![
+        ("backend", s(cv.backend().name())),
+        ("values", arr(cv.as_slice().iter().map(|&v| num(v as f64)))),
+    ])
+}
+
+/// Decode a configuration, revalidating every value against the
+/// backend's descriptor domains: values are written through
+/// [`CvarSet::set`] (which clamps), then compared back, so an
+/// out-of-domain value in a tampered or stale store is an error rather
+/// than a silently different configuration.
+pub fn decode_cvars(j: &Json) -> Result<CvarSet> {
+    let name = j.at(&["backend"])?.as_str().context("cvars.backend must be a string")?;
+    let backend =
+        BackendId::parse(name).with_context(|| format!("unknown backend {name:?} in store"))?;
+    let values = j.at(&["values"])?.as_arr().context("cvars.values must be an array")?;
+    let mut cv = CvarSet::defaults(backend);
+    anyhow::ensure!(
+        values.len() == cv.len(),
+        "cvar count mismatch: store has {}, backend {} defines {}",
+        values.len(),
+        backend.name(),
+        cv.len()
+    );
+    for (i, v) in values.iter().enumerate() {
+        let raw = v.as_f64().context("cvar values must be numbers")?;
+        anyhow::ensure!(
+            raw.fract() == 0.0 && raw.abs() <= 9_007_199_254_740_992.0,
+            "cvar value {raw} is not an exact integer"
+        );
+        cv.set(CvarId(i), raw as i64);
+    }
+    for (i, (&have, want)) in cv.as_slice().iter().zip(values).enumerate() {
+        let want = want.as_f64().context("cvar values must be numbers")? as i64;
+        anyhow::ensure!(
+            have == want,
+            "cvar {i} value {want} is outside backend {}'s domain (clamped to {have})",
+            backend.name()
+        );
+    }
+    Ok(cv)
+}
+
+fn encode_summary(sm: &Summary) -> Json {
+    obj(vec![
+        ("count", num(sm.count as f64)),
+        ("mean", hex_f64(sm.mean)),
+        ("max", hex_f64(sm.max)),
+        ("min", hex_f64(sm.min)),
+        ("median", hex_f64(sm.median)),
+        ("std", hex_f64(sm.std)),
+    ])
+}
+
+fn decode_summary(j: &Json) -> Result<Summary> {
+    Ok(Summary {
+        count: usize_of(j.at(&["count"])?)?,
+        mean: f64_of(j.at(&["mean"])?)?,
+        max: f64_of(j.at(&["max"])?)?,
+        min: f64_of(j.at(&["min"])?)?,
+        median: f64_of(j.at(&["median"])?)?,
+        std: f64_of(j.at(&["std"])?)?,
+    })
+}
+
+fn encode_pvars(p: &PvarStats) -> Json {
+    arr(p.summaries.iter().map(|(id, sm)| {
+        obj(vec![("id", num(id.0 as f64)), ("stats", encode_summary(sm))])
+    }))
+}
+
+fn decode_pvars(j: &Json) -> Result<PvarStats> {
+    let items = j.as_arr().context("pvars must be an array")?;
+    let mut summaries = Vec::with_capacity(items.len());
+    for it in items {
+        let id = PvarId(usize_of(it.at(&["id"])?)?);
+        summaries.push((id, decode_summary(it.at(&["stats"])?)?));
+    }
+    Ok(PvarStats { summaries })
+}
+
+fn encode_run(r: &RunRecord) -> Json {
+    obj(vec![
+        ("run", num(r.run_index as f64)),
+        ("us", hex_f64(r.total_time_us)),
+        ("reward", hex_f64(r.reward)),
+        ("eps", hex_f64(r.epsilon)),
+        ("action", r.action.map(|a| num(a as f64)).unwrap_or(Json::Null)),
+        ("cvars", encode_cvars(&r.cvars)),
+        ("pvars", encode_pvars(&r.pvars)),
+    ])
+}
+
+fn decode_run(j: &Json) -> Result<RunRecord> {
+    let action = match j.at(&["action"])? {
+        Json::Null => None,
+        v => Some(usize_of(v)?),
+    };
+    Ok(RunRecord {
+        run_index: usize_of(j.at(&["run"])?)?,
+        cvars: decode_cvars(j.at(&["cvars"])?)?,
+        total_time_us: f64_of(j.at(&["us"])?)?,
+        reward: f64_of(j.at(&["reward"])?)?,
+        action,
+        epsilon: f64_of(j.at(&["eps"])?)?,
+        pvars: decode_pvars(j.at(&["pvars"])?)?,
+    })
+}
+
+fn encode_log(log: &TuningLog) -> Json {
+    obj(vec![
+        ("workload", s(&log.workload)),
+        ("images", num(log.images as f64)),
+        ("runs", arr(log.runs.iter().map(encode_run))),
+    ])
+}
+
+fn decode_log(j: &Json) -> Result<TuningLog> {
+    let runs = j.at(&["runs"])?.as_arr().context("log.runs must be an array")?;
+    Ok(TuningLog {
+        workload: j.at(&["workload"])?.as_str().context("log.workload must be a string")?.into(),
+        images: usize_of(j.at(&["images"])?)?,
+        runs: runs.iter().map(decode_run).collect::<Result<_>>()?,
+    })
+}
+
+fn encode_outcome(o: &TuningOutcome) -> Json {
+    obj(vec![
+        ("log", encode_log(&o.log)),
+        ("best", encode_cvars(&o.best)),
+        ("ensemble", encode_cvars(&o.ensemble)),
+        ("reference_us", hex_f64(o.reference_us)),
+        ("best_us", hex_f64(o.best_us)),
+    ])
+}
+
+fn decode_outcome(j: &Json) -> Result<TuningOutcome> {
+    Ok(TuningOutcome {
+        log: decode_log(j.at(&["log"])?)?,
+        best: decode_cvars(j.at(&["best"])?)?,
+        ensemble: decode_cvars(j.at(&["ensemble"])?)?,
+        reference_us: f64_of(j.at(&["reference_us"])?)?,
+        best_us: f64_of(j.at(&["best_us"])?)?,
+    })
+}
+
+/// Encode a job spec by canonical names (not ordinals, so stores stay
+/// readable and survive enum reordering).
+pub fn encode_job(job: &CampaignJob) -> Json {
+    obj(vec![
+        ("backend", s(job.backend.name())),
+        ("machine", s(job.machine)),
+        ("workload", s(job.workload.name())),
+        ("images", num(job.images as f64)),
+        ("agent", s(job.agent.name())),
+        ("seed", hex_u64(job.seed)),
+    ])
+}
+
+/// Decode a job spec, resolving every name against the live registries.
+pub fn decode_job(j: &Json) -> Result<CampaignJob> {
+    let backend_name = j.at(&["backend"])?.as_str().context("job.backend must be a string")?;
+    let machine_name = j.at(&["machine"])?.as_str().context("job.machine must be a string")?;
+    let workload_name = j.at(&["workload"])?.as_str().context("job.workload must be a string")?;
+    let agent_name = j.at(&["agent"])?.as_str().context("job.agent must be a string")?;
+    Ok(CampaignJob {
+        backend: BackendId::parse(backend_name)
+            .with_context(|| format!("unknown backend {backend_name:?} in store"))?,
+        machine: Machine::by_name(machine_name)
+            .with_context(|| format!("unknown machine {machine_name:?} in store"))?
+            .name,
+        workload: WorkloadKind::parse(workload_name)
+            .with_context(|| format!("unknown workload {workload_name:?} in store"))?,
+        images: usize_of(j.at(&["images"])?)?,
+        agent: AgentKind::parse(agent_name)
+            .with_context(|| format!("unknown agent {agent_name:?} in store"))?,
+        seed: u64_of(j.at(&["seed"])?)?,
+    })
+}
+
+/// Encode one completed-job record: the global job index plus the full
+/// job spec and outcome.
+pub fn encode_record(index: usize, r: &JobOutcome) -> Json {
+    obj(vec![
+        ("i", num(index as f64)),
+        ("job", encode_job(&r.job)),
+        ("outcome", encode_outcome(&r.outcome)),
+    ])
+}
+
+/// The job index of a record (cheap peek, used by the segment merge).
+pub fn record_index(j: &Json) -> Result<usize> {
+    usize_of(j.at(&["i"])?)
+}
+
+/// Decode one completed-job record.
+pub fn decode_record(j: &Json) -> Result<(usize, JobOutcome)> {
+    Ok((
+        record_index(j)?,
+        JobOutcome { job: decode_job(j.at(&["job"])?)?, outcome: decode_outcome(j.at(&["outcome"])?)? },
+    ))
+}
+
+/// Append one frame — `{payload byte length}\t{json}\n` — and return
+/// the bytes written.
+pub fn write_frame(w: &mut impl Write, record: &Json) -> Result<usize> {
+    let payload = record.to_string();
+    let header = format!("{}\t", payload.len());
+    w.write_all(header.as_bytes())?;
+    w.write_all(payload.as_bytes())?;
+    w.write_all(b"\n")?;
+    Ok(header.len() + payload.len() + 1)
+}
+
+/// Streaming frame reader. Stops cleanly at an incomplete trailing
+/// frame (crash artifact; see [`FrameReader::truncated`]) but fails on
+/// a corrupt complete frame.
+#[derive(Debug)]
+pub struct FrameReader<R> {
+    inner: R,
+    truncated: bool,
+    frames: usize,
+}
+
+impl<R: BufRead> FrameReader<R> {
+    pub fn new(inner: R) -> FrameReader<R> {
+        FrameReader { inner, truncated: false, frames: 0 }
+    }
+
+    /// Whether reading stopped at a torn trailing frame.
+    pub fn truncated(&self) -> bool {
+        self.truncated
+    }
+
+    /// The next complete frame, or `None` at end of input (including a
+    /// torn tail).
+    pub fn next_frame(&mut self) -> Result<Option<Json>> {
+        if self.truncated {
+            return Ok(None);
+        }
+        let mut header = Vec::new();
+        self.inner.read_until(b'\t', &mut header)?;
+        if header.is_empty() {
+            return Ok(None);
+        }
+        if header.last() != Some(&b'\t') {
+            self.truncated = true;
+            return Ok(None);
+        }
+        header.pop();
+        let text = std::str::from_utf8(&header).ok();
+        let len: usize = match text.and_then(|t| t.parse().ok()) {
+            Some(n) if n <= MAX_FRAME_BYTES => n,
+            _ => bail!(
+                "corrupt frame header {:?} after frame {}",
+                String::from_utf8_lossy(&header),
+                self.frames
+            ),
+        };
+        // Payload plus its trailing newline, read exactly.
+        let mut payload = vec![0u8; len + 1];
+        let mut got = 0;
+        while got < payload.len() {
+            let n = self.inner.read(&mut payload[got..])?;
+            if n == 0 {
+                self.truncated = true;
+                return Ok(None);
+            }
+            got += n;
+        }
+        anyhow::ensure!(
+            payload.pop() == Some(b'\n'),
+            "frame {} is missing its trailing newline",
+            self.frames
+        );
+        let text = std::str::from_utf8(&payload)
+            .with_context(|| format!("frame {} payload is not UTF-8", self.frames))?;
+        let json = Json::parse(text)
+            .map_err(|e| anyhow::anyhow!("frame {}: {e}", self.frames))?;
+        self.frames += 1;
+        Ok(Some(json))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::metrics::recorder::TuningLog;
+
+    fn sample_outcome() -> JobOutcome {
+        let backend = BackendId::Coarrays;
+        let mut cvars = CvarSet::defaults(backend);
+        cvars.set(CvarId(0), 1);
+        let mut log = TuningLog::new("lattice_boltzmann", 8);
+        log.push(RunRecord {
+            run_index: 0,
+            cvars: cvars.clone(),
+            total_time_us: 123.456_789,
+            reward: -0.25,
+            action: Some(3),
+            epsilon: 0.9,
+            pvars: PvarStats {
+                summaries: vec![(
+                    PvarId(2),
+                    Summary { count: 4, mean: 1.5, max: 2.0, min: 1.0, median: 1.5, std: 0.5 },
+                )],
+            },
+        });
+        log.push(RunRecord {
+            run_index: 1,
+            cvars: cvars.clone(),
+            total_time_us: f64::INFINITY,
+            reward: f64::from_bits(0x7ff8_0000_dead_beef), // NaN payload
+            action: None,
+            epsilon: -0.0,
+            pvars: PvarStats::default(),
+        });
+        JobOutcome {
+            job: CampaignJob {
+                backend,
+                machine: "cheyenne",
+                workload: WorkloadKind::LatticeBoltzmann,
+                images: 8,
+                agent: AgentKind::Tabular,
+                seed: u64::MAX,
+            },
+            outcome: TuningOutcome {
+                log,
+                best: cvars.clone(),
+                ensemble: cvars,
+                reference_us: 200.0,
+                best_us: 150.0,
+            },
+        }
+    }
+
+    #[test]
+    fn record_round_trip_is_byte_identical() {
+        let rec = encode_record(17, &sample_outcome());
+        let (i, decoded) = decode_record(&rec).unwrap();
+        assert_eq!(i, 17);
+        // Re-encoding the decoded record must reproduce the bytes —
+        // the bit-exactness claim the resume fingerprint rests on.
+        assert_eq!(encode_record(17, &decoded).to_string(), rec.to_string());
+    }
+
+    #[test]
+    fn frames_round_trip_and_tolerate_torn_tail() {
+        let rec = encode_record(0, &sample_outcome());
+        let mut buf = Vec::new();
+        write_frame(&mut buf, &rec).unwrap();
+        write_frame(&mut buf, &rec).unwrap();
+        // Tear the second frame mid-payload, as a crash would.
+        buf.truncate(buf.len() - 7);
+        let mut r = FrameReader::new(&buf[..]);
+        assert!(r.next_frame().unwrap().is_some());
+        assert!(r.next_frame().unwrap().is_none());
+        assert!(r.truncated());
+    }
+
+    #[test]
+    fn corrupt_complete_frame_is_an_error() {
+        let mut buf = Vec::new();
+        buf.extend_from_slice(b"5\t{!!!}\n");
+        let mut r = FrameReader::new(&buf[..]);
+        assert!(r.next_frame().is_err());
+        let mut bad_header = FrameReader::new(&b"x9\t{}\n"[..]);
+        assert!(bad_header.next_frame().is_err());
+    }
+
+    #[test]
+    fn agent_names_round_trip() {
+        for k in AgentKind::ALL {
+            assert_eq!(AgentKind::parse(k.name()), Some(k));
+        }
+    }
+}

@@ -1,0 +1,204 @@
+//! The store manifest: which campaign a store belongs to, how far it
+//! got, and — for shared campaigns — the per-round hub digests a
+//! resumed replay must reproduce.
+//!
+//! The manifest is metadata, not truth: the set of *completed jobs* is
+//! always derived by scanning the segments ([`super::shard::scan_completed`]),
+//! because frames are flushed per job while a counter written "later"
+//! could be lost to the same crash that killed the campaign. What the
+//! manifest does hold is (a) the campaign config digest, so `--resume`
+//! refuses a store written under different flags, (b) the hub digest
+//! after each completed merge round of a shared campaign, so a replay
+//! that diverges is detected at the first bad round, and (c) the final
+//! [`HubSummary`] once a shared campaign completes, so a finished
+//! store rebuilds its report without re-simulating anything.
+//!
+//! Saves go through a temp file + rename so a crash mid-save leaves
+//! the previous manifest intact.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+use crate::coordinator::{HubSummary, MergeMode, ReplayPolicyKind};
+use crate::util::json::{arr, num, obj, s, Json};
+use crate::workloads::WorkloadKind;
+
+use super::format::{hex_u64, u64_of, usize_of};
+
+pub const MANIFEST_FILE: &str = "manifest.json";
+const MANIFEST_VERSION: usize = 1;
+
+/// Which engine path wrote the store; the two have incompatible resume
+/// semantics (skip-completed vs replay-validated), so a store is one
+/// or the other forever.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum StoreMode {
+    Independent,
+    Shared,
+}
+
+impl StoreMode {
+    pub fn name(self) -> &'static str {
+        match self {
+            StoreMode::Independent => "independent",
+            StoreMode::Shared => "shared",
+        }
+    }
+
+    pub fn parse(t: &str) -> Option<StoreMode> {
+        match t {
+            "independent" => Some(StoreMode::Independent),
+            "shared" => Some(StoreMode::Shared),
+            _ => None,
+        }
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub mode: StoreMode,
+    /// [`super::campaign_digest`] of the job list + result-affecting
+    /// base config; resume refuses a mismatch.
+    pub config_digest: u64,
+    pub total_jobs: usize,
+    /// Hub digest after each completed merge round (shared mode only).
+    pub round_digests: Vec<u64>,
+    /// Final hub summary (shared mode, complete stores only).
+    pub hub: Option<HubSummary>,
+    /// Set once every job's record is durable and verified.
+    pub complete: bool,
+}
+
+impl Manifest {
+    pub fn new(mode: StoreMode, config_digest: u64, total_jobs: usize) -> Manifest {
+        Manifest { mode, config_digest, total_jobs, round_digests: Vec::new(), hub: None, complete: false }
+    }
+
+    pub fn path(dir: &Path) -> PathBuf {
+        dir.join(MANIFEST_FILE)
+    }
+
+    pub fn to_json(&self) -> Json {
+        obj(vec![
+            ("version", num(MANIFEST_VERSION as f64)),
+            ("mode", s(self.mode.name())),
+            ("config_digest", hex_u64(self.config_digest)),
+            ("total_jobs", num(self.total_jobs as f64)),
+            ("complete", Json::Bool(self.complete)),
+            ("round_digests", arr(self.round_digests.iter().map(|&d| hex_u64(d)))),
+            ("hub", self.hub.as_ref().map(encode_hub).unwrap_or(Json::Null)),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Result<Manifest> {
+        let version = usize_of(j.at(&["version"])?)?;
+        anyhow::ensure!(version == MANIFEST_VERSION, "unsupported manifest version {version}");
+        let mode_name = j.at(&["mode"])?.as_str().context("manifest.mode must be a string")?;
+        let mode = StoreMode::parse(mode_name)
+            .with_context(|| format!("unknown store mode {mode_name:?}"))?;
+        let rounds = j.at(&["round_digests"])?.as_arr().context("round_digests must be an array")?;
+        let hub = match j.at(&["hub"])? {
+            Json::Null => None,
+            v => Some(decode_hub(v)?),
+        };
+        Ok(Manifest {
+            mode,
+            config_digest: u64_of(j.at(&["config_digest"])?)?,
+            total_jobs: usize_of(j.at(&["total_jobs"])?)?,
+            round_digests: rounds.iter().map(u64_of).collect::<Result<_>>()?,
+            hub,
+            complete: matches!(j.at(&["complete"])?, Json::Bool(true)),
+        })
+    }
+
+    pub fn save(&self, dir: &Path) -> Result<()> {
+        let path = Manifest::path(dir);
+        let tmp = dir.join("manifest.json.tmp");
+        std::fs::write(&tmp, self.to_json().to_string() + "\n")
+            .with_context(|| format!("writing {}", tmp.display()))?;
+        std::fs::rename(&tmp, &path)
+            .with_context(|| format!("installing {}", path.display()))?;
+        Ok(())
+    }
+
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = Manifest::path(dir);
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("{} is not a campaign store (no {MANIFEST_FILE})", dir.display()))?;
+        let json = Json::parse(text.trim())
+            .map_err(|e| anyhow::anyhow!("parsing {}: {e}", path.display()))?;
+        Manifest::from_json(&json).with_context(|| format!("decoding {}", path.display()))
+    }
+}
+
+fn encode_hub(h: &HubSummary) -> Json {
+    obj(vec![
+        ("merges", num(h.merges as f64)),
+        ("replay_len", num(h.replay_len as f64)),
+        ("total_transitions", num(h.total_transitions as f64)),
+        ("policy", s(h.policy.name())),
+        ("merge", s(h.merge.name())),
+        ("occupancy", arr(h.occupancy.iter().map(|&n| num(n as f64)))),
+        ("digest", hex_u64(h.digest)),
+    ])
+}
+
+fn decode_hub(j: &Json) -> Result<HubSummary> {
+    let policy_name = j.at(&["policy"])?.as_str().context("hub.policy must be a string")?;
+    let merge_name = j.at(&["merge"])?.as_str().context("hub.merge must be a string")?;
+    let occ = j.at(&["occupancy"])?.as_arr().context("hub.occupancy must be an array")?;
+    anyhow::ensure!(
+        occ.len() == WorkloadKind::COUNT,
+        "hub.occupancy has {} slots, this build defines {} workloads",
+        occ.len(),
+        WorkloadKind::COUNT
+    );
+    let mut occupancy = [0usize; WorkloadKind::COUNT];
+    for (slot, v) in occupancy.iter_mut().zip(occ) {
+        *slot = usize_of(v)?;
+    }
+    Ok(HubSummary {
+        merges: usize_of(j.at(&["merges"])?)?,
+        replay_len: usize_of(j.at(&["replay_len"])?)?,
+        total_transitions: usize_of(j.at(&["total_transitions"])?)?,
+        policy: ReplayPolicyKind::parse(policy_name)
+            .with_context(|| format!("unknown replay policy {policy_name:?}"))?,
+        merge: MergeMode::parse(merge_name)
+            .with_context(|| format!("unknown merge mode {merge_name:?}"))?,
+        occupancy,
+        digest: u64_of(j.at(&["digest"])?)?,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn manifest_round_trips_with_and_without_hub() {
+        let mut m = Manifest::new(StoreMode::Shared, 0xdead_beef_0123_4567, 42);
+        m.round_digests = vec![1, u64::MAX, 7];
+        let back = Manifest::from_json(&m.to_json()).unwrap();
+        assert_eq!(back.mode, StoreMode::Shared);
+        assert_eq!(back.config_digest, m.config_digest);
+        assert_eq!(back.total_jobs, 42);
+        assert_eq!(back.round_digests, m.round_digests);
+        assert!(back.hub.is_none());
+        assert!(!back.complete);
+
+        m.hub = Some(HubSummary {
+            merges: 3,
+            replay_len: 10,
+            total_transitions: 30,
+            policy: ReplayPolicyKind::Stratified,
+            merge: MergeMode::Grads,
+            occupancy: [1; WorkloadKind::COUNT],
+            digest: 0x0123_4567_89ab_cdef,
+        });
+        m.complete = true;
+        let back = Manifest::from_json(&m.to_json()).unwrap();
+        assert_eq!(back.hub, m.hub);
+        assert!(back.complete);
+    }
+}

@@ -1,0 +1,231 @@
+//! The spillable, crash-resumable campaign store.
+//!
+//! A store is a directory: a [`Manifest`] (`manifest.json`), one
+//! segment file per `(generation, shard)` holding completed-job frames
+//! ([`shard`]), and an optional persisted episode cache
+//! (`episodes.jsonl`, written by [`super::cache::EpisodeCache`]).
+//! Workers spill each finished [`JobOutcome`] to their shard as a
+//! bit-exact frame ([`format`]); aggregation streams every segment
+//! back in global job-index order, so the report fingerprint of a
+//! spilled campaign is bitwise identical to the in-memory path — and a
+//! resumed campaign to an uninterrupted one. `docs/campaign_store.md`
+//! has the full layout and the determinism argument.
+
+pub mod format;
+pub mod manifest;
+pub mod shard;
+
+use std::collections::BTreeSet;
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+
+use anyhow::{Context, Result};
+
+use crate::coordinator::{SharedLearning, TuningConfig};
+use crate::util::fnv::Fnv64;
+
+use super::collector::SpillSink;
+use super::job::CampaignJob;
+use super::report::JobOutcome;
+
+pub use manifest::{Manifest, StoreMode};
+pub use shard::{SegmentMerge, ShardWriter};
+
+/// An open campaign store directory plus its manifest.
+#[derive(Debug)]
+pub struct CampaignStore {
+    dir: PathBuf,
+    manifest: Manifest,
+}
+
+impl CampaignStore {
+    /// Create a fresh store. Refuses a directory that already holds a
+    /// manifest — continuing an existing store is `--resume`'s job, and
+    /// silently appending to one here could mix two campaigns.
+    pub fn create(dir: &Path, manifest: Manifest) -> Result<CampaignStore> {
+        std::fs::create_dir_all(dir)
+            .with_context(|| format!("creating campaign store {}", dir.display()))?;
+        anyhow::ensure!(
+            !Manifest::path(dir).exists(),
+            "{} already holds a campaign store; pass it via --resume to continue it",
+            dir.display()
+        );
+        manifest.save(dir)?;
+        Ok(CampaignStore { dir: dir.to_path_buf(), manifest })
+    }
+
+    /// Open an existing store.
+    pub fn open(dir: &Path) -> Result<CampaignStore> {
+        let manifest = Manifest::load(dir)?;
+        Ok(CampaignStore { dir: dir.to_path_buf(), manifest })
+    }
+
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    pub fn manifest_mut(&mut self) -> &mut Manifest {
+        &mut self.manifest
+    }
+
+    pub fn save_manifest(&self) -> Result<()> {
+        self.manifest.save(&self.dir)
+    }
+
+    /// Check that this store belongs to the campaign the caller is
+    /// about to run; the error names which flag family diverged.
+    pub fn validate(&self, mode: StoreMode, config_digest: u64, total_jobs: usize) -> Result<()> {
+        anyhow::ensure!(
+            self.manifest.mode == mode,
+            "{} is a {} campaign store, this invocation is {}",
+            self.dir.display(),
+            self.manifest.mode.name(),
+            mode.name()
+        );
+        anyhow::ensure!(
+            self.manifest.total_jobs == total_jobs,
+            "{} was written for {} jobs, this invocation builds {} — \
+             the grid flags (backend/machine/images/seed) differ",
+            self.dir.display(),
+            self.manifest.total_jobs,
+            total_jobs
+        );
+        anyhow::ensure!(
+            self.manifest.config_digest == config_digest,
+            "{} was written by a different campaign configuration \
+             (digest {:016x}, this invocation {:016x}); rerun with the original flags",
+            self.dir.display(),
+            self.manifest.config_digest,
+            config_digest
+        );
+        Ok(())
+    }
+
+    /// Job indices with a durable completed record (segment scan — the
+    /// frames themselves are the source of truth, not a counter).
+    pub fn scan_completed(&self) -> Result<BTreeSet<usize>> {
+        shard::scan_completed(&self.dir)
+    }
+
+    /// Streaming job-index-order merge over every segment.
+    pub fn merge(&self) -> Result<SegmentMerge> {
+        SegmentMerge::open(&self.dir)
+    }
+
+    /// The generation number the next attempt should write under.
+    pub fn next_generation(&self) -> Result<u32> {
+        shard::next_generation(&self.dir)
+    }
+
+    /// Delete every segment file. Only the shared-resume finalizer
+    /// calls this: an incomplete shared store's segments are artifacts
+    /// of a crashed final write (the replay regenerates them
+    /// bit-identically); independent stores never clear — their
+    /// segments *are* the completed work.
+    pub fn clear_segments(&self) -> Result<usize> {
+        let segments = shard::list_segments(&self.dir)?;
+        let n = segments.len();
+        for seg in segments {
+            std::fs::remove_file(&seg.path)
+                .with_context(|| format!("removing stale segment {}", seg.path.display()))?;
+        }
+        Ok(n)
+    }
+
+    /// Where this store persists the episode cache.
+    pub fn episodes_path(&self) -> PathBuf {
+        self.dir.join("episodes.jsonl")
+    }
+}
+
+/// Order-sensitive digest of everything that determines a campaign's
+/// results: the full job list and the result-affecting base-config
+/// knobs. `--resume` refuses a store whose digest differs, because
+/// merging outcomes computed under different configs would produce a
+/// report no single campaign could have produced. (`artifacts_dir` and
+/// `workers` are deliberately excluded: worker count never changes
+/// results — that is the engine's core invariant — and the artifact
+/// path affects where AOT weights load from, not what they compute.)
+pub fn campaign_digest(base: &TuningConfig, jobs: &[CampaignJob], shared: Option<SharedLearning>) -> u64 {
+    let mut h = Fnv64::new();
+    h.mix(jobs.len() as u64);
+    for j in jobs {
+        h.mix(j.backend.ordinal() as u64);
+        for b in j.machine.bytes() {
+            h.mix(b as u64);
+        }
+        for b in j.workload.name().bytes() {
+            h.mix(b as u64);
+        }
+        h.mix(j.images as u64);
+        h.mix(j.agent.ordinal() as u64);
+        h.mix(j.seed);
+    }
+    h.mix(base.runs as u64);
+    h.mix(base.eps_start.to_bits());
+    h.mix(base.eps_end.to_bits());
+    h.mix(base.gamma.to_bits() as u64);
+    h.mix(base.lr.to_bits() as u64);
+    h.mix(base.replay_capacity as u64);
+    h.mix(base.replay_batch as u64);
+    h.mix(base.replay_policy.ordinal() as u64);
+    h.mix(base.replay_refresh_every as u64);
+    h.mix(base.replay_refresh_batches as u64);
+    h.mix(base.noise.to_bits());
+    h.mix(base.seed);
+    match shared {
+        None => h.mix(0),
+        Some(sl) => {
+            h.mix(1);
+            h.mix(sl.sync_every as u64);
+            h.mix(sl.merge.ordinal() as u64);
+        }
+    }
+    h.finish()
+}
+
+/// The spill sink campaign workers write through: one [`ShardWriter`]
+/// per worker shard. Successful outcomes are persisted (and may then
+/// be dropped from memory); failed jobs are declined so the collector
+/// keeps the error for the engine to surface.
+pub struct OutcomeSink {
+    writers: Vec<Mutex<ShardWriter>>,
+}
+
+impl OutcomeSink {
+    pub fn create(dir: &Path, generation: u32, shards: usize) -> Result<OutcomeSink> {
+        let writers = (0..shards.max(1))
+            .map(|w| ShardWriter::create(dir, generation, w).map(Mutex::new))
+            .collect::<Result<Vec<_>>>()?;
+        Ok(OutcomeSink { writers })
+    }
+
+    /// Append one record directly (the job-order finalize path of
+    /// shared campaigns); returns the bytes written.
+    pub fn append(&self, shard: usize, index: usize, outcome: &JobOutcome) -> Result<usize> {
+        let record = format::encode_record(index, outcome);
+        let mut writer = self.writers[shard % self.writers.len()]
+            .lock()
+            .unwrap_or_else(|p| p.into_inner());
+        writer.append(&record)
+    }
+}
+
+impl std::fmt::Debug for OutcomeSink {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("OutcomeSink").field("shards", &self.writers.len()).finish()
+    }
+}
+
+impl SpillSink<Result<JobOutcome>> for OutcomeSink {
+    fn spill(&self, shard: usize, index: usize, item: &Result<JobOutcome>) -> Result<Option<usize>> {
+        match item {
+            Ok(outcome) => self.append(shard, index, outcome).map(Some),
+            Err(_) => Ok(None),
+        }
+    }
+}

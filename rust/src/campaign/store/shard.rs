@@ -1,0 +1,200 @@
+//! Per-shard segment files and the k-way job-order merge over them.
+//!
+//! Each worker owns one segment per campaign attempt ("generation"),
+//! named `seg-{generation:04}-{shard:03}.jsonl`, and appends completed
+//! jobs as frames ([`super::format`]). Because workers claim jobs from
+//! a monotone atomic cursor, indices within one segment are strictly
+//! increasing — which is exactly the invariant a k-way min-head merge
+//! needs to stream every record back in global job-index order without
+//! buffering more than one head record per segment. The merge enforces
+//! that invariant (and rejects duplicate indices across segments), so
+//! a corrupted or hand-edited store fails loudly instead of producing
+//! a silently different fingerprint.
+
+use std::collections::BTreeSet;
+use std::fs::{File, OpenOptions};
+use std::io::{BufReader, BufWriter, Write};
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+use crate::util::json::Json;
+
+use super::format::{self, FrameReader};
+
+/// Canonical segment file name for `(generation, shard)`.
+pub fn segment_file_name(generation: u32, shard: usize) -> String {
+    format!("seg-{generation:04}-{shard:03}.jsonl")
+}
+
+/// One segment file on disk.
+#[derive(Debug, Clone)]
+pub struct Segment {
+    pub path: PathBuf,
+    pub generation: u32,
+    pub shard: usize,
+}
+
+fn parse_segment_name(name: &str) -> Option<(u32, usize)> {
+    let rest = name.strip_prefix("seg-")?.strip_suffix(".jsonl")?;
+    let (g, sh) = rest.split_once('-')?;
+    Some((g.parse().ok()?, sh.parse().ok()?))
+}
+
+/// Every segment in `dir`, sorted by `(generation, shard)` — the
+/// directory-listing order the OS returns is never observable.
+pub fn list_segments(dir: &Path) -> Result<Vec<Segment>> {
+    let entries = std::fs::read_dir(dir)
+        .with_context(|| format!("listing campaign store {}", dir.display()))?;
+    let mut out = Vec::new();
+    for entry in entries {
+        let entry = entry?;
+        let name = entry.file_name();
+        if let Some((generation, shard)) = parse_segment_name(&name.to_string_lossy()) {
+            out.push(Segment { path: entry.path(), generation, shard });
+        }
+    }
+    out.sort_by_key(|sg| (sg.generation, sg.shard));
+    Ok(out)
+}
+
+/// The next unused generation number in `dir` (0 for a fresh store).
+/// Each resume attempt writes a fresh generation so it can never
+/// append into — or clash with — a prior attempt's segments.
+pub fn next_generation(dir: &Path) -> Result<u32> {
+    Ok(list_segments(dir)?.iter().map(|sg| sg.generation + 1).max().unwrap_or(0))
+}
+
+/// Append-only writer for one shard's segment. Every append is flushed
+/// through to the OS before it returns, so a completed job's frame
+/// survives any later crash of this process.
+#[derive(Debug)]
+pub struct ShardWriter {
+    out: BufWriter<File>,
+    path: PathBuf,
+}
+
+impl ShardWriter {
+    pub fn create(dir: &Path, generation: u32, shard: usize) -> Result<ShardWriter> {
+        let path = dir.join(segment_file_name(generation, shard));
+        let file = OpenOptions::new()
+            .create_new(true)
+            .append(true)
+            .open(&path)
+            .with_context(|| format!("creating segment {}", path.display()))?;
+        Ok(ShardWriter { out: BufWriter::new(file), path })
+    }
+
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+
+    /// Append one record frame; returns the bytes written.
+    pub fn append(&mut self, record: &Json) -> Result<usize> {
+        let n = format::write_frame(&mut self.out, record)?;
+        self.out
+            .flush()
+            .with_context(|| format!("flushing segment {}", self.path.display()))?;
+        Ok(n)
+    }
+}
+
+struct Cursor {
+    segment: Segment,
+    reader: FrameReader<BufReader<File>>,
+    head: Option<(usize, Json)>,
+    last: Option<usize>,
+}
+
+impl Cursor {
+    fn advance(&mut self) -> Result<()> {
+        self.head = match self
+            .reader
+            .next_frame()
+            .with_context(|| format!("reading segment {}", self.segment.path.display()))?
+        {
+            Some(json) => {
+                let i = format::record_index(&json)?;
+                if let Some(prev) = self.last {
+                    anyhow::ensure!(
+                        i > prev,
+                        "segment {}: record index {i} after {prev} — segments must be \
+                         strictly index-ascending",
+                        self.segment.path.display()
+                    );
+                }
+                self.last = Some(i);
+                Some((i, json))
+            }
+            None => None,
+        };
+        Ok(())
+    }
+}
+
+/// Streaming k-way merge over every segment in a store directory,
+/// yielding records in ascending global job-index order while holding
+/// only one head record per segment in memory.
+pub struct SegmentMerge {
+    cursors: Vec<Cursor>,
+}
+
+impl SegmentMerge {
+    pub fn open(dir: &Path) -> Result<SegmentMerge> {
+        let mut cursors = Vec::new();
+        for segment in list_segments(dir)? {
+            let file = File::open(&segment.path)
+                .with_context(|| format!("opening segment {}", segment.path.display()))?;
+            let mut cursor = Cursor {
+                reader: FrameReader::new(BufReader::new(file)),
+                segment,
+                head: None,
+                last: None,
+            };
+            cursor.advance()?;
+            cursors.push(cursor);
+        }
+        Ok(SegmentMerge { cursors })
+    }
+
+    /// The next record in ascending job-index order, or `None` when
+    /// every segment is exhausted. Duplicate indices across segments
+    /// are an error (a store can hold each job at most once).
+    pub fn next_record(&mut self) -> Result<Option<(usize, Json)>> {
+        let mut best: Option<(usize, usize)> = None; // (cursor, index)
+        for (k, cursor) in self.cursors.iter().enumerate() {
+            let Some((i, _)) = cursor.head else { continue };
+            match best {
+                None => best = Some((k, i)),
+                Some((bk, bi)) => {
+                    anyhow::ensure!(
+                        i != bi,
+                        "job index {i} appears in both {} and {}",
+                        self.cursors[bk].segment.path.display(),
+                        self.cursors[k].segment.path.display()
+                    );
+                    if i < bi {
+                        best = Some((k, i));
+                    }
+                }
+            }
+        }
+        let Some((k, _)) = best else { return Ok(None) };
+        let head = self.cursors[k].head.take();
+        self.cursors[k].advance()?;
+        Ok(head)
+    }
+}
+
+/// The set of job indices a store already holds a completed record
+/// for — the manifest of finished work `--resume` skips. Derived by
+/// scanning the segments themselves (the frames are the durable truth;
+/// a counter file could lie after a crash).
+pub fn scan_completed(dir: &Path) -> Result<BTreeSet<usize>> {
+    let mut merge = SegmentMerge::open(dir)?;
+    let mut done = BTreeSet::new();
+    while let Some((i, _)) = merge.next_record()? {
+        done.insert(i);
+    }
+    Ok(done)
+}

@@ -121,6 +121,42 @@ pub enum AgentKind {
     Tabular,
 }
 
+impl AgentKind {
+    pub const ALL: [AgentKind; 4] =
+        [AgentKind::Dqn, AgentKind::DqnAot, AgentKind::DqnTarget, AgentKind::Tabular];
+
+    /// Canonical name, shared by the CLI and the campaign store.
+    pub fn name(self) -> &'static str {
+        match self {
+            AgentKind::Dqn => "dqn",
+            AgentKind::DqnAot => "dqn-aot",
+            AgentKind::DqnTarget => "dqn-target",
+            AgentKind::Tabular => "tabular",
+        }
+    }
+
+    /// Dense index in [`AgentKind::ALL`] (digest/fingerprint key).
+    pub fn ordinal(self) -> usize {
+        match self {
+            AgentKind::Dqn => 0,
+            AgentKind::DqnAot => 1,
+            AgentKind::DqnTarget => 2,
+            AgentKind::Tabular => 3,
+        }
+    }
+
+    /// Parse a canonical name or one of the historical CLI aliases.
+    pub fn parse(s: &str) -> Option<AgentKind> {
+        match s.to_ascii_lowercase().as_str() {
+            "dqn" | "native" | "dqn-native" => Some(AgentKind::Dqn),
+            "dqn-aot" | "aot" => Some(AgentKind::DqnAot),
+            "dqn-target" => Some(AgentKind::DqnTarget),
+            "tabular" => Some(AgentKind::Tabular),
+            _ => None,
+        }
+    }
+}
+
 /// f64 accumulator for raw gradients across the train steps of one
 /// sync segment (gradient-merge shared learning). Sums in canonical
 /// tensor order with `f64` partials — the same discipline as

@@ -10,12 +10,15 @@
 //!
 //! Run with no arguments for usage.
 
+use std::path::{Path, PathBuf};
+
 use anyhow::{bail, Context, Result};
 
 use aituning::backend::BackendId;
 use aituning::baselines::{human_tuned, Evolutionary, RandomSearch, Searcher};
 use aituning::campaign::{
     ablation_table, job_grid, CampaignConfig, CampaignEngine, CampaignJob, EvalSpec,
+    SpillOptions, SpillRun, SpilledReport,
 };
 use aituning::convergence::{run_convergence, ConvergenceConfig, SyntheticModel};
 use aituning::coordinator::{
@@ -53,11 +56,18 @@ USAGE:
                        [--merge weights|grads]  (how the hub folds pushes: averaged
                        weights, or A3C-style accumulated gradients + one hub Adam
                        step per round — grads needs the native DQN agent)
+                       [--spill-dir DIR | --resume DIR]  (on-disk campaign store:
+                       spill finished jobs to per-shard segments for flat memory, and
+                       resume a killed campaign from where it stopped)
+                       [--crash-after N]  (testing hook: interrupt the spilled run
+                       after N jobs / merge rounds; requires a store dir)
   aituning convergence [--model parabola|coupled|bool] [--noise 0.3] [--runs 400]
   aituning sweep       --cvar MPIR_CVAR_POLLS_BEFORE_YIELD --values 200,1000,1500
                        --workload icar --images 512 [--base async] [--workers N]
                        [--backend coarrays|collectives]
                        [--machine cheyenne|edison|both] [--replay uniform|stratified|prioritized]
+                       [--spill-dir DIR | --resume DIR]  (persist the episode cache in
+                       a campaign store dir so later sweeps skip repeated episodes)
   aituning baselines   --workload icar --images 256 [--budget 20] [--workers N]
                        [--backend coarrays|collectives]
                        [--replay uniform|stratified|prioritized]
@@ -118,13 +128,32 @@ fn parse_replay(args: &Args) -> Result<ReplayPolicyKind> {
 }
 
 fn parse_agent(args: &Args) -> Result<AgentKind> {
-    match args.get_or("agent", "dqn") {
-        "dqn" | "native" | "dqn-native" => Ok(AgentKind::Dqn),
-        "dqn-aot" | "aot" => Ok(AgentKind::DqnAot),
-        "dqn-target" => Ok(AgentKind::DqnTarget),
-        "tabular" => Ok(AgentKind::Tabular),
-        other => bail!("unknown agent {other:?} (dqn|dqn-aot|dqn-target|tabular)"),
+    let name = args.get_or("agent", "dqn");
+    AgentKind::parse(name)
+        .with_context(|| format!("unknown agent {name:?} (dqn|dqn-aot|dqn-target|tabular)"))
+}
+
+/// `--spill-dir DIR` (create a fresh campaign store) or `--resume DIR`
+/// (reopen one); mutually exclusive because resuming reuses the dir
+/// the store already lives in. `--crash-after N` only makes sense
+/// against a store — an interrupted in-memory campaign keeps nothing.
+fn parse_store(args: &Args) -> Result<Option<(PathBuf, SpillOptions)>> {
+    let spill = args.get("spill-dir");
+    let resume = args.get("resume");
+    if spill.is_some() && resume.is_some() {
+        bail!("--spill-dir and --resume are mutually exclusive (resume reuses the store's dir)");
     }
+    let crash_after = match args.get("crash-after") {
+        Some(_) => Some(args.usize_or("crash-after", 0)?),
+        None => None,
+    };
+    let Some(dir) = spill.or(resume) else {
+        if crash_after.is_some() {
+            bail!("--crash-after requires --spill-dir or --resume");
+        }
+        return Ok(None);
+    };
+    Ok(Some((PathBuf::from(dir), SpillOptions { resume: resume.is_some(), crash_after })))
 }
 
 /// `--merge weights|grads` — how a shared campaign's hub folds worker
@@ -275,6 +304,10 @@ fn cmd_campaign(args: &Args) -> Result<()> {
         workers: args.usize_or("workers", 0)?,
     });
 
+    if let Some((dir, opts)) = parse_store(args)? {
+        return run_campaign_spilled(&engine, &jobs, &dir, shared_mode, &opts);
+    }
+
     if shared_mode {
         // Independent-vs-shared ablation: same jobs, same seeds, the
         // only difference is the LearnerHub coupling.
@@ -294,6 +327,11 @@ fn cmd_campaign(args: &Args) -> Result<()> {
             independent.wall_clock.as_secs_f64(),
             shared.wall_clock.as_secs_f64(),
             shared.workers
+        );
+        println!(
+            "fingerprints: independent {:016x}, shared {:016x}",
+            independent.fingerprint(),
+            shared.fingerprint()
         );
         return Ok(());
     }
@@ -321,7 +359,74 @@ fn cmd_campaign(args: &Args) -> Result<()> {
         report.wall_clock.as_secs_f64(),
         report.geomean_speedup()
     );
+    println!("fingerprint: {:016x}", report.fingerprint());
     Ok(())
+}
+
+/// Campaign through the on-disk store: workers spill each finished job
+/// to per-shard segment files, the report streams back from disk, and
+/// a killed run resumes from whatever the store already holds.
+fn run_campaign_spilled(
+    engine: &CampaignEngine,
+    jobs: &[CampaignJob],
+    dir: &Path,
+    shared_mode: bool,
+    opts: &SpillOptions,
+) -> Result<()> {
+    let run = if shared_mode {
+        // A store holds exactly one campaign's results, so the
+        // in-memory independent-vs-shared ablation leg is skipped
+        // here; run without a store dir to see the ablation table.
+        println!("spilled shared campaign (ablation leg skipped: one store, one campaign)\n");
+        engine.run_shared_spilled(jobs, dir, opts)?
+    } else {
+        engine.run_spilled(jobs, dir, opts)?
+    };
+    let report = match run {
+        SpillRun::Interrupted { completed, total } => {
+            println!(
+                "campaign interrupted after {completed}/{total} {}; resume with --resume {}",
+                if shared_mode { "rounds" } else { "jobs" },
+                dir.display()
+            );
+            return Ok(());
+        }
+        SpillRun::Complete(report) => report,
+    };
+    print_spilled_report(&report);
+    Ok(())
+}
+
+fn print_spilled_report(report: &SpilledReport) {
+    let mut t = Table::new(&[
+        "machine", "workload", "images", "reference (µs)", "best (µs)", "improvement",
+    ]);
+    for r in &report.rows {
+        t.row(vec![
+            r.job.machine.to_string(),
+            r.job.workload.name().to_string(),
+            r.job.images.to_string(),
+            format!("{:.0}", r.reference_us),
+            format!("{:.0}", r.best_us),
+            format!("{:+.1}%", r.improvement() * 100.0),
+        ]);
+    }
+    t.print();
+    if let Some(hub) = &report.hub {
+        println!("\nhub: {}", hub.describe());
+    }
+    println!(
+        "\ntotal runs: {} across {} jobs ({} replayed from the store, {} executed) \
+         on {} workers in {:.2}s (geomean speedup {:.3}x)",
+        report.total_app_runs(),
+        report.rows.len(),
+        report.jobs_loaded,
+        report.jobs_executed,
+        report.workers,
+        report.wall_clock.as_secs_f64(),
+        report.geomean_speedup()
+    );
+    println!("fingerprint: {:016x}", report.fingerprint());
 }
 
 fn cmd_convergence(args: &Args) -> Result<()> {
@@ -401,6 +506,27 @@ fn cmd_sweep(args: &Args) -> Result<()> {
         },
         workers: args.usize_or("workers", 0)?,
     });
+
+    // --spill-dir and --resume are synonyms here: a sweep has no
+    // partial-progress state to recover, only the episode cache, so
+    // both just persist it in the store dir's episodes.jsonl.
+    let episodes = match parse_store(args)? {
+        Some((_, opts)) if opts.crash_after.is_some() => {
+            bail!("--crash-after only applies to campaign, not sweep")
+        }
+        Some((dir, _)) => {
+            std::fs::create_dir_all(&dir)
+                .with_context(|| format!("creating store dir {}", dir.display()))?;
+            let path = dir.join("episodes.jsonl");
+            let loaded = engine.cache().load_from(&path)?;
+            if loaded > 0 {
+                println!("episode cache: loaded {loaded} entries from {}", path.display());
+            }
+            Some(path)
+        }
+        None => None,
+    };
+
     let means = engine.evaluate_specs(&specs, reps)?;
 
     let mut t = Table::new(&["machine", cvar_name, "total (µs)", "vs first"]);
@@ -418,6 +544,16 @@ fn cmd_sweep(args: &Args) -> Result<()> {
         }
     }
     t.print();
+    if let Some(path) = &episodes {
+        engine.cache().save_to(path)?;
+        println!(
+            "episode cache: {} entries saved to {} ({} hits / {} misses this sweep)",
+            engine.cache().len(),
+            path.display(),
+            engine.cache().hits(),
+            engine.cache().misses()
+        );
+    }
     Ok(())
 }
 

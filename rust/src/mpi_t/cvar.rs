@@ -180,8 +180,10 @@ pub const COLLECTIVE_CVARS: &[CvarDescriptor] = &[
 pub const NUM_CVARS: usize = 6;
 
 /// A concrete assignment of values to all control variables of one
-/// backend's registry.
-#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+/// backend's registry. Ordered (backend tag, then values) so ordered
+/// containers keyed by configurations — e.g. the persisted episode
+/// cache — iterate in a canonical, insertion-independent order.
+#[derive(Debug, Clone, PartialEq, Eq, PartialOrd, Ord, Hash)]
 pub struct CvarSet {
     backend: BackendId,
     values: Vec<i64>,

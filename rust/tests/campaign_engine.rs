@@ -1,13 +1,23 @@
 #![allow(clippy::unwrap_used)] // test/bench code panics by design
 //! Campaign-engine integration tests: thread-count invariance (the
-//! engine's core contract), episode-cache correctness, and report
-//! consistency — all against the real simulator with the tabular agent.
+//! engine's core contract), episode-cache correctness, report
+//! consistency, and the on-disk campaign store (spill, kill, resume)
+//! — all against the real simulator.
+
+use std::path::PathBuf;
 
 use aituning::backend::BackendId;
-use aituning::campaign::{job_grid, CampaignConfig, CampaignEngine, CampaignJob};
-use aituning::coordinator::{AgentKind, Controller, TuningConfig};
-use aituning::mpi_t::{CvarId, CvarSet};
+use aituning::campaign::{
+    job_grid, store, CampaignConfig, CampaignEngine, CampaignJob, CampaignReport, JobOutcome,
+    SpillOptions, SpillRun,
+};
+use aituning::coordinator::{
+    AgentKind, Controller, MergeMode, SharedLearning, TuningConfig, TuningOutcome,
+};
+use aituning::metrics::{RunRecord, Summary, TuningLog};
+use aituning::mpi_t::{CvarId, CvarSet, PvarId, PvarStats};
 use aituning::simmpi::Machine;
+use aituning::util::rng::Rng;
 use aituning::workloads::WorkloadKind;
 
 fn base_cfg(runs: usize) -> TuningConfig {
@@ -266,4 +276,282 @@ fn controller_cached_evaluation_uses_engine_cache() {
     assert_eq!(a.to_bits(), b.to_bits());
     assert_eq!(eng.cache().misses(), 3);
     assert_eq!(eng.cache().hits(), 3);
+}
+
+// ---------------------------------------------------------------------------
+// Campaign store: spill, kill, resume.
+
+/// Fresh per-test store dir (removed first so reruns never trip the
+/// "already holds a campaign store" guard).
+fn temp_store(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("aituning-store-{tag}-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+fn shared_engine(runs: usize, workers: usize, merge: MergeMode, agent: AgentKind) -> CampaignEngine {
+    CampaignEngine::new(CampaignConfig {
+        base: TuningConfig {
+            shared: Some(SharedLearning { sync_every: 2, merge }),
+            ..TuningConfig { agent, ..base_cfg(runs) }
+        },
+        workers,
+    })
+}
+
+#[test]
+fn spilled_campaign_matches_in_memory_at_1_2_4_workers() {
+    let jobs = small_grid();
+    let reference = engine(4, 1).run(&jobs).unwrap();
+    for workers in [1, 2, 4] {
+        let dir = temp_store(&format!("spill-{workers}"));
+        let report = engine(4, workers)
+            .run_spilled(&jobs, &dir, &SpillOptions::default())
+            .unwrap()
+            .into_complete()
+            .unwrap();
+        assert_eq!(report.fingerprint(), reference.fingerprint(), "{workers} workers");
+        assert_eq!(report.jobs_loaded, 0);
+        assert_eq!(report.jobs_executed, jobs.len());
+        assert_eq!(report.total_app_runs(), reference.total_app_runs());
+        assert_eq!(report.improvements(), reference.improvements());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}
+
+#[test]
+fn killed_campaign_resumes_to_the_uninterrupted_fingerprint() {
+    let jobs = small_grid();
+    assert_eq!(jobs.len(), 4);
+    let reference = engine(4, 2).run(&jobs).unwrap();
+    for workers in [1, 2, 4] {
+        let dir = temp_store(&format!("resume-{workers}"));
+        let crash = engine(4, workers)
+            .run_spilled(&jobs, &dir, &SpillOptions { resume: false, crash_after: Some(2) })
+            .unwrap();
+        match crash {
+            SpillRun::Interrupted { completed, total } => {
+                assert_eq!((completed, total), (2, 4));
+            }
+            SpillRun::Complete(_) => panic!("crash_after must interrupt the run"),
+        }
+        let report = engine(4, workers)
+            .run_spilled(&jobs, &dir, &SpillOptions { resume: true, crash_after: None })
+            .unwrap()
+            .into_complete()
+            .unwrap();
+        assert_eq!(report.fingerprint(), reference.fingerprint(), "{workers} workers");
+        assert_eq!(report.jobs_loaded, 2, "resume must skip the two finished jobs");
+        assert_eq!(report.jobs_executed, 2);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}
+
+#[test]
+fn byte_truncated_segment_reruns_only_the_torn_job() {
+    // Simulate a hard kill mid-write: chop the tail off the largest
+    // segment so its last frame is torn. Resume must drop (and redo)
+    // only that job and still land on the uninterrupted fingerprint.
+    let jobs = small_grid();
+    let reference = engine(4, 1).run(&jobs).unwrap();
+    let dir = temp_store("torn-segment");
+    engine(4, 2)
+        .run_spilled(&jobs, &dir, &SpillOptions { resume: false, crash_after: Some(3) })
+        .unwrap();
+    let largest = std::fs::read_dir(&dir)
+        .unwrap()
+        .filter_map(|e| e.ok().map(|e| e.path()))
+        .filter(|p| {
+            p.file_name().and_then(|n| n.to_str()).is_some_and(|n| n.starts_with("seg-"))
+        })
+        .max_by_key(|p| std::fs::metadata(p).unwrap().len())
+        .expect("the crashed run must have written segments");
+    let bytes = std::fs::read(&largest).unwrap();
+    assert!(bytes.len() > 8);
+    std::fs::write(&largest, &bytes[..bytes.len() - 5]).unwrap();
+
+    let report = engine(4, 2)
+        .run_spilled(&jobs, &dir, &SpillOptions { resume: true, crash_after: None })
+        .unwrap()
+        .into_complete()
+        .unwrap();
+    assert_eq!(report.fingerprint(), reference.fingerprint());
+    assert!(report.jobs_loaded <= 2, "the torn record must not count as completed");
+    assert!(report.jobs_executed >= 2);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn shared_spilled_matches_in_memory_and_replays_complete_stores() {
+    let jobs = small_grid();
+    let reference =
+        shared_engine(4, 1, MergeMode::Weights, AgentKind::Tabular).run_shared(&jobs).unwrap();
+    for workers in [1, 2, 4] {
+        let dir = temp_store(&format!("shared-{workers}"));
+        let report = shared_engine(4, workers, MergeMode::Weights, AgentKind::Tabular)
+            .run_shared_spilled(&jobs, &dir, &SpillOptions::default())
+            .unwrap()
+            .into_complete()
+            .unwrap();
+        assert_eq!(report.fingerprint(), reference.fingerprint(), "{workers} workers");
+        assert_eq!(report.hub, reference.hub);
+
+        // Re-opening the completed store is a pure segment replay: no
+        // simulation, same fingerprint, same hub summary.
+        let replay = shared_engine(4, workers, MergeMode::Weights, AgentKind::Tabular)
+            .run_shared_spilled(&jobs, &dir, &SpillOptions { resume: true, crash_after: None })
+            .unwrap()
+            .into_complete()
+            .unwrap();
+        assert_eq!(replay.fingerprint(), reference.fingerprint());
+        assert_eq!(replay.hub, reference.hub);
+        assert_eq!(replay.jobs_loaded, jobs.len());
+        assert_eq!(replay.jobs_executed, 0);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}
+
+#[test]
+fn killed_shared_campaign_resumes_through_digest_validated_replay() {
+    // Both merge modes, 1/2/4 workers: kill after one merge round,
+    // resume (which replays rounds against the recorded hub digests),
+    // and land on the uninterrupted in-memory fingerprint.
+    let cases = [
+        (MergeMode::Weights, AgentKind::Tabular, "weights"),
+        (MergeMode::Grads, AgentKind::Dqn, "grads"),
+    ];
+    for (merge, agent, tag) in cases {
+        let jobs = job_grid(
+            BackendId::Coarrays,
+            &[Machine::cheyenne()],
+            &[WorkloadKind::LatticeBoltzmann],
+            &[4, 8],
+            agent,
+            7,
+        );
+        let reference = shared_engine(4, 1, merge, agent).run_shared(&jobs).unwrap();
+        for workers in [1, 2, 4] {
+            let dir = temp_store(&format!("shared-resume-{tag}-{workers}"));
+            let crash = shared_engine(4, workers, merge, agent)
+                .run_shared_spilled(
+                    &jobs,
+                    &dir,
+                    &SpillOptions { resume: false, crash_after: Some(1) },
+                )
+                .unwrap();
+            match crash {
+                SpillRun::Interrupted { completed, total } => {
+                    assert_eq!((completed, total), (1, 2), "{tag} at {workers} workers");
+                }
+                SpillRun::Complete(_) => panic!("crash_after must interrupt the run"),
+            }
+            let report = shared_engine(4, workers, merge, agent)
+                .run_shared_spilled(&jobs, &dir, &SpillOptions { resume: true, crash_after: None })
+                .unwrap()
+                .into_complete()
+                .unwrap();
+            assert_eq!(
+                report.fingerprint(),
+                reference.fingerprint(),
+                "{tag} at {workers} workers"
+            );
+            assert_eq!(report.hub, reference.hub);
+            let _ = std::fs::remove_dir_all(&dir);
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Property test: arbitrary JobOutcomes survive the store format.
+
+fn random_cvars(rng: &mut Rng, backend: BackendId) -> CvarSet {
+    let mut cv = CvarSet::defaults(backend);
+    for i in 0..cv.len() {
+        // `set` clamps into the descriptor domain, so any raw draw
+        // lands on a persistable in-domain value.
+        cv.set(CvarId(i), rng.range_i64(-10_000, 2_000_000));
+    }
+    cv
+}
+
+fn random_f64(rng: &mut Rng) -> f64 {
+    // Raw bit patterns: exercises NaN payloads, infinities and -0.0,
+    // which the hex-bits encoding must carry through unchanged.
+    f64::from_bits(rng.next_u64())
+}
+
+fn random_outcome(rng: &mut Rng) -> JobOutcome {
+    let backend = if rng.chance(0.5) { BackendId::Coarrays } else { BackendId::Collectives };
+    let machine = if rng.chance(0.5) { "cheyenne" } else { "edison" };
+    let workload = WorkloadKind::ALL[rng.below(WorkloadKind::ALL.len() as u64) as usize];
+    let agent = AgentKind::ALL[rng.below(AgentKind::ALL.len() as u64) as usize];
+    let images = rng.below(4096) as usize;
+    let job = CampaignJob { backend, machine, workload, images, agent, seed: rng.next_u64() };
+    let mut log = TuningLog::new(workload.name(), images);
+    for run in 0..rng.below(6) as usize {
+        let summaries = (0..rng.below(3) as usize)
+            .map(|_| {
+                let stats = Summary {
+                    count: rng.below(1 << 20) as usize,
+                    mean: random_f64(rng),
+                    max: random_f64(rng),
+                    min: random_f64(rng),
+                    median: random_f64(rng),
+                    std: random_f64(rng),
+                };
+                (PvarId(rng.below(64) as usize), stats)
+            })
+            .collect();
+        log.push(RunRecord {
+            run_index: run,
+            cvars: random_cvars(rng, backend),
+            total_time_us: random_f64(rng),
+            reward: random_f64(rng),
+            action: rng.chance(0.7).then(|| rng.below(256) as usize),
+            epsilon: random_f64(rng),
+            pvars: PvarStats { summaries },
+        });
+    }
+    let outcome = TuningOutcome {
+        log,
+        best: random_cvars(rng, backend),
+        ensemble: random_cvars(rng, backend),
+        reference_us: random_f64(rng),
+        best_us: random_f64(rng),
+    };
+    JobOutcome { job, outcome }
+}
+
+#[test]
+fn random_job_outcomes_round_trip_through_the_store_format() {
+    use aituning::prop_assert;
+    aituning::util::prop::forall("store-format round trip", 64, |rng| {
+        let index = rng.below(1 << 30) as usize;
+        let original = random_outcome(rng);
+        let encoded = store::format::encode_record(index, &original);
+        let (got_index, decoded) = store::format::decode_record(&encoded)
+            .map_err(|e| format!("decode failed: {e:#}"))?;
+        prop_assert!(got_index == index, "index {got_index} != {index}");
+
+        // Byte-identical re-encoding is the strongest round-trip claim
+        // the format makes (and what resume's fingerprints rest on).
+        let reencoded = store::format::encode_record(got_index, &decoded);
+        prop_assert!(
+            encoded.to_string() == reencoded.to_string(),
+            "re-encoding changed bytes for index {index}"
+        );
+
+        // And the fingerprint a report would compute is unchanged.
+        let fp = |r: JobOutcome| {
+            CampaignReport {
+                results: vec![r],
+                wall_clock: std::time::Duration::ZERO,
+                workers: 1,
+                hub: None,
+            }
+            .fingerprint()
+        };
+        prop_assert!(fp(original) == fp(decoded), "fingerprint drifted");
+        Ok(())
+    });
 }

@@ -1,0 +1,96 @@
+#!/usr/bin/env python3
+"""Diff a roofline bench report against the committed baseline.
+
+Usage: bench_diff.py BASELINE.json CURRENT.json
+
+Both files use the schema `rust/benches/dqn_runtime.rs --json` writes:
+{"bench": ..., "roofline": [{"engine", "batch", "per_sample_us", ...}]}.
+Cells are matched by (engine, batch) and compared on per_sample_us:
+
+  * > 10% slower than baseline  -> GitHub Actions warning annotation
+  * > 2x slower than baseline   -> error annotation + exit 1
+
+A baseline with `"provisional": true` downgrades errors to warnings —
+used while the committed numbers were recorded off the CI runner class
+and only establish the schema, not the hardware envelope. Re-record by
+copying a CI-produced BENCH_dqn_runtime.json over the baseline and
+dropping the provisional marker.
+
+Cells present on one side only never fail the gate (the AOT engine row
+exists only where compiled artifacts do); they are reported so silent
+coverage loss is visible in the log.
+
+Stdlib only: the CI image must not need pip.
+"""
+
+import json
+import sys
+
+WARN_RATIO = 1.10
+FAIL_RATIO = 2.0
+
+
+def roofline_cells(report):
+    cells = {}
+    for row in report.get("roofline", []):
+        cells[(row["engine"], int(row["batch"]))] = float(row["per_sample_us"])
+    return cells
+
+
+def main(argv):
+    if len(argv) != 3:
+        print(f"usage: {argv[0]} BASELINE.json CURRENT.json", file=sys.stderr)
+        return 2
+    with open(argv[1]) as f:
+        baseline = json.load(f)
+    with open(argv[2]) as f:
+        current = json.load(f)
+
+    provisional = bool(baseline.get("provisional"))
+    base_cells = roofline_cells(baseline)
+    cur_cells = roofline_cells(current)
+    if not base_cells:
+        print(f"::error::baseline {argv[1]} has no roofline cells")
+        return 1
+
+    failures = 0
+    for key in sorted(base_cells):
+        engine, batch = key
+        if key not in cur_cells:
+            print(f"note: cell {engine}/batch={batch} absent from current report")
+            continue
+        base, cur = base_cells[key], cur_cells[key]
+        if base <= 0.0:
+            print(f"note: cell {engine}/batch={batch} has a degenerate baseline ({base})")
+            continue
+        ratio = cur / base
+        label = (
+            f"{engine} batch={batch}: {cur:.3f} us/sample vs baseline "
+            f"{base:.3f} ({ratio:.2f}x)"
+        )
+        if ratio > FAIL_RATIO:
+            failures += 1
+            severity = "warning" if provisional else "error"
+            print(f"::{severity}::{label} — exceeds the {FAIL_RATIO:.0f}x failure gate")
+        elif ratio > WARN_RATIO:
+            print(f"::warning::{label} — exceeds the {WARN_RATIO - 1:.0%} regression budget")
+        else:
+            print(f"ok: {label}")
+
+    for key in sorted(set(cur_cells) - set(base_cells)):
+        print(f"note: new cell {key[0]}/batch={key[1]} not in baseline yet")
+
+    if failures and provisional:
+        print(
+            f"{failures} cell(s) beyond the failure gate, but the baseline is "
+            "provisional — reported as warnings only"
+        )
+        return 0
+    if failures:
+        return 1
+    print(f"roofline within budget across {len(base_cells)} baseline cells")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv))

@@ -334,8 +334,12 @@ fn classify(path: &str) -> FileClass {
         // read here would break bitwise reproducibility at the root.
         "runtime/native/kernels.rs",
     ];
-    let restricted =
-        RESTRICTED.iter().any(|m| p.ends_with(m)) || p.contains("coordinator/replay/");
+    // Directory-scoped restrictions: replay policies and the on-disk
+    // campaign store (its frames round-trip fingerprinted bits, so any
+    // iteration-order or clock dependence there corrupts resume).
+    let restricted = RESTRICTED.iter().any(|m| p.ends_with(m))
+        || p.contains("coordinator/replay/")
+        || p.contains("campaign/store/");
     let library = p.contains("rust/src/");
     FileClass { restricted, library }
 }
@@ -975,6 +979,20 @@ mod tests {
         // The sibling wrapper module stays unrestricted (it holds no
         // reductions of its own).
         assert!(scan_file("rust/src/runtime/native/mlp.rs", src).is_empty());
+    }
+
+    #[test]
+    fn campaign_store_is_a_restricted_directory() {
+        // Every file in the store serializes fingerprinted bits; a
+        // hash-map iteration or wall-clock read anywhere in the
+        // directory would corrupt resumed fingerprints.
+        let src = "let mut acc = 0.0f32;\nacc += x as f32;\nlet t = Instant::now();\n";
+        for file in ["format.rs", "shard.rs", "manifest.rs", "mod.rs"] {
+            let d = scan_file(&format!("rust/src/campaign/store/{file}"), src);
+            assert_eq!(rules_at(&d), vec![(2, Rule::R2), (3, Rule::R3)], "{file}");
+        }
+        // The sibling cache module is not directory-restricted.
+        assert!(scan_file("rust/src/campaign/cache.rs", src).is_empty());
     }
 
     #[test]
