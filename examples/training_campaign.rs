@@ -63,7 +63,7 @@ fn main() -> anyhow::Result<()> {
         agent,
         base.seed,
     );
-    let engine = CampaignEngine::new(CampaignConfig { base, workers: 0 });
+    let engine = CampaignEngine::new(CampaignConfig { base, workers: 0, straggle: None });
 
     if shared_mode {
         let independent = engine.run(&jobs)?;

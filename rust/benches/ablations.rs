@@ -30,6 +30,7 @@ fn main() -> anyhow::Result<()> {
     let engine = CampaignEngine::new(CampaignConfig {
         base: TuningConfig { agent: AgentKind::Tabular, ..base.clone() },
         workers: 0,
+        straggle: None,
     });
     let vanilla = engine.evaluate(kind, images, &CvarSet::vanilla(), 3)?;
     let human = engine.evaluate(kind, images, &human_tuned(), 3)?;
@@ -57,7 +58,8 @@ fn main() -> anyhow::Result<()> {
         })
         .collect();
     let report =
-        CampaignEngine::new(CampaignConfig { base: base.clone(), workers: 0 }).run(&jobs)?;
+        CampaignEngine::new(CampaignConfig { base: base.clone(), workers: 0, straggle: None })
+            .run(&jobs)?;
     for ((name, _), r) in agents.iter().zip(&report.results) {
         // inference ablation: best vs ensemble vs last
         let out = &r.outcome;
@@ -108,7 +110,8 @@ fn main() -> anyhow::Result<()> {
     // --- Q-target ablation (the paper cites fixed Q-targets but does
     //     not implement them, §5.2) ---
     if have_artifacts && !quick {
-        let report = CampaignEngine::new(CampaignConfig { base: base.clone(), workers: 1 })
+        let report =
+            CampaignEngine::new(CampaignConfig { base: base.clone(), workers: 1, straggle: None })
             .run(&[CampaignJob {
                 backend: aituning::backend::BackendId::Coarrays,
                 machine: base.machine.name,
@@ -131,6 +134,7 @@ fn main() -> anyhow::Result<()> {
                 ..base.clone()
             },
             workers: 1,
+            straggle: None,
         });
         let report = variant.run(&[CampaignJob {
             backend: aituning::backend::BackendId::Coarrays,

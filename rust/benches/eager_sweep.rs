@@ -29,6 +29,7 @@ fn main() -> anyhow::Result<()> {
     let engine = CampaignEngine::new(CampaignConfig {
         base: TuningConfig { machine: machine.clone(), seed: 42, ..TuningConfig::default() },
         workers: 0,
+        straggle: None,
     });
 
     let mut t = Table::new(&[

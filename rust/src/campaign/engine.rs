@@ -37,11 +37,54 @@ pub struct CampaignConfig {
     pub base: TuningConfig,
     /// Worker threads; `0` means one per available hardware thread.
     pub workers: usize,
+    /// Deterministic per-segment delay injection for shared campaigns
+    /// (`None` = no delays). The sync-vs-async ablation uses this to
+    /// model heterogeneous segment times — a fixed straggler job plus
+    /// hash-derived jitter — without touching any simulated result:
+    /// delays are pure `thread::sleep`s, so fingerprints are unaffected
+    /// and sync mode stays bit-identical with a spec installed.
+    pub straggle: Option<StraggleSpec>,
 }
 
 impl CampaignConfig {
     pub fn new(base: TuningConfig) -> CampaignConfig {
-        CampaignConfig { base, workers: 0 }
+        CampaignConfig { base, workers: 0, straggle: None }
+    }
+}
+
+/// Deterministic straggler/jitter injection: how long a worker sleeps
+/// before finishing `(job_index, segment)`. The delay is a pure
+/// function of the spec and those two indices (FNV-mixed, never a
+/// clock or thread id), so a delayed campaign is exactly as replayable
+/// as an undelayed one — wall-clock changes, results do not.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct StraggleSpec {
+    /// Job index that always sleeps `straggler_ms` extra per segment —
+    /// the injected straggler the async ablation routes around.
+    pub straggler_job: usize,
+    /// Constant extra delay of the straggler job per segment (ms).
+    pub straggler_ms: u64,
+    /// Upper bound of the uniform per-`(job, segment)` jitter every job
+    /// draws (ms); 0 disables jitter. Wide jitter across all jobs is
+    /// what makes the per-round barrier expensive: each sync round
+    /// waits for that round's unluckiest draw.
+    pub jitter_ms: u64,
+    /// Seed of the jitter hash (vary to resample the delay pattern).
+    pub seed: u64,
+}
+
+impl StraggleSpec {
+    /// The injected delay for one job segment.
+    pub fn delay(&self, job_index: usize, segment: usize) -> Duration {
+        let mut ms = if job_index == self.straggler_job { self.straggler_ms } else { 0 };
+        if self.jitter_ms > 0 {
+            let mut h = crate::util::fnv::Fnv64::new();
+            h.mix(self.seed);
+            h.mix(job_index as u64);
+            h.mix(segment as u64);
+            ms += h.finish() % (self.jitter_ms + 1);
+        }
+        Duration::from_millis(ms)
     }
 }
 

@@ -32,7 +32,10 @@
 //!   the same jobs coupled through a
 //!   [`crate::coordinator::LearnerHub`], pulling/pushing weight and
 //!   replay snapshots at a fixed cadence with job-order-sequenced
-//!   merges.
+//!   merges. With `--sync-mode async --staleness N` the round barrier
+//!   is replaced by a bounded-staleness window ([`async_shared`]):
+//!   contributions merge the moment a segment ends, and a start gate
+//!   keeps every merge within `N` hub generations of its pull.
 //!
 //! Both modes also run against an on-disk [`store`] (the spillable,
 //! crash-resumable campaign store): [`CampaignEngine::run_spilled`]
@@ -52,6 +55,7 @@
 //! fingerprint also covers the hub's final state), in memory or
 //! through the store.
 
+mod async_shared;
 mod cache;
 mod collector;
 mod engine;
@@ -64,6 +68,7 @@ pub use cache::{EpisodeCache, EpisodeKey};
 pub use collector::{CollectorError, ShardedCollector, SpillSink};
 pub use engine::{
     evaluate_config, CampaignConfig, CampaignEngine, EvalSpec, SpillOptions, SpillRun,
+    StraggleSpec,
 };
 pub use job::{job_grid, CampaignJob};
 pub use report::{

@@ -111,18 +111,27 @@ impl CampaignReport {
                 .filter(|(_, &n)| n > 0)
                 .map(|(kind, &n)| (kind.name(), num(n as f64)))
                 .collect();
-            fields.push((
-                "hub",
-                obj(vec![
-                    ("merges", num(hub.merges as f64)),
-                    ("replay_len", num(hub.replay_len as f64)),
-                    ("total_transitions", num(hub.total_transitions as f64)),
-                    ("replay_policy", s(hub.policy.name())),
-                    ("merge_mode", s(hub.merge.name())),
-                    ("occupancy", obj(occupancy)),
-                    ("digest", s(&format!("{:016x}", hub.digest))),
-                ]),
-            ));
+            let mut hub_fields = vec![
+                ("merges", num(hub.merges as f64)),
+                ("replay_len", num(hub.replay_len as f64)),
+                ("total_transitions", num(hub.total_transitions as f64)),
+                ("replay_policy", s(hub.policy.name())),
+                ("merge_mode", s(hub.merge.name())),
+                ("occupancy", obj(occupancy)),
+            ];
+            // Gated like `mix_hub`: synchronous default-optimizer
+            // campaigns emit the exact PR 8 JSON shape.
+            if hub.extensions_active() {
+                hub_fields.push(("generations", num(hub.generations as f64)));
+                hub_fields.push((
+                    "staleness_histogram",
+                    arr(hub.staleness.iter().map(|&n| num(n as f64))),
+                ));
+                hub_fields.push(("hub_lr_schedule", s(&hub.lr_schedule.to_string())));
+                hub_fields.push(("hub_steps", num(hub.hub_steps as f64)));
+            }
+            hub_fields.push(("digest", s(&format!("{:016x}", hub.digest))));
+            fields.push(("hub", obj(hub_fields)));
         }
         obj(fields)
     }
@@ -162,6 +171,17 @@ fn mix_hub(h: &mut Fnv64, hub: &HubSummary) {
     h.mix(hub.merge.ordinal() as u64);
     for &n in &hub.occupancy {
         h.mix(n as u64);
+    }
+    // Async/hub-optimizer extensions fold in only when active so every
+    // pre-existing synchronous campaign keeps its PR 8 fingerprint.
+    if hub.extensions_active() {
+        h.mix(hub.generations as u64);
+        for &n in &hub.staleness {
+            h.mix(n as u64);
+        }
+        h.mix(hub.lr_schedule.ordinal() as u64);
+        h.mix(hub.lr_schedule.period() as u64);
+        h.mix(hub.hub_steps as u64);
     }
     h.mix(hub.digest);
 }
@@ -411,6 +431,10 @@ mod tests {
             policy: crate::coordinator::ReplayPolicyKind::Uniform,
             merge: crate::coordinator::MergeMode::Weights,
             occupancy,
+            generations: 0,
+            staleness: [0; 8],
+            lr_schedule: crate::coordinator::HubLrSchedule::Constant,
+            hub_steps: 1,
             digest: 0xabc,
         });
         assert_ne!(a.fingerprint(), shared.fingerprint());
@@ -443,6 +467,64 @@ mod tests {
     }
 
     #[test]
+    fn async_extensions_split_fingerprint_and_json_only_when_active() {
+        let mut occupancy = [0usize; WorkloadKind::COUNT];
+        occupancy[WorkloadKind::Icar.ordinal()] = 4;
+        let hub = crate::coordinator::HubSummary {
+            merges: 4,
+            replay_len: 4,
+            total_transitions: 4,
+            policy: crate::coordinator::ReplayPolicyKind::Uniform,
+            merge: crate::coordinator::MergeMode::Weights,
+            occupancy,
+            generations: 0,
+            staleness: [0; 8],
+            lr_schedule: crate::coordinator::HubLrSchedule::Constant,
+            hub_steps: 1,
+            digest: 0x77,
+        };
+        let mut sync = report(&[(100.0, 80.0)]);
+        sync.hub = Some(hub);
+        // Inactive extensions: the PR 8 JSON shape, no new keys.
+        assert!(sync.to_json().at(&["hub", "generations"]).is_err());
+        assert!(sync.to_json().at(&["hub", "digest"]).is_ok());
+        // Active: fingerprint splits and the keys appear.
+        let mut async_run = sync.clone();
+        {
+            let h = async_run.hub.as_mut().unwrap();
+            h.generations = 4;
+            h.staleness = [2, 1, 1, 0, 0, 0, 0, 0];
+        }
+        assert_ne!(sync.fingerprint(), async_run.fingerprint());
+        let j = async_run.to_json();
+        assert_eq!(j.at(&["hub", "generations"]).unwrap().as_usize().unwrap(), 4);
+        assert_eq!(
+            j.at(&["hub", "staleness_histogram"]).unwrap().as_arr().unwrap().len(),
+            8
+        );
+        // Two async runs differing only in observed staleness differ.
+        let mut other = async_run.clone();
+        other.hub.as_mut().unwrap().staleness = [4, 0, 0, 0, 0, 0, 0, 0];
+        assert_ne!(async_run.fingerprint(), other.fingerprint());
+        // A scheduled hub optimizer alone also activates the gate.
+        let mut scheduled = sync.clone();
+        scheduled.hub.as_mut().unwrap().lr_schedule =
+            crate::coordinator::HubLrSchedule::InvSqrt { period: 50 };
+        assert_ne!(sync.fingerprint(), scheduled.fingerprint());
+        assert_eq!(
+            scheduled.to_json().at(&["hub", "hub_lr_schedule"]).unwrap().as_str().unwrap(),
+            "invsqrt:50"
+        );
+        // The streaming accumulator folds the same gated sequence.
+        let mut acc = ReportAccumulator::new();
+        for jr in &async_run.results {
+            acc.push(jr);
+        }
+        let sp = acc.finish(async_run.wall_clock, async_run.workers, async_run.hub);
+        assert_eq!(sp.fingerprint(), async_run.fingerprint());
+    }
+
+    #[test]
     fn json_shape() {
         let r = report(&[(100.0, 80.0)]);
         let j = r.to_json();
@@ -462,6 +544,10 @@ mod tests {
             policy: crate::coordinator::ReplayPolicyKind::Prioritized,
             merge: crate::coordinator::MergeMode::Weights,
             occupancy,
+            generations: 0,
+            staleness: [0; 8],
+            lr_schedule: crate::coordinator::HubLrSchedule::Constant,
+            hub_steps: 1,
             digest: 0x1234,
         });
         let mut acc = ReportAccumulator::new();

@@ -3,7 +3,9 @@
 //!
 //! [`CampaignEngine::run_shared`] drives the same job list as
 //! [`CampaignEngine::run`], but the sessions learn *together* through a
-//! [`LearnerHub`]. Execution is round-synchronous:
+//! [`LearnerHub`]. In the default [`crate::coordinator::SyncMode::Sync`]
+//! (and the degenerate `Async { staleness: 0 }`, which is the same
+//! schedule by definition) execution is round-synchronous:
 //!
 //! ```text
 //! round r:   pull ──► step sync_every runs ──► push     (all jobs, in
@@ -31,6 +33,14 @@
 //! snapshot behind an `Arc` (O(1) per pull) and the determinism
 //! argument above is policy-independent, so the 1-vs-N fingerprint
 //! checks hold for uniform, stratified and prioritized replay alike.
+//!
+//! With `--sync-mode async --staleness N` (N ≥ 1) the round barrier is
+//! gone: [`CampaignEngine::run_shared`] dispatches to the
+//! bounded-staleness driver in [`super::async_shared`], which pushes
+//! each segment's contribution the moment it finishes and enforces the
+//! staleness window at segment *start* instead of a per-round barrier.
+//! See `docs/shared_learning.md` for the trade (wall-clock vs
+//! schedule-determinism).
 
 use std::path::Path;
 use std::sync::atomic::{AtomicUsize, Ordering};
@@ -47,7 +57,7 @@ use crate::coordinator::{
 use crate::runtime::{argmax, q_values_batch_of, DenseKernel};
 
 use super::collector::ShardedCollector;
-use super::engine::{finalize_report, CampaignEngine, SpillOptions, SpillRun};
+use super::engine::{finalize_report, CampaignEngine, SpillOptions, SpillRun, StraggleSpec};
 use super::job::CampaignJob;
 use super::report::{CampaignReport, JobOutcome};
 use super::store::{campaign_digest, CampaignStore, Manifest, OutcomeSink, StoreMode};
@@ -57,18 +67,21 @@ use super::store::{campaign_digest, CampaignStore, Manifest, OutcomeSink, StoreM
 /// to finish; the spilled/resumable path drives the *same* rounds with
 /// digest checkpoints between them, so the two can never diverge in
 /// behavior — they are one loop body.
-struct SharedCampaign<'a> {
-    base: &'a TuningConfig,
-    shared: SharedLearning,
-    jobs: &'a [CampaignJob],
-    sync_every: usize,
-    rounds: usize,
-    workers: usize,
-    hub: LearnerHub,
+pub(super) struct SharedCampaign<'a> {
+    pub(super) base: &'a TuningConfig,
+    pub(super) shared: SharedLearning,
+    pub(super) jobs: &'a [CampaignJob],
+    pub(super) sync_every: usize,
+    pub(super) rounds: usize,
+    pub(super) workers: usize,
+    pub(super) hub: LearnerHub,
     /// One persistent controller per job; workers move them in and
     /// out of the slots between rounds (dynamic claiming is safe —
     /// within a round, segments touch disjoint slots).
-    slots: Vec<Mutex<Option<Controller>>>,
+    pub(super) slots: Vec<Mutex<Option<Controller>>>,
+    /// Injected per-segment delays (benchmarks only); pure sleeps, so
+    /// fingerprints are unaffected in either mode.
+    pub(super) straggle: Option<StraggleSpec>,
 }
 
 impl SharedCampaign<'_> {
@@ -88,6 +101,10 @@ impl SharedCampaign<'_> {
         let shared = self.shared;
         let sync_every = self.sync_every;
         let slots = &self.slots;
+        // Every job is on the same segment index in sync mode: the
+        // number of merges the hub has already consumed.
+        let segment = self.hub.merges();
+        let straggle = self.straggle;
         std::thread::scope(|scope| {
             for w in 0..self.workers {
                 let collector = &collector;
@@ -100,7 +117,16 @@ impl SharedCampaign<'_> {
                         break;
                     }
                     let r = run_segment(
-                        base, shared, &jobs[i], i, sync_every, view, &slots[i], hints[i],
+                        base,
+                        shared,
+                        &jobs[i],
+                        i,
+                        sync_every,
+                        view,
+                        &slots[i],
+                        hints[i],
+                        straggle.as_ref(),
+                        segment,
                     );
                     collector.push(w, i, r);
                 });
@@ -134,7 +160,7 @@ impl SharedCampaign<'_> {
 
 impl CampaignEngine {
     /// Validate a shared job list and set up its campaign state.
-    fn shared_campaign<'a>(&'a self, jobs: &'a [CampaignJob]) -> Result<SharedCampaign<'a>> {
+    pub(super) fn shared_campaign<'a>(&'a self, jobs: &'a [CampaignJob]) -> Result<SharedCampaign<'a>> {
         anyhow::ensure!(!jobs.is_empty(), "shared campaign needs at least one job");
         let base = &self.config().base;
         anyhow::ensure!(
@@ -156,7 +182,9 @@ impl CampaignEngine {
         let sync_every = shared.sync_every.max(1);
         let rounds = base.runs.div_ceil(sync_every).max(1);
         let hub = LearnerHub::new(base.replay_capacity, base.replay_policy, jobs[0].backend)
-            .with_merge(shared.merge, base.lr);
+            .with_merge(shared.merge, base.lr)
+            .with_hub_optimizer(shared.hub_lr_schedule, shared.hub_steps)
+            .with_staleness(shared.mode.staleness());
         Ok(SharedCampaign {
             base,
             shared,
@@ -166,6 +194,7 @@ impl CampaignEngine {
             workers: self.workers_for(jobs.len()),
             hub,
             slots: jobs.iter().map(|_| Mutex::new(None)).collect(),
+            straggle: self.config().straggle,
         })
     }
 
@@ -178,6 +207,14 @@ impl CampaignEngine {
     pub fn run_shared(&self, jobs: &[CampaignJob]) -> Result<CampaignReport> {
         // detlint: allow(R3) -- reporting-only: elapsed time is displayed, never fingerprinted
         let started = Instant::now();
+        let shared = self.config().base.shared.unwrap_or_default();
+        if shared.mode.runs_async() {
+            // Async { staleness: 0 } deliberately does NOT take this
+            // branch: a zero window forbids any overlap, which is the
+            // synchronous schedule by definition — so it runs the sync
+            // loop below and is bitwise identical to `--sync-mode sync`.
+            return self.run_shared_async(jobs);
+        }
         let mut campaign = self.shared_campaign(jobs)?;
         for _round in 0..campaign.rounds {
             campaign.round()?;
@@ -221,6 +258,12 @@ impl CampaignEngine {
         anyhow::ensure!(!jobs.is_empty(), "shared campaign needs at least one job");
         let base = &self.config().base;
         let shared_cfg = base.shared.unwrap_or_default();
+        anyhow::ensure!(
+            !shared_cfg.mode.runs_async(),
+            "--sync-mode async does not support the campaign store: resume is a \
+             round-by-round digest-validated replay, and the async schedule has no \
+             rounds to replay; drop --spill-dir/--resume or use --sync-mode sync"
+        );
         let digest = campaign_digest(base, jobs, Some(shared_cfg));
         let mut store = if opts.resume {
             let store = CampaignStore::open(dir)?;
@@ -343,11 +386,13 @@ fn round_hints(
     Ok(hints)
 }
 
-/// One job's segment of one round: create-and-begin on first touch,
-/// pull the hub view, stage the round's batched greedy hint, run
-/// `sync_every` tuning runs, package the push.
+/// One job's segment: create-and-begin on first touch, pull the hub
+/// view, stage the greedy hint, run `sync_every` tuning runs, package
+/// the push. Shared verbatim by the sync round loop and the async
+/// driver — the modes differ only in *when* segments run and merge,
+/// never in what a segment computes.
 #[allow(clippy::too_many_arguments)]
-fn run_segment(
+pub(super) fn run_segment(
     base: &TuningConfig,
     shared: SharedLearning,
     job: &CampaignJob,
@@ -356,6 +401,8 @@ fn run_segment(
     view: &HubView,
     slot: &Mutex<Option<Controller>>,
     hint: Option<usize>,
+    straggle: Option<&StraggleSpec>,
+    segment: usize,
 ) -> Result<HubContribution> {
     let mut guard = slot.lock().unwrap_or_else(|poisoned| poisoned.into_inner());
     // Take the controller out of the slot (creating it on first touch),
@@ -383,6 +430,16 @@ fn run_segment(
     // state making the next selection.
     ctl.stage_greedy_hint(hint);
     ctl.step_session(sync_every)?;
+    if let Some(spec) = straggle {
+        // Benchmark-only heterogeneity: a pure sleep *after* the
+        // segment's compute, so it stretches wall clock (what the
+        // sync-vs-async ablation measures) without touching any number
+        // that feeds a fingerprint.
+        let delay = spec.delay(job_index, segment);
+        if !delay.is_zero() {
+            std::thread::sleep(delay);
+        }
+    }
     let contribution = ctl.hub_contribution(job_index);
     *guard = Some(ctl);
     contribution

@@ -140,6 +140,12 @@ fn encode_hub(h: &HubSummary) -> Json {
         ("policy", s(h.policy.name())),
         ("merge", s(h.merge.name())),
         ("occupancy", arr(h.occupancy.iter().map(|&n| num(n as f64)))),
+        // Async/hub-optimizer extensions (PR 9). Encoded always —
+        // decode tolerates their absence so pre-extension stores load.
+        ("generations", num(h.generations as f64)),
+        ("staleness", arr(h.staleness.iter().map(|&n| num(n as f64)))),
+        ("lr_schedule", s(&h.lr_schedule.to_string())),
+        ("hub_steps", num(h.hub_steps as f64)),
         ("digest", hex_u64(h.digest)),
     ])
 }
@@ -158,6 +164,38 @@ fn decode_hub(j: &Json) -> Result<HubSummary> {
     for (slot, v) in occupancy.iter_mut().zip(occ) {
         *slot = usize_of(v)?;
     }
+    // Extension fields default when absent: stores written before the
+    // async/hub-optimizer extensions still load (their campaigns could
+    // only have run with the default values).
+    let generations = match j.at(&["generations"]) {
+        Ok(v) => usize_of(v)?,
+        Err(_) => 0,
+    };
+    let mut staleness = [0usize; crate::coordinator::hub::STALENESS_BUCKETS];
+    if let Ok(v) = j.at(&["staleness"]) {
+        let buckets = v.as_arr().context("hub.staleness must be an array")?;
+        anyhow::ensure!(
+            buckets.len() == staleness.len(),
+            "hub.staleness has {} buckets, this build defines {}",
+            buckets.len(),
+            staleness.len()
+        );
+        for (slot, b) in staleness.iter_mut().zip(buckets) {
+            *slot = usize_of(b)?;
+        }
+    }
+    let lr_schedule = match j.at(&["lr_schedule"]) {
+        Ok(v) => {
+            let name = v.as_str().context("hub.lr_schedule must be a string")?;
+            crate::coordinator::HubLrSchedule::parse(name)
+                .with_context(|| format!("unknown hub lr schedule {name:?}"))?
+        }
+        Err(_) => crate::coordinator::HubLrSchedule::Constant,
+    };
+    let hub_steps = match j.at(&["hub_steps"]) {
+        Ok(v) => usize_of(v)?,
+        Err(_) => 1,
+    };
     Ok(HubSummary {
         merges: usize_of(j.at(&["merges"])?)?,
         replay_len: usize_of(j.at(&["replay_len"])?)?,
@@ -167,6 +205,10 @@ fn decode_hub(j: &Json) -> Result<HubSummary> {
         merge: MergeMode::parse(merge_name)
             .with_context(|| format!("unknown merge mode {merge_name:?}"))?,
         occupancy,
+        generations,
+        staleness,
+        lr_schedule,
+        hub_steps,
         digest: u64_of(j.at(&["digest"])?)?,
     })
 }
@@ -194,11 +236,40 @@ mod tests {
             policy: ReplayPolicyKind::Stratified,
             merge: MergeMode::Grads,
             occupancy: [1; WorkloadKind::COUNT],
+            generations: 5,
+            staleness: [2, 2, 1, 0, 0, 0, 0, 0],
+            lr_schedule: crate::coordinator::HubLrSchedule::InvSqrt { period: 20 },
+            hub_steps: 3,
             digest: 0x0123_4567_89ab_cdef,
         });
         m.complete = true;
         let back = Manifest::from_json(&m.to_json()).unwrap();
         assert_eq!(back.hub, m.hub);
         assert!(back.complete);
+    }
+
+    #[test]
+    fn pre_extension_hub_blocks_decode_with_defaults() {
+        // A manifest written before the async/hub-optimizer extensions
+        // has no generations/staleness/lr_schedule/hub_steps keys; it
+        // must decode to the default (inactive) values.
+        let legacy = Json::parse(
+            r#"{"merges": 2, "replay_len": 4, "total_transitions": 4,
+                "policy": "uniform", "merge": "weights",
+                "occupancy": [4, 0, 0, 0, 0, 0, 0, 0],
+                "digest": "00000000000000ff"}"#,
+        )
+        .unwrap();
+        // Guard: the literal above must track WorkloadKind::COUNT.
+        assert_eq!(
+            legacy.at(&["occupancy"]).unwrap().as_arr().unwrap().len(),
+            WorkloadKind::COUNT
+        );
+        let hub = decode_hub(&legacy).unwrap();
+        assert_eq!(hub.generations, 0);
+        assert_eq!(hub.staleness, [0; crate::coordinator::hub::STALENESS_BUCKETS]);
+        assert_eq!(hub.lr_schedule, crate::coordinator::HubLrSchedule::Constant);
+        assert_eq!(hub.hub_steps, 1);
+        assert!(!hub.extensions_active());
     }
 }

@@ -183,6 +183,20 @@ pub fn campaign_digest(base: &TuningConfig, jobs: &[CampaignJob], shared: Option
             h.mix(1);
             h.mix(sl.sync_every as u64);
             h.mix(sl.merge.ordinal() as u64);
+            // Post-PR-8 knobs fold in only when non-default, so every
+            // store written by an earlier build still validates against
+            // the digest a current build computes for the same flags.
+            if sl.mode != crate::coordinator::SyncMode::Sync
+                || sl.hub_lr_schedule != crate::coordinator::HubLrSchedule::Constant
+                || sl.hub_steps != 1
+            {
+                h.mix(2);
+                h.mix(sl.mode.staleness() as u64);
+                h.mix(matches!(sl.mode, crate::coordinator::SyncMode::Async { .. }) as u64);
+                h.mix(sl.hub_lr_schedule.ordinal() as u64);
+                h.mix(sl.hub_lr_schedule.period() as u64);
+                h.mix(sl.hub_steps as u64);
+            }
         }
     }
     h.finish()

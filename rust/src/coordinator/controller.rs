@@ -14,7 +14,7 @@ use crate::workloads::WorkloadKind;
 use super::actions::Action;
 use super::agent::{Agent, AgentKind, DqnAgent};
 use super::ensemble::ensemble;
-use super::hub::{HubContribution, HubView, MergeMode};
+use super::hub::{HubContribution, HubLrSchedule, HubView, MergeMode, SyncMode};
 use super::relative::RelativeTracker;
 use super::replay::{LocalReplay, ReplayPolicyKind, Transition};
 use super::tabular::TabularAgent;
@@ -30,11 +30,28 @@ pub struct SharedLearning {
     /// How the hub folds pushes into the master state
     /// (`--merge weights|grads`; grads requires the native DQN agent).
     pub merge: MergeMode,
+    /// Round-synchronous (the fingerprint-tested reference) or
+    /// bounded-staleness asynchronous (`--sync-mode async
+    /// --staleness N`; see `docs/shared_learning.md`).
+    pub mode: SyncMode,
+    /// Learning-rate schedule of the hub-side Adam steps
+    /// ([`MergeMode::Grads`] only; `--hub-lr-schedule`).
+    pub hub_lr_schedule: HubLrSchedule,
+    /// Hub-side Adam steps per gradient merge (`--hub-steps`;
+    /// [`MergeMode::Grads`] only). The default of 1 reproduces the
+    /// PR 5 single-step semantics bit-identically.
+    pub hub_steps: usize,
 }
 
 impl Default for SharedLearning {
     fn default() -> SharedLearning {
-        SharedLearning { sync_every: 5, merge: MergeMode::Weights }
+        SharedLearning {
+            sync_every: 5,
+            merge: MergeMode::Weights,
+            mode: SyncMode::Sync,
+            hub_lr_schedule: HubLrSchedule::Constant,
+            hub_steps: 1,
+        }
     }
 }
 

@@ -94,6 +94,153 @@ impl std::fmt::Display for MergeMode {
     }
 }
 
+/// How workers coordinate with the hub
+/// (`docs/shared_learning.md` states the exact semantics of each).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum SyncMode {
+    /// Round-synchronous (the PR 2 semantics): every worker barriers on
+    /// the slowest job each round and the hub merges the whole round in
+    /// job-index order. Bit-identical at any worker count — the
+    /// fingerprint-tested reference.
+    #[default]
+    Sync,
+    /// Bounded-staleness asynchronous: workers push the moment their
+    /// segment ends and pull whatever master is current; at most
+    /// `staleness + 1` contributions are in flight at once, so no
+    /// merged contribution is ever more than `staleness` hub
+    /// generations old. `staleness == 0` degenerates to the
+    /// synchronous path (and keeps its bit-identity).
+    Async {
+        /// Maximum hub-generation staleness `S` of a merged
+        /// contribution (the concurrency window is `S + 1`).
+        staleness: usize,
+    },
+}
+
+impl SyncMode {
+    pub fn name(self) -> &'static str {
+        match self {
+            SyncMode::Sync => "sync",
+            SyncMode::Async { .. } => "async",
+        }
+    }
+
+    /// The staleness window `S` (0 for the synchronous mode).
+    pub fn staleness(self) -> usize {
+        match self {
+            SyncMode::Sync => 0,
+            SyncMode::Async { staleness } => staleness,
+        }
+    }
+
+    /// True only for the asynchronous mode with a non-zero window —
+    /// `Async { staleness: 0 }` is *dispatched* to the synchronous
+    /// driver so its bit-identity claim is structural, not emergent.
+    pub fn runs_async(self) -> bool {
+        matches!(self, SyncMode::Async { staleness } if staleness > 0)
+    }
+
+    /// Parse the `--sync-mode` flag value; `staleness` comes from the
+    /// separate `--staleness` flag (ignored for `sync`).
+    pub fn parse(s: &str, staleness: usize) -> Option<SyncMode> {
+        match s.to_ascii_lowercase().as_str() {
+            "sync" | "synchronous" => Some(SyncMode::Sync),
+            "async" | "asynchronous" => Some(SyncMode::Async { staleness }),
+            _ => None,
+        }
+    }
+}
+
+impl std::fmt::Display for SyncMode {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            SyncMode::Sync => f.write_str("sync"),
+            SyncMode::Async { staleness } => write!(f, "async(S={staleness})"),
+        }
+    }
+}
+
+/// Learning-rate schedule of the hub-side Adam steps
+/// ([`MergeMode::Grads`] only). Clocked by the hub's cumulative Adam
+/// step count, never by wall time, so a replayed campaign sees the
+/// identical lr sequence. Integer periods keep `Eq` derivable and the
+/// digest exact.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum HubLrSchedule {
+    /// Fixed base lr. Returns the base `f32` unchanged (no f64 round
+    /// trip), so the default schedule is bit-identical to the PR 5
+    /// unscheduled hub step.
+    #[default]
+    Constant,
+    /// `base / sqrt(1 + step / period)` — the classic asymptotically
+    /// vanishing rate for stale-gradient averaging.
+    InvSqrt { period: usize },
+    /// `base * 0.5^(step / period)` — geometric decay in plateaus.
+    Halving { period: usize },
+}
+
+impl HubLrSchedule {
+    /// Dense index (digest/fingerprint key).
+    pub fn ordinal(self) -> usize {
+        match self {
+            HubLrSchedule::Constant => 0,
+            HubLrSchedule::InvSqrt { .. } => 1,
+            HubLrSchedule::Halving { .. } => 2,
+        }
+    }
+
+    /// Schedule period (0 for the constant schedule — digest key only).
+    pub fn period(self) -> usize {
+        match self {
+            HubLrSchedule::Constant => 0,
+            HubLrSchedule::InvSqrt { period } | HubLrSchedule::Halving { period } => period,
+        }
+    }
+
+    /// Learning rate of hub Adam step number `step` (0-based). Computed
+    /// in `f64`, rounded once — except `Constant`, which returns the
+    /// base bit-identically.
+    pub fn lr_at(self, base: f32, step: usize) -> f32 {
+        match self {
+            HubLrSchedule::Constant => base,
+            HubLrSchedule::InvSqrt { period } => {
+                let p = period.max(1) as f64;
+                (base as f64 / (1.0 + step as f64 / p).sqrt()) as f32
+            }
+            HubLrSchedule::Halving { period } => {
+                let halvings = (step / period.max(1)).min(i32::MAX as usize) as i32;
+                (base as f64 * 0.5f64.powi(halvings)) as f32
+            }
+        }
+    }
+
+    /// Parse `--hub-lr-schedule`: `constant`, `invsqrt:N`, `halving:N`
+    /// (a bare `invsqrt`/`halving` defaults the period to 100 steps).
+    pub fn parse(s: &str) -> Option<HubLrSchedule> {
+        let lower = s.to_ascii_lowercase();
+        let (kind, period) = match lower.split_once(':') {
+            Some((k, p)) => (k.to_string(), p.parse::<usize>().ok()?.max(1)),
+            None => (lower, 100),
+        };
+        match kind.as_str() {
+            "constant" | "const" | "fixed" => Some(HubLrSchedule::Constant),
+            "invsqrt" | "inv-sqrt" => Some(HubLrSchedule::InvSqrt { period }),
+            "halving" | "halve" | "step" => Some(HubLrSchedule::Halving { period }),
+            _ => None,
+        }
+    }
+}
+
+impl std::fmt::Display for HubLrSchedule {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            HubLrSchedule::Constant => f.write_str("constant"),
+            HubLrSchedule::InvSqrt { period } => write!(f, "invsqrt:{period}"),
+            HubLrSchedule::Halving { period } => write!(f, "halving:{period}"),
+        }
+    }
+}
+
 /// A portable snapshot of one agent's learnable state — the hub's wire
 /// format for both pull (master → worker) and push (worker → hub).
 #[derive(Debug, Clone)]
@@ -174,6 +321,60 @@ impl AgentState {
         }
     }
 
+    /// Staleness-weighted blend `(1 - alpha)·master + alpha·push` for
+    /// asynchronous weight merges ([`LearnerHub::merge_one`]).
+    ///
+    /// Dense tensors (and Adam moments) blend element-wise in `f64`,
+    /// rounded once. Table cells present in both states blend the same
+    /// way; cells only the push visited are adopted as-is (new
+    /// knowledge), cells only the master holds are kept (α discounts
+    /// the push, never erases the master). Mixing dense and tabular
+    /// states is an error, as in [`AgentState::average`].
+    pub fn blend(master: &AgentState, push: &AgentState, alpha: f64) -> Result<AgentState> {
+        anyhow::ensure!(
+            (0.0..=1.0).contains(&alpha),
+            "blend weight {alpha} outside [0, 1]"
+        );
+        match (master, push) {
+            (
+                AgentState::Dense { params: mp, opt: mo },
+                AgentState::Dense { params: pp, opt: po },
+            ) => Ok(AgentState::Dense {
+                params: blend_params(mp, pp, alpha)?,
+                opt: AdamState {
+                    m: blend_params(&mo.m, &po.m, alpha)?,
+                    v: blend_params(&mo.v, &po.v, alpha)?,
+                    step: ((1.0 - alpha) * mo.step as f64 + alpha * po.step as f64) as f32,
+                },
+            }),
+            (AgentState::Table(master_rows), AgentState::Table(push_rows)) => {
+                let mut out: BTreeMap<u64, Vec<f32>> =
+                    master_rows.iter().cloned().collect();
+                for (key, q) in push_rows {
+                    match out.entry(*key) {
+                        std::collections::btree_map::Entry::Occupied(mut e) => {
+                            let row = e.get_mut();
+                            anyhow::ensure!(
+                                row.len() == q.len(),
+                                "tabular rows of mixed action width in one hub"
+                            );
+                            for (m, &p) in row.iter_mut().zip(q) {
+                                *m = ((1.0 - alpha) * *m as f64 + alpha * p as f64) as f32;
+                            }
+                        }
+                        std::collections::btree_map::Entry::Vacant(e) => {
+                            e.insert(q.clone());
+                        }
+                    }
+                }
+                // BTreeMap iteration yields keys ascending — the Table
+                // sorted-by-key invariant holds by construction.
+                Ok(AgentState::Table(out.into_iter().collect()))
+            }
+            _ => anyhow::bail!("cannot blend dense and tabular agent states in one hub"),
+        }
+    }
+
     /// Order-sensitive FNV-1a digest of the state.
     pub fn digest(&self) -> u64 {
         let mut h = Fnv64::new();
@@ -197,6 +398,31 @@ impl AgentState {
     }
 }
 
+/// Element-wise `(1 - alpha)·master + alpha·push` over matching
+/// tensors; each element widens to `f64` and rounds once (R2: no f32
+/// accumulation on a merge path).
+fn blend_params(master: &QParams, push: &QParams, alpha: f64) -> Result<QParams> {
+    anyhow::ensure!(
+        master.same_shape(push),
+        "parameter shape mismatch in staleness-weighted blend"
+    );
+    QParams::from_flat(
+        master
+            .tensors
+            .iter()
+            .zip(&push.tensors)
+            .map(|((md, shape), (pd, _))| {
+                let data = md
+                    .iter()
+                    .zip(pd)
+                    .map(|(&m, &p)| ((1.0 - alpha) * m as f64 + alpha * p as f64) as f32)
+                    .collect();
+                (data, shape.clone())
+            })
+            .collect(),
+    )
+}
+
 /// What a worker pulls at segment start: the merge round, the master
 /// state (absent before the first merge) and a snapshot of the global
 /// replay buffer.
@@ -204,6 +430,11 @@ impl AgentState {
 pub struct HubView {
     /// Merges completed before this snapshot was taken.
     pub round: usize,
+    /// Hub generation (incremental [`LearnerHub::merge_one`] merges
+    /// completed) at snapshot time. Always 0 in synchronous campaigns;
+    /// the async driver echoes it back with the worker's push so the
+    /// hub can enforce and record staleness.
+    pub generation: usize,
     /// Master agent state; `None` until the first merge, in which case
     /// workers keep their own freshly-initialized state. Shared behind
     /// an `Arc` for the same reason as `replay`: a pull must not clone
@@ -235,6 +466,10 @@ pub struct HubContribution {
     pub grads: Option<QParams>,
 }
 
+/// Buckets in the observed-staleness histogram; the last bucket is
+/// open-ended (staleness `>= STALENESS_BUCKETS - 1`).
+pub const STALENESS_BUCKETS: usize = 8;
+
 /// Compact hub-state record attached to shared-campaign reports.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct HubSummary {
@@ -253,11 +488,33 @@ pub struct HubSummary {
     /// eviction pressure a stratified buffer keeps every workload's
     /// entry non-zero, a uniform ring does not.
     pub occupancy: [usize; WorkloadKind::COUNT],
+    /// Incremental ([`LearnerHub::merge_one`]) merges completed —
+    /// always 0 for synchronous campaigns.
+    pub generations: usize,
+    /// Observed-staleness histogram of incremental merges: bucket `i`
+    /// counts merges whose contribution was `i` generations stale
+    /// (bucket 7 is `>= 7`). All-zero for synchronous campaigns.
+    pub staleness: [usize; STALENESS_BUCKETS],
+    /// Hub-side Adam lr schedule ([`MergeMode::Grads`] only).
+    pub lr_schedule: HubLrSchedule,
+    /// Hub-side Adam steps per gradient merge.
+    pub hub_steps: usize,
     /// [`LearnerHub::digest`] at campaign end.
     pub digest: u64,
 }
 
 impl HubSummary {
+    /// True when any post-PR-8 hub extension (async generations,
+    /// non-default lr schedule, multi-step hub Adam) is in play.
+    /// Report fingerprints, manifest digests and `to_json` gate the new
+    /// fields on this so every pre-existing synchronous campaign keeps
+    /// its PR 8 fingerprint byte-identically.
+    pub fn extensions_active(&self) -> bool {
+        self.generations > 0
+            || self.lr_schedule != HubLrSchedule::Constant
+            || self.hub_steps != 1
+    }
+
     /// One-line human rendering for campaign drivers.
     pub fn describe(&self) -> String {
         let mut occupancy = String::new();
@@ -269,12 +526,28 @@ impl HubSummary {
         if occupancy.is_empty() {
             occupancy.push_str(" (empty)");
         }
-        format!(
+        let mut line = format!(
             "{} merges ({} merge), {} transitions pooled ({} resident, {} policy), \
              state digest {:016x}; occupancy:{}",
             self.merges, self.merge, self.total_transitions, self.replay_len, self.policy,
             self.digest, occupancy
-        )
+        );
+        if self.generations > 0 {
+            let buckets: Vec<String> =
+                self.staleness.iter().map(|n| n.to_string()).collect();
+            line.push_str(&format!(
+                "; async: {} generations, staleness histogram [{}]",
+                self.generations,
+                buckets.join(" ")
+            ));
+        }
+        if self.lr_schedule != HubLrSchedule::Constant || self.hub_steps != 1 {
+            line.push_str(&format!(
+                "; hub adam: {} step(s)/merge, {} schedule",
+                self.hub_steps, self.lr_schedule
+            ));
+        }
+        line
     }
 }
 
@@ -296,6 +569,23 @@ pub struct LearnerHub {
     /// Learning rate of the hub-side Adam step ([`MergeMode::Grads`]
     /// only; mirrors the campaign base config's `lr`).
     lr: f32,
+    /// Incremental ([`LearnerHub::merge_one`]) merges completed — the
+    /// async generation clock. Stays 0 for synchronous campaigns, which
+    /// is what keeps their digests byte-identical to PR 8.
+    generations: usize,
+    /// Observed-staleness histogram of incremental merges.
+    staleness: [usize; STALENESS_BUCKETS],
+    /// Maximum staleness `S` an incremental merge may exhibit; the
+    /// async driver's concurrency window guarantees it, the hub
+    /// re-checks rather than trusts (like the job-order check in
+    /// [`LearnerHub::merge`]).
+    staleness_window: usize,
+    /// Cumulative hub-side Adam steps — the lr-schedule clock.
+    hub_adam_steps: usize,
+    /// Hub-side Adam lr schedule ([`MergeMode::Grads`] only).
+    lr_schedule: HubLrSchedule,
+    /// Adam steps per gradient merge (default 1 — the PR 5 semantics).
+    hub_steps: usize,
 }
 
 impl LearnerHub {
@@ -315,6 +605,12 @@ impl LearnerHub {
             total_transitions: 0,
             merge_mode: MergeMode::Weights,
             lr: 1e-3,
+            generations: 0,
+            staleness: [0; STALENESS_BUCKETS],
+            staleness_window: 0,
+            hub_adam_steps: 0,
+            lr_schedule: HubLrSchedule::Constant,
+            hub_steps: 1,
         }
     }
 
@@ -327,8 +623,44 @@ impl LearnerHub {
         self
     }
 
+    /// Permit incremental merges up to `window` generations stale
+    /// (builder-style; required before the first [`LearnerHub::merge_one`]
+    /// with non-zero staleness).
+    pub fn with_staleness(mut self, window: usize) -> LearnerHub {
+        self.staleness_window = window;
+        self
+    }
+
+    /// Configure the hub-side optimizer: `schedule` drives the Adam
+    /// learning rate over the hub's cumulative step count, `steps` Adam
+    /// steps apply per gradient merge (clamped to ≥ 1). The defaults
+    /// (`Constant`, 1) are bit-identical to the PR 5 single-step hub.
+    pub fn with_hub_optimizer(mut self, schedule: HubLrSchedule, steps: usize) -> LearnerHub {
+        self.lr_schedule = schedule;
+        self.hub_steps = steps.max(1);
+        self
+    }
+
     pub fn merge_mode(&self) -> MergeMode {
         self.merge_mode
+    }
+
+    /// Incremental merges completed (the async generation clock).
+    pub fn generations(&self) -> usize {
+        self.generations
+    }
+
+    /// Staleness window `S` the hub enforces on incremental merges.
+    pub fn staleness_window(&self) -> usize {
+        self.staleness_window
+    }
+
+    /// Advance the generation clock without a contribution — lets the
+    /// async driver's gate tests walk schedules without building real
+    /// agent states.
+    #[cfg(test)]
+    pub(crate) fn bump_generation_for_test(&mut self) {
+        self.generations += 1;
     }
 
     /// Snapshot for workers to pull at segment start. O(1): both the
@@ -337,6 +669,7 @@ impl LearnerHub {
     pub fn view(&self) -> HubView {
         HubView {
             round: self.merges,
+            generation: self.generations,
             master: self.master.clone(),
             replay: Arc::clone(&self.replay),
         }
@@ -398,6 +731,13 @@ impl LearnerHub {
                         })
                     })
                     .collect::<Result<Vec<&QParams>>>()?;
+                // Scheduled lr for this merge's hub Adam step(s),
+                // resolved before the master borrow (the schedule clock
+                // lives on `self`). One step at the constant base lr is
+                // the PR 5 semantics bit-identically.
+                let lrs: Vec<f32> = (0..self.hub_steps)
+                    .map(|i| self.lr_schedule.lr_at(self.lr, self.hub_adam_steps + i))
+                    .collect();
                 match self.master.as_mut() {
                     // Bootstrap round: the pushed states already embody
                     // this segment's local updates, so averaging them
@@ -411,7 +751,10 @@ impl LearnerHub {
                         let avg = average_params(&grads)?;
                         match Arc::make_mut(master) {
                             AgentState::Dense { params, opt } => {
-                                adam_step(params, opt, &avg, self.lr)?
+                                for &lr in &lrs {
+                                    adam_step(params, opt, &avg, lr)?;
+                                }
+                                self.hub_adam_steps += lrs.len();
                             }
                             AgentState::Table(_) => anyhow::bail!(
                                 "gradient merge requires a dense (DQN) master state"
@@ -430,6 +773,118 @@ impl LearnerHub {
             }
             self.total_transitions += c.transitions.len();
         }
+        self.merges += 1;
+        Ok(())
+    }
+
+    /// Merge a single contribution incrementally — the asynchronous
+    /// (bounded-staleness) counterpart of [`LearnerHub::merge`].
+    ///
+    /// `pulled_generation` is the hub generation the worker pulled
+    /// before training this segment ([`HubView::generation`]); the
+    /// difference from the current generation is the contribution's
+    /// observed staleness. The hub *enforces* the staleness window the
+    /// driver promised (errors name the job and generations involved —
+    /// a violation is a driver bug, not data): a contribution more than
+    /// [`LearnerHub::staleness_window`] generations stale is rejected.
+    ///
+    /// Unlike `merge`, the result is order-*dependent* by design —
+    /// async campaigns trade the bit-identity claim for wall-clock (see
+    /// `docs/shared_learning.md` for what invariants remain). In
+    /// [`MergeMode::Weights`] the master moves to the staleness-
+    /// discounted blend `(1-α)·master + α·push` with
+    /// `α = 1 / (staleness + 2)` (a fresh push counts like one peer in
+    /// a two-way average; staler pushes count less). In
+    /// [`MergeMode::Grads`] the master takes the scheduled hub Adam
+    /// step(s) on the pushed gradients directly — no cross-job
+    /// averaging, one push is one increment.
+    pub fn merge_one(
+        &mut self,
+        contribution: &HubContribution,
+        pulled_generation: usize,
+    ) -> Result<()> {
+        let job = contribution.job_index;
+        anyhow::ensure!(
+            pulled_generation <= self.generations,
+            "job {job} claims pull generation {pulled_generation}, but the hub has only \
+             reached generation {}; the driver echoed back a generation it never issued",
+            self.generations
+        );
+        let staleness = self.generations - pulled_generation;
+        anyhow::ensure!(
+            staleness <= self.staleness_window,
+            "staleness contract violated: job {job} pulled at generation \
+             {pulled_generation} but the hub is at generation {} (staleness {staleness} > \
+             window {}); the async driver must block that pull until the hub catches up",
+            self.generations,
+            self.staleness_window
+        );
+        match self.merge_mode {
+            MergeMode::Weights => {
+                let pushed = contribution.state.as_ref().with_context(|| {
+                    format!(
+                        "job {job} pushed no agent state at generation {}; weight merges \
+                         require one from every push",
+                        self.generations
+                    )
+                })?;
+                self.master = Some(Arc::new(match self.master.as_deref() {
+                    None => pushed.clone(),
+                    Some(master) => {
+                        let alpha = 1.0 / (staleness as f64 + 2.0);
+                        AgentState::blend(master, pushed, alpha)?
+                    }
+                }));
+            }
+            MergeMode::Grads => {
+                let grads = contribution.grads.as_ref().with_context(|| {
+                    format!(
+                        "job {job} pushed no gradients at generation {}; MergeMode::Grads \
+                         requires the native DQN engine (--agent dqn)",
+                        self.generations
+                    )
+                })?;
+                let lrs: Vec<f32> = (0..self.hub_steps)
+                    .map(|i| self.lr_schedule.lr_at(self.lr, self.hub_adam_steps + i))
+                    .collect();
+                match self.master.as_mut() {
+                    // Bootstrap: adopt the first push's state wholesale
+                    // (it already embodies that segment's local steps).
+                    None => {
+                        let state = contribution.state.as_ref().with_context(|| {
+                            format!(
+                                "job {job} pushed no agent state at generation {}; the \
+                                 bootstrap push must carry one",
+                                self.generations
+                            )
+                        })?;
+                        anyhow::ensure!(
+                            matches!(state, AgentState::Dense { .. }),
+                            "job {job}: gradient merge requires a dense (DQN) master state"
+                        );
+                        self.master = Some(Arc::new(state.clone()));
+                    }
+                    Some(master) => match Arc::make_mut(master) {
+                        AgentState::Dense { params, opt } => {
+                            for &lr in &lrs {
+                                adam_step(params, opt, grads, lr)?;
+                            }
+                            self.hub_adam_steps += lrs.len();
+                        }
+                        AgentState::Table(_) => anyhow::bail!(
+                            "job {job}: gradient merge requires a dense (DQN) master state"
+                        ),
+                    },
+                }
+            }
+        }
+        let replay = Arc::make_mut(&mut self.replay);
+        for t in &contribution.transitions {
+            replay.push(t.clone());
+        }
+        self.total_transitions += contribution.transitions.len();
+        self.staleness[staleness.min(STALENESS_BUCKETS - 1)] += 1;
+        self.generations += 1;
         self.merges += 1;
         Ok(())
     }
@@ -472,6 +927,23 @@ impl LearnerHub {
             // 0 = unlabeled; ordinals shift by one.
             h.mix(t.workload.map(|w| w.ordinal() as u64 + 1).unwrap_or(0));
         }
+        // Post-PR-8 extensions mix only when active, so every
+        // synchronous default-optimizer campaign keeps its PR 8 digest
+        // byte-identically (the gate mirrors
+        // [`HubSummary::extensions_active`]).
+        if self.generations > 0
+            || self.lr_schedule != HubLrSchedule::Constant
+            || self.hub_steps != 1
+        {
+            h.mix(self.generations as u64);
+            for &n in &self.staleness {
+                h.mix(n as u64);
+            }
+            h.mix(self.lr_schedule.ordinal() as u64);
+            h.mix(self.lr_schedule.period() as u64);
+            h.mix(self.hub_steps as u64);
+            h.mix(self.hub_adam_steps as u64);
+        }
         h.finish()
     }
 
@@ -483,6 +955,10 @@ impl LearnerHub {
             policy: self.replay.kind(),
             merge: self.merge_mode,
             occupancy: self.replay.occupancy(),
+            generations: self.generations,
+            staleness: self.staleness,
+            lr_schedule: self.lr_schedule,
+            hub_steps: self.hub_steps,
             digest: self.digest(),
         }
     }
@@ -778,5 +1254,201 @@ mod tests {
         assert!(line.contains("stratified"), "{line}");
         assert!(line.contains("lattice_boltzmann=2"), "{line}");
         assert!(line.contains("skeleton_pic=1"), "{line}");
+        // A synchronous campaign reports no async extensions at all.
+        assert!(!s.extensions_active());
+        assert!(!line.contains("async:"), "{line}");
+    }
+
+    #[test]
+    fn merge_one_blends_weights_by_staleness() {
+        let mut hub = LearnerHub::new(8, ReplayPolicyKind::Uniform, BackendId::Coarrays)
+            .with_staleness(3);
+        // First push: adopted wholesale.
+        hub.merge_one(&contribution(0, table(&[(1, 8.0)]), &[1.0]), 0).unwrap();
+        assert_eq!(hub.generations(), 1);
+        // Fresh push (staleness 0): alpha = 1/2 — a two-way average.
+        hub.merge_one(&contribution(1, table(&[(1, 4.0)]), &[]), 1).unwrap();
+        match hub.master().unwrap() {
+            AgentState::Table(entries) => assert_eq!(entries[0].1[0], 6.0),
+            AgentState::Dense { .. } => panic!("expected table"),
+        }
+        // Stale push (pulled at generation 0, hub now at 2 → staleness
+        // 2): alpha = 1/4, so the master moves a quarter of the way.
+        hub.merge_one(&contribution(2, table(&[(1, 10.0), (9, 3.0)]), &[]), 0).unwrap();
+        match hub.master().unwrap() {
+            AgentState::Table(entries) => {
+                assert_eq!(entries[0].1[0], 7.0);
+                // A cell only the push visited is adopted as-is.
+                assert_eq!(entries[1], {
+                    let mut q = vec![0.0; NUM_ACTIONS];
+                    q[0] = 3.0;
+                    (9, q)
+                });
+            }
+            AgentState::Dense { .. } => panic!("expected table"),
+        }
+        let s = hub.summary();
+        assert_eq!(s.generations, 3);
+        assert_eq!(s.staleness[0], 2);
+        assert_eq!(s.staleness[2], 1);
+        assert!(s.extensions_active());
+        assert!(s.describe().contains("async: 3 generations"), "{}", s.describe());
+    }
+
+    #[test]
+    fn merge_one_enforces_the_staleness_contract_with_named_jobs() {
+        let mut hub = LearnerHub::new(8, ReplayPolicyKind::Uniform, BackendId::Coarrays)
+            .with_staleness(1);
+        for g in 0..3 {
+            hub.merge_one(&contribution(g, table(&[(1, 1.0)]), &[]), g.saturating_sub(1))
+                .unwrap();
+        }
+        // Staleness 3 > window 1: rejected, naming job and generations.
+        let err = hub
+            .merge_one(&contribution(7, table(&[(1, 1.0)]), &[]), 0)
+            .unwrap_err();
+        let msg = format!("{err:?}");
+        assert!(msg.contains("job 7"), "{msg}");
+        assert!(msg.contains("generation 0"), "{msg}");
+        assert!(msg.contains("generation 3"), "{msg}");
+        assert!(msg.contains("window 1"), "{msg}");
+        // A pull generation from the future is a driver bug too.
+        let err = hub
+            .merge_one(&contribution(9, table(&[(1, 1.0)]), &[]), 99)
+            .unwrap_err();
+        assert!(format!("{err:?}").contains("job 9"), "{err:?}");
+        // Rejected merges leave the hub untouched.
+        assert_eq!(hub.generations(), 3);
+    }
+
+    #[test]
+    fn merge_one_grads_steps_directly_on_the_push() {
+        let mut hub = LearnerHub::new(8, ReplayPolicyKind::Uniform, BackendId::Coarrays)
+            .with_merge(MergeMode::Grads, 0.5)
+            .with_staleness(2);
+        // Bootstrap adopts the pushed state.
+        hub.merge_one(&grad_contribution(0, Some(dense(vec![1.0, 4.0])), vec![9.0, 9.0]), 0)
+            .unwrap();
+        match hub.master().unwrap() {
+            AgentState::Dense { params, opt } => {
+                assert_eq!(params.tensors[0].0, vec![1.0, 4.0]);
+                assert_eq!(opt.step, 0.0);
+            }
+            AgentState::Table(_) => panic!("expected dense master"),
+        }
+        // One push = one Adam step on exactly that push's gradients.
+        hub.merge_one(&grad_contribution(1, None, vec![2.0, 0.0]), 1).unwrap();
+        match hub.master().unwrap() {
+            AgentState::Dense { params, opt } => {
+                let p = &params.tensors[0].0;
+                assert!((p[0] - 0.5).abs() < 1e-6, "master moved by ≈ lr: {p:?}");
+                assert_eq!(p[1], 4.0);
+                assert_eq!(opt.step, 1.0);
+            }
+            AgentState::Table(_) => panic!("expected dense master"),
+        }
+        // A gradient-less push past bootstrap still fails with a name.
+        let err = hub
+            .merge_one(&contribution(5, dense(vec![0.0, 0.0]), &[]), 2)
+            .unwrap_err();
+        assert!(format!("{err:?}").contains("job 5"), "{err:?}");
+    }
+
+    #[test]
+    fn dense_blend_weights_master_and_push() {
+        let master = dense(vec![0.0, 8.0]);
+        let push = dense(vec![4.0, 0.0]);
+        match AgentState::blend(&master, &push, 0.25).unwrap() {
+            AgentState::Dense { params, .. } => {
+                assert_eq!(params.tensors[0].0, vec![1.0, 6.0]);
+            }
+            AgentState::Table(_) => panic!("expected dense"),
+        }
+        assert!(AgentState::blend(&master, &table(&[(1, 1.0)]), 0.5).is_err());
+        assert!(AgentState::blend(&master, &push, 1.5).is_err());
+    }
+
+    #[test]
+    fn hub_lr_schedule_decays_and_round_trips() {
+        assert_eq!(HubLrSchedule::Constant.lr_at(1e-3, 0), 1e-3);
+        assert_eq!(HubLrSchedule::Constant.lr_at(1e-3, 10_000), 1e-3);
+        let inv = HubLrSchedule::InvSqrt { period: 4 };
+        assert_eq!(inv.lr_at(1.0, 0), 1.0);
+        assert!((inv.lr_at(1.0, 4) - 1.0 / 2f32.sqrt()).abs() < 1e-6);
+        assert!(inv.lr_at(1.0, 16) < inv.lr_at(1.0, 4));
+        let halving = HubLrSchedule::Halving { period: 10 };
+        assert_eq!(halving.lr_at(0.8, 9), 0.8);
+        assert_eq!(halving.lr_at(0.8, 10), 0.4);
+        assert_eq!(halving.lr_at(0.8, 25), 0.2);
+        for schedule in [
+            HubLrSchedule::Constant,
+            HubLrSchedule::InvSqrt { period: 7 },
+            HubLrSchedule::Halving { period: 3 },
+        ] {
+            assert_eq!(HubLrSchedule::parse(&schedule.to_string()), Some(schedule));
+        }
+        assert_eq!(HubLrSchedule::parse("invsqrt"), Some(HubLrSchedule::InvSqrt { period: 100 }));
+        assert_eq!(HubLrSchedule::parse("nope"), None);
+        assert_eq!(HubLrSchedule::parse("halving:0"), Some(HubLrSchedule::Halving { period: 1 }));
+    }
+
+    #[test]
+    fn scheduled_multi_step_hub_adam_consumes_steps() {
+        let mut hub = LearnerHub::new(8, ReplayPolicyKind::Uniform, BackendId::Coarrays)
+            .with_merge(MergeMode::Grads, 0.5)
+            .with_hub_optimizer(HubLrSchedule::InvSqrt { period: 1 }, 2);
+        hub.merge(&[grad_contribution(0, Some(dense(vec![0.0, 0.0])), vec![1.0, 1.0])])
+            .unwrap();
+        hub.merge(&[grad_contribution(0, None, vec![1.0, 1.0])]).unwrap();
+        match hub.master().unwrap() {
+            AgentState::Dense { opt, .. } => {
+                assert_eq!(opt.step, 2.0, "hub_steps=2 means two Adam steps per merge");
+            }
+            AgentState::Table(_) => panic!("expected dense master"),
+        }
+        let s = hub.summary();
+        assert_eq!(s.hub_steps, 2);
+        assert_eq!(s.lr_schedule, HubLrSchedule::InvSqrt { period: 1 });
+        assert!(s.extensions_active());
+        assert!(s.describe().contains("hub adam: 2 step(s)/merge"), "{}", s.describe());
+    }
+
+    #[test]
+    fn sync_digest_ignores_inactive_extensions() {
+        // The extension fields must not perturb a default-optimizer
+        // synchronous hub's digest — that is the PR 8 byte-identity
+        // claim. Two identical sync runs, one built through the new
+        // builders with default values, must agree.
+        let run = |hub: &mut LearnerHub| {
+            hub.merge(&[contribution(0, table(&[(1, 1.0)]), &[1.0])]).unwrap();
+            hub.digest()
+        };
+        let mut plain = LearnerHub::new(8, ReplayPolicyKind::Uniform, BackendId::Coarrays);
+        let mut built = LearnerHub::new(8, ReplayPolicyKind::Uniform, BackendId::Coarrays)
+            .with_hub_optimizer(HubLrSchedule::Constant, 1)
+            .with_staleness(4);
+        assert_eq!(run(&mut plain), run(&mut built));
+        // A non-default optimizer *does* split the digest.
+        let mut scheduled = LearnerHub::new(8, ReplayPolicyKind::Uniform, BackendId::Coarrays)
+            .with_hub_optimizer(HubLrSchedule::Halving { period: 5 }, 1);
+        assert_ne!(run(&mut scheduled), plain.digest());
+        // And so does a single incremental merge.
+        let mut incremental = LearnerHub::new(8, ReplayPolicyKind::Uniform, BackendId::Coarrays);
+        incremental.merge_one(&contribution(0, table(&[(1, 1.0)]), &[1.0]), 0).unwrap();
+        assert_ne!(incremental.digest(), plain.digest());
+    }
+
+    #[test]
+    fn sync_mode_parse_round_trip() {
+        assert_eq!(SyncMode::parse("sync", 3), Some(SyncMode::Sync));
+        assert_eq!(SyncMode::parse("async", 3), Some(SyncMode::Async { staleness: 3 }));
+        assert_eq!(SyncMode::parse("nope", 0), None);
+        assert_eq!(SyncMode::default(), SyncMode::Sync);
+        assert_eq!(SyncMode::Sync.staleness(), 0);
+        assert_eq!(SyncMode::Async { staleness: 2 }.staleness(), 2);
+        assert!(!SyncMode::Sync.runs_async());
+        assert!(!SyncMode::Async { staleness: 0 }.runs_async());
+        assert!(SyncMode::Async { staleness: 1 }.runs_async());
+        assert_eq!(SyncMode::Async { staleness: 2 }.to_string(), "async(S=2)");
     }
 }

@@ -32,7 +32,10 @@ pub use actions::{num_actions, one_hot, Action};
 pub use agent::{Agent, AgentKind, DqnAgent, TrainOutcome};
 pub use controller::{Controller, SharedLearning, TuningConfig, TuningOutcome};
 pub use episode::{run_episode, EpisodeResult};
-pub use hub::{AgentState, HubContribution, HubSummary, HubView, LearnerHub, MergeMode};
+pub use hub::{
+    AgentState, HubContribution, HubLrSchedule, HubSummary, HubView, LearnerHub, MergeMode,
+    SyncMode,
+};
 pub use relative::RelativeTracker;
 pub use replay::{
     LocalReplay, PrioritizedSampler, ReplayBuffer, ReplayPolicy, ReplayPolicyKind,

@@ -22,7 +22,8 @@ use aituning::campaign::{
 };
 use aituning::convergence::{run_convergence, ConvergenceConfig, SyntheticModel};
 use aituning::coordinator::{
-    AgentKind, Controller, MergeMode, ReplayPolicyKind, SharedLearning, TuningConfig,
+    AgentKind, Controller, HubLrSchedule, MergeMode, ReplayPolicyKind, SharedLearning, SyncMode,
+    TuningConfig,
 };
 use aituning::mpi_t::{registry_for_backend, CvarId, CvarSet, VariableRegistry};
 use aituning::simmpi::Machine;
@@ -56,6 +57,16 @@ USAGE:
                        [--merge weights|grads]  (how the hub folds pushes: averaged
                        weights, or A3C-style accumulated gradients + one hub Adam
                        step per round — grads needs the native DQN agent)
+                       [--sync-mode sync|async] [--staleness N]  (async drops the
+                       round barrier: each segment's push merges the moment it
+                       finishes, and the staleness window N bounds how many hub
+                       generations any merged push may lag its pull; N=0 is the
+                       synchronous schedule by definition. Needs --shared; async
+                       does not support --spill-dir/--resume)
+                       [--hub-lr-schedule constant|invsqrt[:P]|halving[:P]]
+                       [--hub-steps N]  (grads mode's master optimizer: lr decay
+                       clocked on cumulative hub Adam steps with period P, and how
+                       many Adam steps each merged push applies)
                        [--spill-dir DIR | --resume DIR]  (on-disk campaign store:
                        spill finished jobs to per-shard segments for flat memory, and
                        resume a killed campaign from where it stopped)
@@ -161,6 +172,29 @@ fn parse_store(args: &Args) -> Result<Option<(PathBuf, SpillOptions)>> {
 fn parse_merge(args: &Args) -> Result<MergeMode> {
     let name = args.get_or("merge", "weights");
     MergeMode::parse(name).with_context(|| format!("unknown merge mode {name:?} (weights|grads)"))
+}
+
+/// `--sync-mode sync|async` + `--staleness N` — the shared schedule:
+/// round-synchronous barriers, or bounded-staleness asynchronous
+/// merges within a window of N hub generations.
+fn parse_sync_mode(args: &Args) -> Result<SyncMode> {
+    let name = args.get_or("sync-mode", "sync");
+    let staleness = args.usize_or("staleness", 4)?;
+    let mode = SyncMode::parse(name, staleness)
+        .with_context(|| format!("unknown sync mode {name:?} (sync|async)"))?;
+    if args.get("staleness").is_some() && !matches!(mode, SyncMode::Async { .. }) {
+        bail!("--staleness only applies with --sync-mode async");
+    }
+    Ok(mode)
+}
+
+/// `--hub-lr-schedule constant|invsqrt[:P]|halving[:P]` + `--hub-steps N`
+/// — the hub-side Adam schedule for `--merge grads`.
+fn parse_hub_schedule(args: &Args) -> Result<HubLrSchedule> {
+    let name = args.get_or("hub-lr-schedule", "constant");
+    HubLrSchedule::parse(name).with_context(|| {
+        format!("unknown hub lr schedule {name:?} (constant|invsqrt[:P]|halving[:P])")
+    })
 }
 
 fn tuning_config(args: &Args) -> Result<TuningConfig> {
@@ -288,20 +322,35 @@ fn cmd_campaign(args: &Args) -> Result<()> {
         replay_policy: parse_replay(args)?,
         ..TuningConfig::default()
     };
-    // Parse --merge unconditionally so a typo'd mode (or a --merge
-    // without --shared, which would otherwise be silently ignored)
-    // fails loudly instead of running an unintended campaign.
+    // Parse the shared-learning flags unconditionally so a typo'd mode
+    // (or one of them without --shared, which would otherwise be
+    // silently ignored) fails loudly instead of running an unintended
+    // campaign.
     let merge = parse_merge(args)?;
+    let mode = parse_sync_mode(args)?;
+    let hub_lr_schedule = parse_hub_schedule(args)?;
+    let hub_steps = args.usize_or("hub-steps", 1)?;
     if shared_mode {
-        base.shared = Some(SharedLearning { sync_every: args.usize_or("sync-every", 5)?, merge });
-    } else if args.get("merge").is_some() {
-        bail!("--merge only applies to shared campaigns; add --shared");
+        base.shared = Some(SharedLearning {
+            sync_every: args.usize_or("sync-every", 5)?,
+            merge,
+            mode,
+            hub_lr_schedule,
+            hub_steps,
+        });
+    } else {
+        for flag in ["merge", "sync-mode", "staleness", "hub-lr-schedule", "hub-steps"] {
+            if args.get(flag).is_some() {
+                bail!("--{flag} only applies to shared campaigns; add --shared");
+            }
+        }
     }
     let workloads = backend.runtime().training_workloads();
     let jobs = job_grid(backend, &machines, workloads, &images, base.agent, base.seed);
     let engine = CampaignEngine::new(CampaignConfig {
         base,
         workers: args.usize_or("workers", 0)?,
+        straggle: None,
     });
 
     if let Some((dir, opts)) = parse_store(args)? {
@@ -321,6 +370,7 @@ fn cmd_campaign(args: &Args) -> Result<()> {
             shared.geomean_speedup(),
             engine.config().base.shared.map(|s| s.sync_every).unwrap_or_default(),
         );
+        println!("schedule: {mode}");
         println!("hub: {}", hub.describe());
         println!(
             "wall clock: independent {:.2}s, shared {:.2}s on {} workers",
@@ -505,7 +555,15 @@ fn cmd_sweep(args: &Args) -> Result<()> {
             ..TuningConfig::default()
         },
         workers: args.usize_or("workers", 0)?,
+        straggle: None,
     });
+
+    // Sweeps evaluate fixed configurations — there is no shared
+    // learner, so the async schedule cannot apply; reject it loudly
+    // rather than silently running a sync-shaped sweep.
+    if parse_sync_mode(args)?.runs_async() {
+        bail!("--sync-mode async applies to campaign --shared; sweep evaluates fixed configs");
+    }
 
     // --spill-dir and --resume are synonyms here: a sweep has no
     // partial-progress state to recover, only the episode cache, so
@@ -567,6 +625,7 @@ fn cmd_baselines(args: &Args) -> Result<()> {
     let engine = CampaignEngine::new(CampaignConfig {
         base: TuningConfig { agent: AgentKind::Tabular, ..cfg.clone() },
         workers: args.usize_or("workers", 0)?,
+        straggle: None,
     });
 
     let backend = cfg.backend;
@@ -600,6 +659,7 @@ fn cmd_baselines(args: &Args) -> Result<()> {
     let tune_engine = CampaignEngine::new(CampaignConfig {
         base: TuningConfig { runs: budget, ..cfg.clone() },
         workers: 1,
+        straggle: None,
     });
     let report = tune_engine.run(&[CampaignJob {
         backend,

@@ -1,0 +1,197 @@
+#![allow(clippy::unwrap_used)] // test/bench code panics by design
+//! Async shared-learning integration tests: the bounded-staleness
+//! contract under adversarial scheduling skew, the `Async { staleness:
+//! 0 }` == `Sync` degeneration pin, an 8-worker straggler smoke, and
+//! the async/campaign-store incompatibility guard. The synchronous
+//! worker-count fingerprint pins live in shared_learning.rs and are
+//! deliberately untouched by this file: async runs are
+//! schedule-dependent, so their fingerprints are recorded, not pinned
+//! (docs/shared_learning.md).
+
+use aituning::backend::BackendId;
+use aituning::campaign::{
+    job_grid, CampaignConfig, CampaignEngine, CampaignJob, CampaignReport, SpillOptions,
+    StraggleSpec,
+};
+use aituning::coordinator::{AgentKind, SharedLearning, SyncMode, TuningConfig};
+use aituning::prop_assert;
+use aituning::simmpi::Machine;
+use aituning::util::prop::forall;
+use aituning::workloads::WorkloadKind;
+
+fn shared_cfg(runs: usize, sync_every: usize, mode: SyncMode, seed: u64) -> TuningConfig {
+    TuningConfig {
+        agent: AgentKind::Tabular,
+        runs,
+        noise: 0.01,
+        seed,
+        shared: Some(SharedLearning { sync_every, mode, ..SharedLearning::default() }),
+        ..TuningConfig::default()
+    }
+}
+
+fn small_grid(seed: u64) -> Vec<CampaignJob> {
+    job_grid(
+        BackendId::Coarrays,
+        &[Machine::cheyenne()],
+        &[WorkloadKind::LatticeBoltzmann, WorkloadKind::SkeletonPic],
+        &[4, 8],
+        AgentKind::Tabular,
+        seed,
+    )
+}
+
+fn engine(base: TuningConfig, workers: usize, straggle: Option<StraggleSpec>) -> CampaignEngine {
+    CampaignEngine::new(CampaignConfig { base, workers, straggle })
+}
+
+fn best_improvement(report: &CampaignReport) -> f64 {
+    report.improvements().into_iter().fold(f64::NEG_INFINITY, f64::max)
+}
+
+#[test]
+fn async_merge_staleness_never_exceeds_the_window() {
+    // The tentpole contract: whatever the OS scheduler and the injected
+    // skew do, no contribution may merge against a master more than
+    // `staleness` generations newer than its pull. The hub rejects such
+    // a merge with a named staleness-contract error (which would fail
+    // the campaign, and so this test); the start gate is supposed to
+    // keep that check dead code. The observed-staleness histogram is
+    // the witness: every bucket beyond the window must stay zero.
+    forall("async_staleness_bound", 10, |rng| {
+        let workers = 2 + rng.below(6) as usize; // 2..=7
+        let window = 1 + rng.below(6) as usize; // 1..=6: below bucket 7's ">= 7" clamp
+        let runs = 4 + 2 * rng.below(3) as usize; // 4 | 6 | 8
+        let jobs = small_grid(100 + rng.below(50));
+        let spec = StraggleSpec {
+            straggler_job: rng.below(jobs.len() as u64) as usize,
+            straggler_ms: rng.below(3),
+            jitter_ms: rng.below(6),
+            seed: rng.next_u64(),
+        };
+        let base = shared_cfg(runs, 2, SyncMode::Async { staleness: window }, 7);
+        let report = engine(base, workers, Some(spec))
+            .run_shared(&jobs)
+            .map_err(|e| format!("async campaign failed: {e:#}"))?;
+        let hub = report.hub.ok_or("async shared campaign reported no hub")?;
+
+        let segments = runs.div_ceil(2);
+        prop_assert!(
+            hub.generations == jobs.len() * segments,
+            "every job segment merges exactly once: {} generations, want {}",
+            hub.generations,
+            jobs.len() * segments
+        );
+        prop_assert!(
+            hub.staleness.iter().sum::<usize>() == hub.generations,
+            "histogram accounts for every merge: {:?} vs {} generations",
+            hub.staleness,
+            hub.generations
+        );
+        for (bucket, &count) in hub.staleness.iter().enumerate().skip(window + 1) {
+            prop_assert!(
+                count == 0,
+                "staleness bucket {bucket} has {count} merges beyond window {window} \
+                 ({workers} workers, {runs} runs): {:?}",
+                hub.staleness
+            );
+        }
+        // The full budget ran: no job lost segments to the gate.
+        for r in &report.results {
+            prop_assert!(
+                r.outcome.log.runs.len() == runs + 1,
+                "job {:?} ran {} of {} tuning runs",
+                r.job,
+                r.outcome.log.runs.len(),
+                runs + 1
+            );
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn async_with_zero_staleness_is_bitwise_identical_to_sync() {
+    // `Async { staleness: 0 }` admits no overlap — the schedule it
+    // permits IS the synchronous schedule, so it routes through the
+    // sync loop and must reproduce it bit-for-bit, hub state included.
+    let jobs = small_grid(11);
+    let sync = engine(shared_cfg(8, 2, SyncMode::Sync, 11), 2, None)
+        .run_shared(&jobs)
+        .unwrap();
+    let zero = engine(shared_cfg(8, 2, SyncMode::Async { staleness: 0 }, 11), 4, None)
+        .run_shared(&jobs)
+        .unwrap();
+    assert_eq!(sync.fingerprint(), zero.fingerprint());
+    assert_eq!(sync.hub, zero.hub, "hub summaries (incl. state digest) must match");
+    for (a, b) in sync.results.iter().zip(&zero.results) {
+        assert_eq!(a.outcome.best_us.to_bits(), b.outcome.best_us.to_bits());
+        for (ra, rb) in a.outcome.log.runs.iter().zip(&b.outcome.log.runs) {
+            assert_eq!(ra.total_time_us.to_bits(), rb.total_time_us.to_bits());
+            assert_eq!(ra.action, rb.action);
+        }
+    }
+    // And the degenerate hub really took the sync path: no incremental
+    // generations, so none of the post-PR-8 fingerprint extensions.
+    let hub = zero.hub.unwrap();
+    assert_eq!(hub.generations, 0);
+    assert!(!hub.extensions_active());
+}
+
+#[test]
+fn eight_worker_async_campaign_with_straggler_converges_near_sync() {
+    // The CI smoke (ISSUE 9 satellite): an 8-worker async campaign with
+    // an injected straggler must finish, merge every segment, and land
+    // its best-found improvement within tolerance of the synchronous
+    // run. The tolerance is wide (5pp) because the async trajectory is
+    // schedule-dependent by design — the contract is "converges", not
+    // "matches". Eight jobs, because the engine clamps the pool to the
+    // job count.
+    let jobs = job_grid(
+        BackendId::Coarrays,
+        &[Machine::cheyenne()],
+        &[WorkloadKind::LatticeBoltzmann, WorkloadKind::SkeletonPic],
+        &[2, 4, 8, 16],
+        AgentKind::Tabular,
+        31,
+    );
+    assert_eq!(jobs.len(), 8);
+    let spec = StraggleSpec { straggler_job: 0, straggler_ms: 4, jitter_ms: 10, seed: 0xca51 };
+    let sync = engine(shared_cfg(10, 2, SyncMode::Sync, 31), 8, Some(spec))
+        .run_shared(&jobs)
+        .unwrap();
+    let async_ = engine(shared_cfg(10, 2, SyncMode::Async { staleness: 8 }, 31), 8, Some(spec))
+        .run_shared(&jobs)
+        .unwrap();
+
+    assert_eq!(async_.workers, 8);
+    assert_eq!(async_.total_app_runs(), sync.total_app_runs(), "identical run budgets");
+    let hub = async_.hub.as_ref().unwrap();
+    assert_eq!(hub.generations, jobs.len() * 5, "ceil(10/2) segments per job, each merged");
+    assert!(hub.extensions_active(), "async runs must surface generations in the summary");
+    assert_eq!(hub.total_transitions, jobs.len() * 10);
+
+    let (sync_best, async_best) = (best_improvement(&sync), best_improvement(&async_));
+    assert!(
+        async_best >= sync_best - 0.05,
+        "async best improvement {async_best:.4} fell more than 5pp below sync {sync_best:.4}"
+    );
+}
+
+#[test]
+fn async_mode_rejects_the_campaign_store() {
+    // Resume is a round-by-round digest-validated replay; the async
+    // schedule has no rounds, so spilling must fail loudly and name the
+    // way out rather than record something resume cannot check.
+    let jobs = small_grid(13);
+    let dir = std::env::temp_dir()
+        .join(format!("aituning-store-async-reject-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    let err = engine(shared_cfg(4, 2, SyncMode::Async { staleness: 2 }, 13), 2, None)
+        .run_shared_spilled(&jobs, &dir, &SpillOptions::default())
+        .unwrap_err();
+    let msg = format!("{err:#}");
+    assert!(msg.contains("--sync-mode"), "error must name the offending flag: {msg}");
+    assert!(!dir.exists(), "rejected run must not leave a store behind: {}", dir.display());
+    let _ = std::fs::remove_dir_all(&dir);
+}

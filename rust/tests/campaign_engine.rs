@@ -31,7 +31,7 @@ fn base_cfg(runs: usize) -> TuningConfig {
 }
 
 fn engine(runs: usize, workers: usize) -> CampaignEngine {
-    CampaignEngine::new(CampaignConfig { base: base_cfg(runs), workers })
+    CampaignEngine::new(CampaignConfig { base: base_cfg(runs), workers, straggle: None })
 }
 
 fn small_grid() -> Vec<CampaignJob> {
@@ -131,7 +131,8 @@ fn one_pool_spans_both_testbeds() {
     );
     for (machine, r) in machines.iter().zip(&report.results) {
         let solo_cfg = TuningConfig { machine: machine.clone(), ..base_cfg(3) };
-        let solo = CampaignEngine::new(CampaignConfig { base: solo_cfg, workers: 1 })
+        let solo =
+            CampaignEngine::new(CampaignConfig { base: solo_cfg, workers: 1, straggle: None })
             .run(&[r.job])
             .unwrap();
         assert_eq!(
@@ -170,6 +171,7 @@ fn one_independent_pool_spans_backends() {
         let solo = CampaignEngine::new(CampaignConfig {
             base: TuningConfig { backend: r.job.backend, ..base_cfg(3) },
             workers: 1,
+            straggle: None,
         })
         .run(&[r.job])
         .unwrap();
@@ -244,6 +246,7 @@ fn evaluate_specs_spans_machines_and_matches_per_machine_engines() {
         let solo = CampaignEngine::new(CampaignConfig {
             base: TuningConfig { machine: spec.machine.clone(), ..base_cfg(4) },
             workers: 1,
+            straggle: None,
         });
         let s = solo.evaluate(kind, 4, &CvarSet::vanilla(), 3).unwrap();
         assert_eq!(s.to_bits(), mean.to_bits());
@@ -292,10 +295,11 @@ fn temp_store(tag: &str) -> PathBuf {
 fn shared_engine(runs: usize, workers: usize, merge: MergeMode, agent: AgentKind) -> CampaignEngine {
     CampaignEngine::new(CampaignConfig {
         base: TuningConfig {
-            shared: Some(SharedLearning { sync_every: 2, merge }),
+            shared: Some(SharedLearning { sync_every: 2, merge, ..SharedLearning::default() }),
             ..TuningConfig { agent, ..base_cfg(runs) }
         },
         workers,
+        straggle: None,
     })
 }
 

@@ -221,10 +221,10 @@ fn dqn_engine(backend: BackendId, merge: MergeMode, workers: usize) -> CampaignE
         runs: 6,
         noise: 0.01,
         seed: 31,
-        shared: Some(SharedLearning { sync_every: 2, merge }),
+        shared: Some(SharedLearning { sync_every: 2, merge, ..SharedLearning::default() }),
         ..TuningConfig::default()
     };
-    CampaignEngine::new(CampaignConfig { base, workers })
+    CampaignEngine::new(CampaignConfig { base, workers, straggle: None })
 }
 
 #[test]
@@ -260,7 +260,11 @@ fn grads_merge_rejects_agents_without_gradients() {
     // so up front instead of failing mid-campaign.
     let cfg = TuningConfig {
         agent: AgentKind::Tabular,
-        shared: Some(SharedLearning { sync_every: 2, merge: MergeMode::Grads }),
+        shared: Some(SharedLearning {
+            sync_every: 2,
+            merge: MergeMode::Grads,
+            ..SharedLearning::default()
+        }),
         ..TuningConfig::default()
     };
     let err = Controller::new(cfg.clone()).err().map(|e| format!("{e:?}")).unwrap_or_default();
@@ -274,7 +278,7 @@ fn grads_merge_rejects_agents_without_gradients() {
         AgentKind::Tabular,
         1,
     );
-    let engine = CampaignEngine::new(CampaignConfig { base: cfg, workers: 1 });
+    let engine = CampaignEngine::new(CampaignConfig { base: cfg, workers: 1, straggle: None });
     assert!(engine.run_shared(&jobs).is_err());
 }
 

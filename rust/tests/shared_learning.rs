@@ -32,7 +32,7 @@ fn shared_engine_with_policy(
     replay_policy: ReplayPolicyKind,
 ) -> CampaignEngine {
     let base = TuningConfig { replay_policy, ..base_cfg(runs, sync_every) };
-    CampaignEngine::new(CampaignConfig { base, workers })
+    CampaignEngine::new(CampaignConfig { base, workers, straggle: None })
 }
 
 fn small_grid() -> Vec<CampaignJob> {
@@ -156,7 +156,9 @@ fn stratified_hub_keeps_every_workload_resident_after_eviction() {
     let jobs = small_grid();
     let run_with = |policy, workers| {
         let base = TuningConfig { replay_capacity: 4, replay_policy: policy, ..base_cfg(8, 2) };
-        CampaignEngine::new(CampaignConfig { base, workers }).run_shared(&jobs).unwrap()
+        CampaignEngine::new(CampaignConfig { base, workers, straggle: None })
+            .run_shared(&jobs)
+            .unwrap()
     };
 
     let stratified = run_with(ReplayPolicyKind::Stratified, 2);
@@ -212,6 +214,7 @@ fn shared_mode_reaches_independent_best_on_prk_stencil() {
     let engine = CampaignEngine::new(CampaignConfig {
         base: TuningConfig { seed: 21, ..base_cfg(12, 3) },
         workers: 2,
+        straggle: None,
     });
     let independent = engine.run(&jobs).unwrap();
     let shared = engine.run_shared(&jobs).unwrap();
@@ -266,7 +269,7 @@ fn per_backend_campaign_fingerprints_identical_at_1_2_and_4_workers() {
         };
         let run = |workers: usize| {
             let base = backend_cfg(backend, 8, 2);
-            CampaignEngine::new(CampaignConfig { base, workers })
+            CampaignEngine::new(CampaignConfig { base, workers, straggle: None })
         };
         // Independent path.
         let i1 = run(1).run(&jobs).unwrap();
@@ -288,7 +291,11 @@ fn per_backend_campaign_fingerprints_identical_at_1_2_and_4_workers() {
 fn shared_campaign_rejects_mixed_backends() {
     let mut jobs = small_grid();
     jobs.extend(collectives_grid());
-    let engine = CampaignEngine::new(CampaignConfig { base: backend_cfg(BackendId::Coarrays, 4, 2), workers: 2 });
+    let engine = CampaignEngine::new(CampaignConfig {
+        base: backend_cfg(BackendId::Coarrays, 4, 2),
+        workers: 2,
+        straggle: None,
+    });
     assert!(engine.run_shared(&jobs).is_err(), "hub cannot merge two state families");
 }
 

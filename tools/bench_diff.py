@@ -10,11 +10,14 @@ Cells are matched by (engine, batch) and compared on per_sample_us:
   * > 10% slower than baseline  -> GitHub Actions warning annotation
   * > 2x slower than baseline   -> error annotation + exit 1
 
-A baseline with `"provisional": true` downgrades errors to warnings —
-used while the committed numbers were recorded off the CI runner class
-and only establish the schema, not the hardware envelope. Re-record by
-copying a CI-produced BENCH_dqn_runtime.json over the baseline and
-dropping the provisional marker.
+The 2x gate is enforcing: the committed BENCH_dqn_runtime.json is a
+shared-CI-core envelope, not a provisional schema stub, so a cell
+beyond 2x fails the job. If a slowdown is intentional, re-record by
+copying a CI-produced BENCH_dqn_runtime.json over the baseline in the
+same PR that causes it. (A baseline carrying `"provisional": true`
+would downgrade errors to warnings — that escape hatch is kept for
+bootstrapping new benches, but the committed baseline no longer uses
+it.)
 
 Cells present on one side only never fail the gate (the AOT engine row
 exists only where compiled artifacts do); they are reported so silent

@@ -323,11 +323,15 @@ struct FileClass {
 
 fn classify(path: &str) -> FileClass {
     let p = path.replace('\\', "/");
-    const RESTRICTED: [&str; 6] = [
+    const RESTRICTED: [&str; 7] = [
         "coordinator/hub.rs",
         "campaign/collector.rs",
         "campaign/report.rs",
         "campaign/shared.rs",
+        // The async driver picks which generation every worker trains
+        // against; a hash-ordered queue or clock-derived decision here
+        // would change merge order, and with it the hub digest.
+        "campaign/async_shared.rs",
         "runtime/params.rs",
         // The dense kernels compute every Q-value a fingerprinted
         // trajectory consumes: an f32 accumulation or ambient-state
