@@ -63,7 +63,12 @@ fn main() -> anyhow::Result<()> {
         agent,
         base.seed,
     );
-    let engine = CampaignEngine::new(CampaignConfig { base, workers: 0, straggle: None });
+    let engine = CampaignEngine::new(CampaignConfig {
+        base,
+        workers: 0,
+        straggle: None,
+        fuse_training: true,
+    });
 
     if shared_mode {
         let independent = engine.run(&jobs)?;

@@ -31,6 +31,7 @@ fn main() -> anyhow::Result<()> {
         base: TuningConfig { agent: AgentKind::Tabular, ..base.clone() },
         workers: 0,
         straggle: None,
+        fuse_training: true,
     });
     let vanilla = engine.evaluate(kind, images, &CvarSet::vanilla(), 3)?;
     let human = engine.evaluate(kind, images, &human_tuned(), 3)?;
@@ -57,9 +58,13 @@ fn main() -> anyhow::Result<()> {
             seed: base.seed,
         })
         .collect();
-    let report =
-        CampaignEngine::new(CampaignConfig { base: base.clone(), workers: 0, straggle: None })
-            .run(&jobs)?;
+    let report = CampaignEngine::new(CampaignConfig {
+        base: base.clone(),
+        workers: 0,
+        straggle: None,
+        fuse_training: true,
+    })
+    .run(&jobs)?;
     for ((name, _), r) in agents.iter().zip(&report.results) {
         // inference ablation: best vs ensemble vs last
         let out = &r.outcome;
@@ -110,16 +115,20 @@ fn main() -> anyhow::Result<()> {
     // --- Q-target ablation (the paper cites fixed Q-targets but does
     //     not implement them, §5.2) ---
     if have_artifacts && !quick {
-        let report =
-            CampaignEngine::new(CampaignConfig { base: base.clone(), workers: 1, straggle: None })
-            .run(&[CampaignJob {
-                backend: aituning::backend::BackendId::Coarrays,
-                machine: base.machine.name,
-                workload: kind,
-                images,
-                agent: AgentKind::DqnTarget,
-                seed: base.seed,
-            }])?;
+        let report = CampaignEngine::new(CampaignConfig {
+            base: base.clone(),
+            workers: 1,
+            straggle: None,
+            fuse_training: true,
+        })
+        .run(&[CampaignJob {
+            backend: aituning::backend::BackendId::Coarrays,
+            machine: base.machine.name,
+            workload: kind,
+            images,
+            agent: AgentKind::DqnTarget,
+            seed: base.seed,
+        }])?;
         let v = engine.evaluate(kind, images, &report.results[0].outcome.ensemble, 3)?;
         t.row(vec!["dqn + target network (not in paper)".into(), format!("{v:.0}"), pct(v)]);
     }
@@ -135,6 +144,7 @@ fn main() -> anyhow::Result<()> {
             },
             workers: 1,
             straggle: None,
+            fuse_training: true,
         });
         let report = variant.run(&[CampaignJob {
             backend: aituning::backend::BackendId::Coarrays,

@@ -261,12 +261,14 @@ fn async_ablation(quick: bool, emit_json: bool) -> anyhow::Result<()> {
             base: base(SyncMode::Sync),
             workers,
             straggle: Some(spec),
+            fuse_training: true,
         })
         .run_shared(&jobs)?;
         let async_ = CampaignEngine::new(CampaignConfig {
             base: base(SyncMode::Async { staleness }),
             workers,
             straggle: Some(spec),
+            fuse_training: true,
         })
         .run_shared(&jobs)?;
 
@@ -399,12 +401,20 @@ fn main() -> anyhow::Result<()> {
     );
 
     // --- independent mode: serial vs parallel, bit-identical ---
-    let serial =
-        CampaignEngine::new(CampaignConfig { base: base.clone(), workers: 1, straggle: None })
-            .run(&jobs)?;
-    let parallel =
-        CampaignEngine::new(CampaignConfig { base: base.clone(), workers: 0, straggle: None })
-            .run(&jobs)?;
+    let serial = CampaignEngine::new(CampaignConfig {
+        base: base.clone(),
+        workers: 1,
+        straggle: None,
+        fuse_training: true,
+    })
+    .run(&jobs)?;
+    let parallel = CampaignEngine::new(CampaignConfig {
+        base: base.clone(),
+        workers: 0,
+        straggle: None,
+        fuse_training: true,
+    })
+    .run(&jobs)?;
     assert_eq!(
         serial.fingerprint(),
         parallel.fingerprint(),
@@ -413,12 +423,20 @@ fn main() -> anyhow::Result<()> {
     );
 
     // --- shared mode: same jobs through the LearnerHub, same check ---
-    let shared_serial =
-        CampaignEngine::new(CampaignConfig { base: base.clone(), workers: 1, straggle: None })
-            .run_shared(&jobs)?;
-    let shared_parallel =
-        CampaignEngine::new(CampaignConfig { base: base.clone(), workers: 0, straggle: None })
-            .run_shared(&jobs)?;
+    let shared_serial = CampaignEngine::new(CampaignConfig {
+        base: base.clone(),
+        workers: 1,
+        straggle: None,
+        fuse_training: true,
+    })
+    .run_shared(&jobs)?;
+    let shared_parallel = CampaignEngine::new(CampaignConfig {
+        base: base.clone(),
+        workers: 0,
+        straggle: None,
+        fuse_training: true,
+    })
+    .run_shared(&jobs)?;
     assert_eq!(
         shared_serial.fingerprint(),
         shared_parallel.fingerprint(),
@@ -453,11 +471,20 @@ fn main() -> anyhow::Result<()> {
     let mut policy_reports = vec![(ReplayPolicyKind::Uniform, shared_parallel.clone())];
     for policy in [ReplayPolicyKind::Stratified, ReplayPolicyKind::Prioritized] {
         let cfg = TuningConfig { replay_policy: policy, ..base.clone() };
-        let one =
-            CampaignEngine::new(CampaignConfig { base: cfg.clone(), workers: 1, straggle: None })
-                .run_shared(&jobs)?;
-        let many = CampaignEngine::new(CampaignConfig { base: cfg, workers: 0, straggle: None })
-            .run_shared(&jobs)?;
+        let one = CampaignEngine::new(CampaignConfig {
+            base: cfg.clone(),
+            workers: 1,
+            straggle: None,
+            fuse_training: true,
+        })
+        .run_shared(&jobs)?;
+        let many = CampaignEngine::new(CampaignConfig {
+            base: cfg,
+            workers: 0,
+            straggle: None,
+            fuse_training: true,
+        })
+        .run_shared(&jobs)?;
         assert_eq!(
             one.fingerprint(),
             many.fingerprint(),
@@ -506,12 +533,14 @@ fn main() -> anyhow::Result<()> {
         base: coll_base.clone(),
         workers: 1,
         straggle: None,
+        fuse_training: true,
     })
     .run(&coll_jobs)?;
     let coll_parallel = CampaignEngine::new(CampaignConfig {
         base: coll_base.clone(),
         workers: 0,
         straggle: None,
+        fuse_training: true,
     })
     .run(&coll_jobs)?;
     assert_eq!(

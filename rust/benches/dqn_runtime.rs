@@ -11,6 +11,16 @@
 //! identical (`runtime/native/kernels.rs`), so this table measures
 //! pure speed, never accuracy.
 //!
+//! Part 0b — the training-path roofline: one round's worth of per-job
+//! gradient passes (batch 32 over one shared master), sequential
+//! (a loop of per-job `NativeQNet::train_grads`) vs fused
+//! (`FusedTrainer::train_grads` stacking every job's minibatch into
+//! one tall GEMM per layer, through packed weight panels). The two
+//! paths are bitwise-identical per job (`runtime/native/fused.rs`),
+//! so this table too measures pure speed. The fused cells also assert
+//! that the trainer's scratch stops growing after the warm-up call —
+//! the no-per-round-allocation contract the campaign loop relies on.
+//!
 //! Part 1 — the engine ablation: forward (action selection) and one
 //! replay train step (batch 32) on the native MLP engine, the tabular
 //! fallback, and the AOT/PJRT artifact path (reported as unavailable
@@ -30,7 +40,9 @@ use aituning::coordinator::{
     build_state, run_episode, Agent, RelativeTracker, ReplayBuffer, TabularAgent, Transition,
 };
 use aituning::mpi_t::CvarSet;
-use aituning::runtime::{DenseKernel, Manifest, NativeQNet, RuntimeClient, TrainBatch};
+use aituning::runtime::{
+    DenseKernel, FusedTrainer, Manifest, NativeQNet, RuntimeClient, TrainBatch,
+};
 use aituning::simmpi::Machine;
 use aituning::util::bench::{opaque, time, Table};
 use aituning::util::json::{arr, num, obj, s as js, Json};
@@ -39,6 +51,13 @@ use aituning::workloads::WorkloadKind;
 
 /// Batch sizes the roofline sweeps.
 const ROOFLINE_BATCHES: [usize; 5] = [1, 8, 32, 128, 512];
+
+/// Round widths (live jobs) the training roofline sweeps.
+const TRAINING_JOBS: [usize; 3] = [1, 4, 8];
+
+/// Per-job minibatch size of the training roofline — the campaign
+/// default (`replay_batch`).
+const TRAINING_BATCH: usize = 32;
 
 /// One measured (engine, batch) cell, kept for the JSON report.
 struct RooflineRow {
@@ -193,7 +212,105 @@ fn roofline(backend: BackendId, samples: usize) -> Vec<RooflineRow> {
     rows
 }
 
-fn write_json(rows: &[RooflineRow], quick: bool) -> anyhow::Result<()> {
+/// One measured (mode, jobs) training cell, kept for the JSON report.
+struct TrainingRow {
+    mode: &'static str,
+    jobs: usize,
+    batch: usize,
+    median_us: f64,
+    p90_us: f64,
+    per_sample_us: f64,
+}
+
+/// Part 0b: sequential vs fused cross-job gradient passes over one
+/// shared master. Returns the measured rows for the JSON report.
+fn training_roofline(backend: BackendId, samples: usize) -> Vec<TrainingRow> {
+    let dim = backend.state_dim();
+    let mut init_rng = Rng::new(0);
+    let mut net = NativeQNet::with_default_shape(dim, backend.num_actions(), &mut init_rng);
+    net.set_kernel(DenseKernel::Blocked);
+    let mut trainer = FusedTrainer::new(DenseKernel::Blocked);
+
+    let mut rng = Rng::new(3);
+    let (replay, _) = replay_fixture(backend, &mut rng);
+
+    let mut rows: Vec<TrainingRow> = Vec::new();
+    let mut table = Table::new(&[
+        "jobs",
+        "sequential",
+        "seq /sample",
+        "fused",
+        "fused /sample",
+        "fused vs seq",
+    ]);
+
+    for &jobs in &TRAINING_JOBS {
+        let batches: Vec<TrainBatch> =
+            (0..jobs).map(|_| replay.sample(TRAINING_BATCH, &mut rng)).collect();
+        let refs: Vec<&TrainBatch> = batches.iter().collect();
+        let total = (jobs * TRAINING_BATCH) as f64;
+        // A gradient pass is ~3x a forward: scale sample counts down
+        // (deterministically) to keep runtime sane.
+        let n = (samples * 8 / (8 + 3 * jobs)).max(10);
+
+        let seq = time(3, n, || {
+            for b in &batches {
+                opaque(net.train_grads(b, 0.9).unwrap());
+            }
+        });
+        let seq_per = seq.median_us() / total;
+        rows.push(TrainingRow {
+            mode: "sequential",
+            jobs,
+            batch: TRAINING_BATCH,
+            median_us: seq.median_us(),
+            p90_us: seq.p90_us(),
+            per_sample_us: seq_per,
+        });
+
+        // Warm the pack + scratch, then pin the no-per-round-allocation
+        // contract: steady-state rounds must not grow the footprint.
+        opaque(trainer.train_grads(&net.params, &refs, 0.9).unwrap());
+        let warm_bytes = trainer.scratch_bytes();
+        let fused = time(3, n, || {
+            opaque(trainer.train_grads(&net.params, &refs, 0.9).unwrap());
+        });
+        assert_eq!(
+            trainer.scratch_bytes(),
+            warm_bytes,
+            "fused trainer scratch grew across steady-state rounds (jobs={jobs})"
+        );
+        let fused_per = fused.median_us() / total;
+        rows.push(TrainingRow {
+            mode: "fused",
+            jobs,
+            batch: TRAINING_BATCH,
+            median_us: fused.median_us(),
+            p90_us: fused.p90_us(),
+            per_sample_us: fused_per,
+        });
+
+        table.row(vec![
+            jobs.to_string(),
+            format!("{:.1} µs", seq.median_us()),
+            format!("{seq_per:.2} µs"),
+            format!("{:.1} µs", fused.median_us()),
+            format!("{fused_per:.2} µs"),
+            format!("{:.2}x", fused_per / seq_per),
+        ]);
+    }
+
+    println!("=== training-path roofline: sequential vs fused cross-job grads ===");
+    table.print();
+    println!(
+        "one round's gradient passes, batch {TRAINING_BATCH} per job over one shared master;\n\
+         fused stacks every job into one tall GEMM per layer through packed panels.\n\
+         per-job results are bitwise-identical — see runtime/native/fused.rs\n"
+    );
+    rows
+}
+
+fn write_json(rows: &[RooflineRow], training: &[TrainingRow], quick: bool) -> anyhow::Result<()> {
     let json = obj(vec![
         ("bench", js("dqn_runtime")),
         ("backend", js("coarrays")),
@@ -210,10 +327,23 @@ fn write_json(rows: &[RooflineRow], quick: bool) -> anyhow::Result<()> {
                 ])
             })),
         ),
+        (
+            "training",
+            arr(training.iter().map(|r| {
+                obj(vec![
+                    ("mode", js(r.mode)),
+                    ("jobs", num(r.jobs as f64)),
+                    ("batch", num(r.batch as f64)),
+                    ("median_us", num(r.median_us)),
+                    ("p90_us", num(r.p90_us)),
+                    ("per_sample_us", num(r.per_sample_us)),
+                ])
+            })),
+        ),
     ]);
     let path = "BENCH_dqn_runtime.json";
     std::fs::write(path, json.to_string() + "\n")?;
-    println!("wrote {path} ({} roofline cells)\n", rows.len());
+    println!("wrote {path} ({} roofline cells, {} training cells)\n", rows.len(), training.len());
     Ok(())
 }
 
@@ -246,8 +376,11 @@ fn main() -> anyhow::Result<()> {
 
     // --- kernel roofline ---
     let roofline_rows = roofline(backend, samples);
+
+    // --- training-path roofline: sequential vs fused ---
+    let training_rows = training_roofline(backend, samples);
     if json {
-        write_json(&roofline_rows, quick)?;
+        write_json(&roofline_rows, &training_rows, quick)?;
     }
 
     // --- engine ablation: native vs tabular vs AOT ---

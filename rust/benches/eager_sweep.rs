@@ -30,6 +30,7 @@ fn main() -> anyhow::Result<()> {
         base: TuningConfig { machine: machine.clone(), seed: 42, ..TuningConfig::default() },
         workers: 0,
         straggle: None,
+        fuse_training: true,
     });
 
     let mut t = Table::new(&[

@@ -169,6 +169,12 @@ impl CampaignEngine {
             hub,
             slots,
             straggle,
+            // The fused trainer never runs here: workers pull per-merge
+            // masters at their own pace, so no two jobs' minibatches
+            // are functions of one shared parameter set. Segments stay
+            // sequential (and bit-identical to what fusion would have
+            // produced anyway).
+            fused: _,
         } = self.shared_campaign(jobs)?;
         let window = shared.mode.staleness();
         debug_assert!(window > 0, "run_shared_async dispatched with a zero window");

@@ -44,11 +44,19 @@ pub struct CampaignConfig {
     /// delays are pure `thread::sleep`s, so fingerprints are unaffected
     /// and sync mode stays bit-identical with a spec installed.
     pub straggle: Option<StraggleSpec>,
+    /// Fuse the round's per-job training minibatches into one packed
+    /// cross-job GEMM pass when a shared campaign's round has a dense
+    /// master (native DQN; sync schedule). On by default; a pure
+    /// throughput knob — the fused and sequential bodies are
+    /// bit-identical per job, so this is deliberately **not** part of
+    /// any campaign digest or fingerprint, and
+    /// `--no-fuse-training` exists to prove it.
+    pub fuse_training: bool,
 }
 
 impl CampaignConfig {
     pub fn new(base: TuningConfig) -> CampaignConfig {
-        CampaignConfig { base, workers: 0, straggle: None }
+        CampaignConfig { base, workers: 0, straggle: None, fuse_training: true }
     }
 }
 

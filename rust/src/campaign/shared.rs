@@ -54,7 +54,9 @@ use crate::coordinator::{
     AgentKind, AgentState, Controller, HubContribution, HubView, LearnerHub, MergeMode,
     SharedLearning, TuningConfig,
 };
-use crate::runtime::{argmax, q_values_batch_of, DenseKernel};
+use crate::runtime::{
+    argmax, q_values_batch_of, DenseKernel, FusedGrads, FusedTrainer, TrainBatch,
+};
 
 use super::collector::ShardedCollector;
 use super::engine::{finalize_report, CampaignEngine, SpillOptions, SpillRun, StraggleSpec};
@@ -82,18 +84,59 @@ pub(super) struct SharedCampaign<'a> {
     /// Injected per-segment delays (benchmarks only); pure sleeps, so
     /// fingerprints are unaffected in either mode.
     pub(super) straggle: Option<StraggleSpec>,
+    /// The fused cross-job trainer (native-DQN campaigns with fusion
+    /// enabled). `Some` means rounds with a dense master stack every
+    /// job's first minibatch through one packed GEMM per layer; `None`
+    /// (tabular/AOT jobs, `--no-fuse-training`, the async driver) keeps
+    /// the per-job sequential path. Either way the numbers are
+    /// bit-identical — this is a throughput knob, never a semantics
+    /// knob — which is exactly what lets the toggle exist untracked by
+    /// any fingerprint.
+    pub(super) fused: Option<FusedTrainer>,
 }
 
 impl SharedCampaign<'_> {
-    /// One pull/train/push round: batched greedy hints, the parallel
-    /// segment pool, then the job-index-order hub merge.
+    /// One pull/train/push round: batched greedy hints, the segment
+    /// pool (fused across jobs when a dense master exists, per-job
+    /// sequential otherwise), then the job-index-order hub merge.
     fn round(&mut self) -> Result<()> {
         let view = self.hub.view();
         // Batched best_action: every live job's first greedy
         // selection of this round shares one blocked GEMM over the
         // master parameters (computed once, on this thread — the
-        // result is worker-count invariant by construction).
-        let hints = round_hints(&view, self.jobs, &self.slots)?;
+        // result is worker-count invariant by construction). Routed
+        // through the fused trainer when one exists, so its packed
+        // panels are warm before the training pass over the same
+        // master.
+        let hints = round_hints(&view, self.jobs, &self.slots, self.fused.as_mut())?;
+        // Every job is on the same segment index in sync mode: the
+        // number of merges the hub has already consumed.
+        let segment = self.hub.merges();
+        // Fusion needs every job's first minibatch to be a pure
+        // function of one shared dense master — true from the first
+        // merge onward in both modes (weights: the merge *is* the
+        // master every worker pulls; grads: workers pull the hub's
+        // post-Adam master). Round 0 has no master, so it runs the
+        // sequential pool.
+        let fuse = self.fused.is_some()
+            && matches!(view.master.as_deref(), Some(AgentState::Dense { .. }));
+        let contributions = if fuse {
+            self.fused_round(&view, &hints, segment)?
+        } else {
+            self.sequential_round(&view, &hints, segment)?
+        };
+        self.hub.merge(&contributions)
+    }
+
+    /// The pre-fusion round body: every job's full segment runs
+    /// independently on the pool (also the fallback whenever fusion
+    /// cannot apply).
+    fn sequential_round(
+        &self,
+        view: &HubView,
+        hints: &[Option<usize>],
+        segment: usize,
+    ) -> Result<Vec<HubContribution>> {
         let collector = ShardedCollector::new(self.jobs.len(), self.workers);
         let cursor = AtomicUsize::new(0);
         let jobs = self.jobs;
@@ -101,16 +144,11 @@ impl SharedCampaign<'_> {
         let shared = self.shared;
         let sync_every = self.sync_every;
         let slots = &self.slots;
-        // Every job is on the same segment index in sync mode: the
-        // number of merges the hub has already consumed.
-        let segment = self.hub.merges();
         let straggle = self.straggle;
         std::thread::scope(|scope| {
             for w in 0..self.workers {
                 let collector = &collector;
                 let cursor = &cursor;
-                let view = &view;
-                let hints = &hints;
                 scope.spawn(move || loop {
                     let i = cursor.fetch_add(1, Ordering::Relaxed);
                     if i >= jobs.len() {
@@ -132,9 +170,96 @@ impl SharedCampaign<'_> {
                 });
             }
         });
-        let contributions =
-            collector.into_merged()?.into_iter().collect::<Result<Vec<HubContribution>>>()?;
-        self.hub.merge(&contributions)
+        collector.into_merged()?.into_iter().collect()
+    }
+
+    /// The fused round body, two phases around one cross-job training
+    /// pass:
+    ///
+    /// 1. **Presample** (parallel): each job pulls the master, runs its
+    ///    segment's first tuning run through the transition push, and
+    ///    draws its training minibatch at the exact RNG position the
+    ///    sequential path would ([`Controller::step_run_presampled`]).
+    /// 2. One [`FusedTrainer::train_grads`] over the stacked batches on
+    ///    this thread — every job's forward/`dx` GEMMs share the packed
+    ///    master panels.
+    /// 3. **Complete** (parallel): each job applies its own gradients
+    ///    ([`Controller::complete_fused`]) and runs the rest of its
+    ///    segment, which trains sequentially on the worker's local
+    ///    post-update parameters exactly as before.
+    ///
+    /// Per job this is bit-identical to [`run_segment`] — same draws,
+    /// same updates, same contribution — so fingerprints cannot see
+    /// which body ran; only the wall clock can.
+    fn fused_round(
+        &mut self,
+        view: &HubView,
+        hints: &[Option<usize>],
+        segment: usize,
+    ) -> Result<Vec<HubContribution>> {
+        let Some(AgentState::Dense { params, .. }) = view.master.as_deref() else {
+            anyhow::bail!("fused round scheduled without a dense master");
+        };
+        let trainer = self.fused.as_mut().context("fused round without a trainer")?;
+        let jobs = self.jobs;
+        let base = self.base;
+        let shared = self.shared;
+        let slots = &self.slots;
+        let workers = self.workers;
+
+        let collector = ShardedCollector::new(jobs.len(), workers);
+        let cursor = AtomicUsize::new(0);
+        std::thread::scope(|scope| {
+            for w in 0..workers {
+                let collector = &collector;
+                let cursor = &cursor;
+                scope.spawn(move || loop {
+                    let i = cursor.fetch_add(1, Ordering::Relaxed);
+                    if i >= jobs.len() {
+                        break;
+                    }
+                    let r = presample_segment(base, shared, &jobs[i], view, &slots[i], hints[i]);
+                    collector.push(w, i, r);
+                });
+            }
+        });
+        let batches =
+            collector.into_merged()?.into_iter().collect::<Result<Vec<TrainBatch>>>()?;
+
+        let refs: Vec<&TrainBatch> = batches.iter().collect();
+        let fused = trainer.train_grads(params, &refs, base.gamma)?;
+        // Job-indexed cells the completion pool drains — each slot is
+        // taken exactly once, by whichever worker claims that job.
+        let cells: Vec<Mutex<Option<FusedGrads>>> =
+            fused.into_iter().map(|g| Mutex::new(Some(g))).collect();
+
+        let collector = ShardedCollector::new(jobs.len(), workers);
+        let cursor = AtomicUsize::new(0);
+        let sync_every = self.sync_every;
+        let straggle = self.straggle;
+        let cells = &cells;
+        std::thread::scope(|scope| {
+            for w in 0..workers {
+                let collector = &collector;
+                let cursor = &cursor;
+                scope.spawn(move || loop {
+                    let i = cursor.fetch_add(1, Ordering::Relaxed);
+                    if i >= jobs.len() {
+                        break;
+                    }
+                    let r = complete_segment(
+                        i,
+                        sync_every,
+                        &slots[i],
+                        &cells[i],
+                        straggle.as_ref(),
+                        segment,
+                    );
+                    collector.push(w, i, r);
+                });
+            }
+        });
+        collector.into_merged()?.into_iter().collect()
     }
 
     /// Finish every session in job order and return the outcomes plus
@@ -185,6 +310,12 @@ impl CampaignEngine {
             .with_merge(shared.merge, base.lr)
             .with_hub_optimizer(shared.hub_lr_schedule, shared.hub_steps)
             .with_staleness(shared.mode.staleness());
+        // Fused cross-job training applies only to the native DQN
+        // agent (the trainer computes native-kernel gradients); the
+        // `fuse_training` knob exists so the fuse-on/off fingerprint
+        // identity is testable and the sequential body stays reachable.
+        let fused = (self.config().fuse_training && jobs[0].agent == AgentKind::Dqn)
+            .then(|| FusedTrainer::new(DenseKernel::default()));
         Ok(SharedCampaign {
             base,
             shared,
@@ -195,6 +326,7 @@ impl CampaignEngine {
             hub,
             slots: jobs.iter().map(|_| Mutex::new(None)).collect(),
             straggle: self.config().straggle,
+            fused,
         })
     }
 
@@ -358,6 +490,7 @@ fn round_hints(
     view: &HubView,
     jobs: &[CampaignJob],
     slots: &[Mutex<Option<Controller>>],
+    trainer: Option<&mut FusedTrainer>,
 ) -> Result<Vec<Option<usize>>> {
     let mut hints: Vec<Option<usize>> = vec![None; jobs.len()];
     if jobs[0].agent != AgentKind::Dqn {
@@ -378,7 +511,13 @@ fn round_hints(
     if rows.is_empty() {
         return Ok(hints);
     }
-    let q = q_values_batch_of(params, &states, rows.len(), DenseKernel::default())?;
+    // The packed no-store forward and the plain evaluator are bitwise
+    // interchangeable; going through the trainer warms its panel cache
+    // for this round's fused training pass over the same master.
+    let q = match trainer {
+        Some(t) => t.forward(params, &states, rows.len())?,
+        None => q_values_batch_of(params, &states, rows.len(), DenseKernel::default())?,
+    };
     let num_actions = q.len() / rows.len();
     for (k, &i) in rows.iter().enumerate() {
         hints[i] = Some(argmax(&q[k * num_actions..(k + 1) * num_actions]));
@@ -408,22 +547,7 @@ pub(super) fn run_segment(
     // Take the controller out of the slot (creating it on first touch),
     // run the segment, and put it back — the take/put-back shape avoids
     // ever holding an `Option` that later code must re-prove is `Some`.
-    let mut ctl = match guard.take() {
-        Some(ctl) => ctl,
-        None => {
-            let cfg = TuningConfig {
-                agent: job.agent,
-                seed: job.seed,
-                machine: job.resolve_machine()?,
-                backend: job.backend,
-                shared: Some(shared),
-                ..base.clone()
-            };
-            let mut ctl = Controller::new(cfg)?;
-            ctl.begin_session(job.workload, job.images)?;
-            ctl
-        }
-    };
+    let mut ctl = take_or_create(&mut guard, base, shared, job)?;
     ctl.sync_from_hub(view)?;
     // Staged *after* the pull so the hint's provenance (the master
     // parameters the batch was evaluated over) is exactly the agent
@@ -441,6 +565,95 @@ pub(super) fn run_segment(
         }
     }
     let contribution = ctl.hub_contribution(job_index);
+    *guard = Some(ctl);
+    contribution
+}
+
+/// Take a job's controller out of its slot, constructing and beginning
+/// it on the first touch of the campaign. Shared by the sequential
+/// segment body and the fused round's presample phase, so "which round
+/// body ran" can never change how a controller is born.
+fn take_or_create(
+    guard: &mut Option<Controller>,
+    base: &TuningConfig,
+    shared: SharedLearning,
+    job: &CampaignJob,
+) -> Result<Controller> {
+    match guard.take() {
+        Some(ctl) => Ok(ctl),
+        None => {
+            let cfg = TuningConfig {
+                agent: job.agent,
+                seed: job.seed,
+                machine: job.resolve_machine()?,
+                backend: job.backend,
+                shared: Some(shared),
+                ..base.clone()
+            };
+            let mut ctl = Controller::new(cfg)?;
+            ctl.begin_session(job.workload, job.images)?;
+            Ok(ctl)
+        }
+    }
+}
+
+/// Phase 1 of a fused round for one job: pull, stage the hint, run the
+/// segment's first tuning run and hand back its presampled minibatch.
+/// The prefix (lock, take-or-create, [`Controller::sync_from_hub`],
+/// [`Controller::stage_greedy_hint`]) is [`run_segment`]'s own prefix,
+/// and the run + sample are the sequential first iteration's draws in
+/// the sequential order ([`Controller::step_run_presampled`]).
+fn presample_segment(
+    base: &TuningConfig,
+    shared: SharedLearning,
+    job: &CampaignJob,
+    view: &HubView,
+    slot: &Mutex<Option<Controller>>,
+    hint: Option<usize>,
+) -> Result<TrainBatch> {
+    let mut guard = slot.lock().unwrap_or_else(|poisoned| poisoned.into_inner());
+    let mut ctl = take_or_create(&mut guard, base, shared, job)?;
+    ctl.sync_from_hub(view)?;
+    ctl.stage_greedy_hint(hint);
+    let batch = ctl.step_run_presampled();
+    *guard = Some(ctl);
+    batch
+}
+
+/// Phase 2 of a fused round for one job: apply the fused gradients
+/// ([`Controller::complete_fused`]), run the remaining `sync_every − 1`
+/// runs of the segment sequentially, then package the push — from here
+/// on, byte for byte what [`run_segment`] does after its first run.
+fn complete_segment(
+    job_index: usize,
+    sync_every: usize,
+    slot: &Mutex<Option<Controller>>,
+    cell: &Mutex<Option<FusedGrads>>,
+    straggle: Option<&StraggleSpec>,
+    segment: usize,
+) -> Result<HubContribution> {
+    let mut ctl = slot
+        .lock()
+        .unwrap_or_else(|poisoned| poisoned.into_inner())
+        .take()
+        .context("fused round lost a controller between phases")?;
+    let grads = cell
+        .lock()
+        .unwrap_or_else(|poisoned| poisoned.into_inner())
+        .take()
+        .context("fused gradients for this job were already consumed")?;
+    ctl.complete_fused(grads)?;
+    ctl.step_session(sync_every - 1)?;
+    if let Some(spec) = straggle {
+        // Same benchmark-only sleep as the sequential body, at the same
+        // point: after the segment's compute, before the push.
+        let delay = spec.delay(job_index, segment);
+        if !delay.is_zero() {
+            std::thread::sleep(delay);
+        }
+    }
+    let contribution = ctl.hub_contribution(job_index);
+    let mut guard = slot.lock().unwrap_or_else(|poisoned| poisoned.into_inner());
     *guard = Some(ctl);
     contribution
 }

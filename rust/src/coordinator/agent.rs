@@ -66,6 +66,21 @@ pub trait Agent: Send {
     /// the canonical-order f64-accumulation discipline.
     fn train(&mut self, batch: &TrainBatch, lr: f32, gamma: f32) -> Result<TrainOutcome>;
 
+    /// Apply externally computed gradients for one training update —
+    /// the completion half of the fused cross-job trainer, whose
+    /// gradient half ran outside the agent over the shared master
+    /// parameters. Estimators that cannot apply external gradients
+    /// (tabular, fused AOT artifact) keep the default, which bails.
+    ///
+    /// Determinism: `train(batch, lr, gamma)` and "compute that batch's
+    /// gradients externally → `apply_train(grads, loss, lr)`" leave
+    /// bit-identical learned state — applying is the same finiteness
+    /// gate + optimizer step + bookkeeping either way. The fused
+    /// round's fingerprint identity rests on this equivalence.
+    fn apply_train(&mut self, _grads: &QParams, _loss: f32, _lr: f32) -> Result<()> {
+        anyhow::bail!("this estimator cannot apply externally computed gradients")
+    }
+
     /// Bounded training-loss diagnostics.
     ///
     /// Determinism: pure function of the training history (the ring
@@ -351,6 +366,16 @@ impl Agent for DqnAgent {
             acc.add(g);
         }
         Ok(outcome)
+    }
+
+    fn apply_train(&mut self, grads: &QParams, loss: f32, lr: f32) -> Result<()> {
+        anyhow::ensure!(!self.use_target, "the fixed-Q-targets ablation never fuses");
+        self.updates += 1;
+        self.qnet.apply_train(grads, loss, lr)?;
+        if let Some(acc) = self.grad_accum.as_mut() {
+            acc.add(grads);
+        }
+        Ok(())
     }
 
     fn losses(&self) -> &crate::runtime::LossRing {

@@ -7,6 +7,7 @@ use anyhow::{Context, Result};
 use crate::backend::{BackendId, TunableRuntime};
 use crate::metrics::recorder::{RunRecord, TuningLog};
 use crate::mpi_t::CvarSet;
+use crate::runtime::{FusedGrads, TrainBatch};
 use crate::simmpi::Machine;
 use crate::util::rng::Rng;
 use crate::workloads::WorkloadKind;
@@ -166,6 +167,18 @@ struct ActiveSession {
     next_run: usize,
 }
 
+/// Bookkeeping stashed between [`Controller::step_run_presampled`] and
+/// [`Controller::complete_fused`]: everything the deferred tail of the
+/// run needs once the fused trainer hands the gradients back.
+struct PendingFused {
+    /// Replay slots the presampled minibatch drew (priority feedback).
+    picks: Vec<usize>,
+    /// The run's log record, not yet pushed.
+    record: RunRecord,
+    /// The run's resulting RL state, not yet adopted as `prev_state`.
+    state: Vec<f32>,
+}
+
 /// The AITuning controller.
 pub struct Controller {
     pub cfg: TuningConfig,
@@ -177,6 +190,8 @@ pub struct Controller {
     lifetime_runs: usize,
     /// Session in progress (segmented tuning).
     session: Option<ActiveSession>,
+    /// A presampled run awaiting its fused-training completion.
+    pending_fused: Option<PendingFused>,
     /// Transitions generated since the last hub push (shared mode
     /// only; stays empty for independent sessions).
     pending: Vec<Transition>,
@@ -231,6 +246,7 @@ impl Controller {
             rng,
             lifetime_runs: 0,
             session: None,
+            pending_fused: None,
             pending: Vec::new(),
             seen_master: false,
             greedy_hint: None,
@@ -441,68 +457,152 @@ impl Controller {
     /// are identical to the monolithic loop — segmentation changes
     /// *when* the caller regains control, never what executes.
     pub fn step_session(&mut self, max_runs: usize) -> Result<usize> {
+        anyhow::ensure!(
+            self.pending_fused.is_none(),
+            "a presampled run is awaiting its fused-training completion"
+        );
         let mut session = self.session.take().context("no tuning session in progress")?;
-        let runtime = self.runtime();
         let total = self.cfg.runs;
         let mut executed = 0;
         while session.next_run <= total && executed < max_runs {
-            let i = session.next_run;
-            let eps = self.epsilon(i - 1, total);
-            let action_idx = self.select_action(&session.prev_state, eps)?;
-            let action = Action::from_index(runtime.cvars(), action_idx);
-            session.cvars = action.apply(&session.cvars);
-
-            let run_seed = self.rng.next_u64();
-            let result = runtime.run_episode(
-                session.kind,
-                session.images,
-                &self.cfg.machine,
-                &session.cvars,
-                self.cfg.noise,
-                session.workload_seed,
-                run_seed,
-            )?;
-            let r = runtime.reward(session.reference_us, result.total_time_us);
-            self.lifetime_runs += 1;
-
-            let state = runtime.build_state(
-                &result.pvars,
-                &session.tracker,
-                &session.cvars,
-                &self.cfg.machine,
-                session.images,
-                i,
-                result.eager_fraction,
-            );
-            let transition = Transition {
-                state: std::mem::take(&mut session.prev_state),
-                action: action_idx,
-                reward: r as f32,
-                next_state: state.clone(),
-                done: i == total,
-                workload: Some(session.kind),
-            };
-            if self.cfg.shared.is_some() {
-                self.pending.push(transition.clone());
-            }
-            self.replay.push(transition);
+            let (record, state) = self.run_once(&mut session)?;
             self.learn()?;
-
-            session.log.push(RunRecord {
-                run_index: i,
-                cvars: session.cvars.clone(),
-                total_time_us: result.total_time_us,
-                reward: r,
-                action: Some(action_idx),
-                epsilon: eps,
-                pvars: result.pvars,
-            });
+            session.log.push(record);
             session.prev_state = state;
             session.next_run += 1;
             executed += 1;
         }
         self.session = Some(session);
         Ok(executed)
+    }
+
+    /// One tuning run of the active session through the transition
+    /// push: selection, episode, reward, state build, replay/pending
+    /// push. Returns the run's log record and resulting RL state; the
+    /// caller finishes the run (training + bookkeeping) — immediately
+    /// in [`Controller::step_session`], deferred across the fused
+    /// trainer in [`Controller::step_run_presampled`].
+    fn run_once(&mut self, session: &mut ActiveSession) -> Result<(RunRecord, Vec<f32>)> {
+        let runtime = self.runtime();
+        let total = self.cfg.runs;
+        let i = session.next_run;
+        let eps = self.epsilon(i - 1, total);
+        let action_idx = self.select_action(&session.prev_state, eps)?;
+        let action = Action::from_index(runtime.cvars(), action_idx);
+        session.cvars = action.apply(&session.cvars);
+
+        let run_seed = self.rng.next_u64();
+        let result = runtime.run_episode(
+            session.kind,
+            session.images,
+            &self.cfg.machine,
+            &session.cvars,
+            self.cfg.noise,
+            session.workload_seed,
+            run_seed,
+        )?;
+        let r = runtime.reward(session.reference_us, result.total_time_us);
+        self.lifetime_runs += 1;
+
+        let state = runtime.build_state(
+            &result.pvars,
+            &session.tracker,
+            &session.cvars,
+            &self.cfg.machine,
+            session.images,
+            i,
+            result.eager_fraction,
+        );
+        let transition = Transition {
+            state: std::mem::take(&mut session.prev_state),
+            action: action_idx,
+            reward: r as f32,
+            next_state: state.clone(),
+            done: i == total,
+            workload: Some(session.kind),
+        };
+        if self.cfg.shared.is_some() {
+            self.pending.push(transition.clone());
+        }
+        self.replay.push(transition);
+
+        let record = RunRecord {
+            run_index: i,
+            cvars: session.cvars.clone(),
+            total_time_us: result.total_time_us,
+            reward: r,
+            action: Some(action_idx),
+            epsilon: eps,
+            pvars: result.pvars,
+        };
+        Ok((record, state))
+    }
+
+    /// First half of a fused training run: execute one tuning run of
+    /// the active session through its transition push, then draw the
+    /// training minibatch **at exactly the RNG stream position the
+    /// sequential path would draw it** — and hand it to the caller
+    /// instead of training on it. The campaign round stacks every
+    /// job's batch through [`crate::runtime::FusedTrainer`] and
+    /// completes each controller with [`Controller::complete_fused`].
+    ///
+    /// Determinism: identical draws in identical order to one
+    /// `step_session(1)` iteration up to (but excluding) the agent's
+    /// own training update, which `complete_fused` replays exactly.
+    pub fn step_run_presampled(&mut self) -> Result<TrainBatch> {
+        anyhow::ensure!(
+            self.pending_fused.is_none(),
+            "a presampled run is already awaiting completion"
+        );
+        let mut session = self.session.take().context("no tuning session in progress")?;
+        anyhow::ensure!(
+            session.next_run <= self.cfg.runs,
+            "session has no tuning runs left to presample"
+        );
+        let run = self.run_once(&mut session);
+        self.session = Some(session);
+        let (record, state) = run?;
+        // The run's own transition was just pushed, so the buffer can
+        // never be empty here — the sequential path's empty-replay
+        // early-return is unreachable.
+        let (batch, picks) = self.replay.sample_with_picks(self.cfg.replay_batch, &mut self.rng);
+        self.pending_fused = Some(PendingFused { picks, record, state });
+        Ok(batch)
+    }
+
+    /// Second half of a fused training run: apply the gradients the
+    /// fused trainer computed for this controller's presampled batch,
+    /// then replay the rest of the sequential run tail — priority
+    /// feedback from the realized TD errors, the periodic §5.2 replay
+    /// refresh (those minibatches train over post-update parameters,
+    /// so they are never fused), and the deferred log/state/run-index
+    /// bookkeeping.
+    ///
+    /// Determinism: `step_run_presampled` + `complete_fused` leaves
+    /// controller, agent and RNG state bit-identical to the
+    /// `step_session(1)` iteration it replaces, because the fused
+    /// gradients themselves are bit-identical ([`FusedTrainer`]) and
+    /// everything after the gradient computation happens here in the
+    /// sequential order.
+    ///
+    /// [`FusedTrainer`]: crate::runtime::FusedTrainer
+    pub fn complete_fused(&mut self, fused: FusedGrads) -> Result<()> {
+        let pending =
+            self.pending_fused.take().context("no presampled run awaiting completion")?;
+        self.agent.apply_train(&fused.grads, fused.loss, self.cfg.lr)?;
+        for (&pick, &td) in pending.picks.iter().zip(&fused.td_errors) {
+            self.replay.feedback(pick, td.abs() as f64);
+        }
+        if self.lifetime_runs % self.cfg.replay_refresh_every == 0 {
+            for _ in 0..self.cfg.replay_refresh_batches {
+                self.train_minibatch()?;
+            }
+        }
+        let session = self.session.as_mut().context("no tuning session in progress")?;
+        session.log.push(pending.record);
+        session.prev_state = pending.state;
+        session.next_run += 1;
+        Ok(())
     }
 
     /// Has the active session executed its full run budget?

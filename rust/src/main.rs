@@ -67,6 +67,10 @@ USAGE:
                        [--hub-steps N]  (grads mode's master optimizer: lr decay
                        clocked on cumulative hub Adam steps with period P, and how
                        many Adam steps each merged push applies)
+                       [--no-fuse-training]  (disable the fused cross-job training
+                       GEMMs of sync rounds; results are bit-identical either way —
+                       this only trades away the packed-panel throughput. Needs
+                       --shared)
                        [--spill-dir DIR | --resume DIR]  (on-disk campaign store:
                        spill finished jobs to per-shard segments for flat memory, and
                        resume a killed campaign from where it stopped)
@@ -344,6 +348,9 @@ fn cmd_campaign(args: &Args) -> Result<()> {
                 bail!("--{flag} only applies to shared campaigns; add --shared");
             }
         }
+        if args.flag("no-fuse-training") {
+            bail!("--no-fuse-training only applies to shared campaigns; add --shared");
+        }
     }
     let workloads = backend.runtime().training_workloads();
     let jobs = job_grid(backend, &machines, workloads, &images, base.agent, base.seed);
@@ -351,6 +358,10 @@ fn cmd_campaign(args: &Args) -> Result<()> {
         base,
         workers: args.usize_or("workers", 0)?,
         straggle: None,
+        // A pure throughput knob: fused and sequential round bodies are
+        // bit-identical per job, so disabling fusion can never change a
+        // result — only how long it takes to produce.
+        fuse_training: !args.flag("no-fuse-training"),
     });
 
     if let Some((dir, opts)) = parse_store(args)? {
@@ -556,6 +567,7 @@ fn cmd_sweep(args: &Args) -> Result<()> {
         },
         workers: args.usize_or("workers", 0)?,
         straggle: None,
+        fuse_training: true,
     });
 
     // Sweeps evaluate fixed configurations — there is no shared
@@ -626,6 +638,7 @@ fn cmd_baselines(args: &Args) -> Result<()> {
         base: TuningConfig { agent: AgentKind::Tabular, ..cfg.clone() },
         workers: args.usize_or("workers", 0)?,
         straggle: None,
+        fuse_training: true,
     });
 
     let backend = cfg.backend;
@@ -660,6 +673,7 @@ fn cmd_baselines(args: &Args) -> Result<()> {
         base: TuningConfig { runs: budget, ..cfg.clone() },
         workers: 1,
         straggle: None,
+        fuse_training: true,
     });
     let report = tune_engine.run(&[CampaignJob {
         backend,

@@ -27,7 +27,9 @@ pub(crate) mod xla;
 pub use aot::AotQNet;
 pub use artifact::{default_artifacts_dir, ArtifactSpec, Manifest, TensorSpec};
 pub use client::{Executable, RuntimeClient};
-pub use native::{adam_step, q_values_batch_of, DenseKernel, NativeQNet};
+pub use native::{
+    adam_step, q_values_batch_of, DenseKernel, FusedGrads, FusedTrainer, NativeQNet, PackedWeights,
+};
 pub use params::{
     average_adam, average_params, layer_dims as params_layer_dims, AdamState, QParams,
 };

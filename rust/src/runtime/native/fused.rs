@@ -1,0 +1,372 @@
+//! Round-level fused training for shared campaigns: every live job's
+//! first minibatch of a segment, stacked into one tall matrix and
+//! pushed through one packed blocked GEMM per layer.
+//!
+//! # Why this is legal
+//!
+//! Right after a shared-campaign round's merge, every native-DQN worker
+//! adopts the *same* dense master state at its next segment start
+//! (`Controller::sync_from_hub`) — in `--merge weights` mode because
+//! that is the merge, in `--merge grads` mode because workers pull the
+//! hub's post-Adam master each round. So the **first** training
+//! minibatch of each job's segment computes gradients over one shared
+//! parameter set, and those per-job passes can share their per-layer
+//! GEMMs: forward and `dx` run over the stacked `[Σbᵢ, ·]` matrix
+//! (amortizing the weight traffic across every job in the round), while
+//! `dw`/`db` reduce over each job's own contiguous row range (their
+//! reductions run over the batch axis, so there is nothing to share —
+//! and each job must keep its own gradient anyway). Later minibatches
+//! of a segment sit on top of each worker's *local* Adam updates and
+//! are never fused.
+//!
+//! # Bit-identity argument (the fingerprint contract)
+//!
+//! [`FusedTrainer::train_grads`] is bit-identical per job to
+//! `NativeQNet::train_grads` over the same master, by construction:
+//!
+//! * forward and `q_next` rows are per-row reductions over the input
+//!   features — batch-size-independent, so row `r` of the stacked pass
+//!   equals row `r − offset` of the job's own pass (`kernels.rs` proves
+//!   packed ≡ blocked ≡ scalar per element);
+//! * the per-sample target/residual/`dq` arithmetic is row-local, and
+//!   each `dq` row divides by its **own job's** batch size;
+//! * per-job loss is an f64 accumulation over that job's rows in
+//!   ascending order — exactly the sequential loop;
+//! * `dw`/`db` reduce over the job's contiguous row slice in ascending
+//!   batch order ([`kernels::backward_dw_db`] on the sub-slice *is* the
+//!   sequential call), and `dx` rows are per-row reductions again.
+//!
+//! Index ranges are reassociated (which rows share a GEMM); no
+//! accumulator's summation order ever changes. The property test
+//! `rust/tests/proptests.rs::prop_fused_cross_job_grads_match_sequential`
+//! pins this across random shapes and batch splits, and every
+//! pre-existing 1/2/4-worker campaign fingerprint survives unchanged.
+//!
+//! # Scratch and packing reuse
+//!
+//! The trainer owns its tall-matrix, activation and `dz`/`dx` buffers
+//! and reuses them across rounds (cleared, never shrunk), and caches
+//! the packed weight panels under the master's digest — round hints and
+//! fused training over one master re-stride nothing.
+//! [`FusedTrainer::scratch_bytes`] exposes the footprint so the bench
+//! can assert it stops growing after warmup.
+
+use anyhow::{Context, Result};
+
+use crate::runtime::params::QParams;
+use crate::runtime::TrainBatch;
+
+use super::kernels::{self, DenseKernel, PackedLayer, PackedWeights};
+use super::{infer_layer_dims, mlp};
+
+/// One job's share of a fused round: the gradients, loss and per-sample
+/// TD errors its sequential `train_grads` call would have produced.
+#[derive(Debug, Clone)]
+pub struct FusedGrads {
+    pub grads: QParams,
+    pub loss: f32,
+    pub td_errors: Vec<f32>,
+}
+
+/// Round-persistent buffers; cleared and refilled each call, never
+/// shrunk.
+#[derive(Debug, Default)]
+struct Scratch {
+    /// `acts[0]` is the stacked state matrix; `acts[l + 1]` is layer
+    /// `l`'s output (post-ReLU for hidden layers).
+    acts: Vec<Vec<f32>>,
+    /// Ping-pong pair for the no-store next-state forward; `q_next`
+    /// holds the final Q rows when the loop ends.
+    q_next: Vec<f32>,
+    hold: Vec<f32>,
+    /// Backprop workspace: `dz` is the live upstream gradient, `dx` the
+    /// swap partner it propagates into.
+    dz: Vec<f32>,
+    dx: Vec<f32>,
+}
+
+/// The fused cross-job trainer: packed-panel forward/backward over a
+/// stacked multi-job minibatch, plus the packed forward the round's
+/// batched greedy hints share.
+#[derive(Debug)]
+pub struct FusedTrainer {
+    kernel: DenseKernel,
+    /// Most recent pack, keyed by the digest of the parameters it was
+    /// built from (one master per round ⇒ a one-deep cache hits every
+    /// reuse that exists).
+    pack: Option<PackedWeights>,
+    scratch: Scratch,
+}
+
+impl FusedTrainer {
+    pub fn new(kernel: DenseKernel) -> FusedTrainer {
+        FusedTrainer { kernel, pack: None, scratch: Scratch::default() }
+    }
+
+    /// Bytes currently held by the scratch buffers and the cached pack.
+    /// After one warmup round of a fixed shape this must stop growing —
+    /// `benches/dqn_runtime.rs` asserts it.
+    pub fn scratch_bytes(&self) -> usize {
+        let s = &self.scratch;
+        let f32s = s.q_next.capacity()
+            + s.hold.capacity()
+            + s.dz.capacity()
+            + s.dx.capacity()
+            + s.acts.iter().map(Vec::capacity).sum::<usize>();
+        f32s * std::mem::size_of::<f32>() + self.pack.as_ref().map_or(0, PackedWeights::bytes)
+    }
+
+    /// Re-stride `params` into packed panels unless the cached pack was
+    /// already built from these exact parameters (digest equality —
+    /// O(#params), trivial next to one GEMM).
+    fn ensure_pack(&mut self, params: &QParams, dims: &[(usize, usize)]) {
+        let digest = params.digest();
+        if self.pack.as_ref().map(PackedWeights::digest) == Some(digest) {
+            return;
+        }
+        let layers: Vec<PackedLayer> = dims
+            .iter()
+            .enumerate()
+            .map(|(l, &(d_in, d_out))| PackedLayer::pack(&params.tensors[2 * l].0, d_in, d_out))
+            .collect();
+        self.pack = Some(PackedWeights::from_layers(digest, layers));
+    }
+
+    /// Q(s, ·) for a `[batch, state_dim]` matrix over raw parameters —
+    /// the packed, no-store counterpart of
+    /// [`crate::runtime::q_values_batch_of`], bit-identical to it row
+    /// for row. The campaign round's greedy hints call this so their
+    /// pack is warm by the time fused training runs over the same
+    /// master.
+    pub fn forward(&mut self, params: &QParams, states: &[f32], batch: usize) -> Result<Vec<f32>> {
+        let dims = infer_layer_dims(params)?;
+        let state_dim = dims[0].0;
+        anyhow::ensure!(
+            batch > 0 && states.len() == batch * state_dim,
+            "batch states size {} != {} x {}",
+            states.len(),
+            batch,
+            state_dim
+        );
+        self.ensure_pack(params, &dims);
+        let pack = self.pack.as_ref().context("weight pack missing after ensure_pack")?;
+        let scratch = &mut self.scratch;
+        scratch.q_next.clear();
+        scratch.q_next.extend_from_slice(states);
+        for (l, layer) in pack.layers().iter().enumerate() {
+            let relu = l + 1 < dims.len();
+            let bias = &params.tensors[2 * l + 1].0;
+            layer.forward_into(&scratch.q_next, batch, bias, relu, &mut scratch.hold);
+            std::mem::swap(&mut scratch.q_next, &mut scratch.hold);
+        }
+        Ok(scratch.q_next.clone())
+    }
+
+    /// Gradients, losses and TD errors for every job's minibatch in one
+    /// fused pass over `params` — per job, bit-identical to
+    /// `NativeQNet::train_grads(batch, gamma)` on a network holding
+    /// `params` (see the module docs for the argument). Pure in
+    /// `(params, batches, gamma)`; only scratch is mutated.
+    pub fn train_grads(
+        &mut self,
+        params: &QParams,
+        batches: &[&TrainBatch],
+        gamma: f32,
+    ) -> Result<Vec<FusedGrads>> {
+        anyhow::ensure!(!batches.is_empty(), "fused training needs at least one minibatch");
+        let dims = infer_layer_dims(params)?;
+        let state_dim = dims[0].0;
+        let a = dims.last().context("no layers")?.1;
+        let mut total_b = 0usize;
+        for batch in batches {
+            let bj = batch.rewards.len();
+            anyhow::ensure!(bj > 0, "empty train batch in fused round");
+            batch.validate(bj, state_dim, a)?;
+            total_b += bj;
+        }
+        self.ensure_pack(params, &dims);
+        let pack = self.pack.as_ref().context("weight pack missing after ensure_pack")?;
+        let kernel = self.kernel;
+        let scratch = &mut self.scratch;
+
+        // Stacked forward, keeping activations (the backward needs
+        // every layer's inputs and ReLU masks).
+        scratch.acts.resize_with(dims.len() + 1, Vec::new);
+        scratch.acts[0].clear();
+        for batch in batches {
+            scratch.acts[0].extend_from_slice(&batch.states);
+        }
+        for (l, layer) in pack.layers().iter().enumerate() {
+            let relu = l + 1 < dims.len();
+            let bias = &params.tensors[2 * l + 1].0;
+            let (src, dst) = scratch.acts.split_at_mut(l + 1);
+            layer.forward_into(&src[l], total_b, bias, relu, &mut dst[0]);
+        }
+
+        // Stacked next-state forward, no store (ping-pong pair).
+        scratch.q_next.clear();
+        for batch in batches {
+            scratch.q_next.extend_from_slice(&batch.next_states);
+        }
+        for (l, layer) in pack.layers().iter().enumerate() {
+            let relu = l + 1 < dims.len();
+            let bias = &params.tensors[2 * l + 1].0;
+            layer.forward_into(&scratch.q_next, total_b, bias, relu, &mut scratch.hold);
+            std::mem::swap(&mut scratch.q_next, &mut scratch.hold);
+        }
+
+        // Per-sample targets, residuals and dL/dq rows — row-local
+        // except the division by the job's own batch size, and the
+        // per-job loss accumulation over that job's rows in order.
+        scratch.dz.clear();
+        scratch.dz.resize(total_b * a, 0.0);
+        let q = scratch.acts.last().context("forward produced no activations")?;
+        let mut losses: Vec<f32> = Vec::with_capacity(batches.len());
+        let mut tds: Vec<Vec<f32>> = Vec::with_capacity(batches.len());
+        let mut off = 0usize;
+        for batch in batches {
+            let bj = batch.rewards.len();
+            let mut loss_acc = 0.0f64;
+            let mut td = Vec::with_capacity(bj);
+            for i in 0..bj {
+                let r = off + i;
+                let max_next = scratch.q_next[r * a..(r + 1) * a]
+                    .iter()
+                    .cloned()
+                    .fold(f32::NEG_INFINITY, f32::max);
+                let target = batch.rewards[i] + gamma * (1.0 - batch.done[i]) * max_next;
+                let mut pred = 0.0f64;
+                for j in 0..a {
+                    pred += q[r * a + j] as f64 * batch.actions_onehot[i * a + j] as f64;
+                }
+                let err = pred as f32 - target;
+                td.push(err);
+                loss_acc += mlp::huber(err) as f64;
+                let g = mlp::huber_grad(err) / bj as f32;
+                for j in 0..a {
+                    scratch.dz[r * a + j] = g * batch.actions_onehot[i * a + j];
+                }
+            }
+            losses.push((loss_acc / bj as f64) as f32);
+            tds.push(td);
+            off += bj;
+        }
+
+        // Backward, newest layer first: dw/db per job over its own row
+        // slice; one packed dx pass over the whole stacked batch; ReLU
+        // masks from the stored activations.
+        let mut grads: Vec<QParams> = batches.iter().map(|_| params.zeros_like()).collect();
+        for l in (0..dims.len()).rev() {
+            let (d_in, d_out) = dims[l];
+            let x = &scratch.acts[l];
+            let mut off = 0usize;
+            for (k, batch) in batches.iter().enumerate() {
+                let bj = batch.rewards.len();
+                let xs = &x[off * d_in..(off + bj) * d_in];
+                let dzs = &scratch.dz[off * d_out..(off + bj) * d_out];
+                let (dw, rest) = grads[k].tensors[2 * l..].split_first_mut().context("dw slot")?;
+                let db = rest.first_mut().context("db slot")?;
+                kernels::backward_dw_db(kernel, xs, bj, d_in, d_out, dzs, &mut dw.0, &mut db.0);
+                off += bj;
+            }
+            if l > 0 {
+                pack.layers()[l].dx_into(&scratch.dz, total_b, &mut scratch.dx);
+                std::mem::swap(&mut scratch.dz, &mut scratch.dx);
+                for (z, &h) in scratch.dz.iter_mut().zip(&scratch.acts[l]) {
+                    if h <= 0.0 {
+                        *z = 0.0;
+                    }
+                }
+            }
+        }
+
+        let mut out = Vec::with_capacity(batches.len());
+        for ((grads, loss), td_errors) in grads.into_iter().zip(losses).zip(tds) {
+            anyhow::ensure!(
+                loss.is_finite(),
+                "fused training produced non-finite loss {loss}"
+            );
+            out.push(FusedGrads { grads, loss, td_errors });
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+#[allow(clippy::unwrap_used)] // tests panic by design
+mod tests {
+    use super::super::NativeQNet;
+    use super::*;
+    use crate::coordinator::one_hot;
+    use crate::util::rng::Rng;
+
+    fn random_batch(rng: &mut Rng, b: usize, d: usize, a: usize) -> TrainBatch {
+        TrainBatch {
+            states: (0..b * d).map(|_| rng.range_f64(-1.0, 1.0) as f32).collect(),
+            actions_onehot: (0..b)
+                .flat_map(|_| one_hot(rng.below(a as u64) as usize, a))
+                .collect(),
+            rewards: (0..b).map(|_| rng.range_f64(-1.0, 1.0) as f32).collect(),
+            next_states: (0..b * d).map(|_| rng.range_f64(-1.0, 1.0) as f32).collect(),
+            done: (0..b).map(|_| if rng.chance(0.2) { 1.0 } else { 0.0 }).collect(),
+        }
+    }
+
+    #[test]
+    fn fused_grads_match_sequential_train_grads_bitwise() {
+        let mut rng = Rng::new(90);
+        let net = NativeQNet::new(6, &[11, 9], 4, 8, &mut rng);
+        let batches: Vec<TrainBatch> =
+            [3usize, 1, 5].iter().map(|&b| random_batch(&mut rng, b, 6, 4)).collect();
+        let refs: Vec<&TrainBatch> = batches.iter().collect();
+        let mut trainer = FusedTrainer::new(net.kernel());
+        let fused = trainer.train_grads(&net.params, &refs, 0.9).unwrap();
+        assert_eq!(fused.len(), batches.len());
+        for (batch, f) in batches.iter().zip(&fused) {
+            let (grads, loss, td) = net.train_grads(batch, 0.9).unwrap();
+            assert_eq!(grads.digest(), f.grads.digest());
+            assert_eq!(loss.to_bits(), f.loss.to_bits());
+            let want: Vec<u32> = td.iter().map(|x| x.to_bits()).collect();
+            let got: Vec<u32> = f.td_errors.iter().map(|x| x.to_bits()).collect();
+            assert_eq!(want, got);
+        }
+    }
+
+    #[test]
+    fn packed_forward_matches_raw_params_evaluator() {
+        let mut rng = Rng::new(91);
+        let net = NativeQNet::new(5, &[7], 3, 8, &mut rng);
+        let states: Vec<f32> = (0..4 * 5).map(|_| rng.range_f64(-1.0, 1.0) as f32).collect();
+        let mut trainer = FusedTrainer::new(net.kernel());
+        let got = trainer.forward(&net.params, &states, 4).unwrap();
+        let want =
+            crate::runtime::q_values_batch_of(&net.params, &states, 4, net.kernel()).unwrap();
+        let gb: Vec<u32> = got.iter().map(|x| x.to_bits()).collect();
+        let wb: Vec<u32> = want.iter().map(|x| x.to_bits()).collect();
+        assert_eq!(gb, wb);
+        assert!(trainer.forward(&net.params, &states, 5).is_err(), "size mismatch rejected");
+    }
+
+    #[test]
+    fn pack_cache_hits_on_same_params_and_scratch_stabilizes() {
+        let mut rng = Rng::new(92);
+        let net = NativeQNet::new(6, &[8], 3, 8, &mut rng);
+        let batches: Vec<TrainBatch> =
+            (0..4).map(|_| random_batch(&mut rng, 4, 6, 3)).collect();
+        let refs: Vec<&TrainBatch> = batches.iter().collect();
+        let mut trainer = FusedTrainer::new(net.kernel());
+        trainer.train_grads(&net.params, &refs, 0.9).unwrap();
+        let warm = trainer.scratch_bytes();
+        assert!(warm > 0);
+        let digest = trainer.pack.as_ref().unwrap().digest();
+        for _ in 0..3 {
+            trainer.train_grads(&net.params, &refs, 0.9).unwrap();
+        }
+        assert_eq!(trainer.scratch_bytes(), warm, "scratch grew across identical rounds");
+        assert_eq!(trainer.pack.as_ref().unwrap().digest(), digest);
+        // A different master re-packs.
+        let other = NativeQNet::new(6, &[8], 3, 8, &mut Rng::new(93));
+        trainer.train_grads(&other.params, &refs, 0.9).unwrap();
+        assert_ne!(trainer.pack.as_ref().unwrap().digest(), digest);
+    }
+}

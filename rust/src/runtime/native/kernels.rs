@@ -1,5 +1,7 @@
 //! Dense-kernel seam for the native Q-engine: one dispatch enum, two
-//! interchangeable implementations of the forward/backward primitives.
+//! interchangeable implementations of the forward/backward primitives,
+//! plus lane-aligned packed weight panels for the hot repeated-forward
+//! and fused-training paths.
 //!
 //! # Why a seam
 //!
@@ -38,6 +40,30 @@
 //! `rust/tests/proptests.rs::prop_blocked_kernel_is_bitwise_identical_to_scalar`
 //! pins across random shapes and batch sizes. No fingerprint
 //! re-pinning was needed anywhere.
+//!
+//! # Packed weight panels
+//!
+//! The blocked kernels still read the row-major weight matrix with a
+//! `d_out`-strided panel start per input row (forward) or a
+//! `d_out`-strided element walk per lane (`dx`). [`PackedLayer`]
+//! pre-strides a layer once: the forward panels hold each
+//! [`FWD_LANES`]-column group contiguously per input row, and the `dx`
+//! panels hold each [`DX_LANES`]-row group contiguously per output
+//! column, so the hot inner loops stream both operands at unit stride.
+//! Packing is a pure permutation — every accumulator reads the *same*
+//! weight values in the *same* order as the blocked (and therefore the
+//! scalar) kernel, so packed results are bit-identical by the argument
+//! above. [`PackedWeights`] bundles a network's packed layers under the
+//! parameter digest they were built from; the fused cross-job trainer
+//! (`super::fused`) caches one per master so a round's greedy hints and
+//! its fused training GEMMs never re-stride the same weights twice.
+//!
+//! The backward split (`backward_dw_db` / `backward_dx_into`) exists
+//! for the same fused path: `dw` and `db` reduce over a *job's own*
+//! row range while `dx` propagates through the whole stacked batch, so
+//! the trainer needs the halves separately — and the blocked `dw`+`db`
+//! half folds the bias reduction into the weight-gradient traversal
+//! (one sweep over `dz` instead of two, no accumulator reordered).
 
 /// Which dense-kernel implementation the native engine dispatches to.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
@@ -85,18 +111,42 @@ pub(super) fn dense_forward(
     d_out: usize,
     relu: bool,
 ) -> Vec<f32> {
+    let mut y = Vec::new();
+    dense_forward_into(kernel, x, batch, d_in, w, bias, d_out, relu, &mut y);
+    y
+}
+
+/// [`dense_forward`] into a caller-owned buffer (cleared and resized,
+/// so a warm buffer is reused allocation-free) — the path the no-store
+/// batched forward and the fused trainer ping-pong through.
+#[allow(clippy::too_many_arguments)]
+pub(super) fn dense_forward_into(
+    kernel: DenseKernel,
+    x: &[f32],
+    batch: usize,
+    d_in: usize,
+    w: &[f32],
+    bias: &[f32],
+    d_out: usize,
+    relu: bool,
+    y: &mut Vec<f32>,
+) {
     debug_assert_eq!(x.len(), batch * d_in);
     debug_assert_eq!(w.len(), d_in * d_out);
     debug_assert_eq!(bias.len(), d_out);
+    y.clear();
+    y.resize(batch * d_out, 0.0);
     match kernel {
-        DenseKernel::Scalar => forward_scalar(x, batch, d_in, w, bias, d_out, relu),
-        DenseKernel::Blocked => forward_blocked(x, batch, d_in, w, bias, d_out, relu),
+        DenseKernel::Scalar => forward_scalar(x, batch, d_in, w, bias, d_out, relu, y),
+        DenseKernel::Blocked => forward_blocked(x, batch, d_in, w, bias, d_out, relu, y),
     }
 }
 
 /// Backward pass of one dense layer, dispatched. Returns
 /// `(dw, db, dx)`; the caller applies the previous layer's ReLU mask
-/// to `dx` before recursing.
+/// to `dx` before recursing. Assembled from the [`backward_dw_db`] and
+/// [`backward_dx_into`] halves, so the fused trainer's piecewise calls
+/// exercise exactly the code this whole-layer entry point does.
 pub(super) fn dense_backward(
     kernel: DenseKernel,
     x: &[f32],
@@ -106,17 +156,65 @@ pub(super) fn dense_backward(
     d_out: usize,
     dz: &[f32],
 ) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+    let (mut dw, mut db, mut dx) = (Vec::new(), Vec::new(), Vec::new());
+    backward_dw_db(kernel, x, batch, d_in, d_out, dz, &mut dw, &mut db);
+    backward_dx_into(kernel, w, batch, d_in, d_out, dz, &mut dx);
+    (dw, db, dx)
+}
+
+/// The weight/bias half of the backward pass:
+/// `dw[i, j] = Σ_b x[b, i] · dz[b, j]` and `db[j] = Σ_b dz[b, j]`,
+/// into caller-owned buffers (cleared and resized). The blocked
+/// implementation computes both in a single traversal of `dz`.
+#[allow(clippy::too_many_arguments)]
+pub(super) fn backward_dw_db(
+    kernel: DenseKernel,
+    x: &[f32],
+    batch: usize,
+    d_in: usize,
+    d_out: usize,
+    dz: &[f32],
+    dw: &mut Vec<f32>,
+    db: &mut Vec<f32>,
+) {
     debug_assert_eq!(x.len(), batch * d_in);
+    debug_assert_eq!(dz.len(), batch * d_out);
+    debug_assert!(d_in > 0);
+    dw.clear();
+    dw.resize(d_in * d_out, 0.0);
+    db.clear();
+    db.resize(d_out, 0.0);
+    match kernel {
+        DenseKernel::Scalar => dw_db_scalar(x, batch, d_in, d_out, dz, dw, db),
+        DenseKernel::Blocked => dw_db_fused_blocked(x, batch, d_in, d_out, dz, dw, db),
+    }
+}
+
+/// The input-gradient half of the backward pass:
+/// `dx[b, i] = Σ_j dz[b, j] · w[i, j]`, into a caller-owned buffer
+/// (cleared and resized).
+pub(super) fn backward_dx_into(
+    kernel: DenseKernel,
+    w: &[f32],
+    batch: usize,
+    d_in: usize,
+    d_out: usize,
+    dz: &[f32],
+    dx: &mut Vec<f32>,
+) {
     debug_assert_eq!(w.len(), d_in * d_out);
     debug_assert_eq!(dz.len(), batch * d_out);
+    dx.clear();
+    dx.resize(batch * d_in, 0.0);
     match kernel {
-        DenseKernel::Scalar => backward_scalar(x, batch, d_in, w, d_out, dz),
-        DenseKernel::Blocked => backward_blocked(x, batch, d_in, w, d_out, dz),
+        DenseKernel::Scalar => dx_scalar(w, batch, d_in, d_out, dz, dx),
+        DenseKernel::Blocked => dx_blocked(w, batch, d_in, d_out, dz, dx),
     }
 }
 
 // --- scalar reference kernels (moved verbatim from mlp.rs) ---
 
+#[allow(clippy::too_many_arguments)]
 fn forward_scalar(
     x: &[f32],
     batch: usize,
@@ -125,8 +223,8 @@ fn forward_scalar(
     bias: &[f32],
     d_out: usize,
     relu: bool,
-) -> Vec<f32> {
-    let mut y = vec![0.0f32; batch * d_out];
+    y: &mut [f32],
+) {
     for b in 0..batch {
         let row = &x[b * d_in..(b + 1) * d_in];
         let out = &mut y[b * d_out..(b + 1) * d_out];
@@ -134,7 +232,6 @@ fn forward_scalar(
             *slot = forward_column(row, w, bias, d_out, j, relu);
         }
     }
-    y
 }
 
 /// One output element of the forward pass: bias-seeded f64 accumulation
@@ -155,16 +252,16 @@ fn forward_column(row: &[f32], w: &[f32], bias: &[f32], d_out: usize, j: usize, 
     }
 }
 
-fn backward_scalar(
+fn dw_db_scalar(
     x: &[f32],
     batch: usize,
     d_in: usize,
-    w: &[f32],
     d_out: usize,
     dz: &[f32],
-) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+    dw: &mut [f32],
+    db: &mut [f32],
+) {
     // dw[i, j] = Σ_b x[b, i] · dz[b, j] — f64 partials in batch order.
-    let mut dw = vec![0.0f32; d_in * d_out];
     for i in 0..d_in {
         for j in 0..d_out {
             let mut acc = 0.0f64;
@@ -175,7 +272,6 @@ fn backward_scalar(
         }
     }
     // db[j] = Σ_b dz[b, j].
-    let mut db = vec![0.0f32; d_out];
     for (j, slot) in db.iter_mut().enumerate() {
         let mut acc = 0.0f64;
         for b in 0..batch {
@@ -183,14 +279,15 @@ fn backward_scalar(
         }
         *slot = acc as f32;
     }
+}
+
+fn dx_scalar(w: &[f32], batch: usize, d_in: usize, d_out: usize, dz: &[f32], dx: &mut [f32]) {
     // dx[b, i] = Σ_j dz[b, j] · w[i, j].
-    let mut dx = vec![0.0f32; batch * d_in];
     for b in 0..batch {
         for i in 0..d_in {
             dx[b * d_in + i] = dx_element(w, d_out, dz, b, i);
         }
     }
-    (dw, db, dx)
 }
 
 /// One `dx[b, i]` element: f64 accumulation over `j` in ascending
@@ -206,6 +303,7 @@ fn dx_element(w: &[f32], d_out: usize, dz: &[f32], b: usize, i: usize) -> f32 {
 
 // --- blocked / register-tiled kernels ---
 
+#[allow(clippy::too_many_arguments)]
 fn forward_blocked(
     x: &[f32],
     batch: usize,
@@ -214,8 +312,8 @@ fn forward_blocked(
     bias: &[f32],
     d_out: usize,
     relu: bool,
-) -> Vec<f32> {
-    let mut y = vec![0.0f32; batch * d_out];
+    y: &mut [f32],
+) {
     let tiles = d_out / FWD_LANES * FWD_LANES;
     for b in 0..batch {
         let row = &x[b * d_in..(b + 1) * d_in];
@@ -247,77 +345,79 @@ fn forward_blocked(
             *slot = forward_column(row, w, bias, d_out, j, relu);
         }
     }
-    y
 }
 
-fn backward_blocked(
+/// `dw` and `db` in one traversal of `dz`: per output-column panel the
+/// `db` lanes accumulate during the `i = 0` pass of the `dw` walk. The
+/// `db` accumulators receive the same addends in the same ascending-`b`
+/// order the separate loop used — fusing removes a full second sweep
+/// over `dz`; it reorders nothing within any single accumulator.
+fn dw_db_fused_blocked(
     x: &[f32],
     batch: usize,
     d_in: usize,
-    w: &[f32],
     d_out: usize,
     dz: &[f32],
-) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+    dw: &mut [f32],
+    db: &mut [f32],
+) {
     let col_tiles = d_out / FWD_LANES * FWD_LANES;
-
-    // dw[i, j] = Σ_b x[b, i] · dz[b, j]: per (i, j-lane) tile, each
-    // lane accumulates its own column in ascending-b order; `dz` rows
-    // are read contiguously.
-    let mut dw = vec![0.0f32; d_in * d_out];
-    for i in 0..d_in {
-        let mut j0 = 0;
-        while j0 < col_tiles {
+    let mut j0 = 0;
+    while j0 < col_tiles {
+        let mut dbacc = [0.0f64; FWD_LANES];
+        for i in 0..d_in {
             let mut acc = [0.0f64; FWD_LANES];
-            for b in 0..batch {
-                let xi = x[b * d_in + i] as f64;
-                let dzrow = &dz[b * d_out + j0..b * d_out + j0 + FWD_LANES];
-                for (a, &g) in acc.iter_mut().zip(dzrow) {
-                    *a += xi * g as f64;
+            if i == 0 {
+                for b in 0..batch {
+                    let xi = x[b * d_in] as f64;
+                    let dzrow = &dz[b * d_out + j0..b * d_out + j0 + FWD_LANES];
+                    for ((a, d), &g) in acc.iter_mut().zip(dbacc.iter_mut()).zip(dzrow) {
+                        let g = g as f64;
+                        *a += xi * g;
+                        *d += g;
+                    }
+                }
+            } else {
+                for b in 0..batch {
+                    let xi = x[b * d_in + i] as f64;
+                    let dzrow = &dz[b * d_out + j0..b * d_out + j0 + FWD_LANES];
+                    for (a, &g) in acc.iter_mut().zip(dzrow) {
+                        *a += xi * g as f64;
+                    }
                 }
             }
             for (k, &a) in acc.iter().enumerate() {
                 dw[i * d_out + j0 + k] = a as f32;
             }
-            j0 += FWD_LANES;
         }
-        for j in col_tiles..d_out {
-            let mut acc = 0.0f64;
-            for b in 0..batch {
-                acc += x[b * d_in + i] as f64 * dz[b * d_out + j] as f64;
-            }
-            dw[i * d_out + j] = acc as f32;
-        }
-    }
-
-    // db[j] = Σ_b dz[b, j]: j-lanes over contiguous dz rows, b order.
-    let mut db = vec![0.0f32; d_out];
-    let mut j0 = 0;
-    while j0 < col_tiles {
-        let mut acc = [0.0f64; FWD_LANES];
-        for b in 0..batch {
-            let dzrow = &dz[b * d_out + j0..b * d_out + j0 + FWD_LANES];
-            for (a, &g) in acc.iter_mut().zip(dzrow) {
-                *a += g as f64;
-            }
-        }
-        for (k, &a) in acc.iter().enumerate() {
+        for (k, &a) in dbacc.iter().enumerate() {
             db[j0 + k] = a as f32;
         }
         j0 += FWD_LANES;
     }
-    for (j, slot) in db.iter_mut().enumerate().skip(col_tiles) {
-        let mut acc = 0.0f64;
-        for b in 0..batch {
-            acc += dz[b * d_out + j] as f64;
+    // Remainder columns: scalar accumulators, same single-sweep fusion.
+    for j in col_tiles..d_out {
+        let mut dbacc = 0.0f64;
+        for i in 0..d_in {
+            let mut acc = 0.0f64;
+            for b in 0..batch {
+                let g = dz[b * d_out + j] as f64;
+                acc += x[b * d_in + i] as f64 * g;
+                if i == 0 {
+                    dbacc += g;
+                }
+            }
+            dw[i * d_out + j] = acc as f32;
         }
-        *slot = acc as f32;
+        db[j] = dbacc as f32;
     }
+}
 
+fn dx_blocked(w: &[f32], batch: usize, d_in: usize, d_out: usize, dz: &[f32], dx: &mut [f32]) {
     // dx[b, i] = Σ_j dz[b, j] · w[i, j]: i-lanes share each dz load
     // while every lane streams its own contiguous weight row; per
     // (b, i) the adds run in ascending-j order.
     let row_tiles = d_in / DX_LANES * DX_LANES;
-    let mut dx = vec![0.0f32; batch * d_in];
     for b in 0..batch {
         let dzrow = &dz[b * d_out..(b + 1) * d_out];
         let mut i0 = 0;
@@ -338,8 +438,209 @@ fn backward_blocked(
             dx[b * d_in + i] = dx_element(w, d_out, dz, b, i);
         }
     }
+}
 
-    (dw, db, dx)
+// --- packed weight panels ---
+
+/// One dense layer's weights re-strided for the blocked kernels: the
+/// forward panels hold each [`FWD_LANES`]-column group contiguously per
+/// input row; the `dx` panels hold each [`DX_LANES`]-row group
+/// contiguously per output column. Values and per-accumulator read
+/// order are untouched — packing is a pure permutation of storage, so
+/// packed kernels are bit-identical to the blocked (and scalar) ones.
+#[derive(Debug, Clone)]
+pub(super) struct PackedLayer {
+    d_in: usize,
+    d_out: usize,
+    /// Forward layout: full panels first (panel `p` starts at
+    /// `p · d_in · FWD_LANES`; element `i · FWD_LANES + k` is
+    /// `w[i · d_out + p · FWD_LANES + k]`), then the remainder columns
+    /// packed at width `d_out % FWD_LANES` in the same row walk.
+    fwd: Vec<f32>,
+    /// `dx` layout: full panels first (panel `p` starts at
+    /// `p · d_out · DX_LANES`; element `j · DX_LANES + k` is
+    /// `w[(p · DX_LANES + k) · d_out + j]`), then the remainder rows
+    /// verbatim row-major (the scalar fallback reads them as-is).
+    dx: Vec<f32>,
+}
+
+impl PackedLayer {
+    pub(super) fn pack(w: &[f32], d_in: usize, d_out: usize) -> PackedLayer {
+        debug_assert_eq!(w.len(), d_in * d_out);
+        let col_tiles = d_out / FWD_LANES * FWD_LANES;
+        let mut fwd = Vec::with_capacity(d_in * d_out);
+        let mut j0 = 0;
+        while j0 < col_tiles {
+            for i in 0..d_in {
+                fwd.extend_from_slice(&w[i * d_out + j0..i * d_out + j0 + FWD_LANES]);
+            }
+            j0 += FWD_LANES;
+        }
+        if col_tiles < d_out {
+            for i in 0..d_in {
+                fwd.extend_from_slice(&w[i * d_out + col_tiles..(i + 1) * d_out]);
+            }
+        }
+        let row_tiles = d_in / DX_LANES * DX_LANES;
+        let mut dx = Vec::with_capacity(d_in * d_out);
+        let mut i0 = 0;
+        while i0 < row_tiles {
+            for j in 0..d_out {
+                for k in 0..DX_LANES {
+                    dx.push(w[(i0 + k) * d_out + j]);
+                }
+            }
+            i0 += DX_LANES;
+        }
+        for i in row_tiles..d_in {
+            dx.extend_from_slice(&w[i * d_out..(i + 1) * d_out]);
+        }
+        PackedLayer { d_in, d_out, fwd, dx }
+    }
+
+    pub(super) fn d_in(&self) -> usize {
+        self.d_in
+    }
+
+    pub(super) fn d_out(&self) -> usize {
+        self.d_out
+    }
+
+    fn bytes(&self) -> usize {
+        (self.fwd.capacity() + self.dx.capacity()) * std::mem::size_of::<f32>()
+    }
+
+    /// Forward pass over the packed panels into a caller-owned buffer.
+    /// Per output element: the blocked kernel's exact addend sequence
+    /// (bias seed, ascending-`i` f64 adds, one `as f32` cast) — only
+    /// the weight *addresses* changed, to unit stride.
+    pub(super) fn forward_into(
+        &self,
+        x: &[f32],
+        batch: usize,
+        bias: &[f32],
+        relu: bool,
+        y: &mut Vec<f32>,
+    ) {
+        let (d_in, d_out) = (self.d_in, self.d_out);
+        debug_assert_eq!(x.len(), batch * d_in);
+        debug_assert_eq!(bias.len(), d_out);
+        y.clear();
+        y.resize(batch * d_out, 0.0);
+        let col_tiles = d_out / FWD_LANES * FWD_LANES;
+        let rem = d_out - col_tiles;
+        for b in 0..batch {
+            let row = &x[b * d_in..(b + 1) * d_in];
+            let out = &mut y[b * d_out..(b + 1) * d_out];
+            let mut j0 = 0;
+            while j0 < col_tiles {
+                let panel = &self.fwd[j0 * d_in..(j0 + FWD_LANES) * d_in];
+                let mut acc = [0.0f64; FWD_LANES];
+                for (k, a) in acc.iter_mut().enumerate() {
+                    *a = bias[j0 + k] as f64;
+                }
+                for (i, &xi) in row.iter().enumerate() {
+                    let xi = xi as f64;
+                    let wrow = &panel[i * FWD_LANES..i * FWD_LANES + FWD_LANES];
+                    for (a, &wk) in acc.iter_mut().zip(wrow) {
+                        *a += xi * wk as f64;
+                    }
+                }
+                for (k, &a) in acc.iter().enumerate() {
+                    let v = a as f32;
+                    out[j0 + k] = if relu { v.max(0.0) } else { v };
+                }
+                j0 += FWD_LANES;
+            }
+            if rem > 0 {
+                let tail = &self.fwd[col_tiles * d_in..];
+                for k in 0..rem {
+                    // forward_column's addend sequence for column
+                    // col_tiles + k, read from the packed tail.
+                    let mut acc = bias[col_tiles + k] as f64;
+                    for (i, &xi) in row.iter().enumerate() {
+                        acc += xi as f64 * tail[i * rem + k] as f64;
+                    }
+                    let v = acc as f32;
+                    out[col_tiles + k] = if relu { v.max(0.0) } else { v };
+                }
+            }
+        }
+    }
+
+    /// `dx[b, i] = Σ_j dz[b, j] · w[i, j]` over the packed row panels
+    /// into a caller-owned buffer; per element, the blocked kernel's
+    /// ascending-`j` addend sequence.
+    pub(super) fn dx_into(&self, dz: &[f32], batch: usize, dx: &mut Vec<f32>) {
+        let (d_in, d_out) = (self.d_in, self.d_out);
+        debug_assert_eq!(dz.len(), batch * d_out);
+        dx.clear();
+        dx.resize(batch * d_in, 0.0);
+        let row_tiles = d_in / DX_LANES * DX_LANES;
+        for b in 0..batch {
+            let dzrow = &dz[b * d_out..(b + 1) * d_out];
+            let out = &mut dx[b * d_in..(b + 1) * d_in];
+            let mut i0 = 0;
+            while i0 < row_tiles {
+                let panel = &self.dx[i0 * d_out..(i0 + DX_LANES) * d_out];
+                let mut acc = [0.0f64; DX_LANES];
+                for (j, &g) in dzrow.iter().enumerate() {
+                    let g = g as f64;
+                    let lanes = &panel[j * DX_LANES..j * DX_LANES + DX_LANES];
+                    for (a, &wk) in acc.iter_mut().zip(lanes) {
+                        *a += g * wk as f64;
+                    }
+                }
+                for (k, &a) in acc.iter().enumerate() {
+                    out[i0 + k] = a as f32;
+                }
+                i0 += DX_LANES;
+            }
+            if row_tiles < d_in {
+                let tail = &self.dx[row_tiles * d_out..];
+                for i in row_tiles..d_in {
+                    let wrow = &tail[(i - row_tiles) * d_out..(i - row_tiles + 1) * d_out];
+                    let mut acc = 0.0f64;
+                    for (j, &g) in dzrow.iter().enumerate() {
+                        acc += g as f64 * wrow[j] as f64;
+                    }
+                    out[i] = acc as f32;
+                }
+            }
+        }
+    }
+}
+
+/// A whole network's weights packed for the blocked kernels, tagged
+/// with the [`crate::runtime::QParams::digest`] they were built from.
+/// The fused trainer keeps the most recent pack and re-strides only
+/// when the digest changes — within a shared-campaign round, the
+/// batched greedy hints and every fused training GEMM run over one
+/// master, so they share one pack.
+#[derive(Debug, Clone)]
+pub struct PackedWeights {
+    digest: u64,
+    layers: Vec<PackedLayer>,
+}
+
+impl PackedWeights {
+    pub(super) fn from_layers(digest: u64, layers: Vec<PackedLayer>) -> PackedWeights {
+        PackedWeights { digest, layers }
+    }
+
+    /// The parameter digest this pack was built from.
+    pub fn digest(&self) -> u64 {
+        self.digest
+    }
+
+    pub(super) fn layers(&self) -> &[PackedLayer] {
+        &self.layers
+    }
+
+    /// Bytes held by the packed panels (scratch accounting).
+    pub fn bytes(&self) -> usize {
+        self.layers.iter().map(PackedLayer::bytes).sum()
+    }
 }
 
 #[cfg(test)]
@@ -415,6 +716,61 @@ mod tests {
     }
 
     #[test]
+    fn packed_forward_and_dx_are_bitwise_scalar_across_shapes() {
+        // Same shape sweep as the blocked kernels: packing must be a
+        // pure permutation of storage, never of arithmetic.
+        let mut rng = Rng::new(19);
+        for &(d_in, d_out) in
+            &[(1, 1), (3, 2), (2, 8), (5, 9), (7, 13), (18, 64), (64, 13), (4, 16)]
+        {
+            for batch in [1, 2, 5, 9] {
+                let x = random_vec(&mut rng, batch * d_in);
+                let w = random_vec(&mut rng, d_in * d_out);
+                let bias = random_vec(&mut rng, d_out);
+                let dz = random_vec(&mut rng, batch * d_out);
+                let pl = PackedLayer::pack(&w, d_in, d_out);
+                for relu in [false, true] {
+                    let want =
+                        dense_forward(DenseKernel::Scalar, &x, batch, d_in, &w, &bias, d_out, relu);
+                    let mut got = Vec::new();
+                    pl.forward_into(&x, batch, &bias, relu, &mut got);
+                    assert_eq!(
+                        bits(&want),
+                        bits(&got),
+                        "fwd {d_in}x{d_out} batch {batch} relu {relu}"
+                    );
+                }
+                let (_, _, dx_want) =
+                    dense_backward(DenseKernel::Scalar, &x, batch, d_in, &w, d_out, &dz);
+                let mut dx_got = Vec::new();
+                pl.dx_into(&dz, batch, &mut dx_got);
+                assert_eq!(bits(&dx_want), bits(&dx_got), "dx {d_in}x{d_out} batch {batch}");
+            }
+        }
+    }
+
+    #[test]
+    fn backward_halves_reuse_warm_buffers() {
+        // The _into entry points must fully overwrite whatever a warm
+        // buffer held (the fused trainer reuses them across rounds).
+        let mut rng = Rng::new(23);
+        let (d_in, d_out, batch) = (5, 9, 3);
+        let x = random_vec(&mut rng, batch * d_in);
+        let w = random_vec(&mut rng, d_in * d_out);
+        let dz = random_vec(&mut rng, batch * d_out);
+        let (dw_want, db_want, dx_want) =
+            dense_backward(DenseKernel::Blocked, &x, batch, d_in, &w, d_out, &dz);
+        let mut dw = vec![7.0f32; 99];
+        let mut db = vec![7.0f32; 1];
+        let mut dx = vec![7.0f32; 2];
+        backward_dw_db(DenseKernel::Blocked, &x, batch, d_in, d_out, &dz, &mut dw, &mut db);
+        backward_dx_into(DenseKernel::Blocked, &w, batch, d_in, d_out, &dz, &mut dx);
+        assert_eq!(bits(&dw_want), bits(&dw));
+        assert_eq!(bits(&db_want), bits(&db));
+        assert_eq!(bits(&dx_want), bits(&dx));
+    }
+
+    #[test]
     fn blocked_forward_matches_hand_computation_with_remainder() {
         // d_out = 2 < FWD_LANES: the whole output is remainder columns,
         // which must be the scalar column computation exactly.
@@ -429,6 +785,17 @@ mod tests {
             false,
         );
         assert_eq!(y, vec![7.5, 9.5]);
+    }
+
+    #[test]
+    fn packed_weights_track_digest_and_bytes() {
+        let w = vec![1.0f32; 6];
+        let pw = PackedWeights::from_layers(0xfeed, vec![PackedLayer::pack(&w, 2, 3)]);
+        assert_eq!(pw.digest(), 0xfeed);
+        assert_eq!(pw.layers().len(), 1);
+        assert!(pw.bytes() >= 2 * 6 * std::mem::size_of::<f32>());
+        assert_eq!(pw.layers()[0].d_in(), 2);
+        assert_eq!(pw.layers()[0].d_out(), 3);
     }
 
     #[test]

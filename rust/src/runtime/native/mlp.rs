@@ -52,6 +52,24 @@ pub(super) fn dense_forward(
     kernels::dense_forward(kernel, x, batch, d_in, w, bias, d_out, relu)
 }
 
+/// [`dense_forward`] into a caller-owned buffer (cleared and resized) —
+/// the allocation-free layer step the no-store batched forward
+/// ping-pongs through.
+#[allow(clippy::too_many_arguments)]
+pub(super) fn dense_forward_into(
+    kernel: DenseKernel,
+    x: &[f32],
+    batch: usize,
+    d_in: usize,
+    w: &[f32],
+    bias: &[f32],
+    d_out: usize,
+    relu: bool,
+    y: &mut Vec<f32>,
+) {
+    kernels::dense_forward_into(kernel, x, batch, d_in, w, bias, d_out, relu, y);
+}
+
 /// Backward pass of one dense layer given `dz = dL/d(pre-activation
 /// output)` (`[batch, d_out]`) and the layer's input activations `x`
 /// (`[batch, d_in]`), evaluated by `kernel`. Returns `(dw, db, dx)`;

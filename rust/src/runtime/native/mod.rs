@@ -33,11 +33,13 @@
 //! consumes.
 
 mod adam;
+mod fused;
 mod kernels;
 mod mlp;
 
 pub use adam::{adam_step, ADAM_BETA1, ADAM_BETA2, ADAM_EPS};
-pub use kernels::{DenseKernel, DX_LANES, FWD_LANES};
+pub use fused::{FusedGrads, FusedTrainer};
+pub use kernels::{DenseKernel, PackedWeights, DX_LANES, FWD_LANES};
 
 use anyhow::{Context, Result};
 
@@ -178,6 +180,10 @@ impl NativeQNet {
     /// ([`crate::coordinator::Agent::q_values_batch`] and the campaign
     /// round's shared greedy selection) bottoms out in. Row `r` of the
     /// result is bit-identical to `q_values(&states[r * state_dim..])`.
+    ///
+    /// Selection-only, so no intermediate activation survives the call:
+    /// layers ping-pong between two buffers instead of materializing
+    /// the full `forward_acts` stack (which only training needs).
     pub fn forward_batch(&self, states: &[f32], batch: usize) -> Result<Vec<f32>> {
         anyhow::ensure!(
             batch > 0 && states.len() == batch * self.state_dim,
@@ -186,7 +192,17 @@ impl NativeQNet {
             batch,
             self.state_dim
         );
-        self.forward_acts(states, batch).pop().context("forward produced no activations")
+        let dims = self.dims();
+        let mut act = states.to_vec();
+        let mut hold = Vec::new();
+        for (l, &(d_in, d_out)) in dims.iter().enumerate() {
+            let relu = l + 1 < dims.len();
+            let w = &self.params.tensors[2 * l].0;
+            let b = &self.params.tensors[2 * l + 1].0;
+            mlp::dense_forward_into(self.kernel, &act, batch, d_in, w, b, d_out, relu, &mut hold);
+            std::mem::swap(&mut act, &mut hold);
+        }
+        Ok(act)
     }
 
     /// Q(s, ·) for a `[batch, state_dim]` flat slice of states.
@@ -239,6 +255,24 @@ impl NativeQNet {
         adam_step(&mut self.params, &mut self.opt, &grads, lr)?;
         self.losses.push(loss);
         Ok((TrainOutcome { loss, td_errors: Some(td_errors) }, grads))
+    }
+
+    /// Apply externally computed gradients exactly as [`train_step`]
+    /// would apply its own: finiteness gate, one [`adam_step`], record
+    /// the loss. The fused-trainer completion path — a worker whose
+    /// round gradients were produced by
+    /// [`FusedTrainer::train_grads`] finishes its update here, and
+    /// because the sequence below mirrors `train_step` line for line
+    /// after the gradient computation, `train_step(batch, …)` and
+    /// `train_grads(batch, …) → apply_train(…)` leave bit-identical
+    /// network state.
+    ///
+    /// [`train_step`]: NativeQNet::train_step
+    pub fn apply_train(&mut self, grads: &QParams, loss: f32, lr: f32) -> Result<()> {
+        anyhow::ensure!(loss.is_finite(), "train step produced non-finite loss {loss}");
+        adam_step(&mut self.params, &mut self.opt, grads, lr)?;
+        self.losses.push(loss);
+        Ok(())
     }
 
     /// Shared loss/gradient core. `want_grads = false` skips the
@@ -340,11 +374,13 @@ pub fn q_values_batch_of(
         state_dim
     );
     let mut act = states.to_vec();
+    let mut hold = Vec::new();
     for (l, &(d_in, d_out)) in dims.iter().enumerate() {
         let relu = l + 1 < dims.len();
         let w = &params.tensors[2 * l].0;
         let b = &params.tensors[2 * l + 1].0;
-        act = mlp::dense_forward(kernel, &act, batch, d_in, w, b, d_out, relu);
+        mlp::dense_forward_into(kernel, &act, batch, d_in, w, b, d_out, relu, &mut hold);
+        std::mem::swap(&mut act, &mut hold);
     }
     Ok(act)
 }
@@ -505,6 +541,29 @@ mod tests {
         let b: Vec<u32> = via_params.iter().map(|x| x.to_bits()).collect();
         assert_eq!(a, b);
         assert!(q_values_batch_of(&net.params, &states, batch + 1, net.kernel()).is_err());
+    }
+
+    #[test]
+    fn apply_train_replays_train_step_bitwise() {
+        // train_step ≡ train_grads → apply_train, including optimizer
+        // moments and the loss ring.
+        let mut rng = Rng::new(31);
+        let mut stepped = NativeQNet::new(4, &[6], 3, 2, &mut rng);
+        let mut applied = stepped.clone();
+        let batch = TrainBatch {
+            states: vec![0.2, -0.4, 0.6, 0.1, -0.3, 0.5, 0.7, -0.2],
+            actions_onehot: [one_hot(1, 3), one_hot(2, 3)].concat(),
+            rewards: vec![1.0, -0.5],
+            next_states: vec![0.1, 0.2, -0.1, 0.4, 0.0, -0.6, 0.3, 0.2],
+            done: vec![0.0, 1.0],
+        };
+        let (outcome, grads) = stepped.train_step(&batch, 1e-3, 0.9).unwrap();
+        applied.apply_train(&grads, outcome.loss, 1e-3).unwrap();
+        assert_eq!(stepped.params.digest(), applied.params.digest());
+        assert_eq!(stepped.opt.m.digest(), applied.opt.m.digest());
+        assert_eq!(stepped.opt.v.digest(), applied.opt.v.digest());
+        assert_eq!(stepped.losses.len(), applied.losses.len());
+        assert!(applied.apply_train(&grads, f32::NAN, 1e-3).is_err(), "non-finite loss gated");
     }
 
     #[test]

@@ -295,6 +295,21 @@ impl QNet {
         }
     }
 
+    /// Apply externally computed gradients exactly as [`QNet::train`]
+    /// would apply its own (native engine only — the fused trainer's
+    /// completion path). `train(batch, …)` and
+    /// "compute grads elsewhere → `apply_train`" leave bit-identical
+    /// engine state; see [`NativeQNet::apply_train`].
+    pub fn apply_train(&mut self, grads: &QParams, loss: f32, lr: f32) -> Result<()> {
+        match &mut self.engine {
+            QBackend::Native(n) => n.apply_train(grads, loss, lr),
+            QBackend::Aot(_) => anyhow::bail!(
+                "externally computed gradients can only be applied to the native engine; \
+                 the fused AOT artifact computes and applies its own"
+            ),
+        }
+    }
+
     /// Fixed-Q-targets ablation step (AOT engine only).
     pub fn train_with_target(&mut self, batch: &TrainBatch, lr: f32, gamma: f32) -> Result<f32> {
         match &mut self.engine {

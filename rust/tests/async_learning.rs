@@ -42,7 +42,7 @@ fn small_grid(seed: u64) -> Vec<CampaignJob> {
 }
 
 fn engine(base: TuningConfig, workers: usize, straggle: Option<StraggleSpec>) -> CampaignEngine {
-    CampaignEngine::new(CampaignConfig { base, workers, straggle })
+    CampaignEngine::new(CampaignConfig { base, workers, straggle, fuse_training: true })
 }
 
 fn best_improvement(report: &CampaignReport) -> f64 {
@@ -176,6 +176,55 @@ fn eight_worker_async_campaign_with_straggler_converges_near_sync() {
         async_best >= sync_best - 0.05,
         "async best improvement {async_best:.4} fell more than 5pp below sync {sync_best:.4}"
     );
+}
+
+#[test]
+fn fuse_toggle_never_perturbs_async_schedules() {
+    // The fused cross-job trainer exists only in the synchronous round
+    // body; async workers pull per-merge masters at their own pace, so
+    // no two jobs' minibatches are functions of one shared parameter
+    // set and `--no-fuse-training` must be inert. `Async { staleness:
+    // 0 }` routes through the sync loop — where fusion IS live for DQN
+    // agents — so the degenerate schedule pins bitwise identity across
+    // the toggle; a real window only has to finish with its full merge
+    // accounting either way (async fingerprints are recorded, not
+    // pinned).
+    let jobs = job_grid(
+        BackendId::Coarrays,
+        &[Machine::cheyenne()],
+        &[WorkloadKind::LatticeBoltzmann, WorkloadKind::SkeletonPic],
+        &[4, 8],
+        AgentKind::Dqn,
+        17,
+    );
+    let dqn_cfg = |mode| TuningConfig {
+        agent: AgentKind::Dqn,
+        runs: 6,
+        noise: 0.01,
+        seed: 17,
+        shared: Some(SharedLearning { sync_every: 2, mode, ..SharedLearning::default() }),
+        ..TuningConfig::default()
+    };
+    let run = |mode, fuse_training| {
+        CampaignEngine::new(CampaignConfig {
+            base: dqn_cfg(mode),
+            workers: 2,
+            straggle: None,
+            fuse_training,
+        })
+        .run_shared(&jobs)
+        .unwrap()
+    };
+
+    let on = run(SyncMode::Async { staleness: 0 }, true);
+    let off = run(SyncMode::Async { staleness: 0 }, false);
+    assert_eq!(on.fingerprint(), off.fingerprint());
+    assert_eq!(on.hub, off.hub, "hub summaries (incl. state digest) must match");
+
+    for fuse_training in [true, false] {
+        let hub = run(SyncMode::Async { staleness: 4 }, fuse_training).hub.unwrap();
+        assert_eq!(hub.generations, jobs.len() * 3, "ceil(6/2) segments per job, each merged");
+    }
 }
 
 #[test]

@@ -31,7 +31,12 @@ fn base_cfg(runs: usize) -> TuningConfig {
 }
 
 fn engine(runs: usize, workers: usize) -> CampaignEngine {
-    CampaignEngine::new(CampaignConfig { base: base_cfg(runs), workers, straggle: None })
+    CampaignEngine::new(CampaignConfig {
+        base: base_cfg(runs),
+        workers,
+        straggle: None,
+        fuse_training: true,
+    })
 }
 
 fn small_grid() -> Vec<CampaignJob> {
@@ -131,10 +136,14 @@ fn one_pool_spans_both_testbeds() {
     );
     for (machine, r) in machines.iter().zip(&report.results) {
         let solo_cfg = TuningConfig { machine: machine.clone(), ..base_cfg(3) };
-        let solo =
-            CampaignEngine::new(CampaignConfig { base: solo_cfg, workers: 1, straggle: None })
-            .run(&[r.job])
-            .unwrap();
+        let solo = CampaignEngine::new(CampaignConfig {
+            base: solo_cfg,
+            workers: 1,
+            straggle: None,
+            fuse_training: true,
+        })
+        .run(&[r.job])
+        .unwrap();
         assert_eq!(
             solo.results[0].outcome.best_us.to_bits(),
             r.outcome.best_us.to_bits(),
@@ -172,6 +181,7 @@ fn one_independent_pool_spans_backends() {
             base: TuningConfig { backend: r.job.backend, ..base_cfg(3) },
             workers: 1,
             straggle: None,
+            fuse_training: true,
         })
         .run(&[r.job])
         .unwrap();
@@ -247,6 +257,7 @@ fn evaluate_specs_spans_machines_and_matches_per_machine_engines() {
             base: TuningConfig { machine: spec.machine.clone(), ..base_cfg(4) },
             workers: 1,
             straggle: None,
+            fuse_training: true,
         });
         let s = solo.evaluate(kind, 4, &CvarSet::vanilla(), 3).unwrap();
         assert_eq!(s.to_bits(), mean.to_bits());
@@ -300,6 +311,7 @@ fn shared_engine(runs: usize, workers: usize, merge: MergeMode, agent: AgentKind
         },
         workers,
         straggle: None,
+        fuse_training: true,
     })
 }
 

@@ -9,6 +9,18 @@
 
 use std::path::Path;
 
+/// The fused cross-job trainer must stay on detlint's restricted
+/// list: its bitwise-identity claim (docs/native_dqn.md) rests on the
+/// same R1/R2/R3 discipline as the kernels, and a silent declassify
+/// would let an f32 reduction or clock read land there unflagged.
+#[test]
+fn fused_trainer_stays_restricted() {
+    let probe = "let mut acc = 0.0f32;\nacc += x as f32;\nlet t = Instant::now();\n";
+    let diags = detlint::scan_file("rust/src/runtime/native/fused.rs", probe);
+    let rules: Vec<&str> = diags.iter().map(|d| d.rule.id()).collect();
+    assert_eq!(rules, ["R2", "R3"], "fused.rs no longer classified restricted: {diags:?}");
+}
+
 #[test]
 fn repository_is_detlint_clean() {
     let root = Path::new(env!("CARGO_MANIFEST_DIR"));

@@ -215,6 +215,15 @@ fn dqn_grid(backend: BackendId) -> Vec<CampaignJob> {
 }
 
 fn dqn_engine(backend: BackendId, merge: MergeMode, workers: usize) -> CampaignEngine {
+    dqn_engine_fused(backend, merge, workers, true)
+}
+
+fn dqn_engine_fused(
+    backend: BackendId,
+    merge: MergeMode,
+    workers: usize,
+    fuse_training: bool,
+) -> CampaignEngine {
     let base = TuningConfig {
         backend,
         agent: AgentKind::Dqn,
@@ -224,7 +233,7 @@ fn dqn_engine(backend: BackendId, merge: MergeMode, workers: usize) -> CampaignE
         shared: Some(SharedLearning { sync_every: 2, merge, ..SharedLearning::default() }),
         ..TuningConfig::default()
     };
-    CampaignEngine::new(CampaignConfig { base, workers, straggle: None })
+    CampaignEngine::new(CampaignConfig { base, workers, straggle: None, fuse_training })
 }
 
 #[test]
@@ -254,6 +263,28 @@ fn native_dqn_shared_campaigns_identical_at_1_2_and_4_workers_in_both_merge_mode
 }
 
 #[test]
+fn fused_and_sequential_rounds_produce_identical_campaigns() {
+    // The fused cross-job trainer's whole legitimacy rests on this:
+    // `--no-fuse-training` must be a pure throughput knob. Per merge
+    // mode and worker count, a campaign driven through the fused round
+    // body (one stacked GEMM per layer over every live job) must be
+    // byte-identical — trajectories, hub digests, replay contents — to
+    // the sequential per-job rounds it replaced.
+    let jobs = dqn_grid(BackendId::Coarrays);
+    for merge in MergeMode::ALL {
+        let fused = dqn_engine_fused(BackendId::Coarrays, merge, 2, true)
+            .run_shared(&jobs)
+            .unwrap();
+        for workers in [1usize, 2] {
+            let sequential = dqn_engine_fused(BackendId::Coarrays, merge, workers, false)
+                .run_shared(&jobs)
+                .unwrap();
+            assert_reports_bit_identical(&fused, &sequential);
+        }
+    }
+}
+
+#[test]
 fn grads_merge_rejects_agents_without_gradients() {
     // The tabular agent (and the fused AOT artifact) cannot export raw
     // gradients; both the controller and the campaign driver must say
@@ -278,7 +309,12 @@ fn grads_merge_rejects_agents_without_gradients() {
         AgentKind::Tabular,
         1,
     );
-    let engine = CampaignEngine::new(CampaignConfig { base: cfg, workers: 1, straggle: None });
+    let engine = CampaignEngine::new(CampaignConfig {
+        base: cfg,
+        workers: 1,
+        straggle: None,
+        fuse_training: true,
+    });
     assert!(engine.run_shared(&jobs).is_err());
 }
 

@@ -15,7 +15,7 @@ use aituning::mpi_t::{
     CvarDescriptor, CvarDomain, CvarId, CvarSet, PvarId, PvarStats,
 };
 use aituning::prop_assert;
-use aituning::runtime::{q_values_batch_of, DenseKernel, NativeQNet, TrainBatch};
+use aituning::runtime::{q_values_batch_of, DenseKernel, FusedTrainer, NativeQNet, TrainBatch};
 use aituning::simmpi::{Engine, Machine, Op, SimConfig};
 use aituning::util::prop::forall;
 use aituning::util::rng::Rng;
@@ -575,6 +575,60 @@ fn prop_blocked_kernel_is_bitwise_identical_to_scalar() {
         prop_assert!(
             tds.iter().zip(&tdb).all(|(a, b)| a.to_bits() == b.to_bits()),
             "TD errors diverged for {shape}"
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_fused_cross_job_grads_match_sequential() {
+    // The round-level fused trainer stacks every job's minibatch into
+    // one tall GEMM per layer, but partitions every reduction by the
+    // same index ranges the sequential path uses (per-row forward
+    // reductions, per-job loss/dw/db ranges), so it must agree with a
+    // loop of per-job `train_grads` calls to the last bit — gradients,
+    // losses and TD errors — across arbitrary layer shapes, job counts
+    // and per-job batch sizes. The packed no-store forward must agree
+    // with the raw-params evaluator the greedy hints used to run on.
+    forall("fused cross-job bitwise identity", 48, |rng| {
+        let d_in = 1 + rng.below(16) as usize;
+        let n_actions = 1 + rng.below(10) as usize;
+        let hidden: Vec<usize> =
+            (0..rng.below(3)).map(|_| 1 + rng.below(24) as usize).collect();
+        let jobs = 1 + rng.below(5) as usize;
+        let seed = rng.next_u64();
+        let net = NativeQNet::new(d_in, &hidden, n_actions, 8, &mut Rng::new(seed));
+        let shape = format!("{d_in}->{hidden:?}->{n_actions} jobs {jobs}");
+
+        let batches: Vec<TrainBatch> = (0..jobs)
+            .map(|_| random_train_batch(rng, 1 + rng.below(8) as usize, d_in, n_actions))
+            .collect();
+        let refs: Vec<&TrainBatch> = batches.iter().collect();
+        let mut trainer = FusedTrainer::new(DenseKernel::Blocked);
+        let fused = trainer.train_grads(&net.params, &refs, 0.9).map_err(|e| e.to_string())?;
+        prop_assert!(fused.len() == jobs, "fused returned {} jobs for {shape}", fused.len());
+        for (k, (fg, tb)) in fused.iter().zip(&batches).enumerate() {
+            let (gs, ls, tds) = net.train_grads(tb, 0.9).map_err(|e| e.to_string())?;
+            prop_assert!(
+                fg.grads.digest() == gs.digest(),
+                "job {k} gradients diverged for {shape}"
+            );
+            prop_assert!(fg.loss.to_bits() == ls.to_bits(), "job {k} loss diverged for {shape}");
+            prop_assert!(
+                fg.td_errors.iter().zip(&tds).all(|(a, b)| a.to_bits() == b.to_bits()),
+                "job {k} TD errors diverged for {shape}"
+            );
+        }
+
+        let batch = 1 + rng.below(8) as usize;
+        let states: Vec<f32> =
+            (0..batch * d_in).map(|_| rng.range_f64(-2.0, 2.0) as f32).collect();
+        let got = trainer.forward(&net.params, &states, batch).map_err(|e| e.to_string())?;
+        let want = q_values_batch_of(&net.params, &states, batch, DenseKernel::Blocked)
+            .map_err(|e| e.to_string())?;
+        prop_assert!(
+            got.iter().zip(&want).all(|(a, b)| a.to_bits() == b.to_bits()),
+            "packed forward diverged for {shape} batch {batch}"
         );
         Ok(())
     });

@@ -32,7 +32,7 @@ fn shared_engine_with_policy(
     replay_policy: ReplayPolicyKind,
 ) -> CampaignEngine {
     let base = TuningConfig { replay_policy, ..base_cfg(runs, sync_every) };
-    CampaignEngine::new(CampaignConfig { base, workers, straggle: None })
+    CampaignEngine::new(CampaignConfig { base, workers, straggle: None, fuse_training: true })
 }
 
 fn small_grid() -> Vec<CampaignJob> {
@@ -156,7 +156,7 @@ fn stratified_hub_keeps_every_workload_resident_after_eviction() {
     let jobs = small_grid();
     let run_with = |policy, workers| {
         let base = TuningConfig { replay_capacity: 4, replay_policy: policy, ..base_cfg(8, 2) };
-        CampaignEngine::new(CampaignConfig { base, workers, straggle: None })
+        CampaignEngine::new(CampaignConfig { base, workers, straggle: None, fuse_training: true })
             .run_shared(&jobs)
             .unwrap()
     };
@@ -215,6 +215,7 @@ fn shared_mode_reaches_independent_best_on_prk_stencil() {
         base: TuningConfig { seed: 21, ..base_cfg(12, 3) },
         workers: 2,
         straggle: None,
+        fuse_training: true,
     });
     let independent = engine.run(&jobs).unwrap();
     let shared = engine.run_shared(&jobs).unwrap();
@@ -269,7 +270,12 @@ fn per_backend_campaign_fingerprints_identical_at_1_2_and_4_workers() {
         };
         let run = |workers: usize| {
             let base = backend_cfg(backend, 8, 2);
-            CampaignEngine::new(CampaignConfig { base, workers, straggle: None })
+            CampaignEngine::new(CampaignConfig {
+                base,
+                workers,
+                straggle: None,
+                fuse_training: true,
+            })
         };
         // Independent path.
         let i1 = run(1).run(&jobs).unwrap();
@@ -295,6 +301,7 @@ fn shared_campaign_rejects_mixed_backends() {
         base: backend_cfg(BackendId::Coarrays, 4, 2),
         workers: 2,
         straggle: None,
+        fuse_training: true,
     });
     assert!(engine.run_shared(&jobs).is_err(), "hub cannot merge two state families");
 }

@@ -4,8 +4,10 @@
 Usage: bench_diff.py BASELINE.json CURRENT.json
 
 Both files use the schema `rust/benches/dqn_runtime.rs --json` writes:
-{"bench": ..., "roofline": [{"engine", "batch", "per_sample_us", ...}]}.
-Cells are matched by (engine, batch) and compared on per_sample_us:
+{"bench": ..., "roofline": [{"engine", "batch", "per_sample_us", ...}],
+ "training": [{"mode", "jobs", "batch", "per_sample_us", ...}]}.
+Roofline cells are matched by (engine, batch), training cells by
+(mode, jobs, batch); both are compared on per_sample_us:
 
   * > 10% slower than baseline  -> GitHub Actions warning annotation
   * > 2x slower than baseline   -> error annotation + exit 1
@@ -17,7 +19,10 @@ copying a CI-produced BENCH_dqn_runtime.json over the baseline in the
 same PR that causes it. (A baseline carrying `"provisional": true`
 would downgrade errors to warnings — that escape hatch is kept for
 bootstrapping new benches, but the committed baseline no longer uses
-it.)
+it for the roofline section. The training section has its own
+per-section flag, `"training_provisional": true`, so a freshly
+bootstrapped training baseline can warn without loosening the
+roofline gate.)
 
 Cells present on one side only never fail the gate (the AOT engine row
 exists only where compiled artifacts do); they are reported so silent
@@ -36,29 +41,24 @@ FAIL_RATIO = 2.0
 def roofline_cells(report):
     cells = {}
     for row in report.get("roofline", []):
-        cells[(row["engine"], int(row["batch"]))] = float(row["per_sample_us"])
+        cells[("roofline", row["engine"], int(row["batch"]))] = float(row["per_sample_us"])
     return cells
 
 
-def main(argv):
-    if len(argv) != 3:
-        print(f"usage: {argv[0]} BASELINE.json CURRENT.json", file=sys.stderr)
-        return 2
-    with open(argv[1]) as f:
-        baseline = json.load(f)
-    with open(argv[2]) as f:
-        current = json.load(f)
+def training_cells(report):
+    cells = {}
+    for row in report.get("training", []):
+        key = ("training", f'{row["mode"]}/jobs={int(row["jobs"])}', int(row["batch"]))
+        cells[key] = float(row["per_sample_us"])
+    return cells
 
-    provisional = bool(baseline.get("provisional"))
-    base_cells = roofline_cells(baseline)
-    cur_cells = roofline_cells(current)
-    if not base_cells:
-        print(f"::error::baseline {argv[1]} has no roofline cells")
-        return 1
 
+def diff_section(name, base_cells, cur_cells, provisional):
+    """Compare one section's cells; return the number of hard failures
+    (0 if the section is provisional — those are downgraded)."""
     failures = 0
     for key in sorted(base_cells):
-        engine, batch = key
+        _, engine, batch = key
         if key not in cur_cells:
             print(f"note: cell {engine}/batch={batch} absent from current report")
             continue
@@ -81,17 +81,46 @@ def main(argv):
             print(f"ok: {label}")
 
     for key in sorted(set(cur_cells) - set(base_cells)):
-        print(f"note: new cell {key[0]}/batch={key[1]} not in baseline yet")
+        print(f"note: new cell {key[1]}/batch={key[2]} not in baseline yet")
 
     if failures and provisional:
         print(
-            f"{failures} cell(s) beyond the failure gate, but the baseline is "
-            "provisional — reported as warnings only"
+            f"{failures} {name} cell(s) beyond the failure gate, but that section's "
+            "baseline is provisional — reported as warnings only"
         )
         return 0
+    return failures
+
+
+def main(argv):
+    if len(argv) != 3:
+        print(f"usage: {argv[0]} BASELINE.json CURRENT.json", file=sys.stderr)
+        return 2
+    with open(argv[1]) as f:
+        baseline = json.load(f)
+    with open(argv[2]) as f:
+        current = json.load(f)
+
+    base_roofline = roofline_cells(baseline)
+    if not base_roofline:
+        print(f"::error::baseline {argv[1]} has no roofline cells")
+        return 1
+
+    failures = diff_section(
+        "roofline", base_roofline, roofline_cells(current), bool(baseline.get("provisional"))
+    )
+    base_training = training_cells(baseline)
+    failures += diff_section(
+        "training",
+        base_training,
+        training_cells(current),
+        bool(baseline.get("provisional")) or bool(baseline.get("training_provisional")),
+    )
+
     if failures:
         return 1
-    print(f"roofline within budget across {len(base_cells)} baseline cells")
+    total = len(base_roofline) + len(base_training)
+    print(f"per-sample timings within budget across {total} baseline cells")
     return 0
 
 

@@ -323,7 +323,7 @@ struct FileClass {
 
 fn classify(path: &str) -> FileClass {
     let p = path.replace('\\', "/");
-    const RESTRICTED: [&str; 7] = [
+    const RESTRICTED: [&str; 8] = [
         "coordinator/hub.rs",
         "campaign/collector.rs",
         "campaign/report.rs",
@@ -337,6 +337,11 @@ fn classify(path: &str) -> FileClass {
         // trajectory consumes: an f32 accumulation or ambient-state
         // read here would break bitwise reproducibility at the root.
         "runtime/native/kernels.rs",
+        // The fused cross-job trainer stacks every live job's
+        // minibatch through these same reductions; its claim to be
+        // bitwise-identical to the sequential path holds only under
+        // the identical f64/ordering discipline.
+        "runtime/native/fused.rs",
     ];
     // Directory-scoped restrictions: replay policies and the on-disk
     // campaign store (its frames round-trip fingerprinted bits, so any
@@ -983,6 +988,19 @@ mod tests {
         // The sibling wrapper module stays unrestricted (it holds no
         // reductions of its own).
         assert!(scan_file("rust/src/runtime/native/mlp.rs", src).is_empty());
+    }
+
+    #[test]
+    fn fused_trainer_is_a_restricted_module() {
+        // fused.rs promises bitwise identity with the sequential
+        // training path; that promise is only as strong as the same
+        // R1/R2/R3 discipline the kernels live under.
+        let src = "let mut acc = 0.0f32;\nacc += x as f32;\nlet t = Instant::now();\n";
+        let d = scan_file("rust/src/runtime/native/fused.rs", src);
+        assert_eq!(rules_at(&d), vec![(2, Rule::R2), (3, Rule::R3)]);
+        let hash = "use std::collections::HashMap;\n";
+        let d = scan_file("rust/src/runtime/native/fused.rs", hash);
+        assert_eq!(rules_at(&d), vec![(1, Rule::R1)]);
     }
 
     #[test]
